@@ -1,0 +1,23 @@
+//! Regenerate paper Fig. 3 (chunk-size scaling) — example wrapper around
+//! the benchmark harness.
+//!
+//! ```sh
+//! cargo run --release --example fig3_chunk_size            # full sweep
+//! cargo run --release --example fig3_chunk_size -- quick   # smoke
+//! ```
+
+use hpx_fft::bench_harness::fig3;
+use hpx_fft::config::BenchConfig;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "quick");
+    let config = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    println!(
+        "Fig. 3: scatter chunk-size sweep on 2 localities, {} reps/point\n",
+        config.reps
+    );
+    let points = fig3::run(&config)?;
+    print!("{}", fig3::report(&points, &config.out_dir)?);
+    println!("CSV: {}/fig3_chunk_size.csv", config.out_dir);
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Regenerate paper Figs. 4 & 5 (strong scaling, both variants).
+//!
+//! ```sh
+//! cargo run --release --example fig45_strong_scaling            # full
+//! cargo run --release --example fig45_strong_scaling -- quick   # smoke
+//! ```
+//!
+//! Live hybrid runs at laptop scale + simnet predictions at the paper's
+//! 2^14×2^14 on 1–16 buran nodes, for every parcelport and the
+//! FFTW3-like baseline.
+
+use hpx_fft::bench_harness::fig45;
+use hpx_fft::config::BenchConfig;
+use hpx_fft::dist_fft::driver::Variant;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "quick");
+    let config = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    for variant in [Variant::AllToAll, Variant::Scatter] {
+        let fig = match variant {
+            Variant::AllToAll => "Fig. 4",
+            Variant::Scatter => "Fig. 5",
+        };
+        println!("=== {fig}: {} variant ===\n", variant.name());
+        let points = fig45::run(&config, variant)?;
+        print!("{}", fig45::report(&points, variant, &config, &config.out_dir)?);
+        println!();
+    }
+    Ok(())
+}

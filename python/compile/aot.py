@@ -1,0 +1,116 @@
+"""AOT: lower the L2 model to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one compiled-shape entry point:
+
+    artifacts/fft_rows_b{B}_l{L}.hlo.txt     — fft_rows_model on (B, L)
+    artifacts/fft2_t_r{R}_c{C}.hlo.txt       — fft2_transposed_model on (R, C)
+
+plus ``artifacts/manifest.txt`` (one line per artifact:
+``kind batch len file``) which the Rust artifact registry parses. Python
+runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--rows-shapes 64x256,256x64] [--fft2-shapes 256x256]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default shape set: covers the quickstart / example configs
+# (grid 256×256 on 1/2/4 localities) at build time. Benchmarks that need
+# other shapes list them via --rows-shapes.
+DEFAULT_ROWS_SHAPES = [(64, 256), (128, 256), (256, 256), (64, 512)]
+DEFAULT_FFT2_SHAPES = [(256, 256)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True; the Rust
+    side unwraps with to_tuple2)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fft_rows(batch: int, length: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, length), jnp.float32)
+    return to_hlo_text(jax.jit(model.fft_rows_model).lower(spec, spec))
+
+
+def lower_fft2(rows: int, cols: int) -> str:
+    spec = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    return to_hlo_text(jax.jit(model.fft2_transposed_model).lower(spec, spec))
+
+
+def parse_shapes(text: str):
+    out = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        a, b = part.lower().split("x")
+        out.append((int(a), int(b)))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--rows-shapes", default=None,
+                    help="comma-separated BxL list for fft_rows artifacts")
+    ap.add_argument("--fft2-shapes", default=None,
+                    help="comma-separated RxC list for fft2 artifacts")
+    args = ap.parse_args()
+
+    rows_shapes = (parse_shapes(args.rows_shapes)
+                   if args.rows_shapes else DEFAULT_ROWS_SHAPES)
+    fft2_shapes = (parse_shapes(args.fft2_shapes)
+                   if args.fft2_shapes else DEFAULT_FFT2_SHAPES)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+
+    for batch, length in rows_shapes:
+        name = f"fft_rows_b{batch}_l{length}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_fft_rows(batch, length)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(("fft_rows", batch, length, name))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for rows, cols in fft2_shapes:
+        name = f"fft2_t_r{rows}_c{cols}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_fft2(rows, cols)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(("fft2_t", rows, cols, name))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest_path, "w") as f:
+        f.write("# kind batch len file — parsed by rust/src/runtime/artifact.rs\n")
+        for kind, a, b, name in manifest:
+            f.write(f"{kind} {a} {b} {name}\n")
+    print(f"wrote {manifest_path} ({len(manifest)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

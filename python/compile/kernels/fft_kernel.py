@@ -1,0 +1,183 @@
+"""L1 Pallas kernel: batched 1-D FFT via the four-step (DFT-matmul)
+factorization.
+
+The paper's compute hot-spot is FFTW's scalar butterfly kernel on EPYC
+CPUs. Mechanically porting butterflies to TPU would waste the MXU, so the
+kernel re-expresses the transform the way the systolic array wants it
+(DESIGN.md §Hardware-Adaptation): a length-`L = L1·L2` FFT becomes two
+small dense matmuls plus a pointwise twiddle:
+
+    X[j1, j2] = x[j1·L2 + j2]                      (reshape)
+    A[k1, j2] = Σ_{j1} W_{L1}^{j1·k1} · X[j1, j2]   (D1 @ X   — matmul)
+    B[k1, j2] = A[k1, j2] · W_L^{k1·j2}             (twiddle  — pointwise)
+    C[k1, k2] = Σ_{j2} B[k1, j2] · W_{L2}^{j2·k2}   (B @ D2   — matmul)
+    x̂[k1 + L1·k2] = C[k1, k2]                       (transpose read-out)
+
+Complex arithmetic is carried as separate re/im f32 planes (4 real
+matmuls per DFT stage — bf16/f32 MXU-native). The DFT matrices and the
+twiddle grid are precomputed on the host in f64 and passed as operands,
+so the kernel body is transcendental-free.
+
+The batch of rows is tiled by ``block_rows`` through ``BlockSpec`` so one
+grid step holds a (block_rows, L) slab plus the constant matrices in
+VMEM; `vmem_bytes` estimates the footprint for the §Perf analysis.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated on the interpret path and TPU
+performance is estimated structurally (DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "dft_constants",
+    "fft_rows",
+    "split_factors",
+    "vmem_bytes",
+]
+
+
+def split_factors(length: int) -> tuple[int, int]:
+    """Balanced L = L1 * L2 factorization (both powers of two)."""
+    if length & (length - 1) or length < 1:
+        raise ValueError(f"length must be a power of two, got {length}")
+    log2 = length.bit_length() - 1
+    l1 = 1 << (log2 // 2)
+    return l1, length // l1
+
+
+def dft_constants(length: int):
+    """DFT/twiddle constants for a length-`length` transform, computed
+    with jnp ops so they are *part of the traced graph* (XLA constant-
+    folds them at compile time) rather than closed-over host arrays —
+    closed-over constants get hoisted into extra entry parameters by jax,
+    which would break the 2-argument PJRT ABI the Rust runtime relies on.
+
+    Angles are modulo-reduced before the division (`(j·k) mod n / n`), so
+    every angle is an exact small integer ratio and f32 trig stays
+    accurate at any transform length.
+
+    Returns (d1_re, d1_im, d2_re, d2_im, tw_re, tw_im):
+    D1[k, j] = W_{L1}^{jk}, D2[j, k] = W_{L2}^{jk} (symmetric),
+    TW[k1, j2] = W_L^{k1 j2}; all with W_n = exp(-2πi/n).
+    """
+    l1, l2 = split_factors(length)
+
+    def dft_matrix(n):
+        j = jnp.arange(n, dtype=jnp.int32)
+        m = (j[:, None] * j[None, :]) % n
+        ang = (-2.0 * np.pi / n) * m.astype(jnp.float32)
+        return jnp.cos(ang), jnp.sin(ang)
+
+    d1r, d1i = dft_matrix(l1)
+    d2r, d2i = dft_matrix(l2)
+    k1 = jnp.arange(l1, dtype=jnp.int32)
+    j2 = jnp.arange(l2, dtype=jnp.int32)
+    m = (k1[:, None] * j2[None, :]) % length
+    ang = (-2.0 * np.pi / length) * m.astype(jnp.float32)
+    return d1r, d1i, d2r, d2i, jnp.cos(ang), jnp.sin(ang)
+
+
+def _fft_block_kernel(l1, l2, xr_ref, xi_ref, d1r_ref, d1i_ref, d2r_ref,
+                      d2i_ref, twr_ref, twi_ref, outr_ref, outi_ref):
+    """One grid step: four-step FFT of a (block_rows, L) slab in VMEM."""
+    block_rows = xr_ref.shape[0]
+    xr = xr_ref[...].reshape(block_rows, l1, l2)
+    xi = xi_ref[...].reshape(block_rows, l1, l2)
+    d1r, d1i = d1r_ref[...], d1i_ref[...]
+    d2r, d2i = d2r_ref[...], d2i_ref[...]
+    twr, twi = twr_ref[...], twi_ref[...]
+
+    # Stage 1: A = D1 @ X along the L1 axis (batched over rows).
+    # einsum('kj,bjl->bkl') lowers to dot_general — MXU-shaped.
+    mm1 = lambda m, x: jnp.einsum("kj,bjl->bkl", m, x,
+                                  preferred_element_type=jnp.float32)
+    ar = mm1(d1r, xr) - mm1(d1i, xi)
+    ai = mm1(d1r, xi) + mm1(d1i, xr)
+
+    # Stage 2: pointwise twiddle (broadcast over the batch axis).
+    br = ar * twr - ai * twi
+    bi = ar * twi + ai * twr
+
+    # Stage 3: C = B @ D2 along the L2 axis.
+    mm2 = lambda x, m: jnp.einsum("bkj,jl->bkl", x, m,
+                                  preferred_element_type=jnp.float32)
+    cr = mm2(br, d2r) - mm2(bi, d2i)
+    ci = mm2(br, d2i) + mm2(bi, d2r)
+
+    # Stage 4: transposed read-out — x̂[k1 + L1*k2] = C[k1, k2].
+    outr_ref[...] = cr.transpose(0, 2, 1).reshape(block_rows, l1 * l2)
+    outi_ref[...] = ci.transpose(0, 2, 1).reshape(block_rows, l1 * l2)
+
+
+def fft_rows(x_re, x_im, *, block_rows: int | None = None):
+    """Forward-FFT every row of (batch, L) re/im planes.
+
+    Unnormalized, matching ``jnp.fft.fft`` / FFTW conventions. `L` and the
+    batch must be powers of two (the batch so `block_rows` tiles evenly).
+    """
+    batch, length = x_re.shape
+    if x_im.shape != x_re.shape:
+        raise ValueError(f"re/im shape mismatch: {x_re.shape} vs {x_im.shape}")
+    l1, l2 = split_factors(length)
+    if block_rows is None:
+        block_rows = default_block_rows(batch, length)
+    if batch % block_rows:
+        raise ValueError(f"batch {batch} not divisible by block_rows {block_rows}")
+    d1r, d1i, d2r, d2i, twr, twi = dft_constants(length)
+
+    grid = (batch // block_rows,)
+    row_block = pl.BlockSpec((block_rows, length), lambda i: (i, 0))
+    # Constants are replicated to every grid step (index_map → block 0).
+    const = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+
+    kernel = functools.partial(_fft_block_kernel, l1, l2)
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, length), jnp.float32),
+        jax.ShapeDtypeStruct((batch, length), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            row_block, row_block,
+            const((l1, l1)), const((l1, l1)),
+            const((l2, l2)), const((l2, l2)),
+            const((l1, l2)), const((l1, l2)),
+        ],
+        out_specs=[row_block, row_block],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x_re, x_im, d1r, d1i, d2r, d2i, twr, twi)
+
+
+def default_block_rows(batch: int, length: int,
+                       vmem_budget: int = 8 * 2**20) -> int:
+    """Largest power-of-two row block whose VMEM footprint fits the budget
+    (default 8 MiB — half of a TPU core's ~16 MiB VMEM, leaving room for
+    double-buffering)."""
+    block = 1
+    while (
+        block * 2 <= batch
+        and batch % (block * 2) == 0
+        and vmem_bytes(block * 2, length) <= vmem_budget
+    ):
+        block *= 2
+    return block
+
+
+def vmem_bytes(block_rows: int, length: int) -> int:
+    """Estimated VMEM working set of one grid step, bytes.
+
+    in + out slabs (2 × 2 planes), the intermediate (2 planes, counted
+    once — stages reuse), and the constant matrices.
+    """
+    l1, l2 = split_factors(length)
+    slab = block_rows * length * 4
+    consts = (2 * l1 * l1 + 2 * l2 * l2 + 2 * l1 * l2) * 4
+    return 6 * slab + consts

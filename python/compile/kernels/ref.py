@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+The contract across the whole stack: unnormalized forward transform,
+`jnp.fft` conventions — the same contract the Rust native kernel and the
+distributed driver implement. Every kernel result is pinned against these
+references by `python/tests/`.
+"""
+
+import jax.numpy as jnp
+
+__all__ = ["fft_rows_ref", "fft2_transposed_ref", "transpose_ref"]
+
+
+def fft_rows_ref(x_re, x_im):
+    """Row-wise forward FFT of re/im planes via jnp.fft."""
+    z = jnp.fft.fft(x_re.astype(jnp.complex64) + 1j * x_im.astype(jnp.complex64), axis=-1)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def fft2_transposed_ref(x_re, x_im):
+    """Transposed-layout 2-D FFT: fft2 then transpose (the distributed
+    driver's output convention, FFTW_MPI_TRANSPOSED_OUT)."""
+    z = jnp.fft.fft2(x_re.astype(jnp.complex64) + 1j * x_im.astype(jnp.complex64))
+    zt = z.T
+    return jnp.real(zt).astype(jnp.float32), jnp.imag(zt).astype(jnp.float32)
+
+
+def transpose_ref(x):
+    """Plain transpose."""
+    return x.T

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: tiled 2-D transpose.
+
+Step 2+3 of the four-step distributed FFT is, per locality, a transpose.
+On GPU one would stage tiles through shared memory to coalesce both the
+read and the write side; the TPU formulation expresses the same idea with
+``BlockSpec``: the grid walks (i, j) output tiles, the input index map
+fetches the mirrored (j, i) tile into VMEM, and the kernel body is a plain
+in-register transpose. The HBM↔VMEM tile schedule *is* the optimization —
+there is no shared-memory choreography to port (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["transpose", "default_tile"]
+
+
+def _transpose_tile_kernel(x_ref, out_ref):
+    out_ref[...] = x_ref[...].T
+
+
+def default_tile(rows: int, cols: int, max_tile: int = 256) -> tuple[int, int]:
+    """Largest power-of-two tile dividing both dimensions (≤ max_tile).
+
+    256×256 f32 = 256 KiB per tile side — two tiles double-buffered still
+    clear VMEM comfortably.
+    """
+    def biggest(n):
+        t = 1
+        while t * 2 <= min(n, max_tile) and n % (t * 2) == 0:
+            t *= 2
+        return t
+    return biggest(rows), biggest(cols)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_c"))
+def transpose(x, tile_r: int | None = None, tile_c: int | None = None):
+    """Transpose a (rows, cols) f32 array via a tiled Pallas kernel."""
+    rows, cols = x.shape
+    if tile_r is None or tile_c is None:
+        tile_r, tile_c = default_tile(rows, cols)
+    if rows % tile_r or cols % tile_c:
+        raise ValueError(f"tiles ({tile_r},{tile_c}) must divide shape {x.shape}")
+
+    grid = (cols // tile_c, rows // tile_r)  # output tile coordinates
+    return pl.pallas_call(
+        _transpose_tile_kernel,
+        grid=grid,
+        # Output tile (i, j) covers out[i*tc:(i+1)*tc, j*tr:(j+1)*tr];
+        # it needs input tile (j, i).
+        in_specs=[pl.BlockSpec((tile_r, tile_c), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((tile_c, tile_r), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((cols, rows), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def transpose_complex(x_re, x_im, tile_r: int | None = None,
+                      tile_c: int | None = None):
+    """Transpose re/im planes together."""
+    return (
+        transpose(x_re, tile_r, tile_c),
+        transpose(x_im, tile_r, tile_c),
+    )

@@ -1,0 +1,56 @@
+"""L2: the per-locality compute graph, calling the L1 kernels.
+
+Two jittable entry points are AOT-lowered per shape by `aot.py`:
+
+- ``fft_rows_model`` — step 1 / step 4 of the distributed algorithm:
+  forward-FFT every row of the locality's (batch, L) slab. This is the
+  function the Rust coordinator executes through PJRT on its request
+  path.
+- ``fft2_transposed_model`` — the whole four-step pipeline for a single
+  locality (row FFTs → tiled Pallas transpose → row FFTs), used by the
+  `pjrt_fft` example and as the L2-level integration check.
+
+Both consume/produce separate re/im f32 planes (the PJRT ABI — the Rust
+side views its `Complex32` AoS buffers as planes at the boundary).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import fft_kernel, transpose_kernel
+
+__all__ = ["fft_rows_model", "fft2_transposed_model"]
+
+
+def fft_rows_model(x_re, x_im):
+    """Row-wise forward FFT. Returns a (re, im) tuple."""
+    out_re, out_im = fft_kernel.fft_rows(x_re, x_im)
+    return out_re, out_im
+
+
+def fft2_transposed_model(x_re, x_im):
+    """Transposed-layout 2-D FFT of one (rows, cols) grid.
+
+    Mirrors the distributed four-step structure exactly: the transpose in
+    the middle is what the communication step + chunk placements perform
+    across localities.
+    """
+    # Step 1: row FFTs (length cols).
+    a_re, a_im = fft_kernel.fft_rows(x_re, x_im)
+    # Steps 2+3: transpose (Pallas tiled kernel).
+    t_re, t_im = transpose_kernel.transpose_complex(a_re, a_im)
+    # Step 4: row FFTs of the transposed grid (length rows).
+    out_re, out_im = fft_kernel.fft_rows(t_re, t_im)
+    return out_re, out_im
+
+
+def flops_fft_rows(batch: int, length: int) -> float:
+    """Four-step FLOP count: 4 real matmuls per stage + twiddle.
+
+    2 stages × 4 matmuls × 2·B·L·L_i ops + 6·B·L twiddle flops — the
+    number used for the MXU-utilization estimate in DESIGN.md §Perf.
+    """
+    l1, l2 = fft_kernel.split_factors(length)
+    stage1 = 4 * 2 * batch * l2 * l1 * l1
+    stage2 = 4 * 2 * batch * l1 * l2 * l2
+    twiddle = 6 * batch * length
+    return float(stage1 + stage2 + twiddle)

@@ -1,0 +1,130 @@
+"""Pallas FFT kernel vs the jnp.fft oracle — the core L1 correctness
+signal. Hypothesis sweeps shapes; fixed cases pin the analytic
+properties (impulse, tone, linearity, Parseval)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import fft_kernel, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand_planes(rng, batch, length):
+    return (
+        jnp.asarray(rng.standard_normal((batch, length)), dtype=jnp.float32),
+        jnp.asarray(rng.standard_normal((batch, length)), dtype=jnp.float32),
+    )
+
+
+def assert_matches_ref(x_re, x_im, atol=2e-3, rtol=2e-3):
+    got_re, got_im = fft_kernel.fft_rows(x_re, x_im)
+    want_re, want_im = ref.fft_rows_ref(x_re, x_im)
+    scale = float(jnp.max(jnp.abs(want_re)) + jnp.max(jnp.abs(want_im)) + 1.0)
+    np.testing.assert_allclose(got_re, want_re, atol=atol * scale, rtol=rtol)
+    np.testing.assert_allclose(got_im, want_im, atol=atol * scale, rtol=rtol)
+
+
+@hypothesis.given(
+    log_batch=st.integers(min_value=0, max_value=5),
+    log_len=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref_shape_sweep(log_batch, log_len, seed):
+    rng = np.random.default_rng(seed)
+    x_re, x_im = rand_planes(rng, 1 << log_batch, 1 << log_len)
+    assert_matches_ref(x_re, x_im)
+
+
+def test_impulse_gives_constant():
+    x_re = jnp.zeros((2, 64), dtype=jnp.float32).at[:, 0].set(1.0)
+    x_im = jnp.zeros((2, 64), dtype=jnp.float32)
+    out_re, out_im = fft_kernel.fft_rows(x_re, x_im)
+    np.testing.assert_allclose(out_re, np.ones((2, 64)), atol=1e-4)
+    np.testing.assert_allclose(out_im, np.zeros((2, 64)), atol=1e-4)
+
+
+def test_single_tone_lands_in_bin():
+    n, bin_ = 128, 5
+    t = np.arange(n)
+    x_re = jnp.asarray(np.cos(2 * np.pi * bin_ * t / n)[None, :], dtype=jnp.float32)
+    x_im = jnp.asarray(np.sin(2 * np.pi * bin_ * t / n)[None, :], dtype=jnp.float32)
+    out_re, out_im = fft_kernel.fft_rows(x_re, x_im)
+    assert abs(float(out_re[0, bin_]) - n) < 1e-2
+    mask = np.ones(n, bool)
+    mask[bin_] = False
+    assert float(np.max(np.abs(np.asarray(out_re)[0, mask]))) < 1e-2
+    assert float(np.max(np.abs(out_im))) < 1e-2
+
+
+@hypothesis.given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_linearity(seed):
+    rng = np.random.default_rng(seed)
+    a_re, a_im = rand_planes(rng, 4, 256)
+    b_re, b_im = rand_planes(rng, 4, 256)
+    alpha = float(rng.standard_normal())
+    s_re, s_im = fft_kernel.fft_rows(alpha * a_re + b_re, alpha * a_im + b_im)
+    fa_re, fa_im = fft_kernel.fft_rows(a_re, a_im)
+    fb_re, fb_im = fft_kernel.fft_rows(b_re, b_im)
+    np.testing.assert_allclose(s_re, alpha * fa_re + fb_re, atol=1e-2, rtol=1e-3)
+    np.testing.assert_allclose(s_im, alpha * fa_im + fb_im, atol=1e-2, rtol=1e-3)
+
+
+def test_parseval():
+    rng = np.random.default_rng(7)
+    x_re, x_im = rand_planes(rng, 8, 512)
+    out_re, out_im = fft_kernel.fft_rows(x_re, x_im)
+    e_time = float(jnp.sum(x_re**2 + x_im**2))
+    e_freq = float(jnp.sum(out_re**2 + out_im**2)) / 512
+    assert abs(e_time - e_freq) < 1e-3 * e_time
+
+
+@pytest.mark.parametrize("block_rows", [1, 2, 8, 32])
+def test_block_rows_equivalence(block_rows):
+    """Tiling must not change results: every block size agrees."""
+    rng = np.random.default_rng(11)
+    x_re, x_im = rand_planes(rng, 32, 128)
+    base_re, base_im = fft_kernel.fft_rows(x_re, x_im, block_rows=32)
+    got_re, got_im = fft_kernel.fft_rows(x_re, x_im, block_rows=block_rows)
+    np.testing.assert_allclose(got_re, base_re, atol=1e-4)
+    np.testing.assert_allclose(got_im, base_im, atol=1e-4)
+
+
+def test_split_factors_balanced():
+    assert fft_kernel.split_factors(1024) == (32, 32)
+    assert fft_kernel.split_factors(2048) == (32, 64)
+    assert fft_kernel.split_factors(2) == (1, 2)
+    with pytest.raises(ValueError):
+        fft_kernel.split_factors(24)
+
+
+def test_dft_constants_unit_modulus():
+    d1r, d1i, d2r, d2i, twr, twi = fft_kernel.dft_constants(256)
+    np.testing.assert_allclose(np.asarray(d1r) ** 2 + np.asarray(d1i) ** 2,
+                               np.ones_like(d1r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(twr) ** 2 + np.asarray(twi) ** 2,
+                               np.ones_like(twr), atol=1e-5)
+
+
+def test_vmem_budget_respected():
+    """default_block_rows must keep the estimated footprint under 8 MiB
+    for every realistic shape."""
+    for batch, length in [(64, 256), (256, 256), (1024, 4096), (64, 16384)]:
+        br = fft_kernel.default_block_rows(batch, length)
+        assert batch % br == 0
+        assert fft_kernel.vmem_bytes(br, length) <= 8 * 2**20 or br == 1
+
+
+def test_bad_shapes_rejected():
+    x = jnp.zeros((3, 64), dtype=jnp.float32)  # batch 3 not divisible by 2
+    with pytest.raises(ValueError):
+        fft_kernel.fft_rows(x, x, block_rows=2)
+    y = jnp.zeros((2, 64), dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        fft_kernel.fft_rows(y, jnp.zeros((2, 32), dtype=jnp.float32))

@@ -1,0 +1,64 @@
+"""Tiled Pallas transpose vs jnp — shape sweep + tiling equivalence."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import transpose_kernel
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+@hypothesis.given(
+    log_r=st.integers(min_value=0, max_value=9),
+    log_c=st.integers(min_value=0, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_jnp_transpose(log_r, log_c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1 << log_r, 1 << log_c)),
+                    dtype=jnp.float32)
+    got = transpose_kernel.transpose(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x).T)
+
+
+@pytest.mark.parametrize("tile", [(1, 1), (2, 4), (8, 8), (64, 32)])
+def test_tiling_equivalence(tile):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 128)), dtype=jnp.float32)
+    got = transpose_kernel.transpose(x, *tile)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x).T)
+
+
+def test_involution():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((32, 256)), dtype=jnp.float32)
+    back = transpose_kernel.transpose(transpose_kernel.transpose(x))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_complex_planes():
+    rng = np.random.default_rng(6)
+    re = jnp.asarray(rng.standard_normal((16, 64)), dtype=jnp.float32)
+    im = jnp.asarray(rng.standard_normal((16, 64)), dtype=jnp.float32)
+    t_re, t_im = transpose_kernel.transpose_complex(re, im)
+    np.testing.assert_array_equal(np.asarray(t_re), np.asarray(re).T)
+    np.testing.assert_array_equal(np.asarray(t_im), np.asarray(im).T)
+
+
+def test_bad_tile_rejected():
+    x = jnp.zeros((10, 10), dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        transpose_kernel.transpose(x, 3, 5)
+
+
+def test_default_tile_divides():
+    for rows, cols in [(64, 256), (1, 1), (512, 128), (2, 1024)]:
+        tr, tc = transpose_kernel.default_tile(rows, cols)
+        assert rows % tr == 0 and cols % tc == 0
+        assert tr <= 256 and tc <= 256

@@ -1,0 +1,38 @@
+//! `cargo bench --bench fig3_chunk` — paper Fig. 3.
+//!
+//! Chunk-size scaling of the scatter collective on two localities, all
+//! three parcelports, live hybrid + analytic model. Paper methodology:
+//! mean over reps with 95% CI. Honours `HPXFFT_BENCH_QUICK=1`.
+
+use hpx_fft::bench_harness::fig3;
+use hpx_fft::config::BenchConfig;
+
+fn main() {
+    let quick = std::env::var("HPXFFT_BENCH_QUICK").is_ok();
+    let mut config = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    config.out_dir = "bench_out".into();
+    println!("== bench fig3_chunk: {} reps/point ==\n", config.reps);
+    let points = fig3::run(&config).expect("fig3 sweep");
+    print!("{}", fig3::report(&points, &config.out_dir).expect("report"));
+
+    // Paper-shape assertions (soft: warn, don't crash the bench).
+    let mean = |port, bytes| {
+        points
+            .iter()
+            .find(|p| p.port == port && p.bytes == bytes)
+            .map(|p| p.live.mean())
+            .unwrap_or(f64::NAN)
+    };
+    use hpx_fft::parcelport::PortKind::*;
+    let small = *config.chunk_sizes.first().unwrap();
+    for (a, b, what) in [
+        (Lci, Mpi, "LCI < MPI at small chunks"),
+        (Mpi, Tcp, "MPI < TCP at small chunks"),
+    ] {
+        if mean(a, small) >= mean(b, small) {
+            println!("WARN: expected {what}: {} vs {}", mean(a, small), mean(b, small));
+        } else {
+            println!("shape OK: {what}");
+        }
+    }
+}

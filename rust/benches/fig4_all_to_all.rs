@@ -1,0 +1,36 @@
+//! `cargo bench --bench fig4_all_to_all` — paper Fig. 4.
+//!
+//! Strong scaling of the distributed FFT with the HPX *all-to-all*
+//! collective (root-funneled), per parcelport, vs the FFTW3-like
+//! baseline: live hybrid at laptop scale + simnet at the paper's
+//! 2^14×2^14 on 1–16 nodes. Honours `HPXFFT_BENCH_QUICK=1`.
+
+use hpx_fft::bench_harness::fig45::{self, System};
+use hpx_fft::config::BenchConfig;
+use hpx_fft::dist_fft::driver::Variant;
+use hpx_fft::parcelport::PortKind;
+
+fn main() {
+    let quick = std::env::var("HPXFFT_BENCH_QUICK").is_ok();
+    let config = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    println!("== bench fig4_all_to_all ==\n");
+    let points = fig45::run(&config, Variant::AllToAll).expect("fig4 sweep");
+    print!("{}", fig45::report(&points, Variant::AllToAll, &config, &config.out_dir).expect("report"));
+
+    // Paper-shape check: LCI fastest HPX port at 16 nodes (sim).
+    let sim = |sys| {
+        points
+            .iter()
+            .filter(|p| p.system == sys)
+            .map(|p| (p.nodes, p.sim_us))
+            .max_by_key(|(n, _)| *n)
+            .map(|(_, t)| t)
+            .unwrap_or(f64::NAN)
+    };
+    let lci = sim(System::Hpx(PortKind::Lci));
+    let mpi = sim(System::Hpx(PortKind::Mpi));
+    println!(
+        "\nshape {}: LCI ({lci:.0} µs) vs MPI ({mpi:.0} µs) at max nodes",
+        if lci <= mpi { "OK" } else { "WARN" }
+    );
+}

@@ -1,0 +1,36 @@
+//! `cargo bench --bench fig5_scatter` — paper Fig. 5.
+//!
+//! Strong scaling with the *N-scatter* variant (transpose overlapped
+//! with communication) — the paper's proposed improvement — per
+//! parcelport, vs the FFTW3-like baseline. The headline claim lives
+//! here: HPX+LCI beats FFTW3 MPI+X. Honours `HPXFFT_BENCH_QUICK=1`.
+
+use hpx_fft::bench_harness::fig45::{self, System};
+use hpx_fft::config::BenchConfig;
+use hpx_fft::dist_fft::driver::Variant;
+use hpx_fft::parcelport::PortKind;
+
+fn main() {
+    let quick = std::env::var("HPXFFT_BENCH_QUICK").is_ok();
+    let config = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    println!("== bench fig5_scatter ==\n");
+    let points = fig45::run(&config, Variant::Scatter).expect("fig5 sweep");
+    print!("{}", fig45::report(&points, Variant::Scatter, &config, &config.out_dir).expect("report"));
+
+    let at_max = |sys| {
+        points
+            .iter()
+            .filter(|p| p.system == sys)
+            .map(|p| (p.nodes, p.sim_us))
+            .max_by_key(|(n, _)| *n)
+            .map(|(_, t)| t)
+            .unwrap_or(f64::NAN)
+    };
+    let lci = at_max(System::Hpx(PortKind::Lci));
+    let fftw = at_max(System::Fftw3);
+    println!(
+        "\nheadline shape {}: hpx-lci {lci:.0} µs vs fftw3 {fftw:.0} µs (speedup {:.2}×)",
+        if lci < fftw { "OK" } else { "WARN" },
+        fftw / lci
+    );
+}

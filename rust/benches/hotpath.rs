@@ -1,0 +1,112 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the L3 hot paths.
+//!
+//! The §Perf instrumentation: per-operation timings for the pieces the
+//! end-to-end runtime is made of. Used to find and verify the
+//! optimizations recorded in EXPERIMENTS.md §Perf.
+
+use hpx_fft::bench_harness::runner::time_us;
+use hpx_fft::dist_fft::transpose::place_chunk_transposed;
+use hpx_fft::fft::complex::Complex32;
+use hpx_fft::fft::plan::{Direction, Plan, PlanCache};
+use hpx_fft::hpx::mailbox::Mailbox;
+use hpx_fft::hpx::parcel::{actions, Parcel, Payload};
+use hpx_fft::task::ThreadPool;
+use hpx_fft::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let total_us = time_us(|| {
+        for _ in 0..iters {
+            f();
+        }
+    });
+    let per = total_us / iters as f64;
+    let (val, unit) = if per < 1.0 { (per * 1e3, "ns") } else { (per, "µs") };
+    println!("{name:<44} {val:>10.1} {unit}/op   ({iters} iters)");
+}
+
+fn signal(n: usize, seed: u64) -> Vec<Complex32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+}
+
+fn main() {
+    println!("== hotpath micro-benchmarks ==\n");
+
+    // FFT kernel.
+    for log2n in [10usize, 12, 14] {
+        let n = 1 << log2n;
+        let plan = Plan::new(n);
+        let mut buf = signal(n, 1);
+        let flops = plan.flops();
+        let mut last_us = 0.0;
+        bench(&format!("fft radix2 n=2^{log2n}"), 2000 >> (log2n - 10), || {
+            last_us = time_us(|| plan.execute(&mut buf, Direction::Forward));
+        });
+        println!(
+            "{:<44} {:>10.2} GFLOP/s",
+            format!("  → throughput n=2^{log2n}"),
+            flops / last_us / 1e3
+        );
+    }
+
+    // Batched rows, serial vs parallel.
+    {
+        let n = 1024;
+        let rows = 256;
+        let plan = PlanCache::global().plan(n);
+        let mut buf = signal(rows * n, 2);
+        bench("fft_rows 256×1024 serial", 20, || {
+            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 1);
+        });
+        bench("fft_rows 256×1024 4 threads", 20, || {
+            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 4);
+        });
+    }
+
+    // Chunk transpose (the scatter variant's overlapped work).
+    {
+        let (r, c) = (256, 256);
+        let chunk = signal(r * c, 3);
+        let mut slab = vec![Complex32::ZERO; r * c];
+        bench("place_chunk_transposed 256×256", 200, || {
+            place_chunk_transposed(&chunk, r, c, &mut slab, r, 0);
+        });
+    }
+
+    // Payload semantics: the LCI-vs-MPI difference in one number.
+    {
+        let payload = Payload::new(vec![0u8; 1 << 20]);
+        bench("payload shallow clone (LCI path) 1 MiB", 100_000, || {
+            let _ = payload.clone();
+        });
+        bench("payload deep copy (MPI eager path) 1 MiB", 2000, || {
+            let _ = payload.deep_copy();
+        });
+    }
+
+    // Mailbox matched deliver/recv.
+    {
+        let mb = Mailbox::new();
+        let mut tag = 0u64;
+        bench("mailbox deliver+recv", 100_000, || {
+            mb.deliver(Parcel::new(0, 0, actions::P2P, tag, Payload::empty()));
+            let _ = mb.recv(0, actions::P2P, tag);
+            tag += 1;
+        });
+    }
+
+    // Task spawn overhead.
+    {
+        let pool = Arc::new(ThreadPool::new(4));
+        bench("threadpool spawn+get", 20_000, || {
+            pool.spawn(|| 1usize).get();
+        });
+    }
+
+    println!("\nhotpath done");
+}

@@ -1,0 +1,207 @@
+//! The FFTW3-MPI+pthreads analog (`fftw_mpi_plan_dft_2d` with
+//! `FFTW_MPI_TRANSPOSED_OUT`, threads enabled).
+//!
+//! Structure of the real thing, preserved here:
+//!
+//! - slab decomposition by rows, one MPI process per node ("locality"),
+//!   `threads` pthreads each for the serial 1-D sweeps;
+//! - the global transpose is a **synchronous `MPI_Alltoall`** — pairwise
+//!   exchange, the large-message algorithm MPI implementations select;
+//! - **no communication/computation overlap**: compute, then exchange,
+//!   then unpack — the property that lets the paper's N-scatter HPX
+//!   variant win;
+//! - barrier-delimited, as MPI benchmark harnesses time collectives.
+//!
+//! The transport is the MPI-semantics parcelport, so eager/rendezvous
+//! behaviour matches what OpenMPI would do with the same chunk sizes.
+
+use crate::collectives::{AllToAllAlgo, Communicator};
+use crate::dist_fft::driver::{NativeRowFft, RowFft, StepTimings};
+use crate::dist_fft::partition::Slab;
+use crate::dist_fft::transpose::place_chunk_transposed;
+use crate::dist_fft::verify::{rel_error, serial_fft2_transposed};
+use crate::fft::complex::{from_le_bytes, Complex32};
+use crate::hpx::parcel::Payload;
+use crate::hpx::runtime::Cluster;
+use crate::parcelport::{NetModel, PortKind};
+use std::time::Instant;
+
+/// Baseline configuration.
+#[derive(Clone, Debug)]
+pub struct FftwLikeConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub localities: usize,
+    /// pthreads per MPI process.
+    pub threads: usize,
+    pub net: Option<NetModel>,
+    pub verify: bool,
+}
+
+impl Default for FftwLikeConfig {
+    fn default() -> Self {
+        Self { rows: 256, cols: 256, localities: 4, threads: 2, net: None, verify: true }
+    }
+}
+
+/// Baseline report: timings + optional verification error.
+#[derive(Clone, Debug)]
+pub struct FftwLikeReport {
+    pub per_rank: Vec<StepTimings>,
+    pub critical_path: StepTimings,
+    pub rel_error: Option<f64>,
+}
+
+/// One synchronous MPI+threads 2-D FFT (transposed output).
+pub fn run(config: &FftwLikeConfig) -> anyhow::Result<FftwLikeReport> {
+    let cluster = Cluster::new(config.localities, PortKind::Mpi, config.net)?;
+    run_on(&cluster, config)
+}
+
+/// Run on an existing cluster (the benchmark harness reuses fabrics).
+pub fn run_on(cluster: &Cluster, config: &FftwLikeConfig) -> anyhow::Result<FftwLikeReport> {
+    anyhow::ensure!(
+        cluster.fabric().kind() == PortKind::Mpi,
+        "the FFTW3 baseline is MPI+X by definition; got {} fabric",
+        cluster.fabric().kind()
+    );
+    let results: Vec<(Vec<Complex32>, StepTimings)> = cluster.run(|ctx| {
+        let comm = Communicator::from_ctx(ctx);
+        let slab = Slab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
+        fftw_like_transform(&comm, &slab, config.threads)
+    });
+
+    let per_rank: Vec<StepTimings> = results.iter().map(|(_, t)| *t).collect();
+    let critical_path = StepTimings::max(&per_rank);
+    let rel_err = if config.verify {
+        let mut assembled = Vec::with_capacity(config.rows * config.cols);
+        for (piece, _) in &results {
+            assembled.extend_from_slice(piece);
+        }
+        let reference = serial_fft2_transposed(
+            &Slab::whole(config.rows, config.cols).data,
+            config.rows,
+            config.cols,
+        );
+        Some(rel_error(&assembled, &reference))
+    } else {
+        None
+    };
+
+    Ok(FftwLikeReport { per_rank, critical_path, rel_error: rel_err })
+}
+
+/// The per-process transform, structured exactly like
+/// `fftw_mpi_execute_dft`: threaded sweep → synchronous all-to-all →
+/// unpack → threaded sweep.
+fn fftw_like_transform(
+    comm: &Communicator,
+    slab: &Slab,
+    threads: usize,
+) -> (Vec<Complex32>, StepTimings) {
+    let n = comm.size();
+    let lr = slab.local_rows();
+    let cw = Slab::cols_per_chunk(slab.global_cols, n);
+    let r_total = slab.global_rows;
+    let mut t = StepTimings::default();
+    let t_start = Instant::now();
+
+    // MPI benchmark discipline: enter timed section together.
+    comm.barrier();
+
+    // Threaded row sweep (length C).
+    let t0 = Instant::now();
+    let mut work = slab.data.clone();
+    NativeRowFft.fft_rows(&mut work, slab.global_cols, threads);
+    t.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // Synchronous MPI_Alltoall (pairwise exchange), then unpack. No
+    // overlap: the unpack loop starts only after the collective returns.
+    let t0 = Instant::now();
+    let tmp = Slab {
+        global_rows: slab.global_rows,
+        global_cols: slab.global_cols,
+        parts: slab.parts,
+        rank: slab.rank,
+        data: work,
+    }; // §Perf: field-wise construction — `..slab.clone()` would clone and
+       // immediately drop the slab's full data buffer.
+    let chunks: Vec<Payload> =
+        (0..n).map(|j| Payload::new(tmp.extract_chunk_bytes(j))).collect();
+    let received = comm.all_to_all(chunks, AllToAllAlgo::Pairwise);
+    t.comm_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    let t0 = Instant::now();
+    let mut next = vec![Complex32::ZERO; cw * r_total];
+    for (j, payload) in received.into_iter().enumerate() {
+        let chunk = from_le_bytes(payload.as_bytes());
+        place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, j * lr);
+    }
+    t.transpose_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // Threaded row sweep (length R).
+    let t0 = Instant::now();
+    NativeRowFft.fft_rows(&mut next, r_total, threads);
+    t.fft2_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    t.total_us = t_start.elapsed().as_secs_f64() * 1e6;
+    (next, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_verifies() {
+        let report = run(&FftwLikeConfig {
+            rows: 32,
+            cols: 32,
+            localities: 4,
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4, "{:?}", report.rel_error);
+        assert_eq!(report.per_rank.len(), 4);
+    }
+
+    #[test]
+    fn baseline_matches_hpx_variants() {
+        // Same arithmetic ⇒ same results, bitwise.
+        let cfg = FftwLikeConfig { rows: 16, cols: 16, localities: 2, threads: 1, ..Default::default() };
+        let cluster = Cluster::new(2, PortKind::Mpi, None).unwrap();
+        let baseline = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let slab = Slab::synthetic(cfg.rows, cfg.cols, 2, ctx.rank);
+            fftw_like_transform(&comm, &slab, 1).0
+        });
+        let cluster2 = Cluster::new(2, PortKind::Lci, None).unwrap();
+        let hpx = cluster2.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let slab = Slab::synthetic(cfg.rows, cfg.cols, 2, ctx.rank);
+            crate::dist_fft::scatter_variant::run(&comm, &slab, 1, &NativeRowFft).0
+        });
+        assert_eq!(baseline, hpx);
+    }
+
+    #[test]
+    fn rejects_non_mpi_fabric() {
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        let cfg = FftwLikeConfig { rows: 16, cols: 16, localities: 2, ..Default::default() };
+        assert!(run_on(&cluster, &cfg).is_err());
+    }
+
+    #[test]
+    fn single_locality() {
+        let report = run(&FftwLikeConfig {
+            rows: 16,
+            cols: 16,
+            localities: 1,
+            threads: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4);
+    }
+}

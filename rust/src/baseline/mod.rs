@@ -1,0 +1,5 @@
+//! FFTW3 MPI+pthreads reference — the paper's comparison baseline.
+
+pub mod fftw_like;
+
+pub use fftw_like::{run as run_fftw_like, FftwLikeConfig};

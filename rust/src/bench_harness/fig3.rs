@@ -1,0 +1,175 @@
+//! Fig. 3 — chunk-size scaling of the *scatter* collective on two nodes.
+//!
+//! "In our chunk size benchmark, we use the scatter collective to
+//! simulate two separate one-way communication channels between two
+//! nodes." Per parcelport and chunk size, rank 0 scatters a chunk to
+//! rank 1; the runtime is the root's scatter wall clock, averaged over
+//! `reps` runs with 95% CI — the paper's exact methodology.
+//!
+//! Two modes per port:
+//! - **live hybrid**: the real transport protocol (copies, framing,
+//!   handshakes) plus the calibrated IB-HDR wire model;
+//! - **model**: the closed-form cost-model prediction — the line the
+//!   calibration in DESIGN.md §6 was fitted to.
+
+use super::plot::{log_log_plot, Series};
+use super::runner::measure;
+use crate::collectives::Communicator;
+use crate::config::BenchConfig;
+use crate::hpx::parcel::Payload;
+use crate::hpx::runtime::Cluster;
+use crate::metrics::{csv::write_csv, RunStats};
+use crate::parcelport::{NetModel, PortKind};
+
+/// One measured point.
+#[derive(Clone, Debug)]
+pub struct ChunkPoint {
+    pub port: PortKind,
+    pub bytes: u64,
+    pub live: RunStats,
+    pub model_us: f64,
+}
+
+/// Run the full Fig. 3 sweep.
+pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<ChunkPoint>> {
+    let net = NetModel::infiniband_hdr();
+    let mut points = Vec::new();
+    for port in PortKind::ALL {
+        let cluster = Cluster::new(2, port, Some(net))?;
+        for &bytes in &config.chunk_sizes {
+            let stats = measure(config.warmup, config.reps, || {
+                let times = cluster.run(|ctx| {
+                    let comm = Communicator::from_ctx(ctx);
+                    let t0 = std::time::Instant::now();
+                    let chunks = (ctx.rank == 0).then(|| {
+                        vec![Payload::new(vec![0u8; 8]), Payload::new(vec![0u8; bytes as usize])]
+                    });
+                    let _mine = comm.scatter(0, chunks);
+                    t0.elapsed().as_secs_f64() * 1e6
+                });
+                // The root's send-side wall clock (channel view).
+                times[0]
+            });
+            let model_us = net.message_time_us(&port.cost_model(), bytes);
+            points.push(ChunkPoint { port, bytes, live: stats, model_us });
+        }
+    }
+    Ok(points)
+}
+
+/// Paper-style report: table + ASCII figure + CSV.
+pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
+    let mut table = crate::metrics::table::Table::new(&[
+        "port", "chunk", "live mean", "±95% CI", "model",
+    ]);
+    let mut rows = Vec::new();
+    for p in points {
+        table.row(&[
+            p.port.name().into(),
+            human_bytes(p.bytes),
+            format!("{:.1} µs", p.live.mean()),
+            format!("{:.1}", p.live.ci95()),
+            format!("{:.1} µs", p.model_us),
+        ]);
+        rows.push(vec![
+            p.port.name().to_string(),
+            p.bytes.to_string(),
+            p.live.mean().to_string(),
+            p.live.ci95().to_string(),
+            p.model_us.to_string(),
+        ]);
+    }
+    write_csv(
+        format!("{out_dir}/fig3_chunk_size.csv"),
+        &["port", "bytes", "live_mean_us", "live_ci95_us", "model_us"],
+        &rows,
+    )?;
+
+    let series: Vec<Series> = PortKind::ALL
+        .iter()
+        .map(|&port| Series {
+            label: format!("{port} (live hybrid)"),
+            symbol: port.name().chars().next().unwrap().to_ascii_uppercase(),
+            points: points
+                .iter()
+                .filter(|p| p.port == port)
+                .map(|p| (p.bytes as f64, p.live.mean()))
+                .collect(),
+        })
+        .collect();
+    let mut out = String::new();
+    out.push_str(&table.render());
+    out.push('\n');
+    out.push_str(&log_log_plot(
+        "Fig. 3 — chunk-size scaling, scatter on 2 nodes",
+        "chunk size [bytes]",
+        "runtime [µs]",
+        &series,
+    ));
+    Ok(out)
+}
+
+pub fn human_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{} MiB", b >> 20)
+    } else if b >= 1 << 10 {
+        format!("{} KiB", b >> 10)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> BenchConfig {
+        BenchConfig {
+            reps: 3,
+            warmup: 1,
+            chunk_sizes: vec![1024, 64 * 1024],
+            ..BenchConfig::quick()
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_points() {
+        let points = run(&tiny_config()).unwrap();
+        assert_eq!(points.len(), 3 * 2); // 3 ports × 2 sizes
+        for p in &points {
+            assert!(p.live.mean() > 0.0);
+            assert!(p.model_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn lci_fastest_at_small_chunks() {
+        // The paper's Fig. 3 finding, in the live hybrid measurement.
+        let points = run(&tiny_config()).unwrap();
+        let t = |port: PortKind, bytes: u64| {
+            points
+                .iter()
+                .find(|p| p.port == port && p.bytes == bytes)
+                .unwrap()
+                .live
+                .mean()
+        };
+        assert!(t(PortKind::Lci, 1024) < t(PortKind::Tcp, 1024));
+    }
+
+    #[test]
+    fn report_renders_and_writes_csv() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-fig3-{}", std::process::id()));
+        let points = run(&tiny_config()).unwrap();
+        let text = report(&points, dir.to_str().unwrap()).unwrap();
+        assert!(text.contains("Fig. 3"));
+        assert!(dir.join("fig3_chunk_size.csv").exists());
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2 KiB");
+        assert_eq!(human_bytes(16 << 20), "16 MiB");
+    }
+}

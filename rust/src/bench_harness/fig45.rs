@@ -1,0 +1,283 @@
+//! Figs. 4 & 5 — strong scaling of the distributed 2-D FFT.
+//!
+//! Fig. 4: the HPX *all-to-all* variant per parcelport vs the FFTW3
+//! MPI+pthreads reference. Fig. 5: the same with the *N-scatter*
+//! variant. Each produces:
+//!
+//! - **live hybrid** measurements at a laptop-sized grid (default
+//!   2^10×2^10, every parcelport + baseline, mean ± CI over reps), and
+//! - **simnet predictions** at the paper's true 2^14×2^14 problem on
+//!   1–16 nodes of the buran model.
+
+use super::plot::{log_log_plot, Series};
+use super::runner::measure;
+use crate::baseline::fftw_like::{run_on as baseline_run_on, FftwLikeConfig};
+use crate::collectives::AllToAllAlgo;
+use crate::config::{BenchConfig, ClusterSpec};
+use crate::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
+use crate::hpx::runtime::Cluster;
+use crate::metrics::{csv::write_csv, RunStats};
+use crate::parcelport::PortKind;
+use crate::simnet::fft_model::{predict_fft, FftModelParams, ModelVariant};
+
+/// Which system one scaling series belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum System {
+    Hpx(PortKind),
+    Fftw3,
+}
+
+impl System {
+    pub const ALL: [System; 4] =
+        [System::Hpx(PortKind::Tcp), System::Hpx(PortKind::Mpi), System::Hpx(PortKind::Lci), System::Fftw3];
+
+    pub fn label(&self) -> String {
+        match self {
+            System::Hpx(p) => format!("hpx-{p}"),
+            System::Fftw3 => "fftw3-mpi+x".into(),
+        }
+    }
+
+    pub fn symbol(&self) -> char {
+        match self {
+            System::Hpx(PortKind::Tcp) => 'T',
+            System::Hpx(PortKind::Mpi) => 'M',
+            System::Hpx(PortKind::Lci) => 'L',
+            System::Fftw3 => 'F',
+        }
+    }
+}
+
+/// One strong-scaling point.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub system: System,
+    pub nodes: usize,
+    /// Live hybrid measurement (None for sim-only points).
+    pub live: Option<RunStats>,
+    /// Simnet prediction at paper scale, µs.
+    pub sim_us: f64,
+}
+
+/// Run one figure's sweep (Fig. 4 = `Variant::AllToAll`, Fig. 5 =
+/// `Variant::Scatter`).
+pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<ScalingPoint>> {
+    let spec = ClusterSpec::buran();
+    let net = spec.net_model();
+    let mut points = Vec::new();
+
+    for system in System::ALL {
+        // Live hybrid at laptop scale.
+        let mut live: std::collections::HashMap<usize, RunStats> = Default::default();
+        for &nodes in &config.live_nodes {
+            if config.live_grid % nodes != 0 {
+                continue;
+            }
+            let stats = match system {
+                System::Hpx(port) => {
+                    let cluster = Cluster::new(nodes, port, Some(net))?;
+                    let cfg = DistFftConfig {
+                        rows: config.live_grid,
+                        cols: config.live_grid,
+                        localities: nodes,
+                        port,
+                        variant,
+                        algo: AllToAllAlgo::HpxRoot,
+                        threads_per_locality: config.threads,
+                        net: Some(net),
+                        engine: ComputeEngine::Native,
+                        verify: false,
+                    };
+                    measure(config.warmup, config.reps, || {
+                        driver::run_on(&cluster, &cfg).expect("dist fft run").critical_path.total_us
+                    })
+                }
+                System::Fftw3 => {
+                    let cluster = Cluster::new(nodes, PortKind::Mpi, Some(net))?;
+                    let cfg = FftwLikeConfig {
+                        rows: config.live_grid,
+                        cols: config.live_grid,
+                        localities: nodes,
+                        threads: config.threads,
+                        net: Some(net),
+                        verify: false,
+                    };
+                    measure(config.warmup, config.reps, || {
+                        baseline_run_on(&cluster, &cfg).expect("baseline run").critical_path.total_us
+                    })
+                }
+            };
+            live.insert(nodes, stats);
+        }
+
+        // Simnet prediction at paper scale.
+        for &nodes in &config.sim_nodes {
+            let params = FftModelParams {
+                rows: config.sim_grid,
+                cols: config.sim_grid,
+                nodes,
+                compute: spec.compute_model(),
+                net,
+            };
+            let model_variant = match (system, variant) {
+                (System::Fftw3, _) => ModelVariant::FftwBaseline,
+                (System::Hpx(_), Variant::AllToAll) => {
+                    ModelVariant::AllToAll(AllToAllAlgo::HpxRoot)
+                }
+                (System::Hpx(_), Variant::Scatter) => ModelVariant::Scatter,
+            };
+            let port = match system {
+                System::Hpx(p) => p,
+                System::Fftw3 => PortKind::Mpi,
+            };
+            let sim = predict_fft(&params, port, model_variant);
+            points.push(ScalingPoint {
+                system,
+                nodes,
+                live: live.get(&nodes).cloned(),
+                sim_us: sim.makespan_us,
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Paper-style report: table + ASCII figures + CSV.
+pub fn report(
+    points: &[ScalingPoint],
+    variant: Variant,
+    config: &BenchConfig,
+    out_dir: &str,
+) -> anyhow::Result<String> {
+    let fig = match variant {
+        Variant::AllToAll => "Fig. 4",
+        Variant::Scatter => "Fig. 5",
+    };
+    let mut table = crate::metrics::table::Table::new(&[
+        "system", "nodes", "live mean", "±95% CI", "sim (2^14²)",
+    ]);
+    let mut rows = Vec::new();
+    for p in points {
+        table.row(&[
+            p.system.label(),
+            p.nodes.to_string(),
+            p.live.as_ref().map(|s| format!("{:.2} ms", s.mean() / 1e3)).unwrap_or("-".into()),
+            p.live.as_ref().map(|s| format!("{:.2}", s.ci95() / 1e3)).unwrap_or("-".into()),
+            format!("{:.1} ms", p.sim_us / 1e3),
+        ]);
+        rows.push(vec![
+            p.system.label(),
+            p.nodes.to_string(),
+            p.live.as_ref().map(|s| s.mean().to_string()).unwrap_or_default(),
+            p.live.as_ref().map(|s| s.ci95().to_string()).unwrap_or_default(),
+            p.sim_us.to_string(),
+        ]);
+    }
+    let tag = variant.name().replace('-', "_");
+    write_csv(
+        format!("{out_dir}/{}_strong_scaling_{tag}.csv", fig.replace([' ', '.'], "").to_lowercase()),
+        &["system", "nodes", "live_mean_us", "live_ci95_us", "sim_us"],
+        &rows,
+    )?;
+
+    let series: Vec<Series> = System::ALL
+        .iter()
+        .map(|&system| Series {
+            label: format!("{} (sim, {}²)", system.label(), config.sim_grid),
+            symbol: system.symbol(),
+            points: points
+                .iter()
+                .filter(|p| p.system == system)
+                .map(|p| (p.nodes as f64, p.sim_us))
+                .collect(),
+        })
+        .collect();
+
+    let mut out = String::new();
+    out.push_str(&table.render());
+    out.push('\n');
+    out.push_str(&log_log_plot(
+        &format!("{fig} — strong scaling, {} variant", variant.name()),
+        "nodes",
+        "runtime [µs]",
+        &series,
+    ));
+
+    // Headline: LCI-vs-FFTW3 speedup at the largest node count.
+    let max_nodes = points.iter().map(|p| p.nodes).max().unwrap_or(1);
+    let lci = points
+        .iter()
+        .find(|p| p.system == System::Hpx(PortKind::Lci) && p.nodes == max_nodes)
+        .map(|p| p.sim_us);
+    let fftw = points
+        .iter()
+        .find(|p| p.system == System::Fftw3 && p.nodes == max_nodes)
+        .map(|p| p.sim_us);
+    if let (Some(l), Some(f)) = (lci, fftw) {
+        out.push_str(&format!(
+            "\nheadline @ {max_nodes} nodes: hpx-lci {:.1} ms vs fftw3 {:.1} ms → speedup {:.2}×\n",
+            l / 1e3,
+            f / 1e3,
+            f / l
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchConfig {
+        BenchConfig {
+            reps: 2,
+            warmup: 0,
+            live_grid: 64,
+            live_nodes: vec![1, 2],
+            sim_nodes: vec![2, 4, 16],
+            threads: 1,
+            ..BenchConfig::quick()
+        }
+    }
+
+    #[test]
+    fn scatter_sweep_produces_points() {
+        let points = run(&tiny(), Variant::Scatter).unwrap();
+        // 4 systems × 3 sim node counts.
+        assert_eq!(points.len(), 12);
+        assert!(points.iter().all(|p| p.sim_us > 0.0));
+        // Live stats present where live_nodes ∩ sim_nodes.
+        assert!(points.iter().any(|p| p.live.is_some()));
+    }
+
+    #[test]
+    fn report_contains_headline() {
+        let cfg = tiny();
+        let points = run(&cfg, Variant::Scatter).unwrap();
+        let dir = std::env::temp_dir().join(format!("hpxfft-fig45-{}", std::process::id()));
+        let text = report(&points, Variant::Scatter, &cfg, dir.to_str().unwrap()).unwrap();
+        assert!(text.contains("Fig. 5"));
+        assert!(text.contains("headline @ 16 nodes"));
+        assert!(text.contains("speedup"));
+    }
+
+    #[test]
+    fn fig4_uses_hpx_root_and_loses_to_fig5() {
+        let cfg = tiny();
+        let fig4 = run(&cfg, Variant::AllToAll).unwrap();
+        let fig5 = run(&cfg, Variant::Scatter).unwrap();
+        let sim = |points: &[ScalingPoint], sys: System| {
+            points.iter().find(|p| p.system == sys && p.nodes == 16).unwrap().sim_us
+        };
+        // Scatter variant faster than all-to-all for HPX ports (the
+        // paper's Fig. 4 vs 5 finding) at paper scale.
+        for port in PortKind::ALL {
+            assert!(
+                sim(&fig5, System::Hpx(port)) < sim(&fig4, System::Hpx(port)),
+                "{port}"
+            );
+        }
+        // The FFTW3 baseline is the same in both figures.
+        assert_eq!(sim(&fig4, System::Fftw3), sim(&fig5, System::Fftw3));
+    }
+}

@@ -1,0 +1,23 @@
+//! Figure-regeneration harness.
+//!
+//! One driver per paper figure, shared between the `repro bench` CLI,
+//! `examples/`, and `cargo bench` targets:
+//!
+//! - [`fig3`] — chunk-size scaling of the scatter collective on two
+//!   nodes (paper Fig. 3): live hybrid measurement of all three
+//!   parcelports + the simnet/analytic prediction.
+//! - [`fig45`] — strong scaling of the distributed FFT (paper Figs. 4
+//!   and 5): live hybrid runs at laptop scale, simnet predictions at the
+//!   paper's 2^14×2^14 on up to 16 nodes, both against the FFTW3-like
+//!   baseline.
+//!
+//! Every driver reports paper-style rows (mean ± 95% CI over N reps),
+//! writes CSV series, and renders an ASCII log plot so the figure shape
+//! is visible in the terminal.
+
+pub mod fig3;
+pub mod fig45;
+pub mod plot;
+pub mod runner;
+
+pub use runner::measure;

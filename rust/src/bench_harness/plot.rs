@@ -1,0 +1,94 @@
+//! ASCII log-log series plots — the figures, in a terminal.
+
+/// One plotted series.
+pub struct Series {
+    pub label: String,
+    pub symbol: char,
+    /// (x, y) points; both must be positive for log scaling.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series on a log-log grid.
+pub fn log_log_plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    const W: usize = 64;
+    const H: usize = 20;
+    let all: Vec<(f64, f64)> =
+        series.iter().flat_map(|s| s.points.iter().copied()).filter(|&(x, y)| x > 0.0 && y > 0.0).collect();
+    if all.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    // Pad degenerate ranges.
+    if x0 == x1 {
+        x1 *= 2.0;
+    }
+    if y0 == y1 {
+        y1 *= 2.0;
+    }
+    let (lx0, lx1, ly0, ly1) = (x0.log10(), x1.log10(), y0.log10(), y1.log10());
+    let mut grid = vec![vec![' '; W]; H];
+    for s in series {
+        for &(x, y) in &s.points {
+            if x <= 0.0 || y <= 0.0 {
+                continue;
+            }
+            let cx = ((x.log10() - lx0) / (lx1 - lx0) * (W - 1) as f64).round() as usize;
+            let cy = ((y.log10() - ly0) / (ly1 - ly0) * (H - 1) as f64).round() as usize;
+            let row = H - 1 - cy.min(H - 1);
+            grid[row][cx.min(W - 1)] = s.symbol;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("{ylabel} (log, {:.3e} .. {:.3e})\n", y0, y1));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(W));
+    out.push('\n');
+    out.push_str(&format!("{xlabel} (log, {:.3e} .. {:.3e})\n", x0, x1));
+    for s in series {
+        out.push_str(&format!("  {} = {}\n", s.symbol, s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_symbols() {
+        let s = Series {
+            label: "lci".into(),
+            symbol: 'L',
+            points: vec![(1024.0, 10.0), (4096.0, 20.0), (16384.0, 45.0)],
+        };
+        let plot = log_log_plot("Fig 3", "bytes", "µs", &[s]);
+        assert!(plot.contains('L'));
+        assert!(plot.contains("Fig 3"));
+        assert!(plot.contains("lci"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let plot = log_log_plot("t", "x", "y", &[]);
+        assert!(plot.contains("no data"));
+    }
+
+    #[test]
+    fn single_point_safe() {
+        let s = Series { label: "one".into(), symbol: 'o', points: vec![(5.0, 5.0)] };
+        let plot = log_log_plot("t", "x", "y", &[s]);
+        assert!(plot.contains('o'));
+    }
+}

@@ -1,0 +1,50 @@
+//! Repetition driver: warmup + N measured reps → [`RunStats`].
+
+use crate::metrics::RunStats;
+
+/// Run `f` (returning a duration in µs) `warmup + reps` times; keep the
+/// last `reps` as statistics — the paper's "averaged over 50 runs".
+pub fn measure(warmup: usize, reps: usize, mut f: impl FnMut() -> f64) -> RunStats {
+    assert!(reps > 0, "need at least one measured rep");
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    RunStats::new((0..reps).map(|_| f()).collect())
+}
+
+/// Time a closure's wall clock in µs.
+pub fn time_us(f: impl FnOnce()) -> f64 {
+    let t0 = std::time::Instant::now();
+    f();
+    t0.elapsed().as_secs_f64() * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_reps() {
+        let mut calls = 0;
+        let stats = measure(2, 10, || {
+            calls += 1;
+            calls as f64
+        });
+        assert_eq!(calls, 12);
+        assert_eq!(stats.n(), 10);
+        // Warmup values (1, 2) excluded: samples are 3..=12.
+        assert_eq!(stats.mean(), 7.5);
+    }
+
+    #[test]
+    fn time_us_positive() {
+        let us = time_us(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(us >= 2000.0, "{us}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_reps_rejected() {
+        measure(0, 0, || 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal CLI argument parser (offline stand-in for `clap`).
+//!
+//! Grammar: `repro <subcommand> [--key value | --key=value | --flag]`.
+//! A `--key` followed by a token that does not start with `--` takes it
+//! as its value; otherwise it is a boolean flag.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("stray `--`");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.set(k, v)?;
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.set(key, &v)?;
+                } else {
+                    out.set(key, "true")?;
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        if self.options.insert(key.to_string(), value.to_string()).is_some() {
+            bail!("flag --{key} given twice");
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => {
+                raw.parse().map_err(|e| anyhow::anyhow!("--{key} {raw:?}: {e}"))
+            }
+        }
+    }
+
+    /// Unknown-flag guard: every provided option must be in `allowed`.
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for key in self.options.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!("unknown flag --{key}; allowed: {}", allowed.join(", --"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("bench chunk-size --reps 10 --port=lci --quick");
+        assert_eq!(a.positional, vec!["bench", "chunk-size"]);
+        assert_eq!(a.get("reps"), Some("10"));
+        assert_eq!(a.get("port"), Some("lci"));
+        assert!(a.get_bool("quick"));
+        assert!(!a.get_bool("absent"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("--rows 64");
+        assert_eq!(a.get_or("rows", 0usize).unwrap(), 64);
+        assert_eq!(a.get_or("cols", 32usize).unwrap(), 32);
+        assert!(a.get_or::<usize>("rows", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("--rows abc");
+        assert!(a.get_or::<usize>("rows", 0).is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(["--x".into(), "1".into(), "--x".into(), "2".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = parse("--rows 1 --bogus 2");
+        assert!(a.check_known(&["rows"]).is_err());
+        assert!(a.check_known(&["rows", "bogus"]).is_ok());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("run --verify");
+        assert!(a.get_bool("verify"));
+    }
+}

@@ -1,0 +1,349 @@
+//! All-to-all: four algorithms with one semantic.
+//!
+//! Semantics (MPI_Alltoall / `hpx::collectives::all_to_all`): rank `i`
+//! provides `chunks[j]` for every `j`; afterwards rank `i` holds, in slot
+//! `j`, the chunk rank `j` addressed to `i`. Equivalently, the global
+//! chunk matrix is transposed.
+//!
+//! | algorithm | traffic | when it wins |
+//! |---|---|---|
+//! | [`AllToAllAlgo::Linear`] | N² eager sends, all at once | small N, big messages |
+//! | [`AllToAllAlgo::Pairwise`] | N−1 balanced exchange rounds | the classic MPI large-message algorithm (used by our FFTW3-like baseline) |
+//! | [`AllToAllAlgo::Bruck`] | ⌈log2 N⌉ rounds of aggregated chunks | small messages, large N |
+//! | [`AllToAllAlgo::HpxRoot`] | gather-to-root + scatter-from-root | never — it models HPX's root-funneled collective, the overhead the paper measures against |
+//!
+//! The paper's Fig. 4 uses HPX's collective (→ `HpxRoot` here); Fig. 5
+//! replaces it with N overlapped scatters (see
+//! [`crate::dist_fft::scatter_variant`]).
+
+use super::comm::Communicator;
+use crate::hpx::parcel::Payload;
+
+/// Algorithm selector for [`Communicator::all_to_all`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllToAllAlgo {
+    Linear,
+    Pairwise,
+    Bruck,
+    HpxRoot,
+}
+
+impl AllToAllAlgo {
+    pub const ALL: [AllToAllAlgo; 4] =
+        [AllToAllAlgo::Linear, AllToAllAlgo::Pairwise, AllToAllAlgo::Bruck, AllToAllAlgo::HpxRoot];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllToAllAlgo::Linear => "linear",
+            AllToAllAlgo::Pairwise => "pairwise",
+            AllToAllAlgo::Bruck => "bruck",
+            AllToAllAlgo::HpxRoot => "hpx-root",
+        }
+    }
+}
+
+impl std::str::FromStr for AllToAllAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Ok(AllToAllAlgo::Linear),
+            "pairwise" => Ok(AllToAllAlgo::Pairwise),
+            "bruck" => Ok(AllToAllAlgo::Bruck),
+            "hpx-root" | "hpx_root" | "hpxroot" => Ok(AllToAllAlgo::HpxRoot),
+            other => Err(format!("unknown all-to-all algorithm {other:?}")),
+        }
+    }
+}
+
+impl Communicator {
+    /// Exchange `chunks` (one per destination rank, in rank order);
+    /// returns one payload per source rank, in rank order.
+    pub fn all_to_all(&self, chunks: Vec<Payload>, algo: AllToAllAlgo) -> Vec<Payload> {
+        assert_eq!(chunks.len(), self.size(), "need one chunk per rank");
+        match algo {
+            AllToAllAlgo::Linear => self.a2a_linear(chunks),
+            AllToAllAlgo::Pairwise => self.a2a_pairwise(chunks),
+            AllToAllAlgo::Bruck => self.a2a_bruck(chunks),
+            AllToAllAlgo::HpxRoot => self.a2a_hpx_root(chunks),
+        }
+    }
+
+    /// Post everything, then drain: maximal overlap, N² in-flight parcels.
+    fn a2a_linear(&self, mut chunks: Vec<Payload>) -> Vec<Payload> {
+        let tag = self.alloc_tags();
+        let n = self.size();
+        let me = self.rank();
+        let mut out: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
+        out[me] = Some(std::mem::replace(&mut chunks[me], Payload::empty()));
+        for (dst, chunk) in chunks.into_iter().enumerate() {
+            if dst != me {
+                self.send(dst, tag, chunk);
+            }
+        }
+        for (src, slot) in out.iter_mut().enumerate() {
+            if src != me {
+                *slot = Some(self.recv(src, tag));
+            }
+        }
+        out.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+
+    /// N−1 rounds; in round `r` exchange with `rank ^ r` (power-of-two
+    /// sizes) or `rank ± r` (general). One send + one recv in flight per
+    /// rank per round — the bandwidth-friendly schedule.
+    fn a2a_pairwise(&self, mut chunks: Vec<Payload>) -> Vec<Payload> {
+        let tag = self.alloc_tags();
+        let n = self.size();
+        let me = self.rank();
+        let mut out: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
+        out[me] = Some(std::mem::replace(&mut chunks[me], Payload::empty()));
+        let pow2 = n.is_power_of_two();
+        for r in 1..n {
+            let (send_to, recv_from) = if pow2 {
+                (me ^ r, me ^ r)
+            } else {
+                ((me + r) % n, (me + n - r) % n)
+            };
+            let outgoing = std::mem::replace(&mut chunks[send_to], Payload::empty());
+            self.send(send_to, tag + r as u64, outgoing);
+            out[recv_from] = Some(self.recv(recv_from, tag + r as u64));
+        }
+        out.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+
+    /// Bruck's algorithm: ⌈log2 n⌉ rounds, each moving aggregated blocks
+    /// of chunks. Latency-optimal for small messages; the aggregation
+    /// concatenates payloads with a length-prefixed framing.
+    fn a2a_bruck(&self, chunks: Vec<Payload>) -> Vec<Payload> {
+        let tag = self.alloc_tags();
+        let n = self.size();
+        let me = self.rank();
+
+        // Phase 1: local rotation — slot j holds the chunk for rank
+        // (me + j) mod n.
+        let mut slots: Vec<Vec<u8>> = (0..n)
+            .map(|j| chunks[(me + j) % n].as_bytes().to_vec())
+            .collect();
+
+        // Phase 2: log rounds. In round k (step = 2^k), send every slot
+        // whose index has bit k set to (me + step) mod n.
+        let mut step = 1;
+        let mut round = 0u64;
+        while step < n {
+            let to = (me + step) % n;
+            let from = (me + n - step) % n;
+            let moving: Vec<usize> = (0..n).filter(|j| j & step != 0).collect();
+            // Frame: [count u32] then per block [index u32][len u64][bytes].
+            let mut frame = Vec::new();
+            crate::util::bytes::put_u32(&mut frame, moving.len() as u32);
+            for &j in &moving {
+                crate::util::bytes::put_u32(&mut frame, j as u32);
+                crate::util::bytes::put_u64(&mut frame, slots[j].len() as u64);
+                frame.extend_from_slice(&slots[j]);
+            }
+            self.send(to, tag + round, Payload::new(frame));
+            let incoming = self.recv(from, tag + round);
+            let buf = incoming.as_bytes();
+            let mut off = 0;
+            let count = crate::util::bytes::get_u32(buf, &mut off) as usize;
+            for _ in 0..count {
+                let j = crate::util::bytes::get_u32(buf, &mut off) as usize;
+                let len = crate::util::bytes::get_u64(buf, &mut off) as usize;
+                slots[j] = buf[off..off + len].to_vec();
+                off += len;
+            }
+            step <<= 1;
+            round += 1;
+        }
+
+        // Phase 3: inverse rotation — received slot j originated at rank
+        // (me - j) mod n.
+        let mut out: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
+        for (j, bytes) in slots.into_iter().enumerate() {
+            let src = (me + n - j) % n;
+            out[src] = Some(Payload::new(bytes));
+        }
+        out.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+
+    /// HPX's communicator-based collective funnels contributions through
+    /// the communicator root: gather all N×N chunks to rank 0, transpose
+    /// there, scatter back out. Synchronized and root-bottlenecked —
+    /// which is precisely the overhead the paper's N-scatter variant
+    /// avoids.
+    fn a2a_hpx_root(&self, chunks: Vec<Payload>) -> Vec<Payload> {
+        let n = self.size();
+        // Gather: each rank ships its whole chunk row to root 0.
+        let mut row = Vec::new();
+        crate::util::bytes::put_u32(&mut row, n as u32);
+        for c in &chunks {
+            crate::util::bytes::put_u64(&mut row, c.len() as u64);
+            row.extend_from_slice(c.as_bytes());
+        }
+        let gathered = self.gather(0, Payload::new(row));
+
+        // Root: decode rows, transpose the chunk matrix, re-encode columns.
+        let scattered = if self.rank() == 0 {
+            let rows: Vec<Vec<Vec<u8>>> = gathered
+                .expect("root gathers")
+                .into_iter()
+                .map(|p| {
+                    let buf = p.as_bytes();
+                    let mut off = 0;
+                    let count = crate::util::bytes::get_u32(buf, &mut off) as usize;
+                    (0..count)
+                        .map(|_| {
+                            let len = crate::util::bytes::get_u64(buf, &mut off) as usize;
+                            let b = buf[off..off + len].to_vec();
+                            off += len;
+                            b
+                        })
+                        .collect()
+                })
+                .collect();
+            let cols: Vec<Payload> = (0..n)
+                .map(|dst| {
+                    let mut col = Vec::new();
+                    crate::util::bytes::put_u32(&mut col, n as u32);
+                    for row in rows.iter() {
+                        crate::util::bytes::put_u64(&mut col, row[dst].len() as u64);
+                        col.extend_from_slice(&row[dst]);
+                    }
+                    Payload::new(col)
+                })
+                .collect();
+            Some(cols)
+        } else {
+            None
+        };
+        let mine = self.scatter(0, scattered);
+
+        // Decode my column back into per-source payloads.
+        let buf = mine.as_bytes();
+        let mut off = 0;
+        let count = crate::util::bytes::get_u32(buf, &mut off) as usize;
+        (0..count)
+            .map(|_| {
+                let len = crate::util::bytes::get_u64(buf, &mut off) as usize;
+                let p = Payload::new(buf[off..off + len].to_vec());
+                off += len;
+                p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::check;
+
+    /// The defining property: all_to_all == transpose of the chunk matrix.
+    fn transpose_property(n: usize, algo: AllToAllAlgo, kind: PortKind, chunk_len: usize) {
+        let cluster = Cluster::new(n, kind, None).unwrap();
+        let results = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let send: Vec<Payload> = (0..n)
+                .map(|dst| Payload::from_f32(&vec![(ctx.rank * n + dst) as f32; chunk_len]))
+                .collect();
+            comm.all_to_all(send, algo)
+        });
+        for (i, recv) in results.iter().enumerate() {
+            for (j, p) in recv.iter().enumerate() {
+                assert_eq!(
+                    p.to_f32(),
+                    vec![(j * n + i) as f32; chunk_len],
+                    "algo {algo:?}: rank {i} slot {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_algorithms_pow2() {
+        for algo in AllToAllAlgo::ALL {
+            transpose_property(4, algo, PortKind::Lci, 8);
+        }
+    }
+
+    #[test]
+    fn all_algorithms_non_pow2() {
+        for algo in AllToAllAlgo::ALL {
+            transpose_property(5, algo, PortKind::Lci, 3);
+        }
+    }
+
+    #[test]
+    fn all_algorithms_n2_and_n1() {
+        for algo in AllToAllAlgo::ALL {
+            transpose_property(2, algo, PortKind::Lci, 4);
+            transpose_property(1, algo, PortKind::Lci, 4);
+        }
+    }
+
+    #[test]
+    fn pairwise_over_mpi_rendezvous_sizes() {
+        // 70 KiB chunks push the MPI port onto the rendezvous path.
+        transpose_property(4, AllToAllAlgo::Pairwise, PortKind::Mpi, 70 * 1024 / 4);
+    }
+
+    #[test]
+    fn linear_over_tcp() {
+        transpose_property(3, AllToAllAlgo::Linear, PortKind::Tcp, 16);
+    }
+
+    #[test]
+    fn algorithms_agree_randomized() {
+        // Property: every algorithm produces identical results on random
+        // ragged payloads.
+        check(
+            0xA2A,
+            8,
+            |rng| {
+                let n = rng.range(2, 6);
+                let lens: Vec<Vec<usize>> =
+                    (0..n).map(|_| (0..n).map(|_| rng.range(0, 64)).collect()).collect();
+                (n, lens)
+            },
+            |(n, lens)| {
+                let n = *n;
+                let mut reference: Option<Vec<Vec<Vec<u8>>>> = None;
+                for algo in AllToAllAlgo::ALL {
+                    let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+                    let lens = lens.clone();
+                    let results = cluster.run(move |ctx| {
+                        let comm = Communicator::from_ctx(ctx);
+                        let send: Vec<Payload> = (0..n)
+                            .map(|dst| {
+                                let len = lens[ctx.rank][dst];
+                                let mut rng =
+                                    Pcg32::with_stream(99, (ctx.rank * n + dst) as u64);
+                                Payload::new(
+                                    (0..len).map(|_| rng.next_u32() as u8).collect(),
+                                )
+                            })
+                            .collect();
+                        comm.all_to_all(send, algo)
+                            .into_iter()
+                            .map(|p| p.as_bytes().to_vec())
+                            .collect::<Vec<_>>()
+                    });
+                    match &reference {
+                        None => reference = Some(results),
+                        Some(r) => assert_eq!(r, &results, "algo {algo:?} deviates"),
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn algo_parse() {
+        assert_eq!("bruck".parse::<AllToAllAlgo>().unwrap(), AllToAllAlgo::Bruck);
+        assert_eq!("hpx-root".parse::<AllToAllAlgo>().unwrap(), AllToAllAlgo::HpxRoot);
+        assert!("magic".parse::<AllToAllAlgo>().is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Dissemination barrier.
+
+use super::comm::Communicator;
+use crate::hpx::parcel::Payload;
+
+impl Communicator {
+    /// Dissemination barrier: ⌈log2 n⌉ rounds; in round `k` each rank
+    /// signals `rank + 2^k` and waits for `rank - 2^k` (mod n). No rank
+    /// exits before every rank has entered.
+    pub fn barrier(&self) {
+        let n = self.size();
+        let tag = self.alloc_tags();
+        if n <= 1 {
+            return;
+        }
+        let mut step = 1;
+        let mut round = 0u64;
+        while step < n {
+            let to = (self.rank() + step) % n;
+            let from = (self.rank() + n - step) % n;
+            self.send(to, tag + round, Payload::empty());
+            self.recv(from, tag + round);
+            step <<= 1;
+            round += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn barrier_completes_all_sizes() {
+        for n in [1usize, 2, 3, 4, 7, 8] {
+            let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+            cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.barrier();
+            });
+        }
+    }
+
+    #[test]
+    fn barrier_actually_synchronizes() {
+        // No rank may observe fewer than n arrivals after the barrier.
+        let n = 6;
+        let arrivals = AtomicUsize::new(0);
+        let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+        cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            // Stagger entry to make missed synchronization observable.
+            std::thread::sleep(std::time::Duration::from_millis(ctx.rank as u64 * 3));
+            arrivals.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            assert_eq!(arrivals.load(Ordering::SeqCst), n, "rank {} exited early", ctx.rank);
+        });
+    }
+
+    #[test]
+    fn repeated_barriers_do_not_cross_talk() {
+        let cluster = Cluster::new(4, PortKind::Mpi, None).unwrap();
+        cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            for _ in 0..20 {
+                comm.barrier();
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_over_tcp() {
+        let cluster = Cluster::new(3, PortKind::Tcp, None).unwrap();
+        cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.barrier();
+            comm.barrier();
+        });
+    }
+}

@@ -1,0 +1,101 @@
+//! Broadcast and gather-family collectives (binomial tree / linear).
+
+use super::comm::Communicator;
+use crate::hpx::parcel::Payload;
+
+impl Communicator {
+    /// Binomial-tree broadcast from `root`. Non-roots pass `None`.
+    pub fn broadcast(&self, root: usize, data: Option<Payload>) -> Payload {
+        assert!(root < self.size(), "root {root} out of range");
+        let tag = self.alloc_tags();
+        let n = self.size();
+        // Rotate ranks so the root sits at virtual rank 0.
+        let vrank = (self.rank() + n - root) % n;
+
+        let mut payload = if self.rank() == root {
+            Some(data.expect("root must provide data"))
+        } else {
+            assert!(data.is_none(), "non-root rank {} passed data", self.rank());
+            None
+        };
+
+        // Receive from parent: vrank with its highest set bit cleared.
+        // (Tree invariant: child c = parent + 2^k with 2^k > parent, so
+        // clearing c's top bit recovers the parent uniquely.)
+        if vrank != 0 {
+            let mask = 1 << (usize::BITS - 1 - vrank.leading_zeros());
+            let parent = ((vrank ^ mask) + root) % n;
+            payload = Some(self.recv(parent, tag));
+        }
+
+        // Forward to children: vrank + 2^k for 2^k > vrank's highest bit.
+        let payload = payload.expect("broadcast payload resolved");
+        let start = if vrank == 0 {
+            1
+        } else {
+            1 << (usize::BITS - vrank.leading_zeros()) // next power of two above vrank
+        };
+        let mut step = start;
+        while vrank + step < n {
+            let child = ((vrank + step) + root) % n;
+            self.send(child, tag, payload.clone());
+            step <<= 1;
+        }
+        payload
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+
+    fn bcast_n(n: usize, root: usize, kind: PortKind) {
+        let cluster = Cluster::new(n, kind, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let data = (ctx.rank == root).then(|| Payload::from_f32(&[root as f32, 42.0]));
+            comm.broadcast(root, data).to_f32()
+        });
+        for g in got {
+            assert_eq!(g, vec![root as f32, 42.0]);
+        }
+    }
+
+    #[test]
+    fn bcast_all_roots_pow2() {
+        for root in 0..4 {
+            bcast_n(4, root, PortKind::Lci);
+        }
+    }
+
+    #[test]
+    fn bcast_all_roots_non_pow2() {
+        for root in 0..5 {
+            bcast_n(5, root, PortKind::Lci);
+        }
+    }
+
+    #[test]
+    fn bcast_over_mpi_and_tcp() {
+        bcast_n(6, 2, PortKind::Mpi);
+        bcast_n(3, 1, PortKind::Tcp);
+    }
+
+    #[test]
+    fn bcast_single_rank() {
+        bcast_n(1, 0, PortKind::Lci);
+    }
+
+    #[test]
+    fn bcast_large_payload() {
+        let cluster = Cluster::new(4, PortKind::Mpi, None).unwrap();
+        let lens = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let data = (ctx.rank == 0).then(|| Payload::new(vec![7u8; 300_000]));
+            comm.broadcast(0, data).len()
+        });
+        assert_eq!(lens, vec![300_000; 4]);
+    }
+}

@@ -1,0 +1,130 @@
+//! The communicator: rank + size + fabric handle + tag discipline.
+
+use crate::hpx::parcel::{actions, LocalityId, Parcel, Payload, Tag};
+use crate::hpx::runtime::LocalityCtx;
+use crate::parcelport::Parcelport;
+use std::cell::Cell;
+use std::sync::Arc;
+
+/// A per-locality handle for collective operations.
+///
+/// Not `Sync` by design: one communicator belongs to one locality thread
+/// (clone-per-thread, like an `MPI_Comm` rank handle). Tags for successive
+/// collectives come from a local counter that stays in lock-step across
+/// ranks under the SPMD calling discipline.
+pub struct Communicator {
+    fabric: Arc<dyn Parcelport>,
+    rank: LocalityId,
+    size: usize,
+    next_tag: Cell<Tag>,
+}
+
+impl Communicator {
+    pub fn new(fabric: Arc<dyn Parcelport>, rank: LocalityId, size: usize) -> Self {
+        assert!(rank < size, "rank {rank} out of range for size {size}");
+        assert!(size <= fabric.n_localities(), "communicator larger than fabric");
+        Self { fabric, rank, size, next_tag: Cell::new(0) }
+    }
+
+    pub fn from_ctx(ctx: &LocalityCtx) -> Self {
+        Self::new(Arc::clone(ctx.fabric()), ctx.rank, ctx.n)
+    }
+
+    pub fn rank(&self) -> LocalityId {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn fabric(&self) -> &Arc<dyn Parcelport> {
+        &self.fabric
+    }
+
+    /// Allocate the base tag for one collective invocation. Each
+    /// collective may use a contiguous block of `self.size` tags starting
+    /// here (rounds, per-peer slots).
+    pub(crate) fn alloc_tags(&self) -> Tag {
+        let t = self.next_tag.get();
+        // Reserve a generous block so algorithms can derive per-round /
+        // per-peer tags without collision.
+        self.next_tag.set(t + 4 * self.size as Tag + 8);
+        t
+    }
+
+    /// Send a collective-action parcel.
+    pub(crate) fn send(&self, dest: LocalityId, tag: Tag, payload: Payload) {
+        self.fabric.send(Parcel::new(self.rank, dest, actions::COLLECTIVE, tag, payload));
+    }
+
+    /// Blocking matched receive of a collective-action parcel.
+    pub(crate) fn recv(&self, src: LocalityId, tag: Tag) -> Payload {
+        self.fabric.recv(self.rank, src, actions::COLLECTIVE, tag)
+    }
+
+    /// Non-blocking matched receive (used by overlap-hungry callers).
+    pub(crate) fn try_recv(&self, src: LocalityId, tag: Tag) -> Option<Payload> {
+        self.fabric.try_recv(self.rank, src, actions::COLLECTIVE, tag)
+    }
+
+    /// Expose a matched receive for application-level overlap (the
+    /// N-scatter FFT variant polls for whichever root's chunk lands
+    /// first).
+    pub fn try_recv_tagged(&self, src: LocalityId, tag: Tag) -> Option<Payload> {
+        self.try_recv(src, tag)
+    }
+
+    /// Blocking variant of [`Communicator::try_recv_tagged`].
+    pub fn recv_tagged(&self, src: LocalityId, tag: Tag) -> Payload {
+        self.recv(src, tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parcelport::{lci::LciParcelport, PortKind};
+
+    fn fabric(n: usize) -> Arc<dyn Parcelport> {
+        Arc::new(LciParcelport::new(n, None))
+    }
+
+    #[test]
+    fn construction_and_accessors() {
+        let comm = Communicator::new(fabric(4), 2, 4);
+        assert_eq!(comm.rank(), 2);
+        assert_eq!(comm.size(), 4);
+        assert_eq!(comm.fabric().kind(), PortKind::Lci);
+    }
+
+    #[test]
+    fn tag_blocks_do_not_overlap() {
+        let comm = Communicator::new(fabric(4), 0, 4);
+        let a = comm.alloc_tags();
+        let b = comm.alloc_tags();
+        assert!(b - a >= 4 * 4 + 8, "blocks must not overlap: {a} {b}");
+    }
+
+    #[test]
+    fn tag_sequences_identical_across_ranks() {
+        let f = fabric(2);
+        let c0 = Communicator::new(Arc::clone(&f), 0, 2);
+        let c1 = Communicator::new(Arc::clone(&f), 1, 2);
+        for _ in 0..10 {
+            assert_eq!(c0.alloc_tags(), c1.alloc_tags());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bad_rank_panics() {
+        Communicator::new(fabric(2), 2, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than fabric")]
+    fn oversized_comm_panics() {
+        Communicator::new(fabric(2), 0, 3);
+    }
+}

@@ -1,0 +1,113 @@
+//! Gather and all-gather.
+
+use super::comm::Communicator;
+use crate::hpx::parcel::Payload;
+
+impl Communicator {
+    /// Linear gather to `root`: every rank contributes one payload; the
+    /// root receives them in rank order (`Some(vec)`), others get `None`.
+    pub fn gather(&self, root: usize, data: Payload) -> Option<Vec<Payload>> {
+        assert!(root < self.size(), "root {root} out of range");
+        let tag = self.alloc_tags();
+        if self.rank() == root {
+            let mut out = Vec::with_capacity(self.size());
+            for src in 0..self.size() {
+                if src == root {
+                    out.push(data.clone());
+                } else {
+                    out.push(self.recv(src, tag));
+                }
+            }
+            Some(out)
+        } else {
+            self.send(root, tag, data);
+            None
+        }
+    }
+
+    /// Ring all-gather: after `size - 1` rounds every rank holds every
+    /// contribution, in rank order. Bandwidth-optimal (each byte crosses
+    /// each link once).
+    pub fn all_gather(&self, data: Payload) -> Vec<Payload> {
+        let n = self.size();
+        let tag = self.alloc_tags();
+        let mut slots: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
+        slots[self.rank()] = Some(data);
+
+        let next = (self.rank() + 1) % n;
+        let prev = (self.rank() + n - 1) % n;
+        // Round r: forward the block that originated at rank - r.
+        for r in 0..n.saturating_sub(1) {
+            let send_origin = (self.rank() + n - r) % n;
+            let recv_origin = (self.rank() + n - r - 1) % n;
+            let outgoing =
+                slots[send_origin].as_ref().expect("ring invariant: block present").clone();
+            self.send(next, tag + r as u64, outgoing);
+            slots[recv_origin] = Some(self.recv(prev, tag + r as u64));
+        }
+        slots.into_iter().map(|s| s.expect("all blocks filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+
+    #[test]
+    fn gather_collects_in_rank_order() {
+        let cluster = Cluster::new(4, PortKind::Lci, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.gather(3, Payload::from_f32(&[ctx.rank as f32]))
+                .map(|v| v.iter().map(|p| p.to_f32()[0]).collect::<Vec<_>>())
+        });
+        assert_eq!(got[3], Some(vec![0.0, 1.0, 2.0, 3.0]));
+        for r in 0..3 {
+            assert!(got[r].is_none());
+        }
+    }
+
+    #[test]
+    fn all_gather_every_rank_sees_all() {
+        for n in [1usize, 2, 3, 5, 8] {
+            let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+            let got = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                let all = comm.all_gather(Payload::from_f32(&[ctx.rank as f32 * 2.0]));
+                all.iter().map(|p| p.to_f32()[0]).collect::<Vec<_>>()
+            });
+            let expect: Vec<f32> = (0..n).map(|i| i as f32 * 2.0).collect();
+            for g in got {
+                assert_eq!(g, expect, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_over_tcp_and_mpi() {
+        for kind in [PortKind::Tcp, PortKind::Mpi] {
+            let cluster = Cluster::new(3, kind, None).unwrap();
+            let got = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.gather(0, Payload::new(vec![ctx.rank as u8; ctx.rank + 1]))
+                    .map(|v| v.iter().map(|p| p.len()).collect::<Vec<_>>())
+            });
+            assert_eq!(got[0], Some(vec![1, 2, 3]), "{kind}");
+        }
+    }
+
+    #[test]
+    fn all_gather_varied_sizes() {
+        let cluster = Cluster::new(4, PortKind::Mpi, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let all = comm.all_gather(Payload::new(vec![ctx.rank as u8; (ctx.rank + 1) * 100]));
+            all.iter().map(|p| p.len()).collect::<Vec<_>>()
+        });
+        for g in got {
+            assert_eq!(g, vec![100, 200, 300, 400]);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Reduce / all-reduce on f32 vectors (binomial tree + broadcast).
+
+use super::comm::Communicator;
+use crate::hpx::parcel::Payload;
+
+/// Element-wise reduction operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    #[inline]
+    fn apply(&self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        assert_eq!(acc.len(), other.len(), "reduce length mismatch");
+        for (a, &b) in acc.iter_mut().zip(other) {
+            *a = self.apply(*a, b);
+        }
+    }
+}
+
+impl Communicator {
+    /// Binomial-tree reduce to `root`. Every rank contributes `data`;
+    /// the root returns `Some(result)`, others `None`.
+    pub fn reduce(&self, root: usize, data: &[f32], op: ReduceOp) -> Option<Vec<f32>> {
+        assert!(root < self.size(), "root {root} out of range");
+        let tag = self.alloc_tags();
+        let n = self.size();
+        let vrank = (self.rank() + n - root) % n;
+        let mut acc = data.to_vec();
+
+        // Mirror of the binomial broadcast tree, edges reversed: receive
+        // from children (vrank + 2^k), then send to parent.
+        let start = if vrank == 0 { 1 } else { 1 << (usize::BITS - vrank.leading_zeros()) };
+        // Children must be combined in *descending* step order to mirror
+        // their own completion order; any fixed order is deterministic
+        // for Sum/Max/Min, so ascending is fine and simpler.
+        let mut step = start;
+        while vrank + step < n {
+            let child = ((vrank + step) + root) % n;
+            let contrib = self.recv(child, tag).to_f32();
+            op.combine(&mut acc, &contrib);
+            step <<= 1;
+        }
+        if vrank != 0 {
+            let mask = 1 << (usize::BITS - 1 - vrank.leading_zeros());
+            let parent = ((vrank ^ mask) + root) % n;
+            self.send(parent, tag, Payload::from_f32(&acc));
+            None
+        } else {
+            Some(acc)
+        }
+    }
+
+    /// All-reduce = reduce to rank 0 + broadcast.
+    pub fn all_reduce(&self, data: &[f32], op: ReduceOp) -> Vec<f32> {
+        let reduced = self.reduce(0, data, op);
+        let payload = reduced.map(|v| Payload::from_f32(&v));
+        self.broadcast(0, if self.rank() == 0 { payload } else { None }).to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+
+    #[test]
+    fn sum_reduce_all_roots() {
+        let n = 5;
+        for root in 0..n {
+            let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+            let got = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.reduce(root, &[ctx.rank as f32, 1.0], ReduceOp::Sum)
+            });
+            let expect = vec![(n * (n - 1) / 2) as f32, n as f32];
+            for (r, g) in got.iter().enumerate() {
+                if r == root {
+                    assert_eq!(g.as_ref().unwrap(), &expect);
+                } else {
+                    assert!(g.is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_and_min() {
+        let cluster = Cluster::new(4, PortKind::Mpi, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let v = [ctx.rank as f32, -(ctx.rank as f32)];
+            let mx = comm.all_reduce(&v, ReduceOp::Max);
+            let mn = comm.all_reduce(&v, ReduceOp::Min);
+            (mx, mn)
+        });
+        for (mx, mn) in got {
+            assert_eq!(mx, vec![3.0, 0.0]);
+            assert_eq!(mn, vec![0.0, -3.0]);
+        }
+    }
+
+    #[test]
+    fn all_reduce_consistent_across_ranks() {
+        let cluster = Cluster::new(7, PortKind::Lci, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.all_reduce(&[1.0; 3], ReduceOp::Sum)
+        });
+        for g in got {
+            assert_eq!(g, vec![7.0; 3]);
+        }
+    }
+
+    #[test]
+    fn single_rank_reduce() {
+        let cluster = Cluster::new(1, PortKind::Lci, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.reduce(0, &[5.0], ReduceOp::Sum).unwrap()
+        });
+        assert_eq!(got[0], vec![5.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Scatter and the paper's N-scatter building block.
+//!
+//! HPX's `scatter_to`/`scatter_from` is a linear collective: the root
+//! sends chunk `i` to participant `i`. The FFT scatter variant issues one
+//! such scatter per root locality; [`Communicator::scatter_nonroot_tag`]
+//! exposes the tag so receivers can poll many outstanding scatters and
+//! process whichever arrives first (the comm/compute overlap the paper
+//! proposes).
+
+use super::comm::Communicator;
+use crate::hpx::parcel::{Payload, Tag};
+
+impl Communicator {
+    /// Linear scatter: the root provides one payload per rank (in rank
+    /// order) and every rank receives its chunk. Non-roots pass `None`.
+    ///
+    /// # Panics
+    /// If the root's chunk count differs from the communicator size, or a
+    /// non-root passes data.
+    pub fn scatter(&self, root: usize, chunks: Option<Vec<Payload>>) -> Payload {
+        let tag = self.alloc_tags();
+        self.scatter_with_tag(root, chunks, tag)
+    }
+
+    /// Scatter on an explicit pre-allocated tag (for overlapping many
+    /// scatters; pair with [`Communicator::scatter_tags`]).
+    pub fn scatter_with_tag(
+        &self,
+        root: usize,
+        chunks: Option<Vec<Payload>>,
+        tag: Tag,
+    ) -> Payload {
+        assert!(root < self.size(), "root {root} out of range");
+        if self.rank() == root {
+            let chunks = chunks.expect("root must provide chunks");
+            assert_eq!(chunks.len(), self.size(), "need exactly one chunk per rank");
+            let mut mine = None;
+            for (dst, chunk) in chunks.into_iter().enumerate() {
+                if dst == self.rank() {
+                    mine = Some(chunk); // root's own chunk never hits the fabric
+                } else {
+                    self.send(dst, tag, chunk);
+                }
+            }
+            mine.expect("root chunk present")
+        } else {
+            assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
+            self.recv(root, tag)
+        }
+    }
+
+    /// Pre-allocate tags for `k` upcoming scatters (SPMD: all ranks call
+    /// this identically). Returns the base tags in call order.
+    pub fn scatter_tags(&self, k: usize) -> Vec<Tag> {
+        (0..k).map(|_| self.alloc_tags()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+
+    #[test]
+    fn scatter_delivers_rank_chunks() {
+        let cluster = Cluster::new(4, PortKind::Lci, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let chunks = (ctx.rank == 2)
+                .then(|| (0..4).map(|i| Payload::from_f32(&[i as f32 * 10.0])).collect());
+            comm.scatter(2, chunks).to_f32()[0]
+        });
+        assert_eq!(got, vec![0.0, 10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn scatter_root_zero() {
+        let cluster = Cluster::new(3, PortKind::Mpi, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let chunks =
+                (ctx.rank == 0).then(|| (0..3).map(|i| Payload::new(vec![i as u8; 4])).collect());
+            comm.scatter(0, chunks).as_bytes()[0]
+        });
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn overlapped_scatters_with_explicit_tags() {
+        // N concurrent scatters (one per root) — the FFT pattern.
+        let n = 4;
+        let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+        let sums = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let tags = comm.scatter_tags(n);
+            let mut received = vec![0.0f32; n];
+            for (root, &tag) in tags.iter().enumerate() {
+                let chunks = (ctx.rank == root).then(|| {
+                    (0..n).map(|dst| Payload::from_f32(&[(root * n + dst) as f32])).collect()
+                });
+                received[root] = comm.scatter_with_tag(root, chunks, tag).to_f32()[0];
+            }
+            received.iter().sum::<f32>()
+        });
+        // Rank r receives root*n + r from each root.
+        for (r, s) in sums.iter().enumerate() {
+            let expect: f32 = (0..n).map(|root| (root * n + r) as f32).sum();
+            assert_eq!(*s, expect);
+        }
+    }
+
+    #[test]
+    fn single_rank_scatter_is_identity() {
+        let cluster = Cluster::new(1, PortKind::Lci, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.scatter(0, Some(vec![Payload::from_f32(&[9.0])])).to_f32()[0]
+        });
+        assert_eq!(got, vec![9.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn root_without_chunks_panics() {
+        // Single-rank cluster: a panicking locality with peers blocked in
+        // recv would deadlock the join scope, so the misuse is probed
+        // where no peer can be left waiting.
+        let cluster = Cluster::new(1, PortKind::Lci, None).unwrap();
+        cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.scatter(0, None); // root passes None → panics
+        });
+    }
+
+    #[test]
+    fn payload_sizes_preserved() {
+        let cluster = Cluster::new(3, PortKind::Tcp, None).unwrap();
+        let lens = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let chunks = (ctx.rank == 0)
+                .then(|| (0..3).map(|i| Payload::new(vec![0u8; (i + 1) * 1000])).collect());
+            comm.scatter(0, chunks).len()
+        });
+        assert_eq!(lens, vec![1000, 2000, 3000]);
+    }
+}

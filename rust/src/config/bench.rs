@@ -1,0 +1,118 @@
+//! Benchmark run matrices — the knobs of Figs. 3–5 as one struct, with
+//! defaults scaled for a laptop-class live run and a `--paper-scale`
+//! switch for the simnet prediction at the true problem size.
+
+use super::kv::Config;
+use anyhow::Result;
+
+/// Parameters shared by the figure harnesses.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Repetitions per measured point (paper: 50).
+    pub reps: usize,
+    /// Warmup repetitions excluded from stats.
+    pub warmup: usize,
+    /// Live-mode grid (rows = cols).
+    pub live_grid: usize,
+    /// Live-mode locality counts to sweep.
+    pub live_nodes: Vec<usize>,
+    /// Simnet locality counts to sweep (paper: 1..16).
+    pub sim_nodes: Vec<usize>,
+    /// Simnet grid (paper: 2^14).
+    pub sim_grid: usize,
+    /// Chunk sizes for the Fig. 3 sweep, bytes.
+    pub chunk_sizes: Vec<u64>,
+    /// Threads per locality in live runs.
+    pub threads: usize,
+    /// Output directory for CSV series.
+    pub out_dir: String,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            reps: 50,
+            warmup: 3,
+            live_grid: 1 << 10,
+            live_nodes: vec![1, 2, 4, 8],
+            sim_nodes: vec![1, 2, 4, 8, 16],
+            sim_grid: 1 << 14,
+            // 1 KiB … 16 MiB, ×4 steps (the paper's log sweep).
+            chunk_sizes: (0..8).map(|i| 1024u64 << (2 * i)).collect(),
+            threads: 2,
+            out_dir: "bench_out".into(),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            reps: 5,
+            warmup: 1,
+            live_grid: 1 << 8,
+            live_nodes: vec![1, 2, 4],
+            chunk_sizes: (0..5).map(|i| 1024u64 << (2 * i)).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Override from a key=value config file (`bench.reps`, `bench.grid`, ...).
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        let cfg = Config::load(path)?;
+        if let Some(v) = cfg.get_parsed("bench.reps")? {
+            self.reps = v;
+        }
+        if let Some(v) = cfg.get_parsed("bench.warmup")? {
+            self.warmup = v;
+        }
+        if let Some(v) = cfg.get_parsed("bench.live_grid")? {
+            self.live_grid = v;
+        }
+        if let Some(v) = cfg.get_parsed("bench.sim_grid")? {
+            self.sim_grid = v;
+        }
+        if let Some(v) = cfg.get_parsed("bench.threads")? {
+            self.threads = v;
+        }
+        if let Some(v) = cfg.get("bench.out_dir") {
+            self.out_dir = v.to_string();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_methodology() {
+        let c = BenchConfig::default();
+        assert_eq!(c.reps, 50);
+        assert_eq!(c.sim_grid, 1 << 14);
+        assert_eq!(*c.sim_nodes.last().unwrap(), 16);
+        assert_eq!(c.chunk_sizes[0], 1024);
+        assert_eq!(*c.chunk_sizes.last().unwrap(), 16 << 20);
+    }
+
+    #[test]
+    fn quick_is_smaller() {
+        let q = BenchConfig::quick();
+        assert!(q.reps < BenchConfig::default().reps);
+    }
+
+    #[test]
+    fn file_overrides() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.conf");
+        std::fs::write(&path, "[bench]\nreps = 7\nthreads = 3\n").unwrap();
+        let mut c = BenchConfig::default();
+        c.apply_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.reps, 7);
+        assert_eq!(c.threads, 3);
+        assert_eq!(c.live_grid, 1 << 10); // untouched
+    }
+}

@@ -1,0 +1,90 @@
+//! Cluster hardware specification — the paper's Fig. 2, as data.
+
+use crate::parcelport::NetModel;
+use crate::simnet::ComputeModel;
+
+/// Hardware description of a benchmark cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub nodes: usize,
+    pub connection: &'static str,
+    pub link_gbits: f64,
+    pub sockets: usize,
+    pub cpu: &'static str,
+    pub cores_per_socket: usize,
+    pub clock_ghz: f64,
+    pub l3_mb: usize,
+    pub ram_gb: usize,
+}
+
+impl ClusterSpec {
+    /// Fig. 2: the "buran" cluster.
+    pub fn buran() -> Self {
+        Self {
+            name: "buran",
+            nodes: 16,
+            connection: "InfiniBand HDR",
+            link_gbits: 200.0,
+            sockets: 2,
+            cpu: "AMD EPYC 7352",
+            cores_per_socket: 24,
+            clock_ghz: 2.3,
+            l3_mb: 128,
+            ram_gb: 256,
+        }
+    }
+
+    /// The wire model implied by this spec.
+    pub fn net_model(&self) -> NetModel {
+        NetModel { beta_gbps: self.link_gbits / 8.0, ..NetModel::infiniband_hdr() }
+    }
+
+    /// The compute model implied by this spec (one socket's cores drive
+    /// the FFT sweeps, as in the paper's MPI+pthreads setup).
+    pub fn compute_model(&self) -> ComputeModel {
+        ComputeModel { cores: self.cores_per_socket, ..ComputeModel::buran() }
+    }
+
+    /// Render the Fig. 2 table.
+    pub fn render(&self) -> String {
+        let mut t = crate::metrics::table::Table::new(&["Cluster", self.name]);
+        t.row(&["Nodes".into(), self.nodes.to_string()]);
+        t.row(&["Connection".into(), self.connection.into()]);
+        t.row(&["Speed".into(), format!("{} Gb/s", self.link_gbits)]);
+        t.row(&["Sockets".into(), self.sockets.to_string()]);
+        t.row(&["CPU".into(), self.cpu.into()]);
+        t.row(&["Cores".into(), self.cores_per_socket.to_string()]);
+        t.row(&["Clock rate".into(), format!("{} GHz", self.clock_ghz)]);
+        t.row(&["L3 Cache".into(), format!("{} MB", self.l3_mb)]);
+        t.row(&["RAM".into(), format!("{} GB", self.ram_gb)]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buran_matches_fig2() {
+        let b = ClusterSpec::buran();
+        assert_eq!(b.nodes, 16);
+        assert_eq!(b.link_gbits, 200.0);
+        assert_eq!(b.cores_per_socket, 24);
+        assert_eq!(b.ram_gb, 256);
+    }
+
+    #[test]
+    fn net_model_is_25_gbytes() {
+        assert_eq!(ClusterSpec::buran().net_model().beta_gbps, 25.0);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = ClusterSpec::buran().render();
+        for needle in ["buran", "InfiniBand", "200 Gb/s", "EPYC", "2.3 GHz", "128 MB", "256 GB"] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
+    }
+}

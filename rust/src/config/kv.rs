@@ -1,0 +1,103 @@
+//! Minimal `key = value` config-file format (the offline stand-in for a
+//! TOML dependency): comments with `#`, sections with `[name]` flattened
+//! into dotted keys, everything else `key = value`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed config: dotted keys → raw string values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            if values.insert(key.clone(), value.trim().to_string()).is_some() {
+                bail!("line {}: duplicate key {key:?}", lineno + 1);
+            }
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("config key {key} = {raw:?}: {e}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::parse(
+            "# top comment\nrows = 256\n[bench]\nreps = 50  # inline\nport = lci\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("rows"), Some("256"));
+        assert_eq!(cfg.get("bench.reps"), Some("50"));
+        assert_eq!(cfg.get("bench.port"), Some("lci"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let cfg = Config::parse("n = 42\nratio = 2.5\n").unwrap();
+        assert_eq!(cfg.get_parsed::<usize>("n").unwrap(), Some(42));
+        assert_eq!(cfg.get_parsed::<f64>("ratio").unwrap(), Some(2.5));
+        assert_eq!(cfg.get_parsed::<usize>("absent").unwrap(), None);
+        assert!(cfg.get_parsed::<usize>("ratio").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("this is not kv\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(Config::parse("a = 1\na = 2\n").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: cluster presets (the paper's Fig. 2) and benchmark run
+//! matrices, with a minimal key=value config-file loader.
+
+pub mod bench;
+pub mod cluster;
+pub mod kv;
+
+pub use bench::BenchConfig;
+pub use cluster::ClusterSpec;

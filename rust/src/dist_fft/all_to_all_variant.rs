@@ -1,0 +1,144 @@
+//! Variant A — one synchronized *all-to-all* collective (paper Fig. 4).
+//!
+//! The transpose step cannot begin until the collective has delivered
+//! every chunk: communication and computation are strictly serialized.
+//! This is the baseline the N-scatter variant improves on.
+
+use super::driver::{RowFft, StepTimings};
+use super::partition::Slab;
+use super::transpose::place_chunk_transposed;
+use crate::collectives::{AllToAllAlgo, Communicator};
+use crate::fft::complex::{from_le_bytes, Complex32};
+use crate::hpx::parcel::Payload;
+use std::time::Instant;
+
+/// Run the four-step distributed FFT with an all-to-all exchange.
+/// Returns the locality's slab of the transposed-layout result
+/// (`C/N × R`, row-major) and per-step timings.
+pub fn run(
+    comm: &Communicator,
+    slab: &Slab,
+    algo: AllToAllAlgo,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
+    let n = comm.size();
+    let lr = slab.local_rows();
+    let cw = Slab::cols_per_chunk(slab.global_cols, n);
+    let r_total = slab.global_rows;
+    let mut timings = StepTimings::default();
+    let t_start = Instant::now();
+
+    // Step 1: row FFTs (length C).
+    let t0 = Instant::now();
+    let mut work = slab.data.clone();
+    engine.fft_rows(&mut work, slab.global_cols, nthreads);
+    timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // Step 2: chunk + exchange.
+    let t0 = Instant::now();
+    let tmp = Slab {
+        global_rows: slab.global_rows,
+        global_cols: slab.global_cols,
+        parts: slab.parts,
+        rank: slab.rank,
+        data: work,
+    }; // §Perf: field-wise construction — `..slab.clone()` would clone and
+       // immediately drop the slab's full data buffer.
+    let chunks: Vec<Payload> = (0..n)
+        .map(|j| Payload::new(tmp.extract_chunk_bytes(j)))
+        .collect();
+    let received = comm.all_to_all(chunks, algo);
+    timings.comm_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // Step 3: transpose every received chunk into the new slab.
+    let t0 = Instant::now();
+    let mut next = vec![Complex32::ZERO; cw * r_total];
+    for (j, payload) in received.into_iter().enumerate() {
+        let chunk = from_le_bytes(payload.as_bytes());
+        debug_assert_eq!(chunk.len(), lr * cw);
+        place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, j * lr);
+    }
+    timings.transpose_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // Step 4: row FFTs of the transposed slab (length R).
+    let t0 = Instant::now();
+    engine.fft_rows(&mut next, r_total, nthreads);
+    timings.fft2_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    timings.total_us = t_start.elapsed().as_secs_f64() * 1e6;
+    (next, timings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist_fft::driver::NativeRowFft;
+    use crate::dist_fft::verify::{rel_error, serial_fft2_transposed};
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+
+    fn check_variant(rows: usize, cols: usize, parts: usize, kind: PortKind, algo: AllToAllAlgo) {
+        let cluster = Cluster::new(parts, kind, None).unwrap();
+        let pieces = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let slab = Slab::synthetic(rows, cols, parts, ctx.rank);
+            let (out, _t) = run(&comm, &slab, algo, 1, &NativeRowFft);
+            out
+        });
+        // Reassemble: rank i holds rows [i·cw, (i+1)·cw) of the C×R result.
+        let mut assembled = Vec::with_capacity(rows * cols);
+        for p in pieces {
+            assembled.extend(p);
+        }
+        let reference = serial_fft2_transposed(&Slab::whole(rows, cols).data, rows, cols);
+        let err = rel_error(&assembled, &reference);
+        assert!(err < 1e-4, "rel err {err} ({kind} {algo:?} {parts} parts)");
+    }
+
+    #[test]
+    fn matches_serial_lci() {
+        check_variant(16, 32, 4, PortKind::Lci, AllToAllAlgo::Linear);
+    }
+
+    #[test]
+    fn matches_serial_mpi_pairwise() {
+        check_variant(32, 16, 4, PortKind::Mpi, AllToAllAlgo::Pairwise);
+    }
+
+    #[test]
+    fn matches_serial_tcp_bruck() {
+        check_variant(16, 16, 2, PortKind::Tcp, AllToAllAlgo::Bruck);
+    }
+
+    #[test]
+    fn matches_serial_hpx_root() {
+        check_variant(16, 16, 4, PortKind::Lci, AllToAllAlgo::HpxRoot);
+    }
+
+    #[test]
+    fn single_locality_degenerate() {
+        check_variant(8, 8, 1, PortKind::Lci, AllToAllAlgo::Linear);
+    }
+
+    #[test]
+    fn rectangular_grids() {
+        check_variant(8, 64, 2, PortKind::Lci, AllToAllAlgo::Pairwise);
+        check_variant(64, 8, 2, PortKind::Lci, AllToAllAlgo::Pairwise);
+    }
+
+    #[test]
+    fn timings_are_populated() {
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        let t = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let slab = Slab::synthetic(8, 8, 2, ctx.rank);
+            let (_out, t) = run(&comm, &slab, AllToAllAlgo::Linear, 1, &NativeRowFft);
+            t
+        });
+        for t in t {
+            assert!(t.total_us > 0.0);
+            assert!(t.fft1_us > 0.0 && t.fft2_us > 0.0);
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! End-to-end distributed FFT driver: configuration, compute-engine
+//! abstraction, execution, verification, reporting.
+
+use super::partition::Slab;
+use super::verify::{rel_error, serial_fft2_transposed};
+use crate::collectives::{AllToAllAlgo, Communicator};
+use crate::fft::complex::Complex32;
+use crate::fft::plan::{Direction, PlanCache};
+use crate::hpx::runtime::Cluster;
+use crate::parcelport::{NetModel, PortKind};
+use std::sync::Arc;
+
+/// Which communication variant to run (the paper's Fig. 4 vs Fig. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    AllToAll,
+    Scatter,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::AllToAll => "all-to-all",
+            Variant::Scatter => "scatter",
+        }
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "all-to-all" | "all_to_all" | "a2a" => Ok(Variant::AllToAll),
+            "scatter" | "n-scatter" => Ok(Variant::Scatter),
+            other => Err(format!("unknown variant {other:?} (expected all-to-all|scatter)")),
+        }
+    }
+}
+
+/// Row-FFT compute engine: the per-locality step-1/step-4 kernel.
+/// Implemented by the native plan cache and by the PJRT artifact service
+/// ([`crate::runtime::PjrtRowFft`]).
+pub trait RowFft: Sync {
+    /// Forward-FFT every length-`row_len` row of `data` in place.
+    fn fft_rows(&self, data: &mut [Complex32], row_len: usize, nthreads: usize);
+
+    /// Engine label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Native radix-2 engine (the FFTW stand-in).
+pub struct NativeRowFft;
+
+impl RowFft for NativeRowFft {
+    fn fft_rows(&self, data: &mut [Complex32], row_len: usize, nthreads: usize) {
+        let plan = PlanCache::global().plan(row_len);
+        crate::fft::batch::fft_rows_parallel(data, row_len, &plan, Direction::Forward, nthreads);
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Compute-engine selector (CLI level).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ComputeEngine {
+    /// In-process radix-2 kernels.
+    Native,
+    /// AOT-compiled JAX/Pallas artifact executed via PJRT; the value is
+    /// the artifacts directory.
+    Pjrt(String),
+}
+
+impl ComputeEngine {
+    pub fn build(&self) -> anyhow::Result<Arc<dyn RowFft + Send>> {
+        match self {
+            ComputeEngine::Native => Ok(Arc::new(NativeRowFft)),
+            ComputeEngine::Pjrt(dir) => {
+                Ok(Arc::new(crate::runtime::PjrtRowFft::new(dir)?) as Arc<dyn RowFft + Send>)
+            }
+        }
+    }
+}
+
+/// Per-step wall-clock timings (µs) for one locality.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTimings {
+    pub fft1_us: f64,
+    /// Wall time of the communication phase. In the scatter variant this
+    /// *includes* the overlapped transposes.
+    pub comm_us: f64,
+    /// Time spent placing chunks (subset of `comm_us` for the scatter
+    /// variant; a separate serial step for all-to-all).
+    pub transpose_us: f64,
+    pub fft2_us: f64,
+    pub total_us: f64,
+}
+
+impl StepTimings {
+    /// Element-wise max across localities — the critical path.
+    pub fn max(timings: &[StepTimings]) -> StepTimings {
+        let mut out = StepTimings::default();
+        for t in timings {
+            out.fft1_us = out.fft1_us.max(t.fft1_us);
+            out.comm_us = out.comm_us.max(t.comm_us);
+            out.transpose_us = out.transpose_us.max(t.transpose_us);
+            out.fft2_us = out.fft2_us.max(t.fft2_us);
+            out.total_us = out.total_us.max(t.total_us);
+        }
+        out
+    }
+}
+
+/// Full configuration of one distributed FFT execution.
+#[derive(Clone, Debug)]
+pub struct DistFftConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub localities: usize,
+    pub port: PortKind,
+    pub variant: Variant,
+    /// All-to-all algorithm (ignored by the scatter variant).
+    pub algo: AllToAllAlgo,
+    /// Worker threads per locality for the row-FFT steps.
+    pub threads_per_locality: usize,
+    /// Optional hybrid wire model.
+    pub net: Option<NetModel>,
+    pub engine: ComputeEngine,
+    /// Compare the distributed result against the serial reference.
+    pub verify: bool,
+}
+
+impl Default for DistFftConfig {
+    fn default() -> Self {
+        Self {
+            rows: 256,
+            cols: 256,
+            localities: 4,
+            port: PortKind::Lci,
+            variant: Variant::Scatter,
+            algo: AllToAllAlgo::HpxRoot,
+            threads_per_locality: 2,
+            net: None,
+            engine: ComputeEngine::Native,
+            verify: true,
+        }
+    }
+}
+
+/// Execution report.
+#[derive(Clone, Debug)]
+pub struct DistFftReport {
+    pub config_summary: String,
+    pub per_rank: Vec<StepTimings>,
+    pub critical_path: StepTimings,
+    /// Relative L2 error vs. the serial reference (if verified).
+    pub rel_error: Option<f64>,
+    /// Traffic accounted by the parcelport during the run.
+    pub stats: crate::parcelport::PortStatsSnapshot,
+}
+
+/// Run one distributed FFT end to end on a fresh cluster.
+pub fn run(config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
+    let cluster = Cluster::new(config.localities, config.port, config.net)?;
+    run_on(&cluster, config)
+}
+
+/// Run on an existing cluster (benchmarks reuse fabrics across reps).
+pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
+    anyhow::ensure!(
+        config.rows.is_power_of_two() && config.cols.is_power_of_two(),
+        "grid must be power-of-two ({}×{})",
+        config.rows,
+        config.cols
+    );
+    anyhow::ensure!(
+        cluster.n_localities() == config.localities,
+        "cluster size mismatch: {} vs {}",
+        cluster.n_localities(),
+        config.localities
+    );
+    let engine = config.engine.build()?;
+    let before = cluster.fabric().stats();
+
+    let results: Vec<(Vec<Complex32>, StepTimings)> = cluster.run(|ctx| {
+        let comm = Communicator::from_ctx(ctx);
+        let slab = Slab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
+        match config.variant {
+            Variant::AllToAll => super::all_to_all_variant::run(
+                &comm,
+                &slab,
+                config.algo,
+                config.threads_per_locality,
+                engine.as_ref(),
+            ),
+            Variant::Scatter => super::scatter_variant::run(
+                &comm,
+                &slab,
+                config.threads_per_locality,
+                engine.as_ref(),
+            ),
+        }
+    });
+
+    let stats = cluster.fabric().stats().since(&before);
+    let per_rank: Vec<StepTimings> = results.iter().map(|(_, t)| *t).collect();
+    let critical_path = StepTimings::max(&per_rank);
+
+    let rel_err = if config.verify {
+        let mut assembled = Vec::with_capacity(config.rows * config.cols);
+        for (piece, _) in &results {
+            assembled.extend_from_slice(piece);
+        }
+        let reference = serial_fft2_transposed(
+            &Slab::whole(config.rows, config.cols).data,
+            config.rows,
+            config.cols,
+        );
+        Some(rel_error(&assembled, &reference))
+    } else {
+        None
+    };
+
+    Ok(DistFftReport {
+        config_summary: format!(
+            "{}×{} grid, {} localities, {} port, {} variant, {} engine",
+            config.rows,
+            config.cols,
+            config.localities,
+            config.port,
+            config.variant.name(),
+            engine.name(),
+        ),
+        per_rank,
+        critical_path,
+        rel_error: rel_err,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_runs_and_verifies() {
+        let config = DistFftConfig { rows: 32, cols: 32, ..Default::default() };
+        let report = run(&config).unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4);
+        assert_eq!(report.per_rank.len(), 4);
+        assert!(report.critical_path.total_us > 0.0);
+        assert!(report.stats.msgs_sent > 0);
+    }
+
+    #[test]
+    fn all_variants_and_ports_verify() {
+        for port in PortKind::ALL {
+            for variant in [Variant::AllToAll, Variant::Scatter] {
+                let config = DistFftConfig {
+                    rows: 16,
+                    cols: 16,
+                    localities: 2,
+                    port,
+                    variant,
+                    ..Default::default()
+                };
+                let report = run(&config).unwrap();
+                assert!(
+                    report.rel_error.unwrap() < 1e-4,
+                    "{port} {variant:?}: {:?}",
+                    report.rel_error
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_pow2_grid_rejected() {
+        let config = DistFftConfig { rows: 24, cols: 32, ..Default::default() };
+        assert!(run(&config).is_err());
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!("scatter".parse::<Variant>().unwrap(), Variant::Scatter);
+        assert_eq!("a2a".parse::<Variant>().unwrap(), Variant::AllToAll);
+        assert!("ring".parse::<Variant>().is_err());
+    }
+
+    #[test]
+    fn multithreaded_localities_match() {
+        let base = DistFftConfig {
+            rows: 64,
+            cols: 64,
+            localities: 2,
+            threads_per_locality: 1,
+            ..Default::default()
+        };
+        let a = run(&base).unwrap();
+        let b = run(&DistFftConfig { threads_per_locality: 4, ..base }).unwrap();
+        assert!(a.rel_error.unwrap() < 1e-4);
+        assert!(b.rel_error.unwrap() < 1e-4);
+    }
+}

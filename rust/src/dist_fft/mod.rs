@@ -1,0 +1,36 @@
+//! Distributed 2-D FFT — the paper's application (its Fig. 1).
+//!
+//! The global `R × C` complex grid is slab-decomposed by rows over N
+//! localities. Each locality executes the four steps:
+//!
+//! 1. **FFT** every local row (length `C`),
+//! 2. **communicate**: split the local slab column-wise into N chunks and
+//!    ship chunk `j` to locality `j` — `(1 − 1/N)` of the local data
+//!    crosses the network,
+//! 3. **transpose** each received chunk into the new local slab,
+//! 4. **FFT** every row of the new slab (length `R`).
+//!
+//! The result is the 2-D FFT in *transposed* distributed layout (the
+//! standard distributed-FFT convention — FFTW's `FFTW_MPI_TRANSPOSED_OUT`).
+//!
+//! Two communication variants, exactly as the paper benchmarks them:
+//!
+//! - [`all_to_all_variant`]: one synchronized all-to-all collective
+//!   (Fig. 4). The transpose (step 3) cannot start until the collective
+//!   completes.
+//! - [`scatter_variant`]: N scatter collectives, one rooted at each
+//!   locality (Fig. 5). Arriving chunks are transposed immediately,
+//!   hiding transpose work behind the remaining communication.
+//!
+//! [`verify`] pins both against a serial reference on every port.
+
+pub mod driver;
+pub mod partition;
+pub mod transpose;
+pub mod verify;
+
+pub mod all_to_all_variant;
+pub mod scatter_variant;
+
+pub use driver::{ComputeEngine, DistFftConfig, DistFftReport, Variant};
+pub use partition::Slab;

@@ -1,0 +1,196 @@
+//! Slab decomposition of the global 2-D grid.
+
+use crate::fft::complex::Complex32;
+use crate::util::rng::Pcg32;
+
+/// One locality's row-slab of the global `R × C` grid.
+#[derive(Clone, Debug)]
+pub struct Slab {
+    /// Global grid rows.
+    pub global_rows: usize,
+    /// Global grid cols.
+    pub global_cols: usize,
+    /// Number of participating localities.
+    pub parts: usize,
+    /// Which slab this is.
+    pub rank: usize,
+    /// Row-major local data, `local_rows() × global_cols`.
+    pub data: Vec<Complex32>,
+}
+
+impl Slab {
+    /// Rows held by each locality (`R` must divide evenly — the paper's
+    /// grids are `2^k` on power-of-two node counts).
+    pub fn rows_per_part(global_rows: usize, parts: usize) -> usize {
+        assert!(parts > 0, "need at least one part");
+        assert!(
+            global_rows % parts == 0,
+            "global rows {global_rows} not divisible by {parts} localities"
+        );
+        global_rows / parts
+    }
+
+    /// Columns per all-to-all chunk (`C` must divide evenly).
+    pub fn cols_per_chunk(global_cols: usize, parts: usize) -> usize {
+        assert!(
+            global_cols % parts == 0,
+            "global cols {global_cols} not divisible by {parts} localities"
+        );
+        global_cols / parts
+    }
+
+    pub fn local_rows(&self) -> usize {
+        Self::rows_per_part(self.global_rows, self.parts)
+    }
+
+    /// First global row of this slab.
+    pub fn row_offset(&self) -> usize {
+        self.rank * self.local_rows()
+    }
+
+    /// Allocate a zeroed slab.
+    pub fn zeroed(global_rows: usize, global_cols: usize, parts: usize, rank: usize) -> Self {
+        assert!(rank < parts, "rank {rank} out of range");
+        let local_rows = Self::rows_per_part(global_rows, parts);
+        Self {
+            global_rows,
+            global_cols,
+            parts,
+            rank,
+            data: vec![Complex32::ZERO; local_rows * global_cols],
+        }
+    }
+
+    /// Deterministic synthetic signal: every locality can generate its
+    /// slab independently, and a serial process can generate the whole
+    /// grid bit-identically (verification depends on this).
+    pub fn synthetic(global_rows: usize, global_cols: usize, parts: usize, rank: usize) -> Self {
+        let mut slab = Self::zeroed(global_rows, global_cols, parts, rank);
+        let local_rows = slab.local_rows();
+        let row0 = slab.row_offset();
+        for r in 0..local_rows {
+            let grow = row0 + r;
+            // One RNG stream per global row → decomposition-independent.
+            let mut rng = Pcg32::with_stream(0x0B5E_2411, grow as u64 + 1);
+            for c in 0..global_cols {
+                slab.data[r * global_cols + c] = Complex32::new(rng.next_signal(), rng.next_signal());
+            }
+        }
+        slab
+    }
+
+    /// The whole global grid as one slab (serial reference).
+    pub fn whole(global_rows: usize, global_cols: usize) -> Self {
+        Self::synthetic(global_rows, global_cols, 1, 0)
+    }
+
+    /// Extract the column-block chunk destined for locality `j` as a
+    /// contiguous row-major `local_rows × cols_per_chunk` buffer.
+    pub fn extract_chunk(&self, j: usize) -> Vec<Complex32> {
+        let lr = self.local_rows();
+        let cw = Self::cols_per_chunk(self.global_cols, self.parts);
+        let c0 = j * cw;
+        let mut out = Vec::with_capacity(lr * cw);
+        for r in 0..lr {
+            let base = r * self.global_cols + c0;
+            out.extend_from_slice(&self.data[base..base + cw]);
+        }
+        out
+    }
+
+    /// Extract the chunk for locality `j` directly as a wire-format byte
+    /// buffer — one pass, one allocation (§Perf: replaces
+    /// `extract_chunk` + re-serialization on the send path).
+    pub fn extract_chunk_bytes(&self, j: usize) -> Vec<u8> {
+        let lr = self.local_rows();
+        let cw = Self::cols_per_chunk(self.global_cols, self.parts);
+        let c0 = j * cw;
+        let mut out = Vec::with_capacity(lr * cw * std::mem::size_of::<Complex32>());
+        for r in 0..lr {
+            let base = r * self.global_cols + c0;
+            out.extend_from_slice(crate::fft::complex::as_byte_slice(
+                &self.data[base..base + cw],
+            ));
+        }
+        out
+    }
+
+    /// Bytes a locality sends during the communication step:
+    /// `(1 − 1/N)` of its slab, 8 bytes per complex element.
+    pub fn bytes_sent_per_locality(&self) -> usize {
+        let total = self.local_rows() * self.global_cols * std::mem::size_of::<Complex32>();
+        total - total / self.parts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_divide() {
+        assert_eq!(Slab::rows_per_part(16, 4), 4);
+        assert_eq!(Slab::rows_per_part(16, 1), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn ragged_rows_rejected() {
+        Slab::rows_per_part(10, 4);
+    }
+
+    #[test]
+    fn synthetic_is_decomposition_independent() {
+        let whole = Slab::whole(8, 4);
+        for parts in [2usize, 4] {
+            for rank in 0..parts {
+                let slab = Slab::synthetic(8, 4, parts, rank);
+                let lr = slab.local_rows();
+                let off = slab.row_offset();
+                for r in 0..lr {
+                    for c in 0..4 {
+                        assert_eq!(
+                            slab.data[r * 4 + c],
+                            whole.data[(off + r) * 4 + c],
+                            "parts={parts} rank={rank} r={r} c={c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extract_chunk_is_column_block() {
+        let mut slab = Slab::zeroed(4, 8, 2, 0);
+        for r in 0..2 {
+            for c in 0..8 {
+                slab.data[r * 8 + c] = Complex32::new((r * 8 + c) as f32, 0.0);
+            }
+        }
+        let chunk1 = slab.extract_chunk(1); // columns 4..8
+        let expect: Vec<f32> = vec![4.0, 5.0, 6.0, 7.0, 12.0, 13.0, 14.0, 15.0];
+        assert_eq!(chunk1.iter().map(|c| c.re).collect::<Vec<_>>(), expect);
+        assert_eq!(chunk1.len(), 2 * 4);
+    }
+
+    #[test]
+    fn bytes_sent_matches_formula() {
+        let slab = Slab::zeroed(16, 16, 4, 0);
+        // local slab = 4×16×8 = 512 bytes; (1 - 1/4) = 384.
+        assert_eq!(slab.bytes_sent_per_locality(), 384);
+    }
+
+    #[test]
+    fn row_offsets_tile_the_grid() {
+        let parts = 4;
+        let mut covered = vec![false; 16];
+        for rank in 0..parts {
+            let slab = Slab::zeroed(16, 4, parts, rank);
+            for r in 0..slab.local_rows() {
+                covered[slab.row_offset() + r] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+}

@@ -1,0 +1,148 @@
+//! Chunk transposes — step 3 of the four-step algorithm.
+//!
+//! After communication, locality `i` holds one `lr × cw` chunk from every
+//! locality `j` (`lr` = sender's local rows, `cw = C/N` columns). The new
+//! local slab is `cw × R`: the chunk from `j`, transposed, lands in
+//! columns `[j·lr, (j+1)·lr)`.
+//!
+//! `place_chunk_transposed` is the hot loop the scatter variant overlaps
+//! with communication; it is cache-blocked (`BLOCK × BLOCK` tiles) because
+//! at the paper's sizes a naive column-strided write thrashes L1 — see
+//! EXPERIMENTS.md §Perf for the measured effect.
+
+use crate::fft::complex::Complex32;
+
+/// Cache-block edge for the tiled transpose (64 × 64 complex = 64 KiB
+/// working set: fits L2, two tiles fit L1d? 64×64×8 = 32 KiB per tile).
+const BLOCK: usize = 64;
+
+/// Transpose `chunk` (`src_rows × src_cols`, row-major) into `slab`
+/// (`src_cols × slab_cols`, row-major) at column offset `col0`:
+///
+/// `slab[c][col0 + r] = chunk[r][c]`.
+pub fn place_chunk_transposed(
+    chunk: &[Complex32],
+    src_rows: usize,
+    src_cols: usize,
+    slab: &mut [Complex32],
+    slab_cols: usize,
+    col0: usize,
+) {
+    assert_eq!(chunk.len(), src_rows * src_cols, "chunk shape mismatch");
+    assert!(col0 + src_rows <= slab_cols, "chunk overflows slab columns");
+    assert!(
+        slab.len() >= src_cols * slab_cols,
+        "slab too small: {} < {}",
+        slab.len(),
+        src_cols * slab_cols
+    );
+
+    // §Perf (EXPERIMENTS.md §Perf L3-2): within a tile, iterate the
+    // *destination* row (source column) in the outer loop so writes are
+    // contiguous runs of `r_hi - rb` elements; the strided side is the
+    // read, which prefetches better than strided writes commit.
+    let mut rb = 0;
+    while rb < src_rows {
+        let r_hi = (rb + BLOCK).min(src_rows);
+        let mut cb = 0;
+        while cb < src_cols {
+            let c_hi = (cb + BLOCK).min(src_cols);
+            for c in cb..c_hi {
+                let dst_base = c * slab_cols + col0;
+                for r in rb..r_hi {
+                    slab[dst_base + r] = chunk[r * src_cols + c];
+                }
+            }
+            cb = c_hi;
+        }
+        rb = r_hi;
+    }
+}
+
+/// Full out-of-place transpose of a row-major `rows × cols` matrix
+/// (serial reference path).
+pub fn transpose(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32> {
+    assert_eq!(data.len(), rows * cols);
+    let mut out = vec![Complex32::ZERO; rows * cols];
+    place_chunk_transposed(data, rows, cols, &mut out, rows, 0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn grid(rows: usize, cols: usize, seed: u64) -> Vec<Complex32> {
+        let mut rng = Pcg32::new(seed);
+        (0..rows * cols).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+    }
+
+    #[test]
+    fn transpose_small_known() {
+        // 2×3 → 3×2.
+        let m: Vec<Complex32> = (0..6).map(|i| Complex32::new(i as f32, 0.0)).collect();
+        let t = transpose(&m, 2, 3);
+        let expect: Vec<f32> = vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0];
+        assert_eq!(t.iter().map(|c| c.re).collect::<Vec<_>>(), expect);
+    }
+
+    #[test]
+    fn transpose_is_involution() {
+        let m = grid(33, 17, 4);
+        let tt = transpose(&transpose(&m, 33, 17), 17, 33);
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn transpose_crosses_block_boundaries() {
+        // > BLOCK in both dimensions exercises the tiling edges.
+        let rows = BLOCK + 7;
+        let cols = BLOCK * 2 + 3;
+        let m = grid(rows, cols, 5);
+        let t = transpose(&m, rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(t[c * rows + r], m[r * cols + c], "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn place_chunk_at_offset() {
+        // Two 2×3 chunks placed side by side into a 3×4 slab.
+        let chunk_a: Vec<Complex32> = (0..6).map(|i| Complex32::new(i as f32, 0.0)).collect();
+        let chunk_b: Vec<Complex32> =
+            (0..6).map(|i| Complex32::new(10.0 + i as f32, 0.0)).collect();
+        let mut slab = vec![Complex32::ZERO; 3 * 4];
+        place_chunk_transposed(&chunk_a, 2, 3, &mut slab, 4, 0);
+        place_chunk_transposed(&chunk_b, 2, 3, &mut slab, 4, 2);
+        // slab[c][0..2] = chunk_a[.][c]; slab[c][2..4] = chunk_b[.][c].
+        #[rustfmt::skip]
+        let expect: Vec<f32> = vec![
+            0.0, 3.0, 10.0, 13.0,
+            1.0, 4.0, 11.0, 14.0,
+            2.0, 5.0, 12.0, 15.0,
+        ];
+        assert_eq!(slab.iter().map(|c| c.re).collect::<Vec<_>>(), expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows slab")]
+    fn overflow_detected() {
+        let chunk = vec![Complex32::ZERO; 4];
+        let mut slab = vec![Complex32::ZERO; 4];
+        place_chunk_transposed(&chunk, 2, 2, &mut slab, 2, 1);
+    }
+
+    #[test]
+    fn square_block_multiple() {
+        let m = grid(BLOCK * 2, BLOCK * 2, 6);
+        let t = transpose(&m, BLOCK * 2, BLOCK * 2);
+        for r in 0..BLOCK * 2 {
+            for c in 0..BLOCK * 2 {
+                assert_eq!(t[c * BLOCK * 2 + r], m[r * BLOCK * 2 + c]);
+            }
+        }
+    }
+}

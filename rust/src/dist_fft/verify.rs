@@ -1,0 +1,103 @@
+//! Serial reference for the distributed transform.
+//!
+//! Computes the same transposed-layout 2-D FFT a distributed run
+//! produces, entirely on one thread with the native kernel: row FFTs →
+//! transpose → row FFTs. Used by tests and the CLI's `--verify` flag.
+
+use super::transpose::transpose;
+use crate::fft::complex::Complex32;
+use crate::fft::plan::{Direction, PlanCache};
+
+/// Serial transposed-output 2-D FFT of a row-major `rows × cols` grid.
+/// Output is `cols × rows` (frequency-domain, transposed layout).
+pub fn serial_fft2_transposed(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32> {
+    assert_eq!(data.len(), rows * cols);
+    let mut work = data.to_vec();
+
+    // Step 1: FFT each row (length cols).
+    let plan_c = PlanCache::global().plan(cols);
+    plan_c.execute_rows(&mut work, Direction::Forward);
+
+    // Step 2+3: full transpose (what the communication + chunk transposes
+    // accomplish across localities).
+    let mut t = transpose(&work, rows, cols);
+
+    // Step 4: FFT each row of the transposed grid (length rows).
+    let plan_r = PlanCache::global().plan(rows);
+    plan_r.execute_rows(&mut t, Direction::Forward);
+    t
+}
+
+/// Max |Δ| between two complex buffers, as interleaved f32 distance.
+pub fn max_error(a: &[Complex32], b: &[Complex32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x.re - y.re).abs().max((x.im - y.im).abs()))
+        .fold(0.0, f32::max)
+}
+
+/// Relative L2 error between complex buffers.
+pub fn rel_error(a: &[Complex32], b: &[Complex32]) -> f64 {
+    let fa: Vec<f32> = a.iter().flat_map(|c| [c.re, c.im]).collect();
+    let fb: Vec<f32> = b.iter().flat_map(|c| [c.re, c.im]).collect();
+    crate::util::testkit::rel_l2_error(&fa, &fb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist_fft::partition::Slab;
+    use crate::fft::dft::dft;
+
+    /// Oracle-grade 2-D DFT (transposed output), O(n³)-ish — tiny sizes only.
+    fn oracle_fft2_transposed(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32> {
+        // Row DFTs.
+        let mut work: Vec<Complex32> = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            work.extend(dft(&data[r * cols..(r + 1) * cols]));
+        }
+        // Transpose.
+        let t = transpose(&work, rows, cols);
+        // Row DFTs again.
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..cols {
+            out.extend(dft(&t[r * rows..(r + 1) * rows]));
+        }
+        out
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let grid = Slab::whole(8, 16).data;
+        let fast = serial_fft2_transposed(&grid, 8, 16);
+        let slow = oracle_fft2_transposed(&grid, 8, 16);
+        assert!(rel_error(&fast, &slow) < 1e-4, "rel err {}", rel_error(&fast, &slow));
+    }
+
+    #[test]
+    fn impulse_transforms_to_constant() {
+        let mut grid = vec![Complex32::ZERO; 4 * 8];
+        grid[0] = Complex32::ONE;
+        let f = serial_fft2_transposed(&grid, 4, 8);
+        for v in f {
+            assert!((v.re - 1.0).abs() < 1e-5 && v.im.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dc_energy() {
+        let grid = vec![Complex32::ONE; 8 * 8];
+        let f = serial_fft2_transposed(&grid, 8, 8);
+        assert!((f[0].re - 64.0).abs() < 1e-3);
+        for v in &f[1..] {
+            assert!(v.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rel_error_zero_on_identity() {
+        let grid = Slab::whole(4, 4).data;
+        assert_eq!(rel_error(&grid, &grid), 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Thread-parallel batched row transforms — the "+pthreads" half of the
+//! paper's FFTW3 MPI+pthreads reference, and the per-locality compute step
+//! of the HPX variants.
+//!
+//! Rows of a contiguous row-major `rows × n` buffer are transformed
+//! independently across `nthreads` workers via [`crate::task::parallel_chunks_mut`].
+
+use super::complex::Complex32;
+use super::plan::{Direction, Plan};
+use crate::task::parallel_chunks_mut;
+use std::sync::Arc;
+
+/// Transform every length-`n` row of `data` (`rows × n`, row-major) in
+/// place using `nthreads` threads.
+pub fn fft_rows_parallel(
+    data: &mut [Complex32],
+    n: usize,
+    plan: &Arc<Plan>,
+    dir: Direction,
+    nthreads: usize,
+) {
+    assert_eq!(plan.len(), n, "plan length mismatch");
+    assert!(data.len() % n == 0, "buffer not a whole number of rows");
+    let rows = data.len() / n;
+    if rows == 0 {
+        return;
+    }
+    // §Perf (EXPERIMENTS.md §Perf L3-3): clamp to the machine's actual
+    // parallelism — oversubscribing a small host with per-locality
+    // worker threads costs ~10% in scheduling overhead for zero gain.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let nthreads = nthreads.min(hw);
+    // Give each worker a contiguous band of rows: one chunk = ceil(rows/T)
+    // rows, so threads never share a cache line mid-row.
+    let rows_per_chunk = rows.div_ceil(nthreads.max(1));
+    parallel_chunks_mut(data, rows_per_chunk * n, nthreads, |_, band| {
+        for row in band.chunks_exact_mut(n) {
+            plan.execute(row, dir);
+        }
+    });
+}
+
+/// Measured single-core row-FFT throughput in FLOP/s for length `n`, used
+/// to calibrate simnet compute times. Runs `reps` rows and returns
+/// `5 n log2 n * reps / elapsed`.
+pub fn measure_row_throughput(n: usize, reps: usize) -> f64 {
+    let plan = Plan::new(n);
+    let mut row: Vec<Complex32> =
+        (0..n).map(|i| Complex32::new((i % 7) as f32 - 3.0, (i % 5) as f32)).collect();
+    // Warmup.
+    plan.execute(&mut row, Direction::Forward);
+    let start = std::time::Instant::now();
+    for _ in 0..reps {
+        plan.execute(&mut row, Direction::Forward);
+    }
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    plan.flops() * reps as f64 / secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    fn flat(xs: &[Complex32]) -> Vec<f32> {
+        xs.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    fn random_grid(seed: u64, rows: usize, n: usize) -> Vec<Complex32> {
+        let mut rng = Pcg32::new(seed);
+        (0..rows * n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let n = 64;
+        let rows = 33; // ragged vs thread count
+        let data = random_grid(9, rows, n);
+        let plan = Arc::new(Plan::new(n));
+
+        let mut par = data.clone();
+        fft_rows_parallel(&mut par, n, &plan, Direction::Forward, 4);
+
+        let mut ser = data.clone();
+        plan.execute_rows(&mut ser, Direction::Forward);
+
+        assert_eq!(flat(&par), flat(&ser));
+    }
+
+    #[test]
+    fn parallel_roundtrip() {
+        let n = 128;
+        let rows = 16;
+        let data = random_grid(10, rows, n);
+        let plan = Arc::new(Plan::new(n));
+        let mut buf = data.clone();
+        fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 3);
+        fft_rows_parallel(&mut buf, n, &plan, Direction::Inverse, 5);
+        assert_close(&flat(&buf), &flat(&data), 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn single_row_single_thread() {
+        let n = 32;
+        let data = random_grid(11, 1, n);
+        let plan = Arc::new(Plan::new(n));
+        let mut a = data.clone();
+        fft_rows_parallel(&mut a, n, &plan, Direction::Forward, 1);
+        let mut b = data;
+        plan.execute(&mut b, Direction::Forward);
+        assert_eq!(flat(&a), flat(&b));
+    }
+
+    #[test]
+    fn empty_grid_is_noop() {
+        let plan = Arc::new(Plan::new(16));
+        let mut empty: Vec<Complex32> = Vec::new();
+        fft_rows_parallel(&mut empty, 16, &plan, Direction::Forward, 4);
+    }
+
+    #[test]
+    fn throughput_measurement_is_positive() {
+        let t = measure_row_throughput(256, 10);
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,265 @@
+//! `Complex32`: interleaved single-precision complex numbers.
+//!
+//! `repr(C)` with `re` first, so a `&[Complex32]` has exactly the memory
+//! layout of interleaved `f32` pairs — the wire format of FFT chunk
+//! payloads and the layout FFTW uses for `fftwf_complex`.
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub, SubAssign};
+
+/// A single-precision complex number.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Complex32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex32 {
+    pub const ZERO: Complex32 = Complex32 { re: 0.0, im: 0.0 };
+    pub const ONE: Complex32 = Complex32 { re: 1.0, im: 0.0 };
+    pub const I: Complex32 = Complex32 { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub const fn new(re: f32, im: f32) -> Self {
+        Self { re, im }
+    }
+
+    /// e^{iθ} = cos θ + i sin θ.
+    #[inline]
+    pub fn cis(theta: f32) -> Self {
+        Self { re: theta.cos(), im: theta.sin() }
+    }
+
+    /// Higher-precision unit phasor from an f64 angle (twiddle tables are
+    /// computed in f64 and rounded once — matches FFTW's practice).
+    #[inline]
+    pub fn cis_f64(theta: f64) -> Self {
+        Self { re: theta.cos() as f32, im: theta.sin() as f32 }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f32 {
+        self.norm_sqr().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, s: f32) -> Self {
+        Self { re: self.re * s, im: self.im * s }
+    }
+
+    /// Multiply by i (90° rotation) without a full complex multiply.
+    #[inline]
+    pub fn mul_i(self) -> Self {
+        Self { re: -self.im, im: self.re }
+    }
+
+    /// Multiply by -i.
+    #[inline]
+    pub fn mul_neg_i(self) -> Self {
+        Self { re: self.im, im: -self.re }
+    }
+}
+
+impl Add for Complex32 {
+    type Output = Complex32;
+    #[inline]
+    fn add(self, o: Complex32) -> Complex32 {
+        Complex32 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl AddAssign for Complex32 {
+    #[inline]
+    fn add_assign(&mut self, o: Complex32) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for Complex32 {
+    type Output = Complex32;
+    #[inline]
+    fn sub(self, o: Complex32) -> Complex32 {
+        Complex32 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl SubAssign for Complex32 {
+    #[inline]
+    fn sub_assign(&mut self, o: Complex32) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl Mul for Complex32 {
+    type Output = Complex32;
+    #[inline]
+    fn mul(self, o: Complex32) -> Complex32 {
+        Complex32 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Neg for Complex32 {
+    type Output = Complex32;
+    #[inline]
+    fn neg(self) -> Complex32 {
+        Complex32 { re: -self.re, im: -self.im }
+    }
+}
+
+/// View a complex slice as interleaved f32s (zero-copy; layout guaranteed
+/// by `repr(C)`).
+pub fn as_f32_slice(xs: &[Complex32]) -> &[f32] {
+    // SAFETY: Complex32 is repr(C) { f32, f32 } — size 8, align 4; any
+    // [Complex32; n] is bit-identical to [f32; 2n].
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const f32, xs.len() * 2) }
+}
+
+/// Mutable interleaved view.
+pub fn as_f32_slice_mut(xs: &mut [Complex32]) -> &mut [f32] {
+    // SAFETY: see `as_f32_slice`.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut f32, xs.len() * 2) }
+}
+
+/// Interpret interleaved f32s as complex numbers (copies).
+pub fn from_interleaved(xs: &[f32]) -> Vec<Complex32> {
+    assert!(xs.len() % 2 == 0, "interleaved buffer must have even length");
+    xs.chunks_exact(2).map(|p| Complex32::new(p[0], p[1])).collect()
+}
+
+/// View a complex slice as raw bytes (zero-copy). On little-endian
+/// targets this is bit-identical to the wire format (interleaved f32 LE
+/// pairs) — the send path exploits that to serialize with a single
+/// memcpy (§Perf).
+#[cfg(target_endian = "little")]
+pub fn as_byte_slice(xs: &[Complex32]) -> &[u8] {
+    // SAFETY: Complex32 is repr(C) plain-old-data; u8 has alignment 1.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+}
+
+/// Serialize a complex slice to wire bytes in one pass.
+pub fn to_wire_bytes(xs: &[Complex32]) -> Vec<u8> {
+    #[cfg(target_endian = "little")]
+    {
+        as_byte_slice(xs).to_vec()
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        crate::util::bytes::f32_to_bytes(as_f32_slice(xs))
+    }
+}
+
+/// Parse a little-endian wire buffer straight into complex numbers —
+/// one pass, one allocation (§Perf: replaces the bytes→f32→Complex32
+/// double conversion on the chunk receive path).
+pub fn from_le_bytes(bytes: &[u8]) -> Vec<Complex32> {
+    assert!(bytes.len() % 8 == 0, "complex wire buffer must be a multiple of 8 bytes");
+    bytes
+        .chunks_exact(8)
+        .map(|p| {
+            Complex32::new(
+                f32::from_le_bytes([p[0], p[1], p[2], p[3]]),
+                f32::from_le_bytes([p[4], p[5], p[6], p[7]]),
+            )
+        })
+        .collect()
+}
+
+/// Split an AoS complex buffer into separate re/im planes (the layout the
+/// PJRT artifact consumes).
+pub fn to_planes(xs: &[Complex32]) -> (Vec<f32>, Vec<f32>) {
+    (xs.iter().map(|c| c.re).collect(), xs.iter().map(|c| c.im).collect())
+}
+
+/// Rebuild an AoS complex buffer from re/im planes.
+pub fn from_planes(re: &[f32], im: &[f32]) -> Vec<Complex32> {
+    assert_eq!(re.len(), im.len(), "plane length mismatch");
+    re.iter().zip(im).map(|(&r, &i)| Complex32::new(r, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_identities() {
+        let a = Complex32::new(1.0, 2.0);
+        let b = Complex32::new(-3.0, 0.5);
+        assert_eq!(a + b - b, a);
+        assert_eq!(a * Complex32::ONE, a);
+        assert_eq!(a * Complex32::ZERO, Complex32::ZERO);
+        assert_eq!(-(-a), a);
+    }
+
+    #[test]
+    fn mul_matches_formula() {
+        let a = Complex32::new(2.0, 3.0);
+        let b = Complex32::new(4.0, -5.0);
+        let c = a * b; // (8+15) + i(-10+12)
+        assert_eq!(c, Complex32::new(23.0, 2.0));
+    }
+
+    #[test]
+    fn mul_i_is_rotation() {
+        let a = Complex32::new(3.0, 4.0);
+        assert_eq!(a.mul_i(), a * Complex32::I);
+        assert_eq!(a.mul_neg_i(), a * Complex32::new(0.0, -1.0));
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let a = Complex32::new(3.0, 4.0);
+        assert_eq!(a.norm_sqr(), 25.0);
+        assert_eq!(a.abs(), 5.0);
+        assert_eq!((a * a.conj()).re, 25.0);
+        assert!((a * a.conj()).im.abs() < 1e-6);
+    }
+
+    #[test]
+    fn cis_on_unit_circle() {
+        for k in 0..8 {
+            let theta = 2.0 * std::f32::consts::PI * k as f32 / 8.0;
+            let w = Complex32::cis(theta);
+            assert!((w.abs() - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(Complex32::cis(0.0), Complex32::ONE);
+    }
+
+    #[test]
+    fn interleaved_view_layout() {
+        let xs = vec![Complex32::new(1.0, 2.0), Complex32::new(3.0, 4.0)];
+        assert_eq!(as_f32_slice(&xs), &[1.0, 2.0, 3.0, 4.0]);
+        let back = from_interleaved(as_f32_slice(&xs));
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn mutable_view_writes_through() {
+        let mut xs = vec![Complex32::ZERO; 2];
+        as_f32_slice_mut(&mut xs)[3] = 7.0;
+        assert_eq!(xs[1].im, 7.0);
+    }
+
+    #[test]
+    fn planes_roundtrip() {
+        let xs = vec![Complex32::new(1.0, -1.0), Complex32::new(2.0, -2.0)];
+        let (re, im) = to_planes(&xs);
+        assert_eq!(re, vec![1.0, 2.0]);
+        assert_eq!(im, vec![-1.0, -2.0]);
+        assert_eq!(from_planes(&re, &im), xs);
+    }
+}

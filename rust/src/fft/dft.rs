@@ -1,0 +1,117 @@
+//! Naive O(n²) DFT — the correctness oracle.
+//!
+//! Direct evaluation of `X[k] = Σ_j x[j]·e^{-2πijk/n}` with f64
+//! accumulation. Never used on any hot path; only by tests comparing the
+//! fast kernels against ground truth.
+
+use super::complex::Complex32;
+
+/// Forward DFT (unnormalized), any length.
+pub fn dft(x: &[Complex32]) -> Vec<Complex32> {
+    transform(x, -1.0, 1.0)
+}
+
+/// Inverse DFT (1/n-normalized), any length.
+pub fn idft(x: &[Complex32]) -> Vec<Complex32> {
+    let n = x.len().max(1);
+    transform(x, 1.0, 1.0 / n as f64)
+}
+
+fn transform(x: &[Complex32], sign: f64, norm: f64) -> Vec<Complex32> {
+    let n = x.len();
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut re = 0.0f64;
+        let mut im = 0.0f64;
+        for (j, &v) in x.iter().enumerate() {
+            let theta = sign * 2.0 * std::f64::consts::PI * (j * k % n.max(1)) as f64 / n as f64;
+            let (s, c) = theta.sin_cos();
+            re += v.re as f64 * c - v.im as f64 * s;
+            im += v.re as f64 * s + v.im as f64 * c;
+        }
+        out.push(Complex32::new((re * norm) as f32, (im * norm) as f32));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::assert_close;
+
+    fn flat(xs: &[Complex32]) -> Vec<f32> {
+        xs.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    #[test]
+    fn impulse_gives_constant() {
+        let mut x = vec![Complex32::ZERO; 8];
+        x[0] = Complex32::ONE;
+        let y = dft(&x);
+        for v in y {
+            assert!((v.re - 1.0).abs() < 1e-6 && v.im.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_gives_impulse() {
+        let x = vec![Complex32::ONE; 8];
+        let y = dft(&x);
+        assert!((y[0].re - 8.0).abs() < 1e-5);
+        for v in &y[1..] {
+            assert!(v.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_tone_lands_in_bin() {
+        let n = 16;
+        let bin = 3;
+        let x: Vec<Complex32> = (0..n)
+            .map(|j| {
+                let theta = 2.0 * std::f64::consts::PI * (bin * j) as f64 / n as f64;
+                Complex32::new(theta.cos() as f32, theta.sin() as f32)
+            })
+            .collect();
+        let y = dft(&x);
+        assert!((y[bin].re - n as f32).abs() < 1e-3, "bin energy {}", y[bin].re);
+        for (k, v) in y.iter().enumerate() {
+            if k != bin {
+                assert!(v.abs() < 1e-3, "leak at {k}: {}", v.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn idft_inverts_dft() {
+        let x: Vec<Complex32> =
+            (0..12).map(|i| Complex32::new(i as f32 * 0.5 - 2.0, (i * i) as f32 * 0.1)).collect();
+        let back = idft(&dft(&x));
+        assert_close(&flat(&back), &flat(&x), 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn linearity() {
+        let a: Vec<Complex32> = (0..10).map(|i| Complex32::new(i as f32, -(i as f32))).collect();
+        let b: Vec<Complex32> = (0..10).map(|i| Complex32::new(1.0, i as f32 * 0.3)).collect();
+        let sum: Vec<Complex32> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
+        let lhs = dft(&sum);
+        let rhs: Vec<Complex32> =
+            dft(&a).iter().zip(dft(&b).iter()).map(|(&x, &y)| x + y).collect();
+        assert_close(&flat(&lhs), &flat(&rhs), 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(dft(&[]).is_empty());
+        assert!(idft(&[]).is_empty());
+    }
+
+    #[test]
+    fn non_power_of_two_length_works() {
+        // The oracle must handle any n (the fast path is pow2-only).
+        let x: Vec<Complex32> = (0..7).map(|i| Complex32::new(i as f32, 0.0)).collect();
+        let back = idft(&dft(&x));
+        assert_close(&flat(&back), &flat(&x), 1e-4, 1e-4);
+    }
+}

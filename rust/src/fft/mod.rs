@@ -1,0 +1,30 @@
+//! Native FFT substrate — the FFTW3 stand-in.
+//!
+//! The paper's compute building block is FFTW3's 1-D complex transform,
+//! applied row-wise to a 2-D grid. This module provides that substrate
+//! from scratch:
+//!
+//! - [`Complex32`] — `repr(C)` complex type, byte-compatible with
+//!   interleaved `f32` pairs on the wire,
+//! - [`Plan`] — per-length plan (twiddle table + bit-reversal permutation),
+//!   mirroring `fftw_plan`, cached in [`plan::PlanCache`],
+//! - iterative radix-2 DIT kernel ([`radix2`]),
+//! - [`dft`] — the O(n²) oracle used only by tests,
+//! - [`batch`] — thread-parallel row-batched transforms (the "+pthreads"
+//!   in the paper's FFTW3 MPI+pthreads reference).
+//!
+//! All transforms are unnormalized forward / `1/n`-normalized inverse,
+//! matching both FFTW and `jnp.fft` conventions so the three compute
+//! engines (native, PJRT artifact, python reference) agree to f32
+//! tolerance.
+
+pub mod batch;
+pub mod complex;
+pub mod dft;
+pub mod plan;
+pub mod radix2;
+pub mod twiddle;
+
+pub use batch::fft_rows_parallel;
+pub use complex::Complex32;
+pub use plan::{Direction, Plan, PlanCache};

@@ -1,0 +1,213 @@
+//! FFT plans and the process-wide plan cache (the `fftw_plan` analog).
+//!
+//! A [`Plan`] owns the precomputed twiddle and bit-reversal tables for one
+//! transform length; creating it is the expensive step, executing it is
+//! allocation-free. [`PlanCache`] memoizes plans per length so the
+//! distributed driver and the baseline both plan once and execute many
+//! times — the same usage discipline FFTW requires.
+
+use super::complex::Complex32;
+use super::radix2;
+use super::twiddle;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Transform direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Unnormalized forward transform (`e^{-2πi...}`).
+    Forward,
+    /// `1/n`-normalized inverse transform.
+    Inverse,
+}
+
+/// A reusable transform plan for one power-of-two length.
+pub struct Plan {
+    n: usize,
+    twiddles: Vec<Complex32>,
+    bitrev: Vec<u32>,
+}
+
+impl Plan {
+    /// Plan an `n`-point transform. `n` must be a power of two (callers
+    /// with other sizes go through the oracle-grade `dft` module).
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 1, "Plan requires power-of-two n >= 1, got {n}");
+        if n == 1 {
+            return Self { n, twiddles: Vec::new(), bitrev: vec![0] };
+        }
+        Self { n, twiddles: twiddle::forward_table(n), bitrev: twiddle::bit_reverse_table(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Execute in place.
+    ///
+    /// # Panics
+    /// If `x.len() != self.len()`.
+    pub fn execute(&self, x: &mut [Complex32], dir: Direction) {
+        assert_eq!(x.len(), self.n, "buffer length {} != plan length {}", x.len(), self.n);
+        match dir {
+            Direction::Forward => radix2::fft_in_place(x, &self.twiddles, &self.bitrev),
+            Direction::Inverse => radix2::ifft_in_place(x, &self.twiddles, &self.bitrev),
+        }
+    }
+
+    /// Execute every length-`n` row of a contiguous row-major buffer.
+    pub fn execute_rows(&self, data: &mut [Complex32], dir: Direction) {
+        assert!(
+            data.len() % self.n == 0,
+            "buffer length {} not a multiple of row length {}",
+            data.len(),
+            self.n
+        );
+        for row in data.chunks_exact_mut(self.n) {
+            self.execute(row, dir);
+        }
+    }
+
+    /// FLOP estimate for one execution (5 n log2 n — the standard FFT
+    /// operation count used for throughput reporting).
+    pub fn flops(&self) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        5.0 * self.n as f64 * (self.n as f64).log2()
+    }
+}
+
+/// Memoized per-length plans, shared across threads.
+pub struct PlanCache {
+    plans: Mutex<HashMap<usize, Arc<Plan>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self { plans: Mutex::new(HashMap::new()) }
+    }
+
+    /// Process-wide cache (what `fftw` calls wisdom, minus the disk file).
+    pub fn global() -> &'static PlanCache {
+        static CACHE: OnceLock<PlanCache> = OnceLock::new();
+        CACHE.get_or_init(PlanCache::new)
+    }
+
+    pub fn plan(&self, n: usize) -> Arc<Plan> {
+        let mut plans = self.plans.lock().unwrap();
+        Arc::clone(plans.entry(n).or_insert_with(|| Arc::new(Plan::new(n))))
+    }
+
+    pub fn cached_lengths(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.plans.lock().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    fn flat(xs: &[Complex32]) -> Vec<f32> {
+        xs.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    #[test]
+    fn plan_executes_forward() {
+        let mut rng = Pcg32::new(1);
+        let x: Vec<Complex32> =
+            (0..64).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect();
+        let plan = Plan::new(64);
+        let mut y = x.clone();
+        plan.execute(&mut y, Direction::Forward);
+        assert_close(&flat(&y), &flat(&dft(&x)), 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn plan_roundtrip() {
+        let mut rng = Pcg32::new(2);
+        let x: Vec<Complex32> =
+            (0..256).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect();
+        let plan = Plan::new(256);
+        let mut y = x.clone();
+        plan.execute(&mut y, Direction::Forward);
+        plan.execute(&mut y, Direction::Inverse);
+        assert_close(&flat(&y), &flat(&x), 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn execute_rows_equals_per_row() {
+        let mut rng = Pcg32::new(3);
+        let rows = 5;
+        let n = 32;
+        let data: Vec<Complex32> =
+            (0..rows * n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect();
+        let plan = Plan::new(n);
+
+        let mut batched = data.clone();
+        plan.execute_rows(&mut batched, Direction::Forward);
+
+        let mut manual = data.clone();
+        for r in 0..rows {
+            plan.execute(&mut manual[r * n..(r + 1) * n], Direction::Forward);
+        }
+        assert_eq!(flat(&batched), flat(&manual));
+    }
+
+    #[test]
+    fn plan_length_one_is_identity() {
+        let plan = Plan::new(1);
+        let mut x = vec![Complex32::new(4.0, 2.0)];
+        plan.execute(&mut x, Direction::Forward);
+        assert_eq!(x[0], Complex32::new(4.0, 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn plan_rejects_non_pow2() {
+        Plan::new(24);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length")]
+    fn plan_rejects_wrong_length() {
+        Plan::new(8).execute(&mut vec![Complex32::ZERO; 4], Direction::Forward);
+    }
+
+    #[test]
+    fn cache_returns_same_plan() {
+        let cache = PlanCache::new();
+        let a = cache.plan(128);
+        let b = cache.plan(128);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.cached_lengths(), vec![128]);
+    }
+
+    #[test]
+    fn global_cache_is_shared() {
+        let a = PlanCache::global().plan(512);
+        let b = PlanCache::global().plan(512);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn flops_estimate() {
+        let plan = Plan::new(1024);
+        assert_eq!(plan.flops(), 5.0 * 1024.0 * 10.0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Iterative radix-2 decimation-in-time FFT kernel.
+//!
+//! Classic Cooley–Tukey: bit-reversal permutation, then `log2 n` butterfly
+//! stages over a precomputed half-circle twiddle table. The first two
+//! stages are specialized (twiddles 1 and ±i need no multiplies), which is
+//! where most of the win over the textbook loop comes from — see
+//! EXPERIMENTS.md §Perf.
+//!
+//! Operates in place on `&mut [Complex32]`; the caller owns planning
+//! (tables come from [`crate::fft::Plan`]).
+
+use super::complex::Complex32;
+
+/// In-place forward FFT. `twiddles` is `forward_table(n)`, `bitrev` is
+/// `bit_reverse_table(n)`.
+pub fn fft_in_place(x: &mut [Complex32], twiddles: &[Complex32], bitrev: &[u32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    debug_assert_eq!(twiddles.len(), n / 2);
+    debug_assert_eq!(bitrev.len(), n);
+    if n <= 1 {
+        return;
+    }
+
+    permute(x, bitrev);
+
+    // Stage 1 (len=2): butterflies with twiddle 1.
+    let mut pair = 0;
+    while pair < n {
+        let (a, b) = (x[pair], x[pair + 1]);
+        x[pair] = a + b;
+        x[pair + 1] = a - b;
+        pair += 2;
+    }
+    if n == 2 {
+        return;
+    }
+
+    // Stage 2 (len=4): twiddles are 1 and -i.
+    let mut base = 0;
+    while base < n {
+        let (a, b) = (x[base], x[base + 2]);
+        x[base] = a + b;
+        x[base + 2] = a - b;
+        let (c, d) = (x[base + 1], x[base + 3].mul_neg_i());
+        x[base + 1] = c + d;
+        x[base + 3] = c - d;
+        base += 4;
+    }
+
+    // General stages (len = 8, 16, ..., n).
+    //
+    // §Perf: two layouts per stage (see EXPERIMENTS.md §Perf L3-1).
+    // Early stages (many small blocks) walk `off` in the OUTER loop so
+    // each twiddle is loaded once and reused across every block — the
+    // naive inner-`off` order strides the twiddle table by n/len and
+    // takes a cache miss per butterfly when blocks are small. Late
+    // stages (few big blocks) keep `off` inner, where the twiddle stride
+    // n/len is small and the x-access pattern is contiguous. Split
+    // borrows (`split_at_mut`) drop the bounds checks from the inner
+    // loops.
+    let mut len = 8;
+    while len <= n {
+        let half = len / 2;
+        let tstride = n / len;
+        if len <= 64 && tstride > 1 {
+            // off outer, blocks inner: one twiddle load per `off`.
+            for off in 0..half {
+                let w = twiddles[off * tstride];
+                let mut base = 0;
+                while base < n {
+                    let a = x[base + off];
+                    let b = x[base + off + half] * w;
+                    x[base + off] = a + b;
+                    x[base + off + half] = a - b;
+                    base += len;
+                }
+            }
+        } else {
+            for block in x.chunks_exact_mut(len) {
+                let (lo, hi) = block.split_at_mut(half);
+                let mut tidx = 0;
+                for (a_ref, b_ref) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let w = twiddles[tidx];
+                    let a = *a_ref;
+                    let b = *b_ref * w;
+                    *a_ref = a + b;
+                    *b_ref = a - b;
+                    tidx += tstride;
+                }
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// In-place inverse FFT (1/n-normalized) via the conjugation identity:
+/// `ifft(x) = conj(fft(conj(x))) / n`.
+pub fn ifft_in_place(x: &mut [Complex32], twiddles: &[Complex32], bitrev: &[u32]) {
+    let n = x.len();
+    if n <= 1 {
+        return;
+    }
+    for v in x.iter_mut() {
+        *v = v.conj();
+    }
+    fft_in_place(x, twiddles, bitrev);
+    let scale = 1.0 / n as f32;
+    for v in x.iter_mut() {
+        *v = v.conj().scale(scale);
+    }
+}
+
+#[inline]
+fn permute(x: &mut [Complex32], bitrev: &[u32]) {
+    for (i, &j) in bitrev.iter().enumerate() {
+        let j = j as usize;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::{dft, idft};
+    use crate::fft::twiddle::{bit_reverse_table, forward_table};
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::{assert_close, check};
+
+    fn flat(xs: &[Complex32]) -> Vec<f32> {
+        xs.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    fn random_signal(rng: &mut Pcg32, n: usize) -> Vec<Complex32> {
+        (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+    }
+
+    fn run_fft(x: &[Complex32]) -> Vec<Complex32> {
+        let n = x.len();
+        let (tw, br) = (forward_table(n), bit_reverse_table(n));
+        let mut y = x.to_vec();
+        fft_in_place(&mut y, &tw, &br);
+        y
+    }
+
+    #[test]
+    fn matches_oracle_all_small_sizes() {
+        check(
+            0xF0F0,
+            40,
+            |rng| {
+                let log2n = rng.range(1, 10); // n in 2..512
+                random_signal(rng, 1 << log2n)
+            },
+            |x| {
+                let fast = run_fft(x);
+                let slow = dft(x);
+                assert_close(&flat(&fast), &flat(&slow), 1e-3, 1e-3);
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        check(
+            0xBEEF,
+            30,
+            |rng| { let n = 1 << rng.range(1, 12); random_signal(rng, n) },
+            |x| {
+                let n = x.len();
+                let (tw, br) = (forward_table(n), bit_reverse_table(n));
+                let mut y = x.clone();
+                fft_in_place(&mut y, &tw, &br);
+                ifft_in_place(&mut y, &tw, &br);
+                assert_close(&flat(&y), &flat(x), 1e-4, 1e-3);
+            },
+        );
+    }
+
+    #[test]
+    fn parseval_energy_conservation() {
+        check(
+            0xCAFE,
+            20,
+            |rng| { let n = 1 << rng.range(2, 11); random_signal(rng, n) },
+            |x| {
+                let y = run_fft(x);
+                let ex: f64 = x.iter().map(|c| c.norm_sqr() as f64).sum();
+                let ey: f64 = y.iter().map(|c| c.norm_sqr() as f64).sum::<f64>() / x.len() as f64;
+                assert!(
+                    (ex - ey).abs() <= 1e-3 * ex.max(1.0),
+                    "Parseval violated: time {ex} vs freq {ey}"
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn linearity_property() {
+        check(
+            0x11,
+            20,
+            |rng| {
+                let n = 1 << rng.range(2, 9);
+                (random_signal(rng, n), random_signal(rng, n), rng.next_signal())
+            },
+            |(a, b, alpha)| {
+                let combo: Vec<Complex32> =
+                    a.iter().zip(b).map(|(&x, &y)| x.scale(*alpha) + y).collect();
+                let lhs = run_fft(&combo);
+                let fa = run_fft(a);
+                let fb = run_fft(b);
+                let rhs: Vec<Complex32> =
+                    fa.iter().zip(&fb).map(|(&x, &y)| x.scale(*alpha) + y).collect();
+                assert_close(&flat(&lhs), &flat(&rhs), 1e-3, 1e-2);
+            },
+        );
+    }
+
+    #[test]
+    fn shift_theorem() {
+        // x[(j+1) mod n] ⇒ X[k]·e^{+2πik/n}
+        let mut rng = Pcg32::new(77);
+        let n = 64;
+        let x = random_signal(&mut rng, n);
+        let mut shifted = x.clone();
+        shifted.rotate_left(1);
+        let fx = run_fft(&x);
+        let fs = run_fft(&shifted);
+        for k in 0..n {
+            let phase = Complex32::cis_f64(2.0 * std::f64::consts::PI * k as f64 / n as f64);
+            let expect = fx[k] * phase;
+            assert!(
+                (expect - fs[k]).abs() < 1e-3,
+                "bin {k}: {:?} vs {:?}",
+                expect,
+                fs[k]
+            );
+        }
+    }
+
+    #[test]
+    fn size_one_and_two() {
+        let (tw1, br1) = (forward_table(2), bit_reverse_table(2));
+        let mut one = vec![Complex32::new(3.0, -1.0)];
+        fft_in_place(&mut one, &[], &[0]);
+        assert_eq!(one[0], Complex32::new(3.0, -1.0));
+
+        let mut two = vec![Complex32::new(1.0, 0.0), Complex32::new(2.0, 0.0)];
+        fft_in_place(&mut two, &tw1, &br1);
+        assert_close(&flat(&two), &[3.0, 0.0, -1.0, 0.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn ifft_matches_oracle() {
+        let mut rng = Pcg32::new(5);
+        let x = random_signal(&mut rng, 128);
+        let (tw, br) = (forward_table(128), bit_reverse_table(128));
+        let mut y = x.clone();
+        ifft_in_place(&mut y, &tw, &br);
+        let slow = idft(&x);
+        assert_close(&flat(&y), &flat(&slow), 1e-4, 1e-3);
+    }
+}

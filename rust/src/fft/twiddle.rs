@@ -1,0 +1,89 @@
+//! Twiddle-factor tables.
+//!
+//! Forward transform uses `w_n^k = e^{-2πik/n}`; tables are computed in
+//! f64 and rounded once to f32 (FFTW does the same) so accumulated phase
+//! error stays below f32 epsilon per stage.
+
+use super::complex::Complex32;
+
+/// Half-size twiddle table for an n-point transform:
+/// `table[k] = e^{-2πik/n}` for `k in 0..n/2`.
+///
+/// The radix-2 kernel only ever needs the first half of the circle; the
+/// second half is `-table[k - n/2]`.
+pub fn forward_table(n: usize) -> Vec<Complex32> {
+    assert!(n.is_power_of_two() && n >= 2, "twiddle table needs power-of-two n >= 2, got {n}");
+    let half = n / 2;
+    let step = -2.0 * std::f64::consts::PI / n as f64;
+    (0..half).map(|k| Complex32::cis_f64(step * k as f64)).collect()
+}
+
+/// Full DFT matrix twiddle `w_n^{jk}` row generator used by the oracle and
+/// by the four-step factorization checks: returns `e^{-2πi·jk/n}`.
+pub fn w(n: usize, jk: usize) -> Complex32 {
+    let step = -2.0 * std::f64::consts::PI / n as f64;
+    Complex32::cis_f64(step * (jk % n) as f64)
+}
+
+/// Bit-reversal permutation table for length `n = 2^log2n`.
+pub fn bit_reverse_table(n: usize) -> Vec<u32> {
+    assert!(n.is_power_of_two(), "bit reversal needs power-of-two n, got {n}");
+    let bits = n.trailing_zeros();
+    (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_starts_at_one() {
+        let t = forward_table(8);
+        assert_eq!(t.len(), 4);
+        assert!((t[0].re - 1.0).abs() < 1e-7 && t[0].im.abs() < 1e-7);
+    }
+
+    #[test]
+    fn table_quarter_is_minus_i() {
+        let t = forward_table(8);
+        // w_8^2 = e^{-iπ/2} = -i
+        assert!(t[2].re.abs() < 1e-6 && (t[2].im + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_entries_unit_modulus() {
+        for &n in &[2usize, 4, 16, 256, 1024] {
+            for w in forward_table(n) {
+                assert!((w.abs() - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn w_is_periodic() {
+        let a = w(16, 5);
+        let b = w(16, 5 + 16);
+        assert!((a.re - b.re).abs() < 1e-7 && (a.im - b.im).abs() < 1e-7);
+    }
+
+    #[test]
+    fn bitrev_is_involution() {
+        for &n in &[2usize, 8, 64, 1024] {
+            let t = bit_reverse_table(n);
+            for i in 0..n {
+                assert_eq!(t[t[i] as usize] as usize, i, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitrev_known_n8() {
+        assert_eq!(bit_reverse_table(8), vec![0, 4, 2, 6, 1, 5, 3, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn non_pow2_rejected() {
+        forward_table(12);
+    }
+}

@@ -1,0 +1,193 @@
+//! AGAS-style symbolic name registry.
+//!
+//! HPX's Active Global Address Space lets any locality resolve a symbolic
+//! name ("/fft/partition#3") to the global address of a component,
+//! wherever it lives. Our benchmark uses it the same way HPX collectives
+//! do internally: participants register their per-rank communicator
+//! endpoints under a basename, and `resolve` blocks until the peer has
+//! registered — which doubles as the registration barrier HPX performs
+//! when creating a collective.
+
+use super::parcel::LocalityId;
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A resolved global address: which locality owns the component, plus a
+/// component-local id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GlobalAddress {
+    pub locality: LocalityId,
+    pub component: u64,
+}
+
+/// The name service. One instance is shared by all localities of a
+/// cluster (in real HPX it is itself distributed; the service semantics —
+/// register once, resolve from anywhere, block until present — are what
+/// the collectives depend on).
+pub struct Agas {
+    names: Mutex<HashMap<String, GlobalAddress>>,
+    cv: Condvar,
+}
+
+impl Agas {
+    pub fn new() -> Self {
+        Self { names: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// Register `name`. Re-registering an existing name is a logic error.
+    ///
+    /// # Panics
+    /// If the name is already registered with a different address.
+    pub fn register(&self, name: &str, addr: GlobalAddress) {
+        let mut names = self.names.lock().unwrap();
+        if let Some(prev) = names.insert(name.to_string(), addr) {
+            assert_eq!(prev, addr, "AGAS name {name:?} re-registered with a different address");
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block until `name` is registered and return its address.
+    pub fn resolve(&self, name: &str) -> GlobalAddress {
+        let mut names = self.names.lock().unwrap();
+        loop {
+            if let Some(&addr) = names.get(name) {
+                return addr;
+            }
+            names = self.cv.wait(names).unwrap();
+        }
+    }
+
+    /// Non-blocking resolve.
+    pub fn try_resolve(&self, name: &str) -> Option<GlobalAddress> {
+        self.names.lock().unwrap().get(name).copied()
+    }
+
+    /// Blocking resolve with timeout.
+    pub fn resolve_timeout(&self, name: &str, timeout: Duration) -> Option<GlobalAddress> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut names = self.names.lock().unwrap();
+        loop {
+            if let Some(&addr) = names.get(name) {
+                return Some(addr);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (n, res) = self.cv.wait_timeout(names, deadline - now).unwrap();
+            names = n;
+            if res.timed_out() {
+                return names.get(name).copied();
+            }
+        }
+    }
+
+    /// Unregister (component teardown).
+    pub fn unregister(&self, name: &str) -> Option<GlobalAddress> {
+        self.names.lock().unwrap().remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.lock().unwrap().is_empty()
+    }
+}
+
+impl Default for Agas {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn register_resolve() {
+        let agas = Agas::new();
+        agas.register("/fft/root", GlobalAddress { locality: 2, component: 9 });
+        assert_eq!(agas.resolve("/fft/root"), GlobalAddress { locality: 2, component: 9 });
+    }
+
+    #[test]
+    fn resolve_blocks_until_registered() {
+        let agas = Arc::new(Agas::new());
+        let a2 = Arc::clone(&agas);
+        let h = thread::spawn(move || a2.resolve("/late"));
+        thread::sleep(Duration::from_millis(10));
+        agas.register("/late", GlobalAddress { locality: 1, component: 0 });
+        assert_eq!(h.join().unwrap().locality, 1);
+    }
+
+    #[test]
+    fn try_resolve_nonblocking() {
+        let agas = Agas::new();
+        assert!(agas.try_resolve("/nope").is_none());
+        agas.register("/yes", GlobalAddress { locality: 0, component: 1 });
+        assert!(agas.try_resolve("/yes").is_some());
+    }
+
+    #[test]
+    fn resolve_timeout_expires() {
+        let agas = Agas::new();
+        assert!(agas.resolve_timeout("/never", Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn idempotent_reregistration_ok() {
+        let agas = Agas::new();
+        let addr = GlobalAddress { locality: 3, component: 3 };
+        agas.register("/dup", addr);
+        agas.register("/dup", addr); // same address: fine
+    }
+
+    #[test]
+    #[should_panic(expected = "re-registered")]
+    fn conflicting_registration_panics() {
+        let agas = Agas::new();
+        agas.register("/x", GlobalAddress { locality: 0, component: 0 });
+        agas.register("/x", GlobalAddress { locality: 1, component: 0 });
+    }
+
+    #[test]
+    fn unregister_removes() {
+        let agas = Agas::new();
+        agas.register("/tmp", GlobalAddress { locality: 0, component: 0 });
+        assert!(agas.unregister("/tmp").is_some());
+        assert!(agas.try_resolve("/tmp").is_none());
+        assert!(agas.is_empty());
+    }
+
+    #[test]
+    fn many_concurrent_registrations() {
+        let agas = Arc::new(Agas::new());
+        let handles: Vec<_> = (0..8)
+            .map(|loc| {
+                let agas = Arc::clone(&agas);
+                thread::spawn(move || {
+                    agas.register(
+                        &format!("/rank/{loc}"),
+                        GlobalAddress { locality: loc, component: 0 },
+                    );
+                    // Everyone resolves everyone (the collective-creation
+                    // pattern).
+                    for peer in 0..8 {
+                        let addr = agas.resolve(&format!("/rank/{peer}"));
+                        assert_eq!(addr.locality, peer);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(agas.len(), 8);
+    }
+}

@@ -1,0 +1,235 @@
+//! Per-locality matched receive queues.
+//!
+//! Every locality owns one [`Mailbox`]. Incoming parcels are filed under
+//! their `(src, action, tag)` key; receivers block on an exact-match key
+//! (collectives always know who they expect). Out-of-order arrival is
+//! handled by queueing per key, preserving per-(src,key) FIFO order —
+//! the same matching semantics MPI guarantees per (source, tag, comm).
+
+use super::parcel::{ActionId, LocalityId, Parcel, Payload, Tag};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+type Key = (LocalityId, ActionId, Tag);
+
+/// A matched-receive queue for one locality.
+pub struct Mailbox {
+    inner: Mutex<HashMap<Key, VecDeque<Payload>>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// File an incoming parcel.
+    pub fn deliver(&self, parcel: Parcel) {
+        let key = (parcel.src, parcel.action, parcel.tag);
+        self.inner.lock().unwrap().entry(key).or_default().push_back(parcel.payload);
+        self.cv.notify_all();
+    }
+
+    /// Blocking matched receive.
+    pub fn recv(&self, src: LocalityId, action: ActionId, tag: Tag) -> Payload {
+        let key = (src, action, tag);
+        let mut map = self.inner.lock().unwrap();
+        loop {
+            if let Some(q) = map.get_mut(&key) {
+                if let Some(p) = q.pop_front() {
+                    if q.is_empty() {
+                        map.remove(&key);
+                    }
+                    return p;
+                }
+            }
+            map = self.cv.wait(map).unwrap();
+        }
+    }
+
+    /// Blocking matched receive with timeout (tests / failure injection).
+    pub fn recv_timeout(
+        &self,
+        src: LocalityId,
+        action: ActionId,
+        tag: Tag,
+        timeout: Duration,
+    ) -> Option<Payload> {
+        let key = (src, action, tag);
+        let deadline = std::time::Instant::now() + timeout;
+        let mut map = self.inner.lock().unwrap();
+        loop {
+            if let Some(q) = map.get_mut(&key) {
+                if let Some(p) = q.pop_front() {
+                    if q.is_empty() {
+                        map.remove(&key);
+                    }
+                    return Some(p);
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (m, res) = self.cv.wait_timeout(map, deadline - now).unwrap();
+            map = m;
+            if res.timed_out() {
+                // Loop once more to drain anything that raced the timeout.
+                if let Some(q) = map.get_mut(&key) {
+                    if let Some(p) = q.pop_front() {
+                        if q.is_empty() {
+                            map.remove(&key);
+                        }
+                        return Some(p);
+                    }
+                }
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking matched receive.
+    pub fn try_recv(&self, src: LocalityId, action: ActionId, tag: Tag) -> Option<Payload> {
+        let key = (src, action, tag);
+        let mut map = self.inner.lock().unwrap();
+        let q = map.get_mut(&key)?;
+        let p = q.pop_front();
+        if q.is_empty() {
+            map.remove(&key);
+        }
+        p
+    }
+
+    /// Number of queued payloads (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().values().map(|q| q.len()).sum()
+    }
+}
+
+impl Default for Mailbox {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::parcel::actions;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn parcel(src: usize, tag: Tag, byte: u8) -> Parcel {
+        Parcel::new(src, 0, actions::P2P, tag, Payload::new(vec![byte]))
+    }
+
+    #[test]
+    fn deliver_then_recv() {
+        let mb = Mailbox::new();
+        mb.deliver(parcel(1, 7, 42));
+        assert_eq!(mb.recv(1, actions::P2P, 7).as_bytes(), &[42]);
+    }
+
+    #[test]
+    fn recv_blocks_until_delivery() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = Arc::clone(&mb);
+        let h = thread::spawn(move || mb2.recv(2, actions::P2P, 1).as_bytes()[0]);
+        thread::sleep(Duration::from_millis(10));
+        mb.deliver(parcel(2, 1, 99));
+        assert_eq!(h.join().unwrap(), 99);
+    }
+
+    #[test]
+    fn matching_is_exact() {
+        let mb = Mailbox::new();
+        mb.deliver(parcel(1, 1, 10));
+        mb.deliver(parcel(2, 1, 20));
+        mb.deliver(parcel(1, 2, 30));
+        assert_eq!(mb.recv(1, actions::P2P, 2).as_bytes(), &[30]);
+        assert_eq!(mb.recv(2, actions::P2P, 1).as_bytes(), &[20]);
+        assert_eq!(mb.recv(1, actions::P2P, 1).as_bytes(), &[10]);
+    }
+
+    #[test]
+    fn per_key_fifo_order() {
+        let mb = Mailbox::new();
+        for b in 0..10u8 {
+            mb.deliver(parcel(3, 5, b));
+        }
+        for b in 0..10u8 {
+            assert_eq!(mb.recv(3, actions::P2P, 5).as_bytes(), &[b]);
+        }
+    }
+
+    #[test]
+    fn try_recv_returns_none_when_empty() {
+        let mb = Mailbox::new();
+        assert!(mb.try_recv(0, actions::P2P, 0).is_none());
+        mb.deliver(parcel(0, 0, 1));
+        assert!(mb.try_recv(0, actions::P2P, 0).is_some());
+        assert!(mb.try_recv(0, actions::P2P, 0).is_none());
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let mb = Mailbox::new();
+        let got = mb.recv_timeout(0, actions::P2P, 0, Duration::from_millis(5));
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn recv_timeout_gets_value() {
+        let mb = Mailbox::new();
+        mb.deliver(parcel(0, 0, 77));
+        let got = mb.recv_timeout(0, actions::P2P, 0, Duration::from_millis(5));
+        assert_eq!(got.unwrap().as_bytes(), &[77]);
+    }
+
+    #[test]
+    fn pending_counts() {
+        let mb = Mailbox::new();
+        assert_eq!(mb.pending(), 0);
+        mb.deliver(parcel(0, 0, 1));
+        mb.deliver(parcel(0, 1, 2));
+        assert_eq!(mb.pending(), 2);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let mb = Arc::new(Mailbox::new());
+        let producers: Vec<_> = (0..4)
+            .map(|src| {
+                let mb = Arc::clone(&mb);
+                thread::spawn(move || {
+                    for i in 0..50u64 {
+                        mb.deliver(Parcel::new(
+                            src,
+                            0,
+                            actions::P2P,
+                            i,
+                            Payload::new(vec![src as u8]),
+                        ));
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|src| {
+                let mb = Arc::clone(&mb);
+                thread::spawn(move || {
+                    for i in 0..50u64 {
+                        let p = mb.recv(src, actions::P2P, i);
+                        assert_eq!(p.as_bytes(), &[src as u8]);
+                    }
+                })
+            })
+            .collect();
+        for h in producers.into_iter().chain(consumers) {
+            h.join().unwrap();
+        }
+        assert_eq!(mb.pending(), 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! HPX-analog distributed substrate.
+//!
+//! HPX programs run on *localities* (one process per node) that exchange
+//! *parcels* (an active-message abstraction: destination + action +
+//! arguments) over a *parcelport*, and name remote entities through the
+//! Active Global Address Space (AGAS). This module rebuilds those
+//! abstractions for the benchmark:
+//!
+//! - [`parcel`] — the parcel type, action/tag namespaces, and the shared
+//!   payload representation (`Arc`-backed so the LCI port can hand it
+//!   over without copying),
+//! - [`mailbox`] — per-locality matched receive queues (the parcel
+//!   decoding/dispatch layer),
+//! - [`agas`] — symbolic name → global address registry,
+//! - [`runtime`] — cluster bootstrap: spawn N localities on OS threads,
+//!   wire them with the chosen parcelport, run an SPMD closure, collect
+//!   results.
+//!
+//! Localities are threads in one process rather than processes on
+//! separate nodes; the parcelports (see [`crate::parcelport`]) preserve
+//! each backend's protocol costs, and cluster-scale wire time comes from
+//! the calibrated network model / simnet.
+
+pub mod agas;
+pub mod mailbox;
+pub mod parcel;
+pub mod runtime;
+
+pub use parcel::{ActionId, LocalityId, Parcel, Payload, Tag};
+pub use runtime::{Cluster, LocalityCtx};

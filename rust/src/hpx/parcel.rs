@@ -1,0 +1,209 @@
+//! The parcel abstraction.
+//!
+//! In HPX terms a parcel is "an active message: a destination global
+//! address, an action, and its arguments". For the collective workloads
+//! in this benchmark the action set is small and static, so actions are
+//! plain `u32` identifiers (see [`actions`]) and arguments travel as an
+//! opaque byte payload plus a 64-bit matching tag.
+//!
+//! [`Payload`] is the single payload representation shared by all three
+//! parcelports: an `Arc<Vec<u8>>`. Whether a port *clones the bytes* or
+//! *clones the Arc* is exactly the copy-semantics difference between the
+//! MPI/TCP ports and the LCI port that the paper measures.
+
+use std::sync::Arc;
+
+/// Locality (node) identifier — dense, `0..n_localities`.
+pub type LocalityId = usize;
+
+/// Action identifier — names the remote operation a parcel invokes.
+pub type ActionId = u32;
+
+/// Matching tag within an action namespace.
+pub type Tag = u64;
+
+/// Well-known action ids.
+pub mod actions {
+    use super::ActionId;
+
+    /// Collective data traffic (scatter / all-to-all / ... chunks).
+    pub const COLLECTIVE: ActionId = 1;
+    /// Point-to-point user payloads (examples, tests).
+    pub const P2P: ActionId = 2;
+    /// AGAS registration gossip (runtime-internal).
+    pub const AGAS: ActionId = 3;
+    /// Rendezvous ready-to-send control message (MPI port internal).
+    pub const CTRL_RTS: ActionId = 0xFFF1;
+    /// Rendezvous clear-to-send control message (MPI port internal).
+    pub const CTRL_CTS: ActionId = 0xFFF2;
+    /// Runtime shutdown signal.
+    pub const SHUTDOWN: ActionId = 0xFFFF;
+}
+
+/// Reference-counted byte payload.
+///
+/// `Payload::clone` is O(1) (Arc bump). Ports that model copying
+/// transports call [`Payload::deep_copy`] instead, which duplicates the
+/// bytes and is counted in port statistics.
+#[derive(Clone, Debug)]
+pub struct Payload(Arc<Vec<u8>>);
+
+impl Payload {
+    pub fn new(bytes: Vec<u8>) -> Self {
+        Self(Arc::new(bytes))
+    }
+
+    pub fn empty() -> Self {
+        Self(Arc::new(Vec::new()))
+    }
+
+    pub fn from_f32(xs: &[f32]) -> Self {
+        Self::new(crate::util::bytes::f32_to_bytes(xs))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.0
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        crate::util::bytes::bytes_to_f32(&self.0)
+    }
+
+    /// Duplicate the underlying bytes (a real memcpy) — used by ports
+    /// whose protocol implies a copy (TCP framing, MPI eager buffers).
+    pub fn deep_copy(&self) -> Self {
+        Self(Arc::new(self.0.as_ref().clone()))
+    }
+
+    /// Take the bytes out, cloning only if other references exist.
+    pub fn into_vec(self) -> Vec<u8> {
+        Arc::try_unwrap(self.0).unwrap_or_else(|arc| arc.as_ref().clone())
+    }
+
+    /// True if this payload shares storage with `other` (zero-copy check).
+    pub fn shares_storage(&self, other: &Payload) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+/// An active message.
+#[derive(Clone, Debug)]
+pub struct Parcel {
+    pub src: LocalityId,
+    pub dest: LocalityId,
+    pub action: ActionId,
+    pub tag: Tag,
+    pub payload: Payload,
+}
+
+impl Parcel {
+    pub fn new(
+        src: LocalityId,
+        dest: LocalityId,
+        action: ActionId,
+        tag: Tag,
+        payload: Payload,
+    ) -> Self {
+        Self { src, dest, action, tag, payload }
+    }
+
+    /// Wire-encode (used by the TCP port): fixed header + payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(Self::HEADER_LEN + self.payload.len());
+        crate::util::bytes::put_u32(&mut buf, self.src as u32);
+        crate::util::bytes::put_u32(&mut buf, self.dest as u32);
+        crate::util::bytes::put_u32(&mut buf, self.action);
+        crate::util::bytes::put_u64(&mut buf, self.tag);
+        crate::util::bytes::put_u64(&mut buf, self.payload.len() as u64);
+        buf.extend_from_slice(self.payload.as_bytes());
+        buf
+    }
+
+    /// Header size of the wire encoding.
+    pub const HEADER_LEN: usize = 4 + 4 + 4 + 8 + 8;
+
+    /// Decode a wire frame produced by [`Parcel::encode`].
+    ///
+    /// # Panics
+    /// On a malformed frame (framing guarantees length on the TCP path).
+    pub fn decode(frame: &[u8]) -> Self {
+        let mut off = 0;
+        let src = crate::util::bytes::get_u32(frame, &mut off) as LocalityId;
+        let dest = crate::util::bytes::get_u32(frame, &mut off) as LocalityId;
+        let action = crate::util::bytes::get_u32(frame, &mut off);
+        let tag = crate::util::bytes::get_u64(frame, &mut off);
+        let len = crate::util::bytes::get_u64(frame, &mut off) as usize;
+        assert_eq!(frame.len(), off + len, "frame length mismatch");
+        Self { src, dest, action, tag, payload: Payload::new(frame[off..].to_vec()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_clone_is_shallow() {
+        let p = Payload::from_f32(&[1.0, 2.0]);
+        let q = p.clone();
+        assert!(p.shares_storage(&q));
+    }
+
+    #[test]
+    fn deep_copy_is_deep() {
+        let p = Payload::from_f32(&[1.0, 2.0]);
+        let q = p.deep_copy();
+        assert!(!p.shares_storage(&q));
+        assert_eq!(p.as_bytes(), q.as_bytes());
+    }
+
+    #[test]
+    fn f32_payload_roundtrip() {
+        let xs = vec![0.5f32, -1.25, 3.0];
+        assert_eq!(Payload::from_f32(&xs).to_f32(), xs);
+    }
+
+    #[test]
+    fn into_vec_avoids_copy_when_unique() {
+        let p = Payload::new(vec![1, 2, 3]);
+        let ptr = p.as_bytes().as_ptr();
+        let v = p.into_vec();
+        assert_eq!(v.as_ptr(), ptr, "unique payload should move, not copy");
+    }
+
+    #[test]
+    fn parcel_encode_decode_roundtrip() {
+        let p = Parcel::new(3, 7, actions::COLLECTIVE, 0xABCD_EF01_2345, Payload::new(vec![9; 100]));
+        let frame = p.encode();
+        assert_eq!(frame.len(), Parcel::HEADER_LEN + 100);
+        let q = Parcel::decode(&frame);
+        assert_eq!(q.src, 3);
+        assert_eq!(q.dest, 7);
+        assert_eq!(q.action, actions::COLLECTIVE);
+        assert_eq!(q.tag, 0xABCD_EF01_2345);
+        assert_eq!(q.payload.as_bytes(), p.payload.as_bytes());
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let p = Parcel::new(0, 1, actions::P2P, 0, Payload::empty());
+        let q = Parcel::decode(&p.encode());
+        assert!(q.payload.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "frame length mismatch")]
+    fn truncated_frame_panics() {
+        let p = Parcel::new(0, 1, actions::P2P, 0, Payload::new(vec![1, 2, 3, 4]));
+        let frame = p.encode();
+        Parcel::decode(&frame[..frame.len() - 1]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Cluster bootstrap: spawn localities, wire the fabric, run SPMD code.
+//!
+//! `hpx_main` on a real cluster starts one process per node; here a
+//! [`Cluster`] owns the chosen parcelport fabric and an AGAS instance and
+//! runs an SPMD closure on one OS thread per locality, returning each
+//! locality's result. This is the entry point every example, benchmark,
+//! and the CLI use.
+
+use super::agas::Agas;
+use super::parcel::{actions, LocalityId, Parcel, Payload, Tag};
+use crate::parcelport::{self, NetModel, Parcelport, PortKind};
+use std::sync::Arc;
+
+/// A wired-up set of localities.
+pub struct Cluster {
+    fabric: Arc<dyn Parcelport>,
+    agas: Arc<Agas>,
+    n: usize,
+}
+
+impl Cluster {
+    /// Build a cluster of `n` localities over the given parcelport.
+    /// `net = Some(...)` enables the hybrid wire model (cluster-like
+    /// timings); `None` measures raw local transport behaviour.
+    pub fn new(n: usize, kind: PortKind, net: Option<NetModel>) -> anyhow::Result<Self> {
+        Ok(Self { fabric: parcelport::build(kind, n, net)?, agas: Arc::new(Agas::new()), n })
+    }
+
+    /// Wrap an existing fabric (tests, custom ports).
+    pub fn with_fabric(fabric: Arc<dyn Parcelport>) -> Self {
+        let n = fabric.n_localities();
+        Self { fabric, agas: Arc::new(Agas::new()), n }
+    }
+
+    pub fn n_localities(&self) -> usize {
+        self.n
+    }
+
+    pub fn fabric(&self) -> &Arc<dyn Parcelport> {
+        &self.fabric
+    }
+
+    pub fn agas(&self) -> &Arc<Agas> {
+        &self.agas
+    }
+
+    /// Run `f` as SPMD code: one thread per locality. Returns per-rank
+    /// results in rank order. Panics in any locality propagate.
+    pub fn run<T: Send>(&self, f: impl Fn(&LocalityCtx) -> T + Sync) -> Vec<T> {
+        let mut slots: Vec<Option<T>> = (0..self.n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(rank, slot)| {
+                    let ctx = LocalityCtx {
+                        rank,
+                        n: self.n,
+                        fabric: Arc::clone(&self.fabric),
+                        agas: Arc::clone(&self.agas),
+                    };
+                    let f = &f;
+                    s.spawn(move || {
+                        *slot = Some(f(&ctx));
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("locality panicked");
+            }
+        });
+        slots.into_iter().map(|s| s.expect("locality produced no result")).collect()
+    }
+}
+
+/// Per-locality execution context handed to SPMD closures.
+pub struct LocalityCtx {
+    pub rank: LocalityId,
+    pub n: usize,
+    fabric: Arc<dyn Parcelport>,
+    pub agas: Arc<Agas>,
+}
+
+impl LocalityCtx {
+    pub fn fabric(&self) -> &Arc<dyn Parcelport> {
+        &self.fabric
+    }
+
+    /// Point-to-point send (action [`actions::P2P`]).
+    pub fn send(&self, dest: LocalityId, tag: Tag, payload: Payload) {
+        self.fabric.send(Parcel::new(self.rank, dest, actions::P2P, tag, payload));
+    }
+
+    /// Blocking point-to-point receive.
+    pub fn recv(&self, src: LocalityId, tag: Tag) -> Payload {
+        self.fabric.recv(self.rank, src, actions::P2P, tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::agas::GlobalAddress;
+
+    #[test]
+    fn run_returns_rank_ordered_results() {
+        let cluster = Cluster::new(4, PortKind::Lci, None).unwrap();
+        let results = cluster.run(|ctx| ctx.rank * 2);
+        assert_eq!(results, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn ring_exchange_over_runtime() {
+        let cluster = Cluster::new(4, PortKind::Lci, None).unwrap();
+        let sums = cluster.run(|ctx| {
+            let next = (ctx.rank + 1) % ctx.n;
+            let prev = (ctx.rank + ctx.n - 1) % ctx.n;
+            ctx.send(next, 0, Payload::from_f32(&[ctx.rank as f32]));
+            ctx.recv(prev, 0).to_f32()[0]
+        });
+        assert_eq!(sums, vec![3.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn agas_shared_across_localities() {
+        let cluster = Cluster::new(3, PortKind::Mpi, None).unwrap();
+        let resolved = cluster.run(|ctx| {
+            ctx.agas.register(
+                &format!("/worker/{}", ctx.rank),
+                GlobalAddress { locality: ctx.rank, component: 7 },
+            );
+            // Resolve a peer's name (blocks until that peer registers).
+            let peer = (ctx.rank + 1) % ctx.n;
+            ctx.agas.resolve(&format!("/worker/{peer}")).locality
+        });
+        assert_eq!(resolved, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn run_works_over_tcp() {
+        let cluster = Cluster::new(3, PortKind::Tcp, None).unwrap();
+        let results = cluster.run(|ctx| {
+            let next = (ctx.rank + 1) % ctx.n;
+            ctx.send(next, 1, Payload::new(vec![ctx.rank as u8; 8]));
+            let prev = (ctx.rank + ctx.n - 1) % ctx.n;
+            ctx.recv(prev, 1).as_bytes()[0] as usize
+        });
+        assert_eq!(results, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn single_locality_cluster() {
+        let cluster = Cluster::new(1, PortKind::Lci, None).unwrap();
+        let r = cluster.run(|ctx| {
+            ctx.send(0, 0, Payload::from_f32(&[1.5]));
+            ctx.recv(0, 0).to_f32()[0]
+        });
+        assert_eq!(r, vec![1.5]);
+    }
+
+    #[test]
+    fn multiple_runs_reuse_fabric() {
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        for round in 0..3u64 {
+            let r = cluster.run(|ctx| {
+                let peer = 1 - ctx.rank;
+                ctx.send(peer, round, Payload::new(vec![round as u8]));
+                ctx.recv(peer, round).as_bytes()[0]
+            });
+            assert_eq!(r, vec![round as u8, round as u8]);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # hpx-fft — HPX communication benchmark reproduction
+//!
+//! Reproduction of *"A HPX Communication Benchmark: Distributed FFT using
+//! Collectives"* (Strack & Pflüger, CS.DC 2025): an HPX-style
+//! asynchronous-many-task substrate with three parcelports (TCP / MPI /
+//! LCI), collective operations, a distributed 2-D FFT built on them, an
+//! FFTW3-MPI+pthreads-style baseline, and a calibrated discrete-event
+//! network simulator that regenerates the paper's figures at cluster
+//! scale. The FFT compute hot path can also run through an AOT-compiled
+//! JAX/Pallas artifact via PJRT (see `python/compile/` and
+//! [`runtime`]).
+//!
+//! See `DESIGN.md` for the full architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod baseline;
+pub mod bench_harness;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod metrics;
+pub mod dist_fft;
+pub mod fft;
+pub mod hpx;
+pub mod parcelport;
+pub mod runtime;
+pub mod simnet;
+pub mod task;
+pub mod util;

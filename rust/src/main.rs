@@ -1,0 +1,318 @@
+//! `repro` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! - `repro info` — cluster spec (paper Fig. 2), parcelport cost table,
+//!   artifact status.
+//! - `repro fft ...` — one distributed FFT run (any port / variant /
+//!   engine), with verification.
+//! - `repro baseline ...` — the FFTW3-MPI+pthreads reference.
+//! - `repro bench chunk-size` — regenerate Fig. 3.
+//! - `repro bench strong-scaling --variant all-to-all|scatter` —
+//!   regenerate Fig. 4 / Fig. 5.
+//! - `repro bench collectives` — all-to-all algorithm ablation.
+//!
+//! Run `repro help` for flags.
+
+use anyhow::{bail, Result};
+use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
+use hpx_fft::bench_harness::{fig3, fig45, runner::measure};
+use hpx_fft::cli::Args;
+use hpx_fft::collectives::{AllToAllAlgo, Communicator};
+use hpx_fft::config::{BenchConfig, ClusterSpec};
+use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
+use hpx_fft::hpx::parcel::Payload;
+use hpx_fft::hpx::runtime::Cluster;
+use hpx_fft::parcelport::{NetModel, PortKind};
+
+const HELP: &str = "\
+repro — HPX communication benchmark reproduction (Strack & Pflüger 2025)
+
+USAGE:
+  repro info
+  repro fft [--rows N] [--cols N] [--nodes N] [--port tcp|mpi|lci]
+            [--variant all-to-all|scatter] [--algo linear|pairwise|bruck|hpx-root]
+            [--threads N] [--engine native|pjrt] [--artifacts DIR]
+            [--net] [--no-verify]
+  repro baseline [--rows N] [--cols N] [--nodes N] [--threads N] [--net]
+  repro bench chunk-size      [--quick] [--reps N] [--out DIR]
+  repro bench strong-scaling  --variant all-to-all|scatter
+                              [--quick] [--reps N] [--grid N] [--out DIR]
+  repro bench collectives     [--nodes N] [--bytes N] [--reps N]
+  repro simulate [--grid N] [--port tcp|mpi|lci]
+                 [--variant all-to-all|scatter|fftw3] [--nodes-list 1,2,4,8,16]
+  repro help
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        None | Some("help") => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some("info") => cmd_info(),
+        Some("fft") => cmd_fft(&args),
+        Some("baseline") => cmd_baseline(&args),
+        Some("bench") => match args.positional.get(1).map(|s| s.as_str()) {
+            Some("chunk-size") => cmd_bench_chunk(&args),
+            Some("strong-scaling") => cmd_bench_scaling(&args),
+            Some("collectives") => cmd_bench_collectives(&args),
+            other => bail!("unknown bench target {other:?}; see `repro help`"),
+        },
+        Some("simulate") => cmd_simulate(&args),
+        Some(other) => bail!("unknown subcommand {other:?}; see `repro help`"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let spec = ClusterSpec::buran();
+    println!("Reproduction target (paper Fig. 2):\n");
+    print!("{}", spec.render());
+
+    println!("\nParcelport cost models (calibrated, DESIGN.md §6):\n");
+    let mut t = hpx_fft::metrics::table::Table::new(&[
+        "port", "sw overhead", "protocol copies", "eager limit", "rdv RTTs",
+    ]);
+    for port in PortKind::ALL {
+        let c = port.cost_model();
+        t.row(&[
+            port.name().into(),
+            format!("{} µs", c.sw_overhead_us),
+            c.protocol_copies.to_string(),
+            if c.eager_threshold == u64::MAX {
+                "∞".into()
+            } else {
+                fig3::human_bytes(c.eager_threshold)
+            },
+            c.rendezvous_rtts.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\nAOT artifacts:");
+    match hpx_fft::runtime::load_manifest("artifacts") {
+        Ok(entries) => {
+            for e in entries {
+                println!("  {:?} {}×{} — {}", e.kind, e.dim0, e.dim1, e.path.display());
+            }
+        }
+        Err(e) => println!("  (none: {e})"),
+    }
+    Ok(())
+}
+
+fn parse_engine(args: &Args) -> Result<ComputeEngine> {
+    match args.get("engine").unwrap_or("native") {
+        "native" => Ok(ComputeEngine::Native),
+        "pjrt" => {
+            Ok(ComputeEngine::Pjrt(args.get("artifacts").unwrap_or("artifacts").to_string()))
+        }
+        other => bail!("unknown engine {other:?} (native|pjrt)"),
+    }
+}
+
+fn cmd_fft(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "rows", "cols", "nodes", "port", "variant", "algo", "threads", "engine", "artifacts",
+        "net", "no-verify",
+    ])?;
+    let config = DistFftConfig {
+        rows: args.get_or("rows", 256usize)?,
+        cols: args.get_or("cols", 256usize)?,
+        localities: args.get_or("nodes", 4usize)?,
+        port: args.get_or("port", PortKind::Lci)?,
+        variant: args.get_or("variant", Variant::Scatter)?,
+        algo: args.get_or("algo", AllToAllAlgo::HpxRoot)?,
+        threads_per_locality: args.get_or("threads", 2usize)?,
+        net: args.get_bool("net").then(NetModel::infiniband_hdr),
+        engine: parse_engine(args)?,
+        verify: !args.get_bool("no-verify"),
+    };
+    let report = driver::run(&config)?;
+    println!("{}", report.config_summary);
+    let cp = report.critical_path;
+    println!(
+        "critical path: total {:.2} ms  (fft1 {:.2} | comm {:.2} | transpose {:.2} | fft2 {:.2})",
+        cp.total_us / 1e3,
+        cp.fft1_us / 1e3,
+        cp.comm_us / 1e3,
+        cp.transpose_us / 1e3,
+        cp.fft2_us / 1e3
+    );
+    println!(
+        "traffic: {} msgs, {} bytes, {} copies, {} rendezvous",
+        report.stats.msgs_sent,
+        report.stats.bytes_sent,
+        report.stats.payload_copies,
+        report.stats.rendezvous_handshakes
+    );
+    match report.rel_error {
+        Some(err) if err < 1e-3 => println!("verification: OK (rel L2 err {err:.2e})"),
+        Some(err) => bail!("verification FAILED: rel L2 err {err:.2e}"),
+        None => println!("verification: skipped"),
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    args.check_known(&["rows", "cols", "nodes", "threads", "net", "no-verify"])?;
+    let config = FftwLikeConfig {
+        rows: args.get_or("rows", 256usize)?,
+        cols: args.get_or("cols", 256usize)?,
+        localities: args.get_or("nodes", 4usize)?,
+        threads: args.get_or("threads", 2usize)?,
+        net: args.get_bool("net").then(NetModel::infiniband_hdr),
+        verify: !args.get_bool("no-verify"),
+    };
+    let report = fftw_like::run(&config)?;
+    let cp = report.critical_path;
+    println!(
+        "fftw3-like baseline: total {:.2} ms  (fft1 {:.2} | comm {:.2} | transpose {:.2} | fft2 {:.2})",
+        cp.total_us / 1e3,
+        cp.fft1_us / 1e3,
+        cp.comm_us / 1e3,
+        cp.transpose_us / 1e3,
+        cp.fft2_us / 1e3
+    );
+    match report.rel_error {
+        Some(err) if err < 1e-3 => println!("verification: OK (rel L2 err {err:.2e})"),
+        Some(err) => bail!("verification FAILED: rel L2 err {err:.2e}"),
+        None => println!("verification: skipped"),
+    }
+    Ok(())
+}
+
+fn bench_config(args: &Args) -> Result<BenchConfig> {
+    let mut cfg = if args.get_bool("quick") { BenchConfig::quick() } else { BenchConfig::default() };
+    cfg.reps = args.get_or("reps", cfg.reps)?;
+    cfg.live_grid = args.get_or("grid", cfg.live_grid)?;
+    cfg.threads = args.get_or("threads", cfg.threads)?;
+    if let Some(out) = args.get("out") {
+        cfg.out_dir = out.to_string();
+    }
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(path)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_bench_chunk(args: &Args) -> Result<()> {
+    args.check_known(&["quick", "reps", "grid", "threads", "out", "config"])?;
+    let cfg = bench_config(args)?;
+    println!("Fig. 3 sweep: {} reps/point, chunk sizes {:?}\n", cfg.reps, cfg.chunk_sizes);
+    let points = fig3::run(&cfg)?;
+    print!("{}", fig3::report(&points, &cfg.out_dir)?);
+    println!("CSV written to {}/fig3_chunk_size.csv", cfg.out_dir);
+    Ok(())
+}
+
+fn cmd_bench_scaling(args: &Args) -> Result<()> {
+    args.check_known(&["variant", "quick", "reps", "grid", "threads", "out", "config"])?;
+    let variant: Variant = args.get_or("variant", Variant::Scatter)?;
+    let cfg = bench_config(args)?;
+    println!(
+        "strong scaling ({}): live {}² on {:?} localities, sim {}² on {:?} nodes, {} reps\n",
+        variant.name(),
+        cfg.live_grid,
+        cfg.live_nodes,
+        cfg.sim_grid,
+        cfg.sim_nodes,
+        cfg.reps
+    );
+    let points = fig45::run(&cfg, variant)?;
+    print!("{}", fig45::report(&points, variant, &cfg, &cfg.out_dir)?);
+    Ok(())
+}
+
+/// Direct access to the cluster-scale DES: per-node-count makespan,
+/// comm-blocked time, and wire volume for one system (the numbers behind
+/// the Figs. 4/5 series, with the breakdown the figures hide).
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use hpx_fft::simnet::fft_model::{predict_fft, FftModelParams, ModelVariant};
+    args.check_known(&["grid", "port", "variant", "nodes-list"])?;
+    let grid: usize = args.get_or("grid", 1usize << 14)?;
+    let port: PortKind = args.get_or("port", PortKind::Lci)?;
+    let variant = match args.get("variant").unwrap_or("scatter") {
+        "scatter" => ModelVariant::Scatter,
+        "all-to-all" | "a2a" => ModelVariant::AllToAll(AllToAllAlgo::HpxRoot),
+        "fftw3" => ModelVariant::FftwBaseline,
+        other => bail!("unknown variant {other:?} (scatter|all-to-all|fftw3)"),
+    };
+    let nodes_list: Vec<usize> = args
+        .get("nodes-list")
+        .unwrap_or("1,2,4,8,16")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|e| anyhow::anyhow!("--nodes-list: {e}")))
+        .collect::<Result<_>>()?;
+
+    let spec = ClusterSpec::buran();
+    println!(
+        "simnet: {grid}×{grid} grid, {port} port, {variant:?}, buran wire+compute model\n"
+    );
+    let mut t = hpx_fft::metrics::table::Table::new(&[
+        "nodes", "makespan", "max blocked (comm)", "wire bytes", "chunk",
+    ]);
+    for nodes in nodes_list {
+        anyhow::ensure!(grid % nodes == 0, "grid {grid} not divisible by {nodes} nodes");
+        let params = FftModelParams {
+            rows: grid,
+            cols: grid,
+            nodes,
+            compute: spec.compute_model(),
+            net: spec.net_model(),
+        };
+        let r = predict_fft(&params, port, variant);
+        let blocked = r.node_blocked_us.iter().copied().fold(0.0, f64::max);
+        t.row(&[
+            nodes.to_string(),
+            format!("{:.1} ms", r.makespan_us / 1e3),
+            format!("{:.1} ms", blocked / 1e3),
+            format!("{}", r.wire_bytes),
+            fig3::human_bytes(params.chunk_bytes()),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// Extra ablation: compare all-to-all algorithms head to head (the
+/// design-choice study DESIGN.md calls out).
+fn cmd_bench_collectives(args: &Args) -> Result<()> {
+    args.check_known(&["nodes", "bytes", "reps", "port"])?;
+    let nodes: usize = args.get_or("nodes", 4usize)?;
+    let bytes: usize = args.get_or("bytes", 256 * 1024usize)?;
+    let reps: usize = args.get_or("reps", 20usize)?;
+    let port: PortKind = args.get_or("port", PortKind::Lci)?;
+    let cluster = Cluster::new(nodes, port, Some(NetModel::infiniband_hdr()))?;
+    println!("all-to-all ablation: {nodes} localities, {} per chunk, {port} port\n", fig3::human_bytes(bytes as u64));
+    let mut t = hpx_fft::metrics::table::Table::new(&["algorithm", "mean", "±95% CI"]);
+    for algo in AllToAllAlgo::ALL {
+        let stats = measure(2, reps, || {
+            let times = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                let chunks: Vec<Payload> =
+                    (0..nodes).map(|_| Payload::new(vec![0u8; bytes])).collect();
+                let t0 = std::time::Instant::now();
+                let _ = comm.all_to_all(chunks, algo);
+                t0.elapsed().as_secs_f64() * 1e6
+            });
+            times.into_iter().fold(0.0, f64::max)
+        });
+        t.row(&[
+            algo.name().into(),
+            format!("{:.1} µs", stats.mean()),
+            format!("{:.1}", stats.ci95()),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

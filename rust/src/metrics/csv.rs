@@ -1,0 +1,51 @@
+//! CSV series output (for external plotting of the regenerated figures).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write one CSV with a header row. Values are written with full f64
+/// precision; strings are escaped only if they contain separators.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|c| escape(c)).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_reads_back() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-csv-{}", std::process::id()));
+        let path = dir.join("out.csv");
+        write_csv(
+            &path,
+            &["x", "y"],
+            &[vec!["1".into(), "2.5".into()], vec!["a,b".into(), "q\"q".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x,y\n1,2.5\n\"a,b\",\"q\"\"q\"\n");
+    }
+}

@@ -1,0 +1,12 @@
+//! Measurement, statistics, and reporting.
+//!
+//! The paper reports runtimes "averaged over 50 runs ... with 95%
+//! confidence bars"; [`stats::RunStats`] implements exactly that
+//! methodology (mean ± t-distribution 95% CI), [`table`] prints
+//! paper-style rows, and [`csv`] dumps series for external plotting.
+
+pub mod csv;
+pub mod stats;
+pub mod table;
+
+pub use stats::RunStats;

@@ -1,0 +1,135 @@
+//! Run statistics with 95% confidence intervals (the paper's error bars).
+
+/// Summary statistics over repeated measurements.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    samples: Vec<f64>,
+}
+
+impl RunStats {
+    pub fn new(samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "need at least one sample");
+        Self { samples }
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.n() as f64
+    }
+
+    /// Sample standard deviation (Bessel-corrected).
+    pub fn stddev(&self) -> f64 {
+        if self.n() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var =
+            self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (self.n() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            (s[n / 2 - 1] + s[n / 2]) / 2.0
+        }
+    }
+
+    /// Half-width of the 95% confidence interval on the mean
+    /// (t·s/√n — the paper's error bars).
+    pub fn ci95(&self) -> f64 {
+        if self.n() < 2 {
+            return 0.0;
+        }
+        t_critical_95(self.n() - 1) * self.stddev() / (self.n() as f64).sqrt()
+    }
+
+    /// `mean ± ci` rendering in a given unit.
+    pub fn display_ms(&self) -> String {
+        format!("{:.3} ± {:.3} ms", self.mean() / 1e3, self.ci95() / 1e3)
+    }
+}
+
+/// Two-sided 95% t critical value for `df` degrees of freedom
+/// (table through 30, 1.96 asymptote beyond — standard practice).
+fn t_critical_95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        f64::INFINITY
+    } else if df <= 30 {
+        TABLE[df - 1]
+    } else {
+        1.96 + 2.4 / df as f64 // smooth approach to the normal quantile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_samples() {
+        let s = RunStats::new(vec![5.0; 50]);
+        assert_eq!(s.mean(), 5.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert_eq!(s.ci95(), 0.0);
+        assert_eq!(s.median(), 5.0);
+    }
+
+    #[test]
+    fn known_values() {
+        let s = RunStats::new(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean(), 3.0);
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        // t(4) = 2.776; ci = 2.776·sqrt(2.5)/sqrt(5)
+        let expect = 2.776 * (2.5f64).sqrt() / (5f64).sqrt();
+        assert!((s.ci95() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_n50_uses_near_normal_t() {
+        let t = t_critical_95(49);
+        assert!(t > 1.96 && t < 2.05, "{t}");
+    }
+
+    #[test]
+    fn median_even() {
+        let s = RunStats::new(vec![4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.median(), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn empty_rejected() {
+        RunStats::new(vec![]);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = RunStats::new((0..10).map(|i| i as f64).collect());
+        let b = RunStats::new((0..100).map(|i| (i % 10) as f64).collect());
+        assert!(b.ci95() < a.ci95());
+    }
+}

@@ -1,0 +1,233 @@
+//! Cost models: per-port software overhead and the cluster wire model.
+//!
+//! Two distinct things are modeled:
+//!
+//! 1. [`CostModel`] — the *software* cost a parcelport adds per message
+//!    (framing, matching, protocol bookkeeping). The constants are
+//!    calibrated so the 2-node chunk-size sweep reproduces the shape of
+//!    the paper's Fig. 3 (TCP ≫ MPI > LCI at small chunks); they are the
+//!    analytic counterpart of the real protocol code the ports execute.
+//! 2. [`NetModel`] — the *wire*: the postal model `T(s) = α + s/β` of one
+//!    InfiniBand HDR link (Fig. 2: 200 Gb/s), charged per message-hop.
+//!
+//! In hybrid live runs the sending thread spins for the modeled time (µs
+//! precision — `thread::sleep` is far too coarse); in simnet the same
+//! formulas advance virtual time instead, so live and simulated runs are
+//! calibrated by construction against the *same* model.
+
+use std::time::{Duration, Instant};
+
+/// Per-port software cost per message (calibrated; DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// Fixed software overhead per message send+recv, µs.
+    pub sw_overhead_us: f64,
+    /// Extra payload memcpys the protocol performs (framing, bounce
+    /// buffers). Charged at [`NetModel::COPY_BANDWIDTH_GBPS`].
+    pub protocol_copies: u32,
+    /// Eager→rendezvous switchover (bytes); `u64::MAX` = never rendezvous.
+    pub eager_threshold: u64,
+    /// Extra round-trips for the rendezvous handshake above the eager
+    /// threshold (RTS + CTS = 1 RTT).
+    pub rendezvous_rtts: u32,
+}
+
+impl CostModel {
+    /// TCP parcelport: serialization into stream frames, kernel
+    /// crossings, ACK clocking. Dominant at small chunk sizes (Fig. 3).
+    pub fn tcp() -> Self {
+        Self {
+            sw_overhead_us: 55.0,
+            protocol_copies: 2,
+            eager_threshold: u64::MAX,
+            rendezvous_rtts: 0,
+        }
+    }
+
+    /// MPI parcelport (OpenMPI-like): tag matching + progression, one
+    /// bounce-buffer copy on the eager path, RTS/CTS rendezvous above
+    /// 64 KiB.
+    pub fn mpi() -> Self {
+        Self {
+            sw_overhead_us: 8.0,
+            protocol_copies: 1,
+            eager_threshold: 64 * 1024,
+            rendezvous_rtts: 1,
+        }
+    }
+
+    /// LCI parcelport: lightweight completion queues, zero-copy medium
+    /// messages, no matching machinery.
+    pub fn lci() -> Self {
+        Self {
+            sw_overhead_us: 2.5,
+            protocol_copies: 0,
+            eager_threshold: u64::MAX,
+            rendezvous_rtts: 0,
+        }
+    }
+
+    /// Software time for a message of `size` bytes, µs (excluding wire).
+    ///
+    /// Protocol copies are charged on the eager path only: the rendezvous
+    /// path transfers directly from registered memory (RDMA), which is
+    /// the point of the handshake. TCP never rendezvous, so its two
+    /// stream copies apply at every size — the reason its runtimes stay
+    /// bad even for large chunks in Fig. 3.
+    pub fn sw_time_us(&self, size: u64) -> f64 {
+        let copies = if self.is_rendezvous(size) { 0 } else { self.protocol_copies };
+        let copy_us = copies as f64 * size as f64 / NetModel::COPY_BANDWIDTH_GBPS / 1e3;
+        self.sw_overhead_us + copy_us
+    }
+
+    /// Whether a message of `size` takes the rendezvous path.
+    pub fn is_rendezvous(&self, size: u64) -> bool {
+        size > self.eager_threshold
+    }
+}
+
+/// The postal wire model of one cluster link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetModel {
+    /// One-way link latency, µs.
+    pub alpha_us: f64,
+    /// Link bandwidth, GB/s.
+    pub beta_gbps: f64,
+    /// Scale factor applied to modeled time when spinning in live mode
+    /// (1.0 = real time; benchmarks use 1.0).
+    pub time_scale: f64,
+}
+
+impl NetModel {
+    /// Memory copy bandwidth used to charge protocol copies, GB/s.
+    /// (Single-core memcpy on the EPYC 7352 era: ~12 GB/s.)
+    pub const COPY_BANDWIDTH_GBPS: f64 = 12.0;
+
+    /// InfiniBand HDR, as specified in the paper's Fig. 2: 200 Gb/s
+    /// links, ~1.5 µs MPI-level latency.
+    pub fn infiniband_hdr() -> Self {
+        Self { alpha_us: 1.5, beta_gbps: 25.0, time_scale: 1.0 }
+    }
+
+    /// Wire time for `size` bytes over one link, µs.
+    pub fn wire_time_us(&self, size: u64) -> f64 {
+        self.alpha_us + size as f64 / self.beta_gbps / 1e3
+    }
+
+    /// Total modeled time for a message: port software + wire (+
+    /// rendezvous RTTs where applicable), µs.
+    pub fn message_time_us(&self, cost: &CostModel, size: u64) -> f64 {
+        let mut t = cost.sw_time_us(size) + self.wire_time_us(size);
+        if cost.is_rendezvous(size) {
+            t += cost.rendezvous_rtts as f64 * 2.0 * self.alpha_us;
+        }
+        t
+    }
+
+    /// Spin the calling thread for the modeled duration (live hybrid
+    /// mode). Spinning, not sleeping: the modeled times are single-digit
+    /// µs and `thread::sleep` has ~50 µs granularity.
+    pub fn charge(&self, cost: &CostModel, size: u64) -> f64 {
+        let us = self.message_time_us(cost, size) * self.time_scale;
+        spin_for(Duration::from_nanos((us * 1e3) as u64));
+        us
+    }
+}
+
+/// Busy-wait for `d` (µs-accurate).
+pub fn spin_for(d: Duration) {
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_ordering_small_messages() {
+        // The calibration invariant behind Fig. 3: at any size,
+        // LCI < MPI < TCP in software cost.
+        for size in [1u64 << 10, 1 << 14, 1 << 20, 1 << 24] {
+            let tcp = CostModel::tcp().sw_time_us(size);
+            let mpi = CostModel::mpi().sw_time_us(size);
+            let lci = CostModel::lci().sw_time_us(size);
+            assert!(lci < mpi && mpi < tcp, "size {size}: lci {lci} mpi {mpi} tcp {tcp}");
+        }
+    }
+
+    #[test]
+    fn tcp_overhead_dominates_small() {
+        // At 1 KiB the TCP/LCI ratio must be large (paper: "big overhead
+        // for small data chunks").
+        let ratio = CostModel::tcp().sw_time_us(1024) / CostModel::lci().sw_time_us(1024);
+        assert!(ratio > 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn wire_time_monotone_in_size() {
+        let net = NetModel::infiniband_hdr();
+        let mut prev = 0.0;
+        for p in 10..25 {
+            let t = net.wire_time_us(1 << p);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn wire_time_closed_form() {
+        let net = NetModel::infiniband_hdr();
+        // 25 GB/s: 1 MiB takes 1048576/25e9 s = 41.94 µs + 1.5 µs latency.
+        let t = net.wire_time_us(1 << 20);
+        assert!((t - (1.5 + 41.94)).abs() < 0.1, "{t}");
+    }
+
+    #[test]
+    fn rendezvous_kicks_in_above_threshold() {
+        let net = NetModel::infiniband_hdr();
+        let mpi = CostModel::mpi();
+        assert!(!mpi.is_rendezvous(64 * 1024));
+        assert!(mpi.is_rendezvous(64 * 1024 + 1));
+        // Crossing the threshold trades the eager copy (~5.5 µs at
+        // 64 KiB) for one handshake RTT (3 µs): rendezvous must be the
+        // cheaper protocol right at the crossover — that is why
+        // implementations switch.
+        let below = net.message_time_us(&mpi, 64 * 1024);
+        let above = net.message_time_us(&mpi, 64 * 1024 + 1);
+        assert!(above < below, "below {below} above {above}");
+        // And the handshake RTT itself is visible: rendezvous time equals
+        // sw overhead + wire + 2α.
+        let size = 1u64 << 20;
+        let t = net.message_time_us(&mpi, size);
+        let expect = mpi.sw_overhead_us + net.wire_time_us(size) + 2.0 * net.alpha_us;
+        assert!((t - expect).abs() < 1e-9, "t {t} expect {expect}");
+    }
+
+    #[test]
+    fn lci_never_rendezvous() {
+        assert!(!CostModel::lci().is_rendezvous(u64::MAX - 1));
+    }
+
+    #[test]
+    fn spin_for_is_roughly_accurate() {
+        let start = Instant::now();
+        spin_for(Duration::from_micros(200));
+        let took = start.elapsed().as_micros();
+        assert!((200..5000).contains(&took), "spun for {took} µs");
+    }
+
+    #[test]
+    fn large_messages_converge_to_bandwidth() {
+        // At 16 MiB the software-overhead difference between MPI and LCI
+        // must be < 15% of total time (bandwidth-bound regime, Fig. 3's
+        // right edge).
+        let net = NetModel::infiniband_hdr();
+        let size = 16 << 20;
+        let mpi = net.message_time_us(&CostModel::mpi(), size);
+        let lci = net.message_time_us(&CostModel::lci(), size);
+        assert!((mpi - lci) / lci < 0.15, "mpi {mpi} lci {lci}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Traffic statistics shared by all parcelports.
+//!
+//! Counters are updated lock-free on the send/recv paths and snapshotted
+//! by the benchmark harness to report copies, handshakes, and volumes per
+//! run (the mechanism behind the "why is TCP slow for small chunks"
+//! analysis in EXPERIMENTS.md).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live counters (one per fabric).
+#[derive(Debug, Default)]
+pub struct PortStats {
+    pub msgs_sent: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    /// Payload memcpys performed by the port itself (framing buffers,
+    /// eager bounce buffers). Zero-copy ports keep this at 0.
+    pub payload_copies: AtomicU64,
+    /// Rendezvous RTS/CTS handshakes completed (MPI port).
+    pub rendezvous_handshakes: AtomicU64,
+    /// Eager-path sends (MPI port).
+    pub eager_sends: AtomicU64,
+    /// Microseconds spent charging the wire model (hybrid mode).
+    pub modeled_wire_us: AtomicU64,
+}
+
+impl PortStats {
+    pub fn record_send(&self, bytes: usize) {
+        self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_copy(&self) {
+        self.payload_copies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PortStatsSnapshot {
+        PortStatsSnapshot {
+            msgs_sent: self.msgs_sent.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            payload_copies: self.payload_copies.load(Ordering::Relaxed),
+            rendezvous_handshakes: self.rendezvous_handshakes.load(Ordering::Relaxed),
+            eager_sends: self.eager_sends.load(Ordering::Relaxed),
+            modeled_wire_us: self.modeled_wire_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PortStatsSnapshot {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub payload_copies: u64,
+    pub rendezvous_handshakes: u64,
+    pub eager_sends: u64,
+    pub modeled_wire_us: u64,
+}
+
+impl PortStatsSnapshot {
+    /// Difference since an earlier snapshot (per-run accounting).
+    pub fn since(&self, earlier: &PortStatsSnapshot) -> PortStatsSnapshot {
+        PortStatsSnapshot {
+            msgs_sent: self.msgs_sent - earlier.msgs_sent,
+            bytes_sent: self.bytes_sent - earlier.bytes_sent,
+            payload_copies: self.payload_copies - earlier.payload_copies,
+            rendezvous_handshakes: self.rendezvous_handshakes - earlier.rendezvous_handshakes,
+            eager_sends: self.eager_sends - earlier.eager_sends,
+            modeled_wire_us: self.modeled_wire_us - earlier.modeled_wire_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let st = PortStats::default();
+        st.record_send(100);
+        st.record_send(50);
+        st.record_copy();
+        let snap = st.snapshot();
+        assert_eq!(snap.msgs_sent, 2);
+        assert_eq!(snap.bytes_sent, 150);
+        assert_eq!(snap.payload_copies, 1);
+    }
+
+    #[test]
+    fn since_subtracts() {
+        let st = PortStats::default();
+        st.record_send(10);
+        let a = st.snapshot();
+        st.record_send(20);
+        st.record_send(30);
+        let b = st.snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.msgs_sent, 2);
+        assert_eq!(d.bytes_sent, 50);
+    }
+}

@@ -1,0 +1,153 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+//!
+//! `artifacts/manifest.txt` is a whitespace-separated table written by
+//! the AOT step (one line per artifact: `kind batch len file`). Parsing
+//! it here — instead of globbing filenames — keeps the naming scheme in
+//! exactly one place on each side of the language boundary.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact entry-point kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `fft_rows_model(batch, len)` — row-wise FFT.
+    FftRows,
+    /// `fft2_transposed_model(rows, cols)` — full 2-D pipeline.
+    Fft2Transposed,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fft_rows" => Ok(ArtifactKind::FftRows),
+            "fft2_t" => Ok(ArtifactKind::Fft2Transposed),
+            other => bail!("unknown artifact kind {other:?} in manifest"),
+        }
+    }
+}
+
+/// One compiled-shape artifact.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub kind: ArtifactKind,
+    /// First shape dim (batch for FftRows, rows for Fft2Transposed).
+    pub dim0: usize,
+    /// Second shape dim (row length / cols).
+    pub dim1: usize,
+    pub path: PathBuf,
+}
+
+/// Parse `<dir>/manifest.txt`.
+pub fn load_manifest(dir: impl AsRef<Path>) -> Result<Vec<ManifestEntry>> {
+    let dir = dir.as_ref();
+    let manifest_path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+        format!("reading {} — run `make artifacts` first", manifest_path.display())
+    })?;
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 4 {
+            bail!("manifest line {} malformed: {line:?}", lineno + 1);
+        }
+        let entry = ManifestEntry {
+            kind: ArtifactKind::parse(fields[0])?,
+            dim0: fields[1].parse().context("bad dim0")?,
+            dim1: fields[2].parse().context("bad dim1")?,
+            path: dir.join(fields[3]),
+        };
+        if !entry.path.exists() {
+            bail!("manifest references missing artifact {}", entry.path.display());
+        }
+        entries.push(entry);
+    }
+    if entries.is_empty() {
+        bail!("manifest {} lists no artifacts", manifest_path.display());
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str, files: &[&str]) {
+        for f in files {
+            std::fs::File::create(dir.join(f)).unwrap();
+        }
+        let mut m = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        m.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hpxfft-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            "# comment\nfft_rows 64 256 a.hlo.txt\nfft2_t 16 32 b.hlo.txt\n",
+            &["a.hlo.txt", "b.hlo.txt"],
+        );
+        let entries = load_manifest(&d).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].kind, ArtifactKind::FftRows);
+        assert_eq!((entries[0].dim0, entries[0].dim1), (64, 256));
+        assert_eq!(entries[1].kind, ArtifactKind::Fft2Transposed);
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let d = tmpdir("missing");
+        write_manifest(&d, "fft_rows 64 256 ghost.hlo.txt\n", &[]);
+        assert!(load_manifest(&d).is_err());
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let d = tmpdir("malformed");
+        write_manifest(&d, "fft_rows 64\n", &[]);
+        assert!(load_manifest(&d).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let d = tmpdir("kind");
+        write_manifest(&d, "conv2d 3 3 a.hlo.txt\n", &["a.hlo.txt"]);
+        assert!(load_manifest(&d).is_err());
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        let d = tmpdir("empty");
+        write_manifest(&d, "# nothing\n", &[]);
+        assert!(load_manifest(&d).is_err());
+    }
+
+    #[test]
+    fn absent_dir_has_helpful_error() {
+        let err = load_manifest("/nonexistent/dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_present() {
+        // Gated: only meaningful after `make artifacts`.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let entries = load_manifest(&dir).unwrap();
+            assert!(entries.iter().any(|e| e.kind == ArtifactKind::FftRows));
+        }
+    }
+}

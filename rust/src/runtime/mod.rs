@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs once at build time (`make artifacts`); this module makes
+//! the resulting HLO-text artifacts executable from the Rust request path
+//! with no Python anywhere near it:
+//!
+//! - [`artifact`] — parses `artifacts/manifest.txt` and owns the naming
+//!   scheme,
+//! - [`service`] — a dedicated compute thread that owns the (non-`Send`)
+//!   `PjRtClient` and the compiled executables, fed by a channel; plus
+//!   [`service::PjrtRowFft`], the [`crate::dist_fft::driver::RowFft`]
+//!   engine that lets the distributed driver run its step-1/step-4 row
+//!   FFTs through the artifact instead of the native kernel.
+
+pub mod artifact;
+pub mod service;
+
+pub use artifact::{load_manifest, ArtifactKind, ManifestEntry};
+pub use service::{ComputeService, PjrtRowFft};

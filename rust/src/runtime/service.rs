@@ -1,0 +1,381 @@
+//! The compute service: a dedicated thread owning the PJRT client.
+//!
+//! `xla::PjRtClient` and its executables hold raw C pointers and are not
+//! `Send`; localities, by contrast, are OS threads. The service therefore
+//! runs the PJRT stack on one dedicated thread and exposes a channel API:
+//! localities ship (re, im) planes in, the service executes the matching
+//! compiled artifact, planes come back. The CPU PJRT client parallelizes
+//! internally (Eigen thread pool), so a single submission lane does not
+//! serialize the math — it serializes only dispatch, which `benches/
+//! hotpath.rs` shows is ~µs against ~ms executions.
+//!
+//! Services are memoized per artifact directory ([`ComputeService::shared`])
+//! so repeated driver runs reuse compiled executables ("compile once,
+//! execute many" — the PJRT analog of FFTW plan reuse).
+
+use super::artifact::{load_manifest, ArtifactKind};
+use crate::dist_fft::driver::RowFft;
+use crate::fft::complex::Complex32;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+type Planes = (Vec<f32>, Vec<f32>);
+
+enum Request {
+    /// Execute an artifact of `kind` with shape (dim0, dim1).
+    Execute {
+        kind: ArtifactKind,
+        dim0: usize,
+        dim1: usize,
+        re: Vec<f32>,
+        im: Vec<f32>,
+        reply: SyncSender<Result<Planes>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the compute thread. Cheap to clone via `Arc`.
+pub struct ComputeService {
+    tx: Mutex<Sender<Request>>,
+    /// Shapes available per kind (from the manifest).
+    shapes: Vec<(ArtifactKind, usize, usize)>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ComputeService {
+    /// Start a service for `dir`, compiling every artifact in its
+    /// manifest. Fails fast (before returning) if anything cannot be
+    /// loaded or compiled.
+    pub fn start(dir: impl AsRef<std::path::Path>) -> Result<Arc<Self>> {
+        let entries = load_manifest(&dir)?;
+        let shapes: Vec<_> = entries.iter().map(|e| (e.kind, e.dim0, e.dim1)).collect();
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<Result<()>>(1);
+
+        let handle = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || service_thread(entries, rx, ready_tx))
+            .context("spawn pjrt compute thread")?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("compute thread died during startup"))?
+            .context("compiling artifacts")?;
+
+        Ok(Arc::new(Self {
+            tx: Mutex::new(tx),
+            shapes,
+            handle: Mutex::new(Some(handle)),
+        }))
+    }
+
+    /// Memoized service per artifact directory.
+    pub fn shared(dir: &str) -> Result<Arc<Self>> {
+        static CACHE: OnceLock<Mutex<HashMap<String, Arc<ComputeService>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut cache = cache.lock().unwrap();
+        if let Some(svc) = cache.get(dir) {
+            return Ok(Arc::clone(svc));
+        }
+        let svc = Self::start(dir)?;
+        cache.insert(dir.to_string(), Arc::clone(&svc));
+        Ok(svc)
+    }
+
+    /// Shapes available for `kind`, as (dim0, dim1) pairs.
+    pub fn shapes(&self, kind: ArtifactKind) -> Vec<(usize, usize)> {
+        self.shapes
+            .iter()
+            .filter(|(k, _, _)| *k == kind)
+            .map(|&(_, a, b)| (a, b))
+            .collect()
+    }
+
+    fn execute(
+        &self,
+        kind: ArtifactKind,
+        dim0: usize,
+        dim1: usize,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> Result<Planes> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Execute { kind, dim0, dim1, re, im, reply: reply_tx })
+            .map_err(|_| anyhow!("compute thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+    }
+
+    /// Row-wise FFT through the `fft_rows` artifact of exactly this shape.
+    pub fn fft_rows(&self, batch: usize, len: usize, re: Vec<f32>, im: Vec<f32>) -> Result<Planes> {
+        self.execute(ArtifactKind::FftRows, batch, len, re, im)
+    }
+
+    /// Full 2-D transposed FFT through the `fft2_t` artifact.
+    pub fn fft2_transposed(
+        &self,
+        rows: usize,
+        cols: usize,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> Result<Planes> {
+        self.execute(ArtifactKind::Fft2Transposed, rows, cols, re, im)
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The thread that owns the PJRT stack.
+fn service_thread(
+    entries: Vec<super::artifact::ManifestEntry>,
+    rx: Receiver<Request>,
+    ready: SyncSender<Result<()>>,
+) {
+    // Build client + compile everything; report startup outcome.
+    let setup = (|| -> Result<_> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for entry in &entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", entry.path.display()))?;
+            exes.insert((entry.kind, entry.dim0, entry.dim1), exe);
+        }
+        Ok((client, exes))
+    })();
+
+    let (_client, exes) = match setup {
+        Ok(ok) => {
+            let _ = ready.send(Ok(()));
+            ok
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => return,
+            Request::Execute { kind, dim0, dim1, re, im, reply } => {
+                let result = run_one(&exes, kind, dim0, dim1, &re, &im);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(
+    exes: &HashMap<(ArtifactKind, usize, usize), xla::PjRtLoadedExecutable>,
+    kind: ArtifactKind,
+    dim0: usize,
+    dim1: usize,
+    re: &[f32],
+    im: &[f32],
+) -> Result<Planes> {
+    let exe = exes.get(&(kind, dim0, dim1)).ok_or_else(|| {
+        anyhow!(
+            "no artifact for {kind:?} {dim0}×{dim1}; available shapes: {:?} — \
+             re-run `make artifacts` with matching --rows-shapes",
+            exes.keys().collect::<Vec<_>>()
+        )
+    })?;
+    if re.len() != dim0 * dim1 || im.len() != dim0 * dim1 {
+        bail!("plane length {} != {dim0}×{dim1}", re.len());
+    }
+    let lit_re = xla::Literal::vec1(re)
+        .reshape(&[dim0 as i64, dim1 as i64])
+        .map_err(|e| anyhow!("reshape re: {e:?}"))?;
+    let lit_im = xla::Literal::vec1(im)
+        .reshape(&[dim0 as i64, dim1 as i64])
+        .map_err(|e| anyhow!("reshape im: {e:?}"))?;
+    let result = exe
+        .execute::<xla::Literal>(&[lit_re, lit_im])
+        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+    // AOT lowers with return_tuple=True → a 2-tuple of planes.
+    let (out_re, out_im) = result.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+    Ok((
+        out_re.to_vec::<f32>().map_err(|e| anyhow!("re to_vec: {e:?}"))?,
+        out_im.to_vec::<f32>().map_err(|e| anyhow!("im to_vec: {e:?}"))?,
+    ))
+}
+
+/// [`RowFft`] engine backed by the artifact service: the distributed
+/// driver's step-1/step-4 kernels run through PJRT.
+pub struct PjrtRowFft {
+    service: Arc<ComputeService>,
+}
+
+impl PjrtRowFft {
+    pub fn new(dir: &str) -> Result<Self> {
+        Ok(Self { service: ComputeService::shared(dir)? })
+    }
+
+    /// Pick the largest available batch for `row_len` that divides `rows`.
+    fn pick_batch(&self, rows: usize, row_len: usize) -> Option<usize> {
+        self.service
+            .shapes(ArtifactKind::FftRows)
+            .into_iter()
+            .filter(|&(b, l)| l == row_len && rows % b == 0)
+            .map(|(b, _)| b)
+            .max()
+    }
+}
+
+impl RowFft for PjrtRowFft {
+    fn fft_rows(&self, data: &mut [Complex32], row_len: usize, _nthreads: usize) {
+        let rows = data.len() / row_len;
+        if rows == 0 {
+            return;
+        }
+        let batch = self.pick_batch(rows, row_len).unwrap_or_else(|| {
+            panic!(
+                "no fft_rows artifact for row_len {row_len} dividing {rows} rows; \
+                 available: {:?} — re-run `make artifacts` with --rows-shapes \
+                 including {rows}x{row_len}",
+                self.service.shapes(ArtifactKind::FftRows)
+            )
+        });
+        for group in data.chunks_mut(batch * row_len) {
+            let (re, im) = crate::fft::complex::to_planes(group);
+            let (out_re, out_im) = self
+                .service
+                .fft_rows(batch, row_len, re, im)
+                .expect("pjrt fft_rows execution failed");
+            for (c, (r, i)) in group.iter_mut().zip(out_re.iter().zip(&out_im)) {
+                *c = Complex32::new(*r, *i);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Gated on `artifacts/manifest.txt` (built by `make artifacts`);
+    //! every test no-ops with a note when artifacts are absent so
+    //! `cargo test` stays green on a fresh checkout.
+
+    use super::*;
+    use crate::dist_fft::driver::NativeRowFft;
+    use crate::util::rng::Pcg32;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            Some(dir.to_str().unwrap().to_string())
+        } else {
+            eprintln!("skipping pjrt test: run `make artifacts` first");
+            None
+        }
+    }
+
+    fn random_planes(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        ((0..n).map(|_| rng.next_signal()).collect(), (0..n).map(|_| rng.next_signal()).collect())
+    }
+
+    #[test]
+    fn fft_rows_matches_native() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = ComputeService::shared(&dir).unwrap();
+        let (batch, len) = (64, 256);
+        let (re, im) = random_planes(1, batch * len);
+        let (out_re, out_im) = svc.fft_rows(batch, len, re.clone(), im.clone()).unwrap();
+
+        // Native reference on the same data.
+        let mut native = crate::fft::complex::from_planes(&re, &im);
+        NativeRowFft.fft_rows(&mut native, len, 1);
+        let (want_re, want_im) = crate::fft::complex::to_planes(&native);
+
+        let err_re = crate::util::testkit::rel_l2_error(&out_re, &want_re);
+        let err_im = crate::util::testkit::rel_l2_error(&out_im, &want_im);
+        assert!(err_re < 1e-4 && err_im < 1e-4, "rel err {err_re} / {err_im}");
+    }
+
+    #[test]
+    fn pjrt_row_fft_engine_matches_native() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = PjrtRowFft::new(&dir).unwrap();
+        let (re, im) = random_planes(2, 64 * 256);
+        let mut via_pjrt = crate::fft::complex::from_planes(&re, &im);
+        engine.fft_rows(&mut via_pjrt, 256, 1);
+
+        let mut via_native = crate::fft::complex::from_planes(&re, &im);
+        NativeRowFft.fft_rows(&mut via_native, 256, 1);
+
+        let (pr, pi) = crate::fft::complex::to_planes(&via_pjrt);
+        let (nr, ni) = crate::fft::complex::to_planes(&via_native);
+        assert!(crate::util::testkit::rel_l2_error(&pr, &nr) < 1e-4);
+        assert!(crate::util::testkit::rel_l2_error(&pi, &ni) < 1e-4);
+    }
+
+    #[test]
+    fn engine_batches_multiple_groups() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = PjrtRowFft::new(&dir).unwrap();
+        // 256 rows with only a 64/128/256-batch artifact → must still work
+        // (pick_batch finds a divisor) and match native.
+        let (re, im) = random_planes(3, 256 * 256);
+        let mut via_pjrt = crate::fft::complex::from_planes(&re, &im);
+        engine.fft_rows(&mut via_pjrt, 256, 1);
+        let mut via_native = crate::fft::complex::from_planes(&re, &im);
+        NativeRowFft.fft_rows(&mut via_native, 256, 1);
+        let (pr, _) = crate::fft::complex::to_planes(&via_pjrt);
+        let (nr, _) = crate::fft::complex::to_planes(&via_native);
+        assert!(crate::util::testkit::rel_l2_error(&pr, &nr) < 1e-4);
+    }
+
+    #[test]
+    fn missing_shape_is_reported() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = ComputeService::shared(&dir).unwrap();
+        let err = svc.fft_rows(3, 7, vec![0.0; 21], vec![0.0; 21]).unwrap_err().to_string();
+        assert!(err.contains("no artifact"), "{err}");
+    }
+
+    #[test]
+    fn fft2_artifact_matches_serial() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = ComputeService::shared(&dir).unwrap();
+        let (rows, cols) = (256, 256);
+        let (re, im) = random_planes(4, rows * cols);
+        let (out_re, out_im) = svc.fft2_transposed(rows, cols, re.clone(), im.clone()).unwrap();
+
+        let grid = crate::fft::complex::from_planes(&re, &im);
+        let want = crate::dist_fft::verify::serial_fft2_transposed(&grid, rows, cols);
+        let got = crate::fft::complex::from_planes(&out_re, &out_im);
+        let err = crate::dist_fft::verify::rel_error(&got, &want);
+        assert!(err < 1e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn shared_service_is_memoized() {
+        let Some(dir) = artifacts_dir() else { return };
+        let a = ComputeService::shared(&dir).unwrap();
+        let b = ComputeService::shared(&dir).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

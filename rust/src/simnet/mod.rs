@@ -1,0 +1,34 @@
+//! Deterministic network simulator — the 16-node InfiniBand cluster we
+//! do not have.
+//!
+//! The paper's Figs. 3–5 were measured on "buran": 16 nodes, InfiniBand
+//! HDR 200 Gb/s, dual EPYC 7352. This module predicts those figures with
+//! a discrete-event simulation that executes the *same communication
+//! schedules* the live code runs, against the *same cost model* the live
+//! hybrid mode charges ([`crate::parcelport::cost`]):
+//!
+//! - every locality runs a sequential schedule of [`sim::Action`]s
+//!   (compute / send / recv) — straight-line SPMD, exactly mirroring the
+//!   live drivers;
+//! - a message occupies the sender egress and receiver ingress NIC for
+//!   `size/β` (store-and-forward postal model — this is what penalizes
+//!   the HPX-root collective's incast), plus link latency α, plus the
+//!   port's software overhead split across the two endpoints, plus the
+//!   rendezvous RTT where the port's protocol says so;
+//! - compute durations come from a [`ComputeModel`] calibrated against
+//!   the native kernel's measured throughput (scaled to the paper's
+//!   24-core nodes in `config`).
+//!
+//! Calibration discipline (DESIGN.md §6): constants are fitted on the
+//! Fig. 3 chunk-size sweep only; Figs. 4–5 are then *predictions*.
+//!
+//! [`fft_model`] builds the schedules for both FFT variants, every
+//! parcelport, and the FFTW3-like baseline.
+
+pub mod compute;
+pub mod fft_model;
+pub mod sim;
+
+pub use compute::ComputeModel;
+pub use fft_model::{predict_fft, FftModelParams};
+pub use sim::{Action, Schedule, SimNet, SimReport};

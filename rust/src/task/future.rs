@@ -1,0 +1,223 @@
+//! One-shot promise/future cells with continuations.
+//!
+//! Mirrors `hpx::promise` / `hpx::future`: a producer fulfils the
+//! [`Promise`] exactly once; any number of consumers block on
+//! [`TaskFuture::get`] (single value: first getter takes it, a cloned
+//! future shares the same cell) or attach a continuation with
+//! [`TaskFuture::then_inline`]. Continuations run inline on the fulfilling
+//! thread — the same semantics as HPX's `hpx::launch::sync` continuation
+//! policy, which is what the FFT scatter variant relies on to transpose a
+//! chunk "as soon as it is received".
+
+use std::sync::{Arc, Condvar, Mutex};
+
+type Continuation<T> = Box<dyn FnOnce(&T) + Send>;
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+struct State<T> {
+    value: Option<T>,
+    fulfilled: bool,
+    continuations: Vec<Continuation<T>>,
+}
+
+/// Write side of the cell. Fulfil with [`Promise::set`].
+pub struct Promise<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Read side of the cell. Cheap to clone; all clones observe the same value.
+pub struct TaskFuture<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for TaskFuture<T> {
+    fn clone(&self) -> Self {
+        Self { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T: Send + 'static> Promise<T> {
+    pub fn new() -> (Promise<T>, TaskFuture<T>) {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { value: None, fulfilled: false, continuations: Vec::new() }),
+            cv: Condvar::new(),
+        });
+        (Promise { shared: Arc::clone(&shared) }, TaskFuture { shared })
+    }
+
+    /// Fulfil the promise. Runs queued continuations inline, then wakes
+    /// blocked getters.
+    ///
+    /// # Panics
+    /// If the promise was already fulfilled (double-set is a logic error).
+    pub fn set(self, value: T) {
+        let continuations = {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(!st.fulfilled, "promise fulfilled twice");
+            st.fulfilled = true;
+            st.value = Some(value);
+            std::mem::take(&mut st.continuations)
+        };
+        if !continuations.is_empty() {
+            let st = self.shared.state.lock().unwrap();
+            let value_ref = st.value.as_ref().expect("value just set");
+            for k in continuations {
+                k(value_ref);
+            }
+        }
+        self.shared.cv.notify_all();
+    }
+}
+
+impl<T: Send + 'static> TaskFuture<T> {
+    /// Construct an already-fulfilled future (HPX `make_ready_future`).
+    pub fn ready(value: T) -> Self {
+        let (p, f) = Promise::new();
+        p.set(value);
+        f
+    }
+
+    /// Block until fulfilled and take the value.
+    ///
+    /// # Panics
+    /// If the value was already taken by another `get` on a clone.
+    pub fn get(self) -> T {
+        let mut st = self.shared.state.lock().unwrap();
+        while !st.fulfilled {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        st.value.take().expect("future value already taken")
+    }
+
+    /// Block until fulfilled; do not consume the value.
+    pub fn wait(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while !st.fulfilled {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.shared.state.lock().unwrap().fulfilled
+    }
+
+    /// Attach a continuation that runs with a reference to the value, on
+    /// the fulfilling thread (or inline right now if already fulfilled).
+    pub fn then_inline(&self, k: impl FnOnce(&T) + Send + 'static) {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.fulfilled {
+            let value_ref = st.value.as_ref().expect("fulfilled future lost its value");
+            k(value_ref);
+        } else {
+            st.continuations.push(Box::new(k));
+        }
+    }
+}
+
+impl<T: Clone + Send + 'static> TaskFuture<T> {
+    /// Block until fulfilled and clone the value (shared futures).
+    pub fn get_cloned(&self) -> T {
+        let mut st = self.shared.state.lock().unwrap();
+        while !st.fulfilled {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        st.value.as_ref().expect("fulfilled future lost its value").clone()
+    }
+}
+
+/// Wait for all futures, collecting values in order (HPX `when_all`).
+pub fn when_all<T: Send + 'static>(futures: Vec<TaskFuture<T>>) -> Vec<T> {
+    futures.into_iter().map(|f| f.get()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn set_then_get() {
+        let (p, f) = Promise::new();
+        p.set(42);
+        assert_eq!(f.get(), 42);
+    }
+
+    #[test]
+    fn get_blocks_until_set() {
+        let (p, f) = Promise::new();
+        let h = thread::spawn(move || f.get());
+        thread::sleep(Duration::from_millis(20));
+        p.set("done");
+        assert_eq!(h.join().unwrap(), "done");
+    }
+
+    #[test]
+    fn ready_future_is_ready() {
+        let f = TaskFuture::ready(7u32);
+        assert!(f.is_ready());
+        assert_eq!(f.get(), 7);
+    }
+
+    #[test]
+    fn continuation_runs_on_set() {
+        let (p, f) = Promise::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        f.then_inline(move |&v: &usize| {
+            assert_eq!(v, 5);
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+        p.set(5);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn continuation_after_set_runs_immediately() {
+        let f = TaskFuture::ready(1u8);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        f.then_inline(move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn when_all_preserves_order() {
+        let pairs: Vec<_> = (0..8).map(|_| Promise::<usize>::new()).collect();
+        let (promises, futures): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
+        // Fulfil in reverse order on another thread.
+        let h = thread::spawn(move || {
+            for (i, p) in promises.into_iter().enumerate().rev() {
+                p.set(i * 10);
+            }
+        });
+        let vals = when_all(futures);
+        h.join().unwrap();
+        assert_eq!(vals, (0..8).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn get_cloned_shares() {
+        let (p, f) = Promise::new();
+        let f2 = f.clone();
+        p.set(vec![1, 2, 3]);
+        assert_eq!(f.get_cloned(), vec![1, 2, 3]);
+        assert_eq!(f2.get_cloned(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn wait_does_not_consume() {
+        let (p, f) = Promise::new();
+        p.set(9);
+        f.wait();
+        assert_eq!(f.get(), 9);
+    }
+}

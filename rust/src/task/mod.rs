@@ -1,0 +1,17 @@
+//! Futurized task runtime — the HPX-analog asynchronous many-task substrate.
+//!
+//! HPX parallelizes with lightweight tasks returning futures; this module
+//! provides the same model on OS threads: a [`ThreadPool`] executor,
+//! [`Promise`]/[`TaskFuture`] one-shot synchronization cells with
+//! continuation support, combinators ([`when_all`]), and data-parallel
+//! helpers ([`parallel_for`], [`parallel_chunks_mut`]) that stand in for
+//! `hpx::for_each(par, ...)` (and for `rayon`, which is unavailable in
+//! this offline build).
+
+mod future;
+mod pool;
+mod scope;
+
+pub use future::{when_all, Promise, TaskFuture};
+pub use pool::ThreadPool;
+pub use scope::{parallel_chunks_mut, parallel_for};

@@ -1,0 +1,188 @@
+//! Fixed-size worker pool executing boxed tasks from a shared queue.
+//!
+//! This is the executor under the futurized-task model: `spawn` hands a
+//! closure to the pool and returns a [`TaskFuture`] for its result. The
+//! pool is deliberately simple (single injector queue + condvar) — at the
+//! message/chunk granularity of the FFT benchmark the queue is never the
+//! bottleneck (verified in `benches/hotpath.rs`).
+
+use super::future::{Promise, TaskFuture};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    pending: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (≥ 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("hpx-worker-{i}"))
+                    .spawn(move || worker_loop(&q))
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        Self { queue, workers, size }
+    }
+
+    /// Pool sized to the available parallelism (HPX default: one worker
+    /// per core).
+    pub fn with_default_parallelism() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a task; returns a future for its result.
+    pub fn spawn<T: Send + 'static>(
+        &self,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> TaskFuture<T> {
+        let (promise, future) = Promise::new();
+        let job: Job = Box::new(move || promise.set(f()));
+        {
+            let mut st = self.queue.jobs.lock().unwrap();
+            assert!(!st.shutdown, "spawn on shut-down pool");
+            st.pending.push_back(job);
+        }
+        self.queue.cv.notify_one();
+        future
+    }
+
+    /// Submit a batch and wait for all results, in order.
+    pub fn map<T: Send + 'static, I>(
+        &self,
+        inputs: Vec<I>,
+        f: impl Fn(I) -> T + Send + Sync + 'static,
+    ) -> Vec<T>
+    where
+        I: Send + 'static,
+    {
+        let f = Arc::new(f);
+        let futures: Vec<_> = inputs
+            .into_iter()
+            .map(|input| {
+                let f = Arc::clone(&f);
+                self.spawn(move || f(input))
+            })
+            .collect();
+        super::future::when_all(futures)
+    }
+}
+
+fn worker_loop(queue: &Queue) {
+    loop {
+        let job = {
+            let mut st = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = st.pending.pop_front() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = queue.cv.wait(st).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.queue.jobs.lock().unwrap().shutdown = true;
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn spawn_returns_result() {
+        let pool = ThreadPool::new(2);
+        let f = pool.spawn(|| 2 + 2);
+        assert_eq!(f.get(), 4);
+    }
+
+    #[test]
+    fn many_tasks_all_run() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let futures: Vec<_> = (0..200)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for f in futures {
+            f.get();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect(), |i: usize| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let f = pool.spawn(|| 1);
+        drop(pool); // must not hang
+        assert_eq!(f.get(), 1);
+    }
+
+    #[test]
+    fn pool_size_min_one() {
+        assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn nested_spawn_does_not_deadlock() {
+        // A task spawning another task and waiting on it must complete as
+        // long as the pool has ≥ 2 workers.
+        let pool = Arc::new(ThreadPool::new(2));
+        let p2 = Arc::clone(&pool);
+        let f = pool.spawn(move || p2.spawn(|| 21).get() * 2);
+        assert_eq!(f.get(), 42);
+    }
+}

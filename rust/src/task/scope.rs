@@ -1,0 +1,132 @@
+//! Structured data parallelism over slices (the `rayon` stand-in).
+//!
+//! Built on `std::thread::scope`, so closures may borrow from the caller's
+//! stack — which is exactly what the batched row-FFT needs: mutate a large
+//! buffer in place from `nthreads` workers without `Arc`-wrapping it.
+
+/// Run `f(i)` for every `i in 0..n` across `nthreads` OS threads.
+///
+/// Work is split into contiguous index blocks (good locality for row
+/// loops). `nthreads == 1` or `n <= 1` degrades to a plain loop with zero
+/// spawn overhead.
+pub fn parallel_for(n: usize, nthreads: usize, f: impl Fn(usize) + Sync) {
+    let nthreads = nthreads.max(1).min(n.max(1));
+    if nthreads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let per = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for t in 0..nthreads {
+            let lo = t * per;
+            let hi = ((t + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Split `data` into `chunk`-sized mutable pieces and process them in
+/// parallel; `f` receives the chunk index and the chunk.
+pub fn parallel_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk: usize,
+    nthreads: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk > 0, "chunk size must be positive");
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let nthreads = nthreads.max(1).min(chunks.len().max(1));
+    if nthreads <= 1 {
+        for (i, c) in chunks {
+            f(i, c);
+        }
+        return;
+    }
+    // Round-robin chunks over threads to balance ragged tails.
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..nthreads).map(|_| Vec::new()).collect();
+    for (k, item) in chunks.into_iter().enumerate() {
+        buckets[k % nthreads].push(item);
+    }
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in bucket {
+                    f(i, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(100, 4, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread() {
+        let sum = AtomicUsize::new(0);
+        parallel_for(10, 1, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn parallel_for_zero_items() {
+        parallel_for(0, 4, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_for_more_threads_than_items() {
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(3, 16, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn chunks_mut_writes_all() {
+        let mut data = vec![0usize; 103]; // ragged tail
+        parallel_chunks_mut(&mut data, 10, 4, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[102], 11); // 11th chunk (index 10)
+    }
+
+    #[test]
+    fn chunks_mut_exact_division() {
+        let mut data = vec![1.0f32; 64];
+        parallel_chunks_mut(&mut data, 16, 2, |_, chunk| {
+            for x in chunk.iter_mut() {
+                *x *= 2.0;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 2.0));
+    }
+}

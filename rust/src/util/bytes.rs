@@ -1,0 +1,90 @@
+//! Byte-level conversions between typed FFT payloads and wire buffers.
+//!
+//! All parcel payloads travel as little-endian byte buffers; these helpers
+//! are the (single, counted) serialization copy on the send side and the
+//! matching parse on the receive side.
+
+/// Serialize an `f32` slice to little-endian bytes.
+pub fn f32_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a little-endian byte buffer into `f32`s.
+///
+/// # Panics
+/// If the buffer length is not a multiple of 4.
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 4 == 0, "byte buffer length {} not a multiple of 4", bytes.len());
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Append a `u64` little-endian.
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read a `u64` little-endian at `off`, advancing it.
+pub fn get_u64(buf: &[u8], off: &mut usize) -> u64 {
+    let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().expect("short buffer"));
+    *off += 8;
+    v
+}
+
+/// Append a `u32` little-endian.
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read a `u32` little-endian at `off`, advancing it.
+pub fn get_u32(buf: &[u8], off: &mut usize) -> u32 {
+    let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().expect("short buffer"));
+    *off += 4;
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25, f32::MIN_POSITIVE, 1e30, -0.0];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn f32_roundtrip_preserves_nan_bits() {
+        let xs = vec![f32::NAN];
+        let back = bytes_to_f32(&f32_to_bytes(&xs));
+        assert!(back[0].is_nan());
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        assert!(bytes_to_f32(&f32_to_bytes(&[])).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn ragged_buffer_panics() {
+        bytes_to_f32(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn u64_u32_roundtrip() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 0xDEAD_BEEF_CAFE_F00D);
+        put_u32(&mut buf, 0x1234_5678);
+        let mut off = 0;
+        assert_eq!(get_u64(&buf, &mut off), 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(get_u32(&buf, &mut off), 0x1234_5678);
+        assert_eq!(off, buf.len());
+    }
+}

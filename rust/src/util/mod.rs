@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic RNG, byte conversion,
+//! and a micro property-testing kit.
+//!
+//! The build environment is offline, so instead of `rand`/`proptest` we
+//! carry our own seeded generators and a tiny property-test driver. All
+//! randomized tests in this repo go through [`testkit`] with a fixed seed,
+//! making every test run reproducible.
+
+pub mod bytes;
+pub mod rng;
+pub mod testkit;
+
+pub use bytes::{bytes_to_f32, f32_to_bytes};
+pub use rng::{Pcg32, SplitMix64};

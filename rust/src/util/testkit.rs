@@ -1,0 +1,104 @@
+//! Micro property-testing kit (offline stand-in for `proptest`).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it reports the case index and a
+//! debug rendering of the failing input so the run can be replayed with
+//! the same fixed seed. Shrinking is deliberately out of scope — inputs
+//! here are small enough to eyeball.
+
+use super::rng::Pcg32;
+use std::fmt::Debug;
+
+/// Run `prop` over `cases` inputs drawn by `gen` from a seeded RNG.
+///
+/// # Panics
+/// Propagates the property's panic, prefixed with the failing case.
+pub fn check<T: Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T),
+) {
+    let mut rng = Pcg32::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&input)));
+        if let Err(err) = result {
+            eprintln!("testkit: property failed at case {case}/{cases}, seed {seed}");
+            eprintln!("testkit: input = {input:#?}");
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+#[track_caller]
+pub fn assert_close(actual: &[f32], expected: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(actual.len(), expected.len(), "length mismatch");
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let tol = atol + rtol * e.abs();
+        assert!(
+            (a - e).abs() <= tol,
+            "element {i}: actual {a} vs expected {e} (|diff| {} > tol {tol})",
+            (a - e).abs()
+        );
+    }
+}
+
+/// Max absolute difference between two slices (0.0 for empty).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Relative L2 error ‖a−b‖ / ‖b‖ — the standard FFT accuracy metric.
+pub fn rel_l2_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+    let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check(1, 25, |r| r.next_below(10), |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check(1, 10, |r| r.next_below(10), |&v| assert!(v < 5));
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1")]
+    fn assert_close_reports_index() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn rel_l2_zero_for_identical() {
+        assert_eq!(rel_l2_error(&[1.0, -2.0, 3.0], &[1.0, -2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_scales() {
+        let e = rel_l2_error(&[1.1], &[1.0]);
+        assert!((e - 0.1).abs() < 1e-5, "{e}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Crate-level integration tests: cross-module behaviour that unit tests
+//! inside each module cannot see — ports × collectives × FFT × baseline
+//! consistency, and the figure harnesses end to end.
+
+use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
+use hpx_fft::bench_harness::{fig3, fig45};
+use hpx_fft::collectives::AllToAllAlgo;
+use hpx_fft::config::BenchConfig;
+use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
+use hpx_fft::parcelport::{NetModel, PortKind};
+
+/// Every (port × variant × algorithm) combination computes the identical
+/// transform: the full equivalence matrix of the communication layer.
+#[test]
+fn full_equivalence_matrix() {
+    let mut reference: Option<f64> = None;
+    for port in PortKind::ALL {
+        for variant in [Variant::AllToAll, Variant::Scatter] {
+            for algo in [AllToAllAlgo::Linear, AllToAllAlgo::Pairwise, AllToAllAlgo::HpxRoot] {
+                let config = DistFftConfig {
+                    rows: 32,
+                    cols: 32,
+                    localities: 4,
+                    port,
+                    variant,
+                    algo,
+                    threads_per_locality: 1,
+                    net: None,
+                    engine: ComputeEngine::Native,
+                    verify: true,
+                };
+                let report = driver::run(&config).unwrap();
+                let err = report.rel_error.unwrap();
+                assert!(err < 1e-4, "{port} {variant:?} {algo:?}: rel err {err}");
+                match reference {
+                    None => reference = Some(err),
+                    Some(r) => assert_eq!(err, r, "all paths do identical arithmetic"),
+                }
+            }
+        }
+    }
+}
+
+/// The baseline and the HPX variants agree on the math.
+#[test]
+fn baseline_agrees_with_hpx() {
+    let report = fftw_like::run(&FftwLikeConfig {
+        rows: 64,
+        cols: 64,
+        localities: 4,
+        threads: 2,
+        net: None,
+        verify: true,
+    })
+    .unwrap();
+    assert!(report.rel_error.unwrap() < 1e-4);
+}
+
+/// The hybrid wire model does not change results, only timing.
+#[test]
+fn wire_model_is_numerically_transparent() {
+    let base = DistFftConfig {
+        rows: 32,
+        cols: 32,
+        localities: 2,
+        threads_per_locality: 1,
+        verify: true,
+        ..Default::default()
+    };
+    let without = driver::run(&base).unwrap();
+    let with = driver::run(&DistFftConfig {
+        net: Some(NetModel::infiniband_hdr()),
+        ..base
+    })
+    .unwrap();
+    assert_eq!(without.rel_error, with.rel_error);
+    assert!(with.stats.modeled_wire_us > 0, "wire model must be charged");
+    assert_eq!(without.stats.modeled_wire_us, 0);
+}
+
+/// Fig. 3 harness end to end (tiny): produces the paper's ordering.
+#[test]
+fn fig3_harness_ordering() {
+    let cfg = BenchConfig {
+        reps: 3,
+        warmup: 1,
+        chunk_sizes: vec![4096],
+        ..BenchConfig::quick()
+    };
+    let points = fig3::run(&cfg).unwrap();
+    let mean = |port| {
+        points.iter().find(|p| p.port == port).unwrap().live.mean()
+    };
+    assert!(mean(PortKind::Lci) < mean(PortKind::Tcp));
+}
+
+/// Figs. 4/5 harness end to end (tiny): the three paper findings hold in
+/// the simnet predictions at paper scale.
+#[test]
+fn fig45_harness_paper_findings() {
+    let cfg = BenchConfig {
+        reps: 1,
+        warmup: 0,
+        live_grid: 32,
+        live_nodes: vec![2],
+        sim_nodes: vec![16],
+        threads: 1,
+        ..BenchConfig::quick()
+    };
+    let fig4 = fig45::run(&cfg, Variant::AllToAll).unwrap();
+    let fig5 = fig45::run(&cfg, Variant::Scatter).unwrap();
+    let sim = |points: &[fig45::ScalingPoint], sys: fig45::System| {
+        points.iter().find(|p| p.system == sys).unwrap().sim_us
+    };
+    use fig45::System;
+    // (1) LCI is the fastest parcelport in both variants.
+    for points in [&fig4, &fig5] {
+        assert!(sim(points, System::Hpx(PortKind::Lci)) <= sim(points, System::Hpx(PortKind::Mpi)));
+        assert!(sim(points, System::Hpx(PortKind::Lci)) <= sim(points, System::Hpx(PortKind::Tcp)));
+    }
+    // (2) The scatter variant beats the all-to-all variant.
+    for port in PortKind::ALL {
+        assert!(sim(&fig5, System::Hpx(port)) < sim(&fig4, System::Hpx(port)));
+    }
+    // (3) HPX+LCI (scatter) beats the FFTW3 reference.
+    assert!(sim(&fig5, System::Hpx(PortKind::Lci)) < sim(&fig5, System::Fftw3));
+}
+
+/// PJRT engine in the distributed driver (gated on artifacts).
+#[test]
+fn distributed_fft_through_pjrt_engine() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let config = DistFftConfig {
+        rows: 256,
+        cols: 256,
+        localities: 4,
+        port: PortKind::Lci,
+        variant: Variant::Scatter,
+        threads_per_locality: 1,
+        engine: ComputeEngine::Pjrt(dir.to_str().unwrap().to_string()),
+        verify: true,
+        ..Default::default()
+    };
+    let report = driver::run(&config).unwrap();
+    assert!(report.rel_error.unwrap() < 1e-4, "{:?}", report.rel_error);
+}
+
+/// Stress: repeated runs on one fabric (leak/ordering regression guard).
+#[test]
+fn repeated_runs_stable() {
+    let cluster =
+        hpx_fft::hpx::runtime::Cluster::new(4, PortKind::Lci, None).unwrap();
+    let config = DistFftConfig {
+        rows: 32,
+        cols: 32,
+        localities: 4,
+        threads_per_locality: 1,
+        verify: true,
+        ..Default::default()
+    };
+    for _ in 0..10 {
+        let report = driver::run_on(&cluster, &config).unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4);
+    }
+    // Mailboxes must be fully drained between runs.
+    for rank in 0..4 {
+        assert_eq!(cluster.fabric().mailbox(rank).pending(), 0, "leftover parcels at {rank}");
+    }
+}
