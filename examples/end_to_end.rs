@@ -19,7 +19,7 @@
 //! Reports per-variant latency and grid throughput; recorded in
 //! EXPERIMENTS.md §End-to-end.
 
-use hpx_fft::collectives::AllToAllAlgo;
+use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy};
 use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, Variant};
 use hpx_fft::metrics::table::Table;
 use hpx_fft::parcelport::{NetModel, PortKind};
@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
                 port: PortKind::Lci,
                 variant,
                 algo: AllToAllAlgo::HpxRoot,
+                chunk: ChunkPolicy::default(),
                 threads_per_locality: 2,
                 net: Some(NetModel::infiniband_hdr()),
                 engine: engine.clone(),

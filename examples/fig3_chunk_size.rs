@@ -1,6 +1,11 @@
 //! Regenerate paper Fig. 3 (chunk-size scaling) — example wrapper around
 //! the benchmark harness.
 //!
+//! Every (port × payload size) point is measured with both scatter
+//! algorithms: `linear` (the paper's monolithic scatter) and `pipelined`
+//! (policy-sized zero-copy wire chunks drained by the send pool), so the
+//! sweep shows where pipelining amortizes the per-message overheads.
+//!
 //! ```sh
 //! cargo run --release --example fig3_chunk_size            # full sweep
 //! cargo run --release --example fig3_chunk_size -- quick   # smoke
@@ -13,8 +18,9 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "quick");
     let config = if quick { BenchConfig::quick() } else { BenchConfig::default() };
     println!(
-        "Fig. 3: scatter chunk-size sweep on 2 localities, {} reps/point\n",
-        config.reps
+        "Fig. 3: scatter chunk-size sweep on 2 localities, {} reps/point,\n\
+         algorithms: linear + pipelined ({} B wire chunks × {} in flight)\n",
+        config.reps, config.pipeline.chunk_bytes, config.pipeline.inflight
     );
     let points = fig3::run(&config)?;
     print!("{}", fig3::report(&points, &config.out_dir)?);

@@ -8,7 +8,7 @@
 //! with the N-scatter variant, verifies against the serial reference, and
 //! prints per-step timings — the smallest complete tour of the system.
 
-use hpx_fft::collectives::AllToAllAlgo;
+use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy};
 use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, Variant};
 use hpx_fft::parcelport::PortKind;
 
@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         port: PortKind::Lci,
         variant: Variant::Scatter,
         algo: AllToAllAlgo::HpxRoot,
+        chunk: ChunkPolicy::default(),
         threads_per_locality: 2,
         net: None,
         engine: ComputeEngine::Native,

@@ -15,11 +15,16 @@ fn main() {
     let points = fig3::run(&config).expect("fig3 sweep");
     print!("{}", fig3::report(&points, &config.out_dir).expect("report"));
 
-    // Paper-shape assertions (soft: warn, don't crash the bench).
+    // Paper-shape assertions (soft: warn, don't crash the bench) — on
+    // the monolithic scatter, the paper's configuration.
     let mean = |port, bytes| {
         points
             .iter()
-            .find(|p| p.port == port && p.bytes == bytes)
+            .find(|p| {
+                p.port == port
+                    && p.bytes == bytes
+                    && p.algo == hpx_fft::collectives::ScatterAlgo::Linear
+            })
             .map(|p| p.live.mean())
             .unwrap_or(f64::NAN)
     };

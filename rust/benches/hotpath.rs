@@ -3,18 +3,26 @@
 //! The §Perf instrumentation: per-operation timings for the pieces the
 //! end-to-end runtime is made of. Used to find and verify the
 //! optimizations recorded in EXPERIMENTS.md §Perf.
+//!
+//! Pass `-- --smoke` for the CI fast path: iteration counts and the
+//! collective workload shrink by ~an order of magnitude, and the run
+//! still writes `bench_out/hotpath.csv` so regressions stay visible as
+//! per-PR artifacts.
 
 use hpx_fft::bench_harness::runner::time_us;
+use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use hpx_fft::dist_fft::transpose::place_chunk_transposed;
 use hpx_fft::fft::complex::Complex32;
 use hpx_fft::fft::plan::{Direction, Plan, PlanCache};
 use hpx_fft::hpx::mailbox::Mailbox;
 use hpx_fft::hpx::parcel::{actions, Parcel, Payload};
+use hpx_fft::hpx::runtime::Cluster;
+use hpx_fft::parcelport::{NetModel, PortKind};
 use hpx_fft::task::ThreadPool;
 use hpx_fft::util::rng::Pcg32;
 use std::sync::Arc;
 
-fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+fn bench(rows: &mut Vec<(String, f64)>, name: &str, iters: usize, mut f: impl FnMut()) {
     // Warmup.
     for _ in 0..iters.div_ceil(10).max(1) {
         f();
@@ -27,6 +35,7 @@ fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
     let per = total_us / iters as f64;
     let (val, unit) = if per < 1.0 { (per * 1e3, "ns") } else { (per, "µs") };
     println!("{name:<44} {val:>10.1} {unit}/op   ({iters} iters)");
+    rows.push((name.to_string(), per));
 }
 
 fn signal(n: usize, seed: u64) -> Vec<Complex32> {
@@ -35,7 +44,11 @@ fn signal(n: usize, seed: u64) -> Vec<Complex32> {
 }
 
 fn main() {
-    println!("== hotpath micro-benchmarks ==\n");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Iteration divisor for the smoke path.
+    let div = if smoke { 10 } else { 1 };
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    println!("== hotpath micro-benchmarks{} ==\n", if smoke { " (smoke)" } else { "" });
 
     // FFT kernel.
     for log2n in [10usize, 12, 14] {
@@ -44,9 +57,14 @@ fn main() {
         let mut buf = signal(n, 1);
         let flops = plan.flops();
         let mut last_us = 0.0;
-        bench(&format!("fft radix2 n=2^{log2n}"), 2000 >> (log2n - 10), || {
-            last_us = time_us(|| plan.execute(&mut buf, Direction::Forward));
-        });
+        bench(
+            &mut rows,
+            &format!("fft radix2 n=2^{log2n}"),
+            ((2000 >> (log2n - 10)) / div).max(1),
+            || {
+                last_us = time_us(|| plan.execute(&mut buf, Direction::Forward));
+            },
+        );
         println!(
             "{:<44} {:>10.2} GFLOP/s",
             format!("  → throughput n=2^{log2n}"),
@@ -57,13 +75,13 @@ fn main() {
     // Batched rows, serial vs parallel.
     {
         let n = 1024;
-        let rows = 256;
+        let rows_n = 256;
         let plan = PlanCache::global().plan(n);
-        let mut buf = signal(rows * n, 2);
-        bench("fft_rows 256×1024 serial", 20, || {
+        let mut buf = signal(rows_n * n, 2);
+        bench(&mut rows, "fft_rows 256×1024 serial", (20 / div).max(1), || {
             hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 1);
         });
-        bench("fft_rows 256×1024 4 threads", 20, || {
+        bench(&mut rows, "fft_rows 256×1024 4 threads", (20 / div).max(1), || {
             hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 4);
         });
     }
@@ -73,7 +91,7 @@ fn main() {
         let (r, c) = (256, 256);
         let chunk = signal(r * c, 3);
         let mut slab = vec![Complex32::ZERO; r * c];
-        bench("place_chunk_transposed 256×256", 200, || {
+        bench(&mut rows, "place_chunk_transposed 256×256", (200 / div).max(1), || {
             place_chunk_transposed(&chunk, r, c, &mut slab, r, 0);
         });
     }
@@ -81,10 +99,13 @@ fn main() {
     // Payload semantics: the LCI-vs-MPI difference in one number.
     {
         let payload = Payload::new(vec![0u8; 1 << 20]);
-        bench("payload shallow clone (LCI path) 1 MiB", 100_000, || {
+        bench(&mut rows, "payload shallow clone (LCI path) 1 MiB", 100_000 / div, || {
             let _ = payload.clone();
         });
-        bench("payload deep copy (MPI eager path) 1 MiB", 2000, || {
+        bench(&mut rows, "payload slice (wire chunk) 1 MiB→64 KiB", 100_000 / div, || {
+            let _ = payload.slice(512 * 1024, 64 * 1024);
+        });
+        bench(&mut rows, "payload deep copy (MPI eager path) 1 MiB", 2000 / div, || {
             let _ = payload.deep_copy();
         });
     }
@@ -93,7 +114,7 @@ fn main() {
     {
         let mb = Mailbox::new();
         let mut tag = 0u64;
-        bench("mailbox deliver+recv", 100_000, || {
+        bench(&mut rows, "mailbox deliver+recv", 100_000 / div, || {
             mb.deliver(Parcel::new(0, 0, actions::P2P, tag, Payload::empty()));
             let _ = mb.recv(0, actions::P2P, tag);
             tag += 1;
@@ -103,10 +124,91 @@ fn main() {
     // Task spawn overhead.
     {
         let pool = Arc::new(ThreadPool::new(4));
-        bench("threadpool spawn+get", 20_000, || {
+        bench(&mut rows, "threadpool spawn+get", 20_000 / div, || {
             pool.spawn(|| 1usize).get();
         });
     }
 
-    println!("\nhotpath done");
+    // The tentpole comparison: monolithic pairwise vs pipelined chunked
+    // all-to-all (exchange + unpack into the destination buffer) on the
+    // LCI fabric under the IB-HDR wire model — the ISSUE's N=8 / 4 MiB
+    // acceptance scenario (shrunk in smoke mode).
+    {
+        let n = if smoke { 4 } else { 8 };
+        let per_rank: usize = if smoke { 256 * 1024 } else { 4 << 20 };
+        let policy = ChunkPolicy::new(if smoke { 64 * 1024 } else { 1 << 20 }, 4);
+        let reps = if smoke { 3 } else { 5 };
+        let cluster =
+            Cluster::new(n, PortKind::Lci, Some(NetModel::infiniband_hdr())).expect("cluster");
+
+        // Setup (communicator, send pool, buffers) happens before the
+        // per-rank timer, so the µs/op numbers track the exchange+unpack
+        // itself; the reported rep is the slowest rank of the best rep.
+        let mut measure_best = |label: &str, chunked: bool| -> f64 {
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let times = cluster.run(|ctx| {
+                    let comm = Communicator::from_ctx(ctx);
+                    comm.set_chunk_policy(policy);
+                    comm.warm_chunk_pool();
+                    let chunks: Vec<Payload> =
+                        (0..n).map(|_| Payload::new(vec![0u8; per_rank])).collect();
+                    let mut dest = vec![0u8; n * per_rank];
+                    let t0 = std::time::Instant::now();
+                    if chunked {
+                        comm.all_to_all_chunked_each(chunks, |src, off, p| {
+                            dest[src * per_rank + off..src * per_rank + off + p.len()]
+                                .copy_from_slice(p.as_bytes());
+                        });
+                    } else {
+                        for (src, p) in comm
+                            .all_to_all(chunks, AllToAllAlgo::Pairwise)
+                            .into_iter()
+                            .enumerate()
+                        {
+                            dest[src * per_rank..(src + 1) * per_rank]
+                                .copy_from_slice(p.as_bytes());
+                        }
+                    }
+                    std::hint::black_box(dest[0]);
+                    t0.elapsed().as_secs_f64() * 1e6
+                });
+                best = best.min(times.into_iter().fold(0.0, f64::max));
+            }
+            println!("{label:<44} {best:>10.1} µs/op   ({reps} reps, best)");
+            rows.push((label.to_string(), best));
+            best
+        };
+
+        let mono = measure_best(&format!("a2a+unpack pairwise N={n} {per_rank}B"), false);
+        let chunked = measure_best(
+            &format!(
+                "a2a+unpack pairwise-chunked N={n} {}x{}",
+                policy.chunk_bytes, policy.inflight
+            ),
+            true,
+        );
+        println!(
+            "{:<44} {:>9.2}×   ({per_rank} B/rank, netmodel on)",
+            "  → chunked speedup over monolithic",
+            mono / chunked
+        );
+        // (The speedup ratio is printed only — the CSV column is strictly
+        // µs/op so regression tooling can diff it across runs.)
+        let st = cluster.fabric().stats();
+        println!(
+            "{:<44} {:>10} B   (zero-copy pinned)",
+            "  → LCI bytes copied during both runs",
+            st.bytes_copied
+        );
+    }
+
+    // CSV artifact for the CI bench-smoke job.
+    let out_dir = "bench_out";
+    let csv_rows: Vec<Vec<String>> =
+        rows.iter().map(|(name, us)| vec![name.clone(), us.to_string()]).collect();
+    hpx_fft::metrics::csv::write_csv(format!("{out_dir}/hotpath.csv"), &["bench", "us_per_op"], &csv_rows)
+        .expect("write hotpath.csv");
+    println!("\nCSV written to {out_dir}/hotpath.csv");
+    println!("hotpath done");
 }

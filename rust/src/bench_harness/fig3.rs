@@ -11,10 +11,16 @@
 //!   handshakes) plus the calibrated IB-HDR wire model;
 //! - **model**: the closed-form cost-model prediction — the line the
 //!   calibration in DESIGN.md §6 was fitted to.
+//!
+//! Each (port × payload size) point is measured for every
+//! [`ScatterAlgo`]: `linear` is the paper's monolithic scatter, and
+//! `pipelined` splits the payload into `config.pipeline.chunk_bytes`
+//! wire chunks drained by the send pool — showing where pipelining
+//! amortizes the per-message overheads the sweep exists to expose.
 
 use super::plot::{log_log_plot, Series};
 use super::runner::measure;
-use crate::collectives::Communicator;
+use crate::collectives::{Communicator, ScatterAlgo};
 use crate::config::BenchConfig;
 use crate::hpx::parcel::Payload;
 use crate::hpx::runtime::Cluster;
@@ -25,6 +31,7 @@ use crate::parcelport::{NetModel, PortKind};
 #[derive(Clone, Debug)]
 pub struct ChunkPoint {
     pub port: PortKind,
+    pub algo: ScatterAlgo,
     pub bytes: u64,
     pub live: RunStats,
     pub model_us: f64,
@@ -33,25 +40,39 @@ pub struct ChunkPoint {
 /// Run the full Fig. 3 sweep.
 pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<ChunkPoint>> {
     let net = NetModel::infiniband_hdr();
+    let pipeline = config.pipeline;
     let mut points = Vec::new();
     for port in PortKind::ALL {
         let cluster = Cluster::new(2, port, Some(net))?;
         for &bytes in &config.chunk_sizes {
-            let stats = measure(config.warmup, config.reps, || {
-                let times = cluster.run(|ctx| {
-                    let comm = Communicator::from_ctx(ctx);
-                    let t0 = std::time::Instant::now();
-                    let chunks = (ctx.rank == 0).then(|| {
-                        vec![Payload::new(vec![0u8; 8]), Payload::new(vec![0u8; bytes as usize])]
+            for algo in ScatterAlgo::ALL {
+                let stats = measure(config.warmup, config.reps, || {
+                    let times = cluster.run(|ctx| {
+                        let comm = Communicator::from_ctx(ctx);
+                        comm.set_chunk_policy(pipeline);
+                        // Spawn the send pool before the timer: thread
+                        // creation is a communicator-lifetime cost, not
+                        // per-scatter protocol work, and would otherwise
+                        // dominate the µs-scale small-payload points.
+                        if algo == ScatterAlgo::Pipelined {
+                            comm.warm_chunk_pool();
+                        }
+                        let t0 = std::time::Instant::now();
+                        let chunks = (ctx.rank == 0).then(|| {
+                            vec![
+                                Payload::new(vec![0u8; 8]),
+                                Payload::new(vec![0u8; bytes as usize]),
+                            ]
+                        });
+                        let _mine = comm.scatter_with_algo(0, chunks, algo);
+                        t0.elapsed().as_secs_f64() * 1e6
                     });
-                    let _mine = comm.scatter(0, chunks);
-                    t0.elapsed().as_secs_f64() * 1e6
+                    // The root's send-side wall clock (channel view).
+                    times[0]
                 });
-                // The root's send-side wall clock (channel view).
-                times[0]
-            });
-            let model_us = net.message_time_us(&port.cost_model(), bytes);
-            points.push(ChunkPoint { port, bytes, live: stats, model_us });
+                let model_us = net.message_time_us(&port.cost_model(), bytes);
+                points.push(ChunkPoint { port, algo, bytes, live: stats, model_us });
+            }
         }
     }
     Ok(points)
@@ -60,12 +81,13 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<ChunkPoint>> {
 /// Paper-style report: table + ASCII figure + CSV.
 pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
     let mut table = crate::metrics::table::Table::new(&[
-        "port", "chunk", "live mean", "±95% CI", "model",
+        "port", "algo", "chunk", "live mean", "±95% CI", "model",
     ]);
     let mut rows = Vec::new();
     for p in points {
         table.row(&[
             p.port.name().into(),
+            p.algo.name().into(),
             human_bytes(p.bytes),
             format!("{:.1} µs", p.live.mean()),
             format!("{:.1}", p.live.ci95()),
@@ -73,6 +95,7 @@ pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
         ]);
         rows.push(vec![
             p.port.name().to_string(),
+            p.algo.name().to_string(),
             p.bytes.to_string(),
             p.live.mean().to_string(),
             p.live.ci95().to_string(),
@@ -81,22 +104,31 @@ pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
     }
     write_csv(
         format!("{out_dir}/fig3_chunk_size.csv"),
-        &["port", "bytes", "live_mean_us", "live_ci95_us", "model_us"],
+        &["port", "algo", "bytes", "live_mean_us", "live_ci95_us", "model_us"],
         &rows,
     )?;
 
-    let series: Vec<Series> = PortKind::ALL
-        .iter()
-        .map(|&port| Series {
-            label: format!("{port} (live hybrid)"),
-            symbol: port.name().chars().next().unwrap().to_ascii_uppercase(),
-            points: points
-                .iter()
-                .filter(|p| p.port == port)
-                .map(|p| (p.bytes as f64, p.live.mean()))
-                .collect(),
-        })
-        .collect();
+    // One series per (port, algo): uppercase symbols for the monolithic
+    // scatter, lowercase for the pipelined one.
+    let mut series = Vec::new();
+    for port in PortKind::ALL {
+        for algo in ScatterAlgo::ALL {
+            let symbol = port.name().chars().next().unwrap();
+            series.push(Series {
+                label: format!("{port}/{} (live hybrid)", algo.name()),
+                symbol: if algo == ScatterAlgo::Linear {
+                    symbol.to_ascii_uppercase()
+                } else {
+                    symbol
+                },
+                points: points
+                    .iter()
+                    .filter(|p| p.port == port && p.algo == algo)
+                    .map(|p| (p.bytes as f64, p.live.mean()))
+                    .collect(),
+            });
+        }
+    }
     let mut out = String::new();
     out.push_str(&table.render());
     out.push('\n');
@@ -135,7 +167,7 @@ mod tests {
     #[test]
     fn sweep_produces_all_points() {
         let points = run(&tiny_config()).unwrap();
-        assert_eq!(points.len(), 3 * 2); // 3 ports × 2 sizes
+        assert_eq!(points.len(), 3 * 2 * 2); // 3 ports × 2 sizes × 2 algos
         for p in &points {
             assert!(p.live.mean() > 0.0);
             assert!(p.model_us > 0.0);
@@ -149,12 +181,26 @@ mod tests {
         let t = |port: PortKind, bytes: u64| {
             points
                 .iter()
-                .find(|p| p.port == port && p.bytes == bytes)
+                .find(|p| p.port == port && p.bytes == bytes && p.algo == ScatterAlgo::Linear)
                 .unwrap()
                 .live
                 .mean()
         };
         assert!(t(PortKind::Lci, 1024) < t(PortKind::Tcp, 1024));
+    }
+
+    #[test]
+    fn both_algorithms_measured_per_point() {
+        let points = run(&tiny_config()).unwrap();
+        for port in PortKind::ALL {
+            for algo in ScatterAlgo::ALL {
+                assert!(
+                    points.iter().any(|p| p.port == port && p.algo == algo),
+                    "missing {port}/{}",
+                    algo.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -83,6 +83,7 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                         port,
                         variant,
                         algo: AllToAllAlgo::HpxRoot,
+                        chunk: config.pipeline,
                         threads_per_locality: config.threads,
                         net: Some(net),
                         engine: ComputeEngine::Native,

@@ -1,4 +1,4 @@
-//! All-to-all: four algorithms with one semantic.
+//! All-to-all: five algorithms with one semantic.
 //!
 //! Semantics (MPI_Alltoall / `hpx::collectives::all_to_all`): rank `i`
 //! provides `chunks[j]` for every `j`; afterwards rank `i` holds, in slot
@@ -9,6 +9,7 @@
 //! |---|---|---|
 //! | [`AllToAllAlgo::Linear`] | N² eager sends, all at once | small N, big messages |
 //! | [`AllToAllAlgo::Pairwise`] | N−1 balanced exchange rounds | the classic MPI large-message algorithm (used by our FFTW3-like baseline) |
+//! | [`AllToAllAlgo::PairwiseChunked`] | N−1 rounds, each message split into [`crate::collectives::ChunkPolicy`]-sized pipelined wire chunks | large messages whose protocol/wire work benefits from overlap — the paper's chunk-size experiment |
 //! | [`AllToAllAlgo::Bruck`] | ⌈log2 N⌉ rounds of aggregated chunks | small messages, large N |
 //! | [`AllToAllAlgo::HpxRoot`] | gather-to-root + scatter-from-root | never — it models HPX's root-funneled collective, the overhead the paper measures against |
 //!
@@ -24,18 +25,28 @@ use crate::hpx::parcel::Payload;
 pub enum AllToAllAlgo {
     Linear,
     Pairwise,
+    /// Pairwise schedule, but each per-rank message travels as pipelined
+    /// wire chunks under the communicator's
+    /// [`crate::collectives::ChunkPolicy`].
+    PairwiseChunked,
     Bruck,
     HpxRoot,
 }
 
 impl AllToAllAlgo {
-    pub const ALL: [AllToAllAlgo; 4] =
-        [AllToAllAlgo::Linear, AllToAllAlgo::Pairwise, AllToAllAlgo::Bruck, AllToAllAlgo::HpxRoot];
+    pub const ALL: [AllToAllAlgo; 5] = [
+        AllToAllAlgo::Linear,
+        AllToAllAlgo::Pairwise,
+        AllToAllAlgo::PairwiseChunked,
+        AllToAllAlgo::Bruck,
+        AllToAllAlgo::HpxRoot,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             AllToAllAlgo::Linear => "linear",
             AllToAllAlgo::Pairwise => "pairwise",
+            AllToAllAlgo::PairwiseChunked => "pairwise-chunked",
             AllToAllAlgo::Bruck => "bruck",
             AllToAllAlgo::HpxRoot => "hpx-root",
         }
@@ -48,10 +59,24 @@ impl std::str::FromStr for AllToAllAlgo {
         match s.to_ascii_lowercase().as_str() {
             "linear" => Ok(AllToAllAlgo::Linear),
             "pairwise" => Ok(AllToAllAlgo::Pairwise),
+            "pairwise-chunked" | "pairwise_chunked" | "chunked" => {
+                Ok(AllToAllAlgo::PairwiseChunked)
+            }
             "bruck" => Ok(AllToAllAlgo::Bruck),
             "hpx-root" | "hpx_root" | "hpxroot" => Ok(AllToAllAlgo::HpxRoot),
             other => Err(format!("unknown all-to-all algorithm {other:?}")),
         }
+    }
+}
+
+/// Peer pairing for pairwise-exchange round `r` (`1 <= r < n`): the XOR
+/// schedule on power-of-two sizes, ring offsets otherwise. Returns
+/// `(send_to, recv_from)`.
+pub(crate) fn pairwise_peers(me: usize, n: usize, r: usize) -> (usize, usize) {
+    if n.is_power_of_two() {
+        (me ^ r, me ^ r)
+    } else {
+        ((me + r) % n, (me + n - r) % n)
     }
 }
 
@@ -63,6 +88,7 @@ impl Communicator {
         match algo {
             AllToAllAlgo::Linear => self.a2a_linear(chunks),
             AllToAllAlgo::Pairwise => self.a2a_pairwise(chunks),
+            AllToAllAlgo::PairwiseChunked => self.a2a_pairwise_chunked(chunks),
             AllToAllAlgo::Bruck => self.a2a_bruck(chunks),
             AllToAllAlgo::HpxRoot => self.a2a_hpx_root(chunks),
         }
@@ -97,18 +123,47 @@ impl Communicator {
         let me = self.rank();
         let mut out: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
         out[me] = Some(std::mem::replace(&mut chunks[me], Payload::empty()));
-        let pow2 = n.is_power_of_two();
         for r in 1..n {
-            let (send_to, recv_from) = if pow2 {
-                (me ^ r, me ^ r)
-            } else {
-                ((me + r) % n, (me + n - r) % n)
-            };
+            let (send_to, recv_from) = pairwise_peers(me, n, r);
             let outgoing = std::mem::replace(&mut chunks[send_to], Payload::empty());
             self.send(send_to, tag + r as u64, outgoing);
             out[recv_from] = Some(self.recv(recv_from, tag + r as u64));
         }
         out.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+
+    /// The pairwise schedule with each per-rank message split into
+    /// policy-sized wire chunks that pipeline through the communicator's
+    /// send pool: while this rank blocks in the matched receive of round
+    /// `r`, its outgoing chunks for round `r` (and any still queued from
+    /// earlier rounds) keep draining — no per-round barrier. Splitting
+    /// uses [`Payload::slice`], so the send side performs zero copies.
+    ///
+    /// A buffering adapter over
+    /// [`Communicator::all_to_all_chunked_each`]: single-chunk transfers
+    /// (and the own-rank payload) pass through without copy, so the LCI
+    /// path stays zero-copy end to end; multi-chunk transfers are
+    /// concatenated at the application layer, which is reassembly, not a
+    /// port protocol copy — port statistics stay untouched by it.
+    fn a2a_pairwise_chunked(&self, chunks: Vec<Payload>) -> Vec<Payload> {
+        let n = self.size();
+        let mut parts: Vec<Vec<Payload>> = (0..n).map(|_| Vec::new()).collect();
+        self.all_to_all_chunked_each(chunks, |src, _off, p| parts[src].push(p));
+        parts
+            .into_iter()
+            .map(|mut ps| match ps.len() {
+                0 => Payload::empty(),
+                1 => ps.pop().expect("one chunk"),
+                _ => {
+                    let total: usize = ps.iter().map(Payload::len).sum();
+                    let mut buf = Vec::with_capacity(total);
+                    for p in &ps {
+                        buf.extend_from_slice(p.as_bytes());
+                    }
+                    Payload::new(buf)
+                }
+            })
+            .collect()
     }
 
     /// Bruck's algorithm: ⌈log2 n⌉ rounds, each moving aggregated blocks
@@ -236,6 +291,7 @@ impl Communicator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::ChunkPolicy;
     use crate::hpx::runtime::Cluster;
     use crate::parcelport::PortKind;
     use crate::util::rng::Pcg32;
@@ -290,6 +346,84 @@ mod tests {
         transpose_property(4, AllToAllAlgo::Pairwise, PortKind::Mpi, 70 * 1024 / 4);
     }
 
+    /// Same defining property, with a wire-chunk size small enough that
+    /// every per-rank message splits into several pipelined chunks.
+    fn chunked_transpose_property(n: usize, kind: PortKind, chunk_len: usize, policy: ChunkPolicy) {
+        let cluster = Cluster::new(n, kind, None).unwrap();
+        let results = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.set_chunk_policy(policy);
+            let send: Vec<Payload> = (0..n)
+                .map(|dst| Payload::from_f32(&vec![(ctx.rank * n + dst) as f32; chunk_len]))
+                .collect();
+            comm.all_to_all(send, AllToAllAlgo::PairwiseChunked)
+        });
+        for (i, recv) in results.iter().enumerate() {
+            for (j, p) in recv.iter().enumerate() {
+                assert_eq!(p.to_f32(), vec![(j * n + i) as f32; chunk_len], "rank {i} slot {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_chunked_multi_chunk_all_ports() {
+        for kind in PortKind::ALL {
+            // 256-byte messages over 36-byte chunks: 8 chunks inc. a
+            // ragged tail, 2 in flight.
+            chunked_transpose_property(4, kind, 64, ChunkPolicy::new(36, 2));
+        }
+    }
+
+    #[test]
+    fn pairwise_chunked_non_pow2_and_single_inflight() {
+        chunked_transpose_property(5, PortKind::Lci, 13, ChunkPolicy::new(8, 1));
+        chunked_transpose_property(3, PortKind::Mpi, 40, ChunkPolicy::new(64, 3));
+    }
+
+    #[test]
+    fn pairwise_chunked_over_mpi_rendezvous_chunks() {
+        // Chunks above the eager threshold: every wire chunk takes the
+        // RTS/CTS path.
+        chunked_transpose_property(
+            2,
+            PortKind::Mpi,
+            96 * 1024 / 4,
+            ChunkPolicy::new(80 * 1024, 2),
+        );
+    }
+
+    /// The satellite acceptance check: chunking splits the wire traffic
+    /// but must never change the result — for every algorithm, on every
+    /// parcelport, against the monolithic pairwise reference.
+    #[test]
+    fn chunked_matches_monolithic_every_algo_every_port() {
+        let n = 4;
+        let chunk_len = 48; // 192 B per message → 4 wire chunks of 48 B
+        for kind in PortKind::ALL {
+            let mut reference: Option<Vec<Vec<Vec<u8>>>> = None;
+            for algo in AllToAllAlgo::ALL {
+                let cluster = Cluster::new(n, kind, None).unwrap();
+                let results = cluster.run(|ctx| {
+                    let comm = Communicator::from_ctx(ctx);
+                    comm.set_chunk_policy(ChunkPolicy::new(48, 2));
+                    let send: Vec<Payload> = (0..n)
+                        .map(|dst| {
+                            Payload::from_f32(&vec![(ctx.rank * n + dst) as f32; chunk_len])
+                        })
+                        .collect();
+                    comm.all_to_all(send, algo)
+                        .into_iter()
+                        .map(|p| p.as_bytes().to_vec())
+                        .collect::<Vec<_>>()
+                });
+                match &reference {
+                    None => reference = Some(results),
+                    Some(r) => assert_eq!(r, &results, "{kind} {algo:?} deviates"),
+                }
+            }
+        }
+    }
+
     #[test]
     fn linear_over_tcp() {
         transpose_property(3, AllToAllAlgo::Linear, PortKind::Tcp, 16);
@@ -316,6 +450,9 @@ mod tests {
                     let lens = lens.clone();
                     let results = cluster.run(move |ctx| {
                         let comm = Communicator::from_ctx(ctx);
+                        // Tiny, unaligned wire chunks stress the ragged
+                        // reassembly path of the chunked algorithm.
+                        comm.set_chunk_policy(ChunkPolicy::new(7, 2));
                         let send: Vec<Payload> = (0..n)
                             .map(|dst| {
                                 let len = lens[ctx.rank][dst];
@@ -344,6 +481,11 @@ mod tests {
     fn algo_parse() {
         assert_eq!("bruck".parse::<AllToAllAlgo>().unwrap(), AllToAllAlgo::Bruck);
         assert_eq!("hpx-root".parse::<AllToAllAlgo>().unwrap(), AllToAllAlgo::HpxRoot);
+        assert_eq!(
+            "pairwise-chunked".parse::<AllToAllAlgo>().unwrap(),
+            AllToAllAlgo::PairwiseChunked
+        );
+        assert_eq!("chunked".parse::<AllToAllAlgo>().unwrap(), AllToAllAlgo::PairwiseChunked);
         assert!("magic".parse::<AllToAllAlgo>().is_err());
     }
 }

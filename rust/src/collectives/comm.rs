@@ -1,9 +1,11 @@
 //! The communicator: rank + size + fabric handle + tag discipline.
 
+use super::chunked::{ChunkPolicy, CHUNK_TAG_SPAN};
 use crate::hpx::parcel::{actions, LocalityId, Parcel, Payload, Tag};
 use crate::hpx::runtime::LocalityCtx;
 use crate::parcelport::Parcelport;
-use std::cell::Cell;
+use crate::task::ThreadPool;
+use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 
 /// A per-locality handle for collective operations.
@@ -12,18 +14,31 @@ use std::sync::Arc;
 /// (clone-per-thread, like an `MPI_Comm` rank handle). Tags for successive
 /// collectives come from a local counter that stays in lock-step across
 /// ranks under the SPMD calling discipline.
+///
+/// The communicator also carries the [`ChunkPolicy`] the chunked
+/// collectives run under, plus a lazily created send pool of
+/// `policy.inflight` workers that pipelines their wire chunks.
 pub struct Communicator {
     fabric: Arc<dyn Parcelport>,
     rank: LocalityId,
     size: usize,
     next_tag: Cell<Tag>,
+    chunk_policy: Cell<ChunkPolicy>,
+    chunk_pool: RefCell<Option<Arc<ThreadPool>>>,
 }
 
 impl Communicator {
     pub fn new(fabric: Arc<dyn Parcelport>, rank: LocalityId, size: usize) -> Self {
         assert!(rank < size, "rank {rank} out of range for size {size}");
         assert!(size <= fabric.n_localities(), "communicator larger than fabric");
-        Self { fabric, rank, size, next_tag: Cell::new(0) }
+        Self {
+            fabric,
+            rank,
+            size,
+            next_tag: Cell::new(0),
+            chunk_policy: Cell::new(ChunkPolicy::default()),
+            chunk_pool: RefCell::new(None),
+        }
     }
 
     pub fn from_ctx(ctx: &LocalityCtx) -> Self {
@@ -40,6 +55,48 @@ impl Communicator {
 
     pub fn fabric(&self) -> &Arc<dyn Parcelport> {
         &self.fabric
+    }
+
+    /// The chunking policy the chunked collectives run under.
+    pub fn chunk_policy(&self) -> ChunkPolicy {
+        self.chunk_policy.get()
+    }
+
+    /// Install a new chunking policy. SPMD discipline: every rank must
+    /// set the same policy before a chunked collective, since receivers
+    /// derive chunk boundaries from their own copy.
+    pub fn set_chunk_policy(&self, policy: ChunkPolicy) {
+        self.chunk_policy.set(policy);
+    }
+
+    /// The communicator's chunk-send pool, created on first use and
+    /// re-created if the policy's `inflight` width changed since.
+    pub(crate) fn chunk_pool(&self) -> Arc<ThreadPool> {
+        let want = self.chunk_policy.get().inflight.max(1);
+        let mut slot = self.chunk_pool.borrow_mut();
+        match slot.as_ref() {
+            Some(pool) if pool.size() == want => Arc::clone(pool),
+            _ => {
+                let pool = Arc::new(ThreadPool::new(want));
+                *slot = Some(Arc::clone(&pool));
+                pool
+            }
+        }
+    }
+
+    /// Pre-spawn the chunk-send pool for the current policy, so its
+    /// one-off thread-creation cost lands outside measured regions
+    /// (benchmark warm-up; a no-op if the pool already matches).
+    pub fn warm_chunk_pool(&self) {
+        let _ = self.chunk_pool();
+    }
+
+    /// Reserve `groups` blocks of [`CHUNK_TAG_SPAN`] tags for chunked
+    /// transfers (same lock-step counter as [`Communicator::alloc_tags`]).
+    pub(crate) fn alloc_chunk_tags(&self, groups: usize) -> Tag {
+        let t = self.next_tag.get();
+        self.next_tag.set(t + groups as Tag * CHUNK_TAG_SPAN);
+        t
     }
 
     /// Allocate the base tag for one collective invocation. Each
@@ -114,6 +171,32 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(c0.alloc_tags(), c1.alloc_tags());
         }
+    }
+
+    #[test]
+    fn chunk_tag_blocks_stay_in_lockstep() {
+        let f = fabric(2);
+        let c0 = Communicator::new(Arc::clone(&f), 0, 2);
+        let c1 = Communicator::new(Arc::clone(&f), 1, 2);
+        // Mixed small and chunked reservations must stay identical.
+        assert_eq!(c0.alloc_tags(), c1.alloc_tags());
+        assert_eq!(c0.alloc_chunk_tags(3), c1.alloc_chunk_tags(3));
+        let a = c0.alloc_tags();
+        assert_eq!(a, c1.alloc_tags());
+        assert!(a >= 3 * CHUNK_TAG_SPAN, "chunk blocks must be reserved: {a}");
+    }
+
+    #[test]
+    fn chunk_policy_roundtrip_and_pool_resize() {
+        let comm = Communicator::new(fabric(2), 0, 2);
+        assert_eq!(comm.chunk_policy(), ChunkPolicy::default());
+        comm.set_chunk_policy(ChunkPolicy::new(4096, 2));
+        assert_eq!(comm.chunk_policy().chunk_bytes, 4096);
+        let p1 = comm.chunk_pool();
+        assert_eq!(p1.size(), 2);
+        assert!(Arc::ptr_eq(&p1, &comm.chunk_pool()), "pool is memoized");
+        comm.set_chunk_policy(ChunkPolicy::new(4096, 3));
+        assert_eq!(comm.chunk_pool().size(), 3, "pool follows inflight");
     }
 
     #[test]

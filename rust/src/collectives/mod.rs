@@ -2,11 +2,14 @@
 //!
 //! The paper's FFT exercises two collectives — *scatter* and *all-to-all*
 //! — but a usable communication layer needs the full family, so this
-//! module provides: scatter, gather, broadcast, all-gather, reduce,
-//! all-reduce, barrier, and all-to-all with four algorithms (including
-//! [`AllToAllAlgo::HpxRoot`], the root-funneled variant modeling HPX's
-//! communicator-based collective, whose synchronization cost is the
-//! reason the paper's N-scatter approach wins).
+//! module provides: scatter (linear and chunk-pipelined), gather,
+//! broadcast, all-gather, reduce, all-reduce, barrier, and all-to-all
+//! with five algorithms (including [`AllToAllAlgo::HpxRoot`], the
+//! root-funneled variant modeling HPX's communicator-based collective,
+//! whose synchronization cost is the reason the paper's N-scatter
+//! approach wins, and [`AllToAllAlgo::PairwiseChunked`], the pipelined
+//! chunked exchange built on [`ChunkPolicy`] and zero-copy payload
+//! slices — see [`chunked`]).
 //!
 //! All collectives are SPMD: every rank of a [`Communicator`] must call
 //! the same collectives in the same order (tags are allocated from a
@@ -16,14 +19,17 @@
 pub mod all_to_all;
 pub mod barrier;
 pub mod broadcast;
+pub mod chunked;
 pub mod comm;
 pub mod gather;
 pub mod reduce;
 pub mod scatter;
 
 pub use all_to_all::AllToAllAlgo;
+pub use chunked::ChunkPolicy;
 pub use comm::Communicator;
 pub use reduce::ReduceOp;
+pub use scatter::ScatterAlgo;
 
 #[cfg(test)]
 mod tests {
@@ -45,6 +51,9 @@ mod tests {
         let cluster = Cluster::new(n, kind, None).unwrap();
         cluster.run(|ctx| {
             let comm = Communicator::from_ctx(ctx);
+            // Tiny wire chunks so the chunked algorithms exercise their
+            // multi-chunk path on every port.
+            comm.set_chunk_policy(ChunkPolicy::new(5, 2));
 
             // Broadcast from every root in turn.
             for root in 0..n {

@@ -2,13 +2,50 @@
 //!
 //! HPX's `scatter_to`/`scatter_from` is a linear collective: the root
 //! sends chunk `i` to participant `i`. The FFT scatter variant issues one
-//! such scatter per root locality; [`Communicator::scatter_nonroot_tag`]
-//! exposes the tag so receivers can poll many outstanding scatters and
-//! process whichever arrives first (the comm/compute overlap the paper
-//! proposes).
+//! such scatter per root locality; [`Communicator::scatter_tags`] /
+//! [`Communicator::scatter_chunk_tags`] pre-allocate the tags so
+//! receivers can poll many outstanding scatters and process whichever
+//! arrives first (the comm/compute overlap the paper proposes).
+//!
+//! [`ScatterAlgo::Pipelined`] additionally splits every per-rank payload
+//! into [`crate::collectives::ChunkPolicy`]-sized wire chunks that
+//! pipeline through the communicator's send pool — the root starts
+//! serving rank `i+1` while rank `i`'s chunks are still on the wire,
+//! instead of serializing one monolithic message per rank.
 
 use super::comm::Communicator;
 use crate::hpx::parcel::{Payload, Tag};
+
+/// Algorithm selector for [`Communicator::scatter_with_algo`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScatterAlgo {
+    /// One monolithic message per rank (HPX's `scatter_to` semantics).
+    Linear,
+    /// Chunked, pipelined sends under the communicator's `ChunkPolicy`.
+    Pipelined,
+}
+
+impl ScatterAlgo {
+    pub const ALL: [ScatterAlgo; 2] = [ScatterAlgo::Linear, ScatterAlgo::Pipelined];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScatterAlgo::Linear => "linear",
+            ScatterAlgo::Pipelined => "pipelined",
+        }
+    }
+}
+
+impl std::str::FromStr for ScatterAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Ok(ScatterAlgo::Linear),
+            "pipelined" | "chunked" => Ok(ScatterAlgo::Pipelined),
+            other => Err(format!("unknown scatter algorithm {other:?}")),
+        }
+    }
+}
 
 impl Communicator {
     /// Linear scatter: the root provides one payload per rank (in rank
@@ -53,6 +90,67 @@ impl Communicator {
     /// this identically). Returns the base tags in call order.
     pub fn scatter_tags(&self, k: usize) -> Vec<Tag> {
         (0..k).map(|_| self.alloc_tags()).collect()
+    }
+
+    /// Scatter under an explicit algorithm choice.
+    pub fn scatter_with_algo(
+        &self,
+        root: usize,
+        chunks: Option<Vec<Payload>>,
+        algo: ScatterAlgo,
+    ) -> Payload {
+        match algo {
+            ScatterAlgo::Linear => self.scatter(root, chunks),
+            ScatterAlgo::Pipelined => {
+                let tag = self.alloc_chunk_tags(1);
+                self.scatter_pipelined_with_tag(root, chunks, tag)
+            }
+        }
+    }
+
+    /// Pipelined chunked scatter on a pre-reserved chunk-tag block (from
+    /// [`Communicator::scatter_chunk_tags`]). The root's per-rank
+    /// payloads are split into policy-sized zero-copy slices and drained
+    /// through the send pool; the root returns once every chunk is on the
+    /// wire (its own chunk, as ever, never touches the fabric).
+    ///
+    /// # Panics
+    /// Same contract as [`Communicator::scatter_with_tag`].
+    pub fn scatter_pipelined_with_tag(
+        &self,
+        root: usize,
+        chunks: Option<Vec<Payload>>,
+        tag: Tag,
+    ) -> Payload {
+        assert!(root < self.size(), "root {root} out of range");
+        if self.rank() == root {
+            let chunks = chunks.expect("root must provide chunks");
+            assert_eq!(chunks.len(), self.size(), "need exactly one chunk per rank");
+            let mut mine = None;
+            let mut pending = Vec::new();
+            for (dst, chunk) in chunks.into_iter().enumerate() {
+                if dst == self.rank() {
+                    mine = Some(chunk); // root's own chunk never hits the fabric
+                } else {
+                    // Tag matching is per destination mailbox, so every
+                    // destination shares the same chunk-tag block.
+                    pending.append(&mut self.send_chunked(dst, tag, chunk));
+                }
+            }
+            for f in pending {
+                f.get();
+            }
+            mine.expect("root chunk present")
+        } else {
+            assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
+            self.recv_chunked(root, tag)
+        }
+    }
+
+    /// Pre-allocate chunk-tag blocks for `k` upcoming pipelined scatters
+    /// (SPMD: all ranks call this identically).
+    pub fn scatter_chunk_tags(&self, k: usize) -> Vec<Tag> {
+        (0..k).map(|_| self.alloc_chunk_tags(1)).collect()
     }
 }
 
@@ -131,6 +229,78 @@ mod tests {
             let comm = Communicator::from_ctx(ctx);
             comm.scatter(0, None); // root passes None → panics
         });
+    }
+
+    #[test]
+    fn pipelined_scatter_all_ports() {
+        for kind in PortKind::ALL {
+            let cluster = Cluster::new(4, kind, None).unwrap();
+            let got = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                // 80-byte payloads over 24-byte chunks: 4 wire chunks each.
+                comm.set_chunk_policy(crate::collectives::ChunkPolicy::new(24, 2));
+                let chunks = (ctx.rank == 1).then(|| {
+                    (0..4).map(|i| Payload::new(vec![i as u8; 80])).collect()
+                });
+                let mine = comm.scatter_with_algo(1, chunks, ScatterAlgo::Pipelined);
+                assert_eq!(mine.len(), 80);
+                mine.as_bytes()[0]
+            });
+            assert_eq!(got, vec![0, 1, 2, 3], "{kind}");
+        }
+    }
+
+    #[test]
+    fn pipelined_matches_linear_ragged_sizes() {
+        let cluster = Cluster::new(3, PortKind::Lci, None).unwrap();
+        for algo in ScatterAlgo::ALL {
+            let lens = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.set_chunk_policy(crate::collectives::ChunkPolicy::new(700, 2));
+                let chunks = (ctx.rank == 0).then(|| {
+                    (0..3).map(|i| Payload::new(vec![i as u8; i * 1000])).collect()
+                });
+                let mine = comm.scatter_with_algo(0, chunks, algo);
+                assert!(mine.as_bytes().iter().all(|&b| b == ctx.rank as u8));
+                mine.len()
+            });
+            assert_eq!(lens, vec![0, 1000, 2000], "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn overlapped_pipelined_scatters_with_explicit_tags() {
+        // The FFT pattern, chunk-pipelined: N concurrent scatters.
+        let n = 4;
+        let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+        let sums = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.set_chunk_policy(crate::collectives::ChunkPolicy::new(8, 2));
+            let tags = comm.scatter_chunk_tags(n);
+            let mut received = vec![0.0f32; n];
+            for (root, &tag) in tags.iter().enumerate() {
+                let chunks = (ctx.rank == root).then(|| {
+                    (0..n)
+                        .map(|dst| Payload::from_f32(&vec![(root * n + dst) as f32; 5]))
+                        .collect()
+                });
+                received[root] =
+                    comm.scatter_pipelined_with_tag(root, chunks, tag).to_f32()[0];
+            }
+            received.iter().sum::<f32>()
+        });
+        for (r, s) in sums.iter().enumerate() {
+            let expect: f32 = (0..n).map(|root| (root * n + r) as f32).sum();
+            assert_eq!(*s, expect);
+        }
+    }
+
+    #[test]
+    fn scatter_algo_parse() {
+        assert_eq!("linear".parse::<ScatterAlgo>().unwrap(), ScatterAlgo::Linear);
+        assert_eq!("pipelined".parse::<ScatterAlgo>().unwrap(), ScatterAlgo::Pipelined);
+        assert_eq!("chunked".parse::<ScatterAlgo>().unwrap(), ScatterAlgo::Pipelined);
+        assert!("tree".parse::<ScatterAlgo>().is_err());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! switch for the simnet prediction at the true problem size.
 
 use super::kv::Config;
+use crate::collectives::ChunkPolicy;
 use anyhow::Result;
 
 /// Parameters shared by the figure harnesses.
@@ -22,6 +23,9 @@ pub struct BenchConfig {
     pub sim_grid: usize,
     /// Chunk sizes for the Fig. 3 sweep, bytes.
     pub chunk_sizes: Vec<u64>,
+    /// Wire-chunking policy used by the pipelined collectives
+    /// (`PairwiseChunked` all-to-all, `Pipelined` scatter).
+    pub pipeline: ChunkPolicy,
     /// Threads per locality in live runs.
     pub threads: usize,
     /// Output directory for CSV series.
@@ -39,6 +43,7 @@ impl Default for BenchConfig {
             sim_grid: 1 << 14,
             // 1 KiB … 16 MiB, ×4 steps (the paper's log sweep).
             chunk_sizes: (0..8).map(|i| 1024u64 << (2 * i)).collect(),
+            pipeline: ChunkPolicy::default(),
             threads: 2,
             out_dir: "bench_out".into(),
         }
@@ -76,6 +81,14 @@ impl BenchConfig {
         if let Some(v) = cfg.get_parsed("bench.threads")? {
             self.threads = v;
         }
+        if let Some(v) = cfg.get_parsed("bench.chunk_bytes")? {
+            anyhow::ensure!(v > 0, "bench.chunk_bytes must be positive");
+            self.pipeline.chunk_bytes = v;
+        }
+        if let Some(v) = cfg.get_parsed("bench.inflight")? {
+            anyhow::ensure!(v > 0, "bench.inflight must be positive");
+            self.pipeline.inflight = v;
+        }
         if let Some(v) = cfg.get("bench.out_dir") {
             self.out_dir = v.to_string();
         }
@@ -108,11 +121,25 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("hpxfft-bench-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bench.conf");
-        std::fs::write(&path, "[bench]\nreps = 7\nthreads = 3\n").unwrap();
+        std::fs::write(&path, "[bench]\nreps = 7\nthreads = 3\nchunk_bytes = 4096\ninflight = 2\n")
+            .unwrap();
         let mut c = BenchConfig::default();
         c.apply_file(path.to_str().unwrap()).unwrap();
         assert_eq!(c.reps, 7);
         assert_eq!(c.threads, 3);
+        assert_eq!(c.pipeline, ChunkPolicy::new(4096, 2));
         assert_eq!(c.live_grid, 1 << 10); // untouched
+    }
+
+    #[test]
+    fn zero_chunk_policy_in_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-bench0-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.conf");
+        std::fs::write(&path, "[bench]\nchunk_bytes = 0\n").unwrap();
+        let mut c = BenchConfig::default();
+        let err = c.apply_file(path.to_str().unwrap()).unwrap_err().to_string();
+        assert!(err.contains("chunk_bytes"), "{err}");
+        assert_eq!(c.pipeline, ChunkPolicy::default(), "policy must be untouched on error");
     }
 }

@@ -3,10 +3,17 @@
 //! The transpose step cannot begin until the collective has delivered
 //! every chunk: communication and computation are strictly serialized.
 //! This is the baseline the N-scatter variant improves on.
+//!
+//! Exception: with [`AllToAllAlgo::PairwiseChunked`] the exchange streams
+//! policy-sized wire chunks, and this variant fuses steps 2+3 — wire
+//! chunk *k* is transpose-unpacked the moment it is matched, while chunk
+//! *k+1* (and later rounds' sends) are still in flight. `transpose_us`
+//! then reports the overlapped unpack time *inside* `comm_us`, the same
+//! accounting the scatter variant uses.
 
 use super::driver::{RowFft, StepTimings};
 use super::partition::Slab;
-use super::transpose::place_chunk_transposed;
+use super::transpose::{place_chunk_slice_transposed, place_chunk_transposed};
 use crate::collectives::{AllToAllAlgo, Communicator};
 use crate::fft::complex::{from_le_bytes, Complex32};
 use crate::hpx::parcel::Payload;
@@ -36,7 +43,6 @@ pub fn run(
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Step 2: chunk + exchange.
-    let t0 = Instant::now();
     let tmp = Slab {
         global_rows: slab.global_rows,
         global_cols: slab.global_cols,
@@ -45,21 +51,50 @@ pub fn run(
         data: work,
     }; // §Perf: field-wise construction — `..slab.clone()` would clone and
        // immediately drop the slab's full data buffer.
-    let chunks: Vec<Payload> = (0..n)
-        .map(|j| Payload::new(tmp.extract_chunk_bytes(j)))
-        .collect();
-    let received = comm.all_to_all(chunks, algo);
-    timings.comm_us = t0.elapsed().as_secs_f64() * 1e6;
-
-    // Step 3: transpose every received chunk into the new slab.
-    let t0 = Instant::now();
     let mut next = vec![Complex32::ZERO; cw * r_total];
-    for (j, payload) in received.into_iter().enumerate() {
-        let chunk = from_le_bytes(payload.as_bytes());
-        debug_assert_eq!(chunk.len(), lr * cw);
-        place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, j * lr);
+    if algo == AllToAllAlgo::PairwiseChunked {
+        // Steps 2+3 fused: every arriving wire chunk is transpose-placed
+        // immediately, overlapping with the chunks still on the wire.
+        const ELEM: usize = std::mem::size_of::<Complex32>();
+        comm.set_chunk_policy(comm.chunk_policy().aligned(ELEM));
+        let t0 = Instant::now();
+        let chunks: Vec<Payload> = (0..n)
+            .map(|j| Payload::new(tmp.extract_chunk_bytes(j)))
+            .collect();
+        let mut transpose_spent = 0.0f64;
+        comm.all_to_all_chunked_each(chunks, |src, byte_off, payload| {
+            let tt = Instant::now();
+            let elems = from_le_bytes(payload.as_bytes());
+            place_chunk_slice_transposed(
+                &elems,
+                byte_off / ELEM,
+                lr,
+                cw,
+                &mut next,
+                r_total,
+                src * lr,
+            );
+            transpose_spent += tt.elapsed().as_secs_f64() * 1e6;
+        });
+        timings.comm_us = t0.elapsed().as_secs_f64() * 1e6;
+        timings.transpose_us = transpose_spent; // overlapped inside comm_us
+    } else {
+        let t0 = Instant::now();
+        let chunks: Vec<Payload> = (0..n)
+            .map(|j| Payload::new(tmp.extract_chunk_bytes(j)))
+            .collect();
+        let received = comm.all_to_all(chunks, algo);
+        timings.comm_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        // Step 3: transpose every received chunk into the new slab.
+        let t0 = Instant::now();
+        for (j, payload) in received.into_iter().enumerate() {
+            let chunk = from_le_bytes(payload.as_bytes());
+            debug_assert_eq!(chunk.len(), lr * cw);
+            place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, j * lr);
+        }
+        timings.transpose_us = t0.elapsed().as_secs_f64() * 1e6;
     }
-    timings.transpose_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Step 4: row FFTs of the transposed slab (length R).
     let t0 = Instant::now();
@@ -114,6 +149,55 @@ mod tests {
     #[test]
     fn matches_serial_hpx_root() {
         check_variant(16, 16, 4, PortKind::Lci, AllToAllAlgo::HpxRoot);
+    }
+
+    #[test]
+    fn matches_serial_pairwise_chunked_default_policy() {
+        // Default 1 MiB chunks: single-chunk fast path.
+        check_variant(16, 32, 4, PortKind::Lci, AllToAllAlgo::PairwiseChunked);
+        check_variant(16, 16, 2, PortKind::Tcp, AllToAllAlgo::PairwiseChunked);
+    }
+
+    #[test]
+    fn matches_serial_pairwise_chunked_tiny_chunks() {
+        // Small wire chunks force the streaming overlap path: each
+        // message (4×8 complex = 256 B) splits into four 64 B chunks that
+        // are transpose-placed on arrival.
+        use crate::collectives::ChunkPolicy;
+        for kind in PortKind::ALL {
+            let (rows, cols, parts) = (16, 32, 4);
+            let cluster = Cluster::new(parts, kind, None).unwrap();
+            let pieces = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.set_chunk_policy(ChunkPolicy::new(64, 2));
+                let slab = Slab::synthetic(rows, cols, parts, ctx.rank);
+                run(&comm, &slab, AllToAllAlgo::PairwiseChunked, 1, &NativeRowFft).0
+            });
+            let mut assembled = Vec::with_capacity(rows * cols);
+            for p in pieces {
+                assembled.extend(p);
+            }
+            let reference = serial_fft2_transposed(&Slab::whole(rows, cols).data, rows, cols);
+            let err = rel_error(&assembled, &reference);
+            assert!(err < 1e-4, "rel err {err} ({kind})");
+        }
+    }
+
+    #[test]
+    fn chunked_timings_report_overlapped_transpose() {
+        use crate::collectives::ChunkPolicy;
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        let timings = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.set_chunk_policy(ChunkPolicy::new(128, 2));
+            let slab = Slab::synthetic(16, 16, 2, ctx.rank);
+            run(&comm, &slab, AllToAllAlgo::PairwiseChunked, 1, &NativeRowFft).1
+        });
+        for t in timings {
+            // Fused accounting: the unpack happens inside the comm phase.
+            assert!(t.transpose_us > 0.0);
+            assert!(t.comm_us >= t.transpose_us, "{t:?}");
+        }
     }
 
     #[test]

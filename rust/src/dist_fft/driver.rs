@@ -3,7 +3,7 @@
 
 use super::partition::Slab;
 use super::verify::{rel_error, serial_fft2_transposed};
-use crate::collectives::{AllToAllAlgo, Communicator};
+use crate::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use crate::fft::complex::Complex32;
 use crate::fft::plan::{Direction, PlanCache};
 use crate::hpx::runtime::Cluster;
@@ -122,6 +122,10 @@ pub struct DistFftConfig {
     pub variant: Variant,
     /// All-to-all algorithm (ignored by the scatter variant).
     pub algo: AllToAllAlgo,
+    /// Wire-chunking policy installed on every locality's communicator —
+    /// governs the chunked/pipelined collectives and the chunk-grain
+    /// comm/transpose overlap.
+    pub chunk: ChunkPolicy,
     /// Worker threads per locality for the row-FFT steps.
     pub threads_per_locality: usize,
     /// Optional hybrid wire model.
@@ -140,6 +144,7 @@ impl Default for DistFftConfig {
             port: PortKind::Lci,
             variant: Variant::Scatter,
             algo: AllToAllAlgo::HpxRoot,
+            chunk: ChunkPolicy::default(),
             threads_per_locality: 2,
             net: None,
             engine: ComputeEngine::Native,
@@ -185,6 +190,7 @@ pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistF
 
     let results: Vec<(Vec<Complex32>, StepTimings)> = cluster.run(|ctx| {
         let comm = Communicator::from_ctx(ctx);
+        comm.set_chunk_policy(config.chunk);
         let slab = Slab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
         match config.variant {
             Variant::AllToAll => super::all_to_all_variant::run(
@@ -272,6 +278,27 @@ mod tests {
                     report.rel_error
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pairwise_chunked_variant_verifies_with_tiny_chunks() {
+        // Forces many wire chunks per message (policy aligned down to 96
+        // bytes by the variant) on every port.
+        for port in PortKind::ALL {
+            let config = DistFftConfig {
+                rows: 32,
+                cols: 32,
+                localities: 4,
+                port,
+                variant: Variant::AllToAll,
+                algo: AllToAllAlgo::PairwiseChunked,
+                chunk: ChunkPolicy::new(100, 2),
+                threads_per_locality: 1,
+                ..Default::default()
+            };
+            let report = run(&config).unwrap();
+            assert!(report.rel_error.unwrap() < 1e-4, "{port}: {:?}", report.rel_error);
         }
     }
 

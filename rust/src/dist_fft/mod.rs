@@ -17,10 +17,13 @@
 //!
 //! - [`all_to_all_variant`]: one synchronized all-to-all collective
 //!   (Fig. 4). The transpose (step 3) cannot start until the collective
-//!   completes.
+//!   completes — except with `AllToAllAlgo::PairwiseChunked`, which
+//!   streams policy-sized wire chunks and transposes each on arrival.
 //! - [`scatter_variant`]: N scatter collectives, one rooted at each
 //!   locality (Fig. 5). Arriving chunks are transposed immediately,
-//!   hiding transpose work behind the remaining communication.
+//!   hiding transpose work behind the remaining communication; with the
+//!   chunked wire protocol the overlap is per *wire chunk*
+//!   ([`crate::collectives::ChunkPolicy`]), not per whole message.
 //!
 //! [`verify`] pins both against a serial reference on every port.
 

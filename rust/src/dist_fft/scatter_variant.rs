@@ -8,10 +8,17 @@
 //! transposed as soon as they are received" (§3). The receive loop polls
 //! all outstanding roots and interleaves placement work with waiting,
 //! which is where the overlap (and the win over Fig. 4) comes from.
+//!
+//! The overlap granularity is the communicator's
+//! [`crate::collectives::ChunkPolicy`]: per-root payloads ship as
+//! pipelined zero-copy wire chunks ([`Payload::slice`] views drained by
+//! the chunk send pool), and the poll loop places each *wire chunk* as
+//! it lands — chunk *k* is unpacked while chunk *k+1* is still on the
+//! wire, even within a single root's message.
 
 use super::driver::{RowFft, StepTimings};
 use super::partition::Slab;
-use super::transpose::place_chunk_transposed;
+use super::transpose::{place_chunk_slice_transposed, place_chunk_transposed};
 use crate::collectives::Communicator;
 use crate::fft::complex::{from_le_bytes, Complex32};
 use crate::hpx::parcel::Payload;
@@ -38,10 +45,14 @@ pub fn run(
     engine.fft_rows(&mut work, slab.global_cols, nthreads);
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
-    // Steps 2+3 fused: N scatters; transpose each chunk on arrival.
+    // Steps 2+3 fused: N chunk-pipelined scatters; transpose each wire
+    // chunk on arrival.
+    const ELEM: usize = std::mem::size_of::<Complex32>();
+    comm.set_chunk_policy(comm.chunk_policy().aligned(ELEM));
+    let policy = comm.chunk_policy();
     let t0 = Instant::now();
     let mut transpose_spent = 0.0f64;
-    let tags = comm.scatter_tags(n);
+    let tags = comm.scatter_chunk_tags(n);
     let tmp = Slab {
         global_rows: slab.global_rows,
         global_cols: slab.global_cols,
@@ -52,14 +63,26 @@ pub fn run(
        // immediately drop the slab's full data buffer.
     let mut next = vec![Complex32::ZERO; cw * r_total];
 
-    // Post my own scatter (root = me): ship chunk j to locality j.
+    // Every rank derives the transfer size from the slab geometry, so
+    // the wire carries no length headers — just the chunks themselves
+    // (the known-size chunked protocol).
+    let chunk_bytes_total = lr * cw * ELEM;
+    let wire_chunks = policy.n_chunks(chunk_bytes_total);
+
+    // Post my own scatter (root = me): ship chunk j to locality j as
+    // pipelined wire chunks on the send pool.
     let mut own_chunk: Option<Vec<Complex32>> = None;
+    let mut sends_pending = Vec::new();
     for dst in 0..n {
         if dst == me {
             own_chunk = Some(tmp.extract_chunk(dst));
         } else {
             // Single-pass wire serialization (§Perf).
-            comm.send(dst, tags[me], Payload::new(tmp.extract_chunk_bytes(dst)));
+            sends_pending.append(&mut comm.send_chunked_sized(
+                dst,
+                tags[me],
+                Payload::new(tmp.extract_chunk_bytes(dst)),
+            ));
         }
     }
 
@@ -72,21 +95,37 @@ pub fn run(
         transpose_spent += tt.elapsed().as_secs_f64() * 1e6;
     }
 
-    // Poll the remaining roots; place whichever chunk lands first.
-    let mut pending: Vec<usize> = (0..n).filter(|&r| r != me).collect();
+    // Poll the remaining roots; place whichever *wire chunk* lands
+    // first, consuming each root's chunks in offset order.
+    let mut pending: Vec<(usize, usize)> = // (root, next wire-chunk index)
+        (0..n).filter(|&r| r != me).map(|root| (root, 0)).collect();
     while !pending.is_empty() {
         let mut progressed = false;
         let mut i = 0;
         while i < pending.len() {
-            let root = pending[i];
-            if let Some(payload) = comm.try_recv_tagged(root, tags[root]) {
+            let (root, next_chunk) = &mut pending[i];
+            while *next_chunk < wire_chunks {
+                let Some(payload) = comm.try_recv_chunk(*root, tags[*root], *next_chunk)
+                else {
+                    break;
+                };
                 let tt = Instant::now();
-                let chunk = from_le_bytes(payload.as_bytes());
-                debug_assert_eq!(chunk.len(), lr * cw);
-                place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, root * lr);
+                let elems = from_le_bytes(payload.as_bytes());
+                place_chunk_slice_transposed(
+                    &elems,
+                    *next_chunk * policy.chunk_bytes / ELEM,
+                    lr,
+                    cw,
+                    &mut next,
+                    r_total,
+                    *root * lr,
+                );
                 transpose_spent += tt.elapsed().as_secs_f64() * 1e6;
-                pending.swap_remove(i);
+                *next_chunk += 1;
                 progressed = true;
+            }
+            if *next_chunk >= wire_chunks {
+                pending.swap_remove(i);
             } else {
                 i += 1;
             }
@@ -95,6 +134,9 @@ pub fn run(
             std::hint::spin_loop();
             std::thread::yield_now();
         }
+    }
+    for f in sends_pending {
+        f.get();
     }
     timings.comm_us = t0.elapsed().as_secs_f64() * 1e6;
     timings.transpose_us = transpose_spent; // informational: overlapped inside comm_us
@@ -154,6 +196,30 @@ mod tests {
     fn rendezvous_sized_chunks_over_mpi() {
         // 128×256 on 2 parts → chunks of 64×128 complex = 64 KiB > eager.
         check_variant(128, 256, 2, PortKind::Mpi);
+    }
+
+    #[test]
+    fn tiny_wire_chunks_all_ports() {
+        // Small chunk policy: each per-root message (4×8 complex =
+        // 256 B) splits into four 64 B wire chunks placed on arrival.
+        use crate::collectives::ChunkPolicy;
+        for kind in PortKind::ALL {
+            let (rows, cols, parts) = (16, 32, 4);
+            let cluster = Cluster::new(parts, kind, None).unwrap();
+            let pieces = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.set_chunk_policy(ChunkPolicy::new(64, 2));
+                let slab = Slab::synthetic(rows, cols, parts, ctx.rank);
+                run(&comm, &slab, 1, &NativeRowFft).0
+            });
+            let mut assembled = Vec::with_capacity(rows * cols);
+            for p in pieces {
+                assembled.extend(p);
+            }
+            let reference = serial_fft2_transposed(&Slab::whole(rows, cols).data, rows, cols);
+            let err = rel_error(&assembled, &reference);
+            assert!(err < 1e-4, "rel err {err} ({kind})");
+        }
     }
 
     #[test]

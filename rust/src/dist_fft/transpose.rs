@@ -59,6 +59,53 @@ pub fn place_chunk_transposed(
     }
 }
 
+/// Transpose-place an arbitrary *window* of a `src_rows × src_cols`
+/// chunk: `elems` holds the chunk's elements `[elem_offset, elem_offset +
+/// elems.len())` in row-major order, and each lands at the position
+/// `place_chunk_transposed` would have put it.
+///
+/// This is the unpack step of the chunk-pipelined exchange: wire chunk
+/// *k* is placed while chunk *k+1* is still in flight, so the window is
+/// whatever byte range the [`crate::collectives::ChunkPolicy`] cut — any
+/// element-aligned offset, including mid-row.
+pub fn place_chunk_slice_transposed(
+    elems: &[Complex32],
+    elem_offset: usize,
+    src_rows: usize,
+    src_cols: usize,
+    slab: &mut [Complex32],
+    slab_cols: usize,
+    col0: usize,
+) {
+    assert!(
+        elem_offset + elems.len() <= src_rows * src_cols,
+        "window [{elem_offset}, +{}) exceeds chunk {src_rows}×{src_cols}",
+        elems.len()
+    );
+    assert!(col0 + src_rows <= slab_cols, "chunk overflows slab columns");
+    assert!(
+        slab.len() >= src_cols * slab_cols,
+        "slab too small: {} < {}",
+        slab.len(),
+        src_cols * slab_cols
+    );
+
+    // Walk the window one source-row segment at a time so the read side
+    // stays contiguous; the scattered side is the strided write, as in
+    // the whole-chunk path.
+    let mut i = 0;
+    while i < elems.len() {
+        let e = elem_offset + i;
+        let r = e / src_cols;
+        let c0 = e % src_cols;
+        let run = (src_cols - c0).min(elems.len() - i);
+        for (k, v) in elems[i..i + run].iter().enumerate() {
+            slab[(c0 + k) * slab_cols + col0 + r] = *v;
+        }
+        i += run;
+    }
+}
+
 /// Full out-of-place transpose of a row-major `rows × cols` matrix
 /// (serial reference path).
 pub fn transpose(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32> {
@@ -125,6 +172,50 @@ mod tests {
             2.0, 5.0, 12.0, 15.0,
         ];
         assert_eq!(slab.iter().map(|c| c.re).collect::<Vec<_>>(), expect);
+    }
+
+    #[test]
+    fn slice_placement_matches_whole_chunk() {
+        // Placing a chunk window by window — at awkward, mid-row split
+        // points — must equal the one-shot whole-chunk placement.
+        let (src_rows, src_cols) = (6, 10);
+        let chunk = grid(src_rows, src_cols, 7);
+        let slab_cols = 8;
+        let mut whole = vec![Complex32::ZERO; src_cols * slab_cols];
+        place_chunk_transposed(&chunk, src_rows, src_cols, &mut whole, slab_cols, 2);
+
+        for window in [1usize, 3, 7, 10, 13, 60] {
+            let mut piecewise = vec![Complex32::ZERO; src_cols * slab_cols];
+            let mut off = 0;
+            while off < chunk.len() {
+                let hi = (off + window).min(chunk.len());
+                place_chunk_slice_transposed(
+                    &chunk[off..hi],
+                    off,
+                    src_rows,
+                    src_cols,
+                    &mut piecewise,
+                    slab_cols,
+                    2,
+                );
+                off = hi;
+            }
+            assert_eq!(piecewise, whole, "window {window}");
+        }
+    }
+
+    #[test]
+    fn empty_slice_placement_is_noop() {
+        let mut slab = vec![Complex32::ONE; 4];
+        place_chunk_slice_transposed(&[], 4, 2, 2, &mut slab, 2, 0);
+        assert_eq!(slab, vec![Complex32::ONE; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds chunk")]
+    fn slice_window_overflow_detected() {
+        let mut slab = vec![Complex32::ZERO; 4];
+        place_chunk_slice_transposed(&[Complex32::ZERO; 3], 2, 2, 2, &mut slab, 2, 0);
     }
 
     #[test]

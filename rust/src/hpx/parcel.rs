@@ -40,21 +40,30 @@ pub mod actions {
     pub const SHUTDOWN: ActionId = 0xFFFF;
 }
 
-/// Reference-counted byte payload.
+/// Reference-counted byte payload: an `Arc`-backed buffer plus a
+/// `[off, off + len)` window into it.
 ///
-/// `Payload::clone` is O(1) (Arc bump). Ports that model copying
+/// `Payload::clone` is O(1) (Arc bump), and so is [`Payload::slice`],
+/// which produces a sub-view sharing the same allocation — the mechanism
+/// that lets the chunked collectives split a rank's buffer into wire
+/// chunks with zero copies on the LCI path. Ports that model copying
 /// transports call [`Payload::deep_copy`] instead, which duplicates the
 /// bytes and is counted in port statistics.
 #[derive(Clone, Debug)]
-pub struct Payload(Arc<Vec<u8>>);
+pub struct Payload {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
 
 impl Payload {
     pub fn new(bytes: Vec<u8>) -> Self {
-        Self(Arc::new(bytes))
+        let len = bytes.len();
+        Self { buf: Arc::new(bytes), off: 0, len }
     }
 
     pub fn empty() -> Self {
-        Self(Arc::new(Vec::new()))
+        Self::new(Vec::new())
     }
 
     pub fn from_f32(xs: &[f32]) -> Self {
@@ -62,35 +71,58 @@ impl Payload {
     }
 
     pub fn len(&self) -> usize {
-        self.0.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.0.is_empty()
+        self.len == 0
     }
 
     pub fn as_bytes(&self) -> &[u8] {
-        &self.0
+        &self.buf[self.off..self.off + self.len]
     }
 
     pub fn to_f32(&self) -> Vec<f32> {
-        crate::util::bytes::bytes_to_f32(&self.0)
+        crate::util::bytes::bytes_to_f32(self.as_bytes())
+    }
+
+    /// Zero-copy sub-view of `[offset, offset + len)` within this
+    /// payload: an Arc bump, no byte is touched. The slice keeps the
+    /// whole backing buffer alive for as long as it exists — acceptable
+    /// for wire chunks, whose lifetime ends at delivery.
+    ///
+    /// # Panics
+    /// If `offset + len` exceeds the payload length.
+    pub fn slice(&self, offset: usize, len: usize) -> Payload {
+        assert!(
+            offset.checked_add(len).is_some_and(|end| end <= self.len),
+            "slice [{offset}, {offset}+{len}) out of bounds for payload of {} bytes",
+            self.len
+        );
+        Self { buf: Arc::clone(&self.buf), off: self.off + offset, len }
     }
 
     /// Duplicate the underlying bytes (a real memcpy) — used by ports
     /// whose protocol implies a copy (TCP framing, MPI eager buffers).
     pub fn deep_copy(&self) -> Self {
-        Self(Arc::new(self.0.as_ref().clone()))
+        Self::new(self.as_bytes().to_vec())
     }
 
-    /// Take the bytes out, cloning only if other references exist.
+    /// Take the bytes out, cloning only if other references exist or this
+    /// payload is a sub-view.
     pub fn into_vec(self) -> Vec<u8> {
-        Arc::try_unwrap(self.0).unwrap_or_else(|arc| arc.as_ref().clone())
+        if self.off == 0 && self.len == self.buf.len() {
+            Arc::try_unwrap(self.buf).unwrap_or_else(|arc| arc.as_ref().clone())
+        } else {
+            self.as_bytes().to_vec()
+        }
     }
 
     /// True if this payload shares storage with `other` (zero-copy check).
+    /// Sub-views created by [`Payload::slice`] share their parent's
+    /// storage even though they expose different windows.
     pub fn shares_storage(&self, other: &Payload) -> bool {
-        Arc::ptr_eq(&self.0, &other.0)
+        Arc::ptr_eq(&self.buf, &other.buf)
     }
 }
 
@@ -177,6 +209,70 @@ mod tests {
         let ptr = p.as_bytes().as_ptr();
         let v = p.into_vec();
         assert_eq!(v.as_ptr(), ptr, "unique payload should move, not copy");
+    }
+
+    #[test]
+    fn slice_is_zero_copy_view() {
+        let p = Payload::new((0u8..100).collect());
+        let s = p.slice(10, 25);
+        assert!(s.shares_storage(&p), "slice must alias the parent allocation");
+        assert_eq!(s.len(), 25);
+        assert_eq!(s.as_bytes(), &(10u8..35).collect::<Vec<_>>()[..]);
+        // The parent window is untouched.
+        assert_eq!(p.len(), 100);
+    }
+
+    #[test]
+    fn nested_slices_compose_offsets() {
+        let p = Payload::new((0u8..64).collect());
+        let s = p.slice(16, 32).slice(8, 8);
+        assert!(s.shares_storage(&p));
+        assert_eq!(s.as_bytes(), &(24u8..32).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn full_and_empty_slices() {
+        let p = Payload::new(vec![1, 2, 3]);
+        assert_eq!(p.slice(0, 3).as_bytes(), p.as_bytes());
+        assert!(p.slice(3, 0).is_empty());
+        assert!(p.slice(1, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_beyond_end_panics() {
+        Payload::new(vec![0; 8]).slice(4, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_overflowing_offset_panics() {
+        Payload::new(vec![0; 8]).slice(usize::MAX, 2);
+    }
+
+    #[test]
+    fn deep_copy_of_slice_is_windowed() {
+        let p = Payload::new((0u8..16).collect());
+        let s = p.slice(4, 8);
+        let d = s.deep_copy();
+        assert!(!d.shares_storage(&p));
+        assert_eq!(d.as_bytes(), s.as_bytes());
+        assert_eq!(d.len(), 8);
+    }
+
+    #[test]
+    fn into_vec_of_slice_copies_window_only() {
+        let p = Payload::new((0u8..16).collect());
+        let v = p.slice(2, 5).into_vec();
+        assert_eq!(v, (2u8..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sliced_payload_encodes_window() {
+        let payload = Payload::new((0u8..32).collect()).slice(8, 16);
+        let p = Parcel::new(0, 1, actions::P2P, 5, payload);
+        let q = Parcel::decode(&p.encode());
+        assert_eq!(q.payload.as_bytes(), &(8u8..24).collect::<Vec<_>>()[..]);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
 use hpx_fft::bench_harness::{fig3, fig45, runner::measure};
 use hpx_fft::cli::Args;
-use hpx_fft::collectives::{AllToAllAlgo, Communicator};
+use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use hpx_fft::config::{BenchConfig, ClusterSpec};
 use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
 use hpx_fft::hpx::parcel::Payload;
@@ -31,14 +31,18 @@ repro — HPX communication benchmark reproduction (Strack & Pflüger 2025)
 USAGE:
   repro info
   repro fft [--rows N] [--cols N] [--nodes N] [--port tcp|mpi|lci]
-            [--variant all-to-all|scatter] [--algo linear|pairwise|bruck|hpx-root]
+            [--variant all-to-all|scatter]
+            [--algo linear|pairwise|pairwise-chunked|bruck|hpx-root]
+            [--chunk-bytes N] [--inflight N]
             [--threads N] [--engine native|pjrt] [--artifacts DIR]
             [--net] [--no-verify]
   repro baseline [--rows N] [--cols N] [--nodes N] [--threads N] [--net]
   repro bench chunk-size      [--quick] [--reps N] [--out DIR]
+                              [--chunk-bytes N] [--inflight N]
   repro bench strong-scaling  --variant all-to-all|scatter
                               [--quick] [--reps N] [--grid N] [--out DIR]
   repro bench collectives     [--nodes N] [--bytes N] [--reps N]
+                              [--chunk-bytes N] [--inflight N]
   repro simulate [--grid N] [--port tcp|mpi|lci]
                  [--variant all-to-all|scatter|fftw3] [--nodes-list 1,2,4,8,16]
   repro help
@@ -120,10 +124,20 @@ fn parse_engine(args: &Args) -> Result<ComputeEngine> {
     }
 }
 
+/// Parse the `--chunk-bytes` / `--inflight` pair into a [`ChunkPolicy`].
+fn parse_chunk_policy(args: &Args) -> Result<ChunkPolicy> {
+    let default = ChunkPolicy::default();
+    let chunk_bytes: usize = args.get_or("chunk-bytes", default.chunk_bytes)?;
+    let inflight: usize = args.get_or("inflight", default.inflight)?;
+    anyhow::ensure!(chunk_bytes > 0, "--chunk-bytes must be positive");
+    anyhow::ensure!(inflight > 0, "--inflight must be positive");
+    Ok(ChunkPolicy::new(chunk_bytes, inflight))
+}
+
 fn cmd_fft(args: &Args) -> Result<()> {
     args.check_known(&[
-        "rows", "cols", "nodes", "port", "variant", "algo", "threads", "engine", "artifacts",
-        "net", "no-verify",
+        "rows", "cols", "nodes", "port", "variant", "algo", "chunk-bytes", "inflight", "threads",
+        "engine", "artifacts", "net", "no-verify",
     ])?;
     let config = DistFftConfig {
         rows: args.get_or("rows", 256usize)?,
@@ -132,6 +146,7 @@ fn cmd_fft(args: &Args) -> Result<()> {
         port: args.get_or("port", PortKind::Lci)?,
         variant: args.get_or("variant", Variant::Scatter)?,
         algo: args.get_or("algo", AllToAllAlgo::HpxRoot)?,
+        chunk: parse_chunk_policy(args)?,
         threads_per_locality: args.get_or("threads", 2usize)?,
         net: args.get_bool("net").then(NetModel::infiniband_hdr),
         engine: parse_engine(args)?,
@@ -149,10 +164,11 @@ fn cmd_fft(args: &Args) -> Result<()> {
         cp.fft2_us / 1e3
     );
     println!(
-        "traffic: {} msgs, {} bytes, {} copies, {} rendezvous",
+        "traffic: {} msgs, {} bytes, {} copies ({} B copied), {} rendezvous",
         report.stats.msgs_sent,
         report.stats.bytes_sent,
         report.stats.payload_copies,
+        report.stats.bytes_copied,
         report.stats.rendezvous_handshakes
     );
     match report.rel_error {
@@ -193,20 +209,29 @@ fn cmd_baseline(args: &Args) -> Result<()> {
 
 fn bench_config(args: &Args) -> Result<BenchConfig> {
     let mut cfg = if args.get_bool("quick") { BenchConfig::quick() } else { BenchConfig::default() };
+    // Config file first, explicit CLI flags override it.
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(path)?;
+    }
     cfg.reps = args.get_or("reps", cfg.reps)?;
     cfg.live_grid = args.get_or("grid", cfg.live_grid)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
+    cfg.pipeline.chunk_bytes = args.get_or("chunk-bytes", cfg.pipeline.chunk_bytes)?;
+    cfg.pipeline.inflight = args.get_or("inflight", cfg.pipeline.inflight)?;
+    anyhow::ensure!(
+        cfg.pipeline.chunk_bytes > 0 && cfg.pipeline.inflight > 0,
+        "--chunk-bytes/--inflight must be positive"
+    );
     if let Some(out) = args.get("out") {
         cfg.out_dir = out.to_string();
-    }
-    if let Some(path) = args.get("config") {
-        cfg.apply_file(path)?;
     }
     Ok(cfg)
 }
 
 fn cmd_bench_chunk(args: &Args) -> Result<()> {
-    args.check_known(&["quick", "reps", "grid", "threads", "out", "config"])?;
+    args.check_known(&[
+        "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight",
+    ])?;
     let cfg = bench_config(args)?;
     println!("Fig. 3 sweep: {} reps/point, chunk sizes {:?}\n", cfg.reps, cfg.chunk_sizes);
     let points = fig3::run(&cfg)?;
@@ -216,7 +241,9 @@ fn cmd_bench_chunk(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench_scaling(args: &Args) -> Result<()> {
-    args.check_known(&["variant", "quick", "reps", "grid", "threads", "out", "config"])?;
+    args.check_known(&[
+        "variant", "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight",
+    ])?;
     let variant: Variant = args.get_or("variant", Variant::Scatter)?;
     let cfg = bench_config(args)?;
     println!(
@@ -287,18 +314,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// Extra ablation: compare all-to-all algorithms head to head (the
 /// design-choice study DESIGN.md calls out).
 fn cmd_bench_collectives(args: &Args) -> Result<()> {
-    args.check_known(&["nodes", "bytes", "reps", "port"])?;
+    args.check_known(&["nodes", "bytes", "reps", "port", "chunk-bytes", "inflight"])?;
     let nodes: usize = args.get_or("nodes", 4usize)?;
     let bytes: usize = args.get_or("bytes", 256 * 1024usize)?;
     let reps: usize = args.get_or("reps", 20usize)?;
     let port: PortKind = args.get_or("port", PortKind::Lci)?;
+    let policy = parse_chunk_policy(args)?;
     let cluster = Cluster::new(nodes, port, Some(NetModel::infiniband_hdr()))?;
-    println!("all-to-all ablation: {nodes} localities, {} per chunk, {port} port\n", fig3::human_bytes(bytes as u64));
+    println!(
+        "all-to-all ablation: {nodes} localities, {} per chunk, {port} port, \
+         pipeline {} × {} in flight\n",
+        fig3::human_bytes(bytes as u64),
+        fig3::human_bytes(policy.chunk_bytes as u64),
+        policy.inflight
+    );
     let mut t = hpx_fft::metrics::table::Table::new(&["algorithm", "mean", "±95% CI"]);
     for algo in AllToAllAlgo::ALL {
         let stats = measure(2, reps, || {
             let times = cluster.run(|ctx| {
                 let comm = Communicator::from_ctx(ctx);
+                comm.set_chunk_policy(policy);
                 let chunks: Vec<Payload> =
                     (0..nodes).map(|_| Payload::new(vec![0u8; bytes])).collect();
                 let t0 = std::time::Instant::now();

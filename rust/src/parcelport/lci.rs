@@ -96,6 +96,21 @@ mod tests {
         let got = port.recv(1, 0, actions::P2P, 1);
         assert!(got.shares_storage(&payload), "LCI must not copy the payload");
         assert_eq!(port.stats().payload_copies, 0);
+        assert_eq!(port.stats().bytes_copied, 0);
+    }
+
+    #[test]
+    fn sliced_payload_stays_zero_copy() {
+        // A wire chunk produced by `Payload::slice` must hand the same
+        // allocation to the receiver — the chunked-collective guarantee.
+        let port = LciParcelport::new(2, None);
+        let whole = Payload::new(vec![9u8; 4096]);
+        let chunk = whole.slice(1024, 2048);
+        port.send(Parcel::new(0, 1, actions::P2P, 2, chunk.clone()));
+        let got = port.recv(1, 0, actions::P2P, 2);
+        assert!(got.shares_storage(&whole), "slice chunk must not be copied");
+        assert_eq!(got.as_bytes(), chunk.as_bytes());
+        assert_eq!(port.stats().bytes_copied, 0);
     }
 
     #[test]

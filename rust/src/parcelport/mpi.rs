@@ -92,7 +92,7 @@ impl Parcelport for MpiParcelport {
             // Self-sends always take this path (MPI self-communication is
             // a local copy, never RDMA).
             self.stats.eager_sends.fetch_add(1, Ordering::Relaxed);
-            self.stats.record_copy();
+            self.stats.record_copy(size);
             let copied = Parcel { payload: parcel.payload.deep_copy(), ..parcel };
             self.mailboxes[copied.dest].deliver(copied);
         } else {

@@ -15,6 +15,9 @@ pub struct PortStats {
     /// Payload memcpys performed by the port itself (framing buffers,
     /// eager bounce buffers). Zero-copy ports keep this at 0.
     pub payload_copies: AtomicU64,
+    /// Total bytes those protocol copies moved. The chunked-collective
+    /// acceptance check pins this flat for LCI while TCP/MPI's grows.
+    pub bytes_copied: AtomicU64,
     /// Rendezvous RTS/CTS handshakes completed (MPI port).
     pub rendezvous_handshakes: AtomicU64,
     /// Eager-path sends (MPI port).
@@ -29,8 +32,10 @@ impl PortStats {
         self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
-    pub fn record_copy(&self) {
+    /// Record one protocol memcpy of `bytes` payload bytes.
+    pub fn record_copy(&self, bytes: usize) {
         self.payload_copies.fetch_add(1, Ordering::Relaxed);
+        self.bytes_copied.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> PortStatsSnapshot {
@@ -38,6 +43,7 @@ impl PortStats {
             msgs_sent: self.msgs_sent.load(Ordering::Relaxed),
             bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
             payload_copies: self.payload_copies.load(Ordering::Relaxed),
+            bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
             rendezvous_handshakes: self.rendezvous_handshakes.load(Ordering::Relaxed),
             eager_sends: self.eager_sends.load(Ordering::Relaxed),
             modeled_wire_us: self.modeled_wire_us.load(Ordering::Relaxed),
@@ -51,6 +57,7 @@ pub struct PortStatsSnapshot {
     pub msgs_sent: u64,
     pub bytes_sent: u64,
     pub payload_copies: u64,
+    pub bytes_copied: u64,
     pub rendezvous_handshakes: u64,
     pub eager_sends: u64,
     pub modeled_wire_us: u64,
@@ -63,6 +70,7 @@ impl PortStatsSnapshot {
             msgs_sent: self.msgs_sent - earlier.msgs_sent,
             bytes_sent: self.bytes_sent - earlier.bytes_sent,
             payload_copies: self.payload_copies - earlier.payload_copies,
+            bytes_copied: self.bytes_copied - earlier.bytes_copied,
             rendezvous_handshakes: self.rendezvous_handshakes - earlier.rendezvous_handshakes,
             eager_sends: self.eager_sends - earlier.eager_sends,
             modeled_wire_us: self.modeled_wire_us - earlier.modeled_wire_us,
@@ -79,11 +87,22 @@ mod tests {
         let st = PortStats::default();
         st.record_send(100);
         st.record_send(50);
-        st.record_copy();
+        st.record_copy(64);
         let snap = st.snapshot();
         assert_eq!(snap.msgs_sent, 2);
         assert_eq!(snap.bytes_sent, 150);
         assert_eq!(snap.payload_copies, 1);
+        assert_eq!(snap.bytes_copied, 64);
+    }
+
+    #[test]
+    fn copy_bytes_accumulate() {
+        let st = PortStats::default();
+        st.record_copy(100);
+        st.record_copy(28);
+        let snap = st.snapshot();
+        assert_eq!(snap.payload_copies, 2);
+        assert_eq!(snap.bytes_copied, 128);
     }
 
     #[test]

@@ -149,7 +149,7 @@ fn reader_loop(mut stream: TcpStream, inner: &Inner, me: LocalityId) {
         }
         // Decode copies the payload out of the frame (counted).
         let parcel = Parcel::decode(&frame);
-        inner.stats.record_copy();
+        inner.stats.record_copy(parcel.payload.len());
         debug_assert_eq!(parcel.dest, me, "frame routed to wrong locality");
         inner.mailboxes[me].deliver(parcel);
     }
@@ -177,13 +177,13 @@ impl Parcelport for TcpParcelport {
 
         // Frame-encode copy (header + payload into one buffer).
         let frame = parcel.encode();
-        inner.stats.record_copy();
+        inner.stats.record_copy(frame.len());
 
         if parcel.src == parcel.dest {
             // Local short-circuit: still decode (the second copy), skip
             // the kernel.
             let decoded = Parcel::decode(&frame);
-            inner.stats.record_copy();
+            inner.stats.record_copy(decoded.payload.len());
             inner.mailboxes[parcel.dest].deliver(decoded);
             return;
         }

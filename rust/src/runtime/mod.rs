@@ -13,6 +13,15 @@
 //!   FFTs through the artifact instead of the native kernel.
 
 pub mod artifact;
+
+// The real compute service needs the `xla` crate (PJRT C bindings),
+// which the offline build image does not ship. The `pjrt` cargo feature
+// gates it; without the feature an API-compatible stub keeps every
+// caller compiling and reports at runtime that PJRT is unavailable.
+#[cfg(feature = "pjrt")]
+pub mod service;
+#[cfg(not(feature = "pjrt"))]
+#[path = "service_stub.rs"]
 pub mod service;
 
 pub use artifact::{load_manifest, ArtifactKind, ManifestEntry};

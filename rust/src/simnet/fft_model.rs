@@ -115,10 +115,14 @@ fn all_to_all_schedules(params: &FftModelParams, algo: AllToAllAlgo) -> Vec<Sche
                     }
                 }
             }
-            AllToAllAlgo::Pairwise => {
+            AllToAllAlgo::Pairwise | AllToAllAlgo::PairwiseChunked => {
+                // The chunked flavour shares the pairwise round schedule;
+                // its intra-round chunk pipelining is a live-fabric
+                // effect (send-pool overlap) the per-message DES does not
+                // subdivide further.
                 for r in 1..n {
-                    let peer = if n.is_power_of_two() { me ^ r } else { (me + r) % n };
-                    let from = if n.is_power_of_two() { me ^ r } else { (me + n - r) % n };
+                    // Same pairing as the live collective, by construction.
+                    let (peer, from) = crate::collectives::all_to_all::pairwise_peers(me, n, r);
                     sched.send(peer, chunk, (r * n * n + me * n + peer) as u64);
                     sched.recv(from, (r * n * n + from * n + me) as u64);
                 }

@@ -4,19 +4,29 @@
 
 use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
 use hpx_fft::bench_harness::{fig3, fig45};
-use hpx_fft::collectives::AllToAllAlgo;
+use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator, ScatterAlgo};
 use hpx_fft::config::BenchConfig;
 use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
-use hpx_fft::parcelport::{NetModel, PortKind};
+use hpx_fft::hpx::parcel::Payload;
+use hpx_fft::hpx::runtime::Cluster;
+use hpx_fft::parcelport::{NetModel, PortKind, PortStatsSnapshot};
 
 /// Every (port × variant × algorithm) combination computes the identical
 /// transform: the full equivalence matrix of the communication layer.
+/// The chunk policy is set small enough that the chunked algorithms'
+/// wire traffic really splits (32×32 on 4 ranks → 512 B messages over
+/// 128 B chunks).
 #[test]
 fn full_equivalence_matrix() {
     let mut reference: Option<f64> = None;
     for port in PortKind::ALL {
         for variant in [Variant::AllToAll, Variant::Scatter] {
-            for algo in [AllToAllAlgo::Linear, AllToAllAlgo::Pairwise, AllToAllAlgo::HpxRoot] {
+            for algo in [
+                AllToAllAlgo::Linear,
+                AllToAllAlgo::Pairwise,
+                AllToAllAlgo::PairwiseChunked,
+                AllToAllAlgo::HpxRoot,
+            ] {
                 let config = DistFftConfig {
                     rows: 32,
                     cols: 32,
@@ -24,6 +34,7 @@ fn full_equivalence_matrix() {
                     port,
                     variant,
                     algo,
+                    chunk: ChunkPolicy::new(128, 2),
                     threads_per_locality: 1,
                     net: None,
                     engine: ComputeEngine::Native,
@@ -145,8 +156,162 @@ fn distributed_fft_through_pjrt_engine() {
         verify: true,
         ..Default::default()
     };
-    let report = driver::run(&config).unwrap();
+    let report = match driver::run(&config) {
+        Ok(report) => report,
+        // Skip only the stub's build-without-feature error; any other
+        // failure (engine crash, bad artifacts) must fail the test.
+        Err(e) if format!("{e:#}").contains("not compiled in") => {
+            eprintln!("skipping: pjrt engine unavailable ({e})");
+            return;
+        }
+        Err(e) => panic!("pjrt distributed run failed: {e:#}"),
+    };
     assert!(report.rel_error.unwrap() < 1e-4, "{:?}", report.rel_error);
+}
+
+/// The zero-copy acceptance check: chunking a collective adds protocol
+/// copies on the copying ports (TCP framing, MPI eager bounce buffers)
+/// but must add **zero** copied bytes on LCI, whose wire chunks are
+/// Arc-backed `Payload::slice` views handed through as-is.
+#[test]
+fn chunking_copy_accounting_per_port() {
+    let n = 2;
+    let bytes = 256 * 1024; // monolithic MPI takes the zero-copy rendezvous path
+    for kind in PortKind::ALL {
+        let run_once = |chunked: bool| -> PortStatsSnapshot {
+            let cluster = Cluster::new(n, kind, None).unwrap();
+            let before = cluster.fabric().stats();
+            cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                // 32 KiB chunks: MPI-eager-sized, 8 per message.
+                comm.set_chunk_policy(ChunkPolicy::new(32 * 1024, 2));
+                let chunks: Vec<Payload> =
+                    (0..n).map(|_| Payload::new(vec![7u8; bytes])).collect();
+                let algo =
+                    if chunked { AllToAllAlgo::PairwiseChunked } else { AllToAllAlgo::Pairwise };
+                comm.all_to_all(chunks, algo);
+            });
+            cluster.fabric().stats().since(&before)
+        };
+        let mono = run_once(false);
+        let chunked = run_once(true);
+        match kind {
+            PortKind::Lci => {
+                assert_eq!(mono.bytes_copied, 0, "LCI monolithic must not copy");
+                assert_eq!(chunked.bytes_copied, 0, "LCI chunking must add zero copies");
+            }
+            PortKind::Mpi | PortKind::Tcp => {
+                assert!(
+                    chunked.bytes_copied > mono.bytes_copied,
+                    "{kind}: chunking must surface protocol copies \
+                     (mono {} vs chunked {})",
+                    mono.bytes_copied,
+                    chunked.bytes_copied
+                );
+            }
+        }
+        assert!(chunked.msgs_sent > mono.msgs_sent, "{kind}: chunking splits messages");
+    }
+}
+
+/// One exchange+unpack round of the acceptance workload: every received
+/// byte lands in a destination buffer (the benchmark stand-in for the
+/// FFT's transpose-unpack). Setup (communicator, send pool, buffers) is
+/// excluded from the timing; returns the slowest rank's exchange+unpack
+/// wall-clock in µs and asserts the delivered contents.
+fn exchange_and_unpack_once(cluster: &Cluster, n: usize, per_rank: usize, chunked: bool) -> f64 {
+    let times = cluster.run(|ctx| {
+        let comm = Communicator::from_ctx(ctx);
+        comm.set_chunk_policy(ChunkPolicy::new(1 << 20, 4)); // tuned: 1 MiB × 4
+        comm.warm_chunk_pool();
+        let chunks: Vec<Payload> =
+            (0..n).map(|_| Payload::new(vec![ctx.rank as u8; per_rank])).collect();
+        let mut dest = vec![0u8; n * per_rank];
+        let t0 = std::time::Instant::now();
+        if chunked {
+            comm.all_to_all_chunked_each(chunks, |src, off, p| {
+                dest[src * per_rank + off..src * per_rank + off + p.len()]
+                    .copy_from_slice(p.as_bytes());
+            });
+        } else {
+            let received = comm.all_to_all(chunks, AllToAllAlgo::Pairwise);
+            for (src, p) in received.into_iter().enumerate() {
+                dest[src * per_rank..(src + 1) * per_rank].copy_from_slice(p.as_bytes());
+            }
+        }
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        let delivered = (0..n).all(|src| {
+            dest[src * per_rank] == src as u8 && dest[(src + 1) * per_rank - 1] == src as u8
+        });
+        assert!(delivered, "unpacked bytes must carry the source rank");
+        us
+    });
+    times.into_iter().fold(0.0, f64::max)
+}
+
+/// Deterministic half of the acceptance check, always run: the chunked
+/// exchange+unpack delivers the right bytes and leaves LCI's
+/// copied-bytes counter untouched (every wire chunk is a zero-copy
+/// `Payload::slice` handed through the fabric as-is).
+#[test]
+fn chunked_exchange_zero_copy_and_correct() {
+    let n = 8;
+    let per_rank = 4 << 20; // 4 MiB per-rank buffers (the ISSUE scenario)
+    let cluster = Cluster::new(n, PortKind::Lci, Some(NetModel::infiniband_hdr())).unwrap();
+    exchange_and_unpack_once(&cluster, n, per_rank, false);
+    exchange_and_unpack_once(&cluster, n, per_rank, true);
+    assert_eq!(cluster.fabric().stats().bytes_copied, 0);
+}
+
+/// The timing half: on the in-process LCI fabric with the IB-HDR wire
+/// model (N=8 localities, 4 MiB per-rank buffers), the pipelined chunked
+/// exchange beats the monolithic pairwise exchange wall-clock — chunk
+/// sends spin the modeled wire time concurrently on the send pool, and
+/// the receiver unpacks chunk *k* while chunk *k+1* is still on the
+/// wire. The spin-based wire model needs spare cores to show the
+/// overlap, so this wall-clock comparison is `#[ignore]`d in the default
+/// suite and exercised explicitly (CI bench-smoke job; also demonstrated
+/// by `cargo bench --bench hotpath`).
+#[test]
+#[ignore = "wall-clock comparison; needs an unloaded machine — run with --ignored"]
+fn pairwise_chunked_beats_monolithic_under_netmodel() {
+    let n = 8;
+    let per_rank = 4 << 20;
+    let cluster = Cluster::new(n, PortKind::Lci, Some(NetModel::infiniband_hdr())).unwrap();
+    let best = |chunked: bool| -> f64 {
+        (0..3)
+            .map(|_| exchange_and_unpack_once(&cluster, n, per_rank, chunked))
+            .fold(f64::INFINITY, f64::min)
+    };
+    let mono = best(false);
+    let chunked = best(true);
+    assert!(
+        chunked < mono,
+        "pipelined chunked exchange+unpack must beat monolithic: \
+         {chunked:.0} µs vs {mono:.0} µs"
+    );
+}
+
+/// Pipelined scatter agrees with linear scatter across ports (the Fig. 3
+/// building block, chunked).
+#[test]
+fn pipelined_scatter_matches_linear_across_ports() {
+    for kind in PortKind::ALL {
+        let cluster = Cluster::new(3, kind, None).unwrap();
+        let mut results: Vec<Vec<Vec<u8>>> = Vec::new();
+        for algo in ScatterAlgo::ALL {
+            let got = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.set_chunk_policy(ChunkPolicy::new(1000, 2));
+                let chunks = (ctx.rank == 2).then(|| {
+                    (0..3).map(|i| Payload::new(vec![i as u8; 777 * (i + 1)])).collect()
+                });
+                comm.scatter_with_algo(2, chunks, algo).as_bytes().to_vec()
+            });
+            results.push(got);
+        }
+        assert_eq!(results[0], results[1], "{kind}: pipelined deviates from linear");
+    }
 }
 
 /// Stress: repeated runs on one fabric (leak/ordering regression guard).
