@@ -14,6 +14,7 @@ use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use hpx_fft::dist_fft::transpose::place_chunk_transposed;
 use hpx_fft::fft::complex::Complex32;
 use hpx_fft::fft::plan::{Direction, Plan, PlanCache};
+use hpx_fft::fft::{radix2, twiddle};
 use hpx_fft::hpx::mailbox::Mailbox;
 use hpx_fft::hpx::parcel::{actions, Parcel, Payload};
 use hpx_fft::hpx::runtime::Cluster;
@@ -50,19 +51,19 @@ fn main() {
     let mut rows: Vec<(String, f64)> = Vec::new();
     println!("== hotpath micro-benchmarks{} ==\n", if smoke { " (smoke)" } else { "" });
 
-    // FFT kernel.
+    // FFT kernel, power-of-two path.
     for log2n in [10usize, 12, 14] {
         let n = 1 << log2n;
-        let plan = Plan::new(n);
+        let plan = Plan::new(n, Direction::Forward);
         let mut buf = signal(n, 1);
         let flops = plan.flops();
         let mut last_us = 0.0;
         bench(
             &mut rows,
-            &format!("fft radix2 n=2^{log2n}"),
+            &format!("fft plan(radix2) n=2^{log2n}"),
             ((2000 >> (log2n - 10)) / div).max(1),
             || {
-                last_us = time_us(|| plan.execute(&mut buf, Direction::Forward));
+                last_us = time_us(|| plan.execute(&mut buf));
             },
         );
         println!(
@@ -72,17 +73,74 @@ fn main() {
         );
     }
 
-    // Batched rows, serial vs parallel.
+    // The acceptance comparison: the planned power-of-two path must not
+    // be slower than the raw radix-2 kernel it dispatches to (planner
+    // overhead = one enum match per execute).
+    {
+        let n = 1usize << 12;
+        let plan = Plan::new(n, Direction::Forward);
+        let (tw, br) = (twiddle::forward_table(n), twiddle::bit_reverse_table(n));
+        let iters = (2000 / div).max(1);
+        let mut buf = signal(n, 21);
+        let mut planned_us = 0.0;
+        bench(&mut rows, "fft planned pow2 n=2^12", iters, || {
+            planned_us = time_us(|| plan.execute(&mut buf));
+        });
+        let mut buf2 = signal(n, 21);
+        let mut raw_us = 0.0;
+        bench(&mut rows, "fft raw radix2 kernel n=2^12", iters, || {
+            raw_us = time_us(|| radix2::fft_in_place(&mut buf2, &tw, &br));
+        });
+        println!(
+            "{:<44} {:>9.2}×   (≈1.0 expected: same kernel)",
+            "  → planned/raw ratio (pow2 dispatch cost)",
+            planned_us / raw_us.max(1e-9)
+        );
+    }
+
+    // Mixed-radix path: composite (4·2·5·5·5) and prime (Bluestein).
+    for n in [1000usize, 1013] {
+        let plan = Plan::new(n, Direction::Forward);
+        let mut buf = signal(n, 22);
+        let mut scratch = hpx_fft::fft::FftScratch::new();
+        let flops = plan.flops();
+        let mut last_us = 0.0;
+        let label = if plan.uses_bluestein() {
+            format!("fft bluestein n={n}")
+        } else {
+            format!("fft mixed-radix n={n} {:?}", plan.radices())
+        };
+        bench(&mut rows, &label, (1000 / div).max(1), || {
+            last_us = time_us(|| plan.execute_with_scratch(&mut buf, &mut scratch));
+        });
+        println!(
+            "{:<44} {:>10.2} GFLOP/s",
+            format!("  → throughput n={n}"),
+            flops / last_us / 1e3
+        );
+    }
+
+    // Batched rows, serial vs pool-parallel; pow2 and mixed-radix.
     {
         let n = 1024;
         let rows_n = 256;
-        let plan = PlanCache::global().plan(n);
+        let plan = PlanCache::global().plan(n, Direction::Forward);
         let mut buf = signal(rows_n * n, 2);
         bench(&mut rows, "fft_rows 256×1024 serial", (20 / div).max(1), || {
-            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 1);
+            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, 1);
         });
-        bench(&mut rows, "fft_rows 256×1024 4 threads", (20 / div).max(1), || {
-            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 4);
+        bench(&mut rows, "fft_rows 256×1024 pool×4", (20 / div).max(1), || {
+            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, 4);
+        });
+
+        let n = 1000; // non-power-of-two sweep point
+        let plan = PlanCache::global().plan(n, Direction::Forward);
+        let mut buf = signal(rows_n * n, 23);
+        bench(&mut rows, "fft_rows 256×1000 serial", (20 / div).max(1), || {
+            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, 1);
+        });
+        bench(&mut rows, "fft_rows 256×1000 pool×4", (20 / div).max(1), || {
+            hpx_fft::fft::batch::fft_rows_parallel(&mut buf, n, &plan, 4);
         });
     }
 

@@ -30,10 +30,15 @@ use crate::parcelport::{NetModel, PortKind};
 /// One measured point.
 #[derive(Clone, Debug)]
 pub struct ChunkPoint {
+    /// Parcelport measured.
     pub port: PortKind,
+    /// Scatter algorithm measured (monolithic or pipelined).
     pub algo: ScatterAlgo,
+    /// Payload size, bytes.
     pub bytes: u64,
+    /// Live hybrid measurement statistics.
     pub live: RunStats,
+    /// Closed-form cost-model prediction, µs.
     pub model_us: f64,
 }
 
@@ -141,6 +146,7 @@ pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
     Ok(out)
 }
 
+/// Human-readable byte count (`512 B`, `2 KiB`, `16 MiB`).
 pub fn human_bytes(b: u64) -> String {
     if b >= 1 << 20 {
         format!("{} MiB", b >> 20)

@@ -23,14 +23,18 @@ use crate::simnet::fft_model::{predict_fft, FftModelParams, ModelVariant};
 /// Which system one scaling series belongs to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum System {
+    /// The HPX reproduction over one parcelport.
     Hpx(PortKind),
+    /// The FFTW3 MPI+pthreads reference.
     Fftw3,
 }
 
 impl System {
+    /// Every plotted system, in legend order.
     pub const ALL: [System; 4] =
         [System::Hpx(PortKind::Tcp), System::Hpx(PortKind::Mpi), System::Hpx(PortKind::Lci), System::Fftw3];
 
+    /// Legend label.
     pub fn label(&self) -> String {
         match self {
             System::Hpx(p) => format!("hpx-{p}"),
@@ -38,6 +42,7 @@ impl System {
         }
     }
 
+    /// Single-character plot marker.
     pub fn symbol(&self) -> char {
         match self {
             System::Hpx(PortKind::Tcp) => 'T',
@@ -51,7 +56,9 @@ impl System {
 /// One strong-scaling point.
 #[derive(Clone, Debug)]
 pub struct ScalingPoint {
+    /// System this point belongs to.
     pub system: System,
+    /// Locality count.
     pub nodes: usize,
     /// Live hybrid measurement (None for sim-only points).
     pub live: Option<RunStats>,

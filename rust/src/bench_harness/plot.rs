@@ -2,7 +2,9 @@
 
 /// One plotted series.
 pub struct Series {
+    /// Legend label.
     pub label: String,
+    /// Single-character plot marker.
     pub symbol: char,
     /// (x, y) points; both must be positive for log scaling.
     pub points: Vec<(f64, f64)>,

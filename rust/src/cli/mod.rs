@@ -10,11 +10,13 @@ use std::collections::HashMap;
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Subcommand words, in order.
     pub positional: Vec<String>,
     options: HashMap<String, String>,
 }
 
 impl Args {
+    /// Parse an argument vector (without the program name).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
@@ -45,10 +47,12 @@ impl Args {
         Ok(())
     }
 
+    /// Raw value of `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Whether boolean flag `--key` was given (or set truthy).
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

@@ -23,17 +23,24 @@ use crate::hpx::parcel::Payload;
 /// Algorithm selector for [`Communicator::all_to_all`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AllToAllAlgo {
+    /// N² eager sends, all posted at once.
     Linear,
+    /// N−1 balanced exchange rounds (the classic MPI large-message
+    /// algorithm).
     Pairwise,
     /// Pairwise schedule, but each per-rank message travels as pipelined
     /// wire chunks under the communicator's
     /// [`crate::collectives::ChunkPolicy`].
     PairwiseChunked,
+    /// ⌈log2 N⌉ rounds of aggregated chunks (small-message algorithm).
     Bruck,
+    /// Gather-to-root + scatter-from-root — models HPX's root-funneled
+    /// collective, the overhead the paper measures against.
     HpxRoot,
 }
 
 impl AllToAllAlgo {
+    /// Every algorithm, in presentation order.
     pub const ALL: [AllToAllAlgo; 5] = [
         AllToAllAlgo::Linear,
         AllToAllAlgo::Pairwise,
@@ -42,6 +49,7 @@ impl AllToAllAlgo {
         AllToAllAlgo::HpxRoot,
     ];
 
+    /// Lowercase algorithm name (CLI / CSV spelling).
     pub fn name(&self) -> &'static str {
         match self {
             AllToAllAlgo::Linear => "linear",

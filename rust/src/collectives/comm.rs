@@ -28,6 +28,7 @@ pub struct Communicator {
 }
 
 impl Communicator {
+    /// Handle for `rank` of a `size`-rank group over `fabric`.
     pub fn new(fabric: Arc<dyn Parcelport>, rank: LocalityId, size: usize) -> Self {
         assert!(rank < size, "rank {rank} out of range for size {size}");
         assert!(size <= fabric.n_localities(), "communicator larger than fabric");
@@ -41,18 +42,23 @@ impl Communicator {
         }
     }
 
+    /// Communicator spanning the whole cluster of an SPMD closure's
+    /// locality context.
     pub fn from_ctx(ctx: &LocalityCtx) -> Self {
         Self::new(Arc::clone(ctx.fabric()), ctx.rank, ctx.n)
     }
 
+    /// This locality's rank within the communicator.
     pub fn rank(&self) -> LocalityId {
         self.rank
     }
 
+    /// Number of participating ranks.
     pub fn size(&self) -> usize {
         self.size
     }
 
+    /// The underlying parcelport fabric.
     pub fn fabric(&self) -> &Arc<dyn Parcelport> {
         &self.fabric
     }

@@ -6,8 +6,11 @@ use crate::hpx::parcel::Payload;
 /// Element-wise reduction operator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReduceOp {
+    /// Element-wise sum.
     Sum,
+    /// Element-wise maximum.
     Max,
+    /// Element-wise minimum.
     Min,
 }
 

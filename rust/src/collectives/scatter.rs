@@ -26,8 +26,10 @@ pub enum ScatterAlgo {
 }
 
 impl ScatterAlgo {
+    /// Both algorithms, in presentation order.
     pub const ALL: [ScatterAlgo; 2] = [ScatterAlgo::Linear, ScatterAlgo::Pipelined];
 
+    /// Lowercase algorithm name (CLI / CSV spelling).
     pub fn name(&self) -> &'static str {
         match self {
             ScatterAlgo::Linear => "linear",

@@ -41,8 +41,16 @@ impl Default for BenchConfig {
             live_nodes: vec![1, 2, 4, 8],
             sim_nodes: vec![1, 2, 4, 8, 16],
             sim_grid: 1 << 14,
-            // 1 KiB … 16 MiB, ×4 steps (the paper's log sweep).
-            chunk_sizes: (0..8).map(|i| 1024u64 << (2 * i)).collect(),
+            // 1 KiB … 16 MiB, ×4 steps (the paper's log sweep), plus a
+            // non-power-of-two point (1 MB decimal) — wire chunking and
+            // the eager/rendezvous cutovers must not depend on
+            // power-of-two payload sizes.
+            chunk_sizes: {
+                let mut sizes: Vec<u64> = (0..8).map(|i| 1024u64 << (2 * i)).collect();
+                sizes.push(1_000_000);
+                sizes.sort_unstable();
+                sizes
+            },
             pipeline: ChunkPolicy::default(),
             threads: 2,
             out_dir: "bench_out".into(),
@@ -51,14 +59,20 @@ impl Default for BenchConfig {
 }
 
 impl BenchConfig {
-    /// Quick mode for CI / smoke runs.
+    /// Quick mode for CI / smoke runs. Keeps one non-power-of-two sweep
+    /// point (1 kB) so the smoke path exercises ragged wire chunking.
     pub fn quick() -> Self {
         Self {
             reps: 5,
             warmup: 1,
             live_grid: 1 << 8,
             live_nodes: vec![1, 2, 4],
-            chunk_sizes: (0..5).map(|i| 1024u64 << (2 * i)).collect(),
+            chunk_sizes: {
+                let mut sizes: Vec<u64> = (0..5).map(|i| 1024u64 << (2 * i)).collect();
+                sizes.push(1000);
+                sizes.sort_unstable();
+                sizes
+            },
             ..Self::default()
         }
     }
@@ -108,6 +122,9 @@ mod tests {
         assert_eq!(*c.sim_nodes.last().unwrap(), 16);
         assert_eq!(c.chunk_sizes[0], 1024);
         assert_eq!(*c.chunk_sizes.last().unwrap(), 16 << 20);
+        // The sweep carries a non-power-of-two point.
+        assert!(c.chunk_sizes.contains(&1_000_000));
+        assert!(c.chunk_sizes.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
     }
 
     #[test]

@@ -6,15 +6,25 @@ use crate::simnet::ComputeModel;
 /// Hardware description of a benchmark cluster.
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
+    /// Cluster name.
     pub name: &'static str,
+    /// Node count.
     pub nodes: usize,
+    /// Interconnect description.
     pub connection: &'static str,
+    /// Link speed, Gbit/s.
     pub link_gbits: f64,
+    /// CPU sockets per node.
     pub sockets: usize,
+    /// CPU model.
     pub cpu: &'static str,
+    /// Cores per socket.
     pub cores_per_socket: usize,
+    /// Base clock, GHz.
     pub clock_ghz: f64,
+    /// L3 cache per node, MiB.
     pub l3_mb: usize,
+    /// RAM per node, GiB.
     pub ram_gb: usize,
 }
 

@@ -12,6 +12,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse config text.
     pub fn parse(text: &str) -> Result<Self> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
@@ -39,16 +40,19 @@ impl Config {
         Ok(Self { values })
     }
 
+    /// Load and parse a config file.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading config {}", path.as_ref().display()))?;
         Self::parse(&text)
     }
 
+    /// Raw value of a dotted key, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Typed value of a dotted key, if present.
     pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -62,6 +66,7 @@ impl Config {
         }
     }
 
+    /// All dotted keys, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
     }

@@ -212,6 +212,15 @@ mod tests {
     }
 
     #[test]
+    fn matches_serial_non_pow2_all_ports() {
+        // 12×96 over 4 localities, chunked and monolithic exchanges.
+        for kind in PortKind::ALL {
+            check_variant(12, 96, 4, kind, AllToAllAlgo::Pairwise);
+            check_variant(12, 96, 4, kind, AllToAllAlgo::PairwiseChunked);
+        }
+    }
+
+    #[test]
     fn timings_are_populated() {
         let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
         let t = cluster.run(|ctx| {

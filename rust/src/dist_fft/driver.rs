@@ -13,11 +13,14 @@ use std::sync::Arc;
 /// Which communication variant to run (the paper's Fig. 4 vs Fig. 5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
+    /// One synchronized all-to-all collective (Fig. 4).
     AllToAll,
+    /// N scatter collectives with overlapped transposes (Fig. 5).
     Scatter,
 }
 
 impl Variant {
+    /// Lowercase variant name (CLI / CSV spelling).
     pub fn name(&self) -> &'static str {
         match self {
             Variant::AllToAll => "all-to-all",
@@ -48,13 +51,14 @@ pub trait RowFft: Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Native radix-2 engine (the FFTW stand-in).
+/// Native mixed-radix engine (the FFTW stand-in): cached plans, row
+/// batches fanned out over the shared worker pool.
 pub struct NativeRowFft;
 
 impl RowFft for NativeRowFft {
     fn fft_rows(&self, data: &mut [Complex32], row_len: usize, nthreads: usize) {
-        let plan = PlanCache::global().plan(row_len);
-        crate::fft::batch::fft_rows_parallel(data, row_len, &plan, Direction::Forward, nthreads);
+        let plan = PlanCache::global().plan(row_len, Direction::Forward);
+        crate::fft::batch::fft_rows_parallel(data, row_len, &plan, nthreads);
     }
 
     fn name(&self) -> &'static str {
@@ -73,6 +77,7 @@ pub enum ComputeEngine {
 }
 
 impl ComputeEngine {
+    /// Instantiate the selected engine.
     pub fn build(&self) -> anyhow::Result<Arc<dyn RowFft + Send>> {
         match self {
             ComputeEngine::Native => Ok(Arc::new(NativeRowFft)),
@@ -86,6 +91,7 @@ impl ComputeEngine {
 /// Per-step wall-clock timings (µs) for one locality.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepTimings {
+    /// Step-1 row FFTs (length `C`).
     pub fft1_us: f64,
     /// Wall time of the communication phase. In the scatter variant this
     /// *includes* the overlapped transposes.
@@ -93,7 +99,9 @@ pub struct StepTimings {
     /// Time spent placing chunks (subset of `comm_us` for the scatter
     /// variant; a separate serial step for all-to-all).
     pub transpose_us: f64,
+    /// Step-4 row FFTs (length `R`).
     pub fft2_us: f64,
+    /// End-to-end wall time of the four steps.
     pub total_us: f64,
 }
 
@@ -113,12 +121,21 @@ impl StepTimings {
 }
 
 /// Full configuration of one distributed FFT execution.
+///
+/// Grid sides may be any length (the planner factorizes them into
+/// mixed-radix stages; e.g. a 12×96×1000-style slab sweep is fine) as
+/// long as both divide evenly by `localities`.
 #[derive(Clone, Debug)]
 pub struct DistFftConfig {
+    /// Global grid rows (any length, multiple of `localities`).
     pub rows: usize,
+    /// Global grid columns (any length, multiple of `localities`).
     pub cols: usize,
+    /// Number of participating localities.
     pub localities: usize,
+    /// Parcelport backend.
     pub port: PortKind,
+    /// Communication variant (Fig. 4 vs Fig. 5).
     pub variant: Variant,
     /// All-to-all algorithm (ignored by the scatter variant).
     pub algo: AllToAllAlgo,
@@ -130,6 +147,7 @@ pub struct DistFftConfig {
     pub threads_per_locality: usize,
     /// Optional hybrid wire model.
     pub net: Option<NetModel>,
+    /// Row-FFT compute engine.
     pub engine: ComputeEngine,
     /// Compare the distributed result against the serial reference.
     pub verify: bool,
@@ -156,8 +174,11 @@ impl Default for DistFftConfig {
 /// Execution report.
 #[derive(Clone, Debug)]
 pub struct DistFftReport {
+    /// One-line description of the executed configuration.
     pub config_summary: String,
+    /// Per-locality step timings, rank order.
     pub per_rank: Vec<StepTimings>,
+    /// Element-wise max across localities.
     pub critical_path: StepTimings,
     /// Relative L2 error vs. the serial reference (if verified).
     pub rel_error: Option<f64>,
@@ -173,11 +194,17 @@ pub fn run(config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
 
 /// Run on an existing cluster (benchmarks reuse fabrics across reps).
 pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
+    anyhow::ensure!(config.rows >= 1 && config.cols >= 1, "grid must be non-empty");
+    // Any row/column length is supported — the planner is mixed-radix —
+    // but the slab decomposition needs uniform slabs and chunks.
     anyhow::ensure!(
-        config.rows.is_power_of_two() && config.cols.is_power_of_two(),
-        "grid must be power-of-two ({}×{})",
+        config.rows % config.localities == 0 && config.cols % config.localities == 0,
+        "grid {}×{} must divide evenly across {} localities \
+         (rows and cols may be any length, e.g. 12×96, but both must be \
+         multiples of the locality count)",
         config.rows,
-        config.cols
+        config.cols,
+        config.localities
     );
     anyhow::ensure!(
         cluster.n_localities() == config.localities,
@@ -303,9 +330,27 @@ mod tests {
     }
 
     #[test]
-    fn non_pow2_grid_rejected() {
-        let config = DistFftConfig { rows: 24, cols: 32, ..Default::default() };
-        assert!(run(&config).is_err());
+    fn non_pow2_grid_verifies() {
+        // 12×20 on 4 localities: 3 rows and 5 columns per slab — both
+        // mixed-radix lengths, both variants.
+        for variant in [Variant::AllToAll, Variant::Scatter] {
+            let config =
+                DistFftConfig { rows: 12, cols: 20, variant, ..Default::default() };
+            let report = run(&config).unwrap();
+            assert!(
+                report.rel_error.unwrap() < 1e-4,
+                "{variant:?}: {:?}",
+                report.rel_error
+            );
+        }
+    }
+
+    #[test]
+    fn indivisible_grid_rejected() {
+        // 30 rows cannot slab evenly over 4 localities.
+        let config = DistFftConfig { rows: 30, cols: 32, ..Default::default() };
+        let err = run(&config).unwrap_err().to_string();
+        assert!(err.contains("divide evenly"), "{err}");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Distributed 2-D FFT — the paper's application (its Fig. 1).
 //!
 //! The global `R × C` complex grid is slab-decomposed by rows over N
-//! localities. Each locality executes the four steps:
+//! localities. `R` and `C` may be any lengths divisible by N (the
+//! planner is mixed-radix, so e.g. 12×96 slabs run as readily as the
+//! paper's power-of-two grids). Each locality executes the four steps:
 //!
 //! 1. **FFT** every local row (length `C`),
 //! 2. **communicate**: split the local slab column-wise into N chunks and

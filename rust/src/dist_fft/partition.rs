@@ -19,8 +19,10 @@ pub struct Slab {
 }
 
 impl Slab {
-    /// Rows held by each locality (`R` must divide evenly — the paper's
-    /// grids are `2^k` on power-of-two node counts).
+    /// Rows held by each locality. `R` must divide evenly by the
+    /// locality count; beyond that any length is fine — the mixed-radix
+    /// planner handles non-power-of-two rows (the paper's own grids are
+    /// `2^k` on power-of-two node counts, the conservative special case).
     pub fn rows_per_part(global_rows: usize, parts: usize) -> usize {
         assert!(parts > 0, "need at least one part");
         assert!(
@@ -39,6 +41,7 @@ impl Slab {
         global_cols / parts
     }
 
+    /// Rows in this slab.
     pub fn local_rows(&self) -> usize {
         Self::rows_per_part(self.global_rows, self.parts)
     }

@@ -183,6 +183,15 @@ mod tests {
     }
 
     #[test]
+    fn matches_serial_non_pow2_all_ports() {
+        // 12×96 over 4 localities: 3×96 slabs, 24-column chunks — every
+        // row length is mixed-radix.
+        for kind in PortKind::ALL {
+            check_variant(12, 96, 4, kind);
+        }
+    }
+
+    #[test]
     fn single_locality() {
         check_variant(8, 8, 1, PortKind::Lci);
     }

@@ -15,16 +15,16 @@ pub fn serial_fft2_transposed(data: &[Complex32], rows: usize, cols: usize) -> V
     let mut work = data.to_vec();
 
     // Step 1: FFT each row (length cols).
-    let plan_c = PlanCache::global().plan(cols);
-    plan_c.execute_rows(&mut work, Direction::Forward);
+    let plan_c = PlanCache::global().plan(cols, Direction::Forward);
+    plan_c.execute_rows(&mut work);
 
     // Step 2+3: full transpose (what the communication + chunk transposes
     // accomplish across localities).
     let mut t = transpose(&work, rows, cols);
 
     // Step 4: FFT each row of the transposed grid (length rows).
-    let plan_r = PlanCache::global().plan(rows);
-    plan_r.execute_rows(&mut t, Direction::Forward);
+    let plan_r = PlanCache::global().plan(rows, Direction::Forward);
+    plan_r.execute_rows(&mut t);
     t
 }
 
@@ -72,6 +72,15 @@ mod tests {
         let grid = Slab::whole(8, 16).data;
         let fast = serial_fft2_transposed(&grid, 8, 16);
         let slow = oracle_fft2_transposed(&grid, 8, 16);
+        assert!(rel_error(&fast, &slow) < 1e-4, "rel err {}", rel_error(&fast, &slow));
+    }
+
+    #[test]
+    fn matches_oracle_non_pow2() {
+        // Mixed-radix rows and columns (12 = 4·3, 20 = 4·5).
+        let grid = Slab::whole(12, 20).data;
+        let fast = serial_fft2_transposed(&grid, 12, 20);
+        let slow = oracle_fft2_transposed(&grid, 12, 20);
         assert!(rel_error(&fast, &slow) < 1e-4, "rel err {}", rel_error(&fast, &slow));
     }
 

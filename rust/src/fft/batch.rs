@@ -1,24 +1,24 @@
-//! Thread-parallel batched row transforms — the "+pthreads" half of the
-//! paper's FFTW3 MPI+pthreads reference, and the per-locality compute step
-//! of the HPX variants.
+//! Pool-parallel batched row transforms — the "+pthreads" half of the
+//! paper's FFTW3 MPI+pthreads reference, and the per-locality compute
+//! step of the HPX variants.
 //!
 //! Rows of a contiguous row-major `rows × n` buffer are transformed
-//! independently across `nthreads` workers via [`crate::task::parallel_chunks_mut`].
+//! independently. Bands of rows are dispatched to the process-wide
+//! [`crate::task::ThreadPool`] via [`crate::task::parallel_chunks_mut`],
+//! so concurrent localities share one core-sized worker pool instead of
+//! each spawning OS threads per sweep. Each band worker keeps its own
+//! [`FftScratch`], so mixed-radix rows run allocation-free after the
+//! first row.
 
 use super::complex::Complex32;
-use super::plan::{Direction, Plan};
+use super::plan::{Direction, FftScratch, Plan};
 use crate::task::parallel_chunks_mut;
-use std::sync::Arc;
 
 /// Transform every length-`n` row of `data` (`rows × n`, row-major) in
-/// place using `nthreads` threads.
-pub fn fft_rows_parallel(
-    data: &mut [Complex32],
-    n: usize,
-    plan: &Arc<Plan>,
-    dir: Direction,
-    nthreads: usize,
-) {
+/// place, fanning the rows out over up to `nthreads` tasks of the shared
+/// worker pool. The plan carries the direction; any row length the
+/// planner supports (that is: any) is accepted.
+pub fn fft_rows_parallel(data: &mut [Complex32], n: usize, plan: &Plan, nthreads: usize) {
     assert_eq!(plan.len(), n, "plan length mismatch");
     assert!(data.len() % n == 0, "buffer not a whole number of rows");
     let rows = data.len() / n;
@@ -28,14 +28,22 @@ pub fn fft_rows_parallel(
     // §Perf (EXPERIMENTS.md §Perf L3-3): clamp to the machine's actual
     // parallelism — oversubscribing a small host with per-locality
     // worker threads costs ~10% in scheduling overhead for zero gain.
+    // (The global pool is core-sized anyway; the clamp keeps the task
+    // count from fragmenting the rows into needlessly small bands.)
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let nthreads = nthreads.min(hw);
+    let nthreads = nthreads.min(hw).max(1);
+    if nthreads == 1 {
+        plan.execute_rows(data);
+        return;
+    }
     // Give each worker a contiguous band of rows: one chunk = ceil(rows/T)
-    // rows, so threads never share a cache line mid-row.
-    let rows_per_chunk = rows.div_ceil(nthreads.max(1));
+    // rows, so tasks never share a cache line mid-row, and one scratch
+    // serves a whole band.
+    let rows_per_chunk = rows.div_ceil(nthreads);
     parallel_chunks_mut(data, rows_per_chunk * n, nthreads, |_, band| {
+        let mut scratch = FftScratch::new();
         for row in band.chunks_exact_mut(n) {
-            plan.execute(row, dir);
+            plan.execute_with_scratch(row, &mut scratch);
         }
     });
 }
@@ -44,14 +52,15 @@ pub fn fft_rows_parallel(
 /// to calibrate simnet compute times. Runs `reps` rows and returns
 /// `5 n log2 n * reps / elapsed`.
 pub fn measure_row_throughput(n: usize, reps: usize) -> f64 {
-    let plan = Plan::new(n);
+    let plan = Plan::new(n, Direction::Forward);
+    let mut scratch = FftScratch::new();
     let mut row: Vec<Complex32> =
         (0..n).map(|i| Complex32::new((i % 7) as f32 - 3.0, (i % 5) as f32)).collect();
     // Warmup.
-    plan.execute(&mut row, Direction::Forward);
+    plan.execute_with_scratch(&mut row, &mut scratch);
     let start = std::time::Instant::now();
     for _ in 0..reps {
-        plan.execute(&mut row, Direction::Forward);
+        plan.execute_with_scratch(&mut row, &mut scratch);
     }
     let secs = start.elapsed().as_secs_f64().max(1e-9);
     plan.flops() * reps as f64 / secs
@@ -77,13 +86,29 @@ mod tests {
         let n = 64;
         let rows = 33; // ragged vs thread count
         let data = random_grid(9, rows, n);
-        let plan = Arc::new(Plan::new(n));
+        let plan = Plan::new(n, Direction::Forward);
 
         let mut par = data.clone();
-        fft_rows_parallel(&mut par, n, &plan, Direction::Forward, 4);
+        fft_rows_parallel(&mut par, n, &plan, 4);
 
         let mut ser = data.clone();
-        plan.execute_rows(&mut ser, Direction::Forward);
+        plan.execute_rows(&mut ser);
+
+        assert_eq!(flat(&par), flat(&ser));
+    }
+
+    #[test]
+    fn parallel_matches_serial_non_pow2() {
+        let n = 96; // 4·4·2·3 — mixed-radix rows through the pool
+        let rows = 17;
+        let data = random_grid(12, rows, n);
+        let plan = Plan::new(n, Direction::Forward);
+
+        let mut par = data.clone();
+        fft_rows_parallel(&mut par, n, &plan, 4);
+
+        let mut ser = data.clone();
+        plan.execute_rows(&mut ser);
 
         assert_eq!(flat(&par), flat(&ser));
     }
@@ -93,10 +118,11 @@ mod tests {
         let n = 128;
         let rows = 16;
         let data = random_grid(10, rows, n);
-        let plan = Arc::new(Plan::new(n));
+        let fwd = Plan::new(n, Direction::Forward);
+        let inv = Plan::new(n, Direction::Inverse);
         let mut buf = data.clone();
-        fft_rows_parallel(&mut buf, n, &plan, Direction::Forward, 3);
-        fft_rows_parallel(&mut buf, n, &plan, Direction::Inverse, 5);
+        fft_rows_parallel(&mut buf, n, &fwd, 3);
+        fft_rows_parallel(&mut buf, n, &inv, 5);
         assert_close(&flat(&buf), &flat(&data), 1e-4, 1e-3);
     }
 
@@ -104,24 +130,26 @@ mod tests {
     fn single_row_single_thread() {
         let n = 32;
         let data = random_grid(11, 1, n);
-        let plan = Arc::new(Plan::new(n));
+        let plan = Plan::new(n, Direction::Forward);
         let mut a = data.clone();
-        fft_rows_parallel(&mut a, n, &plan, Direction::Forward, 1);
+        fft_rows_parallel(&mut a, n, &plan, 1);
         let mut b = data;
-        plan.execute(&mut b, Direction::Forward);
+        plan.execute(&mut b);
         assert_eq!(flat(&a), flat(&b));
     }
 
     #[test]
     fn empty_grid_is_noop() {
-        let plan = Arc::new(Plan::new(16));
+        let plan = Plan::new(16, Direction::Forward);
         let mut empty: Vec<Complex32> = Vec::new();
-        fft_rows_parallel(&mut empty, 16, &plan, Direction::Forward, 4);
+        fft_rows_parallel(&mut empty, 16, &plan, 4);
     }
 
     #[test]
     fn throughput_measurement_is_positive() {
         let t = measure_row_throughput(256, 10);
         assert!(t > 0.0);
+        let t_mixed = measure_row_throughput(360, 10);
+        assert!(t_mixed > 0.0);
     }
 }

@@ -1,0 +1,187 @@
+//! Bluestein's chirp-z algorithm — O(n log n) DFT for lengths the
+//! Cooley–Tukey factorizer cannot break down (large prime factors).
+//!
+//! The p-point DFT is rewritten as a circular convolution via the
+//! identity `jk = (j² + k² − (k−j)²) / 2`:
+//!
+//! ```text
+//! X[k] = c[k] · Σ_j (x[j]·c[j]) · conj(c)[k−j],   c[j] = e^{∓iπ j²/p}
+//! ```
+//!
+//! The convolution is evaluated with a zero-padded power-of-two FFT of
+//! length `M = next_pow2(2p − 1)` through the radix-2 kernel, so the
+//! fallback reuses the same fast path as every other plan. All tables
+//! (chirp, the kernel's forward spectrum `B`, the radix-2 twiddles) are
+//! precomputed at plan time; execution only touches the caller-provided
+//! convolution scratch buffer.
+//!
+//! The tables here are built directly from [`crate::fft::twiddle`]
+//! rather than through the plan cache: a plan build never re-enters the
+//! cache, so construction stays self-contained and the cache holds only
+//! the lengths users actually requested (not internal convolution
+//! lengths).
+
+use super::complex::Complex32;
+use super::radix2;
+use super::twiddle;
+
+/// A prepared Bluestein transform for one prime (or otherwise
+/// unfactorable) length and one direction.
+pub(crate) struct BluesteinPlan {
+    /// Transform length.
+    p: usize,
+    /// Power-of-two convolution length, `≥ 2p − 1`.
+    m: usize,
+    /// Direction-signed chirp `c[j] = e^{∓iπ j²/p}`, `j in 0..p`.
+    chirp: Vec<Complex32>,
+    /// Forward FFT of the convolution kernel `conj(c)[±j]`, length `m`.
+    b_fft: Vec<Complex32>,
+    /// Forward half-circle table for the length-`m` radix-2 kernel.
+    twiddles: Vec<Complex32>,
+    /// Bit-reversal table for the length-`m` radix-2 kernel.
+    bitrev: Vec<u32>,
+}
+
+impl BluesteinPlan {
+    /// Precompute all tables for a `p`-point transform. The chirp
+    /// `e^{∓iπ j²/p}` is the `2p`-th root of unity at exponent `j²`
+    /// ([`twiddle::unit`] reduces the exponent mod `2p`, the chirp's
+    /// true period, keeping the f64 angle small at large `j`).
+    pub(crate) fn new(p: usize, inverse: bool) -> Self {
+        assert!(p >= 2, "Bluestein needs p >= 2, got {p}");
+        let m = (2 * p - 1).next_power_of_two();
+        let chirp: Vec<Complex32> =
+            (0..p).map(|j| twiddle::unit(j * j, 2 * p, inverse)).collect();
+        let twiddles = twiddle::forward_table(m);
+        let bitrev = twiddle::bit_reverse_table(m);
+
+        // Convolution kernel b[j] = conj(c[|j|]) for j in −(p−1)..p,
+        // wrapped circularly into length m (m ≥ 2p−1, so the positive and
+        // mirrored halves never collide).
+        let mut b = vec![Complex32::ZERO; m];
+        b[0] = chirp[0].conj();
+        for j in 1..p {
+            let v = chirp[j].conj();
+            b[j] = v;
+            b[m - j] = v;
+        }
+        radix2::fft_in_place(&mut b, &twiddles, &bitrev);
+
+        Self { p, m, chirp, b_fft: b, twiddles, bitrev }
+    }
+
+    /// Transform length.
+    pub(crate) fn len(&self) -> usize {
+        self.p
+    }
+
+    /// Unnormalized `p`-point DFT (direction baked into the tables) of
+    /// the strided sequence `src[0], src[stride], …, src[(p−1)·stride]`
+    /// into `dst[..p]`. `conv` is the caller-owned convolution scratch,
+    /// resized to the convolution length on every call.
+    pub(crate) fn exec(
+        &self,
+        src: &[Complex32],
+        stride: usize,
+        dst: &mut [Complex32],
+        conv: &mut Vec<Complex32>,
+    ) {
+        debug_assert!(src.len() >= (self.p - 1) * stride + 1, "strided source too short");
+        debug_assert!(dst.len() >= self.p, "destination too short");
+        conv.clear();
+        conv.resize(self.m, Complex32::ZERO);
+        for (j, c) in conv.iter_mut().take(self.p).enumerate() {
+            *c = src[j * stride] * self.chirp[j];
+        }
+        radix2::fft_in_place(conv, &self.twiddles, &self.bitrev);
+        for (c, b) in conv.iter_mut().zip(&self.b_fft) {
+            *c = *c * *b;
+        }
+        // The inverse here is the convolution theorem's 1/m-normalized
+        // one — unrelated to the outer transform's direction.
+        radix2::ifft_in_place(conv, &self.twiddles, &self.bitrev);
+        for (k, d) in dst.iter_mut().take(self.p).enumerate() {
+            *d = conv[k] * self.chirp[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    fn flat(xs: &[Complex32]) -> Vec<f32> {
+        xs.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    fn random_signal(seed: u64, n: usize) -> Vec<Complex32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+    }
+
+    #[test]
+    fn matches_oracle_small_primes() {
+        for &p in &[2usize, 3, 5, 7, 13, 31, 67] {
+            let x = random_signal(p as u64, p);
+            let plan = BluesteinPlan::new(p, false);
+            let mut out = vec![Complex32::ZERO; p];
+            let mut conv = Vec::new();
+            plan.exec(&x, 1, &mut out, &mut conv);
+            assert_close(&flat(&out), &flat(&dft(&x)), 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn matches_oracle_large_prime() {
+        let p = 1013;
+        let x = random_signal(9, p);
+        let plan = BluesteinPlan::new(p, false);
+        let mut out = vec![Complex32::ZERO; p];
+        let mut conv = Vec::new();
+        plan.exec(&x, 1, &mut out, &mut conv);
+        assert_close(&flat(&out), &flat(&dft(&x)), 1e-2, 1e-2);
+    }
+
+    #[test]
+    fn strided_input_reads_the_subsequence() {
+        let p = 11;
+        let stride = 3;
+        let padded = random_signal(4, (p - 1) * stride + 1);
+        let contiguous: Vec<Complex32> = (0..p).map(|j| padded[j * stride]).collect();
+        let plan = BluesteinPlan::new(p, false);
+        let mut conv = Vec::new();
+        let mut from_strided = vec![Complex32::ZERO; p];
+        plan.exec(&padded, stride, &mut from_strided, &mut conv);
+        let mut from_contiguous = vec![Complex32::ZERO; p];
+        plan.exec(&contiguous, 1, &mut from_contiguous, &mut conv);
+        assert_eq!(flat(&from_strided), flat(&from_contiguous));
+    }
+
+    #[test]
+    fn inverse_tables_give_unnormalized_idft() {
+        use crate::fft::dft::idft;
+        let p = 17;
+        let x = random_signal(5, p);
+        let plan = BluesteinPlan::new(p, true);
+        let mut out = vec![Complex32::ZERO; p];
+        let mut conv = Vec::new();
+        plan.exec(&x, 1, &mut out, &mut conv);
+        // exec is unnormalized; idft normalizes by 1/p.
+        let scale = 1.0 / p as f32;
+        let scaled: Vec<Complex32> = out.iter().map(|v| v.scale(scale)).collect();
+        assert_close(&flat(&scaled), &flat(&idft(&x)), 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn conv_length_is_large_enough() {
+        for &p in &[2usize, 3, 97, 1013] {
+            let plan = BluesteinPlan::new(p, false);
+            assert!(plan.m >= 2 * p - 1);
+            assert!(plan.m.is_power_of_two());
+            assert_eq!(plan.len(), p);
+        }
+    }
+}

@@ -10,15 +10,21 @@ use std::ops::{Add, AddAssign, Mul, Neg, Sub, SubAssign};
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 #[repr(C)]
 pub struct Complex32 {
+    /// Real part.
     pub re: f32,
+    /// Imaginary part.
     pub im: f32,
 }
 
 impl Complex32 {
+    /// The additive identity, `0 + 0i`.
     pub const ZERO: Complex32 = Complex32 { re: 0.0, im: 0.0 };
+    /// The multiplicative identity, `1 + 0i`.
     pub const ONE: Complex32 = Complex32 { re: 1.0, im: 0.0 };
+    /// The imaginary unit, `0 + 1i`.
     pub const I: Complex32 = Complex32 { re: 0.0, im: 1.0 };
 
+    /// Construct from real and imaginary parts.
     #[inline]
     pub const fn new(re: f32, im: f32) -> Self {
         Self { re, im }
@@ -37,21 +43,25 @@ impl Complex32 {
         Self { re: theta.cos() as f32, im: theta.sin() as f32 }
     }
 
+    /// Complex conjugate.
     #[inline]
     pub fn conj(self) -> Self {
         Self { re: self.re, im: -self.im }
     }
 
+    /// Squared modulus `re² + im²`.
     #[inline]
     pub fn norm_sqr(self) -> f32 {
         self.re * self.re + self.im * self.im
     }
 
+    /// Modulus (absolute value).
     #[inline]
     pub fn abs(self) -> f32 {
         self.norm_sqr().sqrt()
     }
 
+    /// Multiply by a real scalar.
     #[inline]
     pub fn scale(self, s: f32) -> Self {
         Self { re: self.re * s, im: self.im * s }

@@ -109,7 +109,8 @@ mod tests {
 
     #[test]
     fn non_power_of_two_length_works() {
-        // The oracle must handle any n (the fast path is pow2-only).
+        // The oracle handles any n — as does the planned fast path now;
+        // the plan/mixed/bluestein tests pin the two against each other.
         let x: Vec<Complex32> = (0..7).map(|i| Complex32::new(i as f32, 0.0)).collect();
         let back = idft(&dft(&x));
         assert_close(&flat(&back), &flat(&x), 1e-4, 1e-4);

@@ -1,0 +1,383 @@
+//! Mixed-radix Cooley–Tukey engine — the planner's general-length path.
+//!
+//! A length `n = r₀·r₁·…·r_{L−1}·(P)` is factorized into radix-4,
+//! radix-2, then odd-prime stages ([`factorize`]); an unfactorable
+//! remainder `P` (a prime above [`NAIVE_PRIME_MAX`]) becomes a
+//! [`BluesteinPlan`] base case. Execution is the textbook recursive
+//! decimation-in-time:
+//!
+//! ```text
+//! X[m·q + k] = Σ_i w_r^{i·q} · ( w_len^{i·k} · Y_i[k] )      (r = r₀, m = len/r)
+//! ```
+//!
+//! where `Y_i` is the length-`m` sub-transform of the stride-`r`
+//! subsequence starting at offset `i`. Every level's twiddle table
+//! (`w_len^{i·k}`, `len` entries) and its `r×r` combine matrix
+//! (`w_r^{i·q}`) are precomputed once per plan and shared by all
+//! sub-transforms at that level, so execution does no trigonometry. The
+//! radix-2 and radix-4 combines are specialized (their twiddle-free
+//! lanes and ±i rotations need no general multiply); larger radices go
+//! through the generic matrix.
+//!
+//! Direction is baked into the tables (conjugated for the inverse); the
+//! `1/n` inverse normalization is applied once by [`crate::fft::Plan`],
+//! after all stages.
+
+use super::bluestein::BluesteinPlan;
+use super::complex::Complex32;
+use super::twiddle;
+
+/// Largest prime executed as a direct O(r²) combine stage. Trial
+/// division stops here: any remainder whose prime factors all exceed
+/// this bound — one large prime, a repeated one, or a product of
+/// several — goes to Bluestein whole, whose O(m log m) convolution wins
+/// well before the quadratic combine (and its r² twiddle matrix) hurts.
+pub(crate) const NAIVE_PRIME_MAX: usize = 61;
+
+/// Split `n` into Cooley–Tukey radix stages: factors of 4 first, then a
+/// leftover 2, then odd primes ≤ [`NAIVE_PRIME_MAX`] ascending. Returns
+/// the stage list and, if a remainder with only large prime factors is
+/// left, that remainder (the Bluestein base case — it need not be
+/// prime itself).
+pub(crate) fn factorize(mut n: usize) -> (Vec<usize>, Option<usize>) {
+    let mut stages = Vec::new();
+    while n % 4 == 0 {
+        stages.push(4);
+        n /= 4;
+    }
+    if n % 2 == 0 {
+        stages.push(2);
+        n /= 2;
+    }
+    let mut d = 3;
+    while d * d <= n && d <= NAIVE_PRIME_MAX {
+        while n % d == 0 {
+            stages.push(d);
+            n /= d;
+        }
+        d += 2;
+    }
+    if n == 1 {
+        (stages, None)
+    } else if n <= NAIVE_PRIME_MAX {
+        stages.push(n);
+        (stages, None)
+    } else {
+        (stages, Some(n))
+    }
+}
+
+/// One recursion level: all sub-transforms of length `len` share these
+/// tables.
+struct Level {
+    /// Sub-transform length at this level.
+    len: usize,
+    /// Radix split off at this level.
+    radix: usize,
+    /// `w_len^{i·k}` for `i in 0..radix`, `k in 0..len/radix`, indexed
+    /// `i·(len/radix) + k` — the same layout the combine loop walks.
+    twiddles: Vec<Complex32>,
+    /// `radix × radix` DFT matrix `w_radix^{i·q}`, indexed `i·radix + q`.
+    radix_dft: Vec<Complex32>,
+}
+
+impl Level {
+    fn new(len: usize, radix: usize, inverse: bool) -> Self {
+        debug_assert!(radix >= 2 && len % radix == 0);
+        let m = len / radix;
+        let mut twiddles = Vec::with_capacity(len);
+        for i in 0..radix {
+            for k in 0..m {
+                twiddles.push(twiddle::unit(i * k, len, inverse));
+            }
+        }
+        let mut radix_dft = Vec::with_capacity(radix * radix);
+        for i in 0..radix {
+            for q in 0..radix {
+                radix_dft.push(twiddle::unit(i * q, radix, inverse));
+            }
+        }
+        Self { len, radix, twiddles, radix_dft }
+    }
+}
+
+/// The base case the recursion bottoms out in.
+enum Base {
+    /// Fully factored: the length-1 transform is the identity.
+    One,
+    /// Remainder whose prime factors all exceed [`NAIVE_PRIME_MAX`]
+    /// (a large prime, or a product of large primes).
+    Bluestein(BluesteinPlan),
+}
+
+/// A prepared mixed-radix transform: the stage schedule plus every table
+/// execution needs. Unnormalized in both directions (the plan owns the
+/// inverse `1/n`).
+pub(crate) struct MixedPlan {
+    n: usize,
+    inverse: bool,
+    levels: Vec<Level>,
+    base: Base,
+    /// Largest stage radix — sizes the combine scratch.
+    max_radix: usize,
+}
+
+impl MixedPlan {
+    /// Factorize `n` and precompute all stage tables.
+    pub(crate) fn new(n: usize, inverse: bool) -> Self {
+        assert!(n >= 2, "MixedPlan requires n >= 2, got {n}");
+        let (factors, big_prime) = factorize(n);
+        let mut levels = Vec::with_capacity(factors.len());
+        let mut len = n;
+        for &r in &factors {
+            levels.push(Level::new(len, r, inverse));
+            len /= r;
+        }
+        let base = match big_prime {
+            Some(p) => {
+                debug_assert_eq!(len, p, "factorization remainder mismatch");
+                Base::Bluestein(BluesteinPlan::new(p, inverse))
+            }
+            None => {
+                debug_assert_eq!(len, 1, "factorization did not reach 1");
+                Base::One
+            }
+        };
+        let max_radix = factors.iter().copied().max().unwrap_or(1);
+        Self { n, inverse, levels, base, max_radix }
+    }
+
+    /// Transform length.
+    pub(crate) fn len(&self) -> usize {
+        self.n
+    }
+
+    /// The stage schedule, e.g. `[4, 2, 3, 3, 5]` for `n = 360`.
+    pub(crate) fn radices(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.radix).collect()
+    }
+
+    /// Whether the plan bottoms out in a Bluestein convolution.
+    pub(crate) fn uses_bluestein(&self) -> bool {
+        matches!(self.base, Base::Bluestein(_))
+    }
+
+    /// Transform `x` in place (unnormalized, direction baked into the
+    /// tables). `work`/`temp`/`conv` are caller-owned scratch buffers,
+    /// grown on demand and reusable across calls.
+    pub(crate) fn execute(
+        &self,
+        x: &mut [Complex32],
+        work: &mut Vec<Complex32>,
+        temp: &mut Vec<Complex32>,
+        conv: &mut Vec<Complex32>,
+    ) {
+        debug_assert_eq!(x.len(), self.n);
+        work.clear();
+        work.extend_from_slice(x);
+        temp.clear();
+        temp.resize(self.max_radix, Complex32::ZERO);
+        rec(&self.levels, &self.base, self.inverse, &work[..], 1, x, temp, conv);
+    }
+}
+
+/// Recursive DIT step: transform the strided view
+/// `src[0], src[stride], …` into the contiguous `dst`, consuming one
+/// level per call. Bounds invariant: `src.len() ≥ (dst.len()−1)·stride + 1`.
+#[allow(clippy::too_many_arguments)]
+fn rec(
+    levels: &[Level],
+    base: &Base,
+    inverse: bool,
+    src: &[Complex32],
+    stride: usize,
+    dst: &mut [Complex32],
+    temp: &mut [Complex32],
+    conv: &mut Vec<Complex32>,
+) {
+    let Some((level, rest)) = levels.split_first() else {
+        match base {
+            Base::One => dst[0] = src[0],
+            Base::Bluestein(b) => {
+                debug_assert_eq!(dst.len(), b.len());
+                b.exec(src, stride, dst, conv);
+            }
+        }
+        return;
+    };
+    let r = level.radix;
+    let m = level.len / r;
+
+    // Sub-transforms: residue class i of the strided input lands in
+    // dst[i·m .. (i+1)·m].
+    for i in 0..r {
+        rec(rest, base, inverse, &src[i * stride..], stride * r, &mut dst[i * m..(i + 1) * m], temp, conv);
+    }
+
+    // Combine: at each output index k, an r-point DFT across the
+    // twiddled sub-results. Lane i = 0 always carries twiddle 1.
+    match r {
+        2 => {
+            for k in 0..m {
+                let a = dst[k];
+                let b = dst[m + k] * level.twiddles[m + k];
+                dst[k] = a + b;
+                dst[m + k] = a - b;
+            }
+        }
+        4 => {
+            for k in 0..m {
+                let t0 = dst[k];
+                let t1 = dst[m + k] * level.twiddles[m + k];
+                let t2 = dst[2 * m + k] * level.twiddles[2 * m + k];
+                let t3 = dst[3 * m + k] * level.twiddles[3 * m + k];
+                let s02 = t0 + t2;
+                let d02 = t0 - t2;
+                let s13 = t1 + t3;
+                let d13 = if inverse { (t1 - t3).mul_i() } else { (t1 - t3).mul_neg_i() };
+                dst[k] = s02 + s13;
+                dst[m + k] = d02 + d13;
+                dst[2 * m + k] = s02 - s13;
+                dst[3 * m + k] = d02 - d13;
+            }
+        }
+        _ => {
+            let temp = &mut temp[..r];
+            for k in 0..m {
+                for (i, t) in temp.iter_mut().enumerate() {
+                    *t = dst[i * m + k] * level.twiddles[i * m + k];
+                }
+                for q in 0..r {
+                    let mut acc = temp[0];
+                    for i in 1..r {
+                        acc += temp[i] * level.radix_dft[i * r + q];
+                    }
+                    dst[q * m + k] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    fn flat(xs: &[Complex32]) -> Vec<f32> {
+        xs.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    fn random_signal(seed: u64, n: usize) -> Vec<Complex32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+    }
+
+    fn run_mixed(x: &[Complex32]) -> Vec<Complex32> {
+        let plan = MixedPlan::new(x.len(), false);
+        let mut out = x.to_vec();
+        let (mut w, mut t, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        plan.execute(&mut out, &mut w, &mut t, &mut c);
+        out
+    }
+
+    #[test]
+    fn factorize_known_values() {
+        assert_eq!(factorize(12), (vec![4, 3], None));
+        assert_eq!(factorize(96), (vec![4, 4, 2, 3], None));
+        assert_eq!(factorize(360), (vec![4, 2, 3, 3, 5], None));
+        assert_eq!(factorize(1000), (vec![4, 2, 5, 5, 5], None));
+        assert_eq!(factorize(1013), (vec![], Some(1013)));
+        assert_eq!(factorize(7), (vec![7], None));
+        // Large primes never become combine stages, even when repeated
+        // or paired with a small cofactor: the remainder goes to
+        // Bluestein whole (it need not be prime).
+        assert_eq!(factorize(4489), (vec![], Some(4489))); // 67²
+        assert_eq!(factorize(2 * 67), (vec![2], Some(67)));
+        assert_eq!(factorize(59 * 67), (vec![59], Some(67)));
+    }
+
+    #[test]
+    fn stage_product_reconstructs_n() {
+        for n in 2..200usize {
+            let (stages, rem) = factorize(n);
+            let product: usize = stages.iter().product::<usize>() * rem.unwrap_or(1);
+            assert_eq!(product, n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_assorted_lengths() {
+        // Composite, odd, prime-with-stages, and generic-radix lengths.
+        for &n in &[2usize, 3, 4, 6, 8, 9, 10, 12, 15, 21, 25, 36, 49, 60, 96, 100, 360] {
+            let x = random_signal(n as u64, n);
+            assert_close(&flat(&run_mixed(&x)), &flat(&dft(&x)), 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn matches_oracle_bluestein_composite() {
+        // 4 · 101: a Bluestein base case under a radix-4 level.
+        let n = 4 * 101;
+        let x = random_signal(7, n);
+        assert_close(&flat(&run_mixed(&x)), &flat(&dft(&x)), 1e-3, 1e-3);
+        let plan = MixedPlan::new(n, false);
+        assert!(plan.uses_bluestein());
+        assert_eq!(plan.radices(), vec![4]);
+    }
+
+    #[test]
+    fn composite_large_prime_remainder_roundtrips() {
+        // 67² = 4489: all prime factors > NAIVE_PRIME_MAX, so the whole
+        // remainder runs as one Bluestein convolution (Bluestein does
+        // not require a prime length). Roundtrip rather than the O(n²)
+        // oracle keeps this cheap in debug builds.
+        let n = 4489;
+        let fwd = MixedPlan::new(n, false);
+        assert!(fwd.uses_bluestein());
+        assert!(fwd.radices().is_empty());
+        let inv = MixedPlan::new(n, true);
+        let x = random_signal(13, n);
+        let mut buf = x.clone();
+        let (mut w, mut t, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        fwd.execute(&mut buf, &mut w, &mut t, &mut c);
+        inv.execute(&mut buf, &mut w, &mut t, &mut c);
+        let scale = 1.0 / n as f32;
+        for v in buf.iter_mut() {
+            *v = v.scale(scale);
+        }
+        assert_close(&flat(&buf), &flat(&x), 1e-2, 1e-2);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for &n in &[12usize, 45, 100, 101] {
+            let x = random_signal(n as u64 + 1, n);
+            let fwd = MixedPlan::new(n, false);
+            let inv = MixedPlan::new(n, true);
+            let mut buf = x.clone();
+            let (mut w, mut t, mut c) = (Vec::new(), Vec::new(), Vec::new());
+            fwd.execute(&mut buf, &mut w, &mut t, &mut c);
+            inv.execute(&mut buf, &mut w, &mut t, &mut c);
+            let scale = 1.0 / n as f32;
+            for v in buf.iter_mut() {
+                *v = v.scale(scale);
+            }
+            assert_close(&flat(&buf), &flat(&x), 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_lengths_is_safe() {
+        let (mut w, mut t, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        for &n in &[360usize, 12, 101, 96] {
+            let x = random_signal(n as u64 + 9, n);
+            let plan = MixedPlan::new(n, false);
+            let mut out = x.clone();
+            plan.execute(&mut out, &mut w, &mut t, &mut c);
+            assert_close(&flat(&out), &flat(&dft(&x)), 1e-3, 1e-3);
+        }
+    }
+}

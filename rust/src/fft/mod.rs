@@ -2,16 +2,21 @@
 //!
 //! The paper's compute building block is FFTW3's 1-D complex transform,
 //! applied row-wise to a 2-D grid. This module provides that substrate
-//! from scratch:
+//! from scratch, for **any transform length** (the planner is
+//! mixed-radix, not radix-2-only):
 //!
 //! - [`Complex32`] — `repr(C)` complex type, byte-compatible with
 //!   interleaved `f32` pairs on the wire,
-//! - [`Plan`] — per-length plan (twiddle table + bit-reversal permutation),
-//!   mirroring `fftw_plan`, cached in [`plan::PlanCache`],
-//! - iterative radix-2 DIT kernel ([`radix2`]),
+//! - [`Plan`] — per-`(length, direction)` plan mirroring `fftw_plan`:
+//!   powers of two run the iterative radix-2 kernel ([`radix2`]), every
+//!   other length is factorized into radix-4 / radix-2 / odd-prime
+//!   Cooley–Tukey stages (the private `mixed` engine) with a Bluestein
+//!   chirp-z fallback for large prime factors (`bluestein`); plans are
+//!   memoized in the process-wide [`plan::PlanCache`],
 //! - [`dft`] — the O(n²) oracle used only by tests,
-//! - [`batch`] — thread-parallel row-batched transforms (the "+pthreads"
-//!   in the paper's FFTW3 MPI+pthreads reference).
+//! - [`batch`] — row-batched transforms executed in parallel on the
+//!   shared [`crate::task::ThreadPool`] (the "+pthreads" in the paper's
+//!   FFTW3 MPI+pthreads reference).
 //!
 //! All transforms are unnormalized forward / `1/n`-normalized inverse,
 //! matching both FFTW and `jnp.fft` conventions so the three compute
@@ -25,6 +30,9 @@ pub mod plan;
 pub mod radix2;
 pub mod twiddle;
 
+mod bluestein;
+mod mixed;
+
 pub use batch::fft_rows_parallel;
 pub use complex::Complex32;
-pub use plan::{Direction, Plan, PlanCache};
+pub use plan::{Direction, FftScratch, Plan, PlanCache};

@@ -1,19 +1,33 @@
 //! FFT plans and the process-wide plan cache (the `fftw_plan` analog).
 //!
-//! A [`Plan`] owns the precomputed twiddle and bit-reversal tables for one
-//! transform length; creating it is the expensive step, executing it is
-//! allocation-free. [`PlanCache`] memoizes plans per length so the
+//! A [`Plan`] owns every table one transform length and direction needs:
+//! creating it is the expensive step (factorization, twiddle and
+//! bit-reversal tables, Bluestein kernels), executing it does no
+//! trigonometry and — with a reused [`FftScratch`] — no allocation.
+//! [`PlanCache`] memoizes plans per `(length, direction)` so the
 //! distributed driver and the baseline both plan once and execute many
-//! times — the same usage discipline FFTW requires.
+//! times, the same usage discipline FFTW requires.
+//!
+//! Any length `n ≥ 1` is supported. Powers of two dispatch to the
+//! specialized iterative radix-2 kernel ([`crate::fft::radix2`]);
+//! everything else goes through the mixed-radix Cooley–Tukey engine
+//! (radix-4 / radix-2 / odd-prime stages) with a Bluestein fallback for
+//! large prime factors.
 
 use super::complex::Complex32;
+use super::mixed::MixedPlan;
 use super::radix2;
 use super::twiddle;
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-/// Transform direction.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Transform direction. Part of the plan-cache key: forward and inverse
+/// plans precompute different (conjugated) twiddle tables, so the
+/// inverse runs as a single direct pass plus the `1/n` scale instead of
+/// the conjugate-transform-conjugate identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Direction {
     /// Unnormalized forward transform (`e^{-2πi...}`).
     Forward,
@@ -21,59 +35,179 @@ pub enum Direction {
     Inverse,
 }
 
-/// A reusable transform plan for one power-of-two length.
+impl Direction {
+    /// `true` for [`Direction::Inverse`].
+    pub fn is_inverse(self) -> bool {
+        matches!(self, Direction::Inverse)
+    }
+}
+
+/// Reusable execution scratch. Executing a power-of-two plan never
+/// touches it; mixed-radix plans stage the input and the Bluestein
+/// convolution here. Buffers grow to the largest transform they have
+/// served and are then reused allocation-free — batched row loops keep
+/// one per worker.
+#[derive(Default)]
+pub struct FftScratch {
+    /// Staging copy of the input (the recursion reads strided views of it).
+    work: Vec<Complex32>,
+    /// Combine-loop lane buffer, one slot per radix.
+    temp: Vec<Complex32>,
+    /// Bluestein convolution buffer.
+    conv: Vec<Complex32>,
+}
+
+impl FftScratch {
+    /// Empty scratch; buffers are grown on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Which kernel a plan executes.
+enum Kernel {
+    /// `n == 1`: the transform is the identity.
+    Identity,
+    /// Power-of-two length: iterative radix-2 kernel over direction-
+    /// signed half-circle tables.
+    Radix2 { twiddles: Vec<Complex32>, bitrev: Vec<u32> },
+    /// General length: mixed-radix Cooley–Tukey (+ Bluestein base).
+    Mixed(MixedPlan),
+}
+
+/// A reusable transform plan for one length and direction.
+///
+/// ```
+/// use hpx_fft::fft::{Complex32, Direction, Plan};
+///
+/// // 12 = 4·3 — a mixed-radix length no radix-2-only engine accepts.
+/// let plan = Plan::new(12, Direction::Forward);
+/// assert_eq!(plan.radices(), vec![4, 3]);
+///
+/// let mut x = vec![Complex32::ZERO; 12];
+/// x[0] = Complex32::ONE; // unit impulse …
+/// plan.execute(&mut x);
+/// for bin in &x {
+///     // … transforms to a flat spectrum of ones.
+///     assert!((bin.re - 1.0).abs() < 1e-6 && bin.im.abs() < 1e-6);
+/// }
+/// ```
 pub struct Plan {
     n: usize,
-    twiddles: Vec<Complex32>,
-    bitrev: Vec<u32>,
+    dir: Direction,
+    kernel: Kernel,
 }
 
 impl Plan {
-    /// Plan an `n`-point transform. `n` must be a power of two (callers
-    /// with other sizes go through the oracle-grade `dft` module).
-    pub fn new(n: usize) -> Self {
-        assert!(n.is_power_of_two() && n >= 1, "Plan requires power-of-two n >= 1, got {n}");
-        if n == 1 {
-            return Self { n, twiddles: Vec::new(), bitrev: vec![0] };
-        }
-        Self { n, twiddles: twiddle::forward_table(n), bitrev: twiddle::bit_reverse_table(n) }
+    /// Plan an `n`-point transform (`n ≥ 1`, any factorization) in the
+    /// given direction.
+    pub fn new(n: usize, dir: Direction) -> Self {
+        assert!(n >= 1, "Plan requires n >= 1, got {n}");
+        let kernel = if n == 1 {
+            Kernel::Identity
+        } else if n.is_power_of_two() {
+            Kernel::Radix2 {
+                twiddles: twiddle::half_table(n, dir.is_inverse()),
+                bitrev: twiddle::bit_reverse_table(n),
+            }
+        } else {
+            let mp = MixedPlan::new(n, dir.is_inverse());
+            debug_assert_eq!(mp.len(), n);
+            Kernel::Mixed(mp)
+        };
+        Self { n, dir, kernel }
     }
 
+    /// Transform length.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Always `false` — plans have length ≥ 1 (kept for API symmetry
+    /// with `len`).
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
-    /// Execute in place.
-    ///
-    /// # Panics
-    /// If `x.len() != self.len()`.
-    pub fn execute(&self, x: &mut [Complex32], dir: Direction) {
-        assert_eq!(x.len(), self.n, "buffer length {} != plan length {}", x.len(), self.n);
-        match dir {
-            Direction::Forward => radix2::fft_in_place(x, &self.twiddles, &self.bitrev),
-            Direction::Inverse => radix2::ifft_in_place(x, &self.twiddles, &self.bitrev),
+    /// The direction this plan was built for.
+    pub fn direction(&self) -> Direction {
+        self.dir
+    }
+
+    /// The Cooley–Tukey stage schedule, e.g. `[4, 2, 3, 3, 5]` for
+    /// `n = 360` (a Bluestein base case is not listed — see
+    /// [`Plan::uses_bluestein`]). Power-of-two lengths report the
+    /// radix-2 kernel's `log2 n` stages.
+    pub fn radices(&self) -> Vec<usize> {
+        match &self.kernel {
+            Kernel::Identity => Vec::new(),
+            Kernel::Radix2 { .. } => vec![2; self.n.trailing_zeros() as usize],
+            Kernel::Mixed(mp) => mp.radices(),
         }
     }
 
-    /// Execute every length-`n` row of a contiguous row-major buffer.
-    pub fn execute_rows(&self, data: &mut [Complex32], dir: Direction) {
+    /// Whether this plan bottoms out in a Bluestein convolution (a
+    /// remainder whose prime factors are all too large for direct
+    /// combine stages — one big prime, or a product of them).
+    pub fn uses_bluestein(&self) -> bool {
+        matches!(&self.kernel, Kernel::Mixed(mp) if mp.uses_bluestein())
+    }
+
+    /// Execute in place, allocating transient scratch as needed. Loops
+    /// should prefer [`Plan::execute_with_scratch`].
+    ///
+    /// # Panics
+    /// If `x.len() != self.len()`.
+    pub fn execute(&self, x: &mut [Complex32]) {
+        let mut scratch = FftScratch::new();
+        self.execute_with_scratch(x, &mut scratch);
+    }
+
+    /// Execute in place against caller-owned scratch — allocation-free
+    /// once the scratch has warmed up to this plan's length.
+    ///
+    /// # Panics
+    /// If `x.len() != self.len()`.
+    pub fn execute_with_scratch(&self, x: &mut [Complex32], scratch: &mut FftScratch) {
+        assert_eq!(x.len(), self.n, "buffer length {} != plan length {}", x.len(), self.n);
+        match &self.kernel {
+            Kernel::Identity => {}
+            Kernel::Radix2 { twiddles, bitrev } => {
+                radix2::fft_in_place_dir(x, twiddles, bitrev, self.dir.is_inverse());
+            }
+            Kernel::Mixed(mp) => {
+                let FftScratch { work, temp, conv } = scratch;
+                mp.execute(x, work, temp, conv);
+            }
+        }
+        if self.dir.is_inverse() && self.n > 1 {
+            let scale = 1.0 / self.n as f32;
+            for v in x.iter_mut() {
+                *v = v.scale(scale);
+            }
+        }
+    }
+
+    /// Execute every length-`n` row of a contiguous row-major buffer,
+    /// reusing one scratch across the rows.
+    ///
+    /// # Panics
+    /// If `data.len()` is not a multiple of the plan length.
+    pub fn execute_rows(&self, data: &mut [Complex32]) {
         assert!(
             data.len() % self.n == 0,
             "buffer length {} not a multiple of row length {}",
             data.len(),
             self.n
         );
+        let mut scratch = FftScratch::new();
         for row in data.chunks_exact_mut(self.n) {
-            self.execute(row, dir);
+            self.execute_with_scratch(row, &mut scratch);
         }
     }
 
     /// FLOP estimate for one execution (5 n log2 n — the standard FFT
-    /// operation count used for throughput reporting).
+    /// operation count used for throughput reporting, for any radix mix).
     pub fn flops(&self) -> f64 {
         if self.n <= 1 {
             return 0.0;
@@ -82,14 +216,18 @@ impl Plan {
     }
 }
 
-/// Memoized per-length plans, shared across threads.
+/// Memoized per-`(length, direction)` plans, shared across threads, with
+/// hit/miss accounting.
 pub struct PlanCache {
-    plans: Mutex<HashMap<usize, Arc<Plan>>>,
+    plans: Mutex<HashMap<(usize, Direction), Arc<Plan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl PlanCache {
+    /// Empty cache.
     pub fn new() -> Self {
-        Self { plans: Mutex::new(HashMap::new()) }
+        Self { plans: Mutex::new(HashMap::new()), hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
     }
 
     /// Process-wide cache (what `fftw` calls wisdom, minus the disk file).
@@ -98,14 +236,45 @@ impl PlanCache {
         CACHE.get_or_init(PlanCache::new)
     }
 
-    pub fn plan(&self, n: usize) -> Arc<Plan> {
+    /// The memoized plan for `(n, dir)`, building it on first request.
+    pub fn plan(&self, n: usize, dir: Direction) -> Arc<Plan> {
+        if let Some(plan) = self.plans.lock().unwrap().get(&(n, dir)) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(plan);
+        }
+        // Build outside the lock: construction can be expensive (stage
+        // tables, a Bluestein kernel FFT) and must not stall every other
+        // locality's lookup. Racing builders waste one duplicate build;
+        // the first insert wins, so pointer identity is preserved.
+        let built = Arc::new(Plan::new(n, dir));
         let mut plans = self.plans.lock().unwrap();
-        Arc::clone(plans.entry(n).or_insert_with(|| Arc::new(Plan::new(n))))
+        match plans.entry((n, dir)) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.get())
+            }
+            Entry::Vacant(e) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.insert(built))
+            }
+        }
     }
 
-    pub fn cached_lengths(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.plans.lock().unwrap().keys().copied().collect();
-        v.sort_unstable();
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to build a new plan.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Cached `(length, direction)` keys, sorted by length.
+    pub fn cached_keys(&self) -> Vec<(usize, Direction)> {
+        let mut v: Vec<(usize, Direction)> =
+            self.plans.lock().unwrap().keys().copied().collect();
+        v.sort_unstable_by_key(|&(n, d)| (n, d.is_inverse()));
         v
     }
 }
@@ -121,93 +290,166 @@ mod tests {
     use super::*;
     use crate::fft::dft::dft;
     use crate::util::rng::Pcg32;
-    use crate::util::testkit::assert_close;
+    use crate::util::testkit::{assert_close, rel_l2_error};
 
     fn flat(xs: &[Complex32]) -> Vec<f32> {
         xs.iter().flat_map(|c| [c.re, c.im]).collect()
     }
 
+    fn random_signal(seed: u64, n: usize) -> Vec<Complex32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+    }
+
     #[test]
     fn plan_executes_forward() {
-        let mut rng = Pcg32::new(1);
-        let x: Vec<Complex32> =
-            (0..64).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect();
-        let plan = Plan::new(64);
+        let x = random_signal(1, 64);
+        let plan = Plan::new(64, Direction::Forward);
         let mut y = x.clone();
-        plan.execute(&mut y, Direction::Forward);
+        plan.execute(&mut y);
         assert_close(&flat(&y), &flat(&dft(&x)), 1e-3, 1e-3);
     }
 
     #[test]
-    fn plan_roundtrip() {
-        let mut rng = Pcg32::new(2);
-        let x: Vec<Complex32> =
-            (0..256).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect();
-        let plan = Plan::new(256);
+    fn plan_roundtrip_pow2() {
+        let x = random_signal(2, 256);
+        let fwd = Plan::new(256, Direction::Forward);
+        let inv = Plan::new(256, Direction::Inverse);
         let mut y = x.clone();
-        plan.execute(&mut y, Direction::Forward);
-        plan.execute(&mut y, Direction::Inverse);
+        fwd.execute(&mut y);
+        inv.execute(&mut y);
         assert_close(&flat(&y), &flat(&x), 1e-4, 1e-3);
+    }
+
+    /// The satellite's headline matrix: planned FFT vs the naive-DFT
+    /// oracle on non-power-of-two lengths — composite, highly composite,
+    /// and prime (Bluestein).
+    #[test]
+    fn non_pow2_matches_dft_oracle() {
+        for &n in &[12usize, 96, 360, 1000, 1013] {
+            let x = random_signal(n as u64, n);
+            let plan = Plan::new(n, Direction::Forward);
+            let mut y = x.clone();
+            plan.execute(&mut y);
+            let oracle = dft(&x);
+            assert_close(&flat(&y), &flat(&oracle), 1e-3, 1e-3);
+            // Aggregate f32 accuracy: the planned transform tracks the
+            // f64 oracle to ~1e-6 relative L2; assert with margin.
+            let err = rel_l2_error(&flat(&y), &flat(&oracle));
+            let bound = if plan.uses_bluestein() { 1e-4 } else { 1e-5 };
+            assert!(err < bound, "n={n}: rel L2 err {err}");
+        }
+    }
+
+    #[test]
+    fn non_pow2_roundtrip() {
+        for &n in &[12usize, 96, 360, 1000, 1013] {
+            let x = random_signal(n as u64 + 77, n);
+            let fwd = Plan::new(n, Direction::Forward);
+            let inv = Plan::new(n, Direction::Inverse);
+            let mut y = x.clone();
+            fwd.execute(&mut y);
+            inv.execute(&mut y);
+            assert_close(&flat(&y), &flat(&x), 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn stage_schedules() {
+        assert_eq!(Plan::new(360, Direction::Forward).radices(), vec![4, 2, 3, 3, 5]);
+        assert_eq!(Plan::new(1024, Direction::Forward).radices(), vec![2; 10]);
+        assert!(!Plan::new(1000, Direction::Forward).uses_bluestein());
+        assert!(Plan::new(1013, Direction::Forward).uses_bluestein());
+        assert!(Plan::new(1013, Direction::Forward).radices().is_empty());
     }
 
     #[test]
     fn execute_rows_equals_per_row() {
-        let mut rng = Pcg32::new(3);
         let rows = 5;
-        let n = 32;
-        let data: Vec<Complex32> =
-            (0..rows * n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect();
-        let plan = Plan::new(n);
+        let n = 36; // non-pow2 rows exercise the scratch reuse
+        let data = random_signal(3, rows * n);
+        let plan = Plan::new(n, Direction::Forward);
 
         let mut batched = data.clone();
-        plan.execute_rows(&mut batched, Direction::Forward);
+        plan.execute_rows(&mut batched);
 
         let mut manual = data.clone();
         for r in 0..rows {
-            plan.execute(&mut manual[r * n..(r + 1) * n], Direction::Forward);
+            plan.execute(&mut manual[r * n..(r + 1) * n]);
         }
         assert_eq!(flat(&batched), flat(&manual));
     }
 
     #[test]
-    fn plan_length_one_is_identity() {
-        let plan = Plan::new(1);
-        let mut x = vec![Complex32::new(4.0, 2.0)];
-        plan.execute(&mut x, Direction::Forward);
-        assert_eq!(x[0], Complex32::new(4.0, 2.0));
+    fn scratch_reuse_matches_fresh_scratch() {
+        let plan_a = Plan::new(360, Direction::Forward);
+        let plan_b = Plan::new(1013, Direction::Forward);
+        let xa = random_signal(10, 360);
+        let xb = random_signal(11, 1013);
+
+        let mut shared = FftScratch::new();
+        let mut ya = xa.clone();
+        plan_a.execute_with_scratch(&mut ya, &mut shared);
+        let mut yb = xb.clone();
+        plan_b.execute_with_scratch(&mut yb, &mut shared);
+
+        let mut ya2 = xa;
+        plan_a.execute(&mut ya2);
+        let mut yb2 = xb;
+        plan_b.execute(&mut yb2);
+        assert_eq!(flat(&ya), flat(&ya2));
+        assert_eq!(flat(&yb), flat(&yb2));
     }
 
     #[test]
-    #[should_panic(expected = "power-of-two")]
-    fn plan_rejects_non_pow2() {
-        Plan::new(24);
+    fn plan_length_one_is_identity() {
+        let plan = Plan::new(1, Direction::Forward);
+        let mut x = vec![Complex32::new(4.0, 2.0)];
+        plan.execute(&mut x);
+        assert_eq!(x[0], Complex32::new(4.0, 2.0));
     }
 
     #[test]
     #[should_panic(expected = "buffer length")]
     fn plan_rejects_wrong_length() {
-        Plan::new(8).execute(&mut vec![Complex32::ZERO; 4], Direction::Forward);
+        Plan::new(8, Direction::Forward).execute(&mut vec![Complex32::ZERO; 4]);
     }
 
     #[test]
-    fn cache_returns_same_plan() {
+    fn cache_hit_returns_same_plan() {
         let cache = PlanCache::new();
-        let a = cache.plan(128);
-        let b = cache.plan(128);
-        assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(cache.cached_lengths(), vec![128]);
+        let a = cache.plan(128, Direction::Forward);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.plan(128, Direction::Forward);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must reuse the plan");
+        assert_eq!(cache.cached_keys(), vec![(128, Direction::Forward)]);
+    }
+
+    #[test]
+    fn cache_keys_include_direction() {
+        let cache = PlanCache::new();
+        let f = cache.plan(60, Direction::Forward);
+        let i = cache.plan(60, Direction::Inverse);
+        assert!(!Arc::ptr_eq(&f, &i), "directions are distinct cache entries");
+        assert_eq!(
+            cache.cached_keys(),
+            vec![(60, Direction::Forward), (60, Direction::Inverse)]
+        );
+        assert_eq!(cache.misses(), 2);
     }
 
     #[test]
     fn global_cache_is_shared() {
-        let a = PlanCache::global().plan(512);
-        let b = PlanCache::global().plan(512);
+        let a = PlanCache::global().plan(512, Direction::Forward);
+        let b = PlanCache::global().plan(512, Direction::Forward);
         assert!(Arc::ptr_eq(&a, &b));
     }
 
     #[test]
     fn flops_estimate() {
-        let plan = Plan::new(1024);
+        let plan = Plan::new(1024, Direction::Forward);
         assert_eq!(plan.flops(), 5.0 * 1024.0 * 10.0);
+        assert!(Plan::new(1000, Direction::Forward).flops() > 0.0);
     }
 }

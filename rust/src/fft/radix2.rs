@@ -1,4 +1,5 @@
-//! Iterative radix-2 decimation-in-time FFT kernel.
+//! Iterative radix-2 decimation-in-time FFT kernel (the power-of-two
+//! fast path of the mixed-radix planner).
 //!
 //! Classic Cooley–Tukey: bit-reversal permutation, then `log2 n` butterfly
 //! stages over a precomputed half-circle twiddle table. The first two
@@ -7,13 +8,38 @@
 //! EXPERIMENTS.md §Perf.
 //!
 //! Operates in place on `&mut [Complex32]`; the caller owns planning
-//! (tables come from [`crate::fft::Plan`]).
+//! (tables come from [`crate::fft::Plan`]). Both directions run the same
+//! butterfly network: the inverse uses a conjugated twiddle table
+//! ([`crate::fft::twiddle::half_table`] with `inverse = true`) via
+//! [`fft_in_place_dir`], with the `1/n` normalization applied by the
+//! plan, not here.
 
 use super::complex::Complex32;
 
 /// In-place forward FFT. `twiddles` is `forward_table(n)`, `bitrev` is
 /// `bit_reverse_table(n)`.
 pub fn fft_in_place(x: &mut [Complex32], twiddles: &[Complex32], bitrev: &[u32]) {
+    butterflies::<false>(x, twiddles, bitrev);
+}
+
+/// Direction-explicit in-place transform. `twiddles` must be the
+/// direction-matched half-circle table (`half_table(n, inverse)`). No
+/// normalization is applied in either direction — the planner scales
+/// inverse results by `1/n` once, after all stages.
+pub fn fft_in_place_dir(
+    x: &mut [Complex32],
+    twiddles: &[Complex32],
+    bitrev: &[u32],
+    inverse: bool,
+) {
+    if inverse {
+        butterflies::<true>(x, twiddles, bitrev);
+    } else {
+        butterflies::<false>(x, twiddles, bitrev);
+    }
+}
+
+fn butterflies<const INVERSE: bool>(x: &mut [Complex32], twiddles: &[Complex32], bitrev: &[u32]) {
     let n = x.len();
     debug_assert!(n.is_power_of_two());
     debug_assert_eq!(twiddles.len(), n / 2);
@@ -36,13 +62,14 @@ pub fn fft_in_place(x: &mut [Complex32], twiddles: &[Complex32], bitrev: &[u32])
         return;
     }
 
-    // Stage 2 (len=4): twiddles are 1 and -i.
+    // Stage 2 (len=4): twiddles are 1 and ∓i (direction-dependent).
     let mut base = 0;
     while base < n {
         let (a, b) = (x[base], x[base + 2]);
         x[base] = a + b;
         x[base + 2] = a - b;
-        let (c, d) = (x[base + 1], x[base + 3].mul_neg_i());
+        let rot = if INVERSE { x[base + 3].mul_i() } else { x[base + 3].mul_neg_i() };
+        let (c, d) = (x[base + 1], rot);
         x[base + 1] = c + d;
         x[base + 3] = c - d;
         base += 4;
@@ -95,7 +122,9 @@ pub fn fft_in_place(x: &mut [Complex32], twiddles: &[Complex32], bitrev: &[u32])
 }
 
 /// In-place inverse FFT (1/n-normalized) via the conjugation identity:
-/// `ifft(x) = conj(fft(conj(x))) / n`.
+/// `ifft(x) = conj(fft(conj(x))) / n`. Takes the *forward* tables; the
+/// planner's direct inverse path ([`fft_in_place_dir`] over a conjugated
+/// table) computes the same result with two fewer passes over the data.
 pub fn ifft_in_place(x: &mut [Complex32], twiddles: &[Complex32], bitrev: &[u32]) {
     let n = x.len();
     if n <= 1 {
@@ -262,5 +291,29 @@ mod tests {
         ifft_in_place(&mut y, &tw, &br);
         let slow = idft(&x);
         assert_close(&flat(&y), &flat(&slow), 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn direction_explicit_inverse_matches_conjugation_wrapper() {
+        use crate::fft::twiddle::half_table;
+        let mut rng = Pcg32::new(6);
+        for log2n in [1usize, 2, 3, 5, 8] {
+            let n = 1 << log2n;
+            let x = random_signal(&mut rng, n);
+            let br = bit_reverse_table(n);
+
+            // Reference: conjugation identity over the forward table.
+            let mut via_conj = x.clone();
+            ifft_in_place(&mut via_conj, &forward_table(n), &br);
+
+            // Direct: conjugated table, direction flag, manual 1/n scale.
+            let mut direct = x.clone();
+            fft_in_place_dir(&mut direct, &half_table(n, true), &br, true);
+            let scale = 1.0 / n as f32;
+            for v in direct.iter_mut() {
+                *v = v.scale(scale);
+            }
+            assert_close(&flat(&direct), &flat(&via_conj), 1e-4, 1e-4);
+        }
     }
 }

@@ -1,21 +1,42 @@
 //! Twiddle-factor tables.
 //!
-//! Forward transform uses `w_n^k = e^{-2πik/n}`; tables are computed in
-//! f64 and rounded once to f32 (FFTW does the same) so accumulated phase
-//! error stays below f32 epsilon per stage.
+//! Forward transform uses `w_n^k = e^{-2πik/n}` (inverse conjugates the
+//! sign); tables are computed in f64 and rounded once to f32 (FFTW does
+//! the same) so accumulated phase error stays below f32 epsilon per
+//! stage. The power-of-two half-circle tables feed the radix-2 kernel;
+//! [`unit`] is the arbitrary-denominator root the mixed-radix planner's
+//! stage tables are built from.
 
 use super::complex::Complex32;
 
-/// Half-size twiddle table for an n-point transform:
-/// `table[k] = e^{-2πik/n}` for `k in 0..n/2`.
+/// Half-size twiddle table for an n-point transform (`n` a power of
+/// two): `table[k] = e^{∓2πik/n}` for `k in 0..n/2` — minus sign for the
+/// forward transform, plus for the inverse.
 ///
 /// The radix-2 kernel only ever needs the first half of the circle; the
 /// second half is `-table[k - n/2]`.
-pub fn forward_table(n: usize) -> Vec<Complex32> {
+pub fn half_table(n: usize, inverse: bool) -> Vec<Complex32> {
     assert!(n.is_power_of_two() && n >= 2, "twiddle table needs power-of-two n >= 2, got {n}");
     let half = n / 2;
-    let step = -2.0 * std::f64::consts::PI / n as f64;
+    let sign = if inverse { 2.0 } else { -2.0 };
+    let step = sign * std::f64::consts::PI / n as f64;
     (0..half).map(|k| Complex32::cis_f64(step * k as f64)).collect()
+}
+
+/// Forward half-circle table — [`half_table`] with the forward sign.
+pub fn forward_table(n: usize) -> Vec<Complex32> {
+    half_table(n, false)
+}
+
+/// Direction-signed unit root `e^{∓2πi·num/den}` for any denominator
+/// (minus = forward). `num` is reduced mod `den` before the angle is
+/// formed, keeping the f64 phase argument small — the precision trick
+/// the mixed-radix stage tables rely on at large `i·k` products.
+pub fn unit(num: usize, den: usize, inverse: bool) -> Complex32 {
+    debug_assert!(den > 0, "unit root needs a positive denominator");
+    let sign = if inverse { 2.0 } else { -2.0 };
+    let theta = sign * std::f64::consts::PI * (num % den) as f64 / den as f64;
+    Complex32::cis_f64(theta)
 }
 
 /// Full DFT matrix twiddle `w_n^{jk}` row generator used by the oracle and
@@ -85,5 +106,26 @@ mod tests {
     #[should_panic(expected = "power-of-two")]
     fn non_pow2_rejected() {
         forward_table(12);
+    }
+
+    #[test]
+    fn inverse_table_is_conjugate() {
+        let fwd = half_table(16, false);
+        let inv = half_table(16, true);
+        for (f, i) in fwd.iter().zip(&inv) {
+            assert!((f.re - i.re).abs() < 1e-7 && (f.im + i.im).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn unit_matches_w_and_reduces() {
+        for &(num, den) in &[(0usize, 5usize), (3, 7), (7 + 3, 7), (11 * 13, 13)] {
+            let u = unit(num, den, false);
+            let reference = w(den, num % den);
+            assert!((u.re - reference.re).abs() < 1e-7 && (u.im - reference.im).abs() < 1e-7);
+            // Inverse root is the conjugate.
+            let ui = unit(num, den, true);
+            assert!((u.re - ui.re).abs() < 1e-7 && (u.im + ui.im).abs() < 1e-7);
+        }
     }
 }

@@ -17,7 +17,9 @@ use std::time::Duration;
 /// component-local id.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GlobalAddress {
+    /// Locality owning the component.
     pub locality: LocalityId,
+    /// Component-local identifier.
     pub component: u64,
 }
 
@@ -31,6 +33,7 @@ pub struct Agas {
 }
 
 impl Agas {
+    /// Empty registry.
     pub fn new() -> Self {
         Self { names: Mutex::new(HashMap::new()), cv: Condvar::new() }
     }
@@ -88,10 +91,12 @@ impl Agas {
         self.names.lock().unwrap().remove(name)
     }
 
+    /// Number of registered names.
     pub fn len(&self) -> usize {
         self.names.lock().unwrap().len()
     }
 
+    /// True when no names are registered.
     pub fn is_empty(&self) -> bool {
         self.names.lock().unwrap().is_empty()
     }

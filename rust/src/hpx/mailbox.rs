@@ -21,6 +21,7 @@ pub struct Mailbox {
 }
 
 impl Mailbox {
+    /// Empty mailbox.
     pub fn new() -> Self {
         Self { inner: Mutex::new(HashMap::new()), cv: Condvar::new() }
     }

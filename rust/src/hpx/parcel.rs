@@ -57,31 +57,38 @@ pub struct Payload {
 }
 
 impl Payload {
+    /// Wrap owned bytes (no copy).
     pub fn new(bytes: Vec<u8>) -> Self {
         let len = bytes.len();
         Self { buf: Arc::new(bytes), off: 0, len }
     }
 
+    /// Zero-length payload.
     pub fn empty() -> Self {
         Self::new(Vec::new())
     }
 
+    /// Serialize an `f32` slice to little-endian wire bytes.
     pub fn from_f32(xs: &[f32]) -> Self {
         Self::new(crate::util::bytes::f32_to_bytes(xs))
     }
 
+    /// Length of this payload's window in bytes.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the window is zero-length.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// The window's bytes.
     pub fn as_bytes(&self) -> &[u8] {
         &self.buf[self.off..self.off + self.len]
     }
 
+    /// Parse the window as little-endian `f32`s.
     pub fn to_f32(&self) -> Vec<f32> {
         crate::util::bytes::bytes_to_f32(self.as_bytes())
     }
@@ -90,6 +97,16 @@ impl Payload {
     /// payload: an Arc bump, no byte is touched. The slice keeps the
     /// whole backing buffer alive for as long as it exists — acceptable
     /// for wire chunks, whose lifetime ends at delivery.
+    ///
+    /// ```
+    /// use hpx_fft::hpx::parcel::Payload;
+    ///
+    /// let message = Payload::new(vec![7u8; 1024]);
+    /// let chunk = message.slice(256, 128); // wire chunk 2 of a 128 B policy
+    /// assert_eq!(chunk.len(), 128);
+    /// // Same allocation — splitting a message into chunks copies nothing.
+    /// assert!(chunk.shares_storage(&message));
+    /// ```
     ///
     /// # Panics
     /// If `offset + len` exceeds the payload length.
@@ -129,14 +146,20 @@ impl Payload {
 /// An active message.
 #[derive(Clone, Debug)]
 pub struct Parcel {
+    /// Sending locality.
     pub src: LocalityId,
+    /// Destination locality.
     pub dest: LocalityId,
+    /// Remote operation this parcel invokes.
     pub action: ActionId,
+    /// Matching tag within the action namespace.
     pub tag: Tag,
+    /// Argument bytes.
     pub payload: Payload,
 }
 
 impl Parcel {
+    /// Assemble a parcel from its parts.
     pub fn new(
         src: LocalityId,
         dest: LocalityId,

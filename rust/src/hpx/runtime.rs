@@ -32,14 +32,17 @@ impl Cluster {
         Self { fabric, agas: Arc::new(Agas::new()), n }
     }
 
+    /// Number of localities in this cluster.
     pub fn n_localities(&self) -> usize {
         self.n
     }
 
+    /// The parcelport fabric all localities share.
     pub fn fabric(&self) -> &Arc<dyn Parcelport> {
         &self.fabric
     }
 
+    /// The cluster's name service.
     pub fn agas(&self) -> &Arc<Agas> {
         &self.agas
     }
@@ -75,13 +78,17 @@ impl Cluster {
 
 /// Per-locality execution context handed to SPMD closures.
 pub struct LocalityCtx {
+    /// This locality's rank, `0..n`.
     pub rank: LocalityId,
+    /// Total number of localities.
     pub n: usize,
     fabric: Arc<dyn Parcelport>,
+    /// The shared name service.
     pub agas: Arc<Agas>,
 }
 
 impl LocalityCtx {
+    /// The parcelport fabric.
     pub fn fabric(&self) -> &Arc<dyn Parcelport> {
         &self.fabric
     }

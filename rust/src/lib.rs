@@ -10,8 +10,10 @@
 //! JAX/Pallas artifact via PJRT (see `python/compile/` and
 //! [`runtime`]).
 //!
-//! See `DESIGN.md` for the full architecture and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `docs/ARCHITECTURE.md` for the paper-section → module map and
+//! the data-flow trace of a scatter-variant timestep.
+
+#![warn(missing_docs)]
 
 pub mod baseline;
 pub mod bench_harness;

@@ -36,6 +36,8 @@ USAGE:
             [--chunk-bytes N] [--inflight N]
             [--threads N] [--engine native|pjrt] [--artifacts DIR]
             [--net] [--no-verify]
+            (grid lengths may be anything divisible by --nodes — the
+             planner is mixed-radix, e.g. --rows 12 --cols 96)
   repro baseline [--rows N] [--cols N] [--nodes N] [--threads N] [--net]
   repro bench chunk-size      [--quick] [--reps N] [--out DIR]
                               [--chunk-bytes N] [--inflight N]

@@ -7,15 +7,18 @@ pub struct RunStats {
 }
 
 impl RunStats {
+    /// Wrap a non-empty sample set.
     pub fn new(samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty(), "need at least one sample");
         Self { samples }
     }
 
+    /// Sample count.
     pub fn n(&self) -> usize {
         self.samples.len()
     }
 
+    /// Arithmetic mean.
     pub fn mean(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.n() as f64
     }
@@ -31,14 +34,17 @@ impl RunStats {
         var.sqrt()
     }
 
+    /// Smallest sample.
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample.
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Median sample.
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -23,6 +23,7 @@ pub struct LciParcelport {
 }
 
 impl LciParcelport {
+    /// Build a zero-copy fabric connecting `n_localities` localities.
     pub fn new(n_localities: usize, net: Option<NetModel>) -> Self {
         assert!(n_localities > 0, "fabric needs at least one locality");
         Self {

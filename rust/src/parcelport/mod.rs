@@ -33,14 +33,19 @@ use std::sync::Arc;
 /// Which backend a fabric implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PortKind {
+    /// Kernel TCP over loopback sockets.
     Tcp,
+    /// MPI-semantics in-process fabric (eager/rendezvous protocol).
     Mpi,
+    /// LCI-semantics in-process fabric (zero-copy handoff).
     Lci,
 }
 
 impl PortKind {
+    /// All three backends, in the paper's presentation order.
     pub const ALL: [PortKind; 3] = [PortKind::Tcp, PortKind::Mpi, PortKind::Lci];
 
+    /// Lowercase backend name (CLI / CSV spelling).
     pub fn name(&self) -> &'static str {
         match self {
             PortKind::Tcp => "tcp",
@@ -83,7 +88,9 @@ impl std::fmt::Display for PortKind {
 /// completion is driven by the port's progress engine); `recv` is a
 /// blocking matched receive at a locality.
 pub trait Parcelport: Send + Sync {
+    /// Which backend this fabric implements.
     fn kind(&self) -> PortKind;
+    /// Number of localities the fabric connects.
     fn n_localities(&self) -> usize;
 
     /// Queue a parcel for delivery. Payload semantics (copy vs. share)

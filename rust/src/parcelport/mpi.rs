@@ -42,6 +42,7 @@ pub struct MpiParcelport {
 }
 
 impl MpiParcelport {
+    /// Build an MPI-semantics fabric connecting `n_localities` localities.
     pub fn new(n_localities: usize, net: Option<NetModel>) -> Self {
         assert!(n_localities > 0, "fabric needs at least one locality");
         Self {

@@ -10,7 +10,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Live counters (one per fabric).
 #[derive(Debug, Default)]
 pub struct PortStats {
+    /// Parcels sent (wire chunks count individually).
     pub msgs_sent: AtomicU64,
+    /// Payload bytes sent.
     pub bytes_sent: AtomicU64,
     /// Payload memcpys performed by the port itself (framing buffers,
     /// eager bounce buffers). Zero-copy ports keep this at 0.
@@ -27,6 +29,7 @@ pub struct PortStats {
 }
 
 impl PortStats {
+    /// Record one sent parcel of `bytes` payload bytes.
     pub fn record_send(&self, bytes: usize) {
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
         self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
@@ -38,6 +41,7 @@ impl PortStats {
         self.bytes_copied.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
+    /// Point-in-time copy of all counters.
     pub fn snapshot(&self) -> PortStatsSnapshot {
         PortStatsSnapshot {
             msgs_sent: self.msgs_sent.load(Ordering::Relaxed),
@@ -54,12 +58,19 @@ impl PortStats {
 /// Point-in-time copy of the counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PortStatsSnapshot {
+    /// Parcels sent.
     pub msgs_sent: u64,
+    /// Payload bytes sent.
     pub bytes_sent: u64,
+    /// Protocol memcpys performed by the port.
     pub payload_copies: u64,
+    /// Bytes those protocol copies moved.
     pub bytes_copied: u64,
+    /// Rendezvous RTS/CTS handshakes completed.
     pub rendezvous_handshakes: u64,
+    /// Eager-path sends.
     pub eager_sends: u64,
+    /// Microseconds charged by the wire model.
     pub modeled_wire_us: u64,
 }
 

@@ -45,6 +45,7 @@ struct Inner {
 }
 
 impl TcpParcelport {
+    /// Bind loopback listeners and fully mesh `n_localities` localities.
     pub fn new(n_localities: usize, net: Option<NetModel>) -> Result<Self> {
         assert!(n_localities > 0, "fabric needs at least one locality");
         let n = n_localities;

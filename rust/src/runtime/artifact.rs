@@ -30,11 +30,13 @@ impl ArtifactKind {
 /// One compiled-shape artifact.
 #[derive(Clone, Debug)]
 pub struct ManifestEntry {
+    /// Which entry point this artifact implements.
     pub kind: ArtifactKind,
     /// First shape dim (batch for FftRows, rows for Fft2Transposed).
     pub dim0: usize,
     /// Second shape dim (row length / cols).
     pub dim1: usize,
+    /// Artifact file path.
     pub path: PathBuf,
 }
 

@@ -226,6 +226,7 @@ pub struct PjrtRowFft {
 }
 
 impl PjrtRowFft {
+    /// Engine over the shared compute service for `dir`'s artifacts.
     pub fn new(dir: &str) -> Result<Self> {
         Ok(Self { service: ComputeService::shared(dir)? })
     }

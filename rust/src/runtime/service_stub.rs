@@ -23,18 +23,22 @@ const UNAVAILABLE: &str = "PJRT support is not compiled in: rebuild with `--feat
 pub struct ComputeService {}
 
 impl ComputeService {
+    /// Always fails: PJRT is not compiled in.
     pub fn start(_dir: impl AsRef<std::path::Path>) -> Result<Arc<Self>> {
         bail!(UNAVAILABLE)
     }
 
+    /// Always fails: PJRT is not compiled in.
     pub fn shared(_dir: &str) -> Result<Arc<Self>> {
         bail!(UNAVAILABLE)
     }
 
+    /// Compiled shapes for `kind` (always empty in the stub).
     pub fn shapes(&self, _kind: super::artifact::ArtifactKind) -> Vec<(usize, usize)> {
         Vec::new()
     }
 
+    /// Always fails: PJRT is not compiled in.
     pub fn fft_rows(
         &self,
         _batch: usize,
@@ -45,6 +49,7 @@ impl ComputeService {
         bail!(UNAVAILABLE)
     }
 
+    /// Always fails: PJRT is not compiled in.
     pub fn fft2_transposed(
         &self,
         _rows: usize,
@@ -60,6 +65,7 @@ impl ComputeService {
 pub struct PjrtRowFft {}
 
 impl PjrtRowFft {
+    /// Always fails: PJRT is not compiled in.
     pub fn new(_dir: &str) -> Result<Self> {
         bail!(UNAVAILABLE)
     }

@@ -14,10 +14,15 @@ use crate::parcelport::{NetModel, PortKind};
 /// Problem + platform for one prediction.
 #[derive(Clone, Copy, Debug)]
 pub struct FftModelParams {
+    /// Global grid rows.
     pub rows: usize,
+    /// Global grid columns.
     pub cols: usize,
+    /// Locality count.
     pub nodes: usize,
+    /// Per-node compute-rate model.
     pub compute: ComputeModel,
+    /// Wire model.
     pub net: NetModel,
 }
 

@@ -25,20 +25,24 @@ pub enum Action {
 /// Per-node action list.
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
+    /// The node's straight-line program, executed in order.
     pub actions: Vec<Action>,
 }
 
 impl Schedule {
+    /// Append a compute step of `us` microseconds.
     pub fn compute(&mut self, us: f64, label: &'static str) -> &mut Self {
         self.actions.push(Action::Compute { us, label });
         self
     }
 
+    /// Append a non-blocking send.
     pub fn send(&mut self, dst: usize, size: u64, tag: u64) -> &mut Self {
         self.actions.push(Action::Send { dst, size, tag });
         self
     }
 
+    /// Append a blocking matched receive.
     pub fn recv(&mut self, src: usize, tag: u64) -> &mut Self {
         self.actions.push(Action::Recv { src, tag });
         self
@@ -60,11 +64,14 @@ pub struct SimReport {
 
 /// The simulated fabric.
 pub struct SimNet {
+    /// Wire model (α + s/β postal model).
     pub net: NetModel,
+    /// Per-message software cost model.
     pub cost: CostModel,
 }
 
 impl SimNet {
+    /// Fabric from a wire model and a port cost model.
     pub fn new(net: NetModel, cost: CostModel) -> Self {
         Self { net, cost }
     }

@@ -41,6 +41,7 @@ impl<T> Clone for TaskFuture<T> {
 }
 
 impl<T: Send + 'static> Promise<T> {
+    /// Create a linked promise/future pair.
     pub fn new() -> (Promise<T>, TaskFuture<T>) {
         let shared = Arc::new(Shared {
             state: Mutex::new(State { value: None, fulfilled: false, continuations: Vec::new() }),
@@ -101,6 +102,7 @@ impl<T: Send + 'static> TaskFuture<T> {
         }
     }
 
+    /// Whether the promise has been fulfilled.
     pub fn is_ready(&self) -> bool {
         self.shared.state.lock().unwrap().fulfilled
     }

@@ -1,7 +1,9 @@
 //! Futurized task runtime — the HPX-analog asynchronous many-task substrate.
 //!
 //! HPX parallelizes with lightweight tasks returning futures; this module
-//! provides the same model on OS threads: a [`ThreadPool`] executor,
+//! provides the same model on OS threads: a [`ThreadPool`] executor
+//! (including the process-wide [`ThreadPool::global`] compute pool and
+//! the scoped borrowing batches of [`ThreadPool::run_scoped`]),
 //! [`Promise`]/[`TaskFuture`] one-shot synchronization cells with
 //! continuation support, combinators ([`when_all`]), and data-parallel
 //! helpers ([`parallel_for`], [`parallel_chunks_mut`]) that stand in for
@@ -13,5 +15,5 @@ mod pool;
 mod scope;
 
 pub use future::{when_all, Promise, TaskFuture};
-pub use pool::ThreadPool;
+pub use pool::{is_worker_thread, ThreadPool};
 pub use scope::{parallel_chunks_mut, parallel_for};

@@ -5,13 +5,33 @@
 //! pool is deliberately simple (single injector queue + condvar) — at the
 //! message/chunk granularity of the FFT benchmark the queue is never the
 //! bottleneck (verified in `benches/hotpath.rs`).
+//!
+//! Two executors share this type: per-communicator chunk-send pools, and
+//! the process-wide [`ThreadPool::global`] pool the batched row-FFT
+//! sweeps run on ([`ThreadPool::run_scoped`] — the HPX-style "one worker
+//! pool per process" model, instead of spawning OS threads per sweep).
 
 use super::future::{Promise, TaskFuture};
+use std::any::Any;
+use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Set for the lifetime of every pool worker thread (any pool).
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is a worker of *some* [`ThreadPool`].
+/// [`ThreadPool::run_scoped`] uses this to degrade to inline execution
+/// rather than risk a blocked-worker deadlock on nested scopes.
+pub fn is_worker_thread() -> bool {
+    IS_POOL_WORKER.with(|f| f.get())
+}
 
 struct Queue {
     jobs: Mutex<QueueState>,
@@ -57,6 +77,17 @@ impl ThreadPool {
         Self::new(n)
     }
 
+    /// The process-wide compute pool (one worker per core, spawned on
+    /// first use, never torn down). All batched row-FFT sweeps share it —
+    /// concurrent localities enqueue their bands here instead of each
+    /// spawning OS threads, the same discipline as HPX's single worker
+    /// pool per process.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(ThreadPool::with_default_parallelism)
+    }
+
+    /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size
     }
@@ -75,6 +106,74 @@ impl ThreadPool {
         }
         self.queue.cv.notify_one();
         future
+    }
+
+    /// Run a batch of borrowing tasks to completion on the pool —
+    /// structured (scoped) parallelism, the pool-backed analog of
+    /// `std::thread::scope`.
+    ///
+    /// Every task is executed before this returns, so the tasks may
+    /// borrow from the caller's stack (`'env`). Panics inside a task are
+    /// caught on the worker (keeping the pool alive) and re-raised here
+    /// after all tasks have settled. When called *from* a pool worker
+    /// thread the tasks run inline instead of being enqueued: a worker
+    /// blocking on sub-tasks of its own pool could deadlock a saturated
+    /// queue.
+    pub fn run_scoped<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if is_worker_thread() {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        // Join-on-drop guard: every future pushed here is waited on even
+        // if this frame unwinds mid-way (e.g. a later `spawn` panics on a
+        // shut-down pool). Enqueued jobs always run — workers drain the
+        // queue before honoring shutdown — so the waits terminate, and no
+        // borrowed task can outlive the caller's frame on any path.
+        struct JoinOnDrop {
+            futures: Vec<TaskFuture<Result<(), Box<dyn Any + Send>>>>,
+        }
+        impl Drop for JoinOnDrop {
+            fn drop(&mut self) {
+                for future in self.futures.drain(..) {
+                    future.wait();
+                }
+            }
+        }
+
+        let mut guard = JoinOnDrop { futures: Vec::new() };
+        for task in tasks {
+            // SAFETY: the only thing erased is the `'env` lifetime. Every
+            // enqueued task is joined before this frame is left — by the
+            // get() loop on the normal path, by `guard`'s Drop on unwind —
+            // so no task (or its captured borrows) outlives the caller's
+            // stack frame, the same guarantee `std::thread::scope`
+            // provides structurally.
+            let task: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(task) };
+            guard.futures.push(self.spawn(move || catch_unwind(AssertUnwindSafe(task))));
+        }
+        // Settle every task before collecting results: after this loop
+        // no spawned task is still running, so even if result collection
+        // unwinds, no borrowed task can execute past the caller's frame.
+        // (Draining while collecting would let `Drain`'s destructor
+        // discard unjoined futures on unwind.)
+        for future in &guard.futures {
+            future.wait();
+        }
+        let futures = std::mem::take(&mut guard.futures);
+        let mut first_panic: Option<Box<dyn Any + Send>> = None;
+        for future in futures {
+            if let Err(payload) = future.get() {
+                first_panic.get_or_insert(payload);
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
     }
 
     /// Submit a batch and wait for all results, in order.
@@ -99,6 +198,7 @@ impl ThreadPool {
 }
 
 fn worker_loop(queue: &Queue) {
+    IS_POOL_WORKER.with(|f| f.set(true));
     loop {
         let job = {
             let mut st = queue.jobs.lock().unwrap();
@@ -174,6 +274,73 @@ mod tests {
     #[test]
     fn pool_size_min_one() {
         assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn run_scoped_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0usize; 97];
+        {
+            let bands: Vec<&mut [usize]> = data.chunks_mut(10).collect();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = bands
+                .into_iter()
+                .enumerate()
+                .map(|(i, band)| {
+                    Box::new(move || {
+                        for x in band.iter_mut() {
+                            *x = i + 1;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        assert!(data.iter().all(|&x| x > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[96], 10);
+    }
+
+    #[test]
+    fn run_scoped_propagates_panic_and_keeps_pool_alive() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scoped(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("task boom")),
+            ]);
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The workers must have survived the caught panic.
+        assert_eq!(pool.spawn(|| 5).get(), 5);
+    }
+
+    #[test]
+    fn run_scoped_from_worker_runs_inline() {
+        // A pool task invoking run_scoped on its own pool must not
+        // deadlock even when every worker is busy.
+        let pool = Arc::new(ThreadPool::new(1));
+        let p2 = Arc::clone(&pool);
+        let f = pool.spawn(move || {
+            let counter = AtomicUsize::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            p2.run_scoped(tasks);
+            counter.load(Ordering::SeqCst)
+        });
+        assert_eq!(f.get(), 4);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = ThreadPool::global();
+        let b = ThreadPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.size() >= 1);
     }
 
     #[test]

@@ -1,14 +1,21 @@
 //! Structured data parallelism over slices (the `rayon` stand-in).
 //!
-//! Built on `std::thread::scope`, so closures may borrow from the caller's
-//! stack — which is exactly what the batched row-FFT needs: mutate a large
-//! buffer in place from `nthreads` workers without `Arc`-wrapping it.
+//! Work is dispatched to the process-wide [`ThreadPool::global`] worker
+//! pool via [`ThreadPool::run_scoped`], so closures may borrow from the
+//! caller's stack — which is exactly what the batched row-FFT needs:
+//! mutate a large buffer in place from `nthreads` workers without
+//! `Arc`-wrapping it. Running on the shared pool (instead of spawning OS
+//! threads per call, as an earlier revision did) makes concurrent
+//! localities' sweeps queue onto one core-sized worker set — the
+//! MPI+pthreads "+X" model with HPX's one-pool-per-process discipline.
 
-/// Run `f(i)` for every `i in 0..n` across `nthreads` OS threads.
+use super::pool::ThreadPool;
+
+/// Run `f(i)` for every `i in 0..n` across up to `nthreads` pool tasks.
 ///
 /// Work is split into contiguous index blocks (good locality for row
 /// loops). `nthreads == 1` or `n <= 1` degrades to a plain loop with zero
-/// spawn overhead.
+/// dispatch overhead.
 pub fn parallel_for(n: usize, nthreads: usize, f: impl Fn(usize) + Sync) {
     let nthreads = nthreads.max(1).min(n.max(1));
     if nthreads <= 1 {
@@ -18,25 +25,26 @@ pub fn parallel_for(n: usize, nthreads: usize, f: impl Fn(usize) + Sync) {
         return;
     }
     let per = n.div_ceil(nthreads);
-    std::thread::scope(|s| {
-        for t in 0..nthreads {
-            let lo = t * per;
-            let hi = ((t + 1) * per).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || {
-                for i in lo..hi {
-                    f(i);
-                }
-            });
+    let f = &f;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nthreads);
+    for t in 0..nthreads {
+        let lo = t * per;
+        let hi = ((t + 1) * per).min(n);
+        if lo >= hi {
+            break;
         }
-    });
+        tasks.push(Box::new(move || {
+            for i in lo..hi {
+                f(i);
+            }
+        }));
+    }
+    ThreadPool::global().run_scoped(tasks);
 }
 
 /// Split `data` into `chunk`-sized mutable pieces and process them in
-/// parallel; `f` receives the chunk index and the chunk.
+/// parallel on the global pool; `f` receives the chunk index and the
+/// chunk.
 pub fn parallel_chunks_mut<T: Send>(
     data: &mut [T],
     chunk: usize,
@@ -52,21 +60,23 @@ pub fn parallel_chunks_mut<T: Send>(
         }
         return;
     }
-    // Round-robin chunks over threads to balance ragged tails.
+    // Round-robin chunks over tasks to balance ragged tails.
     let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..nthreads).map(|_| Vec::new()).collect();
     for (k, item) in chunks.into_iter().enumerate() {
         buckets[k % nthreads].push(item);
     }
-    std::thread::scope(|s| {
-        for bucket in buckets {
-            let f = &f;
-            s.spawn(move || {
+    let f = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = buckets
+        .into_iter()
+        .map(|bucket| {
+            Box::new(move || {
                 for (i, c) in bucket {
                     f(i, c);
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    ThreadPool::global().run_scoped(tasks);
 }
 
 #[cfg(test)]
@@ -128,5 +138,24 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn many_concurrent_callers_share_the_pool() {
+        // Several OS threads (stand-ins for localities) issuing parallel
+        // sweeps at once: all work lands, nothing deadlocks.
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let mut data = vec![0u32; 64];
+                    parallel_chunks_mut(&mut data, 8, 4, |_, chunk| {
+                        for x in chunk.iter_mut() {
+                            *x = t + 1;
+                        }
+                    });
+                    assert!(data.iter().all(|&x| x == t + 1));
+                });
+            }
+        });
     }
 }

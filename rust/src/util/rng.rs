@@ -11,10 +11,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator starting from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 uniform bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -33,8 +35,10 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Stream selector used by [`Pcg32::new`].
     pub const DEFAULT_STREAM: u64 = 0xDA3E_39CB_94B9_5BDB;
 
+    /// Generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, Self::DEFAULT_STREAM)
     }
@@ -48,6 +52,7 @@ impl Pcg32 {
         rng
     }
 
+    /// Next 32 uniform bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -57,6 +62,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 uniform bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

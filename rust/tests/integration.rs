@@ -52,6 +52,76 @@ fn full_equivalence_matrix() {
     }
 }
 
+/// Mixed-radix acceptance: both distributed variants produce
+/// DFT-oracle-verified results on a non-power-of-two grid over all
+/// three parcelports. The oracle is the O(n²) f64-accumulating DFT
+/// (row DFTs → transpose → row DFTs), not the fast planner — so this
+/// pins the whole distributed pipeline against ground truth.
+#[test]
+fn non_pow2_grid_dft_verified_all_ports_both_variants() {
+    use hpx_fft::dist_fft::driver::NativeRowFft;
+    use hpx_fft::dist_fft::partition::Slab;
+    use hpx_fft::dist_fft::transpose::transpose;
+    use hpx_fft::dist_fft::verify::rel_error;
+    use hpx_fft::fft::complex::Complex32;
+    use hpx_fft::fft::dft::dft;
+
+    let (rows, cols, parts) = (12usize, 20usize, 4usize);
+    let grid = Slab::whole(rows, cols).data;
+    let mut work: Vec<Complex32> = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        work.extend(dft(&grid[r * cols..(r + 1) * cols]));
+    }
+    let t = transpose(&work, rows, cols);
+    let mut oracle: Vec<Complex32> = Vec::with_capacity(rows * cols);
+    for c in 0..cols {
+        oracle.extend(dft(&t[c * rows..(c + 1) * rows]));
+    }
+
+    for port in PortKind::ALL {
+        for variant in [Variant::AllToAll, Variant::Scatter] {
+            let cluster = Cluster::new(parts, port, None).unwrap();
+            let pieces = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                let slab = Slab::synthetic(rows, cols, parts, ctx.rank);
+                match variant {
+                    Variant::Scatter => {
+                        hpx_fft::dist_fft::scatter_variant::run(&comm, &slab, 2, &NativeRowFft).0
+                    }
+                    Variant::AllToAll => {
+                        hpx_fft::dist_fft::all_to_all_variant::run(
+                            &comm,
+                            &slab,
+                            AllToAllAlgo::PairwiseChunked,
+                            2,
+                            &NativeRowFft,
+                        )
+                        .0
+                    }
+                }
+            });
+            let mut assembled = Vec::with_capacity(rows * cols);
+            for p in pieces {
+                assembled.extend(p);
+            }
+            let err = rel_error(&assembled, &oracle);
+            assert!(err < 1e-4, "{port} {variant:?}: rel err {err} vs DFT oracle");
+        }
+    }
+}
+
+/// Plan-cache reuse across runs: a second lookup of the same
+/// `(length, direction)` is pointer-identical and counted as a hit.
+#[test]
+fn plan_cache_reused_across_runs() {
+    use hpx_fft::fft::{Direction, PlanCache};
+    let a = PlanCache::global().plan(1000, Direction::Forward);
+    let h0 = PlanCache::global().hits();
+    let b = PlanCache::global().plan(1000, Direction::Forward);
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "cache must reuse the plan");
+    assert!(PlanCache::global().hits() > h0, "hit counter must advance");
+}
+
 /// The baseline and the HPX variants agree on the math.
 #[test]
 fn baseline_agrees_with_hpx() {
