@@ -20,7 +20,7 @@
 //! EXPERIMENTS.md §End-to-end.
 
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy};
-use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, Variant};
+use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
 use hpx_fft::metrics::table::Table;
 use hpx_fft::parcelport::{NetModel, PortKind};
 
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
                 variant,
                 algo: AllToAllAlgo::HpxRoot,
                 chunk: ChunkPolicy::default(),
+                exec: ExecutionMode::Blocking,
                 threads_per_locality: 2,
                 net: Some(NetModel::infiniband_hdr()),
                 engine: engine.clone(),

@@ -9,7 +9,7 @@
 //! prints per-step timings — the smallest complete tour of the system.
 
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy};
-use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, Variant};
+use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
 use hpx_fft::parcelport::PortKind;
 
 fn main() -> anyhow::Result<()> {
@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         variant: Variant::Scatter,
         algo: AllToAllAlgo::HpxRoot,
         chunk: ChunkPolicy::default(),
+        exec: ExecutionMode::Blocking,
         threads_per_locality: 2,
         net: None,
         engine: ComputeEngine::Native,

@@ -78,6 +78,10 @@ pub fn run_on(cluster: &Cluster, config: &FftwLikeConfig) -> anyhow::Result<Fftw
     );
     let results: Vec<(Vec<Complex32>, StepTimings)> = cluster.run(|ctx| {
         let comm = Communicator::from_ctx(ctx);
+        // The collective engine is futures-first and drives its blocking
+        // wrappers through the send pool; spawn it before the barrier so
+        // thread creation never lands in the timed section.
+        comm.warm_chunk_pool();
         let slab = Slab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
         fftw_like_transform(&comm, &slab, config.threads)
     });

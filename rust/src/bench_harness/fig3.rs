@@ -22,6 +22,7 @@ use super::plot::{log_log_plot, Series};
 use super::runner::measure;
 use crate::collectives::{Communicator, ScatterAlgo};
 use crate::config::BenchConfig;
+use crate::dist_fft::driver::ExecutionMode;
 use crate::hpx::parcel::Payload;
 use crate::hpx::runtime::Cluster;
 use crate::metrics::{csv::write_csv, RunStats};
@@ -34,34 +35,43 @@ pub struct ChunkPoint {
     pub port: PortKind,
     /// Scatter algorithm measured (monolithic or pipelined).
     pub algo: ScatterAlgo,
+    /// Execution mode measured (blocking call vs posted future).
+    pub exec: ExecutionMode,
     /// Payload size, bytes.
     pub bytes: u64,
     /// Live hybrid measurement statistics.
     pub live: RunStats,
+    /// Mean wall time between the async posting returning and the
+    /// transfer completing — the window a caller could fill with compute,
+    /// i.e. the wire time the port can hide. 0 in blocking mode, where
+    /// the caller is parked for the whole transfer.
+    pub overlap_us: f64,
     /// Closed-form cost-model prediction, µs.
     pub model_us: f64,
 }
 
-/// Run the full Fig. 3 sweep.
+/// Run the full Fig. 3 sweep in the configured execution mode.
 pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<ChunkPoint>> {
     let net = NetModel::infiniband_hdr();
     let pipeline = config.pipeline;
+    let exec = config.exec;
     let mut points = Vec::new();
     for port in PortKind::ALL {
         let cluster = Cluster::new(2, port, Some(net))?;
         for &bytes in &config.chunk_sizes {
             for algo in ScatterAlgo::ALL {
+                // (total, posted) per rep, root's view: `posted` is when
+                // control returned to the caller.
+                let mut windows: Vec<f64> = Vec::new();
                 let stats = measure(config.warmup, config.reps, || {
-                    let times = cluster.run(|ctx| {
+                    let times: Vec<(f64, f64)> = cluster.run(|ctx| {
                         let comm = Communicator::from_ctx(ctx);
                         comm.set_chunk_policy(pipeline);
                         // Spawn the send pool before the timer: thread
                         // creation is a communicator-lifetime cost, not
                         // per-scatter protocol work, and would otherwise
                         // dominate the µs-scale small-payload points.
-                        if algo == ScatterAlgo::Pipelined {
-                            comm.warm_chunk_pool();
-                        }
+                        comm.warm_chunk_pool();
                         let t0 = std::time::Instant::now();
                         let chunks = (ctx.rank == 0).then(|| {
                             vec![
@@ -69,14 +79,40 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<ChunkPoint>> {
                                 Payload::new(vec![0u8; bytes as usize]),
                             ]
                         });
-                        let _mine = comm.scatter_with_algo(0, chunks, algo);
-                        t0.elapsed().as_secs_f64() * 1e6
+                        match exec {
+                            ExecutionMode::Blocking => {
+                                let _mine = comm.scatter_with_algo(0, chunks, algo);
+                                let total = t0.elapsed().as_secs_f64() * 1e6;
+                                (total, total)
+                            }
+                            ExecutionMode::Async => {
+                                let coll = comm.scatter_async(0, chunks, algo);
+                                let posted = t0.elapsed().as_secs_f64() * 1e6;
+                                let _mine = coll.get();
+                                (t0.elapsed().as_secs_f64() * 1e6, posted)
+                            }
+                        }
                     });
                     // The root's send-side wall clock (channel view).
-                    times[0]
+                    let (total, posted) = times[0];
+                    windows.push(total - posted);
+                    total
                 });
+                // Match the RunStats discipline: warmup reps (recorded by
+                // the closure like every call) are excluded from the mean.
+                let measured = &windows[config.warmup.min(windows.len())..];
+                let overlap_us =
+                    measured.iter().sum::<f64>() / measured.len().max(1) as f64;
                 let model_us = net.message_time_us(&port.cost_model(), bytes);
-                points.push(ChunkPoint { port, algo, bytes, live: stats, model_us });
+                points.push(ChunkPoint {
+                    port,
+                    algo,
+                    exec,
+                    bytes,
+                    live: stats,
+                    overlap_us,
+                    model_us,
+                });
             }
         }
     }
@@ -86,30 +122,34 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<ChunkPoint>> {
 /// Paper-style report: table + ASCII figure + CSV.
 pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
     let mut table = crate::metrics::table::Table::new(&[
-        "port", "algo", "chunk", "live mean", "±95% CI", "model",
+        "port", "algo", "exec", "chunk", "live mean", "±95% CI", "overlap", "model",
     ]);
     let mut rows = Vec::new();
     for p in points {
         table.row(&[
             p.port.name().into(),
             p.algo.name().into(),
+            p.exec.name().into(),
             human_bytes(p.bytes),
             format!("{:.1} µs", p.live.mean()),
             format!("{:.1}", p.live.ci95()),
+            crate::metrics::table::fmt_us(p.overlap_us),
             format!("{:.1} µs", p.model_us),
         ]);
         rows.push(vec![
             p.port.name().to_string(),
             p.algo.name().to_string(),
+            p.exec.name().to_string(),
             p.bytes.to_string(),
             p.live.mean().to_string(),
             p.live.ci95().to_string(),
+            p.overlap_us.to_string(),
             p.model_us.to_string(),
         ]);
     }
     write_csv(
         format!("{out_dir}/fig3_chunk_size.csv"),
-        &["port", "algo", "bytes", "live_mean_us", "live_ci95_us", "model_us"],
+        &["port", "algo", "exec", "bytes", "live_mean_us", "live_ci95_us", "overlap_us", "model_us"],
         &rows,
     )?;
 
@@ -143,6 +183,25 @@ pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
         "runtime [µs]",
         &series,
     ));
+
+    // Async sweeps: show how much of each port's wire time the posted
+    // collective hides, at the largest measured payload.
+    let async_points: Vec<&ChunkPoint> =
+        points.iter().filter(|p| p.exec == ExecutionMode::Async).collect();
+    if let Some(max_bytes) = async_points.iter().map(|p| p.bytes).max() {
+        let bars: Vec<(String, f64, f64)> = async_points
+            .iter()
+            .filter(|p| p.bytes == max_bytes)
+            .map(|p| {
+                (format!("{}/{}", p.port.name(), p.algo.name()), p.overlap_us, p.live.mean())
+            })
+            .collect();
+        out.push('\n');
+        out.push_str(&super::plot::overlap_bars(
+            &format!("wire time hidden by async posting @ {}", human_bytes(max_bytes)),
+            &bars,
+        ));
+    }
     Ok(out)
 }
 
@@ -216,6 +275,25 @@ mod tests {
         let text = report(&points, dir.to_str().unwrap()).unwrap();
         assert!(text.contains("Fig. 3"));
         assert!(dir.join("fig3_chunk_size.csv").exists());
+        let csv = std::fs::read_to_string(dir.join("fig3_chunk_size.csv")).unwrap();
+        assert!(csv.starts_with("port,algo,exec,bytes"), "{csv}");
+        assert!(csv.contains("overlap_us"), "{csv}");
+    }
+
+    #[test]
+    fn async_sweep_reports_posting_window() {
+        let cfg = BenchConfig { exec: ExecutionMode::Async, ..tiny_config() };
+        let points = run(&cfg).unwrap();
+        assert!(points.iter().all(|p| p.exec == ExecutionMode::Async));
+        // Posting returns before the transfer completes, so some window
+        // must be visible at the 64 KiB point on at least one port.
+        assert!(
+            points.iter().any(|p| p.bytes == 64 * 1024 && p.overlap_us > 0.0),
+            "no posting window measured: {points:?}"
+        );
+        let dir = std::env::temp_dir().join(format!("hpxfft-fig3a-{}", std::process::id()));
+        let text = report(&points, dir.to_str().unwrap()).unwrap();
+        assert!(text.contains("hidden"), "async report shows the overlap bars");
     }
 
     #[test]

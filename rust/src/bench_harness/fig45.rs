@@ -9,12 +9,12 @@
 //! - **simnet predictions** at the paper's true 2^14×2^14 problem on
 //!   1–16 nodes of the buran model.
 
-use super::plot::{log_log_plot, Series};
+use super::plot::{log_log_plot, overlap_bars, Series};
 use super::runner::measure;
 use crate::baseline::fftw_like::{run_on as baseline_run_on, FftwLikeConfig};
 use crate::collectives::AllToAllAlgo;
 use crate::config::{BenchConfig, ClusterSpec};
-use crate::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
+use crate::dist_fft::driver::{self, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
 use crate::hpx::runtime::Cluster;
 use crate::metrics::{csv::write_csv, RunStats};
 use crate::parcelport::PortKind;
@@ -60,14 +60,20 @@ pub struct ScalingPoint {
     pub system: System,
     /// Locality count.
     pub nodes: usize,
+    /// Execution mode of the live measurement (`--exec` axis).
+    pub exec: ExecutionMode,
     /// Live hybrid measurement (None for sim-only points).
     pub live: Option<RunStats>,
+    /// Mean critical-path `overlap_us` of the live runs — wire time the
+    /// execution mode hid behind compute (None for sim-only points;
+    /// always 0 for the blocking mode and the FFTW3 baseline).
+    pub live_overlap_us: Option<f64>,
     /// Simnet prediction at paper scale, µs.
     pub sim_us: f64,
 }
 
 /// Run one figure's sweep (Fig. 4 = `Variant::AllToAll`, Fig. 5 =
-/// `Variant::Scatter`).
+/// `Variant::Scatter`) in the configured execution mode.
 pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<ScalingPoint>> {
     let spec = ClusterSpec::buran();
     let net = spec.net_model();
@@ -75,12 +81,12 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
 
     for system in System::ALL {
         // Live hybrid at laptop scale.
-        let mut live: std::collections::HashMap<usize, RunStats> = Default::default();
+        let mut live: std::collections::HashMap<usize, (RunStats, f64)> = Default::default();
         for &nodes in &config.live_nodes {
             if config.live_grid % nodes != 0 {
                 continue;
             }
-            let stats = match system {
+            let entry = match system {
                 System::Hpx(port) => {
                     let cluster = Cluster::new(nodes, port, Some(net))?;
                     let cfg = DistFftConfig {
@@ -91,14 +97,24 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                         variant,
                         algo: AllToAllAlgo::HpxRoot,
                         chunk: config.pipeline,
+                        exec: config.exec,
                         threads_per_locality: config.threads,
                         net: Some(net),
                         engine: ComputeEngine::Native,
                         verify: false,
                     };
-                    measure(config.warmup, config.reps, || {
-                        driver::run_on(&cluster, &cfg).expect("dist fft run").critical_path.total_us
-                    })
+                    let mut overlaps = Vec::new();
+                    let stats = measure(config.warmup, config.reps, || {
+                        let report = driver::run_on(&cluster, &cfg).expect("dist fft run");
+                        overlaps.push(report.critical_path.overlap_us);
+                        report.critical_path.total_us
+                    });
+                    // Warmup reps are recorded by the closure like every
+                    // call; drop them to match the RunStats discipline.
+                    let measured = &overlaps[config.warmup.min(overlaps.len())..];
+                    let overlap =
+                        measured.iter().sum::<f64>() / measured.len().max(1) as f64;
+                    (stats, overlap)
                 }
                 System::Fftw3 => {
                     let cluster = Cluster::new(nodes, PortKind::Mpi, Some(net))?;
@@ -110,12 +126,14 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                         net: Some(net),
                         verify: false,
                     };
-                    measure(config.warmup, config.reps, || {
+                    let stats = measure(config.warmup, config.reps, || {
                         baseline_run_on(&cluster, &cfg).expect("baseline run").critical_path.total_us
-                    })
+                    });
+                    // The baseline is synchronous by construction.
+                    (stats, 0.0)
                 }
             };
-            live.insert(nodes, stats);
+            live.insert(nodes, entry);
         }
 
         // Simnet prediction at paper scale.
@@ -139,10 +157,20 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                 System::Fftw3 => PortKind::Mpi,
             };
             let sim = predict_fft(&params, port, model_variant);
+            let entry = live.get(&nodes).cloned();
             points.push(ScalingPoint {
                 system,
                 nodes,
-                live: live.get(&nodes).cloned(),
+                // The FFTW3 baseline is synchronous by construction: its
+                // rows stay labeled `blocking` whatever the sweep mode,
+                // so grouping the CSV by `exec` never compares the same
+                // baseline numbers against themselves.
+                exec: match system {
+                    System::Fftw3 => ExecutionMode::Blocking,
+                    System::Hpx(_) => config.exec,
+                },
+                live: entry.as_ref().map(|(s, _)| s.clone()),
+                live_overlap_us: entry.map(|(_, o)| o),
                 sim_us: sim.makespan_us,
             });
         }
@@ -162,29 +190,33 @@ pub fn report(
         Variant::Scatter => "Fig. 5",
     };
     let mut table = crate::metrics::table::Table::new(&[
-        "system", "nodes", "live mean", "±95% CI", "sim (2^14²)",
+        "system", "nodes", "exec", "live mean", "±95% CI", "overlap", "sim (2^14²)",
     ]);
     let mut rows = Vec::new();
     for p in points {
         table.row(&[
             p.system.label(),
             p.nodes.to_string(),
+            p.exec.name().into(),
             p.live.as_ref().map(|s| format!("{:.2} ms", s.mean() / 1e3)).unwrap_or("-".into()),
             p.live.as_ref().map(|s| format!("{:.2}", s.ci95() / 1e3)).unwrap_or("-".into()),
+            p.live_overlap_us.map(crate::metrics::table::fmt_us).unwrap_or("-".into()),
             format!("{:.1} ms", p.sim_us / 1e3),
         ]);
         rows.push(vec![
             p.system.label(),
             p.nodes.to_string(),
+            p.exec.name().to_string(),
             p.live.as_ref().map(|s| s.mean().to_string()).unwrap_or_default(),
             p.live.as_ref().map(|s| s.ci95().to_string()).unwrap_or_default(),
+            p.live_overlap_us.map(|o| o.to_string()).unwrap_or_default(),
             p.sim_us.to_string(),
         ]);
     }
     let tag = variant.name().replace('-', "_");
     write_csv(
         format!("{out_dir}/{}_strong_scaling_{tag}.csv", fig.replace([' ', '.'], "").to_lowercase()),
-        &["system", "nodes", "live_mean_us", "live_ci95_us", "sim_us"],
+        &["system", "nodes", "exec", "live_mean_us", "live_ci95_us", "overlap_us", "sim_us"],
         &rows,
     )?;
 
@@ -210,6 +242,31 @@ pub fn report(
         "runtime [µs]",
         &series,
     ));
+
+    // Async live runs: per-system overlap bars at the largest live node
+    // count — the share of each run's wall time the futures graph hid.
+    let live_async: Vec<&ScalingPoint> = points
+        .iter()
+        .filter(|p| p.exec == ExecutionMode::Async && p.live.is_some())
+        .collect();
+    if let Some(max_live) = live_async.iter().map(|p| p.nodes).max() {
+        let bars: Vec<(String, f64, f64)> = live_async
+            .iter()
+            .filter(|p| p.nodes == max_live)
+            .map(|p| {
+                (
+                    p.system.label(),
+                    p.live_overlap_us.unwrap_or(0.0),
+                    p.live.as_ref().map(|s| s.mean()).unwrap_or(0.0),
+                )
+            })
+            .collect();
+        out.push('\n');
+        out.push_str(&overlap_bars(
+            &format!("wall time hidden behind compute @ {max_live} localities (live)"),
+            &bars,
+        ));
+    }
 
     // Headline: LCI-vs-FFTW3 speedup at the largest node count.
     let max_nodes = points.iter().map(|p| p.nodes).max().unwrap_or(1);
@@ -267,6 +324,29 @@ mod tests {
         assert!(text.contains("Fig. 5"));
         assert!(text.contains("headline @ 16 nodes"));
         assert!(text.contains("speedup"));
+    }
+
+    #[test]
+    fn async_live_points_record_overlap() {
+        let cfg = BenchConfig { exec: ExecutionMode::Async, ..tiny() };
+        let points = run(&cfg, Variant::Scatter).unwrap();
+        // HPX points carry the sweep mode; the synchronous FFTW3 baseline
+        // stays labeled blocking.
+        for p in &points {
+            match p.system {
+                System::Hpx(_) => assert_eq!(p.exec, ExecutionMode::Async),
+                System::Fftw3 => assert_eq!(p.exec, ExecutionMode::Blocking),
+            }
+        }
+        assert!(
+            points.iter().any(|p| matches!(p.system, System::Hpx(_))
+                && p.live.is_some()
+                && p.live_overlap_us.is_some()),
+            "live async points must carry an overlap estimate"
+        );
+        let dir = std::env::temp_dir().join(format!("hpxfft-fig45a-{}", std::process::id()));
+        let text = report(&points, Variant::Scatter, &cfg, dir.to_str().unwrap()).unwrap();
+        assert!(text.contains("hidden"), "async report shows overlap bars");
     }
 
     #[test]

@@ -64,6 +64,29 @@ pub fn log_log_plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) 
     out
 }
 
+/// ASCII horizontal-bar view of comm/compute overlap: one row per
+/// labelled measurement, showing how much of the communication window
+/// (`comm_us`) was hidden behind compute (`overlap_us`) — `#` for the
+/// hidden share, `.` for the exposed remainder. Rows whose comm window is
+/// zero (e.g. single-rank runs) are rendered empty.
+pub fn overlap_bars(title: &str, rows: &[(String, f64, f64)]) -> String {
+    const W: usize = 40;
+    let mut out = format!("{title}\n");
+    let label_w = rows.iter().map(|(l, _, _)| l.len()).max().unwrap_or(0);
+    for (label, overlap_us, comm_us) in rows {
+        let frac = if *comm_us > 0.0 { (overlap_us / comm_us).clamp(0.0, 1.0) } else { 0.0 };
+        let filled = (frac * W as f64).round() as usize;
+        let bar = format!("{}{}", "#".repeat(filled), ".".repeat(W - filled));
+        out.push_str(&format!(
+            "  {label:<label_w$} |{bar}| {:5.1}% hidden ({:.1} of {:.1} µs)\n",
+            frac * 100.0,
+            overlap_us,
+            comm_us
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +115,20 @@ mod tests {
         let s = Series { label: "one".into(), symbol: 'o', points: vec![(5.0, 5.0)] };
         let plot = log_log_plot("t", "x", "y", &[s]);
         assert!(plot.contains('o'));
+    }
+
+    #[test]
+    fn overlap_bars_render_fraction() {
+        let rows = vec![
+            ("lci".to_string(), 50.0, 100.0),
+            ("tcp".to_string(), 0.0, 100.0),
+            ("one-rank".to_string(), 0.0, 0.0),
+        ];
+        let out = overlap_bars("overlap", &rows);
+        assert!(out.contains("overlap"));
+        assert!(out.contains("50.0% hidden"), "{out}");
+        assert!(out.contains("0.0% hidden"));
+        // Half the bar filled for the 50% row.
+        assert!(out.contains(&format!("|{}{}|", "#".repeat(20), ".".repeat(20))), "{out}");
     }
 }

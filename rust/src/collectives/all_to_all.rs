@@ -91,7 +91,23 @@ pub(crate) fn pairwise_peers(me: usize, n: usize, r: usize) -> (usize, usize) {
 impl Communicator {
     /// Exchange `chunks` (one per destination rank, in rank order);
     /// returns one payload per source rank, in rank order.
+    ///
+    /// A thin blocking wrapper over
+    /// [`Communicator::all_to_all_async`]`.get()` — the futures engine is
+    /// the only engine, so blocking and async callers cannot diverge.
     pub fn all_to_all(&self, chunks: Vec<Payload>, algo: AllToAllAlgo) -> Vec<Payload> {
+        self.all_to_all_async(chunks, algo).get()
+    }
+
+    /// The round-paced blocking schedules, dispatched by algorithm. The
+    /// nonblocking layer runs these on a shadow communicator inside a
+    /// single pool job to preserve each algorithm's pacing (the property
+    /// the benchmark measures) while still posting in O(1).
+    pub(crate) fn all_to_all_blocking(
+        &self,
+        chunks: Vec<Payload>,
+        algo: AllToAllAlgo,
+    ) -> Vec<Payload> {
         assert_eq!(chunks.len(), self.size(), "need one chunk per rank");
         match algo {
             AllToAllAlgo::Linear => self.a2a_linear(chunks),
@@ -243,7 +259,9 @@ impl Communicator {
             crate::util::bytes::put_u64(&mut row, c.len() as u64);
             row.extend_from_slice(c.as_bytes());
         }
-        let gathered = self.gather(0, Payload::new(row));
+        // Inline gather: this may run on a pool worker (offloaded
+        // root-funnel), so it must not re-enter the async engine.
+        let gathered = self.gather_inline(0, Payload::new(row));
 
         // Root: decode rows, transpose the chunk matrix, re-encode columns.
         let scattered = if self.rank() == 0 {
@@ -279,7 +297,11 @@ impl Communicator {
         } else {
             None
         };
-        let mine = self.scatter(0, scattered);
+        // Explicit-tag scatter: stays inline on this thread (which may be
+        // a pool worker running the offloaded root-funnel), no nested
+        // async delegation.
+        let tag = self.alloc_tags();
+        let mine = self.scatter_with_tag(0, scattered, tag);
 
         // Decode my column back into per-source payloads.
         let buf = mine.as_bytes();

@@ -1,47 +1,20 @@
-//! Broadcast and gather-family collectives (binomial tree / linear).
+//! Broadcast — the blocking wrapper over the futures engine.
+//!
+//! The binomial-tree schedule itself lives in
+//! [`crate::collectives::nonblocking`] (`broadcast_async`); keeping a
+//! second copy here invited silent divergence between the blocking and
+//! async trees, so the blocking call is just `.get()` on the posted one.
 
 use super::comm::Communicator;
 use crate::hpx::parcel::Payload;
 
 impl Communicator {
     /// Binomial-tree broadcast from `root`. Non-roots pass `None`.
+    ///
+    /// A thin blocking wrapper over
+    /// [`Communicator::broadcast_async`]`.get()`.
     pub fn broadcast(&self, root: usize, data: Option<Payload>) -> Payload {
-        assert!(root < self.size(), "root {root} out of range");
-        let tag = self.alloc_tags();
-        let n = self.size();
-        // Rotate ranks so the root sits at virtual rank 0.
-        let vrank = (self.rank() + n - root) % n;
-
-        let mut payload = if self.rank() == root {
-            Some(data.expect("root must provide data"))
-        } else {
-            assert!(data.is_none(), "non-root rank {} passed data", self.rank());
-            None
-        };
-
-        // Receive from parent: vrank with its highest set bit cleared.
-        // (Tree invariant: child c = parent + 2^k with 2^k > parent, so
-        // clearing c's top bit recovers the parent uniquely.)
-        if vrank != 0 {
-            let mask = 1 << (usize::BITS - 1 - vrank.leading_zeros());
-            let parent = ((vrank ^ mask) + root) % n;
-            payload = Some(self.recv(parent, tag));
-        }
-
-        // Forward to children: vrank + 2^k for 2^k > vrank's highest bit.
-        let payload = payload.expect("broadcast payload resolved");
-        let start = if vrank == 0 {
-            1
-        } else {
-            1 << (usize::BITS - vrank.leading_zeros()) // next power of two above vrank
-        };
-        let mut step = start;
-        while vrank + step < n {
-            let child = ((vrank + step) + root) % n;
-            self.send(child, tag, payload.clone());
-            step <<= 1;
-        }
-        payload
+        self.broadcast_async(root, data).get()
     }
 }
 

@@ -40,6 +40,7 @@
 
 use super::comm::Communicator;
 use crate::hpx::parcel::{actions, LocalityId, Parcel, Payload, Tag};
+use crate::parcelport::Parcelport;
 use crate::task::TaskFuture;
 use std::sync::Arc;
 
@@ -102,6 +103,40 @@ impl ChunkPolicy {
     /// Number of wire chunks a message of `len` bytes splits into.
     pub fn n_chunks(&self, len: usize) -> usize {
         len.div_ceil(self.chunk_bytes.max(1))
+    }
+}
+
+/// Blocking fabric-level receive of a headered chunked transfer at
+/// locality `at`, reassembled into one payload. Single-chunk transfers
+/// are passed through without copy (so on LCI the whole path stays
+/// zero-copy); multi-chunk transfers are concatenated at the application
+/// layer, which is reassembly, not a port protocol copy — it does not
+/// appear in `PortStats`. Factored free of [`Communicator`] so the
+/// nonblocking layer's posted-receive jobs (which run on pool workers,
+/// away from the `!Sync` communicator) can share the wire protocol.
+pub(crate) fn recv_chunked_via(
+    fabric: &Arc<dyn Parcelport>,
+    at: LocalityId,
+    src: LocalityId,
+    base_tag: Tag,
+    policy: ChunkPolicy,
+) -> Payload {
+    let header = fabric.recv(at, src, actions::COLLECTIVE, base_tag);
+    let mut off = 0;
+    let total = crate::util::bytes::get_u64(header.as_bytes(), &mut off) as usize;
+    match policy.n_chunks(total) {
+        0 => Payload::empty(),
+        1 => fabric.recv(at, src, actions::COLLECTIVE, base_tag + 1),
+        n => {
+            let mut buf = Vec::with_capacity(total);
+            for i in 0..n {
+                buf.extend_from_slice(
+                    fabric.recv(at, src, actions::COLLECTIVE, base_tag + 1 + i as Tag).as_bytes(),
+                );
+            }
+            debug_assert_eq!(buf.len(), total, "chunked transfer length mismatch");
+            Payload::new(buf)
+        }
     }
 }
 
@@ -178,25 +213,31 @@ impl Communicator {
     }
 
     /// Blocking receive of a chunked transfer, reassembled into one
-    /// payload. Single-chunk transfers are passed through without copy
-    /// (so on LCI the whole path stays zero-copy); multi-chunk transfers
-    /// are concatenated at the application layer, which is reassembly,
-    /// not a port protocol copy — it does not appear in `PortStats`.
+    /// payload (see [`recv_chunked_via`] for the copy semantics).
     pub(crate) fn recv_chunked(&self, src: LocalityId, base_tag: Tag) -> Payload {
-        let policy = self.chunk_policy();
-        let total = self.recv_chunk_header(src, base_tag);
-        match policy.n_chunks(total) {
-            0 => Payload::empty(),
-            1 => self.recv(src, base_tag + 1),
-            n => {
-                let mut buf = Vec::with_capacity(total);
-                for i in 0..n {
-                    buf.extend_from_slice(self.recv(src, base_tag + 1 + i as Tag).as_bytes());
-                }
-                debug_assert_eq!(buf.len(), total, "chunked transfer length mismatch");
-                Payload::new(buf)
-            }
-        }
+        recv_chunked_via(self.fabric(), self.rank(), src, base_tag, self.chunk_policy())
+    }
+
+    /// Queue wire chunk `index` of a known-size chunked transfer to
+    /// `dest` on the communicator's send pool, returning its completion
+    /// future — the single-chunk posting primitive the async FFT variants
+    /// use to stream a slab band the moment its first-dimension FFT
+    /// finishes. The chunk travels on the same `base_tag + 1 + index`
+    /// tag as in [`Communicator::send_chunked_sized`], so it pairs with
+    /// [`Communicator::try_recv_chunk`].
+    pub(crate) fn send_wire_chunk(
+        &self,
+        dest: LocalityId,
+        base_tag: Tag,
+        index: usize,
+        payload: Payload,
+    ) -> TaskFuture<()> {
+        let fabric = Arc::clone(self.fabric());
+        let src = self.rank();
+        let tag = base_tag + 1 + index as Tag;
+        self.chunk_pool().spawn(move || {
+            fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, payload));
+        })
     }
 
     /// Streaming receive of a chunked transfer: `on_chunk(byte_offset,

@@ -25,6 +25,13 @@ pub struct Communicator {
     next_tag: Cell<Tag>,
     chunk_policy: Cell<ChunkPolicy>,
     chunk_pool: RefCell<Option<Arc<ThreadPool>>>,
+    /// Send pool handed to shadow communicators (offloaded multi-round
+    /// collectives). Kept separate from `chunk_pool` — whose workers run
+    /// the offloaded jobs themselves — so a job's own chunk sends can
+    /// never be starved by the job occupying the only worker; memoized
+    /// here so repeated offloaded collectives don't spawn/join a pool
+    /// per invocation.
+    shadow_send_pool: RefCell<Option<Arc<ThreadPool>>>,
 }
 
 impl Communicator {
@@ -39,6 +46,7 @@ impl Communicator {
             next_tag: Cell::new(0),
             chunk_policy: Cell::new(ChunkPolicy::default()),
             chunk_pool: RefCell::new(None),
+            shadow_send_pool: RefCell::new(None),
         }
     }
 
@@ -114,6 +122,52 @@ impl Communicator {
         // per-peer tags without collision.
         self.next_tag.set(t + 4 * self.size as Tag + 8);
         t
+    }
+
+    /// Reserve a contiguous block of `span` tags from the lock-step
+    /// allocator and return its base. Offloaded collectives run a shadow
+    /// communicator inside such a block (see
+    /// [`Communicator::shadow_at`]); SPMD discipline keeps the
+    /// reservation identical across ranks.
+    pub(crate) fn reserve_tag_span(&self, span: Tag) -> Tag {
+        let t = self.next_tag.get();
+        self.next_tag.set(t + span);
+        t
+    }
+
+    /// The memoized pool shadow communicators send chunks from (created
+    /// on first use, re-created if the policy's `inflight` changed).
+    fn shadow_pool_handle(&self) -> Arc<ThreadPool> {
+        let want = self.chunk_policy.get().inflight.max(1);
+        let mut slot = self.shadow_send_pool.borrow_mut();
+        match slot.as_ref() {
+            Some(pool) if pool.size() == want => Arc::clone(pool),
+            _ => {
+                let pool = Arc::new(ThreadPool::new(want));
+                *slot = Some(Arc::clone(&pool));
+                pool
+            }
+        }
+    }
+
+    /// Build a shadow communicator sharing this one's fabric, rank, size,
+    /// and chunk policy, with its own tag counter starting at `base` (the
+    /// caller must have reserved the span via
+    /// [`Communicator::reserve_tag_span`]). Its send pool is this
+    /// communicator's memoized shadow pool, so repeated offloaded
+    /// collectives reuse one set of worker threads. The nonblocking layer
+    /// uses shadows to run blocking multi-round collectives off the SPMD
+    /// thread without breaking the lock-step tag discipline.
+    pub(crate) fn shadow_at(&self, base: Tag) -> Communicator {
+        Communicator {
+            fabric: Arc::clone(&self.fabric),
+            rank: self.rank,
+            size: self.size,
+            next_tag: Cell::new(base),
+            chunk_policy: Cell::new(self.chunk_policy.get()),
+            chunk_pool: RefCell::new(Some(self.shadow_pool_handle())),
+            shadow_send_pool: RefCell::new(None),
+        }
     }
 
     /// Send a collective-action parcel.
@@ -203,6 +257,22 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &comm.chunk_pool()), "pool is memoized");
         comm.set_chunk_policy(ChunkPolicy::new(4096, 3));
         assert_eq!(comm.chunk_pool().size(), 3, "pool follows inflight");
+    }
+
+    #[test]
+    fn shadow_tags_stay_in_lockstep() {
+        let f = fabric(2);
+        let c0 = Communicator::new(Arc::clone(&f), 0, 2);
+        let c1 = Communicator::new(Arc::clone(&f), 1, 2);
+        let b0 = c0.reserve_tag_span(1000);
+        let b1 = c1.reserve_tag_span(1000);
+        assert_eq!(b0, b1, "reservations must match across ranks");
+        let s0 = c0.shadow_at(b0);
+        let s1 = c1.shadow_at(b1);
+        assert_eq!(s0.alloc_tags(), s1.alloc_tags());
+        assert_eq!(s0.chunk_policy(), c0.chunk_policy(), "shadow inherits policy");
+        // Parent allocation resumes beyond the reserved span.
+        assert!(c0.alloc_tags() >= b0 + 1000);
     }
 
     #[test]

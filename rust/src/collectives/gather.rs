@@ -6,7 +6,19 @@ use crate::hpx::parcel::Payload;
 impl Communicator {
     /// Linear gather to `root`: every rank contributes one payload; the
     /// root receives them in rank order (`Some(vec)`), others get `None`.
+    ///
+    /// A thin blocking wrapper over
+    /// [`Communicator::gather_async`]`.get()`.
     pub fn gather(&self, root: usize, data: Payload) -> Option<Vec<Payload>> {
+        self.gather_async(root, data).get()
+    }
+
+    /// The inline (pool-free) gather the offloaded root-funnel all-to-all
+    /// runs on its shadow communicator: identical semantics to
+    /// [`Communicator::gather`], but sends and receives execute on the
+    /// calling thread — which may itself be a pool worker, so it must not
+    /// re-enter the async engine.
+    pub(crate) fn gather_inline(&self, root: usize, data: Payload) -> Option<Vec<Payload>> {
         assert!(root < self.size(), "root {root} out of range");
         let tag = self.alloc_tags();
         if self.rank() == root {

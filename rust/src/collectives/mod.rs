@@ -15,6 +15,16 @@
 //! the same collectives in the same order (tags are allocated from a
 //! per-rank counter that stays in lock-step under that discipline — the
 //! same contract MPI imposes on communicator operations).
+//!
+//! The collective engine is **futures-first** ([`nonblocking`]):
+//! `Communicator::{all_to_all_async, scatter_async, gather_async,
+//! broadcast_async}` post receives into the mailbox and drive sends from
+//! the communicator's chunk pool, returning a
+//! [`crate::task::CollectiveFuture`] within O(posting) time. Their
+//! blocking entry points (`all_to_all`, `scatter`, `gather`,
+//! `broadcast`) are thin `get()` wrappers over them; only the
+//! small-payload synchronization collectives (barrier, reduce,
+//! all-gather) remain direct.
 
 pub mod all_to_all;
 pub mod barrier;
@@ -22,6 +32,7 @@ pub mod broadcast;
 pub mod chunked;
 pub mod comm;
 pub mod gather;
+pub mod nonblocking;
 pub mod reduce;
 pub mod scatter;
 

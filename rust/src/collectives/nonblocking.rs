@@ -1,0 +1,477 @@
+//! Nonblocking, futures-first collectives — `hpx::collectives` semantics.
+//!
+//! Every `*_async` method returns a [`CollectiveFuture`] within
+//! *O(posting)* time: tags are allocated on the calling (SPMD) thread,
+//! receives are posted as jobs that block in the destination mailbox on
+//! the communicator's chunk pool, and sends drain through the same pool —
+//! the caller never waits for remote completion. The blocking collective
+//! entry points ([`Communicator::all_to_all`], [`Communicator::scatter`],
+//! …) are thin `get()` wrappers over these, so the futures engine is the
+//! *only* engine and blocking-vs-async cannot diverge.
+//!
+//! ## Posting discipline (deadlock freedom)
+//!
+//! Jobs are posted **sends before receives** within one collective, and
+//! collectives are posted in SPMD order. The pool starts jobs FIFO, so on
+//! every rank all send jobs of collective *k* begin (and, since fabric
+//! sends never block on the remote side, finish) before any receive job
+//! of collective *k* blocks a worker; a blocked receive therefore only
+//! ever waits on a peer's send job that the peer is guaranteed to reach.
+//! This is the same argument that makes MPI's nonblocking
+//! `Isend`/`Irecv`+`Waitall` pattern safe.
+//!
+//! ## Algorithm fidelity
+//!
+//! Single-phase schedules (linear all-to-all, linear/pipelined scatter,
+//! gather, broadcast) are posted natively with per-peer (and, for the
+//! chunked paths, per-wire-chunk) completion futures. Multi-round
+//! schedules (pairwise, Bruck, HPX-root, pairwise-chunked) keep their
+//! round pacing — the thing the benchmark measures — by running the
+//! blocking algorithm on a *shadow communicator* inside a single pool
+//! job: the shadow shares the fabric and a pre-reserved lock-step tag
+//! block, so posting still returns immediately and tags still match
+//! across ranks.
+
+use super::all_to_all::AllToAllAlgo;
+use super::chunked::{recv_chunked_via, CHUNK_TAG_SPAN};
+use super::comm::Communicator;
+use super::scatter::ScatterAlgo;
+use crate::hpx::parcel::{actions, Parcel, Payload};
+use crate::task::{when_all_async, CollectiveFuture, Promise, TaskFuture};
+use std::sync::Arc;
+
+impl Communicator {
+    /// Reserve a lock-step tag block and build the shadow communicator an
+    /// offloaded multi-round collective runs on. The span is generous
+    /// enough for any blocking algorithm's internal allocations
+    /// (including `size` chunk-tag blocks for the pairwise-chunked
+    /// exchange).
+    fn offload_shadow(&self) -> Communicator {
+        let span = (self.size() as u64 + 2) * CHUNK_TAG_SPAN;
+        let base = self.reserve_tag_span(span);
+        self.shadow_at(base)
+    }
+
+    /// Run a blocking collective body on a shadow communicator in a
+    /// single pool job; returns immediately.
+    fn offload<T: Send + 'static>(
+        &self,
+        body: impl FnOnce(&Communicator) -> T + Send + 'static,
+    ) -> CollectiveFuture<T> {
+        let shadow = self.offload_shadow();
+        let result = self.chunk_pool().spawn(move || body(&shadow));
+        CollectiveFuture::new(result, Vec::new())
+    }
+
+    /// Nonblocking all-to-all: returns a future for the received chunks
+    /// (one per source rank, in rank order) plus per-chunk send
+    /// completions. Same semantics as [`Communicator::all_to_all`], which
+    /// is now `all_to_all_async(..).get()`.
+    ///
+    /// # Panics
+    /// If the chunk count differs from the communicator size.
+    pub fn all_to_all_async(
+        &self,
+        chunks: Vec<Payload>,
+        algo: AllToAllAlgo,
+    ) -> CollectiveFuture<Vec<Payload>> {
+        assert_eq!(chunks.len(), self.size(), "need one chunk per rank");
+        match algo {
+            AllToAllAlgo::Linear => self.a2a_async_linear(chunks),
+            // Round-paced schedules keep their pacing on a shadow.
+            _ => self.offload(move |shadow| shadow.all_to_all_blocking(chunks, algo)),
+        }
+    }
+
+    /// Linear all-to-all, posted natively: N−1 send jobs, then N−1
+    /// receive jobs, result combined with `when_all_async`.
+    fn a2a_async_linear(&self, mut chunks: Vec<Payload>) -> CollectiveFuture<Vec<Payload>> {
+        let tag = self.alloc_tags();
+        let n = self.size();
+        let me = self.rank();
+        let pool = self.chunk_pool();
+        let own = std::mem::replace(&mut chunks[me], Payload::empty());
+
+        // Sends first (posting discipline, see module docs).
+        let mut sends = Vec::with_capacity(n.saturating_sub(1));
+        for (dst, chunk) in chunks.into_iter().enumerate() {
+            if dst == me {
+                continue;
+            }
+            let fabric = Arc::clone(self.fabric());
+            sends.push(pool.spawn(move || {
+                fabric.send(Parcel::new(me, dst, actions::COLLECTIVE, tag, chunk));
+            }));
+        }
+
+        // Receives: one job per source, combined in rank order.
+        let mut per_src = Vec::with_capacity(n);
+        for src in 0..n {
+            if src == me {
+                per_src.push(TaskFuture::ready(own.clone()));
+            } else {
+                let fabric = Arc::clone(self.fabric());
+                per_src.push(
+                    pool.spawn(move || fabric.recv(me, src, actions::COLLECTIVE, tag)),
+                );
+            }
+        }
+        CollectiveFuture::new(when_all_async(per_src), sends)
+    }
+
+    /// Nonblocking scatter rooted at `root`. The root's result (its own
+    /// chunk) is ready immediately with one completion future per posted
+    /// wire chunk; non-roots get a future fulfilled by a posted mailbox
+    /// receive. [`ScatterAlgo::Pipelined`] ships policy-sized wire chunks
+    /// through the send pool exactly like the blocking pipelined scatter.
+    ///
+    /// # Panics
+    /// Same contract as [`Communicator::scatter`].
+    pub fn scatter_async(
+        &self,
+        root: usize,
+        chunks: Option<Vec<Payload>>,
+        algo: ScatterAlgo,
+    ) -> CollectiveFuture<Payload> {
+        assert!(root < self.size(), "root {root} out of range");
+        match algo {
+            ScatterAlgo::Linear => {
+                let tag = self.alloc_tags();
+                if self.rank() == root {
+                    let chunks = chunks.expect("root must provide chunks");
+                    assert_eq!(chunks.len(), self.size(), "need exactly one chunk per rank");
+                    let pool = self.chunk_pool();
+                    let me = self.rank();
+                    let mut mine = None;
+                    let mut sends = Vec::with_capacity(self.size().saturating_sub(1));
+                    for (dst, chunk) in chunks.into_iter().enumerate() {
+                        if dst == me {
+                            mine = Some(chunk); // never hits the fabric
+                        } else {
+                            let fabric = Arc::clone(self.fabric());
+                            sends.push(pool.spawn(move || {
+                                fabric.send(Parcel::new(
+                                    me,
+                                    dst,
+                                    actions::COLLECTIVE,
+                                    tag,
+                                    chunk,
+                                ));
+                            }));
+                        }
+                    }
+                    CollectiveFuture::new(
+                        TaskFuture::ready(mine.expect("root chunk present")),
+                        sends,
+                    )
+                } else {
+                    assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
+                    let fabric = Arc::clone(self.fabric());
+                    let me = self.rank();
+                    let recv = self
+                        .chunk_pool()
+                        .spawn(move || fabric.recv(me, root, actions::COLLECTIVE, tag));
+                    CollectiveFuture::new(recv, Vec::new())
+                }
+            }
+            ScatterAlgo::Pipelined => {
+                let tag = self.alloc_chunk_tags(1);
+                if self.rank() == root {
+                    let chunks = chunks.expect("root must provide chunks");
+                    assert_eq!(chunks.len(), self.size(), "need exactly one chunk per rank");
+                    let mut mine = None;
+                    let mut sends = Vec::new();
+                    for (dst, chunk) in chunks.into_iter().enumerate() {
+                        if dst == self.rank() {
+                            mine = Some(chunk);
+                        } else {
+                            // Every destination shares the chunk-tag
+                            // block (per-mailbox matching).
+                            sends.append(&mut self.send_chunked(dst, tag, chunk));
+                        }
+                    }
+                    CollectiveFuture::new(
+                        TaskFuture::ready(mine.expect("root chunk present")),
+                        sends,
+                    )
+                } else {
+                    assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
+                    let fabric = Arc::clone(self.fabric());
+                    let me = self.rank();
+                    let policy = self.chunk_policy();
+                    let recv = self
+                        .chunk_pool()
+                        .spawn(move || recv_chunked_via(&fabric, me, root, tag, policy));
+                    CollectiveFuture::new(recv, Vec::new())
+                }
+            }
+        }
+    }
+
+    /// Nonblocking gather to `root`: non-roots post their send and get a
+    /// ready `None`; the root posts one receive per peer and gets a
+    /// future for the rank-ordered contributions.
+    ///
+    /// # Panics
+    /// If `root` is out of range.
+    pub fn gather_async(
+        &self,
+        root: usize,
+        data: Payload,
+    ) -> CollectiveFuture<Option<Vec<Payload>>> {
+        assert!(root < self.size(), "root {root} out of range");
+        let tag = self.alloc_tags();
+        let me = self.rank();
+        let pool = self.chunk_pool();
+        if me == root {
+            let mut per_src = Vec::with_capacity(self.size());
+            for src in 0..self.size() {
+                if src == me {
+                    per_src.push(TaskFuture::ready(data.clone()));
+                } else {
+                    let fabric = Arc::clone(self.fabric());
+                    per_src.push(
+                        pool.spawn(move || fabric.recv(me, src, actions::COLLECTIVE, tag)),
+                    );
+                }
+            }
+            let (p, out) = Promise::new();
+            when_all_async(per_src).then_inline(move |v: &Vec<Payload>| p.set(Some(v.clone())));
+            CollectiveFuture::new(out, Vec::new())
+        } else {
+            let fabric = Arc::clone(self.fabric());
+            let send = pool.spawn(move || {
+                fabric.send(Parcel::new(me, root, actions::COLLECTIVE, tag, data));
+            });
+            CollectiveFuture::new(TaskFuture::ready(None), vec![send])
+        }
+    }
+
+    /// Nonblocking binomial-tree broadcast from `root`: the root's result
+    /// is ready immediately (its own payload) with one completion future
+    /// per child send; every other rank posts a single job that receives
+    /// from its tree parent, forwards to its children, and fulfils the
+    /// result.
+    ///
+    /// # Panics
+    /// Same contract as [`Communicator::broadcast`].
+    pub fn broadcast_async(
+        &self,
+        root: usize,
+        data: Option<Payload>,
+    ) -> CollectiveFuture<Payload> {
+        assert!(root < self.size(), "root {root} out of range");
+        let tag = self.alloc_tags();
+        let n = self.size();
+        let me = self.rank();
+        let vrank = (me + n - root) % n;
+        let pool = self.chunk_pool();
+        if me == root {
+            let payload = data.expect("root must provide data");
+            let mut sends = Vec::new();
+            let mut step = 1;
+            while step < n {
+                let child = (step + root) % n;
+                let fabric = Arc::clone(self.fabric());
+                let chunk = payload.clone();
+                sends.push(pool.spawn(move || {
+                    fabric.send(Parcel::new(me, child, actions::COLLECTIVE, tag, chunk));
+                }));
+                step <<= 1;
+            }
+            CollectiveFuture::new(TaskFuture::ready(payload), sends)
+        } else {
+            assert!(data.is_none(), "non-root rank {me} passed data");
+            let fabric = Arc::clone(self.fabric());
+            let result = pool.spawn(move || {
+                // Parent: vrank with its highest set bit cleared.
+                let mask = 1 << (usize::BITS - 1 - vrank.leading_zeros());
+                let parent = ((vrank ^ mask) + root) % n;
+                let payload = fabric.recv(me, parent, actions::COLLECTIVE, tag);
+                // Forward to children before fulfilling, so the subtree
+                // makes progress even if no one consumes this future.
+                let mut step = 1 << (usize::BITS - vrank.leading_zeros());
+                while vrank + step < n {
+                    let child = ((vrank + step) + root) % n;
+                    fabric.send(Parcel::new(
+                        me,
+                        child,
+                        actions::COLLECTIVE,
+                        tag,
+                        payload.clone(),
+                    ));
+                    step <<= 1;
+                }
+                payload
+            });
+            CollectiveFuture::new(result, Vec::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ChunkPolicy;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn a2a_async_matches_blocking_semantics() {
+        let n = 4;
+        for algo in [AllToAllAlgo::Linear, AllToAllAlgo::PairwiseChunked] {
+            let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+            let results = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.set_chunk_policy(ChunkPolicy::new(16, 2));
+                let send: Vec<Payload> = (0..n)
+                    .map(|dst| Payload::from_f32(&vec![(ctx.rank * n + dst) as f32; 9]))
+                    .collect();
+                comm.all_to_all_async(send, algo).get()
+            });
+            for (i, recv) in results.iter().enumerate() {
+                for (j, p) in recv.iter().enumerate() {
+                    assert_eq!(p.to_f32(), vec![(j * n + i) as f32; 9], "{algo:?} {i}/{j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_async_root_returns_before_remote_completion() {
+        // O(posting): the root gets its CollectiveFuture back while the
+        // non-root has not even entered the collective yet.
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        let posted_us = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.warm_chunk_pool();
+            if ctx.rank == 0 {
+                let t0 = Instant::now();
+                let coll = comm.scatter_async(
+                    0,
+                    Some(vec![Payload::new(vec![1u8; 8]), Payload::new(vec![2u8; 1 << 20])]),
+                    ScatterAlgo::Linear,
+                );
+                let posted = t0.elapsed().as_secs_f64() * 1e6;
+                assert!(coll.is_ready(), "root's own chunk is ready at posting time");
+                let mine = coll.get();
+                assert_eq!(mine.as_bytes()[0], 1);
+                posted
+            } else {
+                // Receiver deliberately arrives late.
+                std::thread::sleep(Duration::from_millis(50));
+                let got =
+                    comm.scatter_async(0, None, ScatterAlgo::Linear).get();
+                assert_eq!(got.len(), 1 << 20);
+                0.0
+            }
+        });
+        // Posting must not have waited the ~50 ms for the receiver.
+        assert!(posted_us[0] < 40_000.0, "posting took {} µs", posted_us[0]);
+    }
+
+    #[test]
+    fn scatter_async_pipelined_carries_chunk_send_futures() {
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        let counts = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.set_chunk_policy(ChunkPolicy::new(64, 2));
+            let chunks = (ctx.rank == 0).then(|| {
+                vec![Payload::new(vec![0u8; 8]), Payload::new(vec![7u8; 256])]
+            });
+            let coll = comm.scatter_async(0, chunks, ScatterAlgo::Pipelined);
+            let n_sends = coll.chunk_sends().len();
+            let mine = coll.get();
+            if ctx.rank == 1 {
+                assert_eq!(mine.as_bytes(), &[7u8; 256][..]);
+            }
+            n_sends
+        });
+        // Root posted 256 B over 64 B wire chunks → 4 chunk futures.
+        assert_eq!(counts[0], 4);
+        assert_eq!(counts[1], 0);
+    }
+
+    #[test]
+    fn gather_async_collects_in_rank_order() {
+        let cluster = Cluster::new(3, PortKind::Mpi, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.gather_async(1, Payload::from_f32(&[ctx.rank as f32]))
+                .get()
+                .map(|v| v.iter().map(|p| p.to_f32()[0]).collect::<Vec<_>>())
+        });
+        assert_eq!(got[1], Some(vec![0.0, 1.0, 2.0]));
+        assert!(got[0].is_none() && got[2].is_none());
+    }
+
+    #[test]
+    fn broadcast_async_all_roots_all_ports() {
+        for kind in PortKind::ALL {
+            let n = 5;
+            let cluster = Cluster::new(n, kind, None).unwrap();
+            for root in 0..n {
+                let got = cluster.run(|ctx| {
+                    let comm = Communicator::from_ctx(ctx);
+                    let data =
+                        (ctx.rank == root).then(|| Payload::from_f32(&[root as f32, 1.5]));
+                    comm.broadcast_async(root, data).get().to_f32()
+                });
+                for g in got {
+                    assert_eq!(g, vec![root as f32, 1.5], "{kind} root {root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn offloaded_algorithms_still_transpose() {
+        let n = 3;
+        for algo in [AllToAllAlgo::Pairwise, AllToAllAlgo::Bruck, AllToAllAlgo::HpxRoot] {
+            let cluster = Cluster::new(n, PortKind::Tcp, None).unwrap();
+            let results = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                let send: Vec<Payload> = (0..n)
+                    .map(|dst| Payload::from_f32(&[(ctx.rank * n + dst) as f32]))
+                    .collect();
+                comm.all_to_all_async(send, algo).get()
+            });
+            for (i, recv) in results.iter().enumerate() {
+                for (j, p) in recv.iter().enumerate() {
+                    assert_eq!(p.to_f32(), vec![(j * n + i) as f32], "{algo:?} {i}/{j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_async_collectives_stay_in_lockstep() {
+        // Posting several async collectives before consuming any: tags
+        // stay lock-step and every future resolves.
+        let n = 3;
+        let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+        cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let bcast = comm.broadcast_async(
+                0,
+                (ctx.rank == 0).then(|| Payload::from_f32(&[42.0])),
+            );
+            let scat = comm.scatter_async(
+                1,
+                (ctx.rank == 1)
+                    .then(|| (0..n).map(|i| Payload::from_f32(&[i as f32])).collect()),
+                ScatterAlgo::Linear,
+            );
+            let gath = comm.gather_async(2, Payload::from_f32(&[ctx.rank as f32 * 2.0]));
+            assert_eq!(bcast.get().to_f32(), vec![42.0]);
+            assert_eq!(scat.get().to_f32(), vec![ctx.rank as f32]);
+            let gathered = gath.get();
+            if ctx.rank == 2 {
+                let v: Vec<f32> =
+                    gathered.unwrap().iter().map(|p| p.to_f32()[0]).collect();
+                assert_eq!(v, vec![0.0, 2.0, 4.0]);
+            }
+        });
+    }
+}

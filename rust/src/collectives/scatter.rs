@@ -53,12 +53,15 @@ impl Communicator {
     /// Linear scatter: the root provides one payload per rank (in rank
     /// order) and every rank receives its chunk. Non-roots pass `None`.
     ///
+    /// A thin blocking wrapper over
+    /// [`Communicator::scatter_async`]`.get()`; use the async form
+    /// directly to overlap the wait with compute.
+    ///
     /// # Panics
     /// If the root's chunk count differs from the communicator size, or a
     /// non-root passes data.
     pub fn scatter(&self, root: usize, chunks: Option<Vec<Payload>>) -> Payload {
-        let tag = self.alloc_tags();
-        self.scatter_with_tag(root, chunks, tag)
+        self.scatter_async(root, chunks, ScatterAlgo::Linear).get()
     }
 
     /// Scatter on an explicit pre-allocated tag (for overlapping many
@@ -94,20 +97,15 @@ impl Communicator {
         (0..k).map(|_| self.alloc_tags()).collect()
     }
 
-    /// Scatter under an explicit algorithm choice.
+    /// Scatter under an explicit algorithm choice — the blocking `get()`
+    /// wrapper over [`Communicator::scatter_async`].
     pub fn scatter_with_algo(
         &self,
         root: usize,
         chunks: Option<Vec<Payload>>,
         algo: ScatterAlgo,
     ) -> Payload {
-        match algo {
-            ScatterAlgo::Linear => self.scatter(root, chunks),
-            ScatterAlgo::Pipelined => {
-                let tag = self.alloc_chunk_tags(1);
-                self.scatter_pipelined_with_tag(root, chunks, tag)
-            }
-        }
+        self.scatter_async(root, chunks, algo).get()
     }
 
     /// Pipelined chunked scatter on a pre-reserved chunk-tag block (from

@@ -4,6 +4,7 @@
 
 use super::kv::Config;
 use crate::collectives::ChunkPolicy;
+use crate::dist_fft::driver::ExecutionMode;
 use anyhow::Result;
 
 /// Parameters shared by the figure harnesses.
@@ -26,6 +27,9 @@ pub struct BenchConfig {
     /// Wire-chunking policy used by the pipelined collectives
     /// (`PairwiseChunked` all-to-all, `Pipelined` scatter).
     pub pipeline: ChunkPolicy,
+    /// Execution mode of the measured runs: blocking collectives or the
+    /// future-chained async task graph (the `--exec` benchmark axis).
+    pub exec: ExecutionMode,
     /// Threads per locality in live runs.
     pub threads: usize,
     /// Output directory for CSV series.
@@ -52,6 +56,7 @@ impl Default for BenchConfig {
                 sizes
             },
             pipeline: ChunkPolicy::default(),
+            exec: ExecutionMode::Blocking,
             threads: 2,
             out_dir: "bench_out".into(),
         }
@@ -103,6 +108,9 @@ impl BenchConfig {
             anyhow::ensure!(v > 0, "bench.inflight must be positive");
             self.pipeline.inflight = v;
         }
+        if let Some(v) = cfg.get("bench.exec") {
+            self.exec = v.parse().map_err(anyhow::Error::msg)?;
+        }
         if let Some(v) = cfg.get("bench.out_dir") {
             self.out_dir = v.to_string();
         }
@@ -146,6 +154,20 @@ mod tests {
         assert_eq!(c.threads, 3);
         assert_eq!(c.pipeline, ChunkPolicy::new(4096, 2));
         assert_eq!(c.live_grid, 1 << 10); // untouched
+        assert_eq!(c.exec, ExecutionMode::Blocking); // untouched default
+    }
+
+    #[test]
+    fn exec_mode_from_file() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-benchexec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.conf");
+        std::fs::write(&path, "[bench]\nexec = async\n").unwrap();
+        let mut c = BenchConfig::default();
+        c.apply_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.exec, ExecutionMode::Async);
+        std::fs::write(&path, "[bench]\nexec = bogus\n").unwrap();
+        assert!(c.apply_file(path.to_str().unwrap()).is_err());
     }
 
     #[test]

@@ -27,6 +27,14 @@
 //!   chunked wire protocol the overlap is per *wire chunk*
 //!   ([`crate::collectives::ChunkPolicy`]), not per whole message.
 //!
+//! Each variant runs in either execution mode
+//! ([`driver::ExecutionMode`], the CLI's `--exec` axis): *blocking*
+//! (lock-step phases) or *async* (a future-chained task graph that
+//! streams wire chunks out of the first FFT, places arrivals while later
+//! chunks fly, and runs the second FFT as a continuation over the
+//! draining sends, reporting the hidden wall time as
+//! `StepTimings::overlap_us`).
+//!
 //! [`verify`] pins both against a serial reference on every port.
 
 pub mod driver;
@@ -37,5 +45,5 @@ pub mod verify;
 pub mod all_to_all_variant;
 pub mod scatter_variant;
 
-pub use driver::{ComputeEngine, DistFftConfig, DistFftReport, Variant};
+pub use driver::{ComputeEngine, DistFftConfig, DistFftReport, ExecutionMode, Variant};
 pub use partition::Slab;

@@ -118,6 +118,35 @@ impl Slab {
         out
     }
 
+    /// Extract rows `[r0, r1)` of the column-block chunk destined for
+    /// locality `j` from a working buffer (`local_rows × global_cols`,
+    /// row-major) as wire-format bytes — the banded variant of
+    /// [`Slab::extract_chunk_bytes`]. The async FFT driver uses this to
+    /// post a wire chunk the moment the rows feeding it finish their
+    /// first-dimension FFT, while later rows are still being transformed.
+    pub fn extract_chunk_rows_bytes(
+        data: &[crate::fft::complex::Complex32],
+        global_cols: usize,
+        parts: usize,
+        j: usize,
+        r0: usize,
+        r1: usize,
+    ) -> Vec<u8> {
+        let cw = Self::cols_per_chunk(global_cols, parts);
+        let c0 = j * cw;
+        assert!(r0 <= r1, "inverted row band [{r0}, {r1})");
+        assert!(r1 * global_cols <= data.len(), "band exceeds buffer");
+        let mut out =
+            Vec::with_capacity((r1 - r0) * cw * std::mem::size_of::<Complex32>());
+        for r in r0..r1 {
+            let base = r * global_cols + c0;
+            out.extend_from_slice(crate::fft::complex::as_byte_slice(
+                &data[base..base + cw],
+            ));
+        }
+        out
+    }
+
     /// Bytes a locality sends during the communication step:
     /// `(1 − 1/N)` of its slab, 8 bytes per complex element.
     pub fn bytes_sent_per_locality(&self) -> usize {
@@ -175,6 +204,27 @@ mod tests {
         let expect: Vec<f32> = vec![4.0, 5.0, 6.0, 7.0, 12.0, 13.0, 14.0, 15.0];
         assert_eq!(chunk1.iter().map(|c| c.re).collect::<Vec<_>>(), expect);
         assert_eq!(chunk1.len(), 2 * 4);
+    }
+
+    #[test]
+    fn banded_extraction_concatenates_to_whole_chunk() {
+        let slab = Slab::synthetic(12, 24, 4, 1);
+        let lr = slab.local_rows();
+        for j in 0..4 {
+            let whole = slab.extract_chunk_bytes(j);
+            for band in [1usize, 2, 3] {
+                let mut pieces = Vec::new();
+                let mut r = 0;
+                while r < lr {
+                    let hi = (r + band).min(lr);
+                    pieces.extend_from_slice(&Slab::extract_chunk_rows_bytes(
+                        &slab.data, 24, 4, j, r, hi,
+                    ));
+                    r = hi;
+                }
+                assert_eq!(pieces, whole, "chunk {j}, band {band}");
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use hpx_fft::bench_harness::{fig3, fig45, runner::measure};
 use hpx_fft::cli::Args;
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use hpx_fft::config::{BenchConfig, ClusterSpec};
-use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
+use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
 use hpx_fft::hpx::parcel::Payload;
 use hpx_fft::hpx::runtime::Cluster;
 use hpx_fft::parcelport::{NetModel, PortKind};
@@ -31,18 +31,22 @@ repro — HPX communication benchmark reproduction (Strack & Pflüger 2025)
 USAGE:
   repro info
   repro fft [--rows N] [--cols N] [--nodes N] [--port tcp|mpi|lci]
-            [--variant all-to-all|scatter]
+            [--variant all-to-all|scatter] [--exec blocking|async]
             [--algo linear|pairwise|pairwise-chunked|bruck|hpx-root]
             [--chunk-bytes N] [--inflight N]
             [--threads N] [--engine native|pjrt] [--artifacts DIR]
             [--net] [--no-verify]
             (grid lengths may be anything divisible by --nodes — the
-             planner is mixed-radix, e.g. --rows 12 --cols 96)
+             planner is mixed-radix, e.g. --rows 12 --cols 96;
+             --exec async runs the future-chained task graph and reports
+             the comm/compute overlap window)
   repro baseline [--rows N] [--cols N] [--nodes N] [--threads N] [--net]
   repro bench chunk-size      [--quick] [--reps N] [--out DIR]
                               [--chunk-bytes N] [--inflight N]
+                              [--exec blocking|async]
   repro bench strong-scaling  --variant all-to-all|scatter
                               [--quick] [--reps N] [--grid N] [--out DIR]
+                              [--exec blocking|async]
   repro bench collectives     [--nodes N] [--bytes N] [--reps N]
                               [--chunk-bytes N] [--inflight N]
   repro simulate [--grid N] [--port tcp|mpi|lci]
@@ -138,8 +142,8 @@ fn parse_chunk_policy(args: &Args) -> Result<ChunkPolicy> {
 
 fn cmd_fft(args: &Args) -> Result<()> {
     args.check_known(&[
-        "rows", "cols", "nodes", "port", "variant", "algo", "chunk-bytes", "inflight", "threads",
-        "engine", "artifacts", "net", "no-verify",
+        "rows", "cols", "nodes", "port", "variant", "exec", "algo", "chunk-bytes", "inflight",
+        "threads", "engine", "artifacts", "net", "no-verify",
     ])?;
     let config = DistFftConfig {
         rows: args.get_or("rows", 256usize)?,
@@ -149,6 +153,7 @@ fn cmd_fft(args: &Args) -> Result<()> {
         variant: args.get_or("variant", Variant::Scatter)?,
         algo: args.get_or("algo", AllToAllAlgo::HpxRoot)?,
         chunk: parse_chunk_policy(args)?,
+        exec: args.get_or("exec", ExecutionMode::Blocking)?,
         threads_per_locality: args.get_or("threads", 2usize)?,
         net: args.get_bool("net").then(NetModel::infiniband_hdr),
         engine: parse_engine(args)?,
@@ -165,6 +170,12 @@ fn cmd_fft(args: &Args) -> Result<()> {
         cp.transpose_us / 1e3,
         cp.fft2_us / 1e3
     );
+    if config.exec == ExecutionMode::Async {
+        println!(
+            "overlap: {} of compute ran while collective traffic was in flight",
+            hpx_fft::metrics::table::fmt_us(cp.overlap_us)
+        );
+    }
     println!(
         "traffic: {} msgs, {} bytes, {} copies ({} B copied), {} rendezvous",
         report.stats.msgs_sent,
@@ -218,6 +229,7 @@ fn bench_config(args: &Args) -> Result<BenchConfig> {
     cfg.reps = args.get_or("reps", cfg.reps)?;
     cfg.live_grid = args.get_or("grid", cfg.live_grid)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
+    cfg.exec = args.get_or("exec", cfg.exec)?;
     cfg.pipeline.chunk_bytes = args.get_or("chunk-bytes", cfg.pipeline.chunk_bytes)?;
     cfg.pipeline.inflight = args.get_or("inflight", cfg.pipeline.inflight)?;
     anyhow::ensure!(
@@ -232,10 +244,15 @@ fn bench_config(args: &Args) -> Result<BenchConfig> {
 
 fn cmd_bench_chunk(args: &Args) -> Result<()> {
     args.check_known(&[
-        "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight",
+        "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight", "exec",
     ])?;
     let cfg = bench_config(args)?;
-    println!("Fig. 3 sweep: {} reps/point, chunk sizes {:?}\n", cfg.reps, cfg.chunk_sizes);
+    println!(
+        "Fig. 3 sweep ({} exec): {} reps/point, chunk sizes {:?}\n",
+        cfg.exec.name(),
+        cfg.reps,
+        cfg.chunk_sizes
+    );
     let points = fig3::run(&cfg)?;
     print!("{}", fig3::report(&points, &cfg.out_dir)?);
     println!("CSV written to {}/fig3_chunk_size.csv", cfg.out_dir);
@@ -245,12 +262,14 @@ fn cmd_bench_chunk(args: &Args) -> Result<()> {
 fn cmd_bench_scaling(args: &Args) -> Result<()> {
     args.check_known(&[
         "variant", "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight",
+        "exec",
     ])?;
     let variant: Variant = args.get_or("variant", Variant::Scatter)?;
     let cfg = bench_config(args)?;
     println!(
-        "strong scaling ({}): live {}² on {:?} localities, sim {}² on {:?} nodes, {} reps\n",
+        "strong scaling ({}, {} exec): live {}² on {:?} localities, sim {}² on {:?} nodes, {} reps\n",
         variant.name(),
+        cfg.exec.name(),
         cfg.live_grid,
         cfg.live_nodes,
         cfg.sim_grid,
@@ -336,6 +355,9 @@ fn cmd_bench_collectives(args: &Args) -> Result<()> {
             let times = cluster.run(|ctx| {
                 let comm = Communicator::from_ctx(ctx);
                 comm.set_chunk_policy(policy);
+                // The futures engine drives every algorithm through the
+                // send pool; spawn it outside the timed region.
+                comm.warm_chunk_pool();
                 let chunks: Vec<Payload> =
                     (0..nodes).map(|_| Payload::new(vec![0u8; bytes])).collect();
                 let t0 = std::time::Instant::now();

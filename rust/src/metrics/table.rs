@@ -1,5 +1,18 @@
 //! Aligned console tables (paper-style result rows).
 
+/// Format a µs quantity for a table cell: exact zero renders as `-` (so
+/// the `overlap_us` column stays readable for modes that hide nothing),
+/// sub-millisecond values as `12.3 µs`, larger ones as `4.56 ms`.
+pub fn fmt_us(us: f64) -> String {
+    if us == 0.0 {
+        "-".into()
+    } else if us < 1000.0 {
+        format!("{us:.1} µs")
+    } else {
+        format!("{:.2} ms", us / 1e3)
+    }
+}
+
 /// Minimal column-aligned table builder.
 pub struct Table {
     headers: Vec<String>,
@@ -69,5 +82,12 @@ mod tests {
     #[should_panic(expected = "width mismatch")]
     fn mismatched_row_panics() {
         Table::new(&["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_us_units() {
+        assert_eq!(fmt_us(0.0), "-");
+        assert_eq!(fmt_us(12.34), "12.3 µs");
+        assert_eq!(fmt_us(4560.0), "4.56 ms");
     }
 }

@@ -134,11 +134,30 @@ impl NetModel {
     }
 }
 
-/// Busy-wait for `d` (µs-accurate).
+/// How long a wire-charging spin runs before ceding the core once.
+/// Single-digit-µs charges (the common case: per-message software
+/// overhead) never yield, so the hot path is a pure spin; multi-µs wire
+/// charges periodically let the scheduler run mailbox progress threads —
+/// on oversubscribed CI runners a long uninterrupted spin can otherwise
+/// starve the very receiver the modeled message is addressed to.
+const YIELD_EVERY: Duration = Duration::from_micros(5);
+
+/// Busy-wait for `d` (µs-accurate), yielding the core every few µs so
+/// concurrent progress threads keep running on oversubscribed hosts.
 pub fn spin_for(d: Duration) {
     let end = Instant::now() + d;
-    while Instant::now() < end {
-        std::hint::spin_loop();
+    let mut next_yield = Instant::now() + YIELD_EVERY;
+    loop {
+        let now = Instant::now();
+        if now >= end {
+            return;
+        }
+        if now >= next_yield {
+            std::thread::yield_now();
+            next_yield = Instant::now() + YIELD_EVERY;
+        } else {
+            std::hint::spin_loop();
+        }
     }
 }
 
@@ -217,6 +236,35 @@ mod tests {
         spin_for(Duration::from_micros(200));
         let took = start.elapsed().as_micros();
         assert!((200..5000).contains(&took), "spun for {took} µs");
+    }
+
+    #[test]
+    fn spin_for_charges_within_tolerance_despite_yielding() {
+        // The yield points must neither undershoot the modeled duration
+        // nor blow it up: the charged wall time of a wire-scale spin
+        // (500 µs crosses ~100 yield points) stays within a loose CI
+        // tolerance of the request.
+        let want = Duration::from_micros(500);
+        let start = Instant::now();
+        spin_for(want);
+        let took = start.elapsed();
+        assert!(took >= want, "undershot: {took:?} < {want:?}");
+        assert!(
+            took < Duration::from_millis(50),
+            "yielding inflated the charge unreasonably: {took:?}"
+        );
+    }
+
+    #[test]
+    fn short_spins_stay_precise() {
+        // Sub-yield-threshold charges (per-message software overheads)
+        // must not pick up scheduler latency.
+        for _ in 0..10 {
+            let start = Instant::now();
+            spin_for(Duration::from_micros(3));
+            let took = start.elapsed().as_micros();
+            assert!(took >= 3, "undershot: {took} µs");
+        }
     }
 
     #[test]

@@ -1,17 +1,46 @@
-//! One-shot promise/future cells with continuations.
+//! One-shot promise/future cells with continuations and combinators.
 //!
 //! Mirrors `hpx::promise` / `hpx::future`: a producer fulfils the
 //! [`Promise`] exactly once; any number of consumers block on
 //! [`TaskFuture::get`] (single value: first getter takes it, a cloned
-//! future shares the same cell) or attach a continuation with
-//! [`TaskFuture::then_inline`]. Continuations run inline on the fulfilling
-//! thread — the same semantics as HPX's `hpx::launch::sync` continuation
-//! policy, which is what the FFT scatter variant relies on to transpose a
-//! chunk "as soon as it is received".
+//! future shares the same cell), clone the value with
+//! [`TaskFuture::get_cloned`] (shared-future semantics), or attach
+//! continuations:
+//!
+//! - [`TaskFuture::then_inline`] — runs on the fulfilling thread (HPX's
+//!   `hpx::launch::sync` continuation policy);
+//! - [`TaskFuture::then`] — runs on the process-wide worker pool (HPX's
+//!   default `hpx::launch::async` policy), returning a future for the
+//!   continuation's own result so chains compose;
+//! - [`when_all_async`] / [`when_each`] — HPX's combinators:
+//!   `when_all_async` assembles the nonblocking collectives' results,
+//!   `when_each` streams send completions to the async FFT drivers;
+//! - [`CollectiveFuture`] — the handle a nonblocking collective returns:
+//!   a result future plus the per-wire-chunk send-completion futures, so
+//!   callers can consume the result while the tail of the transfer is
+//!   still draining (the comm/compute overlap of the async FFT variants).
+//!
+//! ## Reentrancy
+//!
+//! Continuations fire strictly *after* the value is published: the
+//! fulfilling thread stores the value, drops the state lock, and only
+//! then runs the queued continuations (each takes a short lock to clone
+//! the value). A continuation may therefore call `get`, `get_cloned`,
+//! `then_inline`, or `then` on a clone of the same future without
+//! deadlocking — the regression this guards against is a continuation
+//! self-deadlocking on the state mutex the old implementation held while
+//! running it. While the continuations drain, consuming getters on
+//! *other* threads are held back, so a racing `get` cannot starve a
+//! continuation of the value; only a *reentrant* `get` from inside a
+//! continuation (which proceeds immediately, by design) can consume the
+//! value ahead of later continuations, in which case those are skipped.
 
+use super::pool::ThreadPool;
 use std::sync::{Arc, Condvar, Mutex};
 
-type Continuation<T> = Box<dyn FnOnce(&T) + Send>;
+/// Queued continuation: self-contained, re-acquires the state lock only
+/// to clone the value (never held while user code runs).
+type Continuation = Box<dyn FnOnce() + Send>;
 
 struct Shared<T> {
     state: Mutex<State<T>>,
@@ -21,7 +50,24 @@ struct Shared<T> {
 struct State<T> {
     value: Option<T>,
     fulfilled: bool,
-    continuations: Vec<Continuation<T>>,
+    /// While `Promise::set` is running the queued continuations, the
+    /// fulfilling thread's id is recorded here. Getters on *other*
+    /// threads wait it out, so a consuming `get` can never race a
+    /// continuation out of its value; getters on the draining thread
+    /// itself (reentrant continuations) proceed immediately.
+    draining: Option<std::thread::ThreadId>,
+    continuations: Vec<Continuation>,
+}
+
+impl<T> State<T> {
+    /// Whether a getter on the current thread may consume/observe now.
+    fn readable(&self) -> bool {
+        self.fulfilled
+            && match self.draining {
+                None => true,
+                Some(id) => id == std::thread::current().id(),
+            }
+    }
 }
 
 /// Write side of the cell. Fulfil with [`Promise::set`].
@@ -44,14 +90,26 @@ impl<T: Send + 'static> Promise<T> {
     /// Create a linked promise/future pair.
     pub fn new() -> (Promise<T>, TaskFuture<T>) {
         let shared = Arc::new(Shared {
-            state: Mutex::new(State { value: None, fulfilled: false, continuations: Vec::new() }),
+            state: Mutex::new(State {
+                value: None,
+                fulfilled: false,
+                draining: None,
+                continuations: Vec::new(),
+            }),
             cv: Condvar::new(),
         });
         (Promise { shared: Arc::clone(&shared) }, TaskFuture { shared })
     }
 
-    /// Fulfil the promise. Runs queued continuations inline, then wakes
-    /// blocked getters.
+    /// Fulfil the promise: publish the value, run queued continuations,
+    /// wake getters.
+    ///
+    /// The value is stored and the state lock released *before* any
+    /// continuation runs, so continuations may touch the same future
+    /// (even blocking on a clone of it) without deadlocking. While the
+    /// continuations drain, consuming getters on *other* threads are held
+    /// back (see `State::draining`), so a racing `get` can never starve a
+    /// continuation of the value.
     ///
     /// # Panics
     /// If the promise was already fulfilled (double-set is a logic error).
@@ -61,16 +119,24 @@ impl<T: Send + 'static> Promise<T> {
             assert!(!st.fulfilled, "promise fulfilled twice");
             st.fulfilled = true;
             st.value = Some(value);
+            if !st.continuations.is_empty() {
+                st.draining = Some(std::thread::current().id());
+            }
             std::mem::take(&mut st.continuations)
         };
-        if !continuations.is_empty() {
-            let st = self.shared.state.lock().unwrap();
-            let value_ref = st.value.as_ref().expect("value just set");
-            for k in continuations {
-                k(value_ref);
+        // Clear the draining mark and wake blocked getters on every exit
+        // path, including a panicking continuation.
+        struct FinishOnDrop<'a, T>(&'a Shared<T>);
+        impl<T> Drop for FinishOnDrop<'_, T> {
+            fn drop(&mut self) {
+                self.0.state.lock().unwrap().draining = None;
+                self.0.cv.notify_all();
             }
         }
-        self.shared.cv.notify_all();
+        let _finish = FinishOnDrop(&self.shared);
+        for k in continuations {
+            k();
+        }
     }
 }
 
@@ -88,7 +154,7 @@ impl<T: Send + 'static> TaskFuture<T> {
     /// If the value was already taken by another `get` on a clone.
     pub fn get(self) -> T {
         let mut st = self.shared.state.lock().unwrap();
-        while !st.fulfilled {
+        while !st.readable() {
             st = self.shared.cv.wait(st).unwrap();
         }
         st.value.take().expect("future value already taken")
@@ -97,7 +163,7 @@ impl<T: Send + 'static> TaskFuture<T> {
     /// Block until fulfilled; do not consume the value.
     pub fn wait(&self) {
         let mut st = self.shared.state.lock().unwrap();
-        while !st.fulfilled {
+        while !st.readable() {
             st = self.shared.cv.wait(st).unwrap();
         }
     }
@@ -106,34 +172,223 @@ impl<T: Send + 'static> TaskFuture<T> {
     pub fn is_ready(&self) -> bool {
         self.shared.state.lock().unwrap().fulfilled
     }
-
-    /// Attach a continuation that runs with a reference to the value, on
-    /// the fulfilling thread (or inline right now if already fulfilled).
-    pub fn then_inline(&self, k: impl FnOnce(&T) + Send + 'static) {
-        let mut st = self.shared.state.lock().unwrap();
-        if st.fulfilled {
-            let value_ref = st.value.as_ref().expect("fulfilled future lost its value");
-            k(value_ref);
-        } else {
-            st.continuations.push(Box::new(k));
-        }
-    }
 }
 
 impl<T: Clone + Send + 'static> TaskFuture<T> {
     /// Block until fulfilled and clone the value (shared futures).
     pub fn get_cloned(&self) -> T {
         let mut st = self.shared.state.lock().unwrap();
-        while !st.fulfilled {
+        while !st.readable() {
             st = self.shared.cv.wait(st).unwrap();
         }
         st.value.as_ref().expect("fulfilled future lost its value").clone()
     }
+
+    /// Attach a continuation that runs with (a clone of) the value on the
+    /// fulfilling thread — or inline right now if already fulfilled. The
+    /// state lock is *not* held while `k` runs, so `k` may safely touch
+    /// clones of this future (reentrancy, see the module docs).
+    ///
+    /// A continuation registered *after* a consuming `get` already took
+    /// the value is skipped: the consumption happened-before the
+    /// registration, so there is no value left to observe.
+    pub fn then_inline(&self, k: impl FnOnce(&T) + Send + 'static) {
+        let ready = {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.fulfilled {
+                // Clone under this lock: a consuming `get` on another
+                // thread cannot race the value away between here and
+                // running `k` below.
+                st.value.clone()
+            } else {
+                let shared = Arc::clone(&self.shared);
+                st.continuations.push(Box::new(move || {
+                    // Queued path: cross-thread getters are held back
+                    // while continuations drain, so the value can only
+                    // be missing if a reentrant get on the draining
+                    // thread consumed it — then later continuations are
+                    // skipped (documented above).
+                    let value = shared.state.lock().unwrap().value.clone();
+                    if let Some(v) = value {
+                        k(&v);
+                    }
+                }));
+                return;
+            }
+        };
+        if let Some(v) = ready {
+            k(&v);
+        }
+    }
+
+    /// Chain a continuation launched on the process-wide worker pool
+    /// (HPX `future::then` with the default async launch policy): when
+    /// this future is fulfilled, `f` runs on a [`ThreadPool::global`]
+    /// worker with a clone of the value, and the returned future carries
+    /// `f`'s result. Because the continuation runs on the pool, it may
+    /// block (even on collectives) without stalling the fulfilling
+    /// thread.
+    pub fn then<U: Send + 'static>(
+        &self,
+        f: impl FnOnce(T) -> U + Send + 'static,
+    ) -> TaskFuture<U> {
+        let (p, out) = Promise::new();
+        self.then_inline(move |v: &T| {
+            let v = v.clone();
+            let _spawned = ThreadPool::global().spawn(move || p.set(f(v)));
+        });
+        out
+    }
 }
 
-/// Wait for all futures, collecting values in order (HPX `when_all`).
+/// Wait for all futures, collecting values in order (blocking
+/// `hpx::when_all(...).get()` shorthand).
 pub fn when_all<T: Send + 'static>(futures: Vec<TaskFuture<T>>) -> Vec<T> {
     futures.into_iter().map(|f| f.get()).collect()
+}
+
+type WhenAllState<T> = Mutex<(Vec<Option<T>>, usize, Option<Promise<Vec<T>>>)>;
+
+/// Combine futures into one future of all values, in input order, without
+/// blocking (HPX `when_all`): the result is fulfilled on whichever thread
+/// delivers the last input.
+pub fn when_all_async<T: Clone + Send + 'static>(
+    futures: Vec<TaskFuture<T>>,
+) -> TaskFuture<Vec<T>> {
+    let n = futures.len();
+    let (p, out) = Promise::new();
+    if n == 0 {
+        p.set(Vec::new());
+        return out;
+    }
+    let state: Arc<WhenAllState<T>> =
+        Arc::new(Mutex::new(((0..n).map(|_| None).collect(), 0, Some(p))));
+    for (i, f) in futures.iter().enumerate() {
+        let state = Arc::clone(&state);
+        f.then_inline(move |v: &T| {
+            let done = {
+                let mut st = state.lock().unwrap();
+                st.0[i] = Some(v.clone());
+                st.1 += 1;
+                if st.1 == n {
+                    let promise = st.2.take().expect("when_all fulfilled twice");
+                    let values =
+                        st.0.iter_mut().map(|s| s.take().expect("slot filled")).collect();
+                    Some((promise, values))
+                } else {
+                    None
+                }
+            };
+            if let Some((promise, values)) = done {
+                promise.set(values);
+            }
+        });
+    }
+    out
+}
+
+type WhenEachState<F> = Mutex<(F, usize, Option<Promise<()>>)>;
+
+/// Run `f(index, &value)` for every future *in completion order* — not
+/// input order — as each is fulfilled (HPX `when_each`). The returned
+/// future is fulfilled once every input has been seen. The callback runs
+/// on whichever thread fulfils each input; calls are serialized.
+pub fn when_each<T: Clone + Send + 'static>(
+    futures: Vec<TaskFuture<T>>,
+    f: impl FnMut(usize, &T) + Send + 'static,
+) -> TaskFuture<()> {
+    let n = futures.len();
+    let (p, out) = Promise::new();
+    if n == 0 {
+        p.set(());
+        return out;
+    }
+    let state: Arc<WhenEachState<_>> = Arc::new(Mutex::new((f, 0usize, Some(p))));
+    for (i, fut) in futures.iter().enumerate() {
+        let state = Arc::clone(&state);
+        fut.then_inline(move |v: &T| {
+            let done = {
+                let mut st = state.lock().unwrap();
+                (st.0)(i, v);
+                st.1 += 1;
+                if st.1 == n {
+                    st.2.take()
+                } else {
+                    None
+                }
+            };
+            if let Some(promise) = done {
+                promise.set(());
+            }
+        });
+    }
+    out
+}
+
+/// Handle returned by the nonblocking collectives
+/// ([`crate::collectives::Communicator::all_to_all_async`] and friends):
+/// a future for the collective's *result* (delivered data) plus one
+/// completion future per posted wire chunk on the send side.
+///
+/// The split is the overlap hook: the result becomes ready as soon as
+/// this rank's *receives* are in, typically while its own outgoing
+/// chunks are still draining through the send pool — a caller can start
+/// computing on the result (the async FFT variants run the whole
+/// second-dimension FFT there) and settle the sends afterwards.
+pub struct CollectiveFuture<T> {
+    result: TaskFuture<T>,
+    chunk_sends: Vec<TaskFuture<()>>,
+}
+
+impl<T: Send + 'static> CollectiveFuture<T> {
+    /// Bundle a result future with its per-chunk send completions.
+    pub fn new(result: TaskFuture<T>, chunk_sends: Vec<TaskFuture<()>>) -> Self {
+        Self { result, chunk_sends }
+    }
+
+    /// A collective that completed at posting time (no wire traffic).
+    pub fn ready(value: T) -> Self {
+        Self { result: TaskFuture::ready(value), chunk_sends: Vec::new() }
+    }
+
+    /// The result future (receive side).
+    pub fn result(&self) -> &TaskFuture<T> {
+        &self.result
+    }
+
+    /// Per-wire-chunk send-completion futures (send side).
+    pub fn chunk_sends(&self) -> &[TaskFuture<()>] {
+        &self.chunk_sends
+    }
+
+    /// Whether the result (receive side) is ready.
+    pub fn is_ready(&self) -> bool {
+        self.result.is_ready()
+    }
+
+    /// Block until result *and* every chunk send have completed.
+    pub fn wait(&self) {
+        self.result.wait();
+        for s in &self.chunk_sends {
+            s.wait();
+        }
+    }
+
+    /// Blocking completion: take the result, then settle every chunk
+    /// send. This is exactly what the blocking collective wrappers do.
+    pub fn get(self) -> T {
+        let value = self.result.get();
+        for s in self.chunk_sends {
+            s.get();
+        }
+        value
+    }
+
+    /// Split into the result future and the send completions — the
+    /// overlap-hungry path: consume the result now, settle sends later.
+    pub fn into_parts(self) -> (TaskFuture<T>, Vec<TaskFuture<()>>) {
+        (self.result, self.chunk_sends)
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +447,104 @@ mod tests {
     }
 
     #[test]
+    fn reentrant_continuation_does_not_deadlock() {
+        // The Promise::set regression: a continuation that blocks on (or
+        // re-registers with) a clone of the same future must not deadlock
+        // on the state mutex the old implementation held while running
+        // continuations.
+        let (p, f) = Promise::new();
+        let clone_for_get = f.clone();
+        let clone_for_then = f.clone();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        f.then_inline(move |&v: &u32| {
+            // Reentrant consuming get on a clone of the same future.
+            assert_eq!(clone_for_get.get_cloned(), v);
+            // Reentrant continuation registration (already fulfilled →
+            // runs inline, also under no lock).
+            let h2 = Arc::clone(&h);
+            clone_for_then.then_inline(move |&w: &u32| {
+                assert_eq!(w, 9);
+                h2.fetch_add(1, Ordering::SeqCst);
+            });
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        p.set(9);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        assert_eq!(f.get(), 9, "value still consumable after continuations");
+    }
+
+    #[test]
+    fn consuming_get_waits_for_continuations() {
+        // A getter racing Promise::set must not starve a slow
+        // continuation of the value: cross-thread gets are held back
+        // until the continuations have drained.
+        let (p, f) = Promise::new();
+        let observed = Arc::new(AtomicUsize::new(0));
+        let o = Arc::clone(&observed);
+        f.then_inline(move |&v: &usize| {
+            thread::sleep(Duration::from_millis(20));
+            o.store(v, Ordering::SeqCst);
+        });
+        let getter = {
+            let f2 = f.clone();
+            thread::spawn(move || f2.get())
+        };
+        thread::sleep(Duration::from_millis(5));
+        p.set(7);
+        assert_eq!(getter.join().unwrap(), 7);
+        assert_eq!(
+            observed.load(Ordering::SeqCst),
+            7,
+            "continuation must observe the value despite the racing get"
+        );
+    }
+
+    #[test]
+    fn reentrant_blocking_get_from_continuation() {
+        let (p, f) = Promise::new();
+        let clone = f.clone();
+        let (done_p, done_f) = Promise::new();
+        let mut done_p = Some(done_p);
+        f.then_inline(move |_: &u8| {
+            // Blocking get on a clone: value is already published.
+            let v = clone.get();
+            done_p.take().unwrap().set(v);
+        });
+        p.set(3);
+        assert_eq!(done_f.get(), 3);
+    }
+
+    #[test]
+    fn then_chains_on_pool() {
+        let (p, f) = Promise::new();
+        let doubled = f.then(|v: usize| v * 2);
+        let plus_one = doubled.then(|v| v + 1);
+        p.set(20);
+        assert_eq!(plus_one.get(), 41);
+        assert_eq!(f.get(), 20, "source value untouched by then chain");
+    }
+
+    #[test]
+    fn then_on_ready_future_still_runs() {
+        let f = TaskFuture::ready(5u64);
+        assert_eq!(f.then(|v| v + 1).get(), 6);
+    }
+
+    #[test]
+    fn then_continuation_may_block() {
+        // The pool-launched continuation blocks on another future —
+        // legal, because it does not run on the fulfilling thread.
+        let (pa, fa) = Promise::new();
+        let (pb, fb) = Promise::<u32>::new();
+        let sum = fa.then(move |a: u32| a + fb.get());
+        pa.set(1);
+        thread::sleep(Duration::from_millis(5));
+        pb.set(2);
+        assert_eq!(sum.get(), 3);
+    }
+
+    #[test]
     fn when_all_preserves_order() {
         let pairs: Vec<_> = (0..8).map(|_| Promise::<usize>::new()).collect();
         let (promises, futures): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
@@ -204,6 +557,78 @@ mod tests {
         let vals = when_all(futures);
         h.join().unwrap();
         assert_eq!(vals, (0..8).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn when_all_async_is_nonblocking_and_ordered() {
+        let pairs: Vec<_> = (0..6).map(|_| Promise::<usize>::new()).collect();
+        let (promises, futures): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
+        let all = when_all_async(futures);
+        assert!(!all.is_ready(), "must not block at combine time");
+        for (i, p) in promises.into_iter().enumerate().rev() {
+            p.set(i + 100);
+        }
+        assert_eq!(all.get(), (0..6).map(|i| i + 100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn when_all_async_empty() {
+        assert_eq!(when_all_async(Vec::<TaskFuture<u8>>::new()).get(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn when_each_fires_in_completion_order() {
+        let pairs: Vec<_> = (0..4).map(|_| Promise::<usize>::new()).collect();
+        let (promises, futures): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
+        let mut promises: Vec<Option<Promise<usize>>> =
+            promises.into_iter().map(Some).collect();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s = Arc::clone(&seen);
+        let done = when_each(futures, move |i, &v| s.lock().unwrap().push((i, v)));
+        // Fulfil 2, 0, 3, 1.
+        for idx in [2usize, 0, 3, 1] {
+            promises[idx].take().unwrap().set(idx * 11);
+        }
+        done.get();
+        assert_eq!(
+            *seen.lock().unwrap(),
+            vec![(2, 22), (0, 0), (3, 33), (1, 11)],
+            "completion order, not input order"
+        );
+    }
+
+    #[test]
+    fn collective_future_get_drains_sends() {
+        let (p, f) = Promise::new();
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sends: Vec<TaskFuture<()>> = (0..3)
+            .map(|_| {
+                let (sp, sf) = Promise::new();
+                let s = Arc::clone(&sent);
+                // Fulfil the "send" from another thread after a delay.
+                thread::spawn(move || {
+                    thread::sleep(Duration::from_millis(5));
+                    s.fetch_add(1, Ordering::SeqCst);
+                    sp.set(());
+                });
+                sf
+            })
+            .collect();
+        let coll = CollectiveFuture::new(f, sends);
+        assert_eq!(coll.chunk_sends().len(), 3);
+        p.set(77u32);
+        assert!(coll.is_ready());
+        assert_eq!(coll.get(), 77);
+        assert_eq!(sent.load(Ordering::SeqCst), 3, "get() settles every chunk send");
+    }
+
+    #[test]
+    fn collective_future_ready_and_parts() {
+        let coll = CollectiveFuture::ready(vec![1u8, 2]);
+        assert!(coll.is_ready());
+        let (result, sends) = coll.into_parts();
+        assert!(sends.is_empty());
+        assert_eq!(result.get(), vec![1, 2]);
     }
 
     #[test]

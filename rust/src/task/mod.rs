@@ -5,8 +5,11 @@
 //! (including the process-wide [`ThreadPool::global`] compute pool and
 //! the scoped borrowing batches of [`ThreadPool::run_scoped`]),
 //! [`Promise`]/[`TaskFuture`] one-shot synchronization cells with
-//! continuation support, combinators ([`when_all`]), and data-parallel
-//! helpers ([`parallel_for`], [`parallel_chunks_mut`]) that stand in for
+//! continuation support ([`TaskFuture::then_inline`] sync-launched,
+//! [`TaskFuture::then`] pool-launched), combinators ([`when_all`],
+//! [`when_all_async`], [`when_each`]), the [`CollectiveFuture`] handle
+//! the nonblocking collectives return, and data-parallel helpers
+//! ([`parallel_for`], [`parallel_chunks_mut`]) that stand in for
 //! `hpx::for_each(par, ...)` (and for `rayon`, which is unavailable in
 //! this offline build).
 
@@ -14,6 +17,6 @@ mod future;
 mod pool;
 mod scope;
 
-pub use future::{when_all, Promise, TaskFuture};
+pub use future::{when_all, when_all_async, when_each, CollectiveFuture, Promise, TaskFuture};
 pub use pool::{is_worker_thread, ThreadPool};
 pub use scope::{parallel_chunks_mut, parallel_for};

@@ -6,7 +6,7 @@ use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
 use hpx_fft::bench_harness::{fig3, fig45};
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator, ScatterAlgo};
 use hpx_fft::config::BenchConfig;
-use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Variant};
+use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
 use hpx_fft::hpx::parcel::Payload;
 use hpx_fft::hpx::runtime::Cluster;
 use hpx_fft::parcelport::{NetModel, PortKind, PortStatsSnapshot};
@@ -35,6 +35,7 @@ fn full_equivalence_matrix() {
                     variant,
                     algo,
                     chunk: ChunkPolicy::new(128, 2),
+                    exec: ExecutionMode::Blocking,
                     threads_per_locality: 1,
                     net: None,
                     engine: ComputeEngine::Native,
@@ -108,6 +109,164 @@ fn non_pow2_grid_dft_verified_all_ports_both_variants() {
             assert!(err < 1e-4, "{port} {variant:?}: rel err {err} vs DFT oracle");
         }
     }
+}
+
+/// The async-equivalence acceptance matrix: for every parcelport × the
+/// three pipelined communication shapes — *flat* (linear all-to-all),
+/// *pairwise-chunked* (chunked all-to-all), *pipelined* (the N-scatter
+/// variant with chunk-pipelined scatters) — the futures execution mode
+/// must produce **byte-identical** results to the blocking mode, and
+/// both must match the O(n²) f64-accumulating DFT oracle, on a
+/// non-power-of-two grid.
+#[test]
+fn async_equivalence_dft_verified_all_ports_all_shapes() {
+    use hpx_fft::dist_fft::driver::NativeRowFft;
+    use hpx_fft::dist_fft::partition::Slab;
+    use hpx_fft::dist_fft::transpose::transpose;
+    use hpx_fft::dist_fft::verify::rel_error;
+    use hpx_fft::fft::complex::Complex32;
+    use hpx_fft::fft::dft::dft;
+    use hpx_fft::dist_fft::{all_to_all_variant, scatter_variant};
+
+    let (rows, cols, parts) = (12usize, 24usize, 4usize);
+    let grid = Slab::whole(rows, cols).data;
+    let mut work: Vec<Complex32> = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        work.extend(dft(&grid[r * cols..(r + 1) * cols]));
+    }
+    let t = transpose(&work, rows, cols);
+    let mut oracle: Vec<Complex32> = Vec::with_capacity(rows * cols);
+    for c in 0..cols {
+        oracle.extend(dft(&t[c * rows..(c + 1) * rows]));
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    enum Shape {
+        Flat,            // linear all-to-all, one monolithic message per peer
+        PairwiseChunked, // chunked all-to-all wire protocol
+        Pipelined,       // N-scatter with chunk-pipelined scatters
+    }
+
+    for port in PortKind::ALL {
+        for shape in [Shape::Flat, Shape::PairwiseChunked, Shape::Pipelined] {
+            let run_mode = |async_mode: bool| -> Vec<Vec<Complex32>> {
+                let cluster = Cluster::new(parts, port, None).unwrap();
+                cluster.run(|ctx| {
+                    let comm = Communicator::from_ctx(ctx);
+                    // Small wire chunks: the chunked shapes really split.
+                    comm.set_chunk_policy(ChunkPolicy::new(96, 2));
+                    let slab = Slab::synthetic(rows, cols, parts, ctx.rank);
+                    match (shape, async_mode) {
+                        (Shape::Flat, false) => {
+                            all_to_all_variant::run(
+                                &comm, &slab, AllToAllAlgo::Linear, 1, &NativeRowFft,
+                            )
+                            .0
+                        }
+                        (Shape::Flat, true) => {
+                            all_to_all_variant::run_async(
+                                &comm, &slab, AllToAllAlgo::Linear, 1, &NativeRowFft,
+                            )
+                            .0
+                        }
+                        (Shape::PairwiseChunked, false) => {
+                            all_to_all_variant::run(
+                                &comm, &slab, AllToAllAlgo::PairwiseChunked, 1, &NativeRowFft,
+                            )
+                            .0
+                        }
+                        (Shape::PairwiseChunked, true) => {
+                            all_to_all_variant::run_async(
+                                &comm, &slab, AllToAllAlgo::PairwiseChunked, 1, &NativeRowFft,
+                            )
+                            .0
+                        }
+                        (Shape::Pipelined, false) => {
+                            scatter_variant::run(&comm, &slab, 1, &NativeRowFft).0
+                        }
+                        (Shape::Pipelined, true) => {
+                            scatter_variant::run_async(&comm, &slab, 1, &NativeRowFft).0
+                        }
+                    }
+                })
+            };
+            let blocking = run_mode(false);
+            let async_ = run_mode(true);
+            assert_eq!(blocking, async_, "{port} {shape:?}: async deviates from blocking");
+            let mut assembled = Vec::with_capacity(rows * cols);
+            for p in async_ {
+                assembled.extend(p);
+            }
+            let err = rel_error(&assembled, &oracle);
+            assert!(err < 1e-4, "{port} {shape:?}: rel err {err} vs DFT oracle");
+        }
+    }
+}
+
+/// Async collectives must return in O(posting) time and still settle.
+/// (The per-collective behaviour is unit-tested in
+/// `collectives::nonblocking`; this pins the driver-level contract: an
+/// async dist-FFT run over every port stays oracle-correct and reports a
+/// non-negative overlap.)
+#[test]
+fn async_exec_driver_all_ports() {
+    for port in PortKind::ALL {
+        let config = DistFftConfig {
+            rows: 12,
+            cols: 20,
+            localities: 4,
+            port,
+            exec: ExecutionMode::Async,
+            chunk: ChunkPolicy::new(128, 2),
+            threads_per_locality: 1,
+            ..Default::default()
+        };
+        let report = driver::run(&config).unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4, "{port}: {:?}", report.rel_error);
+        assert!(report.critical_path.overlap_us >= 0.0);
+    }
+}
+
+/// The async acceptance timing check: on the NetModel-charged LCI port
+/// the future-chained scatter variant must both *hide* wall time
+/// (`overlap_us > 0`) and beat the blocking schedule end to end. Like the
+/// chunked-beats-monolithic check, the spin-based wire model needs spare
+/// cores, so the wall-clock half is `#[ignore]`d in the default suite and
+/// exercised explicitly (CI bench-smoke job; also demonstrated by
+/// `cargo bench --bench hotpath`).
+#[test]
+#[ignore = "wall-clock comparison; needs an unloaded machine — run with --ignored"]
+fn async_beats_blocking_scatter_under_netmodel() {
+    let n = 4;
+    let net = NetModel { time_scale: 16.0, ..NetModel::infiniband_hdr() };
+    let cluster = Cluster::new(n, PortKind::Lci, Some(net)).unwrap();
+    let base = DistFftConfig {
+        rows: 256,
+        cols: 256,
+        localities: n,
+        port: PortKind::Lci,
+        chunk: ChunkPolicy::new(8 * 1024, 4),
+        threads_per_locality: 1,
+        net: Some(net),
+        verify: false,
+        ..Default::default()
+    };
+    let best = |exec: ExecutionMode| -> (f64, f64) {
+        let cfg = DistFftConfig { exec, ..base.clone() };
+        (0..3)
+            .map(|_| {
+                let r = driver::run_on(&cluster, &cfg).unwrap();
+                (r.critical_path.total_us, r.critical_path.overlap_us)
+            })
+            .fold((f64::INFINITY, 0.0), |acc, x| if x.0 < acc.0 { x } else { acc })
+    };
+    let (blocking_us, _) = best(ExecutionMode::Blocking);
+    let (async_us, overlap_us) = best(ExecutionMode::Async);
+    assert!(overlap_us > 0.0, "async run hid no wall time");
+    assert!(
+        async_us < blocking_us,
+        "async scatter variant must beat blocking: {async_us:.0} µs vs {blocking_us:.0} µs"
+    );
 }
 
 /// Plan-cache reuse across runs: a second lookup of the same
