@@ -321,6 +321,103 @@ fn main() {
         rows.push(("distfft scatter async overlap_us".to_string(), overlap_us));
     }
 
+    // 2-D-vs-3-D transpose volume (same total elements) on the
+    // NetModel-charged LCI port: the 2-D slab pipeline moves (1 − 1/N)
+    // of each locality's data in its single transpose; the 3-D pencil
+    // pipeline moves (1 − 1/Pc) + (1 − 1/Pr) across its two
+    // sub-communicator rounds — more volume, but in smaller,
+    // group-scoped messages. Per-round bytes and wall µs side by side.
+    {
+        use hpx_fft::dist_fft::driver::{
+            self as fft_driver, ComputeEngine, DistFftConfig, ExecutionMode, Variant,
+        };
+        use hpx_fft::dist_fft::grid3::{Grid3, ProcGrid};
+        use hpx_fft::dist_fft::pencil::{self, Pencil3Config};
+
+        let n = 4usize;
+        let (pr, pc) = (2usize, 2usize);
+        let net = NetModel { time_scale: 16.0, ..NetModel::infiniband_hdr() };
+        // Same total elements: 256² = 64·32·32 (smoke: 128² = 32·32·16).
+        let (rows2d, cols2d) = if smoke { (128usize, 128usize) } else { (256, 256) };
+        let grid3 =
+            if smoke { Grid3::new(32, 32, 16) } else { Grid3::new(64, 32, 32) };
+        assert_eq!(rows2d * cols2d, grid3.elems(), "equal-volume comparison");
+        let reps = if smoke { 2 } else { 4 };
+        const ELEM: usize = 8;
+        let local_bytes = rows2d * cols2d / n * ELEM;
+
+        // 2-D slab: one transpose of (1 − 1/N) of the local slab.
+        let cluster2d = Cluster::new(n, PortKind::Lci, Some(net)).expect("cluster");
+        let cfg2d = DistFftConfig {
+            rows: rows2d,
+            cols: cols2d,
+            localities: n,
+            port: PortKind::Lci,
+            variant: Variant::Scatter,
+            algo: AllToAllAlgo::HpxRoot,
+            chunk: ChunkPolicy::new(8 * 1024, 4),
+            exec: ExecutionMode::Blocking,
+            threads_per_locality: 1,
+            net: Some(net),
+            engine: ComputeEngine::Native,
+            verify: false,
+        };
+        let mut best2d = f64::INFINITY;
+        for _ in 0..reps {
+            let report = fft_driver::run_on(&cluster2d, &cfg2d).expect("2d fft");
+            best2d = best2d.min(report.critical_path.comm_us);
+        }
+        let bytes2d = local_bytes * (n - 1) / n;
+        println!(
+            "{:<44} {best2d:>10.1} µs/op   ({bytes2d} B/locality, 1 round)",
+            format!("transpose 2d slab {rows2d}x{cols2d} N={n}")
+        );
+        rows.push((format!("transpose 2d slab {rows2d}x{cols2d}"), best2d));
+
+        // 3-D pencil: two sub-communicator rounds.
+        let cluster3d = Cluster::new(n, PortKind::Lci, Some(net)).expect("cluster");
+        let cfg3d = Pencil3Config {
+            grid: grid3,
+            proc: ProcGrid::new(pr, pc),
+            port: PortKind::Lci,
+            chunk: ChunkPolicy::new(8 * 1024, 4),
+            exec: ExecutionMode::Blocking,
+            threads_per_locality: 1,
+            net: Some(net),
+            engine: ComputeEngine::Native,
+            verify: false,
+        };
+        let (mut best_t1, mut best_t2, mut best_sum) = (0.0, 0.0, f64::INFINITY);
+        for _ in 0..reps {
+            let report = pencil::run_on(&cluster3d, &cfg3d).expect("3d fft");
+            let cp = report.critical_path;
+            if cp.t1_comm_us + cp.t2_comm_us < best_sum {
+                best_sum = cp.t1_comm_us + cp.t2_comm_us;
+                best_t1 = cp.t1_comm_us;
+                best_t2 = cp.t2_comm_us;
+            }
+        }
+        let bytes_t1 = local_bytes * (pc - 1) / pc;
+        let bytes_t2 = local_bytes * (pr - 1) / pr;
+        println!(
+            "{:<44} {best_t1:>10.1} µs/op   ({bytes_t1} B/locality, row comm)",
+            format!("transpose 3d pencil {grid3} t1 {pr}x{pc}")
+        );
+        println!(
+            "{:<44} {best_t2:>10.1} µs/op   ({bytes_t2} B/locality, col comm)",
+            format!("transpose 3d pencil {grid3} t2 {pr}x{pc}")
+        );
+        println!(
+            "{:<44} {:>9.2}×   (3d moves {} B vs 2d {} B per locality)",
+            "  → 3d/2d transpose wall-time ratio",
+            best_sum / best2d.max(1e-9),
+            bytes_t1 + bytes_t2,
+            bytes2d
+        );
+        rows.push((format!("transpose 3d pencil t1 {pr}x{pc}"), best_t1));
+        rows.push((format!("transpose 3d pencil t2 {pr}x{pc}"), best_t2));
+    }
+
     // CSV artifact for the CI bench-smoke job.
     let out_dir = "bench_out";
     let csv_rows: Vec<Vec<String>> =

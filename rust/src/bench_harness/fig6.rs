@@ -1,0 +1,311 @@
+//! fig6 — process-grid-shape scaling of the 3-D pencil FFT.
+//!
+//! The 2-D slab benchmark (Figs. 4/5) has one communicator and one
+//! transpose; the pencil pipeline has two transpose rounds scoped to
+//! *split sub-communicators*, so the communication volume and its
+//! concurrency depend on the `Pr × Pc` shape: round 1 ships
+//! `(1 − 1/Pc)` and round 2 `(1 − 1/Pr)` of every locality's data. This
+//! harness sweeps the configured shapes (default `1×4`, `2×2`, `4×1`)
+//! over every parcelport in **both** execution modes, and emits:
+//!
+//! - paper-style rows (mean ± 95% CI over reps) with the per-round
+//!   transpose timings,
+//! - a `fig6_pencil.csv` series carrying every phase column plus
+//!   `overlap_us` for the async rows,
+//! - a simnet prediction per point at the paper-scale 512³ cube.
+
+use super::runner::measure;
+use crate::config::{BenchConfig, ClusterSpec};
+use crate::dist_fft::driver::{ComputeEngine, ExecutionMode};
+use crate::dist_fft::grid3::{PencilDims, ProcGrid};
+use crate::dist_fft::pencil::{self, Pencil3Config, PencilTimings};
+use crate::hpx::runtime::Cluster;
+use crate::metrics::{csv::write_csv, RunStats};
+use crate::parcelport::PortKind;
+use crate::simnet::fft_model::{predict_pencil3, Pencil3ModelParams};
+
+/// One measured point of the fig6 sweep.
+#[derive(Clone, Debug)]
+pub struct Fig6Point {
+    /// Parcelport measured.
+    pub port: PortKind,
+    /// Process-grid shape.
+    pub proc: ProcGrid,
+    /// Execution mode of the live runs.
+    pub exec: ExecutionMode,
+    /// Live hybrid end-to-end statistics.
+    pub live: RunStats,
+    /// Mean critical-path phase timings over the measured reps (the
+    /// per-round transpose columns of the CSV).
+    pub phases: PencilTimings,
+    /// Simnet prediction at the paper-scale 512³ cube, µs — `None` when
+    /// the shape does not divide the sim cube (the live sweep still
+    /// runs; the CSV column is left empty).
+    pub sim_us: Option<f64>,
+}
+
+/// Element-wise mean of critical-path timings over measured reps.
+fn mean_timings(ts: &[PencilTimings]) -> PencilTimings {
+    let k = ts.len().max(1) as f64;
+    let mut out = PencilTimings::default();
+    for t in ts {
+        out.fft_z_us += t.fft_z_us / k;
+        out.t1_comm_us += t.t1_comm_us / k;
+        out.t1_place_us += t.t1_place_us / k;
+        out.fft_y_us += t.fft_y_us / k;
+        out.t2_comm_us += t.t2_comm_us / k;
+        out.t2_place_us += t.t2_place_us / k;
+        out.fft_x_us += t.fft_x_us / k;
+        out.overlap_us += t.overlap_us / k;
+        out.total_us += t.total_us / k;
+    }
+    out
+}
+
+/// Run the full fig6 sweep: every port × configured shape × execution
+/// mode. Shapes that do not divide the configured grid are skipped with
+/// a notice (never an error — the sweep is exploratory).
+pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<Fig6Point>> {
+    let spec = ClusterSpec::buran();
+    let net = spec.net_model();
+    let mut points = Vec::new();
+    for &proc in &config.proc_shapes {
+        if let Err(e) = PencilDims::new(config.grid3, proc) {
+            println!("  (skipping {} on {proc}: {e})", config.grid3);
+            continue;
+        }
+        // The prediction depends only on (shape, port); shapes that
+        // divide the live grid but not the 512³ sim cube omit it.
+        let sim_params = Pencil3ModelParams {
+            proc,
+            compute: spec.compute_model(),
+            net,
+            ..Pencil3ModelParams::paper(proc)
+        };
+        let sim_divides = PencilDims::new(sim_params.grid, proc).is_ok();
+        for port in PortKind::ALL {
+            let cluster = Cluster::new(proc.n(), port, Some(net))?;
+            let sim_us = sim_divides.then(|| predict_pencil3(&sim_params, port).makespan_us);
+            for exec in ExecutionMode::ALL {
+                let cfg = Pencil3Config {
+                    grid: config.grid3,
+                    proc,
+                    port,
+                    chunk: config.pipeline,
+                    exec,
+                    threads_per_locality: config.threads,
+                    net: Some(net),
+                    engine: ComputeEngine::Native,
+                    verify: false,
+                };
+                let mut crit: Vec<PencilTimings> = Vec::new();
+                let stats = measure(config.warmup, config.reps, || {
+                    let report = pencil::run_on(&cluster, &cfg).expect("pencil3d run");
+                    crit.push(report.critical_path);
+                    report.critical_path.total_us
+                });
+                // Warmup reps are recorded by the closure like every
+                // call; drop them to match the RunStats discipline.
+                let phases = mean_timings(&crit[config.warmup.min(crit.len())..]);
+                points.push(Fig6Point { port, proc, exec, live: stats, phases, sim_us });
+            }
+        }
+    }
+    Ok(points)
+}
+
+/// Paper-style report: table + overlap bars + CSV.
+pub fn report(
+    points: &[Fig6Point],
+    config: &BenchConfig,
+    out_dir: &str,
+) -> anyhow::Result<String> {
+    use crate::metrics::table::{fmt_us, Table};
+    let mut table = Table::new(&[
+        "port", "shape", "exec", "live mean", "±95% CI", "t1 comm", "t2 comm", "overlap",
+        "sim (512³)",
+    ]);
+    let mut rows = Vec::new();
+    for p in points {
+        table.row(&[
+            p.port.name().into(),
+            p.proc.to_string(),
+            p.exec.name().into(),
+            format!("{:.2} ms", p.live.mean() / 1e3),
+            format!("{:.2}", p.live.ci95() / 1e3),
+            fmt_us(p.phases.t1_comm_us),
+            fmt_us(p.phases.t2_comm_us),
+            fmt_us(p.phases.overlap_us),
+            p.sim_us.map(|s| format!("{:.1} ms", s / 1e3)).unwrap_or("-".into()),
+        ]);
+        rows.push(vec![
+            p.port.name().to_string(),
+            p.proc.pr.to_string(),
+            p.proc.pc.to_string(),
+            p.exec.name().to_string(),
+            p.live.mean().to_string(),
+            p.live.ci95().to_string(),
+            p.phases.fft_z_us.to_string(),
+            p.phases.t1_comm_us.to_string(),
+            p.phases.t1_place_us.to_string(),
+            p.phases.fft_y_us.to_string(),
+            p.phases.t2_comm_us.to_string(),
+            p.phases.t2_place_us.to_string(),
+            p.phases.fft_x_us.to_string(),
+            p.phases.overlap_us.to_string(),
+            p.sim_us.map(|s| s.to_string()).unwrap_or_default(),
+        ]);
+    }
+    write_csv(
+        format!("{out_dir}/fig6_pencil.csv"),
+        &[
+            "port",
+            "pr",
+            "pc",
+            "exec",
+            "live_mean_us",
+            "live_ci95_us",
+            "fft_z_us",
+            "t1_comm_us",
+            "t1_place_us",
+            "fft_y_us",
+            "t2_comm_us",
+            "t2_place_us",
+            "fft_x_us",
+            "overlap_us",
+            "sim_us",
+        ],
+        &rows,
+    )?;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "fig6 — 3-D pencil FFT, {} grid, shapes × ports × exec\n\n",
+        config.grid3
+    ));
+    out.push_str(&table.render());
+
+    // Async rows: how much wall time each (port, shape) hid.
+    let bars: Vec<(String, f64, f64)> = points
+        .iter()
+        .filter(|p| p.exec == ExecutionMode::Async)
+        .map(|p| {
+            (format!("{}/{}", p.port.name(), p.proc), p.phases.overlap_us, p.live.mean())
+        })
+        .collect();
+    if !bars.is_empty() {
+        out.push('\n');
+        out.push_str(&super::plot::overlap_bars(
+            "wall time hidden behind compute (async pencil runs)",
+            &bars,
+        ));
+    }
+
+    // Headline: best shape per port by blocking live mean.
+    for port in PortKind::ALL {
+        let mut blocking: Vec<&Fig6Point> = points
+            .iter()
+            .filter(|p| p.port == port && p.exec == ExecutionMode::Blocking)
+            .collect();
+        blocking.sort_by(|a, b| a.live.mean().partial_cmp(&b.live.mean()).unwrap());
+        if let (Some(best), Some(worst)) = (blocking.first(), blocking.last()) {
+            out.push_str(&format!(
+                "\nshape effect @ {port}: best {} ({:.2} ms) vs worst {} ({:.2} ms)",
+                best.proc,
+                best.live.mean() / 1e3,
+                worst.proc,
+                worst.live.mean() / 1e3,
+            ));
+        }
+    }
+    out.push('\n');
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist_fft::grid3::Grid3;
+
+    fn tiny() -> BenchConfig {
+        BenchConfig {
+            reps: 2,
+            warmup: 0,
+            threads: 1,
+            grid3: Grid3::new(8, 8, 8),
+            proc_shapes: vec![ProcGrid::new(1, 2), ProcGrid::new(2, 1)],
+            ..BenchConfig::quick()
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_points() {
+        let points = run(&tiny()).unwrap();
+        // 3 ports × 2 shapes × 2 exec modes.
+        assert_eq!(points.len(), 3 * 2 * 2);
+        for p in &points {
+            assert!(p.live.mean() > 0.0);
+            assert!(p.sim_us.unwrap() > 0.0, "512-dividing shapes carry a prediction");
+            assert!(p.phases.total_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn async_points_carry_overlap_blocking_do_not() {
+        let points = run(&tiny()).unwrap();
+        for p in &points {
+            if p.exec == ExecutionMode::Blocking {
+                assert_eq!(p.phases.overlap_us, 0.0, "{}/{}", p.port, p.proc);
+            }
+        }
+        assert!(
+            points.iter().any(|p| p.exec == ExecutionMode::Async),
+            "sweep must cover async rows"
+        );
+    }
+
+    #[test]
+    fn shapes_not_dividing_sim_cube_run_live_without_prediction() {
+        // 3×1 divides the 9³ live grid but not the 512³ sim cube: the
+        // live sweep must still run (no panic), just with an empty
+        // prediction column.
+        let cfg = BenchConfig {
+            grid3: Grid3::new(9, 9, 9),
+            proc_shapes: vec![ProcGrid::new(3, 1)],
+            ..tiny()
+        };
+        let points = run(&cfg).unwrap();
+        assert_eq!(points.len(), 3 * 2);
+        assert!(points.iter().all(|p| p.sim_us.is_none() && p.live.mean() > 0.0));
+    }
+
+    #[test]
+    fn indivisible_shapes_are_skipped_not_fatal() {
+        let cfg = BenchConfig {
+            proc_shapes: vec![ProcGrid::new(3, 1), ProcGrid::new(2, 2)],
+            ..tiny()
+        };
+        // 8 % 3 != 0 → the 3×1 shape is skipped; 2×2 still measured.
+        let points = run(&cfg).unwrap();
+        assert_eq!(points.len(), 3 * 2);
+        assert!(points.iter().all(|p| p.proc == ProcGrid::new(2, 2)));
+    }
+
+    #[test]
+    fn report_renders_and_writes_csv() {
+        let cfg = tiny();
+        let points = run(&cfg).unwrap();
+        let dir = std::env::temp_dir().join(format!("hpxfft-fig6-{}", std::process::id()));
+        let text = report(&points, &cfg, dir.to_str().unwrap()).unwrap();
+        assert!(text.contains("fig6"));
+        assert!(text.contains("shape effect"));
+        assert!(text.contains("hidden"), "async overlap bars present");
+        let csv = std::fs::read_to_string(dir.join("fig6_pencil.csv")).unwrap();
+        assert!(csv.starts_with("port,pr,pc,exec,live_mean_us"), "{csv}");
+        for col in ["t1_comm_us", "t2_comm_us", "t1_place_us", "overlap_us", "sim_us"] {
+            assert!(csv.contains(col), "missing column {col}");
+        }
+        // Async rows exist in the CSV.
+        assert!(csv.lines().any(|l| l.contains(",async,")), "{csv}");
+    }
+}

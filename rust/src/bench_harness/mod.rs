@@ -10,6 +10,9 @@
 //!   and 5): live hybrid runs at laptop scale, simnet predictions at the
 //!   paper's 2^14×2^14 on up to 16 nodes, both against the FFTW3-like
 //!   baseline.
+//! - [`fig6`] — the 3-D pencil FFT's process-grid-shape sweep
+//!   (`Pr × Pc` × port × exec mode) with per-round transpose timings
+//!   and the paper-scale simnet prediction.
 //!
 //! Every driver reports paper-style rows (mean ± 95% CI over N reps),
 //! writes CSV series, and renders an ASCII log plot so the figure shape
@@ -17,6 +20,7 @@
 
 pub mod fig3;
 pub mod fig45;
+pub mod fig6;
 pub mod plot;
 pub mod runner;
 

@@ -7,7 +7,17 @@ impl Communicator {
     /// Dissemination barrier: ⌈log2 n⌉ rounds; in round `k` each rank
     /// signals `rank + 2^k` and waits for `rank - 2^k` (mod n). No rank
     /// exits before every rank has entered.
+    ///
+    /// A thin blocking wrapper over
+    /// [`Communicator::barrier_async`]`.get()`.
     pub fn barrier(&self) {
+        self.barrier_async().get()
+    }
+
+    /// The round-paced blocking dissemination schedule. The nonblocking
+    /// layer runs this on a shadow communicator inside a single pool job
+    /// (see [`Communicator::barrier_async`]).
+    pub(crate) fn barrier_blocking(&self) {
         let n = self.size();
         let tag = self.alloc_tags();
         if n <= 1 {

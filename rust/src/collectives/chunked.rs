@@ -44,10 +44,7 @@ use crate::parcelport::Parcelport;
 use crate::task::TaskFuture;
 use std::sync::Arc;
 
-/// Tags reserved per chunked transfer: one header plus up to
-/// `CHUNK_TAG_SPAN - 1` chunks. Tag space is 64-bit, so reserving 2³²
-/// tags per transfer is free and removes any realistic collision risk.
-pub const CHUNK_TAG_SPAN: Tag = 1 << 32;
+pub use super::tags::CHUNK_TAG_SPAN;
 
 /// How a chunked collective splits and pipelines per-rank messages.
 ///
@@ -177,7 +174,8 @@ impl Communicator {
         let total = payload.len();
         let n_chunks = policy.n_chunks(total);
         let pool = self.chunk_pool();
-        let src = self.rank();
+        let src = self.my_global();
+        let dest = self.global_rank(dest);
         let mut pending = Vec::with_capacity(n_chunks);
         for i in 0..n_chunks {
             let off = i * policy.chunk_bytes;
@@ -213,9 +211,16 @@ impl Communicator {
     }
 
     /// Blocking receive of a chunked transfer, reassembled into one
-    /// payload (see [`recv_chunked_via`] for the copy semantics).
+    /// payload (see [`recv_chunked_via`] for the copy semantics). `src`
+    /// is a communicator rank, translated to its locality here.
     pub(crate) fn recv_chunked(&self, src: LocalityId, base_tag: Tag) -> Payload {
-        recv_chunked_via(self.fabric(), self.rank(), src, base_tag, self.chunk_policy())
+        recv_chunked_via(
+            self.fabric(),
+            self.my_global(),
+            self.global_rank(src),
+            base_tag,
+            self.chunk_policy(),
+        )
     }
 
     /// Queue wire chunk `index` of a known-size chunked transfer to
@@ -233,7 +238,8 @@ impl Communicator {
         payload: Payload,
     ) -> TaskFuture<()> {
         let fabric = Arc::clone(self.fabric());
-        let src = self.rank();
+        let src = self.my_global();
+        let dest = self.global_rank(dest);
         let tag = base_tag + 1 + index as Tag;
         self.chunk_pool().spawn(move || {
             fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, payload));

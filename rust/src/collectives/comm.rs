@@ -1,6 +1,7 @@
 //! The communicator: rank + size + fabric handle + tag discipline.
 
-use super::chunked::{ChunkPolicy, CHUNK_TAG_SPAN};
+use super::chunked::ChunkPolicy;
+use super::tags::CHUNK_TAG_SPAN;
 use crate::hpx::parcel::{actions, LocalityId, Parcel, Payload, Tag};
 use crate::hpx::runtime::LocalityCtx;
 use crate::parcelport::Parcelport;
@@ -15,6 +16,13 @@ use std::sync::Arc;
 /// collectives come from a local counter that stays in lock-step across
 /// ranks under the SPMD calling discipline.
 ///
+/// A communicator need not span the whole fabric:
+/// [`Communicator::split`] builds sub-communicators whose ranks
+/// `0..size` map onto an arbitrary subset of localities. The `members`
+/// table carries that mapping (identity for whole-fabric communicators);
+/// every fabric-level send and matched receive translates communicator
+/// ranks through it.
+///
 /// The communicator also carries the [`ChunkPolicy`] the chunked
 /// collectives run under, plus a lazily created send pool of
 /// `policy.inflight` workers that pipelines their wire chunks.
@@ -22,7 +30,13 @@ pub struct Communicator {
     fabric: Arc<dyn Parcelport>,
     rank: LocalityId,
     size: usize,
+    /// `members[r]` = global locality id of communicator rank `r`.
+    members: Arc<Vec<LocalityId>>,
     next_tag: Cell<Tag>,
+    /// Exclusive upper bound of this communicator's tag space. Split
+    /// sub-communicators are bounded to the span their parent reserved;
+    /// whole-fabric communicators are unbounded.
+    tag_limit: Option<Tag>,
     chunk_policy: Cell<ChunkPolicy>,
     chunk_pool: RefCell<Option<Arc<ThreadPool>>>,
     /// Send pool handed to shadow communicators (offloaded multi-round
@@ -35,16 +49,49 @@ pub struct Communicator {
 }
 
 impl Communicator {
-    /// Handle for `rank` of a `size`-rank group over `fabric`.
+    /// Handle for `rank` of a `size`-rank group over `fabric`, with the
+    /// identity rank ↔ locality mapping.
     pub fn new(fabric: Arc<dyn Parcelport>, rank: LocalityId, size: usize) -> Self {
         assert!(rank < size, "rank {rank} out of range for size {size}");
         assert!(size <= fabric.n_localities(), "communicator larger than fabric");
+        let members = Arc::new((0..size).collect());
         Self {
             fabric,
             rank,
             size,
+            members,
             next_tag: Cell::new(0),
+            tag_limit: None,
             chunk_policy: Cell::new(ChunkPolicy::default()),
+            chunk_pool: RefCell::new(None),
+            shadow_send_pool: RefCell::new(None),
+        }
+    }
+
+    /// Handle for `rank` of the group whose rank → locality mapping is
+    /// `members`, with a tag counter bounded to `[tag_base, tag_limit)`.
+    /// The construction path of [`Communicator::split`].
+    pub(crate) fn from_members(
+        fabric: Arc<dyn Parcelport>,
+        rank: usize,
+        members: Arc<Vec<LocalityId>>,
+        tag_base: Tag,
+        tag_limit: Tag,
+        policy: ChunkPolicy,
+    ) -> Self {
+        assert!(rank < members.len(), "rank {rank} out of range for {} members", members.len());
+        for &m in members.iter() {
+            assert!(m < fabric.n_localities(), "member locality {m} outside fabric");
+        }
+        let size = members.len();
+        Self {
+            fabric,
+            rank,
+            size,
+            members,
+            next_tag: Cell::new(tag_base),
+            tag_limit: Some(tag_limit),
+            chunk_policy: Cell::new(policy),
             chunk_pool: RefCell::new(None),
             shadow_send_pool: RefCell::new(None),
         }
@@ -69,6 +116,27 @@ impl Communicator {
     /// The underlying parcelport fabric.
     pub fn fabric(&self) -> &Arc<dyn Parcelport> {
         &self.fabric
+    }
+
+    /// Global locality id of communicator rank `r`.
+    pub fn global_rank(&self, r: usize) -> LocalityId {
+        self.members[r]
+    }
+
+    /// This rank's global locality id.
+    pub(crate) fn my_global(&self) -> LocalityId {
+        self.members[self.rank]
+    }
+
+    /// The rank → locality mapping (shared so posted jobs can translate
+    /// off the `!Sync` communicator).
+    pub(crate) fn members_arc(&self) -> Arc<Vec<LocalityId>> {
+        Arc::clone(&self.members)
+    }
+
+    /// The rank → global locality mapping, in rank order.
+    pub fn members(&self) -> &[LocalityId] {
+        &self.members
     }
 
     /// The chunking policy the chunked collectives run under.
@@ -105,34 +173,68 @@ impl Communicator {
         let _ = self.chunk_pool();
     }
 
+    /// Advance the lock-step counter by `span`, returning the block base
+    /// and enforcing the communicator's tag-space bound (split
+    /// sub-communicators must stay inside the span their parent
+    /// reserved — see [`crate::collectives::tags`]).
+    fn bump_tags(&self, span: Tag) -> Tag {
+        let t = self.next_tag.get();
+        let next = t.checked_add(span).expect("tag counter overflow");
+        if let Some(limit) = self.tag_limit {
+            assert!(
+                next <= limit,
+                "communicator tag space exhausted: {next} > {limit} (span {span})"
+            );
+        }
+        self.next_tag.set(next);
+        t
+    }
+
     /// Reserve `groups` blocks of [`CHUNK_TAG_SPAN`] tags for chunked
     /// transfers (same lock-step counter as [`Communicator::alloc_tags`]).
     pub(crate) fn alloc_chunk_tags(&self, groups: usize) -> Tag {
-        let t = self.next_tag.get();
-        self.next_tag.set(t + groups as Tag * CHUNK_TAG_SPAN);
-        t
+        self.bump_tags(groups as Tag * CHUNK_TAG_SPAN)
     }
 
     /// Allocate the base tag for one collective invocation. Each
     /// collective may use a contiguous block of `self.size` tags starting
     /// here (rounds, per-peer slots).
     pub(crate) fn alloc_tags(&self) -> Tag {
-        let t = self.next_tag.get();
         // Reserve a generous block so algorithms can derive per-round /
         // per-peer tags without collision.
-        self.next_tag.set(t + 4 * self.size as Tag + 8);
-        t
+        self.bump_tags(4 * self.size as Tag + 8)
     }
 
     /// Reserve a contiguous block of `span` tags from the lock-step
     /// allocator and return its base. Offloaded collectives run a shadow
     /// communicator inside such a block (see
-    /// [`Communicator::shadow_at`]); SPMD discipline keeps the
-    /// reservation identical across ranks.
+    /// [`Communicator::shadow_at`]), and [`Communicator::split`] carves
+    /// each sub-communicator's whole tag space this way; SPMD discipline
+    /// keeps the reservation identical across ranks.
     pub(crate) fn reserve_tag_span(&self, span: Tag) -> Tag {
-        let t = self.next_tag.get();
-        self.next_tag.set(t + span);
-        t
+        self.bump_tags(span)
+    }
+
+    /// Tag span a [`Communicator::split`] sub-communicator carves out of
+    /// this communicator: the full [`super::tags::SPLIT_TAG_SPAN`] on an
+    /// unbounded (whole-fabric) communicator; on a bounded one (itself a
+    /// split), half the remaining space rounded down to whole chunk
+    /// blocks — so nested splits always leave the parent room to keep
+    /// allocating. Lock-step: the counter state this derives from is
+    /// identical across ranks under the SPMD discipline.
+    pub(crate) fn split_span(&self) -> Tag {
+        match self.tag_limit {
+            None => super::tags::SPLIT_TAG_SPAN,
+            Some(limit) => {
+                let remaining = limit.saturating_sub(self.next_tag.get());
+                let span = remaining / 2 / CHUNK_TAG_SPAN * CHUNK_TAG_SPAN;
+                assert!(
+                    span >= CHUNK_TAG_SPAN,
+                    "communicator tag space too depleted to split (remaining {remaining})"
+                );
+                span
+            }
+        }
     }
 
     /// The memoized pool shadow communicators send chunks from (created
@@ -151,8 +253,8 @@ impl Communicator {
     }
 
     /// Build a shadow communicator sharing this one's fabric, rank, size,
-    /// and chunk policy, with its own tag counter starting at `base` (the
-    /// caller must have reserved the span via
+    /// member mapping, and chunk policy, with its own tag counter starting
+    /// at `base` (the caller must have reserved the span via
     /// [`Communicator::reserve_tag_span`]). Its send pool is this
     /// communicator's memoized shadow pool, so repeated offloaded
     /// collectives reuse one set of worker threads. The nonblocking layer
@@ -163,26 +265,36 @@ impl Communicator {
             fabric: Arc::clone(&self.fabric),
             rank: self.rank,
             size: self.size,
+            members: Arc::clone(&self.members),
             next_tag: Cell::new(base),
+            tag_limit: self.tag_limit,
             chunk_policy: Cell::new(self.chunk_policy.get()),
             chunk_pool: RefCell::new(Some(self.shadow_pool_handle())),
             shadow_send_pool: RefCell::new(None),
         }
     }
 
-    /// Send a collective-action parcel.
+    /// Send a collective-action parcel to communicator rank `dest`
+    /// (translated to its global locality).
     pub(crate) fn send(&self, dest: LocalityId, tag: Tag, payload: Payload) {
-        self.fabric.send(Parcel::new(self.rank, dest, actions::COLLECTIVE, tag, payload));
+        self.fabric.send(Parcel::new(
+            self.my_global(),
+            self.global_rank(dest),
+            actions::COLLECTIVE,
+            tag,
+            payload,
+        ));
     }
 
-    /// Blocking matched receive of a collective-action parcel.
+    /// Blocking matched receive of a collective-action parcel from
+    /// communicator rank `src`.
     pub(crate) fn recv(&self, src: LocalityId, tag: Tag) -> Payload {
-        self.fabric.recv(self.rank, src, actions::COLLECTIVE, tag)
+        self.fabric.recv(self.my_global(), self.global_rank(src), actions::COLLECTIVE, tag)
     }
 
     /// Non-blocking matched receive (used by overlap-hungry callers).
     pub(crate) fn try_recv(&self, src: LocalityId, tag: Tag) -> Option<Payload> {
-        self.fabric.try_recv(self.rank, src, actions::COLLECTIVE, tag)
+        self.fabric.try_recv(self.my_global(), self.global_rank(src), actions::COLLECTIVE, tag)
     }
 
     /// Expose a matched receive for application-level overlap (the
@@ -213,6 +325,7 @@ mod tests {
         assert_eq!(comm.rank(), 2);
         assert_eq!(comm.size(), 4);
         assert_eq!(comm.fabric().kind(), PortKind::Lci);
+        assert_eq!(comm.members(), &[0, 1, 2, 3], "whole-fabric mapping is the identity");
     }
 
     #[test]
@@ -276,6 +389,31 @@ mod tests {
     }
 
     #[test]
+    fn bounded_communicator_enforces_its_span() {
+        let f = fabric(4);
+        let members = Arc::new(vec![1usize, 3]);
+        let sub = Communicator::from_members(
+            Arc::clone(&f),
+            0,
+            members,
+            500,
+            500 + 10 * CHUNK_TAG_SPAN,
+            ChunkPolicy::default(),
+        );
+        assert_eq!(sub.size(), 2);
+        assert_eq!(sub.global_rank(1), 3);
+        let first = sub.alloc_tags();
+        assert_eq!(first, 500, "allocation starts at the reserved base");
+        // Exhausting the span must trip the bound.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for _ in 0..11 {
+                sub.alloc_chunk_tags(1);
+            }
+        }));
+        assert!(result.is_err(), "allocating past the span must panic");
+    }
+
+    #[test]
     #[should_panic(expected = "out of range")]
     fn bad_rank_panics() {
         Communicator::new(fabric(2), 2, 2);
@@ -285,5 +423,19 @@ mod tests {
     #[should_panic(expected = "larger than fabric")]
     fn oversized_comm_panics() {
         Communicator::new(fabric(2), 0, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside fabric")]
+    fn member_outside_fabric_rejected() {
+        let f = fabric(2);
+        Communicator::from_members(
+            f,
+            0,
+            Arc::new(vec![0, 5]),
+            0,
+            CHUNK_TAG_SPAN,
+            ChunkPolicy::default(),
+        );
     }
 }

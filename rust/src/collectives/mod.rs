@@ -18,13 +18,18 @@
 //!
 //! The collective engine is **futures-first** ([`nonblocking`]):
 //! `Communicator::{all_to_all_async, scatter_async, gather_async,
-//! broadcast_async}` post receives into the mailbox and drive sends from
-//! the communicator's chunk pool, returning a
-//! [`crate::task::CollectiveFuture`] within O(posting) time. Their
-//! blocking entry points (`all_to_all`, `scatter`, `gather`,
-//! `broadcast`) are thin `get()` wrappers over them; only the
-//! small-payload synchronization collectives (barrier, reduce,
-//! all-gather) remain direct.
+//! broadcast_async, reduce_async, barrier_async}` post receives into the
+//! mailbox and drive sends from the communicator's chunk pool, returning
+//! a [`crate::task::CollectiveFuture`] within O(posting) time. Their
+//! blocking entry points (`all_to_all`, `scatter`, `gather`, `broadcast`,
+//! `reduce`, `barrier`) are thin `get()` wrappers over them; only
+//! all-gather remains direct (it is the bootstrap [`split`] itself rides
+//! on).
+//!
+//! Communicators need not span the whole fabric:
+//! [`Communicator::split`] carves sub-communicators with disjoint tag
+//! spaces (see [`tags`]) and their own chunk pools — the capability the
+//! 3-D pencil FFT's row/column exchanges are built on.
 
 pub mod all_to_all;
 pub mod barrier;
@@ -35,6 +40,8 @@ pub mod gather;
 pub mod nonblocking;
 pub mod reduce;
 pub mod scatter;
+pub mod split;
+pub mod tags;
 
 pub use all_to_all::AllToAllAlgo;
 pub use chunked::ChunkPolicy;

@@ -33,22 +33,23 @@
 //! across ranks.
 
 use super::all_to_all::AllToAllAlgo;
-use super::chunked::{recv_chunked_via, CHUNK_TAG_SPAN};
+use super::chunked::recv_chunked_via;
 use super::comm::Communicator;
+use super::reduce::ReduceOp;
 use super::scatter::ScatterAlgo;
+use super::tags;
 use crate::hpx::parcel::{actions, Parcel, Payload};
 use crate::task::{when_all_async, CollectiveFuture, Promise, TaskFuture};
 use std::sync::Arc;
 
 impl Communicator {
     /// Reserve a lock-step tag block and build the shadow communicator an
-    /// offloaded multi-round collective runs on. The span is generous
-    /// enough for any blocking algorithm's internal allocations
-    /// (including `size` chunk-tag blocks for the pairwise-chunked
-    /// exchange).
+    /// offloaded multi-round collective runs on. The span
+    /// ([`tags::shadow_span`]) is generous enough for any blocking
+    /// algorithm's internal allocations (including `size` chunk-tag
+    /// blocks for the pairwise-chunked exchange).
     fn offload_shadow(&self) -> Communicator {
-        let span = (self.size() as u64 + 2) * CHUNK_TAG_SPAN;
-        let base = self.reserve_tag_span(span);
+        let base = self.reserve_tag_span(tags::shadow_span(self.size()));
         self.shadow_at(base)
     }
 
@@ -89,6 +90,7 @@ impl Communicator {
         let tag = self.alloc_tags();
         let n = self.size();
         let me = self.rank();
+        let me_g = self.my_global();
         let pool = self.chunk_pool();
         let own = std::mem::replace(&mut chunks[me], Payload::empty());
 
@@ -98,9 +100,10 @@ impl Communicator {
             if dst == me {
                 continue;
             }
+            let dst_g = self.global_rank(dst);
             let fabric = Arc::clone(self.fabric());
             sends.push(pool.spawn(move || {
-                fabric.send(Parcel::new(me, dst, actions::COLLECTIVE, tag, chunk));
+                fabric.send(Parcel::new(me_g, dst_g, actions::COLLECTIVE, tag, chunk));
             }));
         }
 
@@ -110,9 +113,10 @@ impl Communicator {
             if src == me {
                 per_src.push(TaskFuture::ready(own.clone()));
             } else {
+                let src_g = self.global_rank(src);
                 let fabric = Arc::clone(self.fabric());
                 per_src.push(
-                    pool.spawn(move || fabric.recv(me, src, actions::COLLECTIVE, tag)),
+                    pool.spawn(move || fabric.recv(me_g, src_g, actions::COLLECTIVE, tag)),
                 );
             }
         }
@@ -142,17 +146,19 @@ impl Communicator {
                     assert_eq!(chunks.len(), self.size(), "need exactly one chunk per rank");
                     let pool = self.chunk_pool();
                     let me = self.rank();
+                    let me_g = self.my_global();
                     let mut mine = None;
                     let mut sends = Vec::with_capacity(self.size().saturating_sub(1));
                     for (dst, chunk) in chunks.into_iter().enumerate() {
                         if dst == me {
                             mine = Some(chunk); // never hits the fabric
                         } else {
+                            let dst_g = self.global_rank(dst);
                             let fabric = Arc::clone(self.fabric());
                             sends.push(pool.spawn(move || {
                                 fabric.send(Parcel::new(
-                                    me,
-                                    dst,
+                                    me_g,
+                                    dst_g,
                                     actions::COLLECTIVE,
                                     tag,
                                     chunk,
@@ -167,10 +173,11 @@ impl Communicator {
                 } else {
                     assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
                     let fabric = Arc::clone(self.fabric());
-                    let me = self.rank();
+                    let me_g = self.my_global();
+                    let root_g = self.global_rank(root);
                     let recv = self
                         .chunk_pool()
-                        .spawn(move || fabric.recv(me, root, actions::COLLECTIVE, tag));
+                        .spawn(move || fabric.recv(me_g, root_g, actions::COLLECTIVE, tag));
                     CollectiveFuture::new(recv, Vec::new())
                 }
             }
@@ -197,11 +204,12 @@ impl Communicator {
                 } else {
                     assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
                     let fabric = Arc::clone(self.fabric());
-                    let me = self.rank();
+                    let me_g = self.my_global();
+                    let root_g = self.global_rank(root);
                     let policy = self.chunk_policy();
                     let recv = self
                         .chunk_pool()
-                        .spawn(move || recv_chunked_via(&fabric, me, root, tag, policy));
+                        .spawn(move || recv_chunked_via(&fabric, me_g, root_g, tag, policy));
                     CollectiveFuture::new(recv, Vec::new())
                 }
             }
@@ -222,6 +230,7 @@ impl Communicator {
         assert!(root < self.size(), "root {root} out of range");
         let tag = self.alloc_tags();
         let me = self.rank();
+        let me_g = self.my_global();
         let pool = self.chunk_pool();
         if me == root {
             let mut per_src = Vec::with_capacity(self.size());
@@ -229,9 +238,10 @@ impl Communicator {
                 if src == me {
                     per_src.push(TaskFuture::ready(data.clone()));
                 } else {
+                    let src_g = self.global_rank(src);
                     let fabric = Arc::clone(self.fabric());
                     per_src.push(
-                        pool.spawn(move || fabric.recv(me, src, actions::COLLECTIVE, tag)),
+                        pool.spawn(move || fabric.recv(me_g, src_g, actions::COLLECTIVE, tag)),
                     );
                 }
             }
@@ -239,9 +249,10 @@ impl Communicator {
             when_all_async(per_src).then_inline(move |v: &Vec<Payload>| p.set(Some(v.clone())));
             CollectiveFuture::new(out, Vec::new())
         } else {
+            let root_g = self.global_rank(root);
             let fabric = Arc::clone(self.fabric());
             let send = pool.spawn(move || {
-                fabric.send(Parcel::new(me, root, actions::COLLECTIVE, tag, data));
+                fabric.send(Parcel::new(me_g, root_g, actions::COLLECTIVE, tag, data));
             });
             CollectiveFuture::new(TaskFuture::ready(None), vec![send])
         }
@@ -266,16 +277,18 @@ impl Communicator {
         let me = self.rank();
         let vrank = (me + n - root) % n;
         let pool = self.chunk_pool();
+        let members = self.members_arc();
         if me == root {
             let payload = data.expect("root must provide data");
+            let me_g = self.my_global();
             let mut sends = Vec::new();
             let mut step = 1;
             while step < n {
-                let child = (step + root) % n;
+                let child_g = members[(step + root) % n];
                 let fabric = Arc::clone(self.fabric());
                 let chunk = payload.clone();
                 sends.push(pool.spawn(move || {
-                    fabric.send(Parcel::new(me, child, actions::COLLECTIVE, tag, chunk));
+                    fabric.send(Parcel::new(me_g, child_g, actions::COLLECTIVE, tag, chunk));
                 }));
                 step <<= 1;
             }
@@ -284,18 +297,19 @@ impl Communicator {
             assert!(data.is_none(), "non-root rank {me} passed data");
             let fabric = Arc::clone(self.fabric());
             let result = pool.spawn(move || {
+                let me_g = members[me];
                 // Parent: vrank with its highest set bit cleared.
                 let mask = 1 << (usize::BITS - 1 - vrank.leading_zeros());
-                let parent = ((vrank ^ mask) + root) % n;
-                let payload = fabric.recv(me, parent, actions::COLLECTIVE, tag);
+                let parent_g = members[((vrank ^ mask) + root) % n];
+                let payload = fabric.recv(me_g, parent_g, actions::COLLECTIVE, tag);
                 // Forward to children before fulfilling, so the subtree
                 // makes progress even if no one consumes this future.
                 let mut step = 1 << (usize::BITS - vrank.leading_zeros());
                 while vrank + step < n {
-                    let child = ((vrank + step) + root) % n;
+                    let child_g = members[((vrank + step) + root) % n];
                     fabric.send(Parcel::new(
-                        me,
-                        child,
+                        me_g,
+                        child_g,
                         actions::COLLECTIVE,
                         tag,
                         payload.clone(),
@@ -306,6 +320,33 @@ impl Communicator {
             });
             CollectiveFuture::new(result, Vec::new())
         }
+    }
+
+    /// Nonblocking binomial-tree reduce to `root`: returns within
+    /// O(posting) with a future for the root's reduced vector (`Some` at
+    /// the root, `None` elsewhere). The tree is a multi-round schedule,
+    /// so it runs the blocking algorithm on an offload shadow — the same
+    /// pattern as the round-paced all-to-alls. The blocking
+    /// [`Communicator::reduce`] is now `reduce_async(..).get()`.
+    ///
+    /// # Panics
+    /// If `root` is out of range (surfaced when the future is consumed).
+    pub fn reduce_async(
+        &self,
+        root: usize,
+        data: &[f32],
+        op: ReduceOp,
+    ) -> CollectiveFuture<Option<Vec<f32>>> {
+        let data = data.to_vec();
+        self.offload(move |shadow| shadow.reduce_blocking(root, &data, op))
+    }
+
+    /// Nonblocking dissemination barrier: posting returns immediately;
+    /// the future completes once every rank has entered the barrier. The
+    /// ⌈log₂ n⌉ signal rounds run on an offload shadow. The blocking
+    /// [`Communicator::barrier`] is now `barrier_async().get()`.
+    pub fn barrier_async(&self) -> CollectiveFuture<()> {
+        self.offload(move |shadow| shadow.barrier_blocking())
     }
 }
 
@@ -472,6 +513,71 @@ mod tests {
                     gathered.unwrap().iter().map(|p| p.to_f32()[0]).collect();
                 assert_eq!(v, vec![0.0, 2.0, 4.0]);
             }
+        });
+    }
+
+    #[test]
+    fn reduce_async_matches_blocking_semantics() {
+        use crate::collectives::ReduceOp;
+        let n = 5;
+        for root in [0usize, 3] {
+            let cluster = Cluster::new(n, PortKind::Lci, None).unwrap();
+            let got = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.reduce_async(root, &[ctx.rank as f32, 1.0], ReduceOp::Sum).get()
+            });
+            let expect = vec![(n * (n - 1) / 2) as f32, n as f32];
+            for (r, g) in got.iter().enumerate() {
+                if r == root {
+                    assert_eq!(g.as_ref().unwrap(), &expect, "root {root}");
+                } else {
+                    assert!(g.is_none(), "root {root} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_async_posting_returns_before_stragglers() {
+        // O(posting): rank 0 posts the barrier and gets its future back
+        // while rank 1 is still asleep; the *future* only resolves once
+        // everyone has entered.
+        let cluster = Cluster::new(2, PortKind::Mpi, None).unwrap();
+        let posted_us = cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            comm.warm_chunk_pool();
+            if ctx.rank == 1 {
+                std::thread::sleep(Duration::from_millis(40));
+            }
+            let t0 = Instant::now();
+            let fut = comm.barrier_async();
+            let posted = t0.elapsed().as_secs_f64() * 1e6;
+            fut.get();
+            posted
+        });
+        assert!(posted_us[0] < 30_000.0, "posting took {} µs", posted_us[0]);
+    }
+
+    #[test]
+    fn mixed_reduce_and_barrier_async_stay_in_lockstep() {
+        use crate::collectives::ReduceOp;
+        let n = 4;
+        let cluster = Cluster::new(n, PortKind::Tcp, None).unwrap();
+        cluster.run(|ctx| {
+            let comm = Communicator::from_ctx(ctx);
+            let red = comm.reduce_async(0, &[1.0f32], ReduceOp::Sum);
+            let bar = comm.barrier_async();
+            let bc = comm.broadcast_async(
+                1,
+                (ctx.rank == 1).then(|| Payload::from_f32(&[9.0])),
+            );
+            if ctx.rank == 0 {
+                assert_eq!(red.get().unwrap(), vec![n as f32]);
+            } else {
+                assert!(red.get().is_none());
+            }
+            bar.get();
+            assert_eq!(bc.get().to_f32(), vec![9.0]);
         });
     }
 }

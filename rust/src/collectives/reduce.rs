@@ -35,7 +35,23 @@ impl ReduceOp {
 impl Communicator {
     /// Binomial-tree reduce to `root`. Every rank contributes `data`;
     /// the root returns `Some(result)`, others `None`.
+    ///
+    /// A thin blocking wrapper over
+    /// [`Communicator::reduce_async`]`.get()` — the futures engine is the
+    /// only engine, so blocking and async reductions cannot diverge.
     pub fn reduce(&self, root: usize, data: &[f32], op: ReduceOp) -> Option<Vec<f32>> {
+        self.reduce_async(root, data, op).get()
+    }
+
+    /// The round-paced blocking reduce tree. The nonblocking layer runs
+    /// this on a shadow communicator inside a single pool job (see
+    /// [`Communicator::reduce_async`]).
+    pub(crate) fn reduce_blocking(
+        &self,
+        root: usize,
+        data: &[f32],
+        op: ReduceOp,
+    ) -> Option<Vec<f32>> {
         assert!(root < self.size(), "root {root} out of range");
         let tag = self.alloc_tags();
         let n = self.size();

@@ -1,0 +1,85 @@
+//! Tag-space hygiene: the one place the 64-bit collective tag space is
+//! partitioned.
+//!
+//! Every communicator hands out tags from a lock-step counter (see
+//! [`crate::collectives::Communicator`]); what keeps concurrent traffic
+//! from colliding is that each *derived* tag region — chunked-transfer
+//! blocks, offload-shadow blocks, split sub-communicator spaces — is
+//! carved out of its parent's counter in SPMD lock-step, with the span
+//! constants centralized here so the reservations cannot drift apart
+//! between call sites:
+//!
+//! ```text
+//! world counter ──┬── plain collective blocks (4·size + 8 tags each)
+//!                 ├── chunk blocks        (CHUNK_TAG_SPAN each)
+//!                 ├── shadow blocks       (shadow_span(size) each)
+//!                 └── split spaces        (SPLIT_TAG_SPAN each)
+//!                        └── a sub-communicator's own counter starts at
+//!                            the space base and may carve all of the
+//!                            above (including its *own* shadows and
+//!                            further splits) out of its span — the
+//!                            allocator enforces the bound at runtime.
+//! ```
+//!
+//! The compile-time assertions below pin the containment relations the
+//! scheme relies on: a split space holds many chunk and shadow blocks,
+//! and a shadow block for any plausible communicator size fits inside a
+//! split space with room to spare — so a `split` sub-communicator can
+//! never collide with a shadow communicator of its parent (disjoint
+//! reservations) nor overflow into its sibling's space (allocator
+//! bound).
+
+use crate::hpx::parcel::Tag;
+
+/// Tags reserved per chunked transfer: one header plus up to
+/// `CHUNK_TAG_SPAN - 1` wire chunks. Tag space is 64-bit, so reserving
+/// 2³² tags per transfer is free and removes any realistic collision
+/// risk.
+pub const CHUNK_TAG_SPAN: Tag = 1 << 32;
+
+/// Tag space reserved for one `Communicator::split` sub-communicator.
+/// Carved from the parent's lock-step counter at split time; the
+/// sub-communicator's own allocations are bounded to this span.
+pub const SPLIT_TAG_SPAN: Tag = 1 << 48;
+
+/// Largest communicator size the shadow-block maths below is asserted
+/// for (far above any realistic locality count in this test fabric).
+pub const MAX_SHADOW_RANKS: usize = 1 << 13;
+
+/// Tags reserved for one offload-shadow block: generous enough for any
+/// blocking algorithm's internal allocations on a `size`-rank
+/// communicator, including `size` chunk-tag blocks for the
+/// pairwise-chunked exchange.
+pub const fn shadow_span(size: usize) -> Tag {
+    (size as Tag + 2) * CHUNK_TAG_SPAN
+}
+
+// A split space subdivides into whole chunk blocks.
+const _: () = assert!(SPLIT_TAG_SPAN % CHUNK_TAG_SPAN == 0);
+// A split space holds at least 2^16 chunk blocks, so a sub-communicator
+// has ample room for its own chunked collectives before the runtime
+// bound trips.
+const _: () = assert!(SPLIT_TAG_SPAN / CHUNK_TAG_SPAN >= 1 << 16);
+// A shadow block for the largest supported communicator still fits many
+// times inside one split space: sub-communicators can offload
+// multi-round collectives onto shadows of their own without ever
+// reaching a sibling split's tags.
+const _: () = assert!(shadow_span(MAX_SHADOW_RANKS) * 4 <= SPLIT_TAG_SPAN);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_are_nested_cleanly() {
+        assert_eq!(SPLIT_TAG_SPAN % CHUNK_TAG_SPAN, 0);
+        assert!(shadow_span(4) < SPLIT_TAG_SPAN);
+        assert!(shadow_span(1) >= 3 * CHUNK_TAG_SPAN);
+    }
+
+    #[test]
+    fn shadow_span_scales_with_size() {
+        assert_eq!(shadow_span(0), 2 * CHUNK_TAG_SPAN);
+        assert_eq!(shadow_span(8), 10 * CHUNK_TAG_SPAN);
+    }
+}

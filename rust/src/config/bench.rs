@@ -5,6 +5,7 @@
 use super::kv::Config;
 use crate::collectives::ChunkPolicy;
 use crate::dist_fft::driver::ExecutionMode;
+use crate::dist_fft::grid3::{Grid3, ProcGrid};
 use anyhow::Result;
 
 /// Parameters shared by the figure harnesses.
@@ -34,6 +35,12 @@ pub struct BenchConfig {
     pub threads: usize,
     /// Output directory for CSV series.
     pub out_dir: String,
+    /// Global 3-D grid of the fig6 pencil sweep (`--grid3`).
+    pub grid3: Grid3,
+    /// `Pr × Pc` process-grid shapes the fig6 sweep covers
+    /// (`--shapes`). Shapes that do not divide `grid3` are skipped with
+    /// a notice.
+    pub proc_shapes: Vec<ProcGrid>,
 }
 
 impl Default for BenchConfig {
@@ -59,13 +66,16 @@ impl Default for BenchConfig {
             exec: ExecutionMode::Blocking,
             threads: 2,
             out_dir: "bench_out".into(),
+            grid3: Grid3::new(32, 32, 32),
+            proc_shapes: vec![ProcGrid::new(1, 4), ProcGrid::new(2, 2), ProcGrid::new(4, 1)],
         }
     }
 }
 
 impl BenchConfig {
     /// Quick mode for CI / smoke runs. Keeps one non-power-of-two sweep
-    /// point (1 kB) so the smoke path exercises ragged wire chunking.
+    /// point (1 kB) so the smoke path exercises ragged wire chunking,
+    /// and the non-power-of-two fig6 acceptance grid (12×8×24).
     pub fn quick() -> Self {
         Self {
             reps: 5,
@@ -78,6 +88,7 @@ impl BenchConfig {
                 sizes.sort_unstable();
                 sizes
             },
+            grid3: Grid3::new(12, 8, 24),
             ..Self::default()
         }
     }
@@ -111,6 +122,9 @@ impl BenchConfig {
         if let Some(v) = cfg.get("bench.exec") {
             self.exec = v.parse().map_err(anyhow::Error::msg)?;
         }
+        if let Some(v) = cfg.get("bench.grid3") {
+            self.grid3 = v.parse().map_err(anyhow::Error::msg)?;
+        }
         if let Some(v) = cfg.get("bench.out_dir") {
             self.out_dir = v.to_string();
         }
@@ -139,6 +153,31 @@ mod tests {
     fn quick_is_smaller() {
         let q = BenchConfig::quick();
         assert!(q.reps < BenchConfig::default().reps);
+        // The quick fig6 grid is the non-power-of-two acceptance shape.
+        assert_eq!(q.grid3, Grid3::new(12, 8, 24));
+    }
+
+    #[test]
+    fn fig6_defaults_cover_all_four_locality_shapes() {
+        let c = BenchConfig::default();
+        assert_eq!(
+            c.proc_shapes,
+            vec![ProcGrid::new(1, 4), ProcGrid::new(2, 2), ProcGrid::new(4, 1)]
+        );
+        assert!(c.proc_shapes.iter().all(|p| p.n() == 4));
+    }
+
+    #[test]
+    fn grid3_from_file() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-bench3d-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.conf");
+        std::fs::write(&path, "[bench]\ngrid3 = 24x16x8\n").unwrap();
+        let mut c = BenchConfig::default();
+        c.apply_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.grid3, Grid3::new(24, 16, 8));
+        std::fs::write(&path, "[bench]\ngrid3 = 24x16\n").unwrap();
+        assert!(c.apply_file(path.to_str().unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,600 @@
+//! 3-D grid geometry and pencil decomposition over a `Pr × Pc` process
+//! grid.
+//!
+//! The global `n0 × n1 × n2` complex grid is distributed so that every
+//! locality always owns *one full dimension* (its pencils) and a 2-D
+//! block of the other two. Three pencil orientations appear during the
+//! 3-D FFT, connected by two transpose rounds:
+//!
+//! ```text
+//! stage Z   [i0-block(Pr)] [i1-block(Pc)] [i2 full]   z-pencils
+//!    │  FFT(z), then row-communicator all-to-all (Pc ranks)
+//! stage Y   [i0-block(Pr)] [i2-block(Pc)] [i1 full]   y-pencils
+//!    │  FFT(y), then column-communicator all-to-all (Pr ranks)
+//! stage X   [i2-block(Pc)] [i1-block(Pr)] [i0 full]   x-pencils
+//!    └  FFT(x) → transposed distributed output
+//! ```
+//!
+//! Each stage stores its pencil row-major with the full dimension
+//! contiguous, so every FFT phase is a plain row batch. The transpose
+//! rounds are expressed as wire-format extraction
+//! ([`extract_t1_bytes`] / [`extract_t2_bytes`]) and **chunk-granular**
+//! placement ([`place_t1_slice`] / [`place_t2_slice`]): a placement
+//! window may start at any element offset, so arriving wire chunks of
+//! the pipelined collectives are transpose-placed the moment they land,
+//! exactly like the 2-D slab path.
+
+use crate::fft::complex::{as_byte_slice, Complex32};
+use crate::util::rng::Pcg32;
+
+/// Global 3-D grid extents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid3 {
+    /// Extent of the slowest dimension (x).
+    pub n0: usize,
+    /// Extent of the middle dimension (y).
+    pub n1: usize,
+    /// Extent of the fastest dimension (z).
+    pub n2: usize,
+}
+
+impl Grid3 {
+    /// A grid with the given extents.
+    pub fn new(n0: usize, n1: usize, n2: usize) -> Self {
+        Self { n0, n1, n2 }
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.n0 * self.n1 * self.n2
+    }
+}
+
+impl std::fmt::Display for Grid3 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.n0, self.n1, self.n2)
+    }
+}
+
+/// Parse an `x`-separated list of exactly `n` positive extents
+/// (`"12x8x24"`, `"2x2"`) — the shared grammar of the [`Grid3`] and
+/// [`ProcGrid`] `FromStr` impls.
+fn parse_dims(s: &str, n: usize) -> Result<Vec<usize>, String> {
+    let parts: Vec<&str> = s.split(['x', 'X', '×']).collect();
+    if parts.len() != n {
+        return Err(format!("expected {n} x-separated extents, got {s:?}"));
+    }
+    parts
+        .into_iter()
+        .map(|p| {
+            let v: usize = p.trim().parse().map_err(|e| format!("bad extent {p:?}: {e}"))?;
+            if v == 0 {
+                return Err(format!("zero extent in {s:?}"));
+            }
+            Ok(v)
+        })
+        .collect()
+}
+
+impl std::str::FromStr for Grid3 {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let d = parse_dims(s, 3)?;
+        Ok(Self { n0: d[0], n1: d[1], n2: d[2] })
+    }
+}
+
+/// 2-D process grid: `pr` rows × `pc` columns of localities. Locality
+/// `rank` sits at row `rank / pc`, column `rank % pc`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProcGrid {
+    /// Process-grid rows (the column-communicator size).
+    pub pr: usize,
+    /// Process-grid columns (the row-communicator size).
+    pub pc: usize,
+}
+
+impl ProcGrid {
+    /// A `pr × pc` process grid.
+    pub fn new(pr: usize, pc: usize) -> Self {
+        Self { pr, pc }
+    }
+
+    /// Total locality count.
+    pub fn n(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    /// `(row, column)` coordinates of a locality rank.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        (rank / self.pc, rank % self.pc)
+    }
+
+    /// Locality rank at `(row, column)`.
+    pub fn rank_of(&self, row: usize, col: usize) -> usize {
+        row * self.pc + col
+    }
+}
+
+impl std::fmt::Display for ProcGrid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.pr, self.pc)
+    }
+}
+
+impl std::str::FromStr for ProcGrid {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let d = parse_dims(s, 2)?;
+        Ok(Self { pr: d[0], pc: d[1] })
+    }
+}
+
+/// Per-locality pencil extents, derived from a grid + process grid.
+/// Construction *errors* (instead of panicking) when any dimension does
+/// not divide — the CLI and bench harness surface this to the user.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PencilDims {
+    /// The global grid.
+    pub grid: Grid3,
+    /// The process grid.
+    pub proc: ProcGrid,
+    /// `n0 / pr` — x-block held in stages Z and Y.
+    pub d0: usize,
+    /// `n1 / pc` — y-block held in stage Z.
+    pub d1c: usize,
+    /// `n1 / pr` — y-block held in stage X.
+    pub d1r: usize,
+    /// `n2 / pc` — z-block held in stages Y and X.
+    pub d2c: usize,
+}
+
+impl PencilDims {
+    /// Validate the decomposition and derive the block extents.
+    pub fn new(grid: Grid3, proc: ProcGrid) -> anyhow::Result<Self> {
+        anyhow::ensure!(proc.pr >= 1 && proc.pc >= 1, "process grid must be non-empty");
+        anyhow::ensure!(grid.elems() > 0, "grid must be non-empty");
+        anyhow::ensure!(
+            grid.n0 % proc.pr == 0,
+            "n0 = {} not divisible by Pr = {} (x-block of the z/y pencils)",
+            grid.n0,
+            proc.pr
+        );
+        anyhow::ensure!(
+            grid.n1 % proc.pc == 0,
+            "n1 = {} not divisible by Pc = {} (y-block of the z pencils)",
+            grid.n1,
+            proc.pc
+        );
+        anyhow::ensure!(
+            grid.n2 % proc.pc == 0,
+            "n2 = {} not divisible by Pc = {} (z-block of the y/x pencils)",
+            grid.n2,
+            proc.pc
+        );
+        anyhow::ensure!(
+            grid.n1 % proc.pr == 0,
+            "n1 = {} not divisible by Pr = {} (y-block of the x pencils)",
+            grid.n1,
+            proc.pr
+        );
+        Ok(Self {
+            grid,
+            proc,
+            d0: grid.n0 / proc.pr,
+            d1c: grid.n1 / proc.pc,
+            d1r: grid.n1 / proc.pr,
+            d2c: grid.n2 / proc.pc,
+        })
+    }
+
+    /// Elements per locality (identical in every stage).
+    pub fn local_elems(&self) -> usize {
+        self.grid.elems() / self.proc.n()
+    }
+
+    /// Elements of one round-1 transpose chunk (per row-comm peer).
+    pub fn t1_chunk_elems(&self) -> usize {
+        self.d0 * self.d1c * self.d2c
+    }
+
+    /// Elements of one round-2 transpose chunk (per column-comm peer).
+    pub fn t2_chunk_elems(&self) -> usize {
+        self.d0 * self.d2c * self.d1r
+    }
+}
+
+/// Deterministic synthetic signal for the stage-Z pencil at process-grid
+/// position `(row_idx, col_idx)`. One RNG stream per global `(i0, i1)`
+/// z-row makes the data decomposition-independent: every `(Pr, Pc)`
+/// shape — and the serial [`whole_grid`] — generates bit-identical
+/// global data (verification depends on this).
+pub fn synthetic_pencil(dims: &PencilDims, row_idx: usize, col_idx: usize) -> Vec<Complex32> {
+    let (d0, d1c, n2) = (dims.d0, dims.d1c, dims.grid.n2);
+    let n1 = dims.grid.n1;
+    let mut out = Vec::with_capacity(d0 * d1c * n2);
+    for s in 0..d0 {
+        let i0 = row_idx * d0 + s;
+        for r in 0..d1c {
+            let i1 = col_idx * d1c + r;
+            let mut rng = Pcg32::with_stream(0x3D11_F0F0, (i0 * n1 + i1) as u64 + 1);
+            for _ in 0..n2 {
+                out.push(Complex32::new(rng.next_signal(), rng.next_signal()));
+            }
+        }
+    }
+    out
+}
+
+/// The whole global grid, `[i0][i1][i2]` row-major (serial reference) —
+/// bit-identical to the union of every rank's [`synthetic_pencil`].
+pub fn whole_grid(grid: Grid3) -> Vec<Complex32> {
+    let dims = PencilDims::new(grid, ProcGrid::new(1, 1)).expect("1×1 always divides");
+    synthetic_pencil(&dims, 0, 0)
+}
+
+/// Round-1 wire buffer: the part of a stage-Z pencil
+/// (`[d0][d1c][n2]`) destined for row-comm peer `dest` — its z-block
+/// `[dest·d2c, (dest+1)·d2c)` of every z-row — serialized in
+/// `(s, r, z)` order as wire-format bytes.
+pub fn extract_t1_bytes(data: &[Complex32], dims: &PencilDims, dest: usize) -> Vec<u8> {
+    let (d0, d1c, d2c, n2) = (dims.d0, dims.d1c, dims.d2c, dims.grid.n2);
+    assert_eq!(data.len(), d0 * d1c * n2, "stage-Z pencil shape mismatch");
+    assert!(dest < dims.proc.pc, "row-comm peer {dest} out of range");
+    let mut out = Vec::with_capacity(d0 * d1c * d2c * std::mem::size_of::<Complex32>());
+    for s in 0..d0 {
+        for r in 0..d1c {
+            let base = (s * d1c + r) * n2 + dest * d2c;
+            out.extend_from_slice(as_byte_slice(&data[base..base + d2c]));
+        }
+    }
+    out
+}
+
+/// [`extract_t1_bytes`] without the wire serialization: the same chunk,
+/// same `(s, r, z)` order, as elements — the own-rank block never
+/// touches the fabric, so it skips the byte round-trip.
+pub fn extract_t1_elems(data: &[Complex32], dims: &PencilDims, dest: usize) -> Vec<Complex32> {
+    let (d0, d1c, d2c, n2) = (dims.d0, dims.d1c, dims.d2c, dims.grid.n2);
+    assert_eq!(data.len(), d0 * d1c * n2, "stage-Z pencil shape mismatch");
+    assert!(dest < dims.proc.pc, "row-comm peer {dest} out of range");
+    let mut out = Vec::with_capacity(d0 * d1c * d2c);
+    for s in 0..d0 {
+        for r in 0..d1c {
+            let base = (s * d1c + r) * n2 + dest * d2c;
+            out.extend_from_slice(&data[base..base + d2c]);
+        }
+    }
+    out
+}
+
+/// Place a window of the round-1 chunk arriving from row-comm peer
+/// `src` into a stage-Y pencil (`[d0][d2c][n1]`): chunk element
+/// `(s, r, z)` (see [`extract_t1_bytes`]) lands at
+/// `out[s][z][src·d1c + r]`. `elem_offset` is the window's position in
+/// the chunk's element stream — any element-aligned wire-chunk cut
+/// works, including mid-row.
+pub fn place_t1_slice(
+    elems: &[Complex32],
+    elem_offset: usize,
+    dims: &PencilDims,
+    out: &mut [Complex32],
+    src: usize,
+) {
+    let (d1c, d2c, n1) = (dims.d1c, dims.d2c, dims.grid.n1);
+    assert!(
+        elem_offset + elems.len() <= dims.t1_chunk_elems(),
+        "window [{elem_offset}, +{}) exceeds round-1 chunk",
+        elems.len()
+    );
+    assert_eq!(out.len(), dims.d0 * d2c * n1, "stage-Y pencil shape mismatch");
+    assert!(src < dims.proc.pc, "row-comm peer {src} out of range");
+    for (i, v) in elems.iter().enumerate() {
+        let e = elem_offset + i;
+        let s = e / (d1c * d2c);
+        let rem = e % (d1c * d2c);
+        let r = rem / d2c;
+        let z = rem % d2c;
+        out[(s * d2c + z) * n1 + src * d1c + r] = *v;
+    }
+}
+
+/// Round-2 wire buffer: the part of a stage-Y pencil
+/// (`[d0][d2c][n1]`) destined for column-comm peer `dest` — its
+/// y-block `[dest·d1r, (dest+1)·d1r)` of every y-row — serialized in
+/// `(s, k, y)` order as wire-format bytes.
+pub fn extract_t2_bytes(data: &[Complex32], dims: &PencilDims, dest: usize) -> Vec<u8> {
+    let (d0, d1r, d2c, n1) = (dims.d0, dims.d1r, dims.d2c, dims.grid.n1);
+    assert_eq!(data.len(), d0 * d2c * n1, "stage-Y pencil shape mismatch");
+    assert!(dest < dims.proc.pr, "column-comm peer {dest} out of range");
+    let mut out = Vec::with_capacity(d0 * d2c * d1r * std::mem::size_of::<Complex32>());
+    for s in 0..d0 {
+        for k in 0..d2c {
+            let base = (s * d2c + k) * n1 + dest * d1r;
+            out.extend_from_slice(as_byte_slice(&data[base..base + d1r]));
+        }
+    }
+    out
+}
+
+/// [`extract_t2_bytes`] without the wire serialization — see
+/// [`extract_t1_elems`].
+pub fn extract_t2_elems(data: &[Complex32], dims: &PencilDims, dest: usize) -> Vec<Complex32> {
+    let (d0, d1r, d2c, n1) = (dims.d0, dims.d1r, dims.d2c, dims.grid.n1);
+    assert_eq!(data.len(), d0 * d2c * n1, "stage-Y pencil shape mismatch");
+    assert!(dest < dims.proc.pr, "column-comm peer {dest} out of range");
+    let mut out = Vec::with_capacity(d0 * d2c * d1r);
+    for s in 0..d0 {
+        for k in 0..d2c {
+            let base = (s * d2c + k) * n1 + dest * d1r;
+            out.extend_from_slice(&data[base..base + d1r]);
+        }
+    }
+    out
+}
+
+/// Place a window of the round-2 chunk arriving from column-comm peer
+/// `src` into a stage-X pencil (`[d2c][d1r][n0]`): chunk element
+/// `(s, k, y)` (see [`extract_t2_bytes`]) lands at
+/// `out[k][y][src·d0 + s]`.
+pub fn place_t2_slice(
+    elems: &[Complex32],
+    elem_offset: usize,
+    dims: &PencilDims,
+    out: &mut [Complex32],
+    src: usize,
+) {
+    let (d0, d1r, d2c, n0) = (dims.d0, dims.d1r, dims.d2c, dims.grid.n0);
+    assert!(
+        elem_offset + elems.len() <= dims.t2_chunk_elems(),
+        "window [{elem_offset}, +{}) exceeds round-2 chunk",
+        elems.len()
+    );
+    assert_eq!(out.len(), d2c * d1r * n0, "stage-X pencil shape mismatch");
+    assert!(src < dims.proc.pr, "column-comm peer {src} out of range");
+    for (i, v) in elems.iter().enumerate() {
+        let e = elem_offset + i;
+        let s = e / (d2c * d1r);
+        let rem = e % (d2c * d1r);
+        let k = rem / d1r;
+        let y = rem % d1r;
+        out[(k * d1r + y) * n0 + src * d0 + s] = *v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::from_le_bytes;
+
+    fn dims(grid: Grid3, pr: usize, pc: usize) -> PencilDims {
+        PencilDims::new(grid, ProcGrid::new(pr, pc)).unwrap()
+    }
+
+    #[test]
+    fn parse_grid_and_proc() {
+        assert_eq!("12x8x24".parse::<Grid3>().unwrap(), Grid3::new(12, 8, 24));
+        assert_eq!("2x2".parse::<ProcGrid>().unwrap(), ProcGrid::new(2, 2));
+        assert!("12x8".parse::<Grid3>().is_err());
+        assert!("0x8x24".parse::<Grid3>().is_err());
+        assert!("2x2x2".parse::<ProcGrid>().is_err());
+        assert!("ax2".parse::<ProcGrid>().is_err());
+    }
+
+    #[test]
+    fn proc_grid_coords_roundtrip() {
+        let p = ProcGrid::new(3, 4);
+        for rank in 0..p.n() {
+            let (r, c) = p.coords(rank);
+            assert!(r < 3 && c < 4);
+            assert_eq!(p.rank_of(r, c), rank);
+        }
+    }
+
+    #[test]
+    fn non_divisible_dims_return_errors() {
+        // n0 % pr
+        let e = PencilDims::new(Grid3::new(10, 8, 24), ProcGrid::new(4, 1)).unwrap_err();
+        assert!(e.to_string().contains("n0"), "{e}");
+        // n1 % pc
+        let e = PencilDims::new(Grid3::new(12, 9, 24), ProcGrid::new(1, 4)).unwrap_err();
+        assert!(e.to_string().contains("n1"), "{e}");
+        // n2 % pc
+        let e = PencilDims::new(Grid3::new(12, 8, 25), ProcGrid::new(1, 4)).unwrap_err();
+        assert!(e.to_string().contains("n2"), "{e}");
+        // n1 % pr (the stage-X constraint)
+        let e = PencilDims::new(Grid3::new(12, 9, 24), ProcGrid::new(3, 1)).unwrap_err();
+        assert!(e.to_string().contains("Pr"), "{e}");
+        // The acceptance shapes all divide.
+        for (pr, pc) in [(1, 4), (2, 2), (4, 1)] {
+            assert!(PencilDims::new(Grid3::new(12, 8, 24), ProcGrid::new(pr, pc)).is_ok());
+        }
+    }
+
+    #[test]
+    fn pencils_tile_the_grid_exactly() {
+        // Property: the union of every rank's synthetic pencil covers the
+        // whole grid exactly once, bit-identically to the serial grid.
+        let grid = Grid3::new(12, 8, 6);
+        let whole = whole_grid(grid);
+        for (pr, pc) in [(1, 1), (1, 4), (2, 2), (4, 1), (2, 4)] {
+            let d = dims(grid, pr, pc);
+            let mut covered = vec![0usize; grid.elems()];
+            for rank in 0..d.proc.n() {
+                let (ri, ci) = d.proc.coords(rank);
+                let pencil = synthetic_pencil(&d, ri, ci);
+                assert_eq!(pencil.len(), d.local_elems());
+                for s in 0..d.d0 {
+                    let i0 = ri * d.d0 + s;
+                    for r in 0..d.d1c {
+                        let i1 = ci * d.d1c + r;
+                        for z in 0..grid.n2 {
+                            let g = (i0 * grid.n1 + i1) * grid.n2 + z;
+                            covered[g] += 1;
+                            assert_eq!(
+                                pencil[(s * d.d1c + r) * grid.n2 + z],
+                                whole[g],
+                                "{pr}x{pc} rank {rank} ({s},{r},{z})"
+                            );
+                        }
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "{pr}x{pc}: not an exact tiling");
+        }
+    }
+
+    /// Simulate one full transpose round serially: every rank extracts
+    /// its chunks, every destination places them.
+    fn simulate_t1(d: &PencilDims, pencils: &[Vec<Complex32>]) -> Vec<Vec<Complex32>> {
+        let pc = d.proc.pc;
+        let pr = d.proc.pr;
+        let mut ybufs: Vec<Vec<Complex32>> =
+            (0..pr * pc).map(|_| vec![Complex32::ZERO; d.d0 * d.d2c * d.grid.n1]).collect();
+        for ri in 0..pr {
+            for src in 0..pc {
+                for dest in 0..pc {
+                    let bytes = extract_t1_bytes(&pencils[d.proc.rank_of(ri, src)], d, dest);
+                    let elems = from_le_bytes(&bytes);
+                    place_t1_slice(&elems, 0, d, &mut ybufs[d.proc.rank_of(ri, dest)], src);
+                }
+            }
+        }
+        ybufs
+    }
+
+    #[test]
+    fn round_trip_transpose_is_identity() {
+        // z-pencils → y-pencils → back: the inverse of the round-1
+        // transpose is the same transpose on the axis-swapped grid
+        // (n1 ↔ n2), so one function pair exercises both directions.
+        let grid = Grid3::new(4, 6, 10);
+        for (pr, pc) in [(1, 2), (2, 1), (2, 2), (1, 1)] {
+            let d = dims(grid, pr, pc);
+            let pencils: Vec<Vec<Complex32>> = (0..d.proc.n())
+                .map(|rank| {
+                    let (ri, ci) = d.proc.coords(rank);
+                    synthetic_pencil(&d, ri, ci)
+                })
+                .collect();
+            let ybufs = simulate_t1(&d, &pencils);
+            // Inverse: same exchange on the swapped grid (y-rows become
+            // the "z" of the swapped view).
+            let swapped = dims(Grid3::new(grid.n0, grid.n2, grid.n1), pr, pc);
+            let back = simulate_t1(&swapped, &ybufs);
+            assert_eq!(back, pencils, "{pr}x{pc}: round trip must be the identity");
+        }
+    }
+
+    #[test]
+    fn round1_places_full_y_rows() {
+        // After round 1 every y-row of a stage-Y pencil holds the full
+        // global i1 range for its (i0, i2): check values against the
+        // whole grid.
+        let grid = Grid3::new(2, 6, 4);
+        let d = dims(grid, 1, 2);
+        let whole = whole_grid(grid);
+        let pencils: Vec<Vec<Complex32>> =
+            (0..2).map(|c| synthetic_pencil(&d, 0, c)).collect();
+        let ybufs = simulate_t1(&d, &pencils);
+        for (rank, ybuf) in ybufs.iter().enumerate() {
+            for s in 0..d.d0 {
+                for z in 0..d.d2c {
+                    let i2 = rank * d.d2c + z;
+                    for i1 in 0..grid.n1 {
+                        assert_eq!(
+                            ybuf[(s * d.d2c + z) * grid.n1 + i1],
+                            whole[(s * grid.n1 + i1) * grid.n2 + i2],
+                            "rank {rank} s={s} z={z} i1={i1}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_granular_placement_matches_whole_chunk() {
+        // Placing a round-1 chunk window by window at awkward cut points
+        // must equal the one-shot placement; same for round 2.
+        let grid = Grid3::new(4, 6, 10);
+        let d = dims(grid, 2, 2);
+        let pencil = synthetic_pencil(&d, 1, 0);
+        let chunk = from_le_bytes(&extract_t1_bytes(&pencil, &d, 1));
+        let mut whole = vec![Complex32::ZERO; d.d0 * d.d2c * grid.n1];
+        place_t1_slice(&chunk, 0, &d, &mut whole, 0);
+        for window in [1usize, 3, 7, 11, chunk.len()] {
+            let mut piecewise = vec![Complex32::ZERO; d.d0 * d.d2c * grid.n1];
+            let mut off = 0;
+            while off < chunk.len() {
+                let hi = (off + window).min(chunk.len());
+                place_t1_slice(&chunk[off..hi], off, &d, &mut piecewise, 0);
+                off = hi;
+            }
+            assert_eq!(piecewise, whole, "t1 window {window}");
+        }
+
+        // Round 2 on a synthetic stage-Y buffer.
+        let ybuf: Vec<Complex32> = (0..d.d0 * d.d2c * grid.n1)
+            .map(|i| Complex32::new(i as f32, -(i as f32)))
+            .collect();
+        let chunk2 = from_le_bytes(&extract_t2_bytes(&ybuf, &d, 0));
+        let mut whole2 = vec![Complex32::ZERO; d.d2c * d.d1r * grid.n0];
+        place_t2_slice(&chunk2, 0, &d, &mut whole2, 1);
+        for window in [1usize, 5, 8] {
+            let mut piecewise = vec![Complex32::ZERO; d.d2c * d.d1r * grid.n0];
+            let mut off = 0;
+            while off < chunk2.len() {
+                let hi = (off + window).min(chunk2.len());
+                place_t2_slice(&chunk2[off..hi], off, &d, &mut piecewise, 1);
+                off = hi;
+            }
+            assert_eq!(piecewise, whole2, "t2 window {window}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds round-1 chunk")]
+    fn t1_window_overflow_detected() {
+        let d = dims(Grid3::new(2, 2, 2), 1, 2);
+        let mut out = vec![Complex32::ZERO; d.d0 * d.d2c * d.grid.n1];
+        let too_many = vec![Complex32::ZERO; d.t1_chunk_elems() + 1];
+        place_t1_slice(&too_many, 0, &d, &mut out, 0);
+    }
+
+    #[test]
+    fn elems_extraction_matches_wire_bytes() {
+        // The own-rank fast path (elements) and the wire path (bytes)
+        // must produce the same chunk — the pencil pipeline's bitwise
+        // guarantee leans on this.
+        let grid = Grid3::new(4, 6, 10);
+        let d = dims(grid, 2, 2);
+        let pencil = synthetic_pencil(&d, 0, 1);
+        for dest in 0..d.proc.pc {
+            assert_eq!(
+                extract_t1_elems(&pencil, &d, dest),
+                from_le_bytes(&extract_t1_bytes(&pencil, &d, dest)),
+                "t1 dest {dest}"
+            );
+        }
+        let ybuf: Vec<Complex32> = (0..d.d0 * d.d2c * grid.n1)
+            .map(|i| Complex32::new(i as f32, 0.5 - i as f32))
+            .collect();
+        for dest in 0..d.proc.pr {
+            assert_eq!(
+                extract_t2_elems(&ybuf, &d, dest),
+                from_le_bytes(&extract_t2_bytes(&ybuf, &d, dest)),
+                "t2 dest {dest}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_elem_counts() {
+        let d = dims(Grid3::new(12, 8, 24), 2, 2);
+        assert_eq!(d.local_elems(), 12 * 8 * 24 / 4);
+        // Round 1 ships (1 - 1/Pc), round 2 (1 - 1/Pr) of the local data.
+        assert_eq!(d.t1_chunk_elems() * d.proc.pc, d.local_elems());
+        assert_eq!(d.t2_chunk_elems() * d.proc.pr, d.local_elems());
+    }
+}

@@ -36,9 +36,18 @@
 //! `StepTimings::overlap_us`).
 //!
 //! [`verify`] pins both against a serial reference on every port.
+//!
+//! Beyond the paper's 2-D slab benchmark, [`pencil`] generalizes the
+//! same collective patterns to a distributed **3-D FFT**: an
+//! `n0×n1×n2` grid on a `Pr×Pc` process grid ([`grid3`]), executed as
+//! FFT(z) → row-communicator transpose → FFT(y) → column-communicator
+//! transpose → FFT(x), with the row/column communicators built by
+//! [`crate::collectives::Communicator::split`].
 
 pub mod driver;
+pub mod grid3;
 pub mod partition;
+pub mod pencil;
 pub mod transpose;
 pub mod verify;
 
@@ -46,4 +55,6 @@ pub mod all_to_all_variant;
 pub mod scatter_variant;
 
 pub use driver::{ComputeEngine, DistFftConfig, DistFftReport, ExecutionMode, Variant};
+pub use grid3::{Grid3, PencilDims, ProcGrid};
 pub use partition::Slab;
+pub use pencil::{Pencil3Config, Pencil3Report, PencilTimings};

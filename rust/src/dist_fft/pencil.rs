@@ -1,0 +1,611 @@
+//! Distributed 3-D FFT over a pencil decomposition — the `dist_fft`
+//! subsystem the paper's 2-D slab benchmark generalizes to.
+//!
+//! The global `n0 × n1 × n2` grid lives on a `Pr × Pc` process grid of
+//! localities ([`Grid3`] / [`ProcGrid`]); each locality executes five
+//! phases:
+//!
+//! 1. **FFT(z)** over its z-pencils (rows of length `n2`),
+//! 2. **transpose 1**: all-to-all *within its row communicator* (the
+//!    `Pc` localities sharing its process-grid row) — z-pencils become
+//!    y-pencils,
+//! 3. **FFT(y)** (rows of length `n1`),
+//! 4. **transpose 2**: all-to-all *within its column communicator* (the
+//!    `Pr` localities sharing its process-grid column) — y-pencils
+//!    become x-pencils,
+//! 5. **FFT(x)** (rows of length `n0`).
+//!
+//! The result is the 3-D FFT in transposed distributed layout
+//! (`[i2][i1][i0]`, the 3-D analogue of `FFTW_MPI_TRANSPOSED_OUT`).
+//!
+//! The row/column communicators come from [`Communicator::split`] — the
+//! communicator-splitting capability this subsystem motivated — so both
+//! exchanges run the chunked known-size wire protocol on *disjoint tag
+//! spaces with their own send pools*, and arriving wire chunks are
+//! transpose-placed the moment they land
+//! ([`grid3::place_t1_slice`] / [`grid3::place_t2_slice`]).
+//!
+//! Both [`ExecutionMode`]s are supported: *blocking* settles each
+//! round's sends before the next FFT phase; *async* lets them keep
+//! draining through the sub-communicators' send pools underneath the
+//! following FFT phases (the futures engine of PR 3) and reports the
+//! hidden wall time as [`PencilTimings::overlap_us`]. Both modes perform
+//! identical arithmetic, so their results — like the results across
+//! parcelports — are bitwise identical.
+
+use super::driver::{ComputeEngine, ExecutionMode, RowFft};
+use super::grid3::{self, Grid3, PencilDims, ProcGrid};
+use super::scatter_variant::hidden_us;
+use super::verify::rel_error;
+use crate::collectives::{ChunkPolicy, Communicator};
+use crate::fft::complex::{from_le_bytes, Complex32};
+use crate::hpx::parcel::Payload;
+use crate::hpx::runtime::Cluster;
+use crate::parcelport::{NetModel, PortKind};
+use crate::task::TaskFuture;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Full configuration of one distributed 3-D pencil FFT execution.
+#[derive(Clone, Debug)]
+pub struct Pencil3Config {
+    /// Global grid extents (`--grid3`). Constraints: `Pr | n0`,
+    /// `Pr | n1`, `Pc | n1`, `Pc | n2`.
+    pub grid: Grid3,
+    /// Process grid (`--proc-grid`); `pr·pc` localities are used.
+    pub proc: ProcGrid,
+    /// Parcelport backend.
+    pub port: PortKind,
+    /// Wire-chunking policy for both transpose rounds (inherited by the
+    /// row/column sub-communicators at split time).
+    pub chunk: ChunkPolicy,
+    /// Lock-step rounds vs the future-chained task graph (`--exec`).
+    pub exec: ExecutionMode,
+    /// Worker threads per locality for the row-FFT phases.
+    pub threads_per_locality: usize,
+    /// Optional hybrid wire model.
+    pub net: Option<NetModel>,
+    /// Row-FFT compute engine.
+    pub engine: ComputeEngine,
+    /// Compare the distributed result against the serial reference.
+    pub verify: bool,
+}
+
+impl Default for Pencil3Config {
+    fn default() -> Self {
+        Self {
+            grid: Grid3::new(32, 32, 32),
+            proc: ProcGrid::new(2, 2),
+            port: PortKind::Lci,
+            chunk: ChunkPolicy::default(),
+            exec: ExecutionMode::Blocking,
+            threads_per_locality: 2,
+            net: None,
+            engine: ComputeEngine::Native,
+            verify: true,
+        }
+    }
+}
+
+/// Per-phase wall-clock timings (µs) for one locality.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PencilTimings {
+    /// Phase-1 z-row FFTs (length `n2`).
+    pub fft_z_us: f64,
+    /// Wall time of the round-1 (row-communicator) exchange. Blocking:
+    /// includes settling this rank's sends. Async: closes when receives
+    /// are in *and* the round's sends have drained (which may be after
+    /// later phases — that is the overlap).
+    pub t1_comm_us: f64,
+    /// Time spent transpose-placing round-1 chunks (overlapped inside
+    /// `t1_comm_us`).
+    pub t1_place_us: f64,
+    /// Phase-3 y-row FFTs (length `n1`).
+    pub fft_y_us: f64,
+    /// Wall time of the round-2 (column-communicator) exchange.
+    pub t2_comm_us: f64,
+    /// Time spent transpose-placing round-2 chunks.
+    pub t2_place_us: f64,
+    /// Phase-5 x-row FFTs (length `n0`).
+    pub fft_x_us: f64,
+    /// Compute wall time that executed while collective traffic was
+    /// still in flight (on-arrival placements plus the slices of the
+    /// y/x FFT phases that ran before the preceding round's sends
+    /// drained). Always 0 in blocking mode.
+    pub overlap_us: f64,
+    /// End-to-end wall time of the five phases.
+    pub total_us: f64,
+}
+
+impl PencilTimings {
+    /// Element-wise max across localities — the critical path.
+    pub fn max(timings: &[PencilTimings]) -> PencilTimings {
+        let mut out = PencilTimings::default();
+        for t in timings {
+            out.fft_z_us = out.fft_z_us.max(t.fft_z_us);
+            out.t1_comm_us = out.t1_comm_us.max(t.t1_comm_us);
+            out.t1_place_us = out.t1_place_us.max(t.t1_place_us);
+            out.fft_y_us = out.fft_y_us.max(t.fft_y_us);
+            out.t2_comm_us = out.t2_comm_us.max(t.t2_comm_us);
+            out.t2_place_us = out.t2_place_us.max(t.t2_place_us);
+            out.fft_x_us = out.fft_x_us.max(t.fft_x_us);
+            out.overlap_us = out.overlap_us.max(t.overlap_us);
+            out.total_us = out.total_us.max(t.total_us);
+        }
+        out
+    }
+}
+
+/// Execution report of one 3-D pencil FFT.
+#[derive(Clone, Debug)]
+pub struct Pencil3Report {
+    /// One-line description of the executed configuration.
+    pub config_summary: String,
+    /// Per-locality phase timings, rank order.
+    pub per_rank: Vec<PencilTimings>,
+    /// Element-wise max across localities.
+    pub critical_path: PencilTimings,
+    /// Relative L2 error vs. the serial reference (if verified).
+    pub rel_error: Option<f64>,
+    /// Traffic accounted by the parcelport during the run.
+    pub stats: crate::parcelport::PortStatsSnapshot,
+}
+
+/// Outcome of one transpose round's exchange (sends may still be
+/// outstanding in async mode).
+struct RoundOutcome {
+    /// Instant the first byte could have entered the wire.
+    open: Instant,
+    /// Instant the last expected wire chunk was placed.
+    recv_done: Instant,
+    /// Total on-arrival placement time, µs.
+    place_us: f64,
+    /// The slice of `place_us` performed inside the open comm window —
+    /// every on-arrival placement (receives from other peers are still
+    /// outstanding while it runs), plus the own-block placement whenever
+    /// wire chunks were actually posted. Counted into
+    /// [`PencilTimings::overlap_us`] in async mode.
+    in_flight_us: f64,
+    /// Outstanding send-completion futures.
+    sends: Vec<TaskFuture<()>>,
+}
+
+/// One transpose round over `comm`: post this rank's per-peer chunks as
+/// known-size pipelined wire chunks through the communicator's send
+/// pool, then place every arriving wire chunk (own chunk included, first)
+/// as soon as it lands. `extract` produces a peer's wire-format chunk;
+/// `extract_own` produces this rank's own block as elements — it never
+/// touches the fabric, so it skips the wire byte round-trip. Never
+/// settles the sends — the caller decides whether to block on them
+/// (blocking mode) or let them drain under the next FFT phase (async
+/// mode). Each send completion stamps `last_send_done`.
+fn exchange_round(
+    comm: &Communicator,
+    chunk_elems: usize,
+    mut extract: impl FnMut(usize) -> Vec<u8>,
+    extract_own: impl FnOnce(usize) -> Vec<Complex32>,
+    mut place: impl FnMut(usize, usize, &[Complex32]),
+    last_send_done: &Arc<Mutex<Option<Instant>>>,
+) -> RoundOutcome {
+    const ELEM: usize = std::mem::size_of::<Complex32>();
+    let n = comm.size();
+    let me = comm.rank();
+    let policy = comm.chunk_policy();
+    let tags = comm.scatter_chunk_tags(n);
+    let wire_chunks = policy.n_chunks(chunk_elems * ELEM);
+
+    let open = Instant::now();
+    let mut sends = Vec::new();
+    for dst in 0..n {
+        if dst == me {
+            continue;
+        }
+        for f in comm.send_chunked_sized(dst, tags[me], Payload::new(extract(dst))) {
+            let stamp = Arc::clone(last_send_done);
+            f.then_inline(move |_| {
+                *stamp.lock().unwrap() = Some(Instant::now());
+            });
+            sends.push(f);
+        }
+    }
+
+    let mut place_us = 0.0f64;
+    let mut in_flight_us = 0.0f64;
+    // Own chunk is "received" immediately — place it first (free overlap
+    // while the posted wire chunks fly).
+    {
+        let tt = Instant::now();
+        let own = extract_own(me);
+        place(me, 0, &own);
+        let us = tt.elapsed().as_secs_f64() * 1e6;
+        place_us += us;
+        if n > 1 {
+            in_flight_us += us;
+        }
+    }
+
+    // Poll the peers; place whichever wire chunk lands first, consuming
+    // each peer's chunks in offset order.
+    let mut pending: Vec<(usize, usize)> = // (peer, next wire-chunk index)
+        (0..n).filter(|&r| r != me).map(|peer| (peer, 0)).collect();
+    while !pending.is_empty() {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < pending.len() {
+            let (peer, next_chunk) = &mut pending[i];
+            while *next_chunk < wire_chunks {
+                let Some(payload) = comm.try_recv_chunk(*peer, tags[*peer], *next_chunk)
+                else {
+                    break;
+                };
+                let tt = Instant::now();
+                let elems = from_le_bytes(payload.as_bytes());
+                place(*peer, *next_chunk * policy.chunk_bytes / ELEM, &elems);
+                let us = tt.elapsed().as_secs_f64() * 1e6;
+                place_us += us;
+                in_flight_us += us;
+                *next_chunk += 1;
+                progressed = true;
+            }
+            if *next_chunk >= wire_chunks {
+                pending.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        if !progressed {
+            std::hint::spin_loop();
+            std::thread::yield_now();
+        }
+    }
+
+    RoundOutcome { open, recv_done: Instant::now(), place_us, in_flight_us, sends }
+}
+
+/// Settle outstanding sends and return the stamped completion instant
+/// (falling back to `fallback` when there were none).
+fn settle_sends(
+    sends: Vec<TaskFuture<()>>,
+    last_send_done: &Arc<Mutex<Option<Instant>>>,
+    fallback: Instant,
+) -> Instant {
+    for f in sends {
+        f.get();
+    }
+    last_send_done.lock().unwrap().take().unwrap_or(fallback)
+}
+
+/// The per-locality five-phase pencil pipeline.
+fn run_locality(
+    ctx: &crate::hpx::runtime::LocalityCtx,
+    dims: &PencilDims,
+    config: &Pencil3Config,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, PencilTimings) {
+    const ELEM: usize = std::mem::size_of::<Complex32>();
+    let nthreads = config.threads_per_locality;
+    let world = Communicator::from_ctx(ctx);
+    // Typed payloads: wire chunks must never split a complex element.
+    world.set_chunk_policy(config.chunk.aligned(ELEM));
+    let (row_idx, col_idx) = dims.proc.coords(ctx.rank);
+    // Row communicator: the Pc localities of my process-grid row,
+    // ordered by column. Column communicator: the Pr localities of my
+    // column, ordered by row. Disjoint tag spaces + own send pools.
+    let row_comm = world.split(row_idx as u64, col_idx as u64);
+    let col_comm = world.split(col_idx as u64, row_idx as u64);
+    row_comm.warm_chunk_pool();
+    col_comm.warm_chunk_pool();
+
+    let async_mode = config.exec == ExecutionMode::Async;
+    let mut t = PencilTimings::default();
+    // Input generation happens outside the timed window, like the 2-D
+    // variants (whose slabs are synthesized before their `run`).
+    let mut zbuf = grid3::synthetic_pencil(dims, row_idx, col_idx);
+    let t_start = Instant::now();
+
+    // Phase 1: FFT(z).
+    let t0 = Instant::now();
+    engine.fft_rows(&mut zbuf, dims.grid.n2, nthreads);
+    t.fft_z_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // Phase 2: transpose 1 over the row communicator.
+    let mut ybuf = vec![Complex32::ZERO; dims.d0 * dims.d2c * dims.grid.n1];
+    let last1: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+    let mut o1 = exchange_round(
+        &row_comm,
+        dims.t1_chunk_elems(),
+        |dest| grid3::extract_t1_bytes(&zbuf, dims, dest),
+        |me| grid3::extract_t1_elems(&zbuf, dims, me),
+        |src, off, elems| grid3::place_t1_slice(elems, off, dims, &mut ybuf, src),
+        &last1,
+    );
+    t.t1_place_us = o1.place_us;
+    drop(zbuf);
+    if async_mode {
+        t.overlap_us += o1.in_flight_us; // settled after the last phase
+    } else {
+        let done = settle_sends(std::mem::take(&mut o1.sends), &last1, o1.recv_done);
+        t.t1_comm_us =
+            o1.recv_done.max(done).duration_since(o1.open).as_secs_f64() * 1e6;
+    }
+
+    // Phase 3: FFT(y) — in async mode round-1 sends keep draining
+    // underneath this.
+    let ty0 = Instant::now();
+    engine.fft_rows(&mut ybuf, dims.grid.n1, nthreads);
+    let ty1 = Instant::now();
+    t.fft_y_us = ty1.duration_since(ty0).as_secs_f64() * 1e6;
+
+    // Phase 4: transpose 2 over the column communicator.
+    let mut xbuf = vec![Complex32::ZERO; dims.d2c * dims.d1r * dims.grid.n0];
+    let last2: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+    let mut o2 = exchange_round(
+        &col_comm,
+        dims.t2_chunk_elems(),
+        |dest| grid3::extract_t2_bytes(&ybuf, dims, dest),
+        |me| grid3::extract_t2_elems(&ybuf, dims, me),
+        |src, off, elems| grid3::place_t2_slice(elems, off, dims, &mut xbuf, src),
+        &last2,
+    );
+    t.t2_place_us = o2.place_us;
+    drop(ybuf);
+    if async_mode {
+        t.overlap_us += o2.in_flight_us;
+    } else {
+        let done = settle_sends(std::mem::take(&mut o2.sends), &last2, o2.recv_done);
+        t.t2_comm_us =
+            o2.recv_done.max(done).duration_since(o2.open).as_secs_f64() * 1e6;
+    }
+
+    // Phase 5: FFT(x) — in async mode both rounds' send tails may still
+    // be draining here.
+    let tx0 = Instant::now();
+    engine.fft_rows(&mut xbuf, dims.grid.n0, nthreads);
+    let tx1 = Instant::now();
+    t.fft_x_us = tx1.duration_since(tx0).as_secs_f64() * 1e6;
+
+    if async_mode {
+        // Settle both rounds only now; the send tails were hidden behind
+        // the y/x FFT phases.
+        let s1 = settle_sends(std::mem::take(&mut o1.sends), &last1, o1.recv_done);
+        let s2 = settle_sends(std::mem::take(&mut o2.sends), &last2, o2.recv_done);
+        t.t1_comm_us = o1.recv_done.max(s1).duration_since(o1.open).as_secs_f64() * 1e6;
+        t.t2_comm_us = o2.recv_done.max(s2).duration_since(o2.open).as_secs_f64() * 1e6;
+        // Round-2 traffic is not posted yet while FFT(y) runs, so its
+        // hidden window is judged against round 1's drain only; FFT(x)
+        // can hide behind either round's tail.
+        t.overlap_us += hidden_us(ty0, ty1, s1);
+        t.overlap_us += hidden_us(tx0, tx1, s1.max(s2));
+    }
+    t.total_us = t_start.elapsed().as_secs_f64() * 1e6;
+    (xbuf, t)
+}
+
+/// Run one distributed 3-D pencil FFT end to end on a fresh cluster.
+pub fn run(config: &Pencil3Config) -> anyhow::Result<Pencil3Report> {
+    let cluster = Cluster::new(config.proc.n(), config.port, config.net)?;
+    run_on(&cluster, config)
+}
+
+/// Run on an existing cluster (benchmarks reuse fabrics across reps).
+pub fn run_on(cluster: &Cluster, config: &Pencil3Config) -> anyhow::Result<Pencil3Report> {
+    Ok(run_on_collect(cluster, config)?.0)
+}
+
+/// [`run_on`], additionally returning each rank's stage-X pencil —
+/// tests use the raw pieces for bitwise-stability checks across ports
+/// and execution modes.
+pub fn run_on_collect(
+    cluster: &Cluster,
+    config: &Pencil3Config,
+) -> anyhow::Result<(Pencil3Report, Vec<Vec<Complex32>>)> {
+    let dims = PencilDims::new(config.grid, config.proc)?;
+    anyhow::ensure!(
+        cluster.n_localities() == config.proc.n(),
+        "cluster size mismatch: {} vs {} ({} process grid)",
+        cluster.n_localities(),
+        config.proc.n(),
+        config.proc
+    );
+    let engine = config.engine.build()?;
+    let before = cluster.fabric().stats();
+
+    let results: Vec<(Vec<Complex32>, PencilTimings)> =
+        cluster.run(|ctx| run_locality(ctx, &dims, config, engine.as_ref()));
+
+    let stats = cluster.fabric().stats().since(&before);
+    let per_rank: Vec<PencilTimings> = results.iter().map(|(_, t)| *t).collect();
+    let critical_path = PencilTimings::max(&per_rank);
+    let pieces: Vec<Vec<Complex32>> = results.into_iter().map(|(p, _)| p).collect();
+
+    let rel_err = if config.verify {
+        let mut assembled = Vec::with_capacity(config.grid.elems());
+        for piece in &pieces {
+            assembled.extend_from_slice(piece);
+        }
+        let reference = super::verify::serial_fft3_transposed(
+            &grid3::whole_grid(config.grid),
+            config.grid,
+        );
+        let expected = distribute_transposed(&reference, &dims);
+        Some(rel_error(&assembled, &expected))
+    } else {
+        None
+    };
+
+    let report = Pencil3Report {
+        config_summary: format!(
+            "{} grid, {} process grid, {} port, {} exec, {} engine",
+            config.grid,
+            config.proc,
+            config.port,
+            config.exec.name(),
+            engine.name(),
+        ),
+        per_rank,
+        critical_path,
+        rel_error: rel_err,
+        stats,
+    };
+    Ok((report, pieces))
+}
+
+/// Reorder a global transposed-layout reference (`[i2][i1][i0]`) into
+/// the concatenation of per-rank stage-X pencils, rank order — the shape
+/// a distributed run assembles into.
+pub fn distribute_transposed(reference: &[Complex32], dims: &PencilDims) -> Vec<Complex32> {
+    let grid = dims.grid;
+    assert_eq!(reference.len(), grid.elems(), "reference shape mismatch");
+    let mut out = Vec::with_capacity(grid.elems());
+    for rank in 0..dims.proc.n() {
+        let (ri, ci) = dims.proc.coords(rank);
+        for s in 0..dims.d2c {
+            let i2 = ci * dims.d2c + s;
+            for r in 0..dims.d1r {
+                let i1 = ri * dims.d1r + r;
+                let base = (i2 * grid.n1 + i1) * grid.n0;
+                out.extend_from_slice(&reference[base..base + grid.n0]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acceptance_config(pr: usize, pc: usize) -> Pencil3Config {
+        Pencil3Config {
+            grid: Grid3::new(12, 8, 24),
+            proc: ProcGrid::new(pr, pc),
+            threads_per_locality: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn default_config_runs_and_verifies() {
+        let report = run(&Pencil3Config {
+            grid: Grid3::new(16, 16, 16),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4, "{:?}", report.rel_error);
+        assert_eq!(report.per_rank.len(), 4);
+        assert!(report.critical_path.total_us > 0.0);
+        assert!(report.stats.msgs_sent > 0);
+    }
+
+    #[test]
+    fn all_proc_shapes_verify_non_pow2() {
+        for (pr, pc) in [(1, 4), (2, 2), (4, 1)] {
+            let report = run(&acceptance_config(pr, pc)).unwrap();
+            assert!(
+                report.rel_error.unwrap() < 1e-4,
+                "{pr}x{pc}: {:?}",
+                report.rel_error
+            );
+        }
+    }
+
+    #[test]
+    fn async_mode_verifies_and_matches_blocking_bitwise() {
+        for (pr, pc) in [(2, 2), (4, 1)] {
+            let run_mode = |exec: ExecutionMode| {
+                let cfg = Pencil3Config {
+                    exec,
+                    chunk: ChunkPolicy::new(256, 2),
+                    ..acceptance_config(pr, pc)
+                };
+                let cluster = Cluster::new(cfg.proc.n(), cfg.port, cfg.net).unwrap();
+                let dims = PencilDims::new(cfg.grid, cfg.proc).unwrap();
+                let engine = cfg.engine.build().unwrap();
+                cluster.run(|ctx| run_locality(ctx, &dims, &cfg, engine.as_ref()).0)
+            };
+            assert_eq!(
+                run_mode(ExecutionMode::Blocking),
+                run_mode(ExecutionMode::Async),
+                "{pr}x{pc}: async must match blocking to the bit"
+            );
+        }
+    }
+
+    #[test]
+    fn single_locality_degenerate() {
+        let report = run(&Pencil3Config {
+            grid: Grid3::new(8, 8, 8),
+            proc: ProcGrid::new(1, 1),
+            threads_per_locality: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4);
+        assert_eq!(report.stats.msgs_sent, 0, "1×1 moves nothing over the fabric");
+    }
+
+    #[test]
+    fn tiny_wire_chunks_verify() {
+        // Chunk size smaller than one extracted row: every transfer
+        // splits into many mid-row windows on both rounds.
+        let report = run(&Pencil3Config {
+            chunk: ChunkPolicy::new(40, 2),
+            ..acceptance_config(2, 2)
+        })
+        .unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4, "{:?}", report.rel_error);
+    }
+
+    #[test]
+    fn indivisible_grid_rejected_with_error() {
+        let err = run(&Pencil3Config {
+            grid: Grid3::new(10, 8, 24),
+            proc: ProcGrid::new(4, 1),
+            ..Default::default()
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("not divisible"), "{err}");
+    }
+
+    #[test]
+    fn async_reports_overlap_under_net_model() {
+        let report = run(&Pencil3Config {
+            grid: Grid3::new(32, 32, 32),
+            exec: ExecutionMode::Async,
+            chunk: ChunkPolicy::new(2048, 4),
+            net: Some(NetModel::infiniband_hdr()),
+            threads_per_locality: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4);
+        assert!(
+            report.critical_path.overlap_us > 0.0,
+            "async pencil run hid no wall time: {:?}",
+            report.critical_path
+        );
+    }
+
+    #[test]
+    fn timings_populated_and_places_inside_comm() {
+        let report = run(&acceptance_config(2, 2)).unwrap();
+        for t in &report.per_rank {
+            assert!(t.fft_z_us > 0.0 && t.fft_y_us > 0.0 && t.fft_x_us > 0.0);
+            assert!(t.t1_comm_us >= t.t1_place_us, "{t:?}");
+            assert!(t.t2_comm_us >= t.t2_place_us, "{t:?}");
+            assert_eq!(t.overlap_us, 0.0, "blocking mode hides nothing");
+        }
+    }
+
+    #[test]
+    fn transposed_distribution_covers_reference_once() {
+        let dims = PencilDims::new(Grid3::new(4, 4, 4), ProcGrid::new(2, 2)).unwrap();
+        let reference: Vec<Complex32> =
+            (0..64).map(|i| Complex32::new(i as f32, 0.0)).collect();
+        let mut redistributed = distribute_transposed(&reference, &dims);
+        redistributed.sort_by(|a, b| a.re.partial_cmp(&b.re).unwrap());
+        let sorted: Vec<f32> = redistributed.iter().map(|c| c.re).collect();
+        assert_eq!(sorted, (0..64).map(|i| i as f32).collect::<Vec<_>>());
+    }
+}

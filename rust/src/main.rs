@@ -16,11 +16,13 @@
 
 use anyhow::{bail, Result};
 use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
-use hpx_fft::bench_harness::{fig3, fig45, runner::measure};
+use hpx_fft::bench_harness::{fig3, fig45, fig6, runner::measure};
 use hpx_fft::cli::Args;
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use hpx_fft::config::{BenchConfig, ClusterSpec};
 use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
+use hpx_fft::dist_fft::grid3::{Grid3, ProcGrid};
+use hpx_fft::dist_fft::pencil::{self, Pencil3Config};
 use hpx_fft::hpx::parcel::Payload;
 use hpx_fft::hpx::runtime::Cluster;
 use hpx_fft::parcelport::{NetModel, PortKind};
@@ -40,6 +42,12 @@ USAGE:
              planner is mixed-radix, e.g. --rows 12 --cols 96;
              --exec async runs the future-chained task graph and reports
              the comm/compute overlap window)
+  repro fft3 [--grid3 N0xN1xN2] [--proc-grid PRxPC] [--port tcp|mpi|lci]
+             [--exec blocking|async] [--chunk-bytes N] [--inflight N]
+             [--threads N] [--net] [--no-verify]
+            (3-D pencil-decomposition FFT on a PrxPc process grid:
+             FFT(z) → row-comm transpose → FFT(y) → column-comm
+             transpose → FFT(x); constraints Pr|n0, Pr|n1, Pc|n1, Pc|n2)
   repro baseline [--rows N] [--cols N] [--nodes N] [--threads N] [--net]
   repro bench chunk-size      [--quick] [--reps N] [--out DIR]
                               [--chunk-bytes N] [--inflight N]
@@ -47,6 +55,10 @@ USAGE:
   repro bench strong-scaling  --variant all-to-all|scatter
                               [--quick] [--reps N] [--grid N] [--out DIR]
                               [--exec blocking|async]
+  repro bench fig6            [--quick] [--reps N] [--grid3 N0xN1xN2]
+                              [--shapes 1x4,2x2,4x1] [--threads N]
+                              [--out DIR] [--chunk-bytes N] [--inflight N]
+                              (sweeps every shape × port × exec mode)
   repro bench collectives     [--nodes N] [--bytes N] [--reps N]
                               [--chunk-bytes N] [--inflight N]
   repro simulate [--grid N] [--port tcp|mpi|lci]
@@ -71,10 +83,12 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         }
         Some("info") => cmd_info(),
         Some("fft") => cmd_fft(&args),
+        Some("fft3") => cmd_fft3(&args),
         Some("baseline") => cmd_baseline(&args),
         Some("bench") => match args.positional.get(1).map(|s| s.as_str()) {
             Some("chunk-size") => cmd_bench_chunk(&args),
             Some("strong-scaling") => cmd_bench_scaling(&args),
+            Some("fig6") | Some("pencil") => cmd_bench_fig6(&args),
             Some("collectives") => cmd_bench_collectives(&args),
             other => bail!("unknown bench target {other:?}; see `repro help`"),
         },
@@ -192,6 +206,59 @@ fn cmd_fft(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fft3(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "grid3", "proc-grid", "port", "exec", "chunk-bytes", "inflight", "threads", "net",
+        "no-verify",
+    ])?;
+    let config = Pencil3Config {
+        grid: args.get_or("grid3", Grid3::new(32, 32, 32))?,
+        proc: args.get_or("proc-grid", ProcGrid::new(2, 2))?,
+        port: args.get_or("port", PortKind::Lci)?,
+        chunk: parse_chunk_policy(args)?,
+        exec: args.get_or("exec", ExecutionMode::Blocking)?,
+        threads_per_locality: args.get_or("threads", 2usize)?,
+        net: args.get_bool("net").then(NetModel::infiniband_hdr),
+        engine: ComputeEngine::Native,
+        verify: !args.get_bool("no-verify"),
+    };
+    let report = pencil::run(&config)?;
+    println!("{}", report.config_summary);
+    let cp = report.critical_path;
+    println!(
+        "critical path: total {:.2} ms  (fftz {:.2} | t1 {:.2} (place {:.2}) | \
+         ffty {:.2} | t2 {:.2} (place {:.2}) | fftx {:.2})",
+        cp.total_us / 1e3,
+        cp.fft_z_us / 1e3,
+        cp.t1_comm_us / 1e3,
+        cp.t1_place_us / 1e3,
+        cp.fft_y_us / 1e3,
+        cp.t2_comm_us / 1e3,
+        cp.t2_place_us / 1e3,
+        cp.fft_x_us / 1e3
+    );
+    if config.exec == ExecutionMode::Async {
+        println!(
+            "overlap: {} of compute ran while transpose traffic was in flight",
+            hpx_fft::metrics::table::fmt_us(cp.overlap_us)
+        );
+    }
+    println!(
+        "traffic: {} msgs, {} bytes, {} copies ({} B copied), {} rendezvous",
+        report.stats.msgs_sent,
+        report.stats.bytes_sent,
+        report.stats.payload_copies,
+        report.stats.bytes_copied,
+        report.stats.rendezvous_handshakes
+    );
+    match report.rel_error {
+        Some(err) if err < 1e-3 => println!("verification: OK (rel L2 err {err:.2e})"),
+        Some(err) => bail!("verification FAILED: rel L2 err {err:.2e}"),
+        None => println!("verification: skipped"),
+    }
+    Ok(())
+}
+
 fn cmd_baseline(args: &Args) -> Result<()> {
     args.check_known(&["rows", "cols", "nodes", "threads", "net", "no-verify"])?;
     let config = FftwLikeConfig {
@@ -278,6 +345,32 @@ fn cmd_bench_scaling(args: &Args) -> Result<()> {
     );
     let points = fig45::run(&cfg, variant)?;
     print!("{}", fig45::report(&points, variant, &cfg, &cfg.out_dir)?);
+    Ok(())
+}
+
+fn cmd_bench_fig6(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "quick", "reps", "grid3", "shapes", "threads", "out", "config", "chunk-bytes",
+        "inflight",
+    ])?;
+    let mut cfg = bench_config(args)?;
+    cfg.grid3 = args.get_or("grid3", cfg.grid3)?;
+    if let Some(s) = args.get("shapes") {
+        cfg.proc_shapes = s
+            .split(',')
+            .map(|t| t.trim().parse::<ProcGrid>().map_err(anyhow::Error::msg))
+            .collect::<Result<_>>()?;
+    }
+    let shapes: Vec<String> = cfg.proc_shapes.iter().map(|p| p.to_string()).collect();
+    println!(
+        "fig6 sweep: {} grid, shapes [{}], {} reps/point, all ports, blocking + async\n",
+        cfg.grid3,
+        shapes.join(", "),
+        cfg.reps
+    );
+    let points = fig6::run(&cfg)?;
+    print!("{}", fig6::report(&points, &cfg, &cfg.out_dir)?);
+    println!("CSV written to {}/fig6_pencil.csv", cfg.out_dir);
     Ok(())
 }
 

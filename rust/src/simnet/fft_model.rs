@@ -9,6 +9,7 @@
 use super::compute::ComputeModel;
 use super::sim::{Schedule, SimNet, SimReport};
 use crate::collectives::AllToAllAlgo;
+use crate::dist_fft::grid3::{Grid3, PencilDims, ProcGrid};
 use crate::parcelport::{NetModel, PortKind};
 
 /// Problem + platform for one prediction.
@@ -193,6 +194,85 @@ fn scatter_schedules(params: &FftModelParams) -> Vec<Schedule> {
     schedules
 }
 
+/// Problem + platform for one 3-D pencil prediction (the fig6 model).
+#[derive(Clone, Copy, Debug)]
+pub struct Pencil3ModelParams {
+    /// Global 3-D grid extents.
+    pub grid: Grid3,
+    /// Process grid (`pr × pc` nodes).
+    pub proc: ProcGrid,
+    /// Per-node compute-rate model.
+    pub compute: ComputeModel,
+    /// Wire model.
+    pub net: NetModel,
+}
+
+impl Pencil3ModelParams {
+    /// The paper-scale 3-D problem: a 512³ cube on the buran model.
+    pub fn paper(proc: ProcGrid) -> Self {
+        Self {
+            grid: Grid3::new(1 << 9, 1 << 9, 1 << 9),
+            proc,
+            compute: ComputeModel::buran(),
+            net: NetModel::infiniband_hdr(),
+        }
+    }
+}
+
+/// Predict one 3-D pencil run: the five phases of
+/// [`crate::dist_fft::pencil`], with each transpose round as a pairwise
+/// exchange *within its sub-communicator group* — row groups first,
+/// column groups second — so the DES charges exactly the
+/// sub-communicator-scoped traffic the live pipeline generates.
+///
+/// # Panics
+/// If the grid does not divide over the process grid (callers validate
+/// via [`PencilDims::new`] first).
+pub fn predict_pencil3(params: &Pencil3ModelParams, port: PortKind) -> SimReport {
+    let dims = PencilDims::new(params.grid, params.proc).expect("divisible pencil dims");
+    let (pr, pc) = (params.proc.pr, params.proc.pc);
+    let n = params.proc.n();
+    let t1_chunk = (dims.t1_chunk_elems() * 8) as u64;
+    let t2_chunk = (dims.t2_chunk_elems() * 8) as u64;
+    let local_bytes = (dims.local_elems() * 8) as u64;
+    // Unique (src, dst, round) tags; the two rounds use disjoint bases.
+    let tag1 = |src: usize, dst: usize, k: usize| (10_000_000 + (k * n + src) * n + dst) as u64;
+    let tag2 = |src: usize, dst: usize, k: usize| (20_000_000 + (k * n + src) * n + dst) as u64;
+
+    let mut schedules: Vec<Schedule> = (0..n).map(|_| Schedule::default()).collect();
+    for (me, sched) in schedules.iter_mut().enumerate() {
+        let (ri, ci) = params.proc.coords(me);
+        // Phase 1: FFT(z) sweep + wire packing.
+        sched.compute(params.compute.fft_rows_us(dims.d0 * dims.d1c, params.grid.n2), "fft-z");
+        sched.compute(params.compute.transpose_us(local_bytes), "pack-1");
+        // Round 1: ring-pairwise within the row group (Pc peers); own
+        // chunk transposes while the first sends fly.
+        sched.compute(params.compute.transpose_us(t1_chunk), "transpose-own-1");
+        for k in 1..pc {
+            let peer = params.proc.rank_of(ri, (ci + k) % pc);
+            let from = params.proc.rank_of(ri, (ci + pc - k) % pc);
+            sched.send(peer, t1_chunk, tag1(me, peer, k));
+            sched.recv(from, tag1(from, me, k));
+            sched.compute(params.compute.transpose_us(t1_chunk), "transpose-1");
+        }
+        // Phase 3: FFT(y) + packing.
+        sched.compute(params.compute.fft_rows_us(dims.d0 * dims.d2c, params.grid.n1), "fft-y");
+        sched.compute(params.compute.transpose_us(local_bytes), "pack-2");
+        // Round 2: ring-pairwise within the column group (Pr peers).
+        sched.compute(params.compute.transpose_us(t2_chunk), "transpose-own-2");
+        for k in 1..pr {
+            let peer = params.proc.rank_of((ri + k) % pr, ci);
+            let from = params.proc.rank_of((ri + pr - k) % pr, ci);
+            sched.send(peer, t2_chunk, tag2(me, peer, k));
+            sched.recv(from, tag2(from, me, k));
+            sched.compute(params.compute.transpose_us(t2_chunk), "transpose-2");
+        }
+        // Phase 5: FFT(x).
+        sched.compute(params.compute.fft_rows_us(dims.d2c * dims.d1r, params.grid.n0), "fft-x");
+    }
+    SimNet::new(params.net, port.cost_model()).run(&schedules)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,5 +367,44 @@ mod tests {
         let r = predict_fft(&p, PortKind::Lci, ModelVariant::Scatter);
         assert_eq!(r.wire_bytes, 0);
         assert!(r.makespan_us > 0.0);
+    }
+
+    #[test]
+    fn pencil3_completes_all_shapes_and_ports() {
+        for (pr, pc) in [(1, 4), (2, 2), (4, 1), (1, 1)] {
+            let p = Pencil3ModelParams::paper(ProcGrid::new(pr, pc));
+            for port in PortKind::ALL {
+                let r = predict_pencil3(&p, port);
+                assert!(r.makespan_us > 0.0 && r.makespan_us.is_finite(), "{port} {pr}x{pc}");
+            }
+        }
+    }
+
+    #[test]
+    fn pencil3_wire_volume_matches_formula() {
+        // Round 1 ships (Pc−1) chunks per node, round 2 (Pr−1): total
+        // wire traffic is exactly the two-transpose volume.
+        let p = Pencil3ModelParams::paper(ProcGrid::new(2, 2));
+        let dims = PencilDims::new(p.grid, p.proc).unwrap();
+        let r = predict_pencil3(&p, PortKind::Lci);
+        let expect = (p.proc.n()
+            * ((p.proc.pc - 1) * dims.t1_chunk_elems() * 8
+                + (p.proc.pr - 1) * dims.t2_chunk_elems() * 8)) as u64;
+        assert_eq!(r.wire_bytes, expect);
+    }
+
+    #[test]
+    fn pencil3_single_node_no_wire() {
+        let p = Pencil3ModelParams::paper(ProcGrid::new(1, 1));
+        let r = predict_pencil3(&p, PortKind::Lci);
+        assert_eq!(r.wire_bytes, 0);
+        assert!(r.makespan_us > 0.0);
+    }
+
+    #[test]
+    fn pencil3_lci_no_slower_than_tcp() {
+        let p = Pencil3ModelParams::paper(ProcGrid::new(2, 2));
+        let t = |port| predict_pencil3(&p, port).makespan_us;
+        assert!(t(PortKind::Lci) <= t(PortKind::Tcp));
     }
 }

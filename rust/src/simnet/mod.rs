@@ -22,13 +22,15 @@
 //! Calibration discipline (DESIGN.md §6): constants are fitted on the
 //! Fig. 3 chunk-size sweep only; Figs. 4–5 are then *predictions*.
 //!
-//! [`fft_model`] builds the schedules for both FFT variants, every
-//! parcelport, and the FFTW3-like baseline.
+//! [`fft_model`] builds the schedules for both 2-D FFT variants, every
+//! parcelport, and the FFTW3-like baseline, plus the 3-D pencil
+//! pipeline's two sub-communicator-scoped transpose rounds
+//! ([`fft_model::predict_pencil3`] — the fig6 prediction).
 
 pub mod compute;
 pub mod fft_model;
 pub mod sim;
 
 pub use compute::ComputeModel;
-pub use fft_model::{predict_fft, FftModelParams};
+pub use fft_model::{predict_fft, predict_pencil3, FftModelParams, Pencil3ModelParams};
 pub use sim::{Action, Schedule, SimNet, SimReport};

@@ -543,6 +543,120 @@ fn pipelined_scatter_matches_linear_across_ports() {
     }
 }
 
+/// The fig6/pencil acceptance matrix: on the non-power-of-two 12×8×24
+/// grid, for every `Pr×Pc` shape in {1×4, 2×2, 4×1} and both execution
+/// modes, the 3-D pencil FFT is **bitwise identical across ports and
+/// modes** and matches the O(n²) f64-accumulating 3-D DFT oracle.
+#[test]
+fn pencil3d_bitwise_stable_across_ports_and_modes_all_shapes() {
+    use hpx_fft::dist_fft::grid3::{Grid3, PencilDims, ProcGrid};
+    use hpx_fft::dist_fft::pencil::{self, Pencil3Config};
+    use hpx_fft::dist_fft::verify::{oracle_fft3_transposed, rel_error};
+    use hpx_fft::fft::complex::Complex32;
+
+    let grid = Grid3::new(12, 8, 24);
+
+    // O(n²) f64-accumulating DFT oracle, transposed [i2][i1][i0] layout.
+    let data = hpx_fft::dist_fft::grid3::whole_grid(grid);
+    let oracle = oracle_fft3_transposed(&data, grid);
+
+    for (pr, pc) in [(1usize, 4usize), (2, 2), (4, 1)] {
+        let proc = ProcGrid::new(pr, pc);
+        let dims = PencilDims::new(grid, proc).unwrap();
+        let expected = pencil::distribute_transposed(&oracle, &dims);
+        let mut reference: Option<Vec<Vec<Complex32>>> = None;
+        for port in PortKind::ALL {
+            for exec in ExecutionMode::ALL {
+                let config = Pencil3Config {
+                    grid,
+                    proc,
+                    port,
+                    chunk: ChunkPolicy::new(256, 2),
+                    exec,
+                    threads_per_locality: 1,
+                    net: None,
+                    engine: ComputeEngine::Native,
+                    verify: false,
+                };
+                let cluster = Cluster::new(proc.n(), port, None).unwrap();
+                let (_report, pieces) =
+                    pencil::run_on_collect(&cluster, &config).unwrap();
+                // DFT-oracle verification (once per shape is enough, but
+                // it is cheap — assert every combination).
+                let assembled: Vec<Complex32> =
+                    pieces.iter().flat_map(|p| p.iter().copied()).collect();
+                let err = rel_error(&assembled, &expected);
+                assert!(err < 1e-4, "{pr}x{pc} {port} {}: rel err {err}", exec.name());
+                // Bitwise stability across ports and execution modes.
+                match &reference {
+                    None => reference = Some(pieces),
+                    Some(r) => assert_eq!(
+                        r,
+                        &pieces,
+                        "{pr}x{pc} {port} {} deviates bitwise",
+                        exec.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Concurrent row/column sub-communicator traffic on one fabric must
+/// not disturb a subsequent world-communicator collective — split tag
+/// spaces and the world tag space stay disjoint end to end.
+#[test]
+fn split_comms_then_world_collective_stay_clean() {
+    for port in PortKind::ALL {
+        let (pr, pc) = (2usize, 2usize);
+        let cluster = Cluster::new(pr * pc, port, None).unwrap();
+        let got = cluster.run(|ctx| {
+            let world = Communicator::from_ctx(ctx);
+            world.set_chunk_policy(ChunkPolicy::new(16, 2));
+            let (r, c) = (ctx.rank / pc, ctx.rank % pc);
+            let row = world.split(r as u64, c as u64);
+            let col = world.split(c as u64, r as u64);
+            // Sub-communicator chunked traffic in both directions.
+            let row_got = row.all_to_all(
+                (0..row.size())
+                    .map(|j| Payload::from_f32(&vec![(ctx.rank * 10 + j) as f32; 9]))
+                    .collect(),
+                AllToAllAlgo::PairwiseChunked,
+            );
+            let col_got = col.all_to_all(
+                (0..col.size())
+                    .map(|j| Payload::from_f32(&vec![(ctx.rank * 100 + j) as f32; 9]))
+                    .collect(),
+                AllToAllAlgo::PairwiseChunked,
+            );
+            // World-wide collective afterwards: must see clean mailboxes.
+            let all = world.all_gather(Payload::from_f32(&[ctx.rank as f32]));
+            let world_vals: Vec<f32> = all.iter().map(|p| p.to_f32()[0]).collect();
+            (
+                row_got.iter().map(|p| p.to_f32()[0]).collect::<Vec<f32>>(),
+                col_got.iter().map(|p| p.to_f32()[0]).collect::<Vec<f32>>(),
+                world_vals,
+            )
+        });
+        for (rank, (row_vals, col_vals, world_vals)) in got.iter().enumerate() {
+            let (r, c) = (rank / pc, rank % pc);
+            let row_expect: Vec<f32> = (0..pc).map(|j| ((r * pc + j) * 10 + c) as f32).collect();
+            let col_expect: Vec<f32> =
+                (0..pr).map(|j| ((j * pc + c) * 100 + r) as f32).collect();
+            assert_eq!(row_vals, &row_expect, "{port} rank {rank} row");
+            assert_eq!(col_vals, &col_expect, "{port} rank {rank} col");
+            assert_eq!(world_vals, &vec![0.0, 1.0, 2.0, 3.0], "{port} rank {rank} world");
+        }
+        for rank in 0..pr * pc {
+            assert_eq!(
+                cluster.fabric().mailbox(rank).pending(),
+                0,
+                "{port}: leftover parcels at {rank}"
+            );
+        }
+    }
+}
+
 /// Stress: repeated runs on one fabric (leak/ordering regression guard).
 #[test]
 fn repeated_runs_stable() {
