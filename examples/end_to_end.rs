@@ -20,7 +20,7 @@
 //! EXPERIMENTS.md §End-to-end.
 
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy};
-use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
+use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant};
 use hpx_fft::metrics::table::Table;
 use hpx_fft::parcelport::{NetModel, PortKind};
 
@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
                 algo: AllToAllAlgo::HpxRoot,
                 chunk: ChunkPolicy::default(),
                 exec: ExecutionMode::Blocking,
+                domain: Domain::Complex,
                 threads_per_locality: 2,
                 net: Some(NetModel::infiniband_hdr()),
                 engine: engine.clone(),

@@ -9,7 +9,7 @@
 //! prints per-step timings — the smallest complete tour of the system.
 
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy};
-use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
+use hpx_fft::dist_fft::driver::{run, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant};
 use hpx_fft::parcelport::PortKind;
 
 fn main() -> anyhow::Result<()> {
@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         algo: AllToAllAlgo::HpxRoot,
         chunk: ChunkPolicy::default(),
         exec: ExecutionMode::Blocking,
+        domain: Domain::Complex,
         threads_per_locality: 2,
         net: None,
         engine: ComputeEngine::Native,

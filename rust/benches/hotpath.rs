@@ -268,7 +268,7 @@ fn main() {
     // while the grid stays CI-sized.
     {
         use hpx_fft::dist_fft::driver::{
-            self as fft_driver, ComputeEngine, DistFftConfig, ExecutionMode, Variant,
+            self as fft_driver, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant,
         };
         let n = 4;
         let grid = if smoke { 128usize } else { 256 };
@@ -284,6 +284,7 @@ fn main() {
             algo: AllToAllAlgo::HpxRoot,
             chunk: ChunkPolicy::new(8 * 1024, 4),
             exec: ExecutionMode::Blocking,
+            domain: Domain::Complex,
             threads_per_locality: 1,
             net: Some(net),
             engine: ComputeEngine::Native,
@@ -329,7 +330,7 @@ fn main() {
     // group-scoped messages. Per-round bytes and wall µs side by side.
     {
         use hpx_fft::dist_fft::driver::{
-            self as fft_driver, ComputeEngine, DistFftConfig, ExecutionMode, Variant,
+            self as fft_driver, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant,
         };
         use hpx_fft::dist_fft::grid3::{Grid3, ProcGrid};
         use hpx_fft::dist_fft::pencil::{self, Pencil3Config};
@@ -357,6 +358,7 @@ fn main() {
             algo: AllToAllAlgo::HpxRoot,
             chunk: ChunkPolicy::new(8 * 1024, 4),
             exec: ExecutionMode::Blocking,
+            domain: Domain::Complex,
             threads_per_locality: 1,
             net: Some(net),
             engine: ComputeEngine::Native,
@@ -382,6 +384,7 @@ fn main() {
             port: PortKind::Lci,
             chunk: ChunkPolicy::new(8 * 1024, 4),
             exec: ExecutionMode::Blocking,
+            domain: Domain::Complex,
             threads_per_locality: 1,
             net: Some(net),
             engine: ComputeEngine::Native,

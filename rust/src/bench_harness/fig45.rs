@@ -14,7 +14,7 @@ use super::runner::measure;
 use crate::baseline::fftw_like::{run_on as baseline_run_on, FftwLikeConfig};
 use crate::collectives::AllToAllAlgo;
 use crate::config::{BenchConfig, ClusterSpec};
-use crate::dist_fft::driver::{self, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
+use crate::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant};
 use crate::hpx::runtime::Cluster;
 use crate::metrics::{csv::write_csv, RunStats};
 use crate::parcelport::PortKind;
@@ -98,6 +98,7 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                         algo: AllToAllAlgo::HpxRoot,
                         chunk: config.pipeline,
                         exec: config.exec,
+                        domain: Domain::Complex,
                         threads_per_locality: config.threads,
                         net: Some(net),
                         engine: ComputeEngine::Native,
@@ -142,6 +143,7 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                 rows: config.sim_grid,
                 cols: config.sim_grid,
                 nodes,
+                domain: Domain::Complex,
                 compute: spec.compute_model(),
                 net,
             };

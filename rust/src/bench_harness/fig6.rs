@@ -16,7 +16,7 @@
 
 use super::runner::measure;
 use crate::config::{BenchConfig, ClusterSpec};
-use crate::dist_fft::driver::{ComputeEngine, ExecutionMode};
+use crate::dist_fft::driver::{ComputeEngine, Domain, ExecutionMode};
 use crate::dist_fft::grid3::{PencilDims, ProcGrid};
 use crate::dist_fft::pencil::{self, Pencil3Config, PencilTimings};
 use crate::hpx::runtime::Cluster;
@@ -93,6 +93,7 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<Fig6Point>> {
                     port,
                     chunk: config.pipeline,
                     exec,
+                    domain: Domain::Complex,
                     threads_per_locality: config.threads,
                     net: Some(net),
                     engine: ComputeEngine::Native,
@@ -207,7 +208,7 @@ pub fn report(
             .iter()
             .filter(|p| p.port == port && p.exec == ExecutionMode::Blocking)
             .collect();
-        blocking.sort_by(|a, b| a.live.mean().partial_cmp(&b.live.mean()).unwrap());
+        blocking.sort_by(|a, b| a.live.mean().total_cmp(&b.live.mean()));
         if let (Some(best), Some(worst)) = (blocking.first(), blocking.last()) {
             out.push_str(&format!(
                 "\nshape effect @ {port}: best {} ({:.2} ms) vs worst {} ({:.2} ms)",

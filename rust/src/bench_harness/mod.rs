@@ -13,6 +13,9 @@
 //! - [`fig6`] — the 3-D pencil FFT's process-grid-shape sweep
 //!   (`Pr × Pc` × port × exec mode) with per-round transpose timings
 //!   and the paper-scale simnet prediction.
+//! - [`fig7`] — real-input (r2c) vs complex distributed FFT
+//!   (port × exec × domain), with the measured `PortStats` wire volume
+//!   per point — the ~2× traffic saving of the packed half-spectrum.
 //!
 //! Every driver reports paper-style rows (mean ± 95% CI over N reps),
 //! writes CSV series, and renders an ASCII log plot so the figure shape
@@ -21,6 +24,7 @@
 pub mod fig3;
 pub mod fig45;
 pub mod fig6;
+pub mod fig7;
 pub mod plot;
 pub mod runner;
 

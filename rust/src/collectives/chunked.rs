@@ -89,6 +89,21 @@ impl ChunkPolicy {
         Self { chunk_bytes, inflight }
     }
 
+    /// Reject a hand-built zero policy with an actionable error — the
+    /// single home of the rule every driver entry point enforces before
+    /// any wire protocol runs ([`ChunkPolicy::new`] panics instead; the
+    /// CLI and config file report the offending flag at parse time).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.chunk_bytes > 0 && self.inflight > 0,
+            "chunk policy must be positive: chunk_bytes = {} / inflight = {} \
+             (set --chunk-bytes and --inflight to values ≥ 1)",
+            self.chunk_bytes,
+            self.inflight
+        );
+        Ok(())
+    }
+
     /// Round `chunk_bytes` down to a multiple of `align` (at least
     /// `align`). Typed consumers use this so wire chunks never split an
     /// element — the FFT path aligns to `size_of::<Complex32>()`.
@@ -98,7 +113,17 @@ impl ChunkPolicy {
     }
 
     /// Number of wire chunks a message of `len` bytes splits into.
+    ///
+    /// A zero `chunk_bytes` is a configuration error, rejected at every
+    /// construction point (CLI flags, config files, the driver configs,
+    /// [`ChunkPolicy::new`]); the clamp below only keeps a hand-built
+    /// zero struct from dividing by zero in release builds, and trips
+    /// this assertion in debug builds.
     pub fn n_chunks(&self, len: usize) -> usize {
+        debug_assert!(
+            self.chunk_bytes > 0,
+            "ChunkPolicy.chunk_bytes must be positive (rejected at config/CLI parse time)"
+        );
         len.div_ceil(self.chunk_bytes.max(1))
     }
 }
@@ -324,6 +349,18 @@ mod tests {
     #[should_panic(expected = "chunk_bytes")]
     fn zero_chunk_bytes_rejected() {
         ChunkPolicy::new(0, 1);
+    }
+
+    #[test]
+    fn validate_rejects_hand_built_zero_policies() {
+        assert!(ChunkPolicy::new(64, 2).validate().is_ok());
+        for policy in [
+            ChunkPolicy { chunk_bytes: 0, inflight: 2 },
+            ChunkPolicy { chunk_bytes: 64, inflight: 0 },
+        ] {
+            let err = policy.validate().unwrap_err().to_string();
+            assert!(err.contains("chunk policy must be positive"), "{err}");
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! accounting the scatter variant uses.
 
 use super::driver::{RowFft, StepTimings};
-use super::partition::Slab;
+use super::partition::{FftInput, Slab};
 use super::scatter_variant::hidden_us;
 use super::transpose::{place_chunk_slice_transposed, place_chunk_transposed};
 use crate::collectives::{AllToAllAlgo, Communicator};
@@ -21,9 +21,10 @@ use crate::hpx::parcel::Payload;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Run the four-step distributed FFT with an all-to-all exchange.
-/// Returns the locality's slab of the transposed-layout result
-/// (`C/N × R`, row-major) and per-step timings.
+/// Run the four-step distributed FFT with an all-to-all exchange
+/// (complex domain — see [`run_input`]). Returns the locality's slab of
+/// the transposed-layout result (`C/N × R`, row-major) and per-step
+/// timings.
 pub fn run(
     comm: &Communicator,
     slab: &Slab,
@@ -31,28 +32,42 @@ pub fn run(
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
+    run_input(comm, &FftInput::Complex(slab), algo, nthreads, engine)
+}
+
+/// [`run`] over either input domain: stage 1 is
+/// [`FftInput::stage1_band`] (c2c rows, or r2c into packed
+/// half-spectra), and the exchange runs on the spectral geometry —
+/// `C/2` columns in the real domain, halving the collective's payload.
+pub fn run_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    algo: AllToAllAlgo,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
     let n = comm.size();
-    let lr = slab.local_rows();
-    let cw = Slab::cols_per_chunk(slab.global_cols, n);
-    let r_total = slab.global_rows;
+    debug_assert_eq!(input.parts(), n, "input decomposition must match the communicator");
+    let lr = input.local_rows();
+    let cw = Slab::cols_per_chunk(input.spectral_cols(), n);
+    let r_total = input.global_rows();
     let mut timings = StepTimings::default();
     let t_start = Instant::now();
 
-    // Step 1: row FFTs (length C).
+    // Step 1: first-axis row transforms.
     let t0 = Instant::now();
-    let mut work = slab.data.clone();
-    engine.fft_rows(&mut work, slab.global_cols, nthreads);
+    let mut work = input.stage1_seed();
+    input.stage1_band(&mut work, 0, lr, engine, nthreads);
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
-    // Step 2: chunk + exchange.
+    // Step 2: chunk + exchange, on the spectral slab geometry.
     let tmp = Slab {
-        global_rows: slab.global_rows,
-        global_cols: slab.global_cols,
-        parts: slab.parts,
-        rank: slab.rank,
+        global_rows: r_total,
+        global_cols: input.spectral_cols(),
+        parts: n,
+        rank: comm.rank(),
         data: work,
-    }; // §Perf: field-wise construction — `..slab.clone()` would clone and
-       // immediately drop the slab's full data buffer.
+    };
     let mut next = vec![Complex32::ZERO; cw * r_total];
     if algo == AllToAllAlgo::PairwiseChunked {
         // Steps 2+3 fused: every arriving wire chunk is transpose-placed
@@ -127,17 +142,30 @@ pub fn run_async(
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
+    run_async_input(comm, &FftInput::Complex(slab), algo, nthreads, engine)
+}
+
+/// [`run_async`] over either input domain (see [`run_input`] for the
+/// stage-1 / spectral-geometry split).
+pub fn run_async_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    algo: AllToAllAlgo,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
     let n = comm.size();
-    let lr = slab.local_rows();
-    let cw = Slab::cols_per_chunk(slab.global_cols, n);
-    let r_total = slab.global_rows;
+    debug_assert_eq!(input.parts(), n, "input decomposition must match the communicator");
+    let lr = input.local_rows();
+    let cw = Slab::cols_per_chunk(input.spectral_cols(), n);
+    let r_total = input.global_rows();
     let mut timings = StepTimings::default();
     let t_start = Instant::now();
 
-    // Step 1: row FFTs (length C).
+    // Step 1: first-axis row transforms.
     let t0 = Instant::now();
-    let mut work = slab.data.clone();
-    engine.fft_rows(&mut work, slab.global_cols, nthreads);
+    let mut work = input.stage1_seed();
+    input.stage1_band(&mut work, 0, lr, engine, nthreads);
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Step 2, posted not blocked: the collective returns immediately;
@@ -145,13 +173,12 @@ pub fn run_async(
     const ELEM: usize = std::mem::size_of::<Complex32>();
     comm.set_chunk_policy(comm.chunk_policy().aligned(ELEM));
     let tmp = Slab {
-        global_rows: slab.global_rows,
-        global_cols: slab.global_cols,
-        parts: slab.parts,
-        rank: slab.rank,
+        global_rows: r_total,
+        global_cols: input.spectral_cols(),
+        parts: n,
+        rank: comm.rank(),
         data: work,
-    }; // §Perf: field-wise construction — `..slab.clone()` would clone and
-       // immediately drop the slab's full data buffer.
+    };
     let t_post = Instant::now();
     let chunks: Vec<Payload> =
         (0..n).map(|j| Payload::new(tmp.extract_chunk_bytes(j))).collect();

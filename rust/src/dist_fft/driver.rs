@@ -1,14 +1,53 @@
 //! End-to-end distributed FFT driver: configuration, compute-engine
 //! abstraction, execution, verification, reporting.
 
-use super::partition::Slab;
-use super::verify::{rel_error, serial_fft2_transposed};
+use super::partition::{FftInput, RealSlab, Slab};
+use super::verify::{rel_error, serial_fft2_transposed, serial_rfft2_packed_transposed};
 use crate::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use crate::fft::complex::Complex32;
 use crate::fft::plan::{Direction, PlanCache};
 use crate::hpx::runtime::Cluster;
 use crate::parcelport::{NetModel, PortKind};
 use std::sync::Arc;
+
+/// Input domain of the distributed transform: the paper's complex (c2c)
+/// benchmark, or the real-input (r2c) workload of its FFTW3+MPI
+/// reference — whose first-axis FFT emits packed half-spectra of
+/// `C/2` bins, so every transpose round moves half the wire bytes (the
+/// CLI's `--domain` axis).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Domain {
+    /// Complex-to-complex transform (the paper's benchmark).
+    #[default]
+    Complex,
+    /// Real-to-complex transform: r2c first axis, packed half-spectrum
+    /// transposes (~½ the wire traffic), complex second axis.
+    Real,
+}
+
+impl Domain {
+    /// Both domains, in presentation order.
+    pub const ALL: [Domain; 2] = [Domain::Complex, Domain::Real];
+
+    /// Lowercase domain name (CLI / CSV spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Complex => "complex",
+            Domain::Real => "real",
+        }
+    }
+}
+
+impl std::str::FromStr for Domain {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "complex" | "c2c" => Ok(Domain::Complex),
+            "real" | "r2c" => Ok(Domain::Real),
+            other => Err(format!("unknown domain {other:?} (expected complex|real)")),
+        }
+    }
+}
 
 /// Which communication variant to run (the paper's Fig. 4 vs Fig. 5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -196,6 +235,11 @@ pub struct DistFftConfig {
     /// Lock-step blocking collectives vs the future-chained task graph
     /// (the `--exec` benchmark axis).
     pub exec: ExecutionMode,
+    /// Input domain: complex (c2c) or real (r2c with packed
+    /// half-spectrum transposes — the `--domain` axis). Real grids need
+    /// an even `cols` with `cols/2` divisible by `localities`, and the
+    /// native compute engine.
+    pub domain: Domain,
     /// Worker threads per locality for the row-FFT steps.
     pub threads_per_locality: usize,
     /// Optional hybrid wire model.
@@ -217,6 +261,7 @@ impl Default for DistFftConfig {
             algo: AllToAllAlgo::HpxRoot,
             chunk: ChunkPolicy::default(),
             exec: ExecutionMode::Blocking,
+            domain: Domain::Complex,
             threads_per_locality: 2,
             net: None,
             engine: ComputeEngine::Native,
@@ -249,6 +294,32 @@ pub fn run(config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
 /// Run on an existing cluster (benchmarks reuse fabrics across reps).
 pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
     anyhow::ensure!(config.rows >= 1 && config.cols >= 1, "grid must be non-empty");
+    // Real-domain preconditions come first: the generic divisibility
+    // check below would otherwise shadow the r2c-specific messages
+    // (an odd `cols` usually fails both).
+    if config.domain == Domain::Real {
+        anyhow::ensure!(
+            config.cols % 2 == 0,
+            "real-domain grids need an even column count (r2c packs the \
+             half-spectrum into cols/2 bins), got cols = {}",
+            config.cols
+        );
+        anyhow::ensure!(
+            (config.cols / 2) % config.localities == 0,
+            "real-domain grid {}×{}: the packed spectrum has {} columns, \
+             which must divide evenly across {} localities (cols must be \
+             a multiple of 2·N)",
+            config.rows,
+            config.cols,
+            config.cols / 2,
+            config.localities
+        );
+        anyhow::ensure!(
+            matches!(config.engine, ComputeEngine::Native),
+            "real-domain runs require the native compute engine \
+             (--engine native); the PJRT artifact only compiles c2c rows"
+        );
+    }
     // Any row/column length is supported — the planner is mixed-radix —
     // but the slab decomposition needs uniform slabs and chunks.
     anyhow::ensure!(
@@ -266,6 +337,10 @@ pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistF
         cluster.n_localities(),
         config.localities
     );
+    // Hand-built zero policies would otherwise be clamped silently deep
+    // inside the chunked wire protocol — reject them before anything
+    // runs (the CLI and config file reject them at parse time already).
+    config.chunk.validate()?;
     let engine = config.engine.build()?;
     let before = cluster.fabric().stats();
 
@@ -276,34 +351,16 @@ pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistF
         // before the timed region (blocking wrappers route through it
         // too, now that the collective engine is futures-first).
         comm.warm_chunk_pool();
-        let slab = Slab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
-        match (config.variant, config.exec) {
-            (Variant::AllToAll, ExecutionMode::Blocking) => super::all_to_all_variant::run(
-                &comm,
-                &slab,
-                config.algo,
-                config.threads_per_locality,
-                engine.as_ref(),
-            ),
-            (Variant::AllToAll, ExecutionMode::Async) => super::all_to_all_variant::run_async(
-                &comm,
-                &slab,
-                config.algo,
-                config.threads_per_locality,
-                engine.as_ref(),
-            ),
-            (Variant::Scatter, ExecutionMode::Blocking) => super::scatter_variant::run(
-                &comm,
-                &slab,
-                config.threads_per_locality,
-                engine.as_ref(),
-            ),
-            (Variant::Scatter, ExecutionMode::Async) => super::scatter_variant::run_async(
-                &comm,
-                &slab,
-                config.threads_per_locality,
-                engine.as_ref(),
-            ),
+        match config.domain {
+            Domain::Complex => {
+                let slab = Slab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
+                run_variant(&comm, &FftInput::Complex(&slab), config, engine.as_ref())
+            }
+            Domain::Real => {
+                let slab =
+                    RealSlab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
+                run_variant(&comm, &FftInput::Real(&slab), config, engine.as_ref())
+            }
         }
     });
 
@@ -312,15 +369,26 @@ pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistF
     let critical_path = StepTimings::max(&per_rank);
 
     let rel_err = if config.verify {
-        let mut assembled = Vec::with_capacity(config.rows * config.cols);
+        let spectral_elems = match config.domain {
+            Domain::Complex => config.rows * config.cols,
+            Domain::Real => config.rows * config.cols / 2,
+        };
+        let mut assembled = Vec::with_capacity(spectral_elems);
         for (piece, _) in &results {
             assembled.extend_from_slice(piece);
         }
-        let reference = serial_fft2_transposed(
-            &Slab::whole(config.rows, config.cols).data,
-            config.rows,
-            config.cols,
-        );
+        let reference = match config.domain {
+            Domain::Complex => serial_fft2_transposed(
+                &Slab::whole(config.rows, config.cols).data,
+                config.rows,
+                config.cols,
+            ),
+            Domain::Real => serial_rfft2_packed_transposed(
+                &RealSlab::whole(config.rows, config.cols).data,
+                config.rows,
+                config.cols,
+            ),
+        };
         Some(rel_error(&assembled, &reference))
     } else {
         None
@@ -328,13 +396,14 @@ pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistF
 
     Ok(DistFftReport {
         config_summary: format!(
-            "{}×{} grid, {} localities, {} port, {} variant, {} exec, {} engine",
+            "{}×{} grid, {} localities, {} port, {} variant, {} exec, {} domain, {} engine",
             config.rows,
             config.cols,
             config.localities,
             config.port,
             config.variant.name(),
             config.exec.name(),
+            config.domain.name(),
             engine.name(),
         ),
         per_rank,
@@ -342,6 +411,31 @@ pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistF
         rel_error: rel_err,
         stats,
     })
+}
+
+/// Dispatch one locality's run to the configured variant × execution
+/// mode over the given input domain.
+fn run_variant(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    config: &DistFftConfig,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
+    let nthreads = config.threads_per_locality;
+    match (config.variant, config.exec) {
+        (Variant::AllToAll, ExecutionMode::Blocking) => {
+            super::all_to_all_variant::run_input(comm, input, config.algo, nthreads, engine)
+        }
+        (Variant::AllToAll, ExecutionMode::Async) => {
+            super::all_to_all_variant::run_async_input(comm, input, config.algo, nthreads, engine)
+        }
+        (Variant::Scatter, ExecutionMode::Blocking) => {
+            super::scatter_variant::run_input(comm, input, nthreads, engine)
+        }
+        (Variant::Scatter, ExecutionMode::Async) => {
+            super::scatter_variant::run_async_input(comm, input, nthreads, engine)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -423,6 +517,94 @@ mod tests {
         let config = DistFftConfig { rows: 30, cols: 32, ..Default::default() };
         let err = run(&config).unwrap_err().to_string();
         assert!(err.contains("divide evenly"), "{err}");
+    }
+
+    #[test]
+    fn real_domain_verifies_both_variants_and_modes() {
+        for variant in [Variant::AllToAll, Variant::Scatter] {
+            for exec in ExecutionMode::ALL {
+                let config = DistFftConfig {
+                    rows: 16,
+                    cols: 32,
+                    domain: Domain::Real,
+                    variant,
+                    exec,
+                    threads_per_locality: 1,
+                    ..Default::default()
+                };
+                let report = run(&config).unwrap();
+                assert!(
+                    report.rel_error.unwrap() < 1e-4,
+                    "{variant:?} {exec:?}: {:?}",
+                    report.rel_error
+                );
+                assert!(report.config_summary.contains("real domain"));
+            }
+        }
+    }
+
+    #[test]
+    fn real_domain_non_pow2_grid_verifies() {
+        // 12×24 on 4 localities: packed spectrum 12 columns, 3 per rank.
+        let config = DistFftConfig {
+            rows: 12,
+            cols: 24,
+            domain: Domain::Real,
+            threads_per_locality: 1,
+            ..Default::default()
+        };
+        let report = run(&config).unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4, "{:?}", report.rel_error);
+    }
+
+    #[test]
+    fn real_domain_odd_cols_rejected() {
+        let config =
+            DistFftConfig { rows: 16, cols: 27, domain: Domain::Real, ..Default::default() };
+        let err = run(&config).unwrap_err().to_string();
+        assert!(err.contains("even column count"), "{err}");
+    }
+
+    #[test]
+    fn real_domain_indivisible_packed_cols_rejected() {
+        // cols = 24 divides by 4 localities but cols/2 = 12 does not
+        // divide by 8.
+        let config = DistFftConfig {
+            rows: 16,
+            cols: 24,
+            localities: 8,
+            domain: Domain::Real,
+            ..Default::default()
+        };
+        let err = run(&config).unwrap_err().to_string();
+        assert!(err.contains("packed spectrum"), "{err}");
+    }
+
+    #[test]
+    fn hand_built_zero_chunk_policy_rejected_with_actionable_error() {
+        // `ChunkPolicy::new` panics on zero, but the fields are public —
+        // a hand-built zero policy must be rejected up front instead of
+        // being clamped silently inside the wire protocol.
+        for chunk in [
+            ChunkPolicy { chunk_bytes: 0, inflight: 4 },
+            ChunkPolicy { chunk_bytes: 1024, inflight: 0 },
+        ] {
+            let config = DistFftConfig { rows: 16, cols: 16, chunk, ..Default::default() };
+            let err = run(&config).unwrap_err().to_string();
+            assert!(err.contains("chunk policy must be positive"), "{err}");
+            assert!(err.contains("--chunk-bytes"), "{err}");
+        }
+    }
+
+    #[test]
+    fn domain_parse() {
+        assert_eq!("real".parse::<Domain>().unwrap(), Domain::Real);
+        assert_eq!("r2c".parse::<Domain>().unwrap(), Domain::Real);
+        assert_eq!("complex".parse::<Domain>().unwrap(), Domain::Complex);
+        assert_eq!("c2c".parse::<Domain>().unwrap(), Domain::Complex);
+        assert!("quaternion".parse::<Domain>().is_err());
+        assert_eq!(Domain::default(), Domain::Complex);
+        assert_eq!(Domain::ALL.len(), 2);
     }
 
     #[test]

@@ -233,6 +233,37 @@ pub fn whole_grid(grid: Grid3) -> Vec<Complex32> {
     synthetic_pencil(&dims, 0, 0)
 }
 
+/// Deterministic synthetic *real* signal for the stage-Z pencil at
+/// process-grid position `(row_idx, col_idx)` — the real-domain (r2c)
+/// input of the pencil pipeline. Same decomposition-independence scheme
+/// as [`synthetic_pencil`] (one RNG stream per global `(i0, i1)` z-row,
+/// distinct stream constant), one sample per element. `dims` is the
+/// *input-side* decomposition: its `grid.n2` is the real z-extent,
+/// twice the spectral extent phase 1 packs it into.
+pub fn synthetic_pencil_real(dims: &PencilDims, row_idx: usize, col_idx: usize) -> Vec<f32> {
+    let (d0, d1c, n2) = (dims.d0, dims.d1c, dims.grid.n2);
+    let n1 = dims.grid.n1;
+    let mut out = Vec::with_capacity(d0 * d1c * n2);
+    for s in 0..d0 {
+        let i0 = row_idx * d0 + s;
+        for r in 0..d1c {
+            let i1 = col_idx * d1c + r;
+            let mut rng = Pcg32::with_stream(0x3D11_F0F1, (i0 * n1 + i1) as u64 + 1);
+            for _ in 0..n2 {
+                out.push(rng.next_signal());
+            }
+        }
+    }
+    out
+}
+
+/// The whole real global grid, `[i0][i1][i2]` row-major — bit-identical
+/// to the union of every rank's [`synthetic_pencil_real`].
+pub fn whole_grid_real(grid: Grid3) -> Vec<f32> {
+    let dims = PencilDims::new(grid, ProcGrid::new(1, 1)).expect("1×1 always divides");
+    synthetic_pencil_real(&dims, 0, 0)
+}
+
 /// Round-1 wire buffer: the part of a stage-Z pencil
 /// (`[d0][d1c][n2]`) destined for row-comm peer `dest` — its z-block
 /// `[dest·d2c, (dest+1)·d2c)` of every z-row — serialized in
@@ -441,6 +472,33 @@ mod tests {
                 }
             }
             assert!(covered.iter().all(|&c| c == 1), "{pr}x{pc}: not an exact tiling");
+        }
+    }
+
+    #[test]
+    fn real_pencils_tile_the_grid_exactly() {
+        let grid = Grid3::new(4, 6, 8);
+        let whole = whole_grid_real(grid);
+        for (pr, pc) in [(1, 2), (2, 2), (2, 1)] {
+            let d = dims(grid, pr, pc);
+            for rank in 0..d.proc.n() {
+                let (ri, ci) = d.proc.coords(rank);
+                let pencil = synthetic_pencil_real(&d, ri, ci);
+                assert_eq!(pencil.len(), d.local_elems());
+                for s in 0..d.d0 {
+                    let i0 = ri * d.d0 + s;
+                    for r in 0..d.d1c {
+                        let i1 = ci * d.d1c + r;
+                        for z in 0..grid.n2 {
+                            assert_eq!(
+                                pencil[(s * d.d1c + r) * grid.n2 + z],
+                                whole[(i0 * grid.n1 + i1) * grid.n2 + z],
+                                "{pr}x{pc} rank {rank} ({s},{r},{z})"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

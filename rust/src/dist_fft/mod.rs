@@ -35,6 +35,13 @@
 //! draining sends, reporting the hidden wall time as
 //! `StepTimings::overlap_us`).
 //!
+//! Both variants run in either input **domain** ([`driver::Domain`],
+//! the CLI's `--domain` axis): *complex* (c2c, the paper's benchmark)
+//! or *real* (r2c — the paper's FFTW3+MPI reference workload), where
+//! step 1 packs each real row into a half-spectrum of `C/2` bins
+//! ([`crate::fft::real`]), so every transpose round moves **half** the
+//! payload bytes over the same chunked wire protocol.
+//!
 //! [`verify`] pins both against a serial reference on every port.
 //!
 //! Beyond the paper's 2-D slab benchmark, [`pencil`] generalizes the
@@ -54,7 +61,7 @@ pub mod verify;
 pub mod all_to_all_variant;
 pub mod scatter_variant;
 
-pub use driver::{ComputeEngine, DistFftConfig, DistFftReport, ExecutionMode, Variant};
+pub use driver::{ComputeEngine, DistFftConfig, DistFftReport, Domain, ExecutionMode, Variant};
 pub use grid3::{Grid3, PencilDims, ProcGrid};
-pub use partition::Slab;
+pub use partition::{FftInput, RealSlab, Slab};
 pub use pencil::{Pencil3Config, Pencil3Report, PencilTimings};

@@ -1,6 +1,10 @@
-//! Slab decomposition of the global 2-D grid.
+//! Slab decomposition of the global 2-D grid — complex ([`Slab`]) and
+//! real ([`RealSlab`]) input domains, unified behind [`FftInput`] for
+//! the distributed drivers.
 
+use super::driver::RowFft;
 use crate::fft::complex::Complex32;
+use crate::fft::real::rfft_rows_packed_into;
 use crate::util::rng::Pcg32;
 
 /// One locality's row-slab of the global `R × C` grid.
@@ -155,6 +159,184 @@ impl Slab {
     }
 }
 
+/// One locality's row-slab of a *real-valued* global `R × C` grid — the
+/// input domain of the paper's FFTW3+MPI reference workload. Stage 1 of
+/// the distributed pipeline transforms each real row into a packed
+/// half-spectrum of `C/2` complex bins
+/// ([`crate::fft::real::rfft_rows_packed_into`]), so every transpose
+/// round moves half the bytes of the complex-domain run on the same
+/// grid.
+#[derive(Clone, Debug)]
+pub struct RealSlab {
+    /// Global grid rows.
+    pub global_rows: usize,
+    /// Global grid cols (the real first-axis length; must be even for
+    /// the packed distributed path).
+    pub global_cols: usize,
+    /// Number of participating localities.
+    pub parts: usize,
+    /// Which slab this is.
+    pub rank: usize,
+    /// Row-major local real samples, `local_rows() × global_cols`.
+    pub data: Vec<f32>,
+}
+
+impl RealSlab {
+    /// Rows in this slab.
+    pub fn local_rows(&self) -> usize {
+        Slab::rows_per_part(self.global_rows, self.parts)
+    }
+
+    /// First global row of this slab.
+    pub fn row_offset(&self) -> usize {
+        self.rank * self.local_rows()
+    }
+
+    /// Columns of the packed half-spectrum each row transforms into.
+    ///
+    /// # Panics
+    /// If `global_cols` is odd (the packed layout needs paired bins).
+    pub fn packed_cols(&self) -> usize {
+        assert!(
+            self.global_cols % 2 == 0,
+            "real slab cols {} must be even for the packed half-spectrum",
+            self.global_cols
+        );
+        self.global_cols / 2
+    }
+
+    /// Deterministic synthetic real signal, decomposition-independent
+    /// like [`Slab::synthetic`]: one RNG stream per global row (a
+    /// distinct stream constant from the complex slab, so the two
+    /// domains are independent datasets).
+    pub fn synthetic(global_rows: usize, global_cols: usize, parts: usize, rank: usize) -> Self {
+        assert!(rank < parts, "rank {rank} out of range");
+        let local_rows = Slab::rows_per_part(global_rows, parts);
+        let mut slab = Self {
+            global_rows,
+            global_cols,
+            parts,
+            rank,
+            data: vec![0.0; local_rows * global_cols],
+        };
+        let row0 = slab.row_offset();
+        for r in 0..local_rows {
+            let grow = row0 + r;
+            let mut rng = Pcg32::with_stream(0x0B5E_2412, grow as u64 + 1);
+            for c in 0..global_cols {
+                slab.data[r * global_cols + c] = rng.next_signal();
+            }
+        }
+        slab
+    }
+
+    /// The whole real global grid as one slab (serial reference).
+    pub fn whole(global_rows: usize, global_cols: usize) -> Self {
+        Self::synthetic(global_rows, global_cols, 1, 0)
+    }
+}
+
+/// Input-domain selector the distributed 2-D variants run over: the
+/// paper's complex transform, or the real-input (r2c) transform whose
+/// stage 1 emits packed half-spectra. Everything downstream of stage 1
+/// — chunk extraction, the wire protocol, transpose placement, the
+/// second-axis FFT — is domain-agnostic and just sees a spectral slab
+/// of [`FftInput::spectral_cols`] complex columns.
+pub enum FftInput<'a> {
+    /// Complex-domain input (c2c — the paper's benchmark).
+    Complex(&'a Slab),
+    /// Real-domain input (r2c first axis, packed half-spectra on the
+    /// wire — half the transpose payload).
+    Real(&'a RealSlab),
+}
+
+impl FftInput<'_> {
+    /// Global grid rows (the second-axis transform length).
+    pub fn global_rows(&self) -> usize {
+        match self {
+            FftInput::Complex(s) => s.global_rows,
+            FftInput::Real(s) => s.global_rows,
+        }
+    }
+
+    /// Number of participating localities.
+    pub fn parts(&self) -> usize {
+        match self {
+            FftInput::Complex(s) => s.parts,
+            FftInput::Real(s) => s.parts,
+        }
+    }
+
+    /// Which slab this is.
+    pub fn rank(&self) -> usize {
+        match self {
+            FftInput::Complex(s) => s.rank,
+            FftInput::Real(s) => s.rank,
+        }
+    }
+
+    /// Rows in this locality's slab.
+    pub fn local_rows(&self) -> usize {
+        match self {
+            FftInput::Complex(s) => s.local_rows(),
+            FftInput::Real(s) => s.local_rows(),
+        }
+    }
+
+    /// Columns of the *spectral* slab stage 1 produces: `C` for the
+    /// complex domain, `C/2` packed bins for the real domain — the
+    /// column count every transpose round actually moves.
+    pub fn spectral_cols(&self) -> usize {
+        match self {
+            FftInput::Complex(s) => s.global_cols,
+            FftInput::Real(s) => s.packed_cols(),
+        }
+    }
+
+    /// Stage-1 working buffer (`local_rows × spectral_cols`):
+    /// the complex domain transforms its slab in place, so the seed is a
+    /// copy of the input; the real domain writes packed rows into a
+    /// zeroed buffer.
+    pub(crate) fn stage1_seed(&self) -> Vec<Complex32> {
+        match self {
+            FftInput::Complex(s) => s.data.clone(),
+            FftInput::Real(s) => {
+                vec![Complex32::ZERO; s.local_rows() * s.packed_cols()]
+            }
+        }
+    }
+
+    /// Transform rows `[r0, r1)` of the stage-1 buffer: the banded
+    /// first-axis FFT. Rows are independent, so any band split produces
+    /// bitwise-identical spectra — the async drivers lean on this to
+    /// stream wire chunks out of partially transformed slabs.
+    pub(crate) fn stage1_band(
+        &self,
+        work: &mut [Complex32],
+        r0: usize,
+        r1: usize,
+        engine: &dyn RowFft,
+        nthreads: usize,
+    ) {
+        match self {
+            FftInput::Complex(s) => {
+                let c = s.global_cols;
+                engine.fft_rows(&mut work[r0 * c..r1 * c], c, nthreads);
+            }
+            FftInput::Real(s) => {
+                let c = s.global_cols;
+                let m = s.packed_cols();
+                rfft_rows_packed_into(
+                    &s.data[r0 * c..r1 * c],
+                    c,
+                    &mut work[r0 * m..r1 * m],
+                    nthreads,
+                );
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +414,70 @@ mod tests {
         let slab = Slab::zeroed(16, 16, 4, 0);
         // local slab = 4×16×8 = 512 bytes; (1 - 1/4) = 384.
         assert_eq!(slab.bytes_sent_per_locality(), 384);
+    }
+
+    #[test]
+    fn real_synthetic_is_decomposition_independent() {
+        let whole = RealSlab::whole(8, 6);
+        for parts in [2usize, 4] {
+            for rank in 0..parts {
+                let slab = RealSlab::synthetic(8, 6, parts, rank);
+                let off = slab.row_offset();
+                for r in 0..slab.local_rows() {
+                    for c in 0..6 {
+                        assert_eq!(
+                            slab.data[r * 6 + c],
+                            whole.data[(off + r) * 6 + c],
+                            "parts={parts} rank={rank} r={r} c={c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn real_input_spectral_geometry() {
+        let slab = RealSlab::synthetic(16, 24, 4, 1);
+        assert_eq!(slab.local_rows(), 4);
+        assert_eq!(slab.packed_cols(), 12);
+        let input = FftInput::Real(&slab);
+        assert_eq!(input.spectral_cols(), 12);
+        assert_eq!(input.global_rows(), 16);
+        assert_eq!(input.local_rows(), 4);
+        assert_eq!(input.stage1_seed().len(), 4 * 12);
+
+        let cslab = Slab::synthetic(16, 24, 4, 1);
+        let cinput = FftInput::Complex(&cslab);
+        assert_eq!(cinput.spectral_cols(), 24);
+        assert_eq!(cinput.rank(), 1);
+        assert_eq!(cinput.parts(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be even")]
+    fn odd_real_cols_rejected_for_packing() {
+        RealSlab::synthetic(4, 5, 1, 0).packed_cols();
+    }
+
+    #[test]
+    fn real_stage1_band_matches_whole_sweep() {
+        use crate::dist_fft::driver::NativeRowFft;
+        let slab = RealSlab::synthetic(12, 8, 2, 0);
+        let input = FftInput::Real(&slab);
+        let lr = input.local_rows();
+        let mut whole = input.stage1_seed();
+        input.stage1_band(&mut whole, 0, lr, &NativeRowFft, 1);
+        for band in [1usize, 2, 4] {
+            let mut banded = input.stage1_seed();
+            let mut r = 0;
+            while r < lr {
+                let hi = (r + band).min(lr);
+                input.stage1_band(&mut banded, r, hi, &NativeRowFft, 2);
+                r = hi;
+            }
+            assert_eq!(banded, whole, "band {band}");
+        }
     }
 
     #[test]

@@ -33,10 +33,11 @@
 //! identical arithmetic, so their results — like the results across
 //! parcelports — are bitwise identical.
 
-use super::driver::{ComputeEngine, ExecutionMode, RowFft};
+use super::driver::{ComputeEngine, Domain, ExecutionMode, RowFft};
 use super::grid3::{self, Grid3, PencilDims, ProcGrid};
 use super::scatter_variant::hidden_us;
 use super::verify::rel_error;
+use crate::fft::real::rfft_rows_packed_into;
 use crate::collectives::{ChunkPolicy, Communicator};
 use crate::fft::complex::{from_le_bytes, Complex32};
 use crate::hpx::parcel::Payload;
@@ -61,6 +62,12 @@ pub struct Pencil3Config {
     pub chunk: ChunkPolicy,
     /// Lock-step rounds vs the future-chained task graph (`--exec`).
     pub exec: ExecutionMode,
+    /// Input domain (`--domain`): complex z-pencils, or real input
+    /// whose phase-1 r2c packs each z-row into `n2/2` bins — both
+    /// transpose rounds then run on the halved grid, moving half the
+    /// wire bytes. Real grids need an even `n2` with `n2/2` divisible
+    /// by `Pc`, and the native engine.
+    pub domain: Domain,
     /// Worker threads per locality for the row-FFT phases.
     pub threads_per_locality: usize,
     /// Optional hybrid wire model.
@@ -79,6 +86,7 @@ impl Default for Pencil3Config {
             port: PortKind::Lci,
             chunk: ChunkPolicy::default(),
             exec: ExecutionMode::Blocking,
+            domain: Domain::Complex,
             threads_per_locality: 2,
             net: None,
             engine: ComputeEngine::Native,
@@ -275,9 +283,14 @@ fn settle_sends(
     last_send_done.lock().unwrap().take().unwrap_or(fallback)
 }
 
-/// The per-locality five-phase pencil pipeline.
+/// The per-locality five-phase pencil pipeline. `dims_in` is the
+/// input-side decomposition (the real z-extent in the real domain);
+/// `dims` is the *spectral* decomposition every phase after the z
+/// transform runs on — identical to `dims_in` in the complex domain,
+/// the `n2/2`-packed grid in the real domain.
 fn run_locality(
     ctx: &crate::hpx::runtime::LocalityCtx,
+    dims_in: &PencilDims,
     dims: &PencilDims,
     config: &Pencil3Config,
     engine: &dyn RowFft,
@@ -299,13 +312,23 @@ fn run_locality(
     let async_mode = config.exec == ExecutionMode::Async;
     let mut t = PencilTimings::default();
     // Input generation happens outside the timed window, like the 2-D
-    // variants (whose slabs are synthesized before their `run`).
-    let mut zbuf = grid3::synthetic_pencil(dims, row_idx, col_idx);
+    // variants (whose slabs are synthesized before their `run`); the
+    // phase-1 transform (c2c sweep, or the r2c pack) is inside it.
+    let (real_src, mut zbuf) = match config.domain {
+        Domain::Complex => (None, grid3::synthetic_pencil(dims, row_idx, col_idx)),
+        Domain::Real => (
+            Some(grid3::synthetic_pencil_real(dims_in, row_idx, col_idx)),
+            vec![Complex32::ZERO; dims.local_elems()],
+        ),
+    };
     let t_start = Instant::now();
 
-    // Phase 1: FFT(z).
+    // Phase 1: FFT(z) — r2c-packed into n2/2 bins in the real domain.
     let t0 = Instant::now();
-    engine.fft_rows(&mut zbuf, dims.grid.n2, nthreads);
+    match &real_src {
+        None => engine.fft_rows(&mut zbuf, dims.grid.n2, nthreads),
+        Some(src) => rfft_rows_packed_into(src, dims_in.grid.n2, &mut zbuf, nthreads),
+    }
     t.fft_z_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Phase 2: transpose 1 over the row communicator.
@@ -399,7 +422,33 @@ pub fn run_on_collect(
     cluster: &Cluster,
     config: &Pencil3Config,
 ) -> anyhow::Result<(Pencil3Report, Vec<Vec<Complex32>>)> {
-    let dims = PencilDims::new(config.grid, config.proc)?;
+    // Real-domain preconditions come first: PencilDims::new would
+    // otherwise report a generic odd-n2 divisibility error before the
+    // r2c-specific message could fire.
+    if config.domain == Domain::Real {
+        anyhow::ensure!(
+            config.grid.n2 % 2 == 0,
+            "real-domain pencil grids need an even z-extent (r2c packs \
+             the half-spectrum into n2/2 bins), got n2 = {}",
+            config.grid.n2
+        );
+        anyhow::ensure!(
+            matches!(config.engine, ComputeEngine::Native),
+            "real-domain runs require the native compute engine"
+        );
+    }
+    let dims_in = PencilDims::new(config.grid, config.proc)?;
+    // The spectral decomposition phases 2–5 run on: identical to the
+    // input decomposition in the complex domain; the z-halved packed
+    // grid in the real domain.
+    let dims = match config.domain {
+        Domain::Complex => dims_in,
+        Domain::Real => PencilDims::new(
+            Grid3::new(config.grid.n0, config.grid.n1, config.grid.n2 / 2),
+            config.proc,
+        )
+        .map_err(|e| e.context("real-domain packed (n2/2) spectral grid"))?,
+    };
     anyhow::ensure!(
         cluster.n_localities() == config.proc.n(),
         "cluster size mismatch: {} vs {} ({} process grid)",
@@ -407,11 +456,12 @@ pub fn run_on_collect(
         config.proc.n(),
         config.proc
     );
+    config.chunk.validate()?;
     let engine = config.engine.build()?;
     let before = cluster.fabric().stats();
 
     let results: Vec<(Vec<Complex32>, PencilTimings)> =
-        cluster.run(|ctx| run_locality(ctx, &dims, config, engine.as_ref()));
+        cluster.run(|ctx| run_locality(ctx, &dims_in, &dims, config, engine.as_ref()));
 
     let stats = cluster.fabric().stats().since(&before);
     let per_rank: Vec<PencilTimings> = results.iter().map(|(_, t)| *t).collect();
@@ -419,14 +469,20 @@ pub fn run_on_collect(
     let pieces: Vec<Vec<Complex32>> = results.into_iter().map(|(p, _)| p).collect();
 
     let rel_err = if config.verify {
-        let mut assembled = Vec::with_capacity(config.grid.elems());
+        let mut assembled = Vec::with_capacity(dims.grid.elems());
         for piece in &pieces {
             assembled.extend_from_slice(piece);
         }
-        let reference = super::verify::serial_fft3_transposed(
-            &grid3::whole_grid(config.grid),
-            config.grid,
-        );
+        let reference = match config.domain {
+            Domain::Complex => super::verify::serial_fft3_transposed(
+                &grid3::whole_grid(config.grid),
+                config.grid,
+            ),
+            Domain::Real => super::verify::serial_rfft3_packed_transposed(
+                &grid3::whole_grid_real(config.grid),
+                config.grid,
+            ),
+        };
         let expected = distribute_transposed(&reference, &dims);
         Some(rel_error(&assembled, &expected))
     } else {
@@ -435,11 +491,12 @@ pub fn run_on_collect(
 
     let report = Pencil3Report {
         config_summary: format!(
-            "{} grid, {} process grid, {} port, {} exec, {} engine",
+            "{} grid, {} process grid, {} port, {} exec, {} domain, {} engine",
             config.grid,
             config.proc,
             config.port,
             config.exec.name(),
+            config.domain.name(),
             engine.name(),
         ),
         per_rank,
@@ -521,7 +578,7 @@ mod tests {
                 let cluster = Cluster::new(cfg.proc.n(), cfg.port, cfg.net).unwrap();
                 let dims = PencilDims::new(cfg.grid, cfg.proc).unwrap();
                 let engine = cfg.engine.build().unwrap();
-                cluster.run(|ctx| run_locality(ctx, &dims, &cfg, engine.as_ref()).0)
+                cluster.run(|ctx| run_locality(ctx, &dims, &dims, &cfg, engine.as_ref()).0)
             };
             assert_eq!(
                 run_mode(ExecutionMode::Blocking),
@@ -599,12 +656,97 @@ mod tests {
     }
 
     #[test]
+    fn real_domain_verifies_all_shapes() {
+        // 12×8×24 real input → 12×8×12 packed spectral grid; every
+        // acceptance shape divides both.
+        for (pr, pc) in [(1, 4), (2, 2), (4, 1)] {
+            let report = run(&Pencil3Config {
+                domain: Domain::Real,
+                ..acceptance_config(pr, pc)
+            })
+            .unwrap();
+            assert!(
+                report.rel_error.unwrap() < 1e-4,
+                "{pr}x{pc}: {:?}",
+                report.rel_error
+            );
+            assert!(report.config_summary.contains("real domain"));
+        }
+    }
+
+    #[test]
+    fn real_domain_async_matches_blocking_bitwise() {
+        for (pr, pc) in [(2, 2), (1, 4)] {
+            let run_mode = |exec: ExecutionMode| {
+                let cfg = Pencil3Config {
+                    domain: Domain::Real,
+                    exec,
+                    chunk: ChunkPolicy::new(256, 2),
+                    ..acceptance_config(pr, pc)
+                };
+                let cluster = Cluster::new(cfg.proc.n(), cfg.port, cfg.net).unwrap();
+                run_on_collect(&cluster, &cfg).unwrap().1
+            };
+            assert_eq!(
+                run_mode(ExecutionMode::Blocking),
+                run_mode(ExecutionMode::Async),
+                "{pr}x{pc}: real-domain async must match blocking to the bit"
+            );
+        }
+    }
+
+    #[test]
+    fn real_domain_odd_z_extent_rejected() {
+        let err = run(&Pencil3Config {
+            grid: Grid3::new(8, 8, 9),
+            proc: ProcGrid::new(2, 2),
+            domain: Domain::Real,
+            ..Default::default()
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("even z-extent"), "{err}");
+    }
+
+    #[test]
+    fn real_domain_halves_wire_traffic() {
+        let bytes = |domain: Domain| {
+            run(&Pencil3Config {
+                domain,
+                verify: false,
+                ..acceptance_config(2, 2)
+            })
+            .unwrap()
+            .stats
+            .bytes_sent
+        };
+        // The transpose payloads halve exactly; the (identical) split
+        // bookkeeping traffic keeps the end-to-end ratio just above ½.
+        let (complex, real) = (bytes(Domain::Complex), bytes(Domain::Real));
+        assert!(
+            (real as f64) <= 0.55 * complex as f64,
+            "real {real} vs complex {complex}"
+        );
+    }
+
+    #[test]
+    fn zero_chunk_policy_rejected() {
+        let err = run(&Pencil3Config {
+            chunk: ChunkPolicy { chunk_bytes: 0, inflight: 2 },
+            ..acceptance_config(2, 2)
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("chunk policy must be positive"), "{err}");
+    }
+
+    #[test]
     fn transposed_distribution_covers_reference_once() {
         let dims = PencilDims::new(Grid3::new(4, 4, 4), ProcGrid::new(2, 2)).unwrap();
         let reference: Vec<Complex32> =
             (0..64).map(|i| Complex32::new(i as f32, 0.0)).collect();
         let mut redistributed = distribute_transposed(&reference, &dims);
-        redistributed.sort_by(|a, b| a.re.partial_cmp(&b.re).unwrap());
+        redistributed.sort_by(|a, b| a.re.total_cmp(&b.re));
         let sorted: Vec<f32> = redistributed.iter().map(|c| c.re).collect();
         assert_eq!(sorted, (0..64).map(|i| i as f32).collect::<Vec<_>>());
     }

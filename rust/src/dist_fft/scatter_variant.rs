@@ -17,7 +17,7 @@
 //! wire, even within a single root's message.
 
 use super::driver::{RowFft, StepTimings};
-use super::partition::Slab;
+use super::partition::{FftInput, Slab};
 use super::transpose::{place_chunk_slice_transposed, place_chunk_transposed};
 use crate::collectives::Communicator;
 use crate::fft::complex::{from_le_bytes, Complex32};
@@ -26,25 +26,44 @@ use crate::task::TaskFuture;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Run the four-step distributed FFT with N overlapped scatters.
+/// Run the four-step distributed FFT with N overlapped scatters
+/// (complex domain — see [`run_input`] for the domain-polymorphic
+/// entry point).
 pub fn run(
     comm: &Communicator,
     slab: &Slab,
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
+    run_input(comm, &FftInput::Complex(slab), nthreads, engine)
+}
+
+/// Run the four-step distributed FFT with N overlapped scatters over
+/// either input domain. Stage 1 transforms the local rows (c2c, or r2c
+/// into packed half-spectra — [`FftInput::stage1_band`]); everything
+/// after sees a spectral slab of [`FftInput::spectral_cols`] columns,
+/// so a real-domain run ships half the complex-domain payload over the
+/// same wire protocol.
+pub fn run_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
     let n = comm.size();
     let me = comm.rank();
-    let lr = slab.local_rows();
-    let cw = Slab::cols_per_chunk(slab.global_cols, n);
-    let r_total = slab.global_rows;
+    debug_assert_eq!(input.parts(), n, "input decomposition must match the communicator");
+    let lr = input.local_rows();
+    let cw = Slab::cols_per_chunk(input.spectral_cols(), n);
+    let r_total = input.global_rows();
     let mut timings = StepTimings::default();
     let t_start = Instant::now();
 
-    // Step 1: row FFTs (length C).
+    // Step 1: first-axis row transforms (length C; packed C/2-bin
+    // spectra in the real domain).
     let t0 = Instant::now();
-    let mut work = slab.data.clone();
-    engine.fft_rows(&mut work, slab.global_cols, nthreads);
+    let mut work = input.stage1_seed();
+    input.stage1_band(&mut work, 0, lr, engine, nthreads);
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Steps 2+3 fused: N chunk-pipelined scatters; transpose each wire
@@ -56,13 +75,14 @@ pub fn run(
     let mut transpose_spent = 0.0f64;
     let tags = comm.scatter_chunk_tags(n);
     let tmp = Slab {
-        global_rows: slab.global_rows,
-        global_cols: slab.global_cols,
-        parts: slab.parts,
-        rank: slab.rank,
+        global_rows: r_total,
+        global_cols: input.spectral_cols(),
+        parts: n,
+        rank: me,
         data: work,
-    }; // §Perf: field-wise construction — `..slab.clone()` would clone and
-       // immediately drop the slab's full data buffer.
+    }; // The *spectral* slab: chunk extraction and wire sizing run on the
+       // stage-1 output geometry, which is what makes the real domain's
+       // halved payload fall out of the unchanged protocol below.
     let mut next = vec![Complex32::ZERO; cw * r_total];
 
     // Every rank derives the transfer size from the slab geometry, so
@@ -189,12 +209,26 @@ pub fn run_async(
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
+    run_async_input(comm, &FftInput::Complex(slab), nthreads, engine)
+}
+
+/// [`run_async`] over either input domain — the banded stage-1 loop
+/// calls [`FftInput::stage1_band`], so in the real domain each wire
+/// band is r2c-transformed into packed half-spectra the moment before
+/// it is posted (half the bytes per band, same schedule).
+pub fn run_async_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
     let n = comm.size();
     let me = comm.rank();
-    let lr = slab.local_rows();
-    let cw = Slab::cols_per_chunk(slab.global_cols, n);
-    let r_total = slab.global_rows;
-    let c_total = slab.global_cols;
+    debug_assert_eq!(input.parts(), n, "input decomposition must match the communicator");
+    let lr = input.local_rows();
+    let cw = Slab::cols_per_chunk(input.spectral_cols(), n);
+    let r_total = input.global_rows();
+    let c_total = input.spectral_cols();
     let mut timings = StepTimings::default();
     let t_start = Instant::now();
 
@@ -211,7 +245,7 @@ pub fn run_async(
     let wire_chunks = lr.div_ceil(rows_per_wire);
     let tags = comm.scatter_chunk_tags(n);
 
-    let mut work = slab.data.clone();
+    let mut work = input.stage1_seed();
     let mut next = vec![Complex32::ZERO; cw * r_total];
     let mut sends_pending: Vec<TaskFuture<()>> = Vec::new();
     // Completion timestamp of the most recent outgoing chunk, recorded by
@@ -228,7 +262,7 @@ pub fn run_async(
         let r0 = wc * rows_per_wire;
         let r1 = (r0 + rows_per_wire).min(lr);
         let tb = Instant::now();
-        engine.fft_rows(&mut work[r0 * c_total..r1 * c_total], c_total, nthreads);
+        input.stage1_band(&mut work, r0, r1, engine, nthreads);
         let band_us = tb.elapsed().as_secs_f64() * 1e6;
         fft1_spent += band_us;
         if comm_open.is_some() {

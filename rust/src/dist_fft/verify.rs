@@ -3,12 +3,17 @@
 //! Computes the same transposed-layout FFT a distributed run produces,
 //! entirely on one thread with the native kernel — 2-D: row FFTs →
 //! transpose → row FFTs; 3-D: z FFTs → transpose → y FFTs → transpose →
-//! x FFTs. Used by tests and the CLI's `--verify` flag.
+//! x FFTs. Real-domain (r2c) runs have packed-half-spectrum references
+//! ([`serial_rfft2_packed_transposed`], [`serial_rfft3_packed_transposed`])
+//! plus an O(n²) real-input DFT oracle ([`oracle_rdft`]) and
+//! Hermitian-symmetry checks. Used by tests and the CLI's `--verify`
+//! flag.
 
 use super::grid3::Grid3;
 use super::transpose::{place_chunk_transposed, transpose};
 use crate::fft::complex::Complex32;
 use crate::fft::plan::{Direction, PlanCache};
+use crate::fft::real::rfft_rows_packed;
 
 /// Serial transposed-output 2-D FFT of a row-major `rows × cols` grid.
 /// Output is `cols × rows` (frequency-domain, transposed layout).
@@ -30,16 +35,115 @@ pub fn serial_fft2_transposed(data: &[Complex32], rows: usize, cols: usize) -> V
     t
 }
 
+/// Serial packed-transposed-output 2-D real FFT of a row-major
+/// `rows × cols` real grid — the reference for real-domain distributed
+/// runs. Stage 1 r2c-packs every row into `cols/2` bins, then the
+/// pipeline is identical to [`serial_fft2_transposed`]'s tail: output
+/// is `(cols/2) × rows` in the packed-transposed layout the distributed
+/// result assembles into (row 0 carries the transformed
+/// DC + i·Nyquist packed column; unpack with
+/// [`unpack_packed2_transposed`] for true bins).
+pub fn serial_rfft2_packed_transposed(data: &[f32], rows: usize, cols: usize) -> Vec<Complex32> {
+    assert_eq!(data.len(), rows * cols);
+    assert!(cols % 2 == 0, "real reference needs an even first-axis length");
+
+    // Step 1: r2c each row into the packed half-spectrum.
+    let work = rfft_rows_packed(data, cols);
+
+    // Steps 2+3: transpose the rows × cols/2 spectral grid.
+    let mut t = transpose(&work, rows, cols / 2);
+
+    // Step 4: FFT each spectral column (length rows).
+    PlanCache::global().plan(rows, Direction::Forward).execute_rows(&mut t);
+    t
+}
+
+/// Unpack a packed-transposed 2-D real spectrum (`(cols/2) × rows`, the
+/// layout [`serial_rfft2_packed_transposed`] and the real-domain
+/// distributed runs produce) into the true `(cols/2 + 1) × rows`
+/// Hermitian-unique half-spectrum: row 0 holds the transform of the
+/// packed DC + i·Nyquist column, which splits by conjugate symmetry
+/// into the true bin-0 and Nyquist rows.
+pub fn unpack_packed2_transposed(
+    packed: &[Complex32],
+    rows: usize,
+    cols: usize,
+) -> Vec<Complex32> {
+    let m = cols / 2;
+    assert!(cols % 2 == 0 && m >= 1, "need an even first-axis length");
+    assert_eq!(packed.len(), m * rows, "packed spectrum shape mismatch");
+    let mut out = Vec::with_capacity((m + 1) * rows);
+    // Row 0: Z[r] = A[r] + i·B[r] with A/B the transforms of the real
+    // DC/Nyquist columns, both Hermitian — split them.
+    for r in 0..rows {
+        let z = packed[r];
+        let zc = packed[(rows - r) % rows].conj();
+        out.push((z + zc).scale(0.5));
+    }
+    out.extend_from_slice(&packed[rows..]);
+    for r in 0..rows {
+        let z = packed[r];
+        let zc = packed[(rows - r) % rows].conj();
+        out.push((z - zc).mul_neg_i().scale(0.5));
+    }
+    out
+}
+
+/// Max deviation from the Hermitian self-symmetry a real input's
+/// half-spectrum must satisfy: in the unpacked `(cols/2 + 1) × rows`
+/// transposed layout, the DC row (0) and the Nyquist row (`cols/2`)
+/// each obey `F[c][r] = conj(F[c][(rows−r) % rows])`.
+pub fn hermitian_symmetry_error(half: &[Complex32], rows: usize, cols: usize) -> f32 {
+    let m = cols / 2;
+    assert_eq!(half.len(), (m + 1) * rows, "unpacked half-spectrum shape mismatch");
+    let mut worst = 0.0f32;
+    for &row in &[0usize, m] {
+        for r in 0..rows {
+            let a = half[row * rows + r];
+            let b = half[row * rows + (rows - r) % rows].conj();
+            worst = worst.max((a.re - b.re).abs().max((a.im - b.im).abs()));
+        }
+    }
+    worst
+}
+
+/// O(n²) real-input DFT oracle: the `n/2 + 1` Hermitian-unique bins of
+/// one real row, f64 accumulation — ground truth for the r2c kernel and
+/// the real-domain distributed tests, tiny sizes only.
+pub fn oracle_rdft(x: &[f32]) -> Vec<Complex32> {
+    let n = x.len();
+    assert!(n >= 1, "oracle needs a non-empty signal");
+    let mut out = Vec::with_capacity(n / 2 + 1);
+    for k in 0..=n / 2 {
+        let (mut re, mut im) = (0.0f64, 0.0f64);
+        for (j, &v) in x.iter().enumerate() {
+            let theta = -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+            re += v as f64 * theta.cos();
+            im += v as f64 * theta.sin();
+        }
+        out.push(Complex32::new(re as f32, im as f32));
+    }
+    out
+}
+
 /// Serial transposed-output 3-D FFT of a row-major `[i0][i1][i2]` grid.
 /// Output is `[i2][i1][i0]` (frequency-domain, transposed layout) — the
 /// global shape of the pencil pipeline's distributed result.
 pub fn serial_fft3_transposed(data: &[Complex32], grid: Grid3) -> Vec<Complex32> {
-    let (n0, n1, n2) = (grid.n0, grid.n1, grid.n2);
     assert_eq!(data.len(), grid.elems());
     let mut work = data.to_vec();
 
     // Phase 1: FFT every z-row (length n2).
-    PlanCache::global().plan(n2, Direction::Forward).execute_rows(&mut work);
+    PlanCache::global().plan(grid.n2, Direction::Forward).execute_rows(&mut work);
+    serial_fft3_tail(work, grid)
+}
+
+/// Phases 2–5 of [`serial_fft3_transposed`]: the pipeline downstream of
+/// the z-transform, shared with the real-domain reference (whose phase 1
+/// is an r2c pack instead).
+fn serial_fft3_tail(work: Vec<Complex32>, grid: Grid3) -> Vec<Complex32> {
+    let (n0, n1, n2) = (grid.n0, grid.n1, grid.n2);
+    assert_eq!(work.len(), grid.elems());
 
     // Transpose 1: [i0·n1 + i1][i2] → [i2][i0][i1] (what the
     // row-communicator exchange accomplishes across localities).
@@ -64,6 +168,41 @@ pub fn serial_fft3_transposed(data: &[Complex32], grid: Grid3) -> Vec<Complex32>
 
     // Phase 5: FFT every x-row (length n0).
     PlanCache::global().plan(n0, Direction::Forward).execute_rows(&mut out);
+    out
+}
+
+/// Serial packed-transposed-output 3-D real FFT: phase 1 r2c-packs
+/// every z-row of the real `[i0][i1][i2]` grid into `n2/2` bins, then
+/// phases 2–5 run the complex pipeline on the halved grid. Output is
+/// `[i2'][i1][i0]` with `i2' < n2/2` (packed z-plane 0 carries
+/// DC + i·Nyquist) — the global shape of a real-domain pencil run.
+pub fn serial_rfft3_packed_transposed(data: &[f32], grid: Grid3) -> Vec<Complex32> {
+    assert_eq!(data.len(), grid.elems());
+    assert!(grid.n2 % 2 == 0, "real 3-D reference needs an even z-extent");
+    let work = rfft_rows_packed(data, grid.n2);
+    serial_fft3_tail(work, Grid3::new(grid.n0, grid.n1, grid.n2 / 2))
+}
+
+/// Oracle-grade 2-D DFT in the transposed `cols × rows` layout of
+/// [`serial_fft2_transposed`]: O(n²) DFTs per axis, f64 accumulation —
+/// ground truth for tests, tiny sizes only. Real-domain tests feed it
+/// the complexified real grid and compare the Hermitian-unique rows
+/// `0..=cols/2` against the unpacked distributed output.
+pub fn oracle_fft2_transposed(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32> {
+    use crate::fft::dft::dft;
+    assert_eq!(data.len(), rows * cols);
+    // Row DFTs.
+    let mut work: Vec<Complex32> = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        work.extend(dft(&data[r * cols..(r + 1) * cols]));
+    }
+    // Transpose.
+    let t = transpose(&work, rows, cols);
+    // Row DFTs again.
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..cols {
+        out.extend(dft(&t[r * rows..(r + 1) * rows]));
+    }
     out
 }
 
@@ -120,25 +259,7 @@ pub fn rel_error(a: &[Complex32], b: &[Complex32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dist_fft::partition::Slab;
-    use crate::fft::dft::dft;
-
-    /// Oracle-grade 2-D DFT (transposed output), O(n³)-ish — tiny sizes only.
-    fn oracle_fft2_transposed(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32> {
-        // Row DFTs.
-        let mut work: Vec<Complex32> = Vec::with_capacity(rows * cols);
-        for r in 0..rows {
-            work.extend(dft(&data[r * cols..(r + 1) * cols]));
-        }
-        // Transpose.
-        let t = transpose(&work, rows, cols);
-        // Row DFTs again.
-        let mut out = Vec::with_capacity(rows * cols);
-        for r in 0..cols {
-            out.extend(dft(&t[r * rows..(r + 1) * rows]));
-        }
-        out
-    }
+    use crate::dist_fft::partition::{RealSlab, Slab};
 
     #[test]
     fn matches_oracle() {
@@ -202,6 +323,88 @@ mod tests {
         for v in serial_fft3_transposed(&data, grid) {
             assert!((v.re - 1.0).abs() < 1e-5 && v.im.abs() < 1e-5);
         }
+    }
+
+    /// The packed real 2-D reference must agree with the complex oracle
+    /// on the Hermitian-unique half after unpacking — the ground-truth
+    /// anchor of every real-domain distributed test.
+    #[test]
+    fn rfft2_packed_reference_matches_complex_oracle() {
+        for (rows, cols) in [(8usize, 16usize), (12, 20), (6, 6)] {
+            let real = RealSlab::whole(rows, cols).data;
+            let packed = serial_rfft2_packed_transposed(&real, rows, cols);
+            assert_eq!(packed.len(), (cols / 2) * rows);
+            let half = unpack_packed2_transposed(&packed, rows, cols);
+
+            // Complexified oracle: full cols × rows transposed spectrum.
+            let cx: Vec<Complex32> = real.iter().map(|&v| Complex32::new(v, 0.0)).collect();
+            let full = oracle_fft2_transposed(&cx, rows, cols);
+            let expect = &full[..(cols / 2 + 1) * rows];
+            let err = rel_error(&half, expect);
+            assert!(err < 1e-4, "{rows}×{cols}: rel err {err}");
+
+            // A real input's spectrum is Hermitian — DC and Nyquist rows
+            // are self-conjugate.
+            let sym = hermitian_symmetry_error(&half, rows, cols);
+            assert!(sym < 1e-3, "{rows}×{cols}: Hermitian deviation {sym}");
+        }
+    }
+
+    #[test]
+    fn oracle_rdft_matches_complex_dft() {
+        use crate::fft::dft::dft;
+        let x: Vec<f32> = (0..10).map(|i| (i as f32 * 0.7).sin()).collect();
+        let cx: Vec<Complex32> = x.iter().map(|&v| Complex32::new(v, 0.0)).collect();
+        let full = dft(&cx);
+        let half = oracle_rdft(&x);
+        assert_eq!(half.len(), 6);
+        let err = rel_error(&half, &full[..6]);
+        assert!(err < 1e-5, "rel err {err}");
+    }
+
+    #[test]
+    fn rfft3_packed_reference_matches_complexified_serial() {
+        // The packed 3-D real reference equals: complexify, run the full
+        // complex pipeline on the halved-z grid after manually packing
+        // phase 1 — i.e. the tail refactor is consistent with itself and
+        // the unpacked z-plane values match the complex 3-D transform on
+        // the Hermitian-unique half... pinned here at the z-plane level:
+        // every *non-packed* z-plane (i2' ≥ 1) of the real run must
+        // bitwise-match the complex transform's plane i2'.
+        let grid = Grid3::new(4, 6, 8);
+        let real = crate::dist_fft::grid3::whole_grid_real(grid);
+        let packed = serial_rfft3_packed_transposed(&real, grid);
+        assert_eq!(packed.len(), 4 * 6 * 4);
+
+        let cx: Vec<Complex32> = real.iter().map(|&v| Complex32::new(v, 0.0)).collect();
+        let full = oracle_fft3_transposed(&cx, grid); // [i2][i1][i0]
+        let plane = grid.n0 * grid.n1;
+        for z in 1..grid.n2 / 2 {
+            let err = rel_error(
+                &packed[z * plane..(z + 1) * plane],
+                &full[z * plane..(z + 1) * plane],
+            );
+            assert!(err < 1e-4, "z-plane {z}: rel err {err}");
+        }
+        // Packed plane 0 = FFT2(DC plane) + i·FFT2(Nyquist plane).
+        let m = grid.n2 / 2;
+        for i in 0..plane {
+            let expect = full[i] + full[m * plane + i].mul_i();
+            let got = packed[i];
+            assert!(
+                (got.re - expect.re).abs() < 1e-2 && (got.im - expect.im).abs() < 1e-2,
+                "packed plane elem {i}: {got:?} vs {expect:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn hermitian_error_detects_asymmetry() {
+        let (rows, cols) = (4usize, 4usize);
+        let mut half = vec![Complex32::ZERO; (cols / 2 + 1) * rows];
+        assert_eq!(hermitian_symmetry_error(&half, rows, cols), 0.0);
+        half[1] = Complex32::new(0.0, 1.0); // breaks conj(F[0][3]) = F[0][1]
+        assert!(hermitian_symmetry_error(&half, rows, cols) >= 1.0);
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! - [`dft`] — the O(n²) oracle used only by tests,
 //! - [`batch`] — row-batched transforms executed in parallel on the
 //!   shared [`crate::task::ThreadPool`] (the "+pthreads" in the paper's
-//!   FFTW3 MPI+pthreads reference).
+//!   FFTW3 MPI+pthreads reference),
+//! - [`real`] — r2c/c2r transforms: the packed half-complex trick over
+//!   the same plan engine, so real-input grids (the paper's reference
+//!   workload) ship half the spectral payload.
 //!
 //! All transforms are unnormalized forward / `1/n`-normalized inverse,
 //! matching both FFTW and `jnp.fft` conventions so the three compute
@@ -28,6 +31,7 @@ pub mod complex;
 pub mod dft;
 pub mod plan;
 pub mod radix2;
+pub mod real;
 pub mod twiddle;
 
 mod bluestein;
@@ -36,3 +40,4 @@ mod mixed;
 pub use batch::fft_rows_parallel;
 pub use complex::Complex32;
 pub use plan::{Direction, FftScratch, Plan, PlanCache};
+pub use real::{irfft, rfft, RealPlan, RealPlanCache};

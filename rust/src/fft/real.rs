@@ -1,0 +1,449 @@
+//! Real-input (r2c) and real-output (c2r) transforms.
+//!
+//! The paper's FFTW3+MPI reference transforms *real* input — the
+//! workload of the companion case study (Strack et al., "Experiences
+//! Porting Distributed Applications to Asynchronous Tasks: A
+//! Multidimensional FFT Case-study") — so a real grid should cost half
+//! the wire traffic of a complex one. This module provides that
+//! substrate on top of the existing mixed-radix [`Plan`] engine:
+//!
+//! - [`rfft`] / [`irfft`] — the r2c transform to the `n/2 + 1`
+//!   Hermitian-unique bins and its c2r inverse. Even lengths run the
+//!   **packed half-complex trick** (one `n/2`-point complex FFT of the
+//!   even/odd-interleaved samples plus an O(n) twiddle recombination);
+//!   odd lengths fall back to a complex transform of the real signal,
+//!   which routes primes > 61 through the Bluestein engine exactly like
+//!   any other plan.
+//! - [`RealPlan`] — the reusable even-length r2c plan (half-length
+//!   complex plan + recombination twiddles), memoized process-wide in
+//!   [`RealPlanCache`] like the complex plans.
+//! - the **packed half-spectrum** ([`rfft_packed`],
+//!   [`unpack_half_spectrum`], [`pack_half_spectrum`]): for even `n`,
+//!   bins 0 and `n/2` are purely real, so the `n/2 + 1` bins fit in
+//!   exactly `n/2` complex slots — slot 0 carries `(X[0].re, X[n/2].re)`
+//!   and slots `1..n/2` carry `X[k]` verbatim. The distributed FFT ships
+//!   this layout over the wire: a real `R × C` grid moves `C/2` spectral
+//!   columns instead of `C`, halving every transpose round's payload.
+//! - [`rfft_rows_packed`] / [`rfft_rows_packed_into`] — row batches of
+//!   packed transforms, fanned over the shared worker pool like
+//!   [`crate::fft::batch::fft_rows_parallel`].
+
+use super::complex::Complex32;
+use super::plan::{Direction, FftScratch, Plan, PlanCache};
+use crate::task::parallel_chunks_mut;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of Hermitian-unique bins of an `n`-point real transform:
+/// `n/2 + 1`.
+pub fn spectrum_len(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// A reusable r2c plan for one even length `n`: the `n/2`-point complex
+/// plan (from the global [`PlanCache`]) plus the recombination twiddles
+/// `e^{-2πik/n}`. Executing it performs the packed half-complex trick:
+/// the real samples are viewed as `n/2` complex numbers, transformed
+/// once, and recombined in O(n).
+pub struct RealPlan {
+    n: usize,
+    half: Arc<Plan>,
+    /// `w^k = e^{-2πik/n}` for `k = 0..n/2` (f64-computed, rounded once).
+    twiddles: Vec<Complex32>,
+}
+
+impl RealPlan {
+    /// Plan an `n`-point r2c transform. `n` must be even and ≥ 2 (odd
+    /// lengths go through the [`rfft`] complex fallback instead).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2 && n % 2 == 0, "RealPlan requires even n >= 2, got {n}");
+        let m = n / 2;
+        let twiddles = (0..m)
+            .map(|k| {
+                Complex32::cis_f64(-2.0 * std::f64::consts::PI * k as f64 / n as f64)
+            })
+            .collect();
+        Self { n, half: PlanCache::global().plan(m, Direction::Forward), twiddles }
+    }
+
+    /// Real transform length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Always `false` — real plans have length ≥ 2 (API symmetry with
+    /// `len`).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Packed output length, `n/2` complex slots.
+    pub fn packed_len(&self) -> usize {
+        self.n / 2
+    }
+
+    /// r2c of one length-`n` real row into the packed half-spectrum
+    /// (`n/2` slots, slot 0 = `(X[0].re, X[n/2].re)`), reusing
+    /// caller-owned scratch. `out` doubles as the half-length complex
+    /// staging buffer, so the transform allocates nothing.
+    ///
+    /// # Panics
+    /// If `x.len() != n` or `out.len() != n/2`.
+    pub fn execute_packed(&self, x: &[f32], out: &mut [Complex32], scratch: &mut FftScratch) {
+        let m = self.n / 2;
+        assert_eq!(x.len(), self.n, "input length {} != plan length {}", x.len(), self.n);
+        assert_eq!(out.len(), m, "output length {} != packed length {m}", out.len());
+
+        // Pack: z[j] = x[2j] + i·x[2j+1], then one m-point complex FFT.
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = Complex32::new(x[2 * j], x[2 * j + 1]);
+        }
+        self.half.execute_with_scratch(out, scratch);
+
+        // Recombine in place. With E/O the (Hermitian) spectra of the
+        // even/odd sample streams: X[k] = E[k] + w^k·O[k], and the
+        // (k, m−k) pair is computed together from Z[k], Z[m−k].
+        let z0 = out[0];
+        out[0] = Complex32::new(z0.re + z0.im, z0.re - z0.im); // (X[0], X[m])
+        for k in 1..=m / 2 {
+            let j = m - k;
+            if k == j {
+                // Mid-bin (m even): w^{m/2} = −i collapses to a conjugate.
+                out[k] = out[k].conj();
+            } else {
+                let (zk, zj) = (out[k], out[j]);
+                let e = (zk + zj.conj()).scale(0.5);
+                let o = (zk - zj.conj()).mul_neg_i().scale(0.5);
+                out[k] = e + self.twiddles[k] * o;
+                out[j] = e.conj() + self.twiddles[j] * o.conj();
+            }
+        }
+    }
+}
+
+/// Memoized per-length [`RealPlan`]s, shared across threads — the r2c
+/// counterpart of [`PlanCache`].
+pub struct RealPlanCache {
+    plans: Mutex<HashMap<usize, Arc<RealPlan>>>,
+}
+
+impl RealPlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self { plans: Mutex::new(HashMap::new()) }
+    }
+
+    /// Process-wide cache.
+    pub fn global() -> &'static RealPlanCache {
+        static CACHE: OnceLock<RealPlanCache> = OnceLock::new();
+        CACHE.get_or_init(RealPlanCache::new)
+    }
+
+    /// The memoized plan for even length `n`, building it on first
+    /// request (built outside the lock, first insert wins — the same
+    /// discipline as [`PlanCache::plan`]).
+    pub fn plan(&self, n: usize) -> Arc<RealPlan> {
+        if let Some(plan) = self.plans.lock().unwrap().get(&n) {
+            return Arc::clone(plan);
+        }
+        let built = Arc::new(RealPlan::new(n));
+        match self.plans.lock().unwrap().entry(n) {
+            Entry::Occupied(e) => Arc::clone(e.get()),
+            Entry::Vacant(e) => Arc::clone(e.insert(built)),
+        }
+    }
+}
+
+impl Default for RealPlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// r2c of one real row to the packed half-spectrum (`n/2` slots). Even
+/// lengths only; loops should plan once via [`RealPlanCache`] and use
+/// [`RealPlan::execute_packed`].
+pub fn rfft_packed(x: &[f32]) -> Vec<Complex32> {
+    let plan = RealPlanCache::global().plan(x.len());
+    let mut out = vec![Complex32::ZERO; plan.packed_len()];
+    plan.execute_packed(x, &mut out, &mut FftScratch::new());
+    out
+}
+
+/// Expand a packed half-spectrum (`n/2` slots) to the full `n/2 + 1`
+/// Hermitian-unique bins: slot 0 splits into the purely real DC and
+/// Nyquist bins.
+pub fn unpack_half_spectrum(packed: &[Complex32]) -> Vec<Complex32> {
+    let m = packed.len();
+    assert!(m >= 1, "packed spectrum must be non-empty");
+    let mut out = Vec::with_capacity(m + 1);
+    out.push(Complex32::new(packed[0].re, 0.0));
+    out.extend_from_slice(&packed[1..]);
+    out.push(Complex32::new(packed[0].im, 0.0));
+    out
+}
+
+/// Inverse of [`unpack_half_spectrum`]: fold `n/2 + 1` bins back into
+/// `n/2` packed slots (the DC and Nyquist imaginary parts, zero for any
+/// real input's spectrum, are dropped).
+pub fn pack_half_spectrum(spec: &[Complex32]) -> Vec<Complex32> {
+    assert!(spec.len() >= 2, "need at least the DC and Nyquist bins");
+    let m = spec.len() - 1;
+    let mut out = Vec::with_capacity(m);
+    out.push(Complex32::new(spec[0].re, spec[m].re));
+    out.extend_from_slice(&spec[1..m]);
+    out
+}
+
+/// r2c transform of a real signal to its `n/2 + 1` Hermitian-unique
+/// bins. Even lengths run the packed half-complex trick; odd lengths
+/// (including primes — the Bluestein path for primes > 61) run a
+/// complex transform of the real signal and keep the unique half.
+///
+/// ```
+/// use hpx_fft::fft::real::{irfft, rfft};
+///
+/// let x = [1.0f32, 2.0, 3.0, 4.0, 3.0, 1.0];
+/// let spec = rfft(&x);
+/// assert_eq!(spec.len(), 4); // 6/2 + 1 bins
+/// assert!(spec[0].im.abs() < 1e-6 && spec[3].im.abs() < 1e-6);
+/// let back = irfft(&spec, 6);
+/// for (a, b) in back.iter().zip(&x) {
+///     assert!((a - b).abs() < 1e-5);
+/// }
+/// ```
+pub fn rfft(x: &[f32]) -> Vec<Complex32> {
+    let n = x.len();
+    assert!(n >= 1, "rfft requires a non-empty signal");
+    if n == 1 {
+        return vec![Complex32::new(x[0], 0.0)];
+    }
+    if n % 2 == 0 {
+        return unpack_half_spectrum(&rfft_packed(x));
+    }
+    // Odd lengths: complex transform of the real signal (primes > 61 hit
+    // the Bluestein engine), keep bins 0..n/2.
+    let mut buf: Vec<Complex32> = x.iter().map(|&v| Complex32::new(v, 0.0)).collect();
+    PlanCache::global().plan(n, Direction::Forward).execute(&mut buf);
+    buf.truncate(spectrum_len(n));
+    buf
+}
+
+/// c2r inverse of [`rfft`]: reconstruct the length-`n` real signal from
+/// its `n/2 + 1` Hermitian-unique bins (the mirrored half is derived by
+/// conjugate symmetry, then one `1/n`-normalized inverse plan runs).
+pub fn irfft(spec: &[Complex32], n: usize) -> Vec<f32> {
+    assert!(n >= 1, "irfft requires n >= 1");
+    assert_eq!(spec.len(), spectrum_len(n), "expected {} bins for n = {n}", spectrum_len(n));
+    if n == 1 {
+        return vec![spec[0].re];
+    }
+    let mut full = vec![Complex32::ZERO; n];
+    full[..spec.len()].copy_from_slice(spec);
+    for j in spec.len()..n {
+        full[j] = spec[n - j].conj();
+    }
+    PlanCache::global().plan(n, Direction::Inverse).execute(&mut full);
+    full.into_iter().map(|c| c.re).collect()
+}
+
+/// r2c every length-`n` real row of `src` (`rows × n`, row-major) into
+/// packed half-spectra written to `out` (`rows × n/2`, row-major),
+/// fanning contiguous row bands over the shared worker pool — the
+/// real-domain counterpart of [`crate::fft::batch::fft_rows_parallel`],
+/// and the stage-1 kernel of the real-domain distributed FFT. Rows are
+/// independent, so results are bitwise identical for any band split and
+/// thread count.
+pub fn rfft_rows_packed_into(src: &[f32], n: usize, out: &mut [Complex32], nthreads: usize) {
+    assert!(n >= 2 && n % 2 == 0, "packed row batches need even n >= 2, got {n}");
+    assert!(src.len() % n == 0, "source not a whole number of rows");
+    let rows = src.len() / n;
+    let m = n / 2;
+    assert_eq!(out.len(), rows * m, "output must be rows × n/2");
+    if rows == 0 {
+        return;
+    }
+    let plan = RealPlanCache::global().plan(n);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let nthreads = nthreads.min(hw).max(1);
+    if nthreads == 1 || rows == 1 {
+        let mut scratch = FftScratch::new();
+        for (r, orow) in out.chunks_exact_mut(m).enumerate() {
+            plan.execute_packed(&src[r * n..(r + 1) * n], orow, &mut scratch);
+        }
+        return;
+    }
+    let rows_per_chunk = rows.div_ceil(nthreads);
+    parallel_chunks_mut(out, rows_per_chunk * m, nthreads, |band_idx, band| {
+        let mut scratch = FftScratch::new();
+        for (k, orow) in band.chunks_exact_mut(m).enumerate() {
+            let r = band_idx * rows_per_chunk + k;
+            plan.execute_packed(&src[r * n..(r + 1) * n], orow, &mut scratch);
+        }
+    });
+}
+
+/// Allocating convenience wrapper over [`rfft_rows_packed_into`]
+/// (single-threaded — serial references and tests).
+pub fn rfft_rows_packed(src: &[f32], n: usize) -> Vec<Complex32> {
+    let rows = src.len() / n;
+    let mut out = vec![Complex32::ZERO; rows * (n / 2)];
+    rfft_rows_packed_into(src, n, &mut out, 1);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::util::rng::Pcg32;
+
+    fn random_real(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| rng.next_signal()).collect()
+    }
+
+    /// O(n²) f64 oracle: complexify, DFT, keep the unique half.
+    fn oracle_half(x: &[f32]) -> Vec<Complex32> {
+        let cx: Vec<Complex32> = x.iter().map(|&v| Complex32::new(v, 0.0)).collect();
+        let mut full = dft(&cx);
+        full.truncate(spectrum_len(x.len()));
+        full
+    }
+
+    /// `atol + rtol·|expected|` per component (the [`assert_close`]
+    /// convention of `util::testkit`).
+    fn assert_spec_close(a: &[Complex32], b: &[Complex32], tol: f32, ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: bin count");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let tol_re = tol + tol * y.re.abs();
+            let tol_im = tol + tol * y.im.abs();
+            assert!(
+                (x.re - y.re).abs() < tol_re && (x.im - y.im).abs() < tol_im,
+                "{ctx}: bin {i}: {x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rfft_matches_oracle_even_lengths() {
+        for &n in &[2usize, 4, 6, 8, 12, 24, 64, 96, 1000] {
+            let x = random_real(n as u64, n);
+            assert_spec_close(&rfft(&x), &oracle_half(&x), 2e-3, &format!("n={n}"));
+        }
+    }
+
+    /// The satellite edge case: odd first-axis lengths, including a
+    /// prime > 61 that routes the fallback through the Bluestein engine.
+    #[test]
+    fn rfft_matches_oracle_odd_and_bluestein_lengths() {
+        use crate::fft::plan::Plan;
+        assert!(Plan::new(67, Direction::Forward).uses_bluestein());
+        for &n in &[3usize, 5, 9, 13, 15, 67, 101] {
+            let x = random_real(1000 + n as u64, n);
+            assert_spec_close(&rfft(&x), &oracle_half(&x), 2e-3, &format!("n={n}"));
+        }
+    }
+
+    /// The other satellite edge case: n = 1 rows are the identity.
+    #[test]
+    fn rfft_length_one_is_identity() {
+        let spec = rfft(&[4.5]);
+        assert_eq!(spec, vec![Complex32::new(4.5, 0.0)]);
+        assert_eq!(irfft(&spec, 1), vec![4.5]);
+    }
+
+    #[test]
+    fn dc_and_nyquist_bins_are_real() {
+        for &n in &[2usize, 8, 12, 96] {
+            let x = random_real(7 + n as u64, n);
+            let spec = rfft(&x);
+            assert!(spec[0].im.abs() < 1e-5, "n={n}: DC bin must be real");
+            assert!(spec[n / 2].im.abs() < 1e-5, "n={n}: Nyquist bin must be real");
+        }
+    }
+
+    #[test]
+    fn roundtrip_even_and_odd() {
+        for &n in &[1usize, 2, 3, 8, 12, 13, 24, 67, 96] {
+            let x = random_real(55 + n as u64, n);
+            let back = irfft(&rfft(&x), n);
+            for (i, (a, b)) in back.iter().zip(&x).enumerate() {
+                assert!((a - b).abs() < 1e-4, "n={n} sample {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_layout_roundtrips() {
+        let x = random_real(3, 24);
+        let packed = rfft_packed(&x);
+        assert_eq!(packed.len(), 12);
+        let spec = unpack_half_spectrum(&packed);
+        assert_eq!(spec.len(), 13);
+        assert_spec_close(&spec, &rfft(&x), 1e-6, "unpacked == rfft");
+        assert_eq!(pack_half_spectrum(&spec), packed);
+    }
+
+    #[test]
+    fn impulse_transforms_to_flat_spectrum() {
+        let mut x = vec![0.0f32; 16];
+        x[0] = 1.0;
+        for bin in rfft(&x) {
+            assert!((bin.re - 1.0).abs() < 1e-6 && bin.im.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn row_batches_match_per_row_any_thread_count() {
+        let (rows, n) = (7, 24);
+        let src = random_real(11, rows * n);
+        let serial = rfft_rows_packed(&src, n);
+        for nthreads in [1usize, 2, 4, 8] {
+            let mut out = vec![Complex32::ZERO; rows * (n / 2)];
+            rfft_rows_packed_into(&src, n, &mut out, nthreads);
+            assert_eq!(out, serial, "nthreads={nthreads}");
+        }
+        // Band splits (the async wire-chunk schedule) are bitwise stable.
+        for band in [1usize, 2, 3, 5] {
+            let mut banded = vec![Complex32::ZERO; rows * (n / 2)];
+            let mut r = 0;
+            while r < rows {
+                let hi = (r + band).min(rows);
+                rfft_rows_packed_into(
+                    &src[r * n..hi * n],
+                    n,
+                    &mut banded[r * (n / 2)..hi * (n / 2)],
+                    2,
+                );
+                r = hi;
+            }
+            assert_eq!(banded, serial, "band={band}");
+        }
+    }
+
+    #[test]
+    fn real_plan_cache_memoizes() {
+        let a = RealPlanCache::global().plan(48);
+        let b = RealPlanCache::global().plan(48);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 48);
+        assert_eq!(a.packed_len(), 24);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "even n")]
+    fn real_plan_rejects_odd_length() {
+        RealPlan::new(9);
+    }
+
+    #[test]
+    fn spectrum_len_formula() {
+        assert_eq!(spectrum_len(1), 1);
+        assert_eq!(spectrum_len(2), 2);
+        assert_eq!(spectrum_len(7), 4);
+        assert_eq!(spectrum_len(8), 5);
+    }
+}

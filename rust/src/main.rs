@@ -16,11 +16,11 @@
 
 use anyhow::{bail, Result};
 use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
-use hpx_fft::bench_harness::{fig3, fig45, fig6, runner::measure};
+use hpx_fft::bench_harness::{fig3, fig45, fig6, fig7, runner::measure};
 use hpx_fft::cli::Args;
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
 use hpx_fft::config::{BenchConfig, ClusterSpec};
-use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
+use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant};
 use hpx_fft::dist_fft::grid3::{Grid3, ProcGrid};
 use hpx_fft::dist_fft::pencil::{self, Pencil3Config};
 use hpx_fft::hpx::parcel::Payload;
@@ -34,6 +34,7 @@ USAGE:
   repro info
   repro fft [--rows N] [--cols N] [--nodes N] [--port tcp|mpi|lci]
             [--variant all-to-all|scatter] [--exec blocking|async]
+            [--domain complex|real]
             [--algo linear|pairwise|pairwise-chunked|bruck|hpx-root]
             [--chunk-bytes N] [--inflight N]
             [--threads N] [--engine native|pjrt] [--artifacts DIR]
@@ -41,13 +42,18 @@ USAGE:
             (grid lengths may be anything divisible by --nodes — the
              planner is mixed-radix, e.g. --rows 12 --cols 96;
              --exec async runs the future-chained task graph and reports
-             the comm/compute overlap window)
+             the comm/compute overlap window; --domain real runs the
+             r2c transform — packed half-spectrum transposes, ~half the
+             wire bytes; needs even --cols with cols/2 divisible by N)
   repro fft3 [--grid3 N0xN1xN2] [--proc-grid PRxPC] [--port tcp|mpi|lci]
-             [--exec blocking|async] [--chunk-bytes N] [--inflight N]
+             [--exec blocking|async] [--domain complex|real]
+             [--chunk-bytes N] [--inflight N]
              [--threads N] [--net] [--no-verify]
             (3-D pencil-decomposition FFT on a PrxPc process grid:
              FFT(z) → row-comm transpose → FFT(y) → column-comm
-             transpose → FFT(x); constraints Pr|n0, Pr|n1, Pc|n1, Pc|n2)
+             transpose → FFT(x); constraints Pr|n0, Pr|n1, Pc|n1, Pc|n2;
+             --domain real additionally needs even n2 with n2/2
+             divisible by Pc)
   repro baseline [--rows N] [--cols N] [--nodes N] [--threads N] [--net]
   repro bench chunk-size      [--quick] [--reps N] [--out DIR]
                               [--chunk-bytes N] [--inflight N]
@@ -59,9 +65,14 @@ USAGE:
                               [--shapes 1x4,2x2,4x1] [--threads N]
                               [--out DIR] [--chunk-bytes N] [--inflight N]
                               (sweeps every shape × port × exec mode)
+  repro bench fig7            [--quick] [--reps N] [--grid N] [--out DIR]
+                              [--threads N] [--chunk-bytes N] [--inflight N]
+                              (real-vs-complex sweep: every port × exec
+                               mode × domain, with measured wire bytes;
+                               writes fig7_real.csv)
   repro bench collectives     [--nodes N] [--bytes N] [--reps N]
                               [--chunk-bytes N] [--inflight N]
-  repro simulate [--grid N] [--port tcp|mpi|lci]
+  repro simulate [--grid N] [--port tcp|mpi|lci] [--domain complex|real]
                  [--variant all-to-all|scatter|fftw3] [--nodes-list 1,2,4,8,16]
   repro help
 ";
@@ -89,6 +100,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             Some("chunk-size") => cmd_bench_chunk(&args),
             Some("strong-scaling") => cmd_bench_scaling(&args),
             Some("fig6") | Some("pencil") => cmd_bench_fig6(&args),
+            Some("fig7") | Some("real") => cmd_bench_fig7(&args),
             Some("collectives") => cmd_bench_collectives(&args),
             other => bail!("unknown bench target {other:?}; see `repro help`"),
         },
@@ -144,20 +156,32 @@ fn parse_engine(args: &Args) -> Result<ComputeEngine> {
     }
 }
 
-/// Parse the `--chunk-bytes` / `--inflight` pair into a [`ChunkPolicy`].
+/// Parse the `--chunk-bytes` / `--inflight` pair into a [`ChunkPolicy`],
+/// rejecting zeros here — at parse time, with the flag named — instead
+/// of letting them reach the wire protocol's clamp.
 fn parse_chunk_policy(args: &Args) -> Result<ChunkPolicy> {
     let default = ChunkPolicy::default();
     let chunk_bytes: usize = args.get_or("chunk-bytes", default.chunk_bytes)?;
     let inflight: usize = args.get_or("inflight", default.inflight)?;
-    anyhow::ensure!(chunk_bytes > 0, "--chunk-bytes must be positive");
-    anyhow::ensure!(inflight > 0, "--inflight must be positive");
+    anyhow::ensure!(
+        chunk_bytes > 0,
+        "--chunk-bytes must be ≥ 1 (a zero wire chunk can never carry data; \
+         the default is {} bytes)",
+        default.chunk_bytes
+    );
+    anyhow::ensure!(
+        inflight > 0,
+        "--inflight must be ≥ 1 (zero in-flight chunks would stall every \
+         transfer; the default is {})",
+        default.inflight
+    );
     Ok(ChunkPolicy::new(chunk_bytes, inflight))
 }
 
 fn cmd_fft(args: &Args) -> Result<()> {
     args.check_known(&[
-        "rows", "cols", "nodes", "port", "variant", "exec", "algo", "chunk-bytes", "inflight",
-        "threads", "engine", "artifacts", "net", "no-verify",
+        "rows", "cols", "nodes", "port", "variant", "exec", "domain", "algo", "chunk-bytes",
+        "inflight", "threads", "engine", "artifacts", "net", "no-verify",
     ])?;
     let config = DistFftConfig {
         rows: args.get_or("rows", 256usize)?,
@@ -168,6 +192,7 @@ fn cmd_fft(args: &Args) -> Result<()> {
         algo: args.get_or("algo", AllToAllAlgo::HpxRoot)?,
         chunk: parse_chunk_policy(args)?,
         exec: args.get_or("exec", ExecutionMode::Blocking)?,
+        domain: args.get_or("domain", Domain::Complex)?,
         threads_per_locality: args.get_or("threads", 2usize)?,
         net: args.get_bool("net").then(NetModel::infiniband_hdr),
         engine: parse_engine(args)?,
@@ -208,8 +233,8 @@ fn cmd_fft(args: &Args) -> Result<()> {
 
 fn cmd_fft3(args: &Args) -> Result<()> {
     args.check_known(&[
-        "grid3", "proc-grid", "port", "exec", "chunk-bytes", "inflight", "threads", "net",
-        "no-verify",
+        "grid3", "proc-grid", "port", "exec", "domain", "chunk-bytes", "inflight", "threads",
+        "net", "no-verify",
     ])?;
     let config = Pencil3Config {
         grid: args.get_or("grid3", Grid3::new(32, 32, 32))?,
@@ -217,6 +242,7 @@ fn cmd_fft3(args: &Args) -> Result<()> {
         port: args.get_or("port", PortKind::Lci)?,
         chunk: parse_chunk_policy(args)?,
         exec: args.get_or("exec", ExecutionMode::Blocking)?,
+        domain: args.get_or("domain", Domain::Complex)?,
         threads_per_locality: args.get_or("threads", 2usize)?,
         net: args.get_bool("net").then(NetModel::infiniband_hdr),
         engine: ComputeEngine::Native,
@@ -374,14 +400,33 @@ fn cmd_bench_fig6(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_fig7(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight",
+    ])?;
+    let cfg = bench_config(args)?;
+    println!(
+        "fig7 sweep: {0}×{0} grid, {1} localities, all ports, blocking + async, \
+         complex + real domains, {2} reps/point\n",
+        cfg.live_grid,
+        fig7::FIG7_NODES,
+        cfg.reps
+    );
+    let points = fig7::run(&cfg)?;
+    print!("{}", fig7::report(&points, &cfg, &cfg.out_dir)?);
+    println!("CSV written to {}/fig7_real.csv", cfg.out_dir);
+    Ok(())
+}
+
 /// Direct access to the cluster-scale DES: per-node-count makespan,
 /// comm-blocked time, and wire volume for one system (the numbers behind
 /// the Figs. 4/5 series, with the breakdown the figures hide).
 fn cmd_simulate(args: &Args) -> Result<()> {
     use hpx_fft::simnet::fft_model::{predict_fft, FftModelParams, ModelVariant};
-    args.check_known(&["grid", "port", "variant", "nodes-list"])?;
+    args.check_known(&["grid", "port", "variant", "domain", "nodes-list"])?;
     let grid: usize = args.get_or("grid", 1usize << 14)?;
     let port: PortKind = args.get_or("port", PortKind::Lci)?;
+    let domain: Domain = args.get_or("domain", Domain::Complex)?;
     let variant = match args.get("variant").unwrap_or("scatter") {
         "scatter" => ModelVariant::Scatter,
         "all-to-all" | "a2a" => ModelVariant::AllToAll(AllToAllAlgo::HpxRoot),
@@ -397,17 +442,27 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let spec = ClusterSpec::buran();
     println!(
-        "simnet: {grid}×{grid} grid, {port} port, {variant:?}, buran wire+compute model\n"
+        "simnet: {grid}×{grid} grid, {port} port, {variant:?}, {} domain, \
+         buran wire+compute model\n",
+        domain.name()
     );
     let mut t = hpx_fft::metrics::table::Table::new(&[
         "nodes", "makespan", "max blocked (comm)", "wire bytes", "chunk",
     ]);
     for nodes in nodes_list {
         anyhow::ensure!(grid % nodes == 0, "grid {grid} not divisible by {nodes} nodes");
+        if domain == Domain::Real {
+            anyhow::ensure!(
+                grid % 2 == 0 && (grid / 2) % nodes == 0,
+                "real-domain grid {grid}: packed spectrum {} must divide by {nodes} nodes",
+                grid / 2
+            );
+        }
         let params = FftModelParams {
             rows: grid,
             cols: grid,
             nodes,
+            domain,
             compute: spec.compute_model(),
             net: spec.net_model(),
         };

@@ -8,8 +8,20 @@ pub struct RunStats {
 
 impl RunStats {
     /// Wrap a non-empty sample set.
+    ///
+    /// # Panics
+    /// If `samples` is empty, or any sample is NaN or infinite — a
+    /// poisoned timing sample would otherwise corrupt every derived
+    /// statistic (and, before this check, a single NaN panicked the
+    /// harness deep inside `median`'s sort, mid-sweep, with no hint of
+    /// which sample was bad).
     pub fn new(samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty(), "need at least one sample");
+        if let Some((i, bad)) =
+            samples.iter().enumerate().find(|(_, s)| !s.is_finite())
+        {
+            panic!("sample {i} is not finite ({bad}): RunStats requires finite timing samples");
+        }
         Self { samples }
     }
 
@@ -47,7 +59,10 @@ impl RunStats {
     /// Median sample.
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: the constructor
+        // rejects NaN, but a total order keeps every sample sort
+        // panic-free by construction.
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         if n % 2 == 1 {
             s[n / 2]
@@ -130,6 +145,28 @@ mod tests {
     #[should_panic(expected = "at least one")]
     fn empty_rejected() {
         RunStats::new(vec![]);
+    }
+
+    /// Regression: a single NaN timing sample used to survive until
+    /// `median`'s `partial_cmp(..).unwrap()` and panic there, mid-sweep,
+    /// without naming the culprit. It is now rejected at construction
+    /// with the offending index.
+    #[test]
+    #[should_panic(expected = "sample 2 is not finite")]
+    fn nan_sample_rejected_with_index() {
+        RunStats::new(vec![1.0, 2.0, f64::NAN, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not finite")]
+    fn infinite_sample_rejected() {
+        RunStats::new(vec![1.0, f64::INFINITY]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not finite")]
+    fn negative_infinity_rejected() {
+        RunStats::new(vec![f64::NEG_INFINITY]);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use super::compute::ComputeModel;
 use super::sim::{Schedule, SimNet, SimReport};
 use crate::collectives::AllToAllAlgo;
+use crate::dist_fft::driver::Domain;
 use crate::dist_fft::grid3::{Grid3, PencilDims, ProcGrid};
 use crate::parcelport::{NetModel, PortKind};
 
@@ -21,6 +22,11 @@ pub struct FftModelParams {
     pub cols: usize,
     /// Locality count.
     pub nodes: usize,
+    /// Input domain: real-input (r2c) runs transpose the packed
+    /// `cols/2`-bin half-spectrum, so the modeled wire volume — the
+    /// dominant cost the communication study measures — halves, and the
+    /// first FFT sweep runs at the packed length.
+    pub domain: Domain,
     /// Per-node compute-rate model.
     pub compute: ComputeModel,
     /// Wire model.
@@ -28,12 +34,14 @@ pub struct FftModelParams {
 }
 
 impl FftModelParams {
-    /// The paper's strong-scaling problem: 2^14 × 2^14 on buran.
+    /// The paper's strong-scaling problem: 2^14 × 2^14 on buran
+    /// (complex domain).
     pub fn paper(nodes: usize) -> Self {
         Self {
             rows: 1 << 14,
             cols: 1 << 14,
             nodes,
+            domain: Domain::Complex,
             compute: ComputeModel::buran(),
             net: NetModel::infiniband_hdr(),
         }
@@ -43,18 +51,28 @@ impl FftModelParams {
         self.rows / self.nodes
     }
 
-    fn chunk_cols(&self) -> usize {
-        self.cols / self.nodes
+    /// Columns of the spectral slab the transpose rounds actually move:
+    /// `cols` for the complex domain, the packed `cols/2` for r2c.
+    fn spectral_cols(&self) -> usize {
+        match self.domain {
+            Domain::Complex => self.cols,
+            Domain::Real => self.cols / 2,
+        }
     }
 
-    /// One all-to-all chunk, bytes (complex64 elements).
+    fn chunk_cols(&self) -> usize {
+        self.spectral_cols() / self.nodes
+    }
+
+    /// One all-to-all chunk, bytes (complex64 elements of the spectral
+    /// slab — half the complex volume in the real domain).
     pub fn chunk_bytes(&self) -> u64 {
         (self.local_rows() * self.chunk_cols() * 8) as u64
     }
 
-    /// One locality's whole slab, bytes.
+    /// One locality's whole spectral slab, bytes.
     pub fn slab_bytes(&self) -> u64 {
-        (self.local_rows() * self.cols * 8) as u64
+        (self.local_rows() * self.spectral_cols() * 8) as u64
     }
 }
 
@@ -73,7 +91,10 @@ pub enum ModelVariant {
 
 /// Predict one run; returns the DES report (makespan = the figure's y).
 pub fn predict_fft(params: &FftModelParams, port: PortKind, variant: ModelVariant) -> SimReport {
-    assert!(params.rows % params.nodes == 0 && params.cols % params.nodes == 0);
+    assert!(
+        params.rows % params.nodes == 0 && params.spectral_cols() % params.nodes == 0,
+        "grid must divide over the nodes (spectral columns included)"
+    );
     let (cost, schedules) = match variant {
         ModelVariant::AllToAll(algo) => (port.cost_model(), all_to_all_schedules(params, algo)),
         ModelVariant::Scatter => (port.cost_model(), scatter_schedules(params)),
@@ -84,10 +105,13 @@ pub fn predict_fft(params: &FftModelParams, port: PortKind, variant: ModelVarian
     SimNet::new(params.net, cost).run(&schedules)
 }
 
-/// Shared prologue: step-1 FFT sweep + chunk packing.
+/// Shared prologue: step-1 FFT sweep + chunk packing. Real-domain runs
+/// charge the packed half-length sweep (the r2c trick is one `C/2`-point
+/// complex FFT plus an O(C) recombination per row) and pack half the
+/// bytes.
 fn prologue(params: &FftModelParams, sched: &mut Schedule) {
     let lr = params.local_rows();
-    sched.compute(params.compute.fft_rows_us(lr, params.cols), "fft1");
+    sched.compute(params.compute.fft_rows_us(lr, params.spectral_cols()), "fft1");
     sched.compute(params.compute.transpose_us(params.slab_bytes()), "pack");
 }
 
@@ -349,6 +373,40 @@ mod tests {
         // (2^14/16) × (2^14/16) × 8 = 1024·1024·8 = 8 MiB.
         assert_eq!(p.chunk_bytes(), 8 << 20);
         assert_eq!(p.slab_bytes(), 128 << 20);
+    }
+
+    /// The r2c traffic model: a real-domain run moves exactly half the
+    /// complex-domain wire bytes on every variant, and never more wall
+    /// time.
+    #[test]
+    fn real_domain_halves_modeled_wire_traffic() {
+        let complex = FftModelParams::paper(16);
+        let real = FftModelParams { domain: Domain::Real, ..complex };
+        for variant in [
+            ModelVariant::Scatter,
+            ModelVariant::AllToAll(AllToAllAlgo::Pairwise),
+            ModelVariant::AllToAll(AllToAllAlgo::HpxRoot),
+            ModelVariant::FftwBaseline,
+        ] {
+            for port in PortKind::ALL {
+                let c = predict_fft(&complex, port, variant);
+                let r = predict_fft(&real, port, variant);
+                assert_eq!(r.wire_bytes * 2, c.wire_bytes, "{port} {variant:?}");
+                assert!(
+                    r.makespan_us <= c.makespan_us,
+                    "{port} {variant:?}: real {} vs complex {}",
+                    r.makespan_us,
+                    c.makespan_us
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn real_chunk_bytes_are_half() {
+        let p = FftModelParams { domain: Domain::Real, ..FftModelParams::paper(16) };
+        assert_eq!(p.chunk_bytes(), 4 << 20);
+        assert_eq!(p.slab_bytes(), 64 << 20);
     }
 
     #[test]

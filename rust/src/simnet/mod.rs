@@ -23,9 +23,11 @@
 //! Fig. 3 chunk-size sweep only; Figs. 4–5 are then *predictions*.
 //!
 //! [`fft_model`] builds the schedules for both 2-D FFT variants, every
-//! parcelport, and the FFTW3-like baseline, plus the 3-D pencil
-//! pipeline's two sub-communicator-scoped transpose rounds
-//! ([`fft_model::predict_pencil3`] — the fig6 prediction).
+//! parcelport, and the FFTW3-like baseline — in either input domain
+//! ([`crate::dist_fft::Domain`]: real-input runs model the packed
+//! half-spectrum transposes, exactly half the complex wire bytes) —
+//! plus the 3-D pencil pipeline's two sub-communicator-scoped transpose
+//! rounds ([`fft_model::predict_pencil3`] — the fig6 prediction).
 
 pub mod compute;
 pub mod fft_model;

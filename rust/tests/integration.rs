@@ -6,7 +6,9 @@ use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
 use hpx_fft::bench_harness::{fig3, fig45};
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator, ScatterAlgo};
 use hpx_fft::config::BenchConfig;
-use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, ExecutionMode, Variant};
+use hpx_fft::dist_fft::driver::{
+    self, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant,
+};
 use hpx_fft::hpx::parcel::Payload;
 use hpx_fft::hpx::runtime::Cluster;
 use hpx_fft::parcelport::{NetModel, PortKind, PortStatsSnapshot};
@@ -36,6 +38,7 @@ fn full_equivalence_matrix() {
                     algo,
                     chunk: ChunkPolicy::new(128, 2),
                     exec: ExecutionMode::Blocking,
+                    domain: Domain::Complex,
                     threads_per_locality: 1,
                     net: None,
                     engine: ComputeEngine::Native,
@@ -573,6 +576,7 @@ fn pencil3d_bitwise_stable_across_ports_and_modes_all_shapes() {
                     port,
                     chunk: ChunkPolicy::new(256, 2),
                     exec,
+                    domain: Domain::Complex,
                     threads_per_locality: 1,
                     net: None,
                     engine: ComputeEngine::Native,
@@ -653,6 +657,252 @@ fn split_comms_then_world_collective_stay_clean() {
                 0,
                 "{port}: leftover parcels at {rank}"
             );
+        }
+    }
+}
+
+/// The real-domain acceptance matrix: the r2c distributed FFT is
+/// bitwise identical across TCP/MPI/LCI ports and Blocking/Async
+/// execution modes, for the 2-D scatter variant, the 2-D all-to-all
+/// variant, and the 3-D pencil pipeline — and every result verifies
+/// against its packed serial reference.
+#[test]
+fn real_domain_bitwise_identical_across_ports_and_modes() {
+    use hpx_fft::dist_fft::driver::NativeRowFft;
+    use hpx_fft::dist_fft::verify::{rel_error, serial_rfft2_packed_transposed};
+    use hpx_fft::dist_fft::{all_to_all_variant, scatter_variant, FftInput, RealSlab};
+
+    // 2-D: both variants, 16×32 real grid → 16 packed columns on 4
+    // ranks; the raw per-rank output pieces must agree to the bit.
+    let (rows, cols, parts) = (16usize, 32usize, 4usize);
+    let serial = serial_rfft2_packed_transposed(&RealSlab::whole(rows, cols).data, rows, cols);
+    for variant in [Variant::AllToAll, Variant::Scatter] {
+        let mut reference: Option<Vec<hpx_fft::fft::Complex32>> = None;
+        for port in PortKind::ALL {
+            for exec in ExecutionMode::ALL {
+                let cluster = Cluster::new(parts, port, None).unwrap();
+                let pieces = cluster.run(move |ctx| {
+                    let comm = Communicator::from_ctx(ctx);
+                    comm.set_chunk_policy(ChunkPolicy::new(96, 2));
+                    comm.warm_chunk_pool();
+                    let slab = RealSlab::synthetic(rows, cols, parts, ctx.rank);
+                    let input = FftInput::Real(&slab);
+                    match (variant, exec) {
+                        (Variant::AllToAll, ExecutionMode::Blocking) => {
+                            all_to_all_variant::run_input(
+                                &comm,
+                                &input,
+                                AllToAllAlgo::PairwiseChunked,
+                                1,
+                                &NativeRowFft,
+                            )
+                            .0
+                        }
+                        (Variant::AllToAll, ExecutionMode::Async) => {
+                            all_to_all_variant::run_async_input(
+                                &comm,
+                                &input,
+                                AllToAllAlgo::PairwiseChunked,
+                                1,
+                                &NativeRowFft,
+                            )
+                            .0
+                        }
+                        (Variant::Scatter, ExecutionMode::Blocking) => {
+                            scatter_variant::run_input(&comm, &input, 1, &NativeRowFft).0
+                        }
+                        (Variant::Scatter, ExecutionMode::Async) => {
+                            scatter_variant::run_async_input(&comm, &input, 1, &NativeRowFft).0
+                        }
+                    }
+                });
+                let assembled: Vec<hpx_fft::fft::Complex32> =
+                    pieces.into_iter().flatten().collect();
+                let err = rel_error(&assembled, &serial);
+                assert!(err < 1e-4, "{port} {variant:?} {exec:?}: rel err {err}");
+                match &reference {
+                    None => reference = Some(assembled),
+                    Some(r) => assert_eq!(
+                        r, &assembled,
+                        "{port} {variant:?} {exec:?}: real-domain outputs must be bitwise stable"
+                    ),
+                }
+            }
+        }
+    }
+
+    // 3-D pencil: raw pieces compared bitwise across ports and modes.
+    use hpx_fft::dist_fft::pencil::{self, Pencil3Config};
+    use hpx_fft::dist_fft::{Grid3, ProcGrid};
+    let mut reference: Option<Vec<Vec<hpx_fft::fft::Complex32>>> = None;
+    for port in PortKind::ALL {
+        for exec in ExecutionMode::ALL {
+            let cfg = Pencil3Config {
+                grid: Grid3::new(12, 8, 24),
+                proc: ProcGrid::new(2, 2),
+                port,
+                exec,
+                domain: Domain::Real,
+                chunk: ChunkPolicy::new(256, 2),
+                threads_per_locality: 1,
+                ..Default::default()
+            };
+            let cluster = Cluster::new(cfg.proc.n(), port, None).unwrap();
+            let (report, pieces) = pencil::run_on_collect(&cluster, &cfg).unwrap();
+            assert!(
+                report.rel_error.unwrap() < 1e-4,
+                "{port} {exec:?}: {:?}",
+                report.rel_error
+            );
+            match &reference {
+                None => reference = Some(pieces),
+                Some(r) => {
+                    assert_eq!(r, &pieces, "{port} {exec:?}: real pencil must be bitwise stable")
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance wire check at the driver level: a real-domain run
+/// moves ≤ 55% of the complex-domain `bytes_sent` on the same grid
+/// (measured by `PortStats`, every port, both variants).
+#[test]
+fn real_domain_wire_bytes_at_most_55_percent_of_complex() {
+    for port in PortKind::ALL {
+        for variant in [Variant::AllToAll, Variant::Scatter] {
+            let bytes = |domain: Domain| {
+                let config = DistFftConfig {
+                    rows: 32,
+                    cols: 64,
+                    localities: 4,
+                    port,
+                    variant,
+                    domain,
+                    threads_per_locality: 1,
+                    verify: false,
+                    ..Default::default()
+                };
+                driver::run(&config).unwrap().stats.bytes_sent
+            };
+            let (complex, real) = (bytes(Domain::Complex), bytes(Domain::Real));
+            assert!(
+                (real as f64) <= 0.55 * complex as f64,
+                "{port} {variant:?}: real {real} B vs complex {complex} B"
+            );
+            assert!(real > 0, "{port} {variant:?}: real run must move bytes");
+        }
+    }
+}
+
+/// Ground truth for the real domain: unpack the distributed
+/// packed-transposed output into true `C/2 + 1` bins, compare against
+/// the complexified O(n²) DFT oracle, and check the Hermitian
+/// self-symmetry a real input's spectrum must satisfy.
+#[test]
+fn real_domain_unpacked_output_matches_oracle_and_is_hermitian() {
+    use hpx_fft::dist_fft::verify::{
+        hermitian_symmetry_error, oracle_fft2_transposed, rel_error, unpack_packed2_transposed,
+    };
+    use hpx_fft::dist_fft::RealSlab;
+    use hpx_fft::fft::Complex32;
+
+    let (rows, cols) = (12usize, 24usize);
+    let config = DistFftConfig {
+        rows,
+        cols,
+        localities: 4,
+        domain: Domain::Real,
+        threads_per_locality: 1,
+        verify: true,
+        ..Default::default()
+    };
+    // Chain of custody: the distributed run is pinned to the packed
+    // serial reference (rel_error below), and the reference's unpacked
+    // bins are pinned to the O(n²) oracle — so the distributed output
+    // is oracle-verified end to end.
+    let report = driver::run(&config).unwrap();
+    assert!(report.rel_error.unwrap() < 1e-4, "{:?}", report.rel_error);
+    assert!(report.stats.msgs_sent > 0);
+    let packed = hpx_fft::dist_fft::verify::serial_rfft2_packed_transposed(
+        &RealSlab::whole(rows, cols).data,
+        rows,
+        cols,
+    );
+    let half = unpack_packed2_transposed(&packed, rows, cols);
+
+    let cx: Vec<Complex32> = RealSlab::whole(rows, cols)
+        .data
+        .iter()
+        .map(|&v| Complex32::new(v, 0.0))
+        .collect();
+    let full = oracle_fft2_transposed(&cx, rows, cols);
+    let err = rel_error(&half, &full[..(cols / 2 + 1) * rows]);
+    assert!(err < 1e-4, "unpacked spectrum vs oracle: rel err {err}");
+    let sym = hermitian_symmetry_error(&half, rows, cols);
+    assert!(sym < 1e-3, "Hermitian deviation {sym}");
+}
+
+/// The split-sub-communicator hardening satellite: non-power-of-two
+/// `Bruck` and ring-schedule `Pairwise` all-to-alls on *row and column
+/// sub-communicators* at N ∈ {3, 6} — bitwise against the
+/// transpose-of-the-chunk-matrix oracle, on every port. (Existing
+/// coverage ran these algorithms on world communicators only; the
+/// sub-communicator path additionally exercises rank→locality
+/// translation and the split tag spaces.)
+#[test]
+fn bruck_and_pairwise_bitwise_on_split_subcomms_non_pow2() {
+    let (pr, pc) = (2usize, 3usize); // 6 localities, row comms of 3
+    for port in PortKind::ALL {
+        for algo in [AllToAllAlgo::Bruck, AllToAllAlgo::Pairwise] {
+            let cluster = Cluster::new(pr * pc, port, None).unwrap();
+            let got = cluster.run(move |ctx| {
+                let world = Communicator::from_ctx(ctx);
+                let (r, c) = (ctx.rank / pc, ctx.rank % pc);
+                // Row communicator: N = 3 (non-pow2 → Bruck's log rounds
+                // carry ragged blocks; Pairwise takes the ring schedule).
+                let row = world.split(r as u64, c as u64);
+                let row_got = row.all_to_all(
+                    (0..row.size())
+                        .map(|j| Payload::from_f32(&[(ctx.rank * 100 + j) as f32, 0.5]))
+                        .collect(),
+                    algo,
+                );
+                // Column communicator: N = 2.
+                let col = world.split(c as u64, r as u64);
+                let col_got = col.all_to_all(
+                    (0..col.size())
+                        .map(|j| Payload::from_f32(&[(ctx.rank * 1000 + j) as f32]))
+                        .collect(),
+                    algo,
+                );
+                // Whole-world split: N = 6, still non-pow2.
+                let whole = world.split(7, ctx.rank as u64);
+                let whole_got = whole.all_to_all(
+                    (0..whole.size())
+                        .map(|j| Payload::from_f32(&[(ctx.rank * 10 + j) as f32]))
+                        .collect(),
+                    algo,
+                );
+                (
+                    row_got.iter().map(|p| p.to_f32()).collect::<Vec<_>>(),
+                    col_got.iter().map(|p| p.to_f32()).collect::<Vec<_>>(),
+                    whole_got.iter().map(|p| p.to_f32()).collect::<Vec<_>>(),
+                )
+            });
+            for (rank, (row_vals, col_vals, whole_vals)) in got.iter().enumerate() {
+                let (r, c) = (rank / pc, rank % pc);
+                // Oracle: slot j holds what in-group rank j addressed to me.
+                let row_expect: Vec<Vec<f32>> =
+                    (0..pc).map(|j| vec![((r * pc + j) * 100 + c) as f32, 0.5]).collect();
+                let col_expect: Vec<Vec<f32>> =
+                    (0..pr).map(|j| vec![((j * pc + c) * 1000 + r) as f32]).collect();
+                let whole_expect: Vec<Vec<f32>> =
+                    (0..pr * pc).map(|j| vec![(j * 10 + rank) as f32]).collect();
+                assert_eq!(row_vals, &row_expect, "{port} {algo:?} rank {rank} row comm");
+                assert_eq!(col_vals, &col_expect, "{port} {algo:?} rank {rank} col comm");
+                assert_eq!(whole_vals, &whole_expect, "{port} {algo:?} rank {rank} N=6 comm");
+            }
         }
     }
 }
