@@ -290,6 +290,9 @@ fn main() {
             engine: ComputeEngine::Native,
             verify: false,
         };
+        // Kept on the deprecated entry point on purpose: this bench also
+        // exercises the compatibility shim path.
+        #[allow(deprecated)]
         let mut best_of = |label: &str, exec: ExecutionMode| -> (f64, f64) {
             let cfg = DistFftConfig { exec, ..base.clone() };
             let mut best_total = f64::INFINITY;
@@ -365,6 +368,7 @@ fn main() {
             verify: false,
         };
         let mut best2d = f64::INFINITY;
+        #[allow(deprecated)]
         for _ in 0..reps {
             let report = fft_driver::run_on(&cluster2d, &cfg2d).expect("2d fft");
             best2d = best2d.min(report.critical_path.comm_us);
@@ -391,6 +395,7 @@ fn main() {
             verify: false,
         };
         let (mut best_t1, mut best_t2, mut best_sum) = (0.0, 0.0, f64::INFINITY);
+        #[allow(deprecated)]
         for _ in 0..reps {
             let report = pencil::run_on(&cluster3d, &cfg3d).expect("3d fft");
             let cp = report.critical_path;

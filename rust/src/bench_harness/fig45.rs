@@ -14,7 +14,8 @@ use super::runner::measure;
 use crate::baseline::fftw_like::{run_on as baseline_run_on, FftwLikeConfig};
 use crate::collectives::AllToAllAlgo;
 use crate::config::{BenchConfig, ClusterSpec};
-use crate::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant};
+use crate::dist_fft::driver::{Domain, ExecutionMode, Variant};
+use crate::dist_fft::TransformRequest;
 use crate::hpx::runtime::Cluster;
 use crate::metrics::{csv::write_csv, RunStats};
 use crate::parcelport::PortKind;
@@ -89,26 +90,23 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
             let entry = match system {
                 System::Hpx(port) => {
                     let cluster = Cluster::new(nodes, port, Some(net))?;
-                    let cfg = DistFftConfig {
-                        rows: config.live_grid,
-                        cols: config.live_grid,
-                        localities: nodes,
-                        port,
-                        variant,
-                        algo: AllToAllAlgo::HpxRoot,
-                        chunk: config.pipeline,
-                        exec: config.exec,
-                        domain: Domain::Complex,
-                        threads_per_locality: config.threads,
-                        net: Some(net),
-                        engine: ComputeEngine::Native,
-                        verify: false,
-                    };
+                    let mut spec = config.transform_spec();
+                    spec.port = port;
+                    spec.net = Some(net);
+                    spec.verify = false;
+                    // Built once per (port, nodes) point, outside the
+                    // measure loop — validation is not timed.
+                    let transform = TransformRequest::grid(config.live_grid, config.live_grid)
+                        .spec(spec)
+                        .localities(nodes)
+                        .variant(variant)
+                        .algo(AllToAllAlgo::HpxRoot)
+                        .build()?;
                     let mut overlaps = Vec::new();
                     let stats = measure(config.warmup, config.reps, || {
-                        let report = driver::run_on(&cluster, &cfg).expect("dist fft run");
-                        overlaps.push(report.critical_path.overlap_us);
-                        report.critical_path.total_us
+                        let report = transform.run_on(&cluster).expect("dist fft run");
+                        overlaps.push(report.overlap_us());
+                        report.total_us()
                     });
                     // Warmup reps are recorded by the closure like every
                     // call; drop them to match the RunStats discipline.

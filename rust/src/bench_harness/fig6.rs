@@ -16,9 +16,10 @@
 
 use super::runner::measure;
 use crate::config::{BenchConfig, ClusterSpec};
-use crate::dist_fft::driver::{ComputeEngine, Domain, ExecutionMode};
+use crate::dist_fft::driver::ExecutionMode;
 use crate::dist_fft::grid3::{PencilDims, ProcGrid};
-use crate::dist_fft::pencil::{self, Pencil3Config, PencilTimings};
+use crate::dist_fft::pencil::PencilTimings;
+use crate::dist_fft::TransformRequest;
 use crate::hpx::runtime::Cluster;
 use crate::metrics::{csv::write_csv, RunStats};
 use crate::parcelport::PortKind;
@@ -87,23 +88,23 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<Fig6Point>> {
             let cluster = Cluster::new(proc.n(), port, Some(net))?;
             let sim_us = sim_divides.then(|| predict_pencil3(&sim_params, port).makespan_us);
             for exec in ExecutionMode::ALL {
-                let cfg = Pencil3Config {
-                    grid: config.grid3,
-                    proc,
-                    port,
-                    chunk: config.pipeline,
-                    exec,
-                    domain: Domain::Complex,
-                    threads_per_locality: config.threads,
-                    net: Some(net),
-                    engine: ComputeEngine::Native,
-                    verify: false,
-                };
+                let mut spec = config.transform_spec();
+                spec.port = port;
+                spec.exec = exec;
+                spec.net = Some(net);
+                spec.verify = false;
+                // Built once per point, outside the measure loop —
+                // validation is not timed.
+                let transform = TransformRequest::grid3(config.grid3)
+                    .spec(spec)
+                    .proc_grid(proc)
+                    .build()?;
                 let mut crit: Vec<PencilTimings> = Vec::new();
                 let stats = measure(config.warmup, config.reps, || {
-                    let report = pencil::run_on(&cluster, &cfg).expect("pencil3d run");
-                    crit.push(report.critical_path);
-                    report.critical_path.total_us
+                    let report = transform.run_on(&cluster).expect("pencil3d run");
+                    let cp = *report.timings.pencil_critical_path().expect("pencil timings");
+                    crit.push(cp);
+                    cp.total_us
                 });
                 // Warmup reps are recorded by the closure like every
                 // call; drop them to match the RunStats discipline.

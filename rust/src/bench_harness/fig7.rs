@@ -16,9 +16,8 @@
 
 use super::runner::measure;
 use crate::config::{BenchConfig, ClusterSpec};
-use crate::dist_fft::driver::{
-    self, ComputeEngine, DistFftConfig, Domain, ExecutionMode, StepTimings, Variant,
-};
+use crate::dist_fft::driver::{Domain, ExecutionMode, StepTimings, Variant};
+use crate::dist_fft::TransformRequest;
 use crate::hpx::runtime::Cluster;
 use crate::metrics::{csv::write_csv, RunStats};
 use crate::parcelport::PortKind;
@@ -100,28 +99,27 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<Fig7Point>> {
             };
             let sim_us = predict_fft(&sim_params, port, ModelVariant::Scatter).makespan_us;
             for exec in ExecutionMode::ALL {
-                let cfg = DistFftConfig {
-                    rows: grid,
-                    cols: grid,
-                    localities: FIG7_NODES,
-                    port,
-                    variant: Variant::Scatter,
-                    algo: crate::collectives::AllToAllAlgo::HpxRoot,
-                    chunk: config.pipeline,
-                    exec,
-                    domain,
-                    threads_per_locality: config.threads,
-                    net: Some(net),
-                    engine: ComputeEngine::Native,
-                    verify: false,
-                };
+                let mut spec = config.transform_spec();
+                spec.port = port;
+                spec.exec = exec;
+                spec.domain = domain;
+                spec.net = Some(net);
+                spec.verify = false;
+                // Built once, outside the measure loop — validation is
+                // not part of the timed region.
+                let transform = TransformRequest::grid(grid, grid)
+                    .spec(spec)
+                    .localities(FIG7_NODES)
+                    .variant(Variant::Scatter)
+                    .build()?;
                 let mut crit: Vec<StepTimings> = Vec::new();
                 let mut wire = (0u64, 0u64);
                 let stats = measure(config.warmup, config.reps, || {
-                    let report = driver::run_on(&cluster, &cfg).expect("fig7 run");
-                    crit.push(report.critical_path);
+                    let report = transform.run_on(&cluster).expect("fig7 run");
+                    let cp = *report.timings.plane_critical_path().expect("plane timings");
+                    crit.push(cp);
                     wire = (report.stats.bytes_sent, report.stats.msgs_sent);
-                    report.critical_path.total_us
+                    cp.total_us
                 });
                 // Warmup reps are recorded by the closure like every
                 // call; drop them to match the RunStats discipline.

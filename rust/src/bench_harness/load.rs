@@ -1,0 +1,319 @@
+//! `repro load` — the multi-tenant service load generator.
+//!
+//! Drives thousands of transform jobs from several synthetic tenants
+//! through one resident [`FftService`], mixing every shape the service
+//! accepts (2-D/3-D × complex/real × blocking/async), and audits the
+//! results *bitwise*: each distinct request in the mix is run once
+//! single-shot through [`Transform::run`], and every service job's raw
+//! output must equal that reference exactly — concurrency must not
+//! perturb a single bit. The acceptance run
+//! (`repro load --tenants 4 --jobs 1000`) passes only with zero
+//! mismatches.
+//!
+//! Per tenant, the harness reports completed/rejected/failed counts,
+//! p50/p95/p99 and mean submit-to-completion latency, throughput, and
+//! scoped wire bytes, and writes the `service_load.csv` series
+//! (columns documented in the README).
+//!
+//! Backpressure: when a tenant's queue is full the generator retries
+//! the submission after a short sleep, so every generated job
+//! eventually runs; the service's `rejected` counter then records how
+//! often admission control pushed back.
+//!
+//! [`Transform::run`]: crate::dist_fft::Transform::run
+
+use crate::dist_fft::driver::{Domain, ExecutionMode};
+use crate::dist_fft::{Grid3, ProcGrid, TransformRequest};
+use crate::fft::complex::Complex32;
+use crate::metrics::csv::write_csv;
+use crate::parcelport::PortKind;
+use crate::runtime::{AdmissionError, FftService, JobHandle, ServiceConfig};
+use std::time::Instant;
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Localities of the resident service fabric.
+    pub localities: usize,
+    /// Parcelport backend.
+    pub port: PortKind,
+    /// Number of synthetic tenants (`tenant-0` ... `tenant-{n-1}`).
+    pub tenants: usize,
+    /// Total jobs generated across all tenants.
+    pub jobs: usize,
+    /// Per-tenant admission queue bound.
+    pub queue_limit: usize,
+    /// Service-wide concurrent-job bound.
+    pub max_inflight: usize,
+    /// Row-FFT threads per locality inside each job.
+    pub threads: usize,
+    /// Output directory for `service_load.csv`.
+    pub out_dir: String,
+}
+
+impl Default for LoadConfig {
+    /// The acceptance-run shape: 4 tenants on a 4-locality LCI fabric.
+    fn default() -> Self {
+        Self {
+            localities: 4,
+            port: PortKind::Lci,
+            tenants: 4,
+            jobs: 1000,
+            queue_limit: 64,
+            max_inflight: 4,
+            threads: 1,
+            out_dir: "bench_out".to_string(),
+        }
+    }
+}
+
+/// One tenant's results (one row of `service_load.csv`).
+#[derive(Clone, Debug)]
+pub struct TenantLoadReport {
+    /// Tenant name.
+    pub tenant: String,
+    /// Jobs the generator assigned to this tenant.
+    pub jobs: usize,
+    /// Jobs completed successfully.
+    pub completed: u64,
+    /// Submissions admission control rejected (queue-full retries).
+    pub rejected: u64,
+    /// Jobs that failed (a rank panicked).
+    pub failed: u64,
+    /// Completed jobs whose output differed from the single-shot
+    /// reference (must be 0).
+    pub mismatches: usize,
+    /// Median submit-to-completion latency, µs.
+    pub p50_us: f64,
+    /// 95th-percentile latency, µs.
+    pub p95_us: f64,
+    /// 99th-percentile latency, µs.
+    pub p99_us: f64,
+    /// Mean latency, µs.
+    pub mean_us: f64,
+    /// Completed jobs per second over the whole run's wall time.
+    pub throughput: f64,
+    /// Scoped wire bytes over the tenant's finished jobs.
+    pub wire_bytes: u64,
+}
+
+/// The request mix: every transform shape the service accepts, all
+/// sized to fit a `localities`-rank fabric (entries needing more ranks
+/// than available are skipped). Deterministic — job `j` always maps to
+/// entry `j % menu.len()`, so reruns generate identical workloads.
+fn menu(cfg: &LoadConfig) -> Vec<TransformRequest> {
+    let base = |r: TransformRequest| r.port(cfg.port).threads(cfg.threads).verify(false);
+    let mut menu = vec![
+        base(TransformRequest::grid(16, 16).localities(2)),
+        base(TransformRequest::grid(16, 32).localities(2).domain(Domain::Real)),
+        base(TransformRequest::grid(24, 24).localities(2).exec(ExecutionMode::Async)),
+    ];
+    if cfg.localities >= 4 {
+        menu.push(base(TransformRequest::grid(32, 16).localities(4)));
+        menu.push(base(
+            TransformRequest::grid3(Grid3::new(8, 8, 8)).proc_grid(ProcGrid::new(2, 2)),
+        ));
+        menu.push(base(
+            TransformRequest::grid3(Grid3::new(8, 8, 16))
+                .proc_grid(ProcGrid::new(2, 2))
+                .domain(Domain::Real)
+                .exec(ExecutionMode::Async),
+        ));
+    }
+    menu
+}
+
+/// Run the load: memoize single-shot reference outputs for each menu
+/// entry, start the service, drive `cfg.jobs` submissions round-robin
+/// across the tenants (retrying on queue-full backpressure), and audit
+/// every completed job bitwise against its reference.
+pub fn run(cfg: &LoadConfig) -> anyhow::Result<Vec<TenantLoadReport>> {
+    anyhow::ensure!(cfg.tenants >= 1, "need at least one tenant");
+    anyhow::ensure!(cfg.localities >= 2, "the mix needs at least 2 localities");
+    let menu = menu(cfg);
+
+    // Single-shot references, one per distinct request in the mix.
+    let mut expected: Vec<Vec<Vec<Complex32>>> = Vec::with_capacity(menu.len());
+    for request in &menu {
+        let report = request.clone().collect_outputs(true).build()?.run()?;
+        expected.push(report.outputs.expect("collect_outputs was requested"));
+    }
+
+    let service = FftService::new(ServiceConfig {
+        localities: cfg.localities,
+        port: cfg.port,
+        net: None,
+        queue_limit: cfg.queue_limit,
+        max_inflight: cfg.max_inflight,
+        job_tag_span: None,
+    })?;
+
+    let started = Instant::now();
+    let mut handles: Vec<(usize, usize, JobHandle)> = Vec::with_capacity(cfg.jobs);
+    let mut assigned = vec![0usize; cfg.tenants];
+    for j in 0..cfg.jobs {
+        let tenant_idx = j % cfg.tenants;
+        let tenant = format!("tenant-{tenant_idx}");
+        let entry = j % menu.len();
+        assigned[tenant_idx] += 1;
+        let request = menu[entry].clone().collect_outputs(true);
+        // Queue-full is backpressure, not failure: retry until admitted.
+        let handle = loop {
+            match service.submit(&tenant, request.clone()) {
+                Ok(h) => break h,
+                Err(AdmissionError::QueueFull { .. }) => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => anyhow::bail!("job {j} for {tenant} rejected: {e}"),
+            }
+        };
+        handles.push((tenant_idx, entry, handle));
+    }
+
+    // Failures are counted by the service metrics; the audit only
+    // compares outputs that exist.
+    let mut mismatches = vec![0usize; cfg.tenants];
+    for (tenant_idx, entry, handle) in handles {
+        if let Ok(out) = handle.wait() {
+            let got = out.report.outputs.expect("collect_outputs was requested");
+            if got != expected[entry] {
+                mismatches[tenant_idx] += 1;
+            }
+        }
+    }
+    let wall_s = started.elapsed().as_secs_f64();
+    let metrics = service.shutdown();
+
+    let mut rows = Vec::with_capacity(cfg.tenants);
+    for t in 0..cfg.tenants {
+        let name = format!("tenant-{t}");
+        let m = metrics
+            .iter()
+            .find(|m| m.tenant == name)
+            .ok_or_else(|| anyhow::anyhow!("no metrics for {name}"))?;
+        let (p50, p95, p99, mean) = match &m.latency {
+            Some(l) => (l.p50(), l.p95(), l.p99(), l.mean()),
+            None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
+        };
+        rows.push(TenantLoadReport {
+            tenant: name,
+            jobs: assigned[t],
+            completed: m.completed,
+            rejected: m.rejected,
+            failed: m.failed,
+            mismatches: mismatches[t],
+            p50_us: p50,
+            p95_us: p95,
+            p99_us: p99,
+            mean_us: mean,
+            throughput: m.completed as f64 / wall_s.max(f64::EPSILON),
+            wire_bytes: m.wire_bytes,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the per-tenant table and write `service_load.csv`.
+pub fn report(rows: &[TenantLoadReport], out_dir: &str) -> anyhow::Result<String> {
+    use crate::metrics::table::Table;
+    let mut table = Table::new(&[
+        "tenant", "jobs", "done", "rejected", "failed", "mismatch", "p50", "p95", "p99",
+        "jobs/s", "wire bytes",
+    ]);
+    let mut csv_rows = Vec::new();
+    for r in rows {
+        table.row(&[
+            r.tenant.clone(),
+            r.jobs.to_string(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            r.failed.to_string(),
+            r.mismatches.to_string(),
+            format!("{:.1} ms", r.p50_us / 1e3),
+            format!("{:.1} ms", r.p95_us / 1e3),
+            format!("{:.1} ms", r.p99_us / 1e3),
+            format!("{:.1}", r.throughput),
+            r.wire_bytes.to_string(),
+        ]);
+        csv_rows.push(vec![
+            r.tenant.clone(),
+            r.jobs.to_string(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            r.failed.to_string(),
+            r.mismatches.to_string(),
+            r.p50_us.to_string(),
+            r.p95_us.to_string(),
+            r.p99_us.to_string(),
+            r.mean_us.to_string(),
+            r.throughput.to_string(),
+            r.wire_bytes.to_string(),
+        ]);
+    }
+    write_csv(
+        format!("{out_dir}/service_load.csv"),
+        &[
+            "tenant",
+            "jobs",
+            "completed",
+            "rejected",
+            "failed",
+            "mismatches",
+            "p50_us",
+            "p95_us",
+            "p99_us",
+            "mean_us",
+            "throughput_jobs_s",
+            "wire_bytes",
+        ],
+        &csv_rows,
+    )?;
+
+    let total_jobs: usize = rows.iter().map(|r| r.jobs).sum();
+    let total_done: u64 = rows.iter().map(|r| r.completed).sum();
+    let total_mismatch: usize = rows.iter().map(|r| r.mismatches).sum();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "service load: {total_jobs} jobs over {} tenants — {total_done} completed, \
+         {total_mismatch} output mismatches vs single-shot reference\n\n",
+        rows.len()
+    ));
+    out.push_str(&table.render());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_load_runs_clean_and_writes_csv() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-load-{}", std::process::id()));
+        let cfg = LoadConfig {
+            tenants: 2,
+            jobs: 8,
+            queue_limit: 4,
+            out_dir: dir.to_str().unwrap().to_string(),
+            ..LoadConfig::default()
+        };
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows.iter().map(|r| r.completed).sum::<u64>(), 8);
+        assert_eq!(rows.iter().map(|r| r.mismatches).sum::<usize>(), 0, "bitwise audit");
+        assert!(rows.iter().all(|r| r.failed == 0 && r.wire_bytes > 0));
+        let text = report(&rows, cfg.out_dir.as_str()).unwrap();
+        assert!(text.contains("0 output mismatches"), "{text}");
+        let csv = std::fs::read_to_string(dir.join("service_load.csv")).unwrap();
+        assert!(csv.starts_with("tenant,jobs,completed,rejected,failed,mismatches,p50_us"));
+        assert_eq!(csv.lines().count(), 3, "header + one row per tenant");
+    }
+
+    #[test]
+    fn two_locality_mix_skips_oversized_entries() {
+        let cfg = LoadConfig { localities: 2, ..LoadConfig::default() };
+        assert!(menu(&cfg).iter().all(|r| {
+            let t = r.clone().build().unwrap();
+            t.localities() <= 2
+        }));
+    }
+}

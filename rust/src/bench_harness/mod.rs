@@ -16,6 +16,10 @@
 //! - [`fig7`] — real-input (r2c) vs complex distributed FFT
 //!   (port × exec × domain), with the measured `PortStats` wire volume
 //!   per point — the ~2× traffic saving of the packed half-spectrum.
+//! - [`load`] — the `repro load` multi-tenant service load generator:
+//!   thousands of mixed-shape jobs through one resident
+//!   [`crate::runtime::FftService`], audited bitwise against
+//!   single-shot references, with per-tenant latency percentiles.
 //!
 //! Every driver reports paper-style rows (mean ± 95% CI over N reps),
 //! writes CSV series, and renders an ASCII log plot so the figure shape
@@ -25,6 +29,7 @@ pub mod fig3;
 pub mod fig45;
 pub mod fig6;
 pub mod fig7;
+pub mod load;
 pub mod plot;
 pub mod runner;
 

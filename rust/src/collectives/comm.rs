@@ -274,6 +274,46 @@ impl Communicator {
         }
     }
 
+    /// Rebuild this communicator over a stats-scoping fabric decorator
+    /// ([`crate::parcelport::ScopedPort`]), returning the scoped
+    /// communicator and the private [`PortStats`] its sends are counted
+    /// into. Rank, size, member mapping, tag counter position, tag
+    /// bound, and chunk policy all carry over unchanged, so the scoped
+    /// communicator is a drop-in *replacement*: the caller must stop
+    /// using `self` afterwards (both share one tag space — interleaving
+    /// allocations between them would collide). Every send path —
+    /// direct, chunked, offload shadows — clones the communicator's
+    /// fabric handle, so the scope sees all of the replacement's wire
+    /// traffic. The FFT service wraps each job's sub-communicator this
+    /// way to attribute bytes per job/tenant.
+    pub fn with_stats_scope(&self) -> (Communicator, Arc<crate::parcelport::PortStats>) {
+        let (fabric, scope) = crate::parcelport::ScopedPort::wrap(Arc::clone(&self.fabric));
+        let comm = Communicator {
+            fabric,
+            rank: self.rank,
+            size: self.size,
+            members: Arc::clone(&self.members),
+            next_tag: Cell::new(self.next_tag.get()),
+            tag_limit: self.tag_limit,
+            chunk_policy: Cell::new(self.chunk_policy.get()),
+            chunk_pool: RefCell::new(None),
+            shadow_send_pool: RefCell::new(None),
+        };
+        (comm, scope)
+    }
+
+    /// Pre-install this communicator's chunk-send and shadow-send pools
+    /// (instead of letting first use create fresh ones). The FFT service
+    /// leases pool pairs to jobs and installs them here, so worker
+    /// threads are reused across the lifetime of the service rather than
+    /// spawned per job. The pools must match the width the communicator
+    /// will ask for (`chunk_policy().inflight.max(1)`) — a mismatched
+    /// pool is silently replaced on first use, wasting the lease.
+    pub(crate) fn install_pools(&self, chunk: Arc<ThreadPool>, shadow: Arc<ThreadPool>) {
+        *self.chunk_pool.borrow_mut() = Some(chunk);
+        *self.shadow_send_pool.borrow_mut() = Some(shadow);
+    }
+
     /// Send a collective-action parcel to communicator rank `dest`
     /// (translated to its global locality).
     pub(crate) fn send(&self, dest: LocalityId, tag: Tag, payload: Payload) {
@@ -411,6 +451,26 @@ mod tests {
             }
         }));
         assert!(result.is_err(), "allocating past the span must panic");
+    }
+
+    #[test]
+    fn stats_scope_preserves_identity_and_counts_sends() {
+        let f = fabric(2);
+        let c0 = Communicator::new(Arc::clone(&f), 0, 2);
+        c0.set_chunk_policy(ChunkPolicy::new(4096, 2));
+        let t = c0.alloc_tags();
+        let (scoped, scope) = c0.with_stats_scope();
+        assert_eq!(scoped.rank(), 0);
+        assert_eq!(scoped.size(), 2);
+        assert_eq!(scoped.members(), &[0, 1]);
+        assert_eq!(scoped.chunk_policy(), ChunkPolicy::new(4096, 2));
+        // The tag counter carries over: the scoped communicator resumes
+        // where the original stopped (it *replaces* the original).
+        assert!(scoped.alloc_tags() > t);
+        scoped.send(1, 77, Payload::from_f32(&[1.0; 8]));
+        let s = scope.snapshot();
+        assert_eq!(s.msgs_sent, 1);
+        assert_eq!(s.bytes_sent, 32);
     }
 
     #[test]

@@ -37,7 +37,7 @@
 //! [`super::ChunkPolicy`].
 
 use super::comm::Communicator;
-use crate::hpx::parcel::Payload;
+use crate::hpx::parcel::{Payload, Tag};
 use crate::util::bytes::{get_u64, put_u64};
 use std::sync::Arc;
 
@@ -49,6 +49,24 @@ impl Communicator {
     /// Collective: every rank of the parent must call `split` at the same
     /// point with its own `(color, key)`.
     pub fn split(&self, color: u64, key: u64) -> Communicator {
+        // A whole-fabric parent grants the full SPLIT_TAG_SPAN; a
+        // bounded parent (itself a split) grants half its remaining
+        // space, so splits nest.
+        self.split_with_span(color, key, self.split_span())
+    }
+
+    /// [`Communicator::split`] with an explicit tag-space grant: the
+    /// sub-communicator's whole tag budget is the `span` tags reserved
+    /// here instead of the default [`super::tags::SPLIT_TAG_SPAN`]-sized
+    /// block. The FFT service carves its per-job sub-communicators with
+    /// a configurable span so a long-lived world communicator admits a
+    /// predictable number of jobs — and so tests can provoke tag-space
+    /// exhaustion inside one job without running the counter for hours.
+    ///
+    /// Collective, like `split`: every rank must pass the same `span` at
+    /// the same point (SPMD discipline keeps the reservation in
+    /// lock-step).
+    pub fn split_with_span(&self, color: u64, key: u64, span: Tag) -> Communicator {
         // Exchange (color, key) so every rank derives the same grouping
         // without a central coordinator.
         let mut mine = Vec::with_capacity(16);
@@ -75,11 +93,7 @@ impl Communicator {
 
         // Every parent rank reserves the same span here (lock-step), so
         // the sub-communicator's tag space is identical across its
-        // members and disjoint from everything else on the parent. A
-        // whole-fabric parent grants the full SPLIT_TAG_SPAN; a bounded
-        // parent (itself a split) grants half its remaining space, so
-        // splits nest.
-        let span = self.split_span();
+        // members and disjoint from everything else on the parent.
         let base = self.reserve_tag_span(span);
         Communicator::from_members(
             Arc::clone(self.fabric()),
@@ -212,6 +226,28 @@ mod tests {
             );
             // The parent's next allocation clears both spans.
             assert!(world.alloc_tags() >= tb);
+        });
+    }
+
+    #[test]
+    fn split_with_span_bounds_the_sub_communicator() {
+        use crate::collectives::tags::CHUNK_TAG_SPAN;
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        cluster.run(|ctx| {
+            let world = Communicator::from_ctx(ctx);
+            let span = 4 * CHUNK_TAG_SPAN;
+            let sub = world.split_with_span(0, ctx.rank as u64, span);
+            let base = sub.alloc_tags();
+            // Exhausting the explicit grant trips the sub-communicator's
+            // bound instead of bleeding into the parent's tag space.
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for _ in 0..5 {
+                    sub.alloc_chunk_tags(1);
+                }
+            }));
+            assert!(res.is_err(), "allocating past the explicit span must panic");
+            // The parent's next allocation clears the whole grant.
+            assert!(world.alloc_tags() >= base + span);
         });
     }
 

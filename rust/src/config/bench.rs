@@ -93,6 +93,20 @@ impl BenchConfig {
         }
     }
 
+    /// The transform execution settings embedded in this run matrix, as
+    /// a [`super::TransformSpec`] — the chunk policy, execution mode,
+    /// and thread count carry over; the spec's other knobs (port,
+    /// domain, ...) take their defaults because the harnesses sweep
+    /// them per point.
+    pub fn transform_spec(&self) -> super::TransformSpec {
+        super::TransformSpec {
+            chunk: self.pipeline,
+            exec: self.exec,
+            threads_per_locality: self.threads,
+            ..super::TransformSpec::default()
+        }
+    }
+
     /// Override from a key=value config file (`bench.reps`, `bench.grid`, ...).
     pub fn apply_file(&mut self, path: &str) -> Result<()> {
         let cfg = Config::load(path)?;

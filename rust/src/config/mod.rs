@@ -4,6 +4,8 @@
 pub mod bench;
 pub mod cluster;
 pub mod kv;
+pub mod spec;
 
 pub use bench::BenchConfig;
 pub use cluster::ClusterSpec;
+pub use spec::TransformSpec;

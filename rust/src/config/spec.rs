@@ -1,0 +1,184 @@
+//! `TransformSpec` — the execution settings shared by every transform
+//! shape.
+//!
+//! [`DistFftConfig`], [`Pencil3Config`], and [`BenchConfig`] historically
+//! each carried their own copy of the same eight knobs (port, chunk
+//! policy, execution mode, domain, threads, wire model, engine, verify).
+//! `TransformSpec` is the merged form: the CLI and the key=value config
+//! files parse into it once, [`TransformRequest`] consumes it, and the
+//! shape-specific configs convert to/from it
+//! ([`DistFftConfig::spec`]/[`DistFftConfig::apply_spec`] and the
+//! pencil equivalents).
+//!
+//! [`DistFftConfig`]: crate::dist_fft::DistFftConfig
+//! [`DistFftConfig::spec`]: crate::dist_fft::DistFftConfig::spec
+//! [`DistFftConfig::apply_spec`]: crate::dist_fft::DistFftConfig::apply_spec
+//! [`Pencil3Config`]: crate::dist_fft::Pencil3Config
+//! [`BenchConfig`]: super::BenchConfig
+//! [`TransformRequest`]: crate::dist_fft::TransformRequest
+
+use super::kv::Config;
+use crate::collectives::ChunkPolicy;
+use crate::dist_fft::driver::{ComputeEngine, Domain, ExecutionMode};
+use crate::parcelport::{NetModel, PortKind};
+use anyhow::Result;
+
+/// Execution settings shared by 2-D slab, 3-D pencil, and service
+/// transforms — everything about a run except its shape.
+#[derive(Clone, Debug)]
+pub struct TransformSpec {
+    /// Parcelport backend.
+    pub port: PortKind,
+    /// Wire-chunking policy installed on the run's communicators.
+    pub chunk: ChunkPolicy,
+    /// Lock-step blocking collectives vs the future-chained task graph.
+    pub exec: ExecutionMode,
+    /// Input domain: complex (c2c) or real (r2c, halved wire bytes).
+    pub domain: Domain,
+    /// Worker threads per locality for the row-FFT phases.
+    pub threads_per_locality: usize,
+    /// Optional hybrid wire model.
+    pub net: Option<NetModel>,
+    /// Row-FFT compute engine.
+    pub engine: ComputeEngine,
+    /// Compare the distributed result against the serial reference.
+    pub verify: bool,
+}
+
+impl Default for TransformSpec {
+    fn default() -> Self {
+        Self {
+            port: PortKind::Lci,
+            chunk: ChunkPolicy::default(),
+            exec: ExecutionMode::Blocking,
+            domain: Domain::Complex,
+            threads_per_locality: 2,
+            net: None,
+            engine: ComputeEngine::Native,
+            verify: true,
+        }
+    }
+}
+
+impl TransformSpec {
+    /// Override from a parsed key=value [`Config`], reading the dotted
+    /// keys `{prefix}.port`, `.chunk_bytes`, `.inflight`, `.exec`,
+    /// `.domain`, `.threads`, `.engine` (`native` or
+    /// `pjrt:<artifact-dir>`), and `.verify`. Keys that are absent leave
+    /// the current value untouched; malformed values are rejected with
+    /// the key name in the error.
+    pub fn apply_kv(&mut self, cfg: &Config, prefix: &str) -> Result<()> {
+        let key = |name: &str| format!("{prefix}.{name}");
+        if let Some(v) = cfg.get(&key("port")) {
+            self.port = v.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = cfg.get_parsed(&key("chunk_bytes"))? {
+            anyhow::ensure!(v > 0, "{} must be positive", key("chunk_bytes"));
+            self.chunk.chunk_bytes = v;
+        }
+        if let Some(v) = cfg.get_parsed(&key("inflight"))? {
+            anyhow::ensure!(v > 0, "{} must be positive", key("inflight"));
+            self.chunk.inflight = v;
+        }
+        if let Some(v) = cfg.get(&key("exec")) {
+            self.exec = v.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = cfg.get(&key("domain")) {
+            self.domain = v.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = cfg.get_parsed(&key("threads"))? {
+            anyhow::ensure!(v > 0, "{} must be positive", key("threads"));
+            self.threads_per_locality = v;
+        }
+        if let Some(v) = cfg.get(&key("engine")) {
+            self.engine = v.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = cfg.get_parsed(&key("verify"))? {
+            self.verify = v;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_driver_default() {
+        let spec = TransformSpec::default();
+        let drv = crate::dist_fft::DistFftConfig::default();
+        assert_eq!(spec.port, drv.port);
+        assert_eq!(spec.chunk, drv.chunk);
+        assert_eq!(spec.exec, drv.exec);
+        assert_eq!(spec.domain, drv.domain);
+        assert_eq!(spec.threads_per_locality, drv.threads_per_locality);
+        assert_eq!(spec.engine, drv.engine);
+        assert_eq!(spec.verify, drv.verify);
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let cfg = Config::parse(
+            "[transform]\nport = mpi\nchunk_bytes = 4096\ninflight = 2\n\
+             exec = async\ndomain = real\nthreads = 3\nverify = false\n",
+        )
+        .unwrap();
+        let mut spec = TransformSpec::default();
+        spec.apply_kv(&cfg, "transform").unwrap();
+        assert_eq!(spec.port, PortKind::Mpi);
+        assert_eq!(spec.chunk, ChunkPolicy::new(4096, 2));
+        assert_eq!(spec.exec, ExecutionMode::Async);
+        assert_eq!(spec.domain, Domain::Real);
+        assert_eq!(spec.threads_per_locality, 3);
+        assert!(!spec.verify);
+    }
+
+    #[test]
+    fn kv_engine_parse() {
+        let cfg = Config::parse("[t]\nengine = pjrt:artifacts/fft\n").unwrap();
+        let mut spec = TransformSpec::default();
+        spec.apply_kv(&cfg, "t").unwrap();
+        assert_eq!(spec.engine, ComputeEngine::Pjrt("artifacts/fft".into()));
+        let bad = Config::parse("[t]\nengine = cuda\n").unwrap();
+        assert!(spec.apply_kv(&bad, "t").is_err());
+    }
+
+    #[test]
+    fn kv_rejects_zero_chunk() {
+        let cfg = Config::parse("[t]\nchunk_bytes = 0\n").unwrap();
+        let mut spec = TransformSpec::default();
+        let err = spec.apply_kv(&cfg, "t").unwrap_err().to_string();
+        assert!(err.contains("t.chunk_bytes"), "{err}");
+    }
+
+    #[test]
+    fn kv_absent_keys_leave_defaults() {
+        let cfg = Config::parse("[t]\nport = tcp\n").unwrap();
+        let mut spec = TransformSpec::default();
+        spec.apply_kv(&cfg, "t").unwrap();
+        assert_eq!(spec.port, PortKind::Tcp);
+        assert_eq!(spec.exec, ExecutionMode::Blocking);
+        assert!(spec.verify);
+    }
+
+    #[test]
+    fn roundtrips_through_shape_configs() {
+        let spec = TransformSpec {
+            port: PortKind::Tcp,
+            exec: ExecutionMode::Async,
+            domain: Domain::Real,
+            threads_per_locality: 1,
+            verify: false,
+            ..Default::default()
+        };
+        let mut drv = crate::dist_fft::DistFftConfig::default();
+        drv.apply_spec(&spec);
+        assert_eq!(drv.port, PortKind::Tcp);
+        assert_eq!(drv.spec().exec, ExecutionMode::Async);
+        let mut p3 = crate::dist_fft::Pencil3Config::default();
+        p3.apply_spec(&spec);
+        assert_eq!(p3.domain, Domain::Real);
+        assert!(!p3.spec().verify);
+    }
+}

@@ -25,6 +25,10 @@ use std::time::Instant;
 /// (complex domain — see [`run_input`]). Returns the locality's slab of
 /// the transposed-layout result (`C/N × R`, row-major) and per-step
 /// timings.
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::AllToAll` instead of \
+            calling the variant entry point directly"
+)]
 pub fn run(
     comm: &Communicator,
     slab: &Slab,
@@ -32,14 +36,29 @@ pub fn run(
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
-    run_input(comm, &FftInput::Complex(slab), algo, nthreads, engine)
+    run_input_impl(comm, &FftInput::Complex(slab), algo, nthreads, engine)
 }
 
-/// [`run`] over either input domain: stage 1 is
+/// [`run`] over either input domain.
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::AllToAll` instead of \
+            calling the variant entry point directly"
+)]
+pub fn run_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    algo: AllToAllAlgo,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
+    run_input_impl(comm, input, algo, nthreads, engine)
+}
+
+/// Blocking all-to-all run over either input domain: stage 1 is
 /// [`FftInput::stage1_band`] (c2c rows, or r2c into packed
 /// half-spectra), and the exchange runs on the spectral geometry —
 /// `C/2` columns in the real domain, halving the collective's payload.
-pub fn run_input(
+pub(crate) fn run_input_impl(
     comm: &Communicator,
     input: &FftInput<'_>,
     algo: AllToAllAlgo,
@@ -135,6 +154,10 @@ pub fn run_input(
 /// is structurally narrower than the scatter variant's — which is the
 /// paper's Fig. 4-vs-5 point, now measurable on the blocking-vs-async
 /// axis too.
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::AllToAll` and \
+            `ExecutionMode::Async` instead of calling the variant entry point directly"
+)]
 pub fn run_async(
     comm: &Communicator,
     slab: &Slab,
@@ -142,12 +165,27 @@ pub fn run_async(
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
-    run_async_input(comm, &FftInput::Complex(slab), algo, nthreads, engine)
+    run_async_input_impl(comm, &FftInput::Complex(slab), algo, nthreads, engine)
 }
 
-/// [`run_async`] over either input domain (see [`run_input`] for the
-/// stage-1 / spectral-geometry split).
+/// [`run_async`] over either input domain.
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::AllToAll` and \
+            `ExecutionMode::Async` instead of calling the variant entry point directly"
+)]
 pub fn run_async_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    algo: AllToAllAlgo,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
+    run_async_input_impl(comm, input, algo, nthreads, engine)
+}
+
+/// Future-chained all-to-all run over either input domain (see
+/// [`run_input_impl`] for the stage-1 / spectral-geometry split).
+pub(crate) fn run_async_input_impl(
     comm: &Communicator,
     input: &FftInput<'_>,
     algo: AllToAllAlgo,
@@ -224,6 +262,9 @@ pub fn run_async_input(
 }
 
 #[cfg(test)]
+// Exercises the deprecated variant shims on purpose — shim coverage
+// until every external caller has migrated to `TransformRequest`.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::dist_fft::driver::NativeRowFft;

@@ -169,6 +169,21 @@ impl ComputeEngine {
     }
 }
 
+impl std::str::FromStr for ComputeEngine {
+    type Err = String;
+    /// `native`, or `pjrt:<artifact-dir>` (config-file / spec spelling).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s.eq_ignore_ascii_case("native") {
+            return Ok(ComputeEngine::Native);
+        }
+        s.strip_prefix("pjrt:")
+            .map(|dir| ComputeEngine::Pjrt(dir.to_string()))
+            .ok_or_else(|| {
+                format!("unknown engine {s:?} (expected native|pjrt:<artifact-dir>)")
+            })
+    }
+}
+
 /// Per-step wall-clock timings (µs) for one locality.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepTimings {
@@ -270,6 +285,37 @@ impl Default for DistFftConfig {
     }
 }
 
+impl DistFftConfig {
+    /// The execution settings this config shares with every other
+    /// transform shape, as a [`crate::config::TransformSpec`].
+    pub fn spec(&self) -> crate::config::TransformSpec {
+        crate::config::TransformSpec {
+            port: self.port,
+            chunk: self.chunk,
+            exec: self.exec,
+            domain: self.domain,
+            threads_per_locality: self.threads_per_locality,
+            net: self.net,
+            engine: self.engine.clone(),
+            verify: self.verify,
+        }
+    }
+
+    /// Overwrite the shared execution settings from a
+    /// [`crate::config::TransformSpec`], leaving the 2-D shape fields
+    /// (`rows`/`cols`/`localities`/`variant`/`algo`) untouched.
+    pub fn apply_spec(&mut self, spec: &crate::config::TransformSpec) {
+        self.port = spec.port;
+        self.chunk = spec.chunk;
+        self.exec = spec.exec;
+        self.domain = spec.domain;
+        self.threads_per_locality = spec.threads_per_locality;
+        self.net = spec.net;
+        self.engine = spec.engine.clone();
+        self.verify = spec.verify;
+    }
+}
+
 /// Execution report.
 #[derive(Clone, Debug)]
 pub struct DistFftReport {
@@ -286,13 +332,28 @@ pub struct DistFftReport {
 }
 
 /// Run one distributed FFT end to end on a fresh cluster.
+#[deprecated(note = "build a `dist_fft::TransformRequest` and call `Transform::run` instead")]
 pub fn run(config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
     let cluster = Cluster::new(config.localities, config.port, config.net)?;
-    run_on(&cluster, config)
+    run_on_impl(&cluster, config).map(|(report, _)| report)
 }
 
 /// Run on an existing cluster (benchmarks reuse fabrics across reps).
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` and call `Transform::run_on` instead"
+)]
 pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistFftReport> {
+    run_on_impl(cluster, config).map(|(report, _)| report)
+}
+
+/// Validate everything about a configuration that does not require a
+/// live cluster — grid shape, domain preconditions, chunk policy. Both
+/// the deprecated driver shims and [`TransformRequest::build`] route
+/// through here, so the actionable error strings are identical on every
+/// entry path.
+///
+/// [`TransformRequest::build`]: super::TransformRequest::build
+pub(crate) fn validate_config(config: &DistFftConfig) -> anyhow::Result<()> {
     anyhow::ensure!(config.rows >= 1 && config.cols >= 1, "grid must be non-empty");
     // Real-domain preconditions come first: the generic divisibility
     // check below would otherwise shadow the r2c-specific messages
@@ -331,86 +392,126 @@ pub fn run_on(cluster: &Cluster, config: &DistFftConfig) -> anyhow::Result<DistF
         config.cols,
         config.localities
     );
+    // Hand-built zero policies would otherwise be clamped silently deep
+    // inside the chunked wire protocol — reject them before anything
+    // runs (the CLI and config file reject them at parse time already).
+    config.chunk.validate()?;
+    Ok(())
+}
+
+/// Execute the full transform on a cluster, returning the report plus
+/// each rank's spectral piece (rank order) — the engine behind both the
+/// deprecated [`run_on`] shim and [`Transform::run_on`].
+///
+/// [`Transform::run_on`]: super::Transform::run_on
+pub(crate) fn run_on_impl(
+    cluster: &Cluster,
+    config: &DistFftConfig,
+) -> anyhow::Result<(DistFftReport, Vec<Vec<Complex32>>)> {
+    validate_config(config)?;
     anyhow::ensure!(
         cluster.n_localities() == config.localities,
         "cluster size mismatch: {} vs {}",
         cluster.n_localities(),
         config.localities
     );
-    // Hand-built zero policies would otherwise be clamped silently deep
-    // inside the chunked wire protocol — reject them before anything
-    // runs (the CLI and config file reject them at parse time already).
-    config.chunk.validate()?;
     let engine = config.engine.build()?;
     let before = cluster.fabric().stats();
 
     let results: Vec<(Vec<Complex32>, StepTimings)> = cluster.run(|ctx| {
         let comm = Communicator::from_ctx(ctx);
-        comm.set_chunk_policy(config.chunk);
-        // The send pool is a communicator-lifetime resource; spawn it
-        // before the timed region (blocking wrappers route through it
-        // too, now that the collective engine is futures-first).
-        comm.warm_chunk_pool();
-        match config.domain {
-            Domain::Complex => {
-                let slab = Slab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
-                run_variant(&comm, &FftInput::Complex(&slab), config, engine.as_ref())
-            }
-            Domain::Real => {
-                let slab =
-                    RealSlab::synthetic(config.rows, config.cols, config.localities, ctx.rank);
-                run_variant(&comm, &FftInput::Real(&slab), config, engine.as_ref())
-            }
-        }
+        run_rank(&comm, config, engine.as_ref())
     });
 
     let stats = cluster.fabric().stats().since(&before);
     let per_rank: Vec<StepTimings> = results.iter().map(|(_, t)| *t).collect();
     let critical_path = StepTimings::max(&per_rank);
+    let pieces: Vec<Vec<Complex32>> = results.into_iter().map(|(p, _)| p).collect();
 
-    let rel_err = if config.verify {
-        let spectral_elems = match config.domain {
-            Domain::Complex => config.rows * config.cols,
-            Domain::Real => config.rows * config.cols / 2,
-        };
-        let mut assembled = Vec::with_capacity(spectral_elems);
-        for (piece, _) in &results {
-            assembled.extend_from_slice(piece);
-        }
-        let reference = match config.domain {
-            Domain::Complex => serial_fft2_transposed(
-                &Slab::whole(config.rows, config.cols).data,
-                config.rows,
-                config.cols,
-            ),
-            Domain::Real => serial_rfft2_packed_transposed(
-                &RealSlab::whole(config.rows, config.cols).data,
-                config.rows,
-                config.cols,
-            ),
-        };
-        Some(rel_error(&assembled, &reference))
-    } else {
-        None
-    };
+    let rel_err = if config.verify { Some(verify_pieces(config, &pieces)) } else { None };
 
-    Ok(DistFftReport {
-        config_summary: format!(
-            "{}×{} grid, {} localities, {} port, {} variant, {} exec, {} domain, {} engine",
-            config.rows,
-            config.cols,
-            config.localities,
-            config.port,
-            config.variant.name(),
-            config.exec.name(),
-            config.domain.name(),
-            engine.name(),
-        ),
+    let report = DistFftReport {
+        config_summary: summary_line(config, engine.name()),
         per_rank,
         critical_path,
         rel_error: rel_err,
         stats,
-    })
+    };
+    Ok((report, pieces))
+}
+
+/// One rank's share of the transform, over an arbitrary communicator of
+/// `config.localities` ranks. The cluster driver hands it the world
+/// communicator; [`crate::runtime::FftService`] hands it a per-job
+/// sub-communicator, which is how many transforms run concurrently on
+/// one fabric.
+pub(crate) fn run_rank(
+    comm: &Communicator,
+    config: &DistFftConfig,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
+    debug_assert_eq!(
+        comm.size(),
+        config.localities,
+        "communicator size must match the configured locality count"
+    );
+    comm.set_chunk_policy(config.chunk);
+    // The send pool is a communicator-lifetime resource; spawn it
+    // before the timed region (blocking wrappers route through it
+    // too, now that the collective engine is futures-first).
+    comm.warm_chunk_pool();
+    let rank = comm.rank();
+    match config.domain {
+        Domain::Complex => {
+            let slab = Slab::synthetic(config.rows, config.cols, config.localities, rank);
+            run_variant(comm, &FftInput::Complex(&slab), config, engine)
+        }
+        Domain::Real => {
+            let slab = RealSlab::synthetic(config.rows, config.cols, config.localities, rank);
+            run_variant(comm, &FftInput::Real(&slab), config, engine)
+        }
+    }
+}
+
+/// Relative L2 error of assembled per-rank pieces vs. the serial
+/// reference for this configuration's synthetic input.
+pub(crate) fn verify_pieces(config: &DistFftConfig, pieces: &[Vec<Complex32>]) -> f64 {
+    let spectral_elems = match config.domain {
+        Domain::Complex => config.rows * config.cols,
+        Domain::Real => config.rows * config.cols / 2,
+    };
+    let mut assembled = Vec::with_capacity(spectral_elems);
+    for piece in pieces {
+        assembled.extend_from_slice(piece);
+    }
+    let reference = match config.domain {
+        Domain::Complex => serial_fft2_transposed(
+            &Slab::whole(config.rows, config.cols).data,
+            config.rows,
+            config.cols,
+        ),
+        Domain::Real => serial_rfft2_packed_transposed(
+            &RealSlab::whole(config.rows, config.cols).data,
+            config.rows,
+            config.cols,
+        ),
+    };
+    rel_error(&assembled, &reference)
+}
+
+/// One-line human description of an executed configuration.
+pub(crate) fn summary_line(config: &DistFftConfig, engine_name: &str) -> String {
+    format!(
+        "{}×{} grid, {} localities, {} port, {} variant, {} exec, {} domain, {} engine",
+        config.rows,
+        config.cols,
+        config.localities,
+        config.port,
+        config.variant.name(),
+        config.exec.name(),
+        config.domain.name(),
+        engine_name,
+    )
 }
 
 /// Dispatch one locality's run to the configured variant × execution
@@ -424,21 +525,27 @@ fn run_variant(
     let nthreads = config.threads_per_locality;
     match (config.variant, config.exec) {
         (Variant::AllToAll, ExecutionMode::Blocking) => {
-            super::all_to_all_variant::run_input(comm, input, config.algo, nthreads, engine)
+            super::all_to_all_variant::run_input_impl(comm, input, config.algo, nthreads, engine)
         }
         (Variant::AllToAll, ExecutionMode::Async) => {
-            super::all_to_all_variant::run_async_input(comm, input, config.algo, nthreads, engine)
+            super::all_to_all_variant::run_async_input_impl(
+                comm, input, config.algo, nthreads, engine,
+            )
         }
         (Variant::Scatter, ExecutionMode::Blocking) => {
-            super::scatter_variant::run_input(comm, input, nthreads, engine)
+            super::scatter_variant::run_input_impl(comm, input, nthreads, engine)
         }
         (Variant::Scatter, ExecutionMode::Async) => {
-            super::scatter_variant::run_async_input(comm, input, nthreads, engine)
+            super::scatter_variant::run_async_input_impl(comm, input, nthreads, engine)
         }
     }
 }
 
 #[cfg(test)]
+// The module exercises the deprecated `run`/`run_on` shims on purpose:
+// they must keep working until every external caller has migrated to
+// `TransformRequest`.
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

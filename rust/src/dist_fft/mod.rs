@@ -55,13 +55,17 @@ pub mod driver;
 pub mod grid3;
 pub mod partition;
 pub mod pencil;
+pub mod request;
 pub mod transpose;
 pub mod verify;
 
 pub mod all_to_all_variant;
 pub mod scatter_variant;
 
-pub use driver::{ComputeEngine, DistFftConfig, DistFftReport, Domain, ExecutionMode, Variant};
+pub use driver::{
+    ComputeEngine, DistFftConfig, DistFftReport, Domain, ExecutionMode, StepTimings, Variant,
+};
 pub use grid3::{Grid3, PencilDims, ProcGrid};
 pub use partition::{FftInput, RealSlab, Slab};
 pub use pencil::{Pencil3Config, Pencil3Report, PencilTimings};
+pub use request::{Transform, TransformReport, TransformRequest, TransformTimings};

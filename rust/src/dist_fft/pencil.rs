@@ -95,6 +95,37 @@ impl Default for Pencil3Config {
     }
 }
 
+impl Pencil3Config {
+    /// The execution settings this config shares with every other
+    /// transform shape, as a [`crate::config::TransformSpec`].
+    pub fn spec(&self) -> crate::config::TransformSpec {
+        crate::config::TransformSpec {
+            port: self.port,
+            chunk: self.chunk,
+            exec: self.exec,
+            domain: self.domain,
+            threads_per_locality: self.threads_per_locality,
+            net: self.net,
+            engine: self.engine.clone(),
+            verify: self.verify,
+        }
+    }
+
+    /// Overwrite the shared execution settings from a
+    /// [`crate::config::TransformSpec`], leaving the 3-D shape fields
+    /// (`grid`/`proc`) untouched.
+    pub fn apply_spec(&mut self, spec: &crate::config::TransformSpec) {
+        self.port = spec.port;
+        self.chunk = spec.chunk;
+        self.exec = spec.exec;
+        self.domain = spec.domain;
+        self.threads_per_locality = spec.threads_per_locality;
+        self.net = spec.net;
+        self.engine = spec.engine.clone();
+        self.verify = spec.verify;
+    }
+}
+
 /// Per-phase wall-clock timings (µs) for one locality.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PencilTimings {
@@ -283,13 +314,16 @@ fn settle_sends(
     last_send_done.lock().unwrap().take().unwrap_or(fallback)
 }
 
-/// The per-locality five-phase pencil pipeline. `dims_in` is the
-/// input-side decomposition (the real z-extent in the real domain);
-/// `dims` is the *spectral* decomposition every phase after the z
-/// transform runs on — identical to `dims_in` in the complex domain,
-/// the `n2/2`-packed grid in the real domain.
-fn run_locality(
-    ctx: &crate::hpx::runtime::LocalityCtx,
+/// The per-rank five-phase pencil pipeline over an arbitrary
+/// communicator of `proc.n()` ranks — the cluster driver hands it the
+/// world communicator, [`crate::runtime::FftService`] a per-job
+/// sub-communicator. `dims_in` is the input-side decomposition (the
+/// real z-extent in the real domain); `dims` is the *spectral*
+/// decomposition every phase after the z transform runs on — identical
+/// to `dims_in` in the complex domain, the `n2/2`-packed grid in the
+/// real domain.
+pub(crate) fn run_rank(
+    world: &Communicator,
     dims_in: &PencilDims,
     dims: &PencilDims,
     config: &Pencil3Config,
@@ -297,10 +331,9 @@ fn run_locality(
 ) -> (Vec<Complex32>, PencilTimings) {
     const ELEM: usize = std::mem::size_of::<Complex32>();
     let nthreads = config.threads_per_locality;
-    let world = Communicator::from_ctx(ctx);
     // Typed payloads: wire chunks must never split a complex element.
     world.set_chunk_policy(config.chunk.aligned(ELEM));
-    let (row_idx, col_idx) = dims.proc.coords(ctx.rank);
+    let (row_idx, col_idx) = dims.proc.coords(world.rank());
     // Row communicator: the Pc localities of my process-grid row,
     // ordered by column. Column communicator: the Pr localities of my
     // column, ordered by row. Disjoint tag spaces + own send pools.
@@ -405,23 +438,34 @@ fn run_locality(
 }
 
 /// Run one distributed 3-D pencil FFT end to end on a fresh cluster.
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `grid3` and call `Transform::run` \
+            instead"
+)]
 pub fn run(config: &Pencil3Config) -> anyhow::Result<Pencil3Report> {
     let cluster = Cluster::new(config.proc.n(), config.port, config.net)?;
-    run_on(&cluster, config)
+    Ok(run_on_collect(&cluster, config)?.0)
 }
 
 /// Run on an existing cluster (benchmarks reuse fabrics across reps).
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `grid3` and call `Transform::run_on` \
+            instead"
+)]
 pub fn run_on(cluster: &Cluster, config: &Pencil3Config) -> anyhow::Result<Pencil3Report> {
     Ok(run_on_collect(cluster, config)?.0)
 }
 
-/// [`run_on`], additionally returning each rank's stage-X pencil —
-/// tests use the raw pieces for bitwise-stability checks across ports
-/// and execution modes.
-pub fn run_on_collect(
-    cluster: &Cluster,
+/// Validate everything about a 3-D configuration that does not require
+/// a live cluster, returning the input-side and spectral
+/// decompositions. Shared by the deprecated pencil shims,
+/// [`TransformRequest::build`], and the service's job admission, so the
+/// actionable error strings are identical on every entry path.
+///
+/// [`TransformRequest::build`]: super::TransformRequest::build
+pub(crate) fn validate_config(
     config: &Pencil3Config,
-) -> anyhow::Result<(Pencil3Report, Vec<Vec<Complex32>>)> {
+) -> anyhow::Result<(PencilDims, PencilDims)> {
     // Real-domain preconditions come first: PencilDims::new would
     // otherwise report a generic odd-n2 divisibility error before the
     // r2c-specific message could fire.
@@ -449,6 +493,21 @@ pub fn run_on_collect(
         )
         .map_err(|e| e.context("real-domain packed (n2/2) spectral grid"))?,
     };
+    config.chunk.validate()?;
+    Ok((dims_in, dims))
+}
+
+/// Run on an existing cluster, additionally returning each rank's
+/// stage-X pencil — the engine behind the deprecated shims and
+/// [`Transform::run_on`]; tests use the raw pieces for
+/// bitwise-stability checks across ports and execution modes.
+///
+/// [`Transform::run_on`]: super::Transform::run_on
+pub fn run_on_collect(
+    cluster: &Cluster,
+    config: &Pencil3Config,
+) -> anyhow::Result<(Pencil3Report, Vec<Vec<Complex32>>)> {
+    let (dims_in, dims) = validate_config(config)?;
     anyhow::ensure!(
         cluster.n_localities() == config.proc.n(),
         "cluster size mismatch: {} vs {} ({} process grid)",
@@ -456,55 +515,67 @@ pub fn run_on_collect(
         config.proc.n(),
         config.proc
     );
-    config.chunk.validate()?;
     let engine = config.engine.build()?;
     let before = cluster.fabric().stats();
 
-    let results: Vec<(Vec<Complex32>, PencilTimings)> =
-        cluster.run(|ctx| run_locality(ctx, &dims_in, &dims, config, engine.as_ref()));
+    let results: Vec<(Vec<Complex32>, PencilTimings)> = cluster.run(|ctx| {
+        let world = Communicator::from_ctx(ctx);
+        run_rank(&world, &dims_in, &dims, config, engine.as_ref())
+    });
 
     let stats = cluster.fabric().stats().since(&before);
     let per_rank: Vec<PencilTimings> = results.iter().map(|(_, t)| *t).collect();
     let critical_path = PencilTimings::max(&per_rank);
     let pieces: Vec<Vec<Complex32>> = results.into_iter().map(|(p, _)| p).collect();
 
-    let rel_err = if config.verify {
-        let mut assembled = Vec::with_capacity(dims.grid.elems());
-        for piece in &pieces {
-            assembled.extend_from_slice(piece);
-        }
-        let reference = match config.domain {
-            Domain::Complex => super::verify::serial_fft3_transposed(
-                &grid3::whole_grid(config.grid),
-                config.grid,
-            ),
-            Domain::Real => super::verify::serial_rfft3_packed_transposed(
-                &grid3::whole_grid_real(config.grid),
-                config.grid,
-            ),
-        };
-        let expected = distribute_transposed(&reference, &dims);
-        Some(rel_error(&assembled, &expected))
-    } else {
-        None
-    };
+    let rel_err = if config.verify { Some(verify_pieces(config, &dims, &pieces)) } else { None };
 
     let report = Pencil3Report {
-        config_summary: format!(
-            "{} grid, {} process grid, {} port, {} exec, {} domain, {} engine",
-            config.grid,
-            config.proc,
-            config.port,
-            config.exec.name(),
-            config.domain.name(),
-            engine.name(),
-        ),
+        config_summary: summary_line(config, engine.name()),
         per_rank,
         critical_path,
         rel_error: rel_err,
         stats,
     };
     Ok((report, pieces))
+}
+
+/// Relative L2 error of assembled per-rank pencils vs. the serial
+/// reference for this configuration's synthetic input. `dims` is the
+/// spectral decomposition from [`validate_config`].
+pub(crate) fn verify_pieces(
+    config: &Pencil3Config,
+    dims: &PencilDims,
+    pieces: &[Vec<Complex32>],
+) -> f64 {
+    let mut assembled = Vec::with_capacity(dims.grid.elems());
+    for piece in pieces {
+        assembled.extend_from_slice(piece);
+    }
+    let reference = match config.domain {
+        Domain::Complex => {
+            super::verify::serial_fft3_transposed(&grid3::whole_grid(config.grid), config.grid)
+        }
+        Domain::Real => super::verify::serial_rfft3_packed_transposed(
+            &grid3::whole_grid_real(config.grid),
+            config.grid,
+        ),
+    };
+    let expected = distribute_transposed(&reference, dims);
+    rel_error(&assembled, &expected)
+}
+
+/// One-line human description of an executed configuration.
+pub(crate) fn summary_line(config: &Pencil3Config, engine_name: &str) -> String {
+    format!(
+        "{} grid, {} process grid, {} port, {} exec, {} domain, {} engine",
+        config.grid,
+        config.proc,
+        config.port,
+        config.exec.name(),
+        config.domain.name(),
+        engine_name,
+    )
 }
 
 /// Reorder a global transposed-layout reference (`[i2][i1][i0]`) into
@@ -529,6 +600,10 @@ pub fn distribute_transposed(reference: &[Complex32], dims: &PencilDims) -> Vec<
 }
 
 #[cfg(test)]
+// Exercises the deprecated `run`/`run_on` shims on purpose — shim
+// coverage until every external caller has migrated to
+// `TransformRequest`.
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -578,7 +653,10 @@ mod tests {
                 let cluster = Cluster::new(cfg.proc.n(), cfg.port, cfg.net).unwrap();
                 let dims = PencilDims::new(cfg.grid, cfg.proc).unwrap();
                 let engine = cfg.engine.build().unwrap();
-                cluster.run(|ctx| run_locality(ctx, &dims, &dims, &cfg, engine.as_ref()).0)
+                cluster.run(|ctx| {
+                    let world = Communicator::from_ctx(ctx);
+                    run_rank(&world, &dims, &dims, &cfg, engine.as_ref()).0
+                })
             };
             assert_eq!(
                 run_mode(ExecutionMode::Blocking),

@@ -1,0 +1,563 @@
+//! `TransformRequest` — the single front door to every distributed
+//! transform.
+//!
+//! Historically each transform shape had its own divergent entry
+//! points: `driver::{run, run_on}` for 2-D slabs, the variant-level
+//! `run_input`/`run_async_input`, and `pencil::{run, run_on}` for the
+//! 3-D pencil path. This module collapses them behind one builder:
+//!
+//! ```
+//! use hpx_fft::prelude::*;
+//!
+//! // 2-D slab transform, all defaults.
+//! let report = TransformRequest::grid(32, 32).build().unwrap().run().unwrap();
+//! assert!(report.rel_error.unwrap() < 1e-4);
+//!
+//! // 3-D pencil transform, real input, async execution.
+//! let report = TransformRequest::grid3(Grid3::new(12, 8, 24))
+//!     .proc_grid(ProcGrid::new(2, 2))
+//!     .domain(Domain::Real)
+//!     .exec(ExecutionMode::Async)
+//!     .threads(1)
+//!     .build()
+//!     .unwrap()
+//!     .run()
+//!     .unwrap();
+//! assert!(report.rel_error.unwrap() < 1e-4);
+//! ```
+//!
+//! All validation happens at [`TransformRequest::build`], with the same
+//! actionable error strings the old entry points produced — a built
+//! [`Transform`] is known-runnable up to cluster-size mismatches. The
+//! old entry points survive as `#[deprecated]` shims over the same
+//! internals.
+
+use super::driver::{
+    self, ComputeEngine, DistFftConfig, Domain, ExecutionMode, StepTimings, Variant,
+};
+use super::grid3::{Grid3, ProcGrid};
+use super::pencil::{self, Pencil3Config, PencilTimings};
+use crate::collectives::{AllToAllAlgo, ChunkPolicy};
+use crate::config::TransformSpec;
+use crate::fft::complex::Complex32;
+use crate::hpx::runtime::Cluster;
+use crate::parcelport::{NetModel, PortKind, PortStatsSnapshot};
+
+/// The transform's shape: a 2-D slab grid or a 3-D pencil grid.
+#[derive(Clone, Debug)]
+enum Shape {
+    /// `rows × cols` slab decomposition over `localities` ranks.
+    Plane { rows: usize, cols: usize },
+    /// `n0 × n1 × n2` pencil decomposition over a `Pr × Pc` process grid.
+    Pencil { grid: Grid3 },
+}
+
+/// Builder for one distributed transform — 2-D or 3-D, complex or real,
+/// blocking or async, over any parcelport (see the [module docs]
+/// for examples).
+///
+/// Start from [`TransformRequest::grid`] (2-D) or
+/// [`TransformRequest::grid3`] (3-D), chain setters, and call
+/// [`build`](Self::build); shape-inapplicable settings (e.g.
+/// [`variant`](Self::variant) on a 3-D request) are rejected there with
+/// actionable errors.
+///
+/// [module docs]: self
+#[derive(Clone, Debug)]
+pub struct TransformRequest {
+    shape: Shape,
+    spec: TransformSpec,
+    variant: Option<Variant>,
+    algo: Option<AllToAllAlgo>,
+    localities: Option<usize>,
+    proc: Option<ProcGrid>,
+    collect_outputs: bool,
+}
+
+impl TransformRequest {
+    /// A 2-D `rows × cols` slab transform (defaults: 4 localities,
+    /// scatter variant, [`TransformSpec::default`] execution settings).
+    pub fn grid(rows: usize, cols: usize) -> Self {
+        Self {
+            shape: Shape::Plane { rows, cols },
+            spec: TransformSpec::default(),
+            variant: None,
+            algo: None,
+            localities: None,
+            proc: None,
+            collect_outputs: false,
+        }
+    }
+
+    /// A 3-D `n0 × n1 × n2` pencil transform (defaults: 2×2 process
+    /// grid, [`TransformSpec::default`] execution settings).
+    pub fn grid3(grid: Grid3) -> Self {
+        Self {
+            shape: Shape::Pencil { grid },
+            spec: TransformSpec::default(),
+            variant: None,
+            algo: None,
+            localities: None,
+            proc: None,
+            collect_outputs: false,
+        }
+    }
+
+    /// Replace the full shared execution-settings block at once (port,
+    /// chunk policy, exec mode, domain, threads, wire model, engine,
+    /// verify). Individual setters may still override afterwards.
+    pub fn spec(mut self, spec: TransformSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Input domain: complex (c2c) or real (r2c, halved wire bytes).
+    pub fn domain(mut self, domain: Domain) -> Self {
+        self.spec.domain = domain;
+        self
+    }
+
+    /// Parcelport backend.
+    pub fn port(mut self, port: PortKind) -> Self {
+        self.spec.port = port;
+        self
+    }
+
+    /// Blocking lock-step collectives vs the future-chained task graph.
+    pub fn exec(mut self, exec: ExecutionMode) -> Self {
+        self.spec.exec = exec;
+        self
+    }
+
+    /// Wire-chunking policy for the run's communicators.
+    pub fn chunk(mut self, chunk: ChunkPolicy) -> Self {
+        self.spec.chunk = chunk;
+        self
+    }
+
+    /// Communication variant — 2-D requests only (the pencil path
+    /// always runs its chunk-pipelined exchange rounds).
+    pub fn variant(mut self, variant: Variant) -> Self {
+        self.variant = Some(variant);
+        self
+    }
+
+    /// All-to-all algorithm — 2-D [`Variant::AllToAll`] requests only.
+    pub fn algo(mut self, algo: AllToAllAlgo) -> Self {
+        self.algo = Some(algo);
+        self
+    }
+
+    /// Number of participating localities — 2-D requests only (3-D
+    /// requests derive it from [`proc_grid`](Self::proc_grid)).
+    pub fn localities(mut self, n: usize) -> Self {
+        self.localities = Some(n);
+        self
+    }
+
+    /// `Pr × Pc` process grid — 3-D requests only.
+    pub fn proc_grid(mut self, proc: ProcGrid) -> Self {
+        self.proc = Some(proc);
+        self
+    }
+
+    /// Worker threads per locality for the row-FFT phases.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.spec.threads_per_locality = n;
+        self
+    }
+
+    /// Optional hybrid wire model.
+    pub fn net(mut self, net: Option<NetModel>) -> Self {
+        self.spec.net = net;
+        self
+    }
+
+    /// Row-FFT compute engine.
+    pub fn engine(mut self, engine: ComputeEngine) -> Self {
+        self.spec.engine = engine;
+        self
+    }
+
+    /// Compare the distributed result against the serial reference.
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.spec.verify = verify;
+        self
+    }
+
+    /// Return each rank's raw spectral piece in
+    /// [`TransformReport::outputs`] — the bitwise-comparison hook the
+    /// stress tests and the service's mismatch audit use.
+    pub fn collect_outputs(mut self, collect: bool) -> Self {
+        self.collect_outputs = collect;
+        self
+    }
+
+    /// Validate the request and freeze it into a runnable
+    /// [`Transform`]. All shape/domain/chunk validation happens here,
+    /// with the same actionable error strings the deprecated entry
+    /// points produce.
+    pub fn build(self) -> anyhow::Result<Transform> {
+        let plan = match self.shape {
+            Shape::Plane { rows, cols } => {
+                anyhow::ensure!(
+                    self.proc.is_none(),
+                    "proc_grid() applies to 3-D requests only; use localities() to size \
+                     a 2-D transform (or start from TransformRequest::grid3)"
+                );
+                let mut config = DistFftConfig { rows, cols, ..DistFftConfig::default() };
+                config.apply_spec(&self.spec);
+                if let Some(n) = self.localities {
+                    config.localities = n;
+                }
+                if let Some(v) = self.variant {
+                    config.variant = v;
+                }
+                if let Some(a) = self.algo {
+                    config.algo = a;
+                }
+                driver::validate_config(&config)?;
+                Plan::Plane(config)
+            }
+            Shape::Pencil { grid } => {
+                anyhow::ensure!(
+                    self.variant.is_none() && self.algo.is_none(),
+                    "variant()/algo() apply to 2-D requests only; the pencil path always \
+                     runs its chunk-pipelined exchange rounds"
+                );
+                anyhow::ensure!(
+                    self.localities.is_none(),
+                    "localities() applies to 2-D requests only; size a 3-D transform \
+                     with proc_grid(ProcGrid::new(pr, pc))"
+                );
+                let mut config = Pencil3Config { grid, ..Pencil3Config::default() };
+                config.apply_spec(&self.spec);
+                if let Some(p) = self.proc {
+                    config.proc = p;
+                }
+                pencil::validate_config(&config)?;
+                Plan::Pencil(config)
+            }
+        };
+        Ok(Transform { plan, collect_outputs: self.collect_outputs })
+    }
+}
+
+/// The validated execution plan behind a [`Transform`].
+#[derive(Clone, Debug)]
+enum Plan {
+    Plane(DistFftConfig),
+    Pencil(Pencil3Config),
+}
+
+/// A validated, runnable transform produced by
+/// [`TransformRequest::build`]. Immutable; [`run`](Self::run) it on a
+/// fresh cluster, or [`run_on`](Self::run_on) an existing one to reuse
+/// its fabric across repetitions (what the figure harnesses do).
+#[derive(Clone, Debug)]
+pub struct Transform {
+    plan: Plan,
+    collect_outputs: bool,
+}
+
+impl Transform {
+    /// Number of localities this transform occupies.
+    pub fn localities(&self) -> usize {
+        match &self.plan {
+            Plan::Plane(c) => c.localities,
+            Plan::Pencil(c) => c.proc.n(),
+        }
+    }
+
+    /// Parcelport backend the transform runs on.
+    pub fn port(&self) -> PortKind {
+        match &self.plan {
+            Plan::Plane(c) => c.port,
+            Plan::Pencil(c) => c.port,
+        }
+    }
+
+    /// Optional hybrid wire model.
+    pub fn net(&self) -> Option<NetModel> {
+        match &self.plan {
+            Plan::Plane(c) => c.net,
+            Plan::Pencil(c) => c.net,
+        }
+    }
+
+    /// The validated 2-D configuration, if this is a slab transform.
+    pub(crate) fn plane_config(&self) -> Option<&DistFftConfig> {
+        match &self.plan {
+            Plan::Plane(c) => Some(c),
+            Plan::Pencil(_) => None,
+        }
+    }
+
+    /// The validated 3-D configuration, if this is a pencil transform.
+    pub(crate) fn pencil_config(&self) -> Option<&Pencil3Config> {
+        match &self.plan {
+            Plan::Plane(_) => None,
+            Plan::Pencil(c) => Some(c),
+        }
+    }
+
+    /// Whether the request asked for raw per-rank outputs in the report.
+    pub(crate) fn collects_outputs(&self) -> bool {
+        self.collect_outputs
+    }
+
+    /// Run end to end on a fresh cluster.
+    pub fn run(&self) -> anyhow::Result<TransformReport> {
+        let cluster = Cluster::new(self.localities(), self.port(), self.net())?;
+        self.run_on(&cluster)
+    }
+
+    /// Run on an existing cluster (benchmarks reuse fabrics across
+    /// reps; the cluster must span exactly
+    /// [`localities`](Self::localities) ranks).
+    pub fn run_on(&self, cluster: &Cluster) -> anyhow::Result<TransformReport> {
+        match &self.plan {
+            Plan::Plane(config) => {
+                let (report, pieces) = driver::run_on_impl(cluster, config)?;
+                Ok(TransformReport {
+                    summary: report.config_summary,
+                    timings: TransformTimings::Plane {
+                        per_rank: report.per_rank,
+                        critical_path: report.critical_path,
+                    },
+                    rel_error: report.rel_error,
+                    stats: report.stats,
+                    outputs: self.collect_outputs.then_some(pieces),
+                })
+            }
+            Plan::Pencil(config) => {
+                let (report, pieces) = pencil::run_on_collect(cluster, config)?;
+                Ok(TransformReport {
+                    summary: report.config_summary,
+                    timings: TransformTimings::Pencil {
+                        per_rank: report.per_rank,
+                        critical_path: report.critical_path,
+                    },
+                    rel_error: report.rel_error,
+                    stats: report.stats,
+                    outputs: self.collect_outputs.then_some(pieces),
+                })
+            }
+        }
+    }
+}
+
+/// Per-shape timing detail of a [`TransformReport`].
+#[derive(Clone, Debug)]
+pub enum TransformTimings {
+    /// 2-D slab transform: four-step timings per rank.
+    Plane {
+        /// Per-locality step timings, rank order.
+        per_rank: Vec<StepTimings>,
+        /// Element-wise max across localities.
+        critical_path: StepTimings,
+    },
+    /// 3-D pencil transform: five-phase timings per rank.
+    Pencil {
+        /// Per-locality phase timings, rank order.
+        per_rank: Vec<PencilTimings>,
+        /// Element-wise max across localities.
+        critical_path: PencilTimings,
+    },
+}
+
+impl TransformTimings {
+    /// Critical-path end-to-end wall time, µs.
+    pub fn total_us(&self) -> f64 {
+        match self {
+            TransformTimings::Plane { critical_path, .. } => critical_path.total_us,
+            TransformTimings::Pencil { critical_path, .. } => critical_path.total_us,
+        }
+    }
+
+    /// The 2-D critical-path step timings, if this is a slab transform.
+    pub fn plane_critical_path(&self) -> Option<&StepTimings> {
+        match self {
+            TransformTimings::Plane { critical_path, .. } => Some(critical_path),
+            TransformTimings::Pencil { .. } => None,
+        }
+    }
+
+    /// The 3-D critical-path phase timings, if this is a pencil
+    /// transform.
+    pub fn pencil_critical_path(&self) -> Option<&PencilTimings> {
+        match self {
+            TransformTimings::Plane { .. } => None,
+            TransformTimings::Pencil { critical_path, .. } => Some(critical_path),
+        }
+    }
+
+    /// Critical-path comm/compute overlap, µs (0 in blocking mode).
+    pub fn overlap_us(&self) -> f64 {
+        match self {
+            TransformTimings::Plane { critical_path, .. } => critical_path.overlap_us,
+            TransformTimings::Pencil { critical_path, .. } => critical_path.overlap_us,
+        }
+    }
+}
+
+/// Unified execution report of one transform, whatever its shape — what
+/// [`Transform::run`]/[`Transform::run_on`] return and what the service
+/// hands back per job.
+#[derive(Clone, Debug)]
+pub struct TransformReport {
+    /// One-line description of the executed configuration.
+    pub summary: String,
+    /// Per-shape timing detail.
+    pub timings: TransformTimings,
+    /// Relative L2 error vs. the serial reference (if verified).
+    pub rel_error: Option<f64>,
+    /// Traffic accounted during the run. From the cluster driver this
+    /// is the fabric-global diff; from the service it is the job's own
+    /// scoped counters (see `Communicator::with_stats_scope`).
+    pub stats: PortStatsSnapshot,
+    /// Each rank's raw spectral piece, rank order — present only when
+    /// the request asked for [`TransformRequest::collect_outputs`].
+    pub outputs: Option<Vec<Vec<Complex32>>>,
+}
+
+impl TransformReport {
+    /// Critical-path end-to-end wall time, µs.
+    pub fn total_us(&self) -> f64 {
+        self.timings.total_us()
+    }
+
+    /// Critical-path comm/compute overlap, µs.
+    pub fn overlap_us(&self) -> f64 {
+        self.timings.overlap_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_request_runs_and_verifies() {
+        let report = TransformRequest::grid(32, 32).build().unwrap().run().unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4);
+        assert!(report.total_us() > 0.0);
+        assert!(report.stats.msgs_sent > 0);
+        assert!(report.outputs.is_none(), "outputs only on request");
+        match &report.timings {
+            TransformTimings::Plane { per_rank, .. } => assert_eq!(per_rank.len(), 4),
+            other => panic!("expected plane timings, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pencil_request_runs_and_verifies() {
+        let report = TransformRequest::grid3(Grid3::new(12, 8, 24))
+            .proc_grid(ProcGrid::new(2, 2))
+            .threads(1)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(report.rel_error.unwrap() < 1e-4);
+        match &report.timings {
+            TransformTimings::Pencil { per_rank, .. } => assert_eq!(per_rank.len(), 4),
+            other => panic!("expected pencil timings, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn build_rejects_indivisible_plane_grid() {
+        let err = TransformRequest::grid(30, 32).build().unwrap_err().to_string();
+        assert!(err.contains("divide evenly"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_variant_on_pencil() {
+        let err = TransformRequest::grid3(Grid3::new(8, 8, 8))
+            .variant(Variant::AllToAll)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("2-D requests only"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_proc_grid_on_plane() {
+        let err = TransformRequest::grid(16, 16)
+            .proc_grid(ProcGrid::new(2, 2))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("3-D requests only"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_localities_on_pencil() {
+        let err = TransformRequest::grid3(Grid3::new(8, 8, 8))
+            .localities(4)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("proc_grid"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_real_domain_odd_cols() {
+        let err = TransformRequest::grid(16, 27)
+            .domain(Domain::Real)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("even column count"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_zero_chunk_policy() {
+        let err = TransformRequest::grid(16, 16)
+            .chunk(ChunkPolicy { chunk_bytes: 0, inflight: 4 })
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chunk policy must be positive"), "{err}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn request_matches_deprecated_driver_bitwise() {
+        // The new front door must produce byte-identical spectra to the
+        // old entry points — it routes through the same internals.
+        let report = TransformRequest::grid(16, 16)
+            .localities(2)
+            .threads(1)
+            .collect_outputs(true)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let config = DistFftConfig {
+            rows: 16,
+            cols: 16,
+            localities: 2,
+            threads_per_locality: 1,
+            ..Default::default()
+        };
+        let cluster = Cluster::new(2, config.port, config.net).unwrap();
+        let (_, pieces) = driver::run_on_impl(&cluster, &config).unwrap();
+        assert_eq!(report.outputs.unwrap(), pieces);
+    }
+
+    #[test]
+    fn request_spec_bulk_apply() {
+        let spec = TransformSpec {
+            port: PortKind::Mpi,
+            exec: ExecutionMode::Async,
+            threads_per_locality: 1,
+            ..Default::default()
+        };
+        let report =
+            TransformRequest::grid(16, 16).spec(spec).localities(2).build().unwrap().run().unwrap();
+        assert!(report.summary.contains("mpi port"), "{}", report.summary);
+        assert!(report.summary.contains("async exec"), "{}", report.summary);
+    }
+}

@@ -29,13 +29,31 @@ use std::time::Instant;
 /// Run the four-step distributed FFT with N overlapped scatters
 /// (complex domain — see [`run_input`] for the domain-polymorphic
 /// entry point).
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::Scatter` instead of \
+            calling the variant entry point directly"
+)]
 pub fn run(
     comm: &Communicator,
     slab: &Slab,
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
-    run_input(comm, &FftInput::Complex(slab), nthreads, engine)
+    run_input_impl(comm, &FftInput::Complex(slab), nthreads, engine)
+}
+
+/// [`run`] over either input domain.
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::Scatter` instead of \
+            calling the variant entry point directly"
+)]
+pub fn run_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
+    run_input_impl(comm, input, nthreads, engine)
 }
 
 /// Run the four-step distributed FFT with N overlapped scatters over
@@ -44,7 +62,7 @@ pub fn run(
 /// after sees a spectral slab of [`FftInput::spectral_cols`] columns,
 /// so a real-domain run ships half the complex-domain payload over the
 /// same wire protocol.
-pub fn run_input(
+pub(crate) fn run_input_impl(
     comm: &Communicator,
     input: &FftInput<'_>,
     nthreads: usize,
@@ -203,20 +221,38 @@ pub(crate) fn hidden_us(start: Instant, end: Instant, until: Instant) -> f64 {
 /// on-arrival transposes, and the slice of the second FFT that ran before
 /// the last outgoing chunk completed) is reported as
 /// [`StepTimings::overlap_us`].
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::Scatter` and \
+            `ExecutionMode::Async` instead of calling the variant entry point directly"
+)]
 pub fn run_async(
     comm: &Communicator,
     slab: &Slab,
     nthreads: usize,
     engine: &dyn RowFft,
 ) -> (Vec<Complex32>, StepTimings) {
-    run_async_input(comm, &FftInput::Complex(slab), nthreads, engine)
+    run_async_input_impl(comm, &FftInput::Complex(slab), nthreads, engine)
 }
 
-/// [`run_async`] over either input domain — the banded stage-1 loop
-/// calls [`FftInput::stage1_band`], so in the real domain each wire
+/// [`run_async`] over either input domain.
+#[deprecated(
+    note = "build a `dist_fft::TransformRequest` with `Variant::Scatter` and \
+            `ExecutionMode::Async` instead of calling the variant entry point directly"
+)]
+pub fn run_async_input(
+    comm: &Communicator,
+    input: &FftInput<'_>,
+    nthreads: usize,
+    engine: &dyn RowFft,
+) -> (Vec<Complex32>, StepTimings) {
+    run_async_input_impl(comm, input, nthreads, engine)
+}
+
+/// [`run`] in async form over either input domain — the banded stage-1
+/// loop calls [`FftInput::stage1_band`], so in the real domain each wire
 /// band is r2c-transformed into packed half-spectra the moment before
 /// it is posted (half the bytes per band, same schedule).
-pub fn run_async_input(
+pub(crate) fn run_async_input_impl(
     comm: &Communicator,
     input: &FftInput<'_>,
     nthreads: usize,
@@ -373,6 +409,9 @@ pub fn run_async_input(
 }
 
 #[cfg(test)]
+// Exercises the deprecated variant shims on purpose — shim coverage
+// until every external caller has migrated to `TransformRequest`.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::dist_fft::driver::NativeRowFft;

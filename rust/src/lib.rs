@@ -29,3 +29,36 @@ pub mod runtime;
 pub mod simnet;
 pub mod task;
 pub mod util;
+
+/// One-line import for the request-based API: transform building
+/// ([`TransformRequest`](crate::dist_fft::TransformRequest) and its
+/// knob types) plus the resident service
+/// ([`FftService`](crate::runtime::FftService) and its job types).
+///
+/// ```
+/// use hpx_fft::prelude::*;
+///
+/// let report = TransformRequest::grid(16, 16)
+///     .localities(2)
+///     .threads(1)
+///     .build()
+///     .unwrap()
+///     .run()
+///     .unwrap();
+/// assert!(report.rel_error.unwrap() < 1e-4);
+/// ```
+pub mod prelude {
+    pub use crate::collectives::{AllToAllAlgo, ChunkPolicy};
+    pub use crate::config::TransformSpec;
+    pub use crate::dist_fft::driver::{ComputeEngine, Domain, ExecutionMode, Variant};
+    pub use crate::dist_fft::grid3::{Grid3, ProcGrid};
+    pub use crate::dist_fft::request::{
+        Transform, TransformReport, TransformRequest, TransformTimings,
+    };
+    pub use crate::hpx::runtime::Cluster;
+    pub use crate::parcelport::{NetModel, PortKind, PortStatsSnapshot};
+    pub use crate::runtime::{
+        AdmissionError, FftService, JobError, JobHandle, JobOutput, JobState, ServiceConfig,
+        TenantMetrics,
+    };
+}

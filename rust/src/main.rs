@@ -11,21 +11,26 @@
 //! - `repro bench strong-scaling --variant all-to-all|scatter` —
 //!   regenerate Fig. 4 / Fig. 5.
 //! - `repro bench collectives` — all-to-all algorithm ablation.
+//! - `repro serve` — resident multi-tenant FFT service reading job
+//!   lines from stdin.
+//! - `repro load` — multi-tenant service load generator (latency
+//!   percentiles + bitwise output audit).
 //!
 //! Run `repro help` for flags.
 
 use anyhow::{bail, Result};
 use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
-use hpx_fft::bench_harness::{fig3, fig45, fig6, fig7, runner::measure};
+use hpx_fft::bench_harness::{fig3, fig45, fig6, fig7, load, runner::measure};
 use hpx_fft::cli::Args;
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
-use hpx_fft::config::{BenchConfig, ClusterSpec};
-use hpx_fft::dist_fft::driver::{self, ComputeEngine, DistFftConfig, Domain, ExecutionMode, Variant};
+use hpx_fft::config::{BenchConfig, ClusterSpec, TransformSpec};
+use hpx_fft::dist_fft::driver::{ComputeEngine, Domain, ExecutionMode, Variant};
 use hpx_fft::dist_fft::grid3::{Grid3, ProcGrid};
-use hpx_fft::dist_fft::pencil::{self, Pencil3Config};
+use hpx_fft::dist_fft::TransformRequest;
 use hpx_fft::hpx::parcel::Payload;
 use hpx_fft::hpx::runtime::Cluster;
 use hpx_fft::parcelport::{NetModel, PortKind};
+use hpx_fft::runtime::{FftService, JobHandle, ServiceConfig};
 
 const HELP: &str = "\
 repro — HPX communication benchmark reproduction (Strack & Pflüger 2025)
@@ -74,6 +79,20 @@ USAGE:
                               [--chunk-bytes N] [--inflight N]
   repro simulate [--grid N] [--port tcp|mpi|lci] [--domain complex|real]
                  [--variant all-to-all|scatter|fftw3] [--nodes-list 1,2,4,8,16]
+  repro serve    [--nodes N] [--port tcp|mpi|lci] [--queue-limit N]
+                 [--inflight-jobs N]
+                 (resident multi-tenant FFT service; reads one job per
+                  stdin line: `[tenant=T] grid=RxC|grid3=N0xN1xN2
+                  [nodes=N|proc=PRxPC] [domain=..] [exec=..] [threads=N]
+                  [verify=..]`, # comments and blank lines skipped;
+                  prints each job's report as it finishes, EOF drains
+                  and prints per-tenant metrics)
+  repro load     [--tenants N] [--jobs N] [--nodes N] [--port tcp|mpi|lci]
+                 [--queue-limit N] [--inflight-jobs N] [--threads N]
+                 [--out DIR]
+                 (service load generator: mixed 2-D/3-D × complex/real ×
+                  blocking/async jobs from N synthetic tenants, audited
+                  bitwise vs single-shot runs; writes service_load.csv)
   repro help
 ";
 
@@ -105,6 +124,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             other => bail!("unknown bench target {other:?}; see `repro help`"),
         },
         Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("load") => cmd_load(&args),
         Some(other) => bail!("unknown subcommand {other:?}; see `repro help`"),
     }
 }
@@ -178,18 +199,13 @@ fn parse_chunk_policy(args: &Args) -> Result<ChunkPolicy> {
     Ok(ChunkPolicy::new(chunk_bytes, inflight))
 }
 
-fn cmd_fft(args: &Args) -> Result<()> {
-    args.check_known(&[
-        "rows", "cols", "nodes", "port", "variant", "exec", "domain", "algo", "chunk-bytes",
-        "inflight", "threads", "engine", "artifacts", "net", "no-verify",
-    ])?;
-    let config = DistFftConfig {
-        rows: args.get_or("rows", 256usize)?,
-        cols: args.get_or("cols", 256usize)?,
-        localities: args.get_or("nodes", 4usize)?,
+/// Parse the shared execution-settings flags (port, chunking, exec,
+/// domain, threads, wire model, engine, verify) into a
+/// [`TransformSpec`] — what both `repro fft` and `repro fft3` feed the
+/// request builder.
+fn parse_spec(args: &Args) -> Result<TransformSpec> {
+    Ok(TransformSpec {
         port: args.get_or("port", PortKind::Lci)?,
-        variant: args.get_or("variant", Variant::Scatter)?,
-        algo: args.get_or("algo", AllToAllAlgo::HpxRoot)?,
         chunk: parse_chunk_policy(args)?,
         exec: args.get_or("exec", ExecutionMode::Blocking)?,
         domain: args.get_or("domain", Domain::Complex)?,
@@ -197,10 +213,26 @@ fn cmd_fft(args: &Args) -> Result<()> {
         net: args.get_bool("net").then(NetModel::infiniband_hdr),
         engine: parse_engine(args)?,
         verify: !args.get_bool("no-verify"),
-    };
-    let report = driver::run(&config)?;
-    println!("{}", report.config_summary);
-    let cp = report.critical_path;
+    })
+}
+
+fn cmd_fft(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "rows", "cols", "nodes", "port", "variant", "exec", "domain", "algo", "chunk-bytes",
+        "inflight", "threads", "engine", "artifacts", "net", "no-verify",
+    ])?;
+    let spec = parse_spec(args)?;
+    let is_async = spec.exec == ExecutionMode::Async;
+    let (rows, cols) = (args.get_or("rows", 256usize)?, args.get_or("cols", 256usize)?);
+    let report = TransformRequest::grid(rows, cols)
+        .spec(spec)
+        .localities(args.get_or("nodes", 4usize)?)
+        .variant(args.get_or("variant", Variant::Scatter)?)
+        .algo(args.get_or("algo", AllToAllAlgo::HpxRoot)?)
+        .build()?
+        .run()?;
+    println!("{}", report.summary);
+    let cp = report.timings.plane_critical_path().expect("2-D transform has plane timings");
     println!(
         "critical path: total {:.2} ms  (fft1 {:.2} | comm {:.2} | transpose {:.2} | fft2 {:.2})",
         cp.total_us / 1e3,
@@ -209,7 +241,7 @@ fn cmd_fft(args: &Args) -> Result<()> {
         cp.transpose_us / 1e3,
         cp.fft2_us / 1e3
     );
-    if config.exec == ExecutionMode::Async {
+    if is_async {
         println!(
             "overlap: {} of compute ran while collective traffic was in flight",
             hpx_fft::metrics::table::fmt_us(cp.overlap_us)
@@ -236,21 +268,15 @@ fn cmd_fft3(args: &Args) -> Result<()> {
         "grid3", "proc-grid", "port", "exec", "domain", "chunk-bytes", "inflight", "threads",
         "net", "no-verify",
     ])?;
-    let config = Pencil3Config {
-        grid: args.get_or("grid3", Grid3::new(32, 32, 32))?,
-        proc: args.get_or("proc-grid", ProcGrid::new(2, 2))?,
-        port: args.get_or("port", PortKind::Lci)?,
-        chunk: parse_chunk_policy(args)?,
-        exec: args.get_or("exec", ExecutionMode::Blocking)?,
-        domain: args.get_or("domain", Domain::Complex)?,
-        threads_per_locality: args.get_or("threads", 2usize)?,
-        net: args.get_bool("net").then(NetModel::infiniband_hdr),
-        engine: ComputeEngine::Native,
-        verify: !args.get_bool("no-verify"),
-    };
-    let report = pencil::run(&config)?;
-    println!("{}", report.config_summary);
-    let cp = report.critical_path;
+    let spec = parse_spec(args)?;
+    let is_async = spec.exec == ExecutionMode::Async;
+    let report = TransformRequest::grid3(args.get_or("grid3", Grid3::new(32, 32, 32))?)
+        .spec(spec)
+        .proc_grid(args.get_or("proc-grid", ProcGrid::new(2, 2))?)
+        .build()?
+        .run()?;
+    println!("{}", report.summary);
+    let cp = report.timings.pencil_critical_path().expect("3-D transform has pencil timings");
     println!(
         "critical path: total {:.2} ms  (fftz {:.2} | t1 {:.2} (place {:.2}) | \
          ffty {:.2} | t2 {:.2} (place {:.2}) | fftx {:.2})",
@@ -263,7 +289,7 @@ fn cmd_fft3(args: &Args) -> Result<()> {
         cp.t2_place_us / 1e3,
         cp.fft_x_us / 1e3
     );
-    if config.exec == ExecutionMode::Async {
+    if is_async {
         println!(
             "overlap: {} of compute ran while transpose traffic was in flight",
             hpx_fft::metrics::table::fmt_us(cp.overlap_us)
@@ -521,5 +547,178 @@ fn cmd_bench_collectives(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+/// Parse one `repro serve` stdin line into `(tenant, request)`.
+/// Tokens are whitespace-separated `key=value` pairs; exactly one of
+/// `grid=RxC` (2-D) or `grid3=N0xN1xN2` (3-D) is required.
+fn parse_serve_line(line: &str) -> Result<(String, TransformRequest)> {
+    let mut tenant = "default".to_string();
+    let mut grid: Option<(usize, usize)> = None;
+    let mut grid3: Option<Grid3> = None;
+    let mut nodes: Option<usize> = None;
+    let mut proc: Option<ProcGrid> = None;
+    let mut spec = TransformSpec { threads_per_locality: 1, ..TransformSpec::default() };
+    for tok in line.split_whitespace() {
+        let (key, value) =
+            tok.split_once('=').ok_or_else(|| anyhow::anyhow!("token {tok:?} is not key=value"))?;
+        match key {
+            "tenant" => tenant = value.to_string(),
+            "grid" => {
+                let (r, c) = value
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("grid wants RxC, got {value:?}"))?;
+                grid = Some((r.parse()?, c.parse()?));
+            }
+            "grid3" => grid3 = Some(value.parse().map_err(anyhow::Error::msg)?),
+            "nodes" => nodes = Some(value.parse()?),
+            "proc" => proc = Some(value.parse().map_err(anyhow::Error::msg)?),
+            "port" => spec.port = value.parse().map_err(anyhow::Error::msg)?,
+            "domain" => spec.domain = value.parse().map_err(anyhow::Error::msg)?,
+            "exec" => spec.exec = value.parse().map_err(anyhow::Error::msg)?,
+            "threads" => spec.threads_per_locality = value.parse()?,
+            "verify" => spec.verify = value.parse()?,
+            other => bail!(
+                "unknown key {other:?} \
+                 (tenant|grid|grid3|nodes|proc|port|domain|exec|threads|verify)"
+            ),
+        }
+    }
+    let mut request = match (grid, grid3) {
+        (Some((rows, cols)), None) => TransformRequest::grid(rows, cols),
+        (None, Some(g)) => TransformRequest::grid3(g),
+        _ => bail!("each job needs exactly one of grid=RxC or grid3=N0xN1xN2"),
+    };
+    request = request.spec(spec);
+    if let Some(n) = nodes {
+        request = request.localities(n);
+    }
+    if let Some(p) = proc {
+        request = request.proc_grid(p);
+    }
+    Ok((tenant, request))
+}
+
+/// Print every finished job's outcome and drop its handle; with
+/// `block`, wait for all of them.
+fn reap(handles: &mut Vec<JobHandle>, block: bool) {
+    let mut i = 0;
+    while i < handles.len() {
+        if block || handles[i].is_done() {
+            let h = handles.swap_remove(i);
+            let (id, tenant) = (h.id(), h.tenant().to_string());
+            match h.wait() {
+                Ok(out) => println!(
+                    "job {id} [{tenant}] done in {:.1} ms — {}",
+                    out.latency_us / 1e3,
+                    out.report.summary
+                ),
+                Err(e) => println!("job {id} [{tenant}] FAILED: {e}"),
+            }
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// `repro serve` — a resident multi-tenant FFT service fed from stdin
+/// (one job per line), the interactive face of
+/// [`hpx_fft::runtime::FftService`]. EOF drains the service and prints
+/// per-tenant metrics.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    args.check_known(&["nodes", "port", "queue-limit", "inflight-jobs"])?;
+    let service = FftService::new(ServiceConfig {
+        localities: args.get_or("nodes", 4usize)?,
+        port: args.get_or("port", PortKind::Lci)?,
+        net: None,
+        queue_limit: args.get_or("queue-limit", 64usize)?,
+        max_inflight: args.get_or("inflight-jobs", 4usize)?,
+        job_tag_span: None,
+    })?;
+    println!(
+        "fft service up: {} localities, {} port; one job per stdin line\n\
+           [tenant=T] grid=RxC|grid3=N0xN1xN2 [nodes=N|proc=PRxPC] [domain=complex|real]\n\
+           [exec=blocking|async] [threads=N] [verify=true|false]   (# starts a comment)",
+        service.localities(),
+        service.port()
+    );
+    let mut handles: Vec<JobHandle> = Vec::new();
+    for (lineno, line) in std::io::stdin().lock().lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_serve_line(line) {
+            Ok((tenant, request)) => match service.submit(&tenant, request) {
+                Ok(h) => {
+                    println!("job {} [{}] accepted", h.id(), h.tenant());
+                    handles.push(h);
+                }
+                Err(e) => println!("line {}: rejected: {e}", lineno + 1),
+            },
+            Err(e) => println!("line {}: {e:#}", lineno + 1),
+        }
+        reap(&mut handles, false);
+    }
+    reap(&mut handles, true);
+    let metrics = service.shutdown();
+    println!("\nper-tenant metrics:");
+    let mut t = hpx_fft::metrics::table::Table::new(&[
+        "tenant", "submitted", "done", "failed", "rejected", "p50", "p99", "wire bytes",
+    ]);
+    for m in &metrics {
+        let (p50, p99) = match &m.latency {
+            Some(l) => {
+                (format!("{:.1} ms", l.p50() / 1e3), format!("{:.1} ms", l.p99() / 1e3))
+            }
+            None => ("-".into(), "-".into()),
+        };
+        t.row(&[
+            m.tenant.clone(),
+            m.submitted.to_string(),
+            m.completed.to_string(),
+            m.failed.to_string(),
+            m.rejected.to_string(),
+            p50,
+            p99,
+            m.wire_bytes.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// `repro load` — the multi-tenant service load generator
+/// ([`hpx_fft::bench_harness::load`]); exits nonzero if any job's
+/// output differs bitwise from its single-shot reference.
+fn cmd_load(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "tenants", "jobs", "nodes", "port", "queue-limit", "inflight-jobs", "threads", "out",
+    ])?;
+    let cfg = load::LoadConfig {
+        localities: args.get_or("nodes", 4usize)?,
+        port: args.get_or("port", PortKind::Lci)?,
+        tenants: args.get_or("tenants", 4usize)?,
+        jobs: args.get_or("jobs", 1000usize)?,
+        queue_limit: args.get_or("queue-limit", 64usize)?,
+        max_inflight: args.get_or("inflight-jobs", 4usize)?,
+        threads: args.get_or("threads", 1usize)?,
+        out_dir: args.get("out").unwrap_or("bench_out").to_string(),
+    };
+    println!(
+        "service load: {} jobs over {} tenants, {}-locality {} fabric, {} jobs in flight\n",
+        cfg.jobs, cfg.tenants, cfg.localities, cfg.port, cfg.max_inflight
+    );
+    let rows = load::run(&cfg)?;
+    print!("{}", load::report(&rows, &cfg.out_dir)?);
+    println!("\nCSV written to {}/service_load.csv", cfg.out_dir);
+    let mismatches: usize = rows.iter().map(|r| r.mismatches).sum();
+    anyhow::ensure!(
+        mismatches == 0,
+        "{mismatches} job(s) returned outputs differing bitwise from the single-shot reference"
+    );
     Ok(())
 }

@@ -71,6 +71,40 @@ impl RunStats {
         }
     }
 
+    /// Nearest-rank percentile, `p` in `[0, 100]` — the latency summary
+    /// convention of service benchmarks (p50/p95/p99). `p = 0` is the
+    /// minimum, `p = 100` the maximum.
+    ///
+    /// # Panics
+    /// If `p` is outside `[0, 100]` or not finite.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!(p.is_finite() && (0.0..=100.0).contains(&p), "percentile {p} outside [0, 100]");
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        if p == 0.0 {
+            return s[0];
+        }
+        // Nearest-rank: smallest sample with at least p% of the set at
+        // or below it.
+        let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+        s[rank.clamp(1, s.len()) - 1]
+    }
+
+    /// Median by nearest rank (p50) — the service-latency convention.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th-percentile sample.
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th-percentile sample.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
     /// Half-width of the 95% confidence interval on the mean
     /// (t·s/√n — the paper's error bars).
     pub fn ci95(&self) -> f64 {
@@ -167,6 +201,29 @@ mod tests {
     #[should_panic(expected = "not finite")]
     fn negative_infinity_rejected() {
         RunStats::new(vec![f64::NEG_INFINITY]);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s = RunStats::new((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p95(), 95.0);
+        assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let s = RunStats::new(vec![7.0]);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 100]")]
+    fn percentile_out_of_range_rejected() {
+        RunStats::new(vec![1.0]).percentile(101.0);
     }
 
     #[test]

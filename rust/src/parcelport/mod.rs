@@ -19,12 +19,14 @@
 pub mod cost;
 pub mod lci;
 pub mod mpi;
+pub mod scoped;
 pub mod stats;
 pub mod tcp;
 
 use crate::hpx::mailbox::Mailbox;
 use crate::hpx::parcel::{ActionId, LocalityId, Parcel, Payload, Tag};
 pub use cost::{CostModel, NetModel};
+pub use scoped::ScopedPort;
 pub use stats::{PortStats, PortStatsSnapshot};
 
 use std::str::FromStr;

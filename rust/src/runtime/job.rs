@@ -1,0 +1,342 @@
+//! Job-side types of the multi-tenant FFT service.
+//!
+//! A submitted transform becomes a *job node* that moves through an
+//! explicit lifecycle, mirroring the dataflow node model of
+//! HPX-style schedulers (SNIPPETS.md snippet 2): admission builds the
+//! node, the scheduler dispatches it onto a sub-communicator carved
+//! from the service fabric, per-rank threads run the transform, and
+//! the last rank to finish assembles the [`TransformReport`] and
+//! fulfils the caller's [`JobHandle`].
+//!
+//! Everything here is shape-agnostic: a [`JobPlan`] is either a 2-D
+//! slab ([`DistFftConfig`]) or a 3-D pencil ([`Pencil3Config`]) plan,
+//! and the scheduler treats both identically.
+
+use crate::dist_fft::driver::{DistFftConfig, RowFft, StepTimings};
+use crate::dist_fft::grid3::PencilDims;
+use crate::dist_fft::pencil::{Pencil3Config, PencilTimings};
+use crate::dist_fft::TransformReport;
+use crate::fft::complex::Complex32;
+use crate::parcelport::PortStatsSnapshot;
+use crate::task::TaskFuture;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Lifecycle state of a service job (the dataflow-node states every
+/// job traverses in order; `Failed` replaces `Completed` when any rank
+/// panics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted by admission control, waiting in the dispatch log.
+    Queued,
+    /// Claimed by the scheduler; the world split is under way.
+    Dispatched,
+    /// At least one rank thread is executing the transform.
+    Running,
+    /// All ranks finished and the report was assembled.
+    Completed,
+    /// At least one rank panicked; the handle resolves to a [`JobError`].
+    Failed,
+}
+
+impl JobState {
+    fn from_u8(v: u8) -> JobState {
+        match v {
+            0 => JobState::Queued,
+            1 => JobState::Dispatched,
+            2 => JobState::Running,
+            3 => JobState::Completed,
+            _ => JobState::Failed,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            JobState::Queued => 0,
+            JobState::Dispatched => 1,
+            JobState::Running => 2,
+            JobState::Completed => 3,
+            JobState::Failed => 4,
+        }
+    }
+}
+
+/// Why admission control rejected a submission (returned by
+/// `FftService::submit` — never a panic).
+#[derive(Debug)]
+pub enum AdmissionError {
+    /// The tenant already has `limit` jobs queued or running.
+    QueueFull {
+        /// The tenant whose queue is full.
+        tenant: String,
+        /// The per-tenant bound it hit (`ServiceConfig::queue_limit`).
+        limit: usize,
+    },
+    /// The transform wants more localities than the service fabric has.
+    TooLarge {
+        /// Localities the transform needs.
+        needed: usize,
+        /// Localities the service was built with.
+        available: usize,
+    },
+    /// The request failed validation (same errors
+    /// `TransformRequest::build` produces) or is incompatible with the
+    /// service fabric.
+    Invalid(anyhow::Error),
+    /// The service is draining; no new work is accepted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull { tenant, limit } => {
+                write!(f, "tenant {tenant:?} queue is full ({limit} jobs pending)")
+            }
+            AdmissionError::TooLarge { needed, available } => {
+                write!(
+                    f,
+                    "transform needs {needed} localities but the service fabric has {available}"
+                )
+            }
+            AdmissionError::Invalid(e) => write!(f, "invalid request: {e:#}"),
+            AdmissionError::ShuttingDown => f.write_str("service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// A job that finished without producing a report: some rank panicked
+/// (FFT-internal assertion, tag-space exhaustion, ...). The service
+/// survives; only this job fails.
+#[derive(Clone, Debug)]
+pub struct JobError {
+    /// The failed job's id.
+    pub job_id: u64,
+    /// The panic message(s), one per failed rank.
+    pub message: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job {} failed: {}", self.job_id, self.message)
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// A completed job's result.
+#[derive(Clone, Debug)]
+pub struct JobOutput {
+    /// The job's id (service-wide, monotonically increasing).
+    pub job_id: u64,
+    /// The unified transform report; `report.stats` holds the job's own
+    /// scoped wire counters, not fabric-global ones.
+    pub report: TransformReport,
+    /// Submit-to-completion latency in µs (queueing included).
+    pub latency_us: f64,
+}
+
+/// The caller's handle to a submitted job. Await it with
+/// [`wait`](Self::wait), or poll [`is_done`](Self::is_done).
+pub struct JobHandle {
+    pub(crate) id: u64,
+    pub(crate) tenant: String,
+    pub(crate) future: TaskFuture<Result<JobOutput, JobError>>,
+}
+
+impl JobHandle {
+    /// The job's service-wide id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The tenant the job was submitted under.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Whether the job has finished (completed or failed).
+    pub fn is_done(&self) -> bool {
+        self.future.is_ready()
+    }
+
+    /// Block until the job finishes and take its result.
+    pub fn wait(self) -> Result<JobOutput, JobError> {
+        self.future.get()
+    }
+}
+
+/// The validated execution plan of one job — either transform shape,
+/// plus everything pre-derived at admission so dispatch is infallible.
+#[derive(Clone, Debug)]
+pub(crate) enum JobPlan {
+    /// 2-D slab transform.
+    Plane(DistFftConfig),
+    /// 3-D pencil transform, with the input/output pencil extents
+    /// derived once at admission.
+    Pencil {
+        /// Validated pencil configuration.
+        config: Pencil3Config,
+        /// Input (x-pencil) extents per locality.
+        dims_in: PencilDims,
+        /// Output (z-pencil) extents per locality.
+        dims: PencilDims,
+    },
+}
+
+impl JobPlan {
+    /// Localities the job occupies (= its sub-communicator size).
+    pub(crate) fn localities(&self) -> usize {
+        match self {
+            JobPlan::Plane(c) => c.localities,
+            JobPlan::Pencil { config, .. } => config.proc.n(),
+        }
+    }
+
+    /// Chunk-send pool width the job's communicators will ask for.
+    pub(crate) fn pool_width(&self) -> usize {
+        match self {
+            JobPlan::Plane(c) => c.chunk.inflight.max(1),
+            JobPlan::Pencil { config, .. } => config.chunk.inflight.max(1),
+        }
+    }
+
+}
+
+/// Per-rank timing detail, shape-tagged (collected into
+/// [`crate::dist_fft::TransformTimings`] at assembly).
+#[derive(Clone, Debug)]
+pub(crate) enum RankTimings {
+    /// 2-D four-step timings.
+    Plane(StepTimings),
+    /// 3-D five-phase timings.
+    Pencil(PencilTimings),
+}
+
+/// What the per-rank threads deposit as they finish; the last one in
+/// assembles the report from it.
+pub(crate) struct JobGather {
+    /// Each rank's spectral piece (`None` until that rank finishes).
+    pub(crate) pieces: Vec<Option<Vec<Complex32>>>,
+    /// Each rank's timings.
+    pub(crate) timings: Vec<Option<RankTimings>>,
+    /// Each rank's scoped wire counters.
+    pub(crate) scopes: Vec<Option<PortStatsSnapshot>>,
+    /// Panic messages from failed ranks.
+    pub(crate) failures: Vec<String>,
+    /// Ranks finished so far (success or failure).
+    pub(crate) done: usize,
+}
+
+/// One node in the scheduler's dispatch log.
+pub(crate) struct JobEntry {
+    /// Service-wide job id.
+    pub(crate) id: u64,
+    /// Owning tenant.
+    pub(crate) tenant: String,
+    /// The validated plan.
+    pub(crate) plan: JobPlan,
+    /// Row-FFT engine, built once at admission and shared by all ranks.
+    pub(crate) engine: std::sync::Arc<dyn RowFft + Send>,
+    /// Whether the report should carry the raw per-rank outputs.
+    pub(crate) collect_outputs: bool,
+    /// Admission timestamp (latency accounting).
+    pub(crate) submitted: Instant,
+    /// Current lifecycle state (encoded [`JobState`]).
+    state: AtomicU8,
+    /// Dispatch gate: set by the first worker to claim the job, read by
+    /// the remaining workers so all ranks split the world for it.
+    pub(crate) dispatch_open: AtomicBool,
+    /// The rank rendezvous.
+    pub(crate) gather: Mutex<JobGather>,
+    /// The promise behind the caller's [`JobHandle`], taken exactly
+    /// once by the assembling rank.
+    pub(crate) promise: Mutex<Option<crate::task::Promise<Result<JobOutput, JobError>>>>,
+}
+
+impl JobEntry {
+    /// Build a fresh `Queued` entry for `plan`.
+    pub(crate) fn new(
+        id: u64,
+        tenant: String,
+        plan: JobPlan,
+        engine: std::sync::Arc<dyn RowFft + Send>,
+        collect_outputs: bool,
+        promise: crate::task::Promise<Result<JobOutput, JobError>>,
+    ) -> JobEntry {
+        let n = plan.localities();
+        JobEntry {
+            id,
+            tenant,
+            plan,
+            engine,
+            collect_outputs,
+            submitted: Instant::now(),
+            state: AtomicU8::new(JobState::Queued.as_u8()),
+            dispatch_open: AtomicBool::new(false),
+            gather: Mutex::new(JobGather {
+                pieces: vec![None; n],
+                timings: vec![None; n],
+                scopes: vec![None; n],
+                failures: Vec::new(),
+                done: 0,
+            }),
+            promise: Mutex::new(Some(promise)),
+        }
+    }
+
+    /// The job's current lifecycle state.
+    pub(crate) fn state(&self) -> JobState {
+        JobState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    /// Advance the lifecycle (monotonic: a later state never regresses
+    /// to an earlier one, so racing ranks may all call this).
+    pub(crate) fn advance_state(&self, to: JobState) {
+        self.state.fetch_max(to.as_u8(), Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_roundtrip_and_monotonic_advance() {
+        for s in [
+            JobState::Queued,
+            JobState::Dispatched,
+            JobState::Running,
+            JobState::Completed,
+            JobState::Failed,
+        ] {
+            assert_eq!(JobState::from_u8(s.as_u8()), s);
+        }
+        let (promise, _future) = crate::task::Promise::new();
+        let entry = JobEntry::new(
+            7,
+            "t".into(),
+            JobPlan::Plane(DistFftConfig::default()),
+            std::sync::Arc::new(crate::dist_fft::driver::NativeRowFft),
+            false,
+            promise,
+        );
+        assert_eq!(entry.state(), JobState::Queued);
+        entry.advance_state(JobState::Running);
+        entry.advance_state(JobState::Dispatched); // late riser must not regress
+        assert_eq!(entry.state(), JobState::Running);
+    }
+
+    #[test]
+    fn admission_error_messages_are_actionable() {
+        let e = AdmissionError::QueueFull { tenant: "acme".into(), limit: 8 };
+        assert!(e.to_string().contains("acme"));
+        assert!(e.to_string().contains('8'));
+        let e = AdmissionError::TooLarge { needed: 8, available: 4 };
+        assert!(e.to_string().contains("8 localities"));
+        assert!(AdmissionError::ShuttingDown.to_string().contains("shutting down"));
+    }
+}

@@ -1,8 +1,18 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Resident runtime services: the multi-tenant FFT scheduler and the
+//! PJRT compute backend.
 //!
-//! Python runs once at build time (`make artifacts`); this module makes
-//! the resulting HLO-text artifacts executable from the Rust request path
-//! with no Python anywhere near it:
+//! The scheduler half turns the one-shot figure-harness drivers into a
+//! resident service:
+//!
+//! - [`scheduler`] — [`FftService`], a multi-tenant job scheduler that
+//!   keeps one parcelport fabric alive and runs many concurrent
+//!   transform jobs over per-job sub-communicators,
+//! - [`job`] — the job-node lifecycle types behind it
+//!   ([`JobHandle`], [`AdmissionError`], ...).
+//!
+//! The PJRT half makes the AOT-compiled JAX/Pallas artifacts executable
+//! from the Rust request path with no Python anywhere near it (Python
+//! runs once at build time, `make artifacts`):
 //!
 //! - [`artifact`] — parses `artifacts/manifest.txt` and owns the naming
 //!   scheme,
@@ -13,6 +23,8 @@
 //!   FFTs through the artifact instead of the native kernel.
 
 pub mod artifact;
+pub mod job;
+pub mod scheduler;
 
 // The real compute service needs the `xla` crate (PJRT C bindings),
 // which the offline build image does not ship. The `pjrt` cargo feature
@@ -25,4 +37,6 @@ pub mod service;
 pub mod service;
 
 pub use artifact::{load_manifest, ArtifactKind, ManifestEntry};
+pub use job::{AdmissionError, JobError, JobHandle, JobOutput, JobState};
+pub use scheduler::{FftService, ServiceConfig, TenantMetrics};
 pub use service::{ComputeService, PjrtRowFft};

@@ -1,0 +1,787 @@
+//! `FftService` — a resident, multi-tenant distributed-FFT scheduler.
+//!
+//! The figure harnesses run one transform at a time on a throwaway
+//! cluster. This module keeps one fabric *resident* and schedules many
+//! concurrent transform jobs over it, the way an HPX application keeps
+//! its runtime alive across task graphs:
+//!
+//! - **One fabric, many jobs.** The service owns a parcelport fabric
+//!   and one long-lived *world* communicator per locality, driven by a
+//!   pinned worker thread. Every accepted job is dispatched by
+//!   splitting the world ([`Communicator::split_with_span`]) into a
+//!   per-job sub-communicator with a disjoint tag space, then wrapped
+//!   in a stats scope ([`Communicator::with_stats_scope`]) so its wire
+//!   bytes are attributed to the submitting tenant.
+//! - **Dataflow job nodes.** A submission becomes a
+//!   [`JobEntry`](super::job) that traverses `Queued → Dispatched →
+//!   Running → Completed/Failed`; the caller holds a [`JobHandle`]
+//!   future. Mixed shapes (2-D slab / 3-D pencil), domains
+//!   (complex/real), and execution modes (blocking/async) coexist on
+//!   the same fabric.
+//! - **Admission control.** Per-tenant queues are bounded
+//!   ([`ServiceConfig::queue_limit`]); overflow, oversized transforms,
+//!   invalid requests, and submissions during drain are rejected with
+//!   a typed [`AdmissionError`] instead of panicking. A rank panic
+//!   inside a job (tag-space exhaustion included) fails *that job's*
+//!   handle and leaves the service running.
+//! - **Shared infrastructure.** Row-FFT plan caches are process-global
+//!   already; chunk/shadow send pools are *leased* to a job's ranks for
+//!   the job's duration and returned for reuse, so worker threads
+//!   amortize across thousands of jobs. Pools are never shared by two
+//!   concurrent jobs: a pool runs offloaded blocking collectives, and
+//!   two jobs interleaving those on one pool can deadlock (job A's
+//!   collective queued behind job B's blocked one on one rank, the
+//!   reverse on another).
+//!
+//! Dispatch order is the admission order, identical on every worker:
+//! the split that carves a job's sub-communicator is a collective over
+//! the world, so all workers must reach it in lock-step. The first
+//! worker with a free inflight slot opens a job's dispatch gate; the
+//! remaining workers follow the gate unconditionally, which keeps the
+//! order deterministic without a central dispatcher thread.
+//!
+//! Tag budget: by default each job's split carves
+//! [`crate::collectives::tags::SPLIT_TAG_SPAN`] (2⁴⁸) tags from the
+//! world's 2⁶⁴ counter, so a service instance admits ~65 000 jobs over
+//! its lifetime — far beyond any benchmark run. Set
+//! [`ServiceConfig::job_tag_span`] to trade per-job headroom for job
+//! count (or, in tests, to provoke in-job exhaustion cheaply).
+
+use super::job::{
+    AdmissionError, JobEntry, JobError, JobHandle, JobOutput, JobPlan, JobState, RankTimings,
+};
+use crate::collectives::Communicator;
+use crate::dist_fft::driver::{self, RowFft, StepTimings};
+use crate::dist_fft::pencil::{self, PencilTimings};
+use crate::dist_fft::{TransformReport, TransformRequest, TransformTimings};
+use crate::fft::complex::Complex32;
+use crate::hpx::parcel::Tag;
+use crate::metrics::RunStats;
+use crate::parcelport::{self, NetModel, Parcelport, PortKind, PortStats, PortStatsSnapshot};
+use crate::task::{Promise, ThreadPool};
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Configuration of an [`FftService`] instance.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Localities the resident fabric spans (jobs may use fewer).
+    pub localities: usize,
+    /// Parcelport backend of the resident fabric.
+    pub port: PortKind,
+    /// Optional hybrid wire model applied to the fabric.
+    pub net: Option<NetModel>,
+    /// Per-tenant bound on queued-or-running jobs; submissions beyond
+    /// it are rejected with [`AdmissionError::QueueFull`].
+    pub queue_limit: usize,
+    /// Service-wide bound on concurrently executing jobs.
+    pub max_inflight: usize,
+    /// Tag-space grant per job (`None`: the default split span, 2⁴⁸).
+    pub job_tag_span: Option<Tag>,
+}
+
+impl Default for ServiceConfig {
+    /// 4 localities on the LCI port, 64-job tenant queues, 4 jobs in
+    /// flight — the load-generator defaults.
+    fn default() -> Self {
+        Self {
+            localities: 4,
+            port: PortKind::Lci,
+            net: None,
+            queue_limit: 64,
+            max_inflight: 4,
+            job_tag_span: None,
+        }
+    }
+}
+
+/// Per-tenant bookkeeping (guarded by the scheduler mutex).
+#[derive(Default)]
+struct TenantAccount {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    rejected: u64,
+    pending: usize,
+    wire_bytes: u64,
+    latencies_us: Vec<f64>,
+}
+
+/// One tenant's slice of [`FftService::metrics`].
+#[derive(Clone, Debug)]
+pub struct TenantMetrics {
+    /// Tenant name.
+    pub tenant: String,
+    /// Total `submit` calls (accepted + rejected).
+    pub submitted: u64,
+    /// Jobs completed successfully.
+    pub completed: u64,
+    /// Jobs that failed (a rank panicked).
+    pub failed: u64,
+    /// Submissions rejected by admission control.
+    pub rejected: u64,
+    /// Jobs currently queued or running.
+    pub pending: usize,
+    /// Scoped wire bytes over all finished jobs.
+    pub wire_bytes: u64,
+    /// Submit-to-completion latencies (µs) of finished jobs — p50/p95/
+    /// p99 via [`RunStats::percentile`]. `None` until a job finishes.
+    pub latency: Option<RunStats>,
+}
+
+/// Scheduler state (one mutex; the condvar signals every transition).
+struct SchedState {
+    /// Append-only dispatch log. Workers walk it by cursor, so every
+    /// rank splits the world for every job in the same order.
+    jobs: Vec<Arc<JobEntry>>,
+    next_id: u64,
+    draining: bool,
+    paused: bool,
+    inflight: usize,
+    finished: usize,
+    tenants: BTreeMap<String, TenantAccount>,
+}
+
+/// An idle chunk/shadow pool pair, keyed by worker width.
+struct PoolLease {
+    width: usize,
+    chunk: Arc<ThreadPool>,
+    shadow: Arc<ThreadPool>,
+}
+
+/// State shared between the service handle, its workers, and job rank
+/// threads.
+struct Shared {
+    config: ServiceConfig,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    pools: Mutex<Vec<PoolLease>>,
+}
+
+/// A validated submission, ready to enter the dispatch log.
+struct Prepared {
+    plan: JobPlan,
+    engine: Arc<dyn RowFft + Send>,
+    collect_outputs: bool,
+}
+
+/// The resident multi-tenant FFT scheduler (see the [module docs]).
+///
+/// Dropping the service drains it: accepted jobs run to completion
+/// first ([`shutdown`](Self::shutdown) does the same and returns the
+/// final per-tenant metrics).
+///
+/// [module docs]: self
+pub struct FftService {
+    shared: Arc<Shared>,
+    fabric: Arc<dyn Parcelport>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FftService {
+    /// Build the fabric and start one worker thread per locality.
+    pub fn new(config: ServiceConfig) -> anyhow::Result<FftService> {
+        anyhow::ensure!(config.localities >= 1, "service needs at least one locality");
+        anyhow::ensure!(config.queue_limit >= 1, "queue_limit must be at least 1");
+        anyhow::ensure!(config.max_inflight >= 1, "max_inflight must be at least 1");
+        if let Some(span) = config.job_tag_span {
+            anyhow::ensure!(span > 0, "job_tag_span must be positive");
+        }
+        let fabric = parcelport::build(config.port, config.localities, config.net)?;
+        let n = config.localities;
+        let shared = Arc::new(Shared {
+            config,
+            state: Mutex::new(SchedState {
+                jobs: Vec::new(),
+                next_id: 0,
+                draining: false,
+                paused: false,
+                inflight: 0,
+                finished: 0,
+                tenants: BTreeMap::new(),
+            }),
+            cv: Condvar::new(),
+            pools: Mutex::new(Vec::new()),
+        });
+        let workers = (0..n)
+            .map(|rank| {
+                let shared = Arc::clone(&shared);
+                let fabric = Arc::clone(&fabric);
+                std::thread::Builder::new()
+                    .name(format!("fft-svc-{rank}"))
+                    .spawn(move || worker_loop(rank, n, fabric, shared))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        Ok(FftService { shared, fabric, workers })
+    }
+
+    /// Localities the resident fabric spans.
+    pub fn localities(&self) -> usize {
+        self.shared.config.localities
+    }
+
+    /// Parcelport backend of the resident fabric.
+    pub fn port(&self) -> PortKind {
+        self.shared.config.port
+    }
+
+    /// Fabric-global traffic counters (all tenants; protocol overheads
+    /// included). Per-job counters live in each job's report.
+    pub fn fabric_stats(&self) -> PortStatsSnapshot {
+        self.fabric.stats()
+    }
+
+    /// Submit a transform under `tenant`. Returns the job's handle, or
+    /// a typed rejection — never panics, never blocks on FFT work.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        request: TransformRequest,
+    ) -> Result<JobHandle, AdmissionError> {
+        // Validate / build engines outside the scheduler lock.
+        let prepared = self.prepare(request);
+        let limit = self.shared.config.queue_limit;
+        let mut st = self.shared.state.lock().unwrap();
+        let draining = st.draining;
+        let acct = st.tenants.entry(tenant.to_string()).or_default();
+        acct.submitted += 1;
+        if draining {
+            acct.rejected += 1;
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let prepared = match prepared {
+            Ok(p) => p,
+            Err(e) => {
+                acct.rejected += 1;
+                return Err(e);
+            }
+        };
+        if acct.pending >= limit {
+            acct.rejected += 1;
+            return Err(AdmissionError::QueueFull { tenant: tenant.to_string(), limit });
+        }
+        acct.pending += 1;
+        let id = st.next_id;
+        st.next_id += 1;
+        let (promise, future) = Promise::new();
+        st.jobs.push(Arc::new(JobEntry::new(
+            id,
+            tenant.to_string(),
+            prepared.plan,
+            prepared.engine,
+            prepared.collect_outputs,
+            promise,
+        )));
+        drop(st);
+        self.shared.cv.notify_all();
+        Ok(JobHandle { id, tenant: tenant.to_string(), future })
+    }
+
+    /// Stop opening new dispatch gates (running jobs continue). Makes
+    /// queue-level admission behavior deterministic in tests.
+    pub fn pause(&self) {
+        self.shared.state.lock().unwrap().paused = true;
+    }
+
+    /// Resume dispatching after [`pause`](Self::pause).
+    pub fn resume(&self) {
+        self.shared.state.lock().unwrap().paused = false;
+        self.shared.cv.notify_all();
+    }
+
+    /// Per-tenant metrics snapshot, tenant-name order.
+    pub fn metrics(&self) -> Vec<TenantMetrics> {
+        let st = self.shared.state.lock().unwrap();
+        st.tenants
+            .iter()
+            .map(|(name, a)| TenantMetrics {
+                tenant: name.clone(),
+                submitted: a.submitted,
+                completed: a.completed,
+                failed: a.failed,
+                rejected: a.rejected,
+                pending: a.pending,
+                wire_bytes: a.wire_bytes,
+                latency: (!a.latencies_us.is_empty())
+                    .then(|| RunStats::new(a.latencies_us.clone())),
+            })
+            .collect()
+    }
+
+    /// Graceful drain: reject new submissions, run every accepted job
+    /// to completion, stop the workers, and return the final metrics.
+    pub fn shutdown(mut self) -> Vec<TenantMetrics> {
+        self.drain();
+        self.metrics()
+    }
+
+    /// Validate a request against the service fabric and freeze it into
+    /// a dispatchable plan.
+    fn prepare(&self, request: TransformRequest) -> Result<Prepared, AdmissionError> {
+        let transform = request.build().map_err(AdmissionError::Invalid)?;
+        let needed = transform.localities();
+        let available = self.shared.config.localities;
+        if needed > available {
+            return Err(AdmissionError::TooLarge { needed, available });
+        }
+        if transform.port() != self.shared.config.port {
+            return Err(AdmissionError::Invalid(anyhow::anyhow!(
+                "request targets the {} port but the service fabric is {}; submit a matching \
+                 request or start the service on that port",
+                transform.port(),
+                self.shared.config.port
+            )));
+        }
+        let (plan, engine) = if let Some(config) = transform.plane_config() {
+            let engine = config.engine.build().map_err(AdmissionError::Invalid)?;
+            (JobPlan::Plane(config.clone()), engine)
+        } else {
+            let config = transform.pencil_config().expect("transform is plane or pencil").clone();
+            let (dims_in, dims) =
+                pencil::validate_config(&config).map_err(AdmissionError::Invalid)?;
+            let engine = config.engine.build().map_err(AdmissionError::Invalid)?;
+            (JobPlan::Pencil { config, dims_in, dims }, engine)
+        };
+        Ok(Prepared { plan, engine, collect_outputs: transform.collects_outputs() })
+    }
+
+    /// Drain and join the workers (idempotent; called by `shutdown` and
+    /// `Drop`).
+    fn drain(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.draining = true;
+            // A paused service must still drain.
+            st.paused = false;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Workers exit only after dispatching every logged job; now wait
+        // for the in-flight rank threads to deliver their reports.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.finished < st.jobs.len() {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for FftService {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() {
+            self.drain();
+        }
+    }
+}
+
+/// One pinned worker per locality: walk the dispatch log in admission
+/// order, split the world for every job (collective — all workers must
+/// do this in lock-step), and hand participating ranks to job threads.
+fn worker_loop(rank: usize, n: usize, fabric: Arc<dyn Parcelport>, shared: Arc<Shared>) {
+    let world = Communicator::new(fabric, rank, n);
+    let mut cursor = 0usize;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if cursor < st.jobs.len() {
+                    // Another worker already opened this job's gate —
+                    // follow it unconditionally to keep dispatch order
+                    // identical on every rank.
+                    if st.jobs[cursor].dispatch_open.load(Ordering::Acquire) {
+                        break Arc::clone(&st.jobs[cursor]);
+                    }
+                    if !st.paused && st.inflight < shared.config.max_inflight {
+                        st.inflight += 1;
+                        let entry = Arc::clone(&st.jobs[cursor]);
+                        entry.advance_state(JobState::Dispatched);
+                        entry.dispatch_open.store(true, Ordering::Release);
+                        shared.cv.notify_all();
+                        break entry;
+                    }
+                } else if st.draining {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        cursor += 1;
+        dispatch_job(&world, rank, &job, &shared);
+    }
+}
+
+/// Carve the job's sub-communicator out of the world (collective over
+/// *all* workers — non-participating ranks split into a parked color
+/// and return) and launch the participating rank's job thread.
+fn dispatch_job(world: &Communicator, rank: usize, job: &Arc<JobEntry>, shared: &Arc<Shared>) {
+    let n_job = job.plan.localities();
+    let participating = rank < n_job;
+    let color = u64::from(!participating);
+    let sub = match shared.config.job_tag_span {
+        Some(span) => world.split_with_span(color, rank as u64, span),
+        None => world.split(color, rank as u64),
+    };
+    if !participating {
+        return;
+    }
+    let (comm, scope) = sub.with_stats_scope();
+    let width = job.plan.pool_width();
+    let (chunk, shadow) = lease_pools(shared, width);
+    comm.install_pools(Arc::clone(&chunk), Arc::clone(&shadow));
+    let job = Arc::clone(job);
+    let shared = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("fft-job{}-r{rank}", job.id))
+        .spawn(move || {
+            run_job_rank(comm, &scope, &job, &shared);
+            return_pools(&shared, width, chunk, shadow);
+        })
+        .expect("spawn job rank thread");
+}
+
+/// Take an idle pool pair of the right width off the registry, or spin
+/// up a fresh pair. Exclusive while leased — see the module docs for
+/// why concurrent jobs must not share one.
+fn lease_pools(shared: &Shared, width: usize) -> (Arc<ThreadPool>, Arc<ThreadPool>) {
+    let mut pools = shared.pools.lock().unwrap();
+    if let Some(i) = pools.iter().position(|l| l.width == width) {
+        let lease = pools.swap_remove(i);
+        return (lease.chunk, lease.shadow);
+    }
+    drop(pools);
+    (Arc::new(ThreadPool::new(width)), Arc::new(ThreadPool::new(width)))
+}
+
+/// Return a leased pool pair for the next job of the same width.
+fn return_pools(shared: &Shared, width: usize, chunk: Arc<ThreadPool>, shadow: Arc<ThreadPool>) {
+    shared.pools.lock().unwrap().push(PoolLease { width, chunk, shadow });
+}
+
+/// One rank's share of one job: run the transform, deposit the piece
+/// into the job's rendezvous, and — on the last rank in — assemble the
+/// report and fulfil the handle. Panics (FFT asserts, tag exhaustion)
+/// are caught and fail the job, not the service; the SPMD lock-step
+/// discipline makes every rank of the job panic at the same allocation
+/// point, so no peer is left blocked on a vanished sender.
+fn run_job_rank(comm: Communicator, scope: &PortStats, job: &Arc<JobEntry>, shared: &Arc<Shared>) {
+    job.advance_state(JobState::Running);
+    let rank = comm.rank();
+    let engine = Arc::clone(&job.engine);
+    let outcome = catch_unwind(AssertUnwindSafe(|| match &job.plan {
+        JobPlan::Plane(config) => {
+            let (piece, t) = driver::run_rank(&comm, config, engine.as_ref());
+            (piece, RankTimings::Plane(t))
+        }
+        JobPlan::Pencil { config, dims_in, dims } => {
+            let (piece, t) = pencil::run_rank(&comm, dims_in, dims, config, engine.as_ref());
+            (piece, RankTimings::Pencil(t))
+        }
+    }));
+    let snapshot = scope.snapshot();
+    let n_job = job.plan.localities();
+    let last_in = {
+        let mut g = job.gather.lock().unwrap();
+        match outcome {
+            Ok((piece, t)) => {
+                g.pieces[rank] = Some(piece);
+                g.timings[rank] = Some(t);
+            }
+            Err(payload) => g.failures.push(format!("rank {rank}: {}", panic_text(&*payload))),
+        }
+        g.scopes[rank] = Some(snapshot);
+        g.done += 1;
+        g.done == n_job
+    };
+    if last_in {
+        finish_job(job, shared);
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Last rank in: drain the rendezvous, assemble the report (or the
+/// failure), settle the tenant's account, and fulfil the handle.
+fn finish_job(job: &Arc<JobEntry>, shared: &Arc<Shared>) {
+    // Pull everything out of the rendezvous, then assemble without any
+    // lock held (verification reruns a serial reference transform).
+    let (pieces, timings, stats, failures) = {
+        let mut g = job.gather.lock().unwrap();
+        let stats = sum_scopes(g.scopes.iter().flatten());
+        let pieces: Vec<_> = g.pieces.iter_mut().map(Option::take).collect();
+        let timings: Vec<_> = g.timings.iter_mut().map(Option::take).collect();
+        (pieces, timings, stats, std::mem::take(&mut g.failures))
+    };
+    let result = if failures.is_empty() {
+        job.advance_state(JobState::Completed);
+        Ok(assemble_report(job, pieces, timings, stats))
+    } else {
+        job.advance_state(JobState::Failed);
+        Err(JobError { job_id: job.id, message: failures.join("; ") })
+    };
+    let ok = result.is_ok();
+    let latency_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+    {
+        let mut st = shared.state.lock().unwrap();
+        st.inflight -= 1;
+        st.finished += 1;
+        let acct = st.tenants.get_mut(&job.tenant).expect("tenant account outlives its jobs");
+        acct.pending -= 1;
+        if ok {
+            acct.completed += 1;
+        } else {
+            acct.failed += 1;
+        }
+        acct.wire_bytes += stats.bytes_sent;
+        acct.latencies_us.push(latency_us);
+    }
+    shared.cv.notify_all();
+    let promise = job.promise.lock().unwrap().take().expect("a job finishes exactly once");
+    promise.set(result.map(|report| JobOutput { job_id: job.id, report, latency_us }));
+}
+
+/// Field-wise sum of per-rank scoped counters (only the send-side
+/// fields are populated by a scope — see `parcelport::scoped`).
+fn sum_scopes<'a>(parts: impl Iterator<Item = &'a PortStatsSnapshot>) -> PortStatsSnapshot {
+    let mut out = PortStatsSnapshot::default();
+    for s in parts {
+        out.msgs_sent += s.msgs_sent;
+        out.bytes_sent += s.bytes_sent;
+        out.payload_copies += s.payload_copies;
+        out.bytes_copied += s.bytes_copied;
+        out.rendezvous_handshakes += s.rendezvous_handshakes;
+        out.eager_sends += s.eager_sends;
+        out.modeled_wire_us += s.modeled_wire_us;
+    }
+    out
+}
+
+/// Build the unified [`TransformReport`] from the ranks' deposits —
+/// the same shape `Transform::run` returns, so service and single-shot
+/// results are interchangeable.
+fn assemble_report(
+    job: &JobEntry,
+    pieces: Vec<Option<Vec<Complex32>>>,
+    timings: Vec<Option<RankTimings>>,
+    stats: PortStatsSnapshot,
+) -> TransformReport {
+    let pieces: Vec<Vec<Complex32>> =
+        pieces.into_iter().map(|p| p.expect("every rank deposited its piece")).collect();
+    let engine = job.engine.name();
+    match &job.plan {
+        JobPlan::Plane(config) => {
+            let per_rank: Vec<StepTimings> = timings
+                .into_iter()
+                .map(|t| match t.expect("every rank deposited timings") {
+                    RankTimings::Plane(t) => t,
+                    RankTimings::Pencil(_) => unreachable!("plane job with pencil timings"),
+                })
+                .collect();
+            let critical_path = StepTimings::max(&per_rank);
+            let rel_error = config.verify.then(|| driver::verify_pieces(config, &pieces));
+            TransformReport {
+                summary: driver::summary_line(config, engine),
+                timings: TransformTimings::Plane { per_rank, critical_path },
+                rel_error,
+                stats,
+                outputs: job.collect_outputs.then_some(pieces),
+            }
+        }
+        JobPlan::Pencil { config, dims, .. } => {
+            let per_rank: Vec<PencilTimings> = timings
+                .into_iter()
+                .map(|t| match t.expect("every rank deposited timings") {
+                    RankTimings::Pencil(t) => t,
+                    RankTimings::Plane(_) => unreachable!("pencil job with plane timings"),
+                })
+                .collect();
+            let critical_path = PencilTimings::max(&per_rank);
+            let rel_error = config.verify.then(|| pencil::verify_pieces(config, dims, &pieces));
+            TransformReport {
+                summary: pencil::summary_line(config, engine),
+                timings: TransformTimings::Pencil { per_rank, critical_path },
+                rel_error,
+                stats,
+                outputs: job.collect_outputs.then_some(pieces),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist_fft::driver::Domain;
+    use crate::dist_fft::{Grid3, ProcGrid};
+
+    fn small_service(localities: usize) -> FftService {
+        FftService::new(ServiceConfig { localities, ..ServiceConfig::default() }).unwrap()
+    }
+
+    fn small_plane(localities: usize) -> TransformRequest {
+        TransformRequest::grid(16, 16).localities(localities).threads(1)
+    }
+
+    #[test]
+    fn runs_one_job_end_to_end() {
+        let svc = small_service(2);
+        let handle = svc.submit("acme", small_plane(2)).unwrap();
+        assert_eq!(handle.tenant(), "acme");
+        let out = handle.wait().unwrap();
+        assert!(out.report.rel_error.unwrap() < 1e-4);
+        assert!(out.report.stats.bytes_sent > 0, "scoped stats must see the job's wire bytes");
+        assert!(out.latency_us > 0.0);
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.len(), 1);
+        assert_eq!(metrics[0].completed, 1);
+        assert_eq!(metrics[0].pending, 0);
+        assert!(metrics[0].latency.as_ref().unwrap().p50() > 0.0);
+    }
+
+    #[test]
+    fn mixed_shapes_and_domains_share_the_fabric() {
+        let svc = small_service(4);
+        let handles = vec![
+            svc.submit("a", small_plane(2)).unwrap(),
+            svc.submit("b", small_plane(4).domain(Domain::Real)).unwrap(),
+            svc.submit(
+                "c",
+                TransformRequest::grid3(Grid3::new(8, 8, 8))
+                    .proc_grid(ProcGrid::new(2, 2))
+                    .threads(1),
+            )
+            .unwrap(),
+        ];
+        for h in handles {
+            let out = h.wait().unwrap();
+            assert!(out.report.rel_error.unwrap() < 1e-4, "{}", out.report.summary);
+        }
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.iter().map(|m| m.completed).sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn service_output_is_bitwise_identical_to_single_shot() {
+        let request = || small_plane(2).collect_outputs(true);
+        let single = request().build().unwrap().run().unwrap().outputs.unwrap();
+        let svc = small_service(2);
+        let out = svc.submit("t", request()).unwrap().wait().unwrap();
+        assert_eq!(out.report.outputs.unwrap(), single, "service must not perturb the math");
+    }
+
+    #[test]
+    fn admission_rejects_oversized_invalid_and_wrong_port() {
+        let svc = small_service(2);
+        match svc.submit("t", small_plane(4)) {
+            Err(AdmissionError::TooLarge { needed: 4, available: 2 }) => {}
+            other => panic!("expected TooLarge, got {other:?}", other = other.map(|h| h.id())),
+        }
+        match svc.submit("t", TransformRequest::grid(30, 32)) {
+            Err(AdmissionError::Invalid(_)) => {}
+            other => panic!("expected Invalid, got {other:?}", other = other.map(|h| h.id())),
+        }
+        match svc.submit("t", small_plane(2).port(PortKind::Tcp)) {
+            Err(AdmissionError::Invalid(e)) => {
+                assert!(e.to_string().contains("service fabric"), "{e:#}");
+            }
+            other => panic!("expected Invalid, got {other:?}", other = other.map(|h| h.id())),
+        }
+        let m = svc.shutdown();
+        assert_eq!(m[0].rejected, 3);
+        assert_eq!(m[0].submitted, 3);
+    }
+
+    #[test]
+    fn queue_limit_rejects_then_resume_drains() {
+        let svc = FftService::new(ServiceConfig {
+            localities: 2,
+            queue_limit: 2,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        svc.pause();
+        let h1 = svc.submit("t", small_plane(2)).unwrap();
+        let h2 = svc.submit("t", small_plane(2)).unwrap();
+        match svc.submit("t", small_plane(2)) {
+            Err(AdmissionError::QueueFull { limit: 2, .. }) => {}
+            other => panic!("expected QueueFull, got {other:?}", other = other.map(|h| h.id())),
+        }
+        // While paused, nothing dispatches.
+        assert!(!h1.is_done());
+        {
+            let st = svc.shared.state.lock().unwrap();
+            assert_eq!(st.jobs[0].state(), JobState::Queued);
+        }
+        svc.resume();
+        h1.wait().unwrap();
+        h2.wait().unwrap();
+        let m = svc.shutdown();
+        assert_eq!((m[0].completed, m[0].rejected), (2, 1));
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_but_finishes_accepted() {
+        let svc = small_service(2);
+        let handles: Vec<_> =
+            (0..3).map(|_| svc.submit("t", small_plane(2)).unwrap()).collect();
+        let metrics = svc.shutdown();
+        assert_eq!(metrics[0].completed, 3);
+        for h in handles {
+            assert!(h.is_done());
+            h.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn tag_exhaustion_fails_the_job_not_the_service() {
+        use crate::collectives::tags::CHUNK_TAG_SPAN;
+        // One chunk-tag block is far too small for a whole transform:
+        // the job's ranks all trip the lock-step tag-space assertion at
+        // the same allocation point, the panic is caught, and the job
+        // fails cleanly.
+        let svc = FftService::new(ServiceConfig {
+            localities: 2,
+            job_tag_span: Some(CHUNK_TAG_SPAN),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let err = svc.submit("t", small_plane(2)).unwrap().wait().unwrap_err();
+        assert!(err.message.contains("tag space exhausted"), "{err}");
+        // The service survives and the next job fails the same way
+        // (the world communicator's tag space is still healthy).
+        let err = svc.submit("t", small_plane(2)).unwrap().wait().unwrap_err();
+        assert!(err.message.contains("tag space exhausted"), "{err}");
+        let m = svc.shutdown();
+        assert_eq!(m[0].failed, 2);
+    }
+
+    #[test]
+    fn per_tenant_metrics_separate_and_pools_are_reused() {
+        let svc = small_service(2);
+        let ha = svc.submit("alpha", small_plane(2)).unwrap();
+        let hb = svc.submit("beta", small_plane(2)).unwrap();
+        ha.wait().unwrap();
+        hb.wait().unwrap();
+        {
+            let pools = svc.shared.pools.lock().unwrap();
+            assert!(!pools.is_empty(), "finished jobs return their pool leases");
+        }
+        let m = svc.shutdown();
+        let names: Vec<_> = m.iter().map(|t| t.tenant.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta"], "metrics are tenant-name ordered");
+        assert!(m.iter().all(|t| t.completed == 1 && t.wire_bytes > 0));
+    }
+}
