@@ -146,6 +146,7 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<Vec<TenantLoadReport>> {
         queue_limit: cfg.queue_limit,
         max_inflight: cfg.max_inflight,
         job_tag_span: None,
+        fault: None,
     })?;
 
     let started = Instant::now();

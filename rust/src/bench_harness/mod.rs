@@ -20,6 +20,10 @@
 //!   thousands of mixed-shape jobs through one resident
 //!   [`crate::runtime::FftService`], audited bitwise against
 //!   single-shot references, with per-tenant latency percentiles.
+//! - [`sim_scaling`] — the event-engine cluster sweep
+//!   (`repro simulate --engine event`): fig4/5/6 communication patterns
+//!   at 512–4096 simulated localities, slope-validated against the
+//!   closed-form comm-only model and written to `sim_scaling.csv`.
 //!
 //! Every driver reports paper-style rows (mean ± 95% CI over N reps),
 //! writes CSV series, and renders an ASCII log plot so the figure shape
@@ -32,5 +36,6 @@ pub mod fig7;
 pub mod load;
 pub mod plot;
 pub mod runner;
+pub mod sim_scaling;
 
 pub use runner::measure;

@@ -1,0 +1,416 @@
+//! Cluster-scale slope validation of the event-engine simulator.
+//!
+//! Runs the real protocol machines (via
+//! [`crate::simnet::collective_sim`]) at 512–4096 simulated localities
+//! on the paper's strong-scaling problems and compares the scaling
+//! *slope* against the closed-form [`crate::simnet::sim`] engine on the
+//! same communication pattern:
+//!
+//! - `fig4` — the HPX root-funneled all-to-all (incast-bound) on the
+//!   2^14 × 2^14 transpose,
+//! - `fig5` — the paper's N-scatter (per-rank pipelined fan-out),
+//! - `fig6` — the 3-D pencil transposes: two pairwise rounds within
+//!   row/column sub-communicator groups on a near-square process grid
+//!   over the 2^9³ grid.
+//!
+//! The closed-form reference is run with a zeroed [`ComputeModel`]
+//! ([`comm_only`]) so both engines predict pure communication over the
+//! identical [`crate::parcelport::cost`] model; what must then agree is
+//! the log₂-log₂ slope between consecutive locality counts
+//! ([`validate_slopes`]). Absolute times still differ slightly (the
+//! event engine charges the machines' actual message schedules and
+//! framing headers), which is why the check is on slopes, not values.
+//!
+//! Results land in `sim_scaling.csv` with one row per (figure,
+//! locality-count) point; columns are documented on
+//! [`SimScalingRow::COLUMNS`] and in the README.
+
+use anyhow::{ensure, Context};
+
+use super::plot::{log_log_plot, Series};
+use crate::collectives::{AllToAllAlgo, ChunkPolicy};
+use crate::dist_fft::grid3::{Grid3, PencilDims, ProcGrid};
+use crate::metrics::csv::write_csv;
+use crate::metrics::table::Table;
+use crate::parcelport::{NetModel, PortKind};
+use crate::simnet::adversary::AdversaryConfig;
+use crate::simnet::collective_sim::{run_sim, SimCollective, SimConfig, SimData};
+use crate::simnet::compute::ComputeModel;
+use crate::simnet::engine::EngineStats;
+use crate::simnet::fft_model::{
+    predict_fft, predict_pencil3, FftModelParams, ModelVariant, Pencil3ModelParams,
+};
+
+/// Which figure's communication pattern a point simulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimFig {
+    /// Root-funneled all-to-all (paper Fig. 4).
+    Fig4,
+    /// N-scatter (paper Fig. 5).
+    Fig5,
+    /// Pencil transpose rounds (paper Fig. 6).
+    Fig6,
+}
+
+impl SimFig {
+    /// All figures, in presentation order.
+    pub const ALL: [SimFig; 3] = [SimFig::Fig4, SimFig::Fig5, SimFig::Fig6];
+
+    /// CSV/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimFig::Fig4 => "fig4",
+            SimFig::Fig5 => "fig5",
+            SimFig::Fig6 => "fig6",
+        }
+    }
+}
+
+impl std::str::FromStr for SimFig {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fig4" | "all-to-all" => Ok(SimFig::Fig4),
+            "fig5" | "scatter" => Ok(SimFig::Fig5),
+            "fig6" | "pencil" => Ok(SimFig::Fig6),
+            other => Err(format!("unknown sim figure '{other}' (fig4|fig5|fig6)")),
+        }
+    }
+}
+
+/// One harness invocation.
+#[derive(Clone, Debug)]
+pub struct SimScalingOpts {
+    /// Figures to sweep.
+    pub figs: Vec<SimFig>,
+    /// Simulated locality counts (powers of two dividing 2^14).
+    pub localities: Vec<usize>,
+    /// Port cost model to charge.
+    pub port: PortKind,
+    /// Adversary applied to every point (its seed is the run seed).
+    pub adversary: AdversaryConfig,
+    /// Directory for `sim_scaling.csv` (skipped when `None`).
+    pub out_dir: Option<String>,
+}
+
+impl Default for SimScalingOpts {
+    fn default() -> Self {
+        Self {
+            figs: SimFig::ALL.to_vec(),
+            localities: vec![512, 1024, 2048],
+            port: PortKind::Lci,
+            adversary: AdversaryConfig::none(42),
+            out_dir: None,
+        }
+    }
+}
+
+/// One (figure, locality-count) point.
+#[derive(Clone, Debug)]
+pub struct SimScalingRow {
+    /// Figure pattern simulated.
+    pub fig: SimFig,
+    /// Simulated locality count.
+    pub localities: usize,
+    /// Bytes each pair exchanges in the simulated collective.
+    pub per_pair_bytes: u64,
+    /// Event-engine makespan and counters.
+    pub stats: EngineStats,
+    /// Closed-form comm-only prediction for the same pattern, µs.
+    pub model_us: f64,
+}
+
+impl SimScalingRow {
+    /// `sim_scaling.csv` column order: figure name, port, locality
+    /// count, adversary seed, adversary summary
+    /// (`delay/dup/drop/slow` percentages), per-pair payload bytes,
+    /// event-engine makespan (µs), closed-form comm-only makespan (µs),
+    /// wire bytes, retransmitted bytes, duplicates dropped, drops
+    /// injected, heap events processed, and the run's trace hash (hex).
+    pub const COLUMNS: [&'static str; 14] = [
+        "fig",
+        "port",
+        "localities",
+        "seed",
+        "adversary",
+        "per_pair_bytes",
+        "makespan_us",
+        "model_us",
+        "wire_bytes",
+        "retransmitted_bytes",
+        "duplicates_dropped",
+        "drops_injected",
+        "events",
+        "trace_hash",
+    ];
+
+    /// Render this row for `sim_scaling.csv`, in [`Self::COLUMNS`]
+    /// order.
+    pub fn csv_cells(&self, opts: &SimScalingOpts) -> Vec<String> {
+        let a = &opts.adversary;
+        vec![
+            self.fig.name().to_string(),
+            opts.port.to_string(),
+            self.localities.to_string(),
+            a.seed.to_string(),
+            format!(
+                "delay{}/dup{}/drop{}/slow{}",
+                a.delay_prob_pct, a.dup_prob_pct, a.drop_prob_pct, a.slow_rank_pct
+            ),
+            self.per_pair_bytes.to_string(),
+            self.stats.makespan_us.to_string(),
+            self.model_us.to_string(),
+            self.stats.wire_bytes.to_string(),
+            self.stats.retransmitted_bytes.to_string(),
+            self.stats.duplicates_dropped.to_string(),
+            self.stats.drops_injected.to_string(),
+            self.stats.events.to_string(),
+            format!("{:016x}", self.stats.trace_hash),
+        ]
+    }
+}
+
+/// A compute model that charges (effectively) nothing, turning the
+/// closed-form predictions into pure-communication references the
+/// comm-only event engine can be slope-compared against.
+fn comm_only() -> ComputeModel {
+    ComputeModel { flops_per_core: 1e30, cores: 1, parallel_efficiency: 1.0, copy_gbps: 1e30 }
+}
+
+/// Largest power-of-two `pr ≤ √n` dividing `n` — the near-square
+/// process grid the pencil sweep uses.
+fn near_square(n: usize) -> ProcGrid {
+    let mut pr = 1usize;
+    let mut best = 1usize;
+    while pr <= n {
+        if n % pr == 0 && pr * pr <= n {
+            best = pr;
+        }
+        pr *= 2;
+    }
+    ProcGrid::new(best, n / best)
+}
+
+fn sim_one(coll: SimCollective, n: usize, per_pair: u64, opts: &SimScalingOpts) -> EngineStats {
+    let cfg = SimConfig {
+        localities: n,
+        port: opts.port,
+        net: NetModel::infiniband_hdr(),
+        // One wire chunk per transfer at cluster scale: event counts
+        // stay linear in the message count, sizes stay exact.
+        policy: ChunkPolicy::new(per_pair.max(1) as usize, 4),
+        adversary: opts.adversary,
+        collective: coll,
+        data: SimData::Uniform(per_pair),
+    };
+    run_sim(&cfg).stats
+}
+
+fn point(fig: SimFig, n: usize, opts: &SimScalingOpts) -> SimScalingRow {
+    match fig {
+        SimFig::Fig4 => {
+            let mut params = FftModelParams::paper(n);
+            params.compute = comm_only();
+            let per_pair = params.chunk_bytes();
+            let coll = SimCollective::AllToAll(AllToAllAlgo::HpxRoot);
+            let stats = sim_one(coll, n, per_pair, opts);
+            let variant = ModelVariant::AllToAll(AllToAllAlgo::HpxRoot);
+            let model_us = predict_fft(&params, opts.port, variant).makespan_us;
+            SimScalingRow { fig, localities: n, per_pair_bytes: per_pair, stats, model_us }
+        }
+        SimFig::Fig5 => {
+            let mut params = FftModelParams::paper(n);
+            params.compute = comm_only();
+            let per_pair = params.chunk_bytes();
+            let stats = sim_one(SimCollective::NScatter, n, per_pair, opts);
+            let model_us = predict_fft(&params, opts.port, ModelVariant::Scatter).makespan_us;
+            SimScalingRow { fig, localities: n, per_pair_bytes: per_pair, stats, model_us }
+        }
+        SimFig::Fig6 => {
+            // Two transpose rounds, each a pairwise exchange within its
+            // sub-communicator group; disjoint groups run in parallel,
+            // so simulating one group per round is exact. Chunk sizes
+            // come straight from the pencil decomposition.
+            let proc = near_square(n);
+            let dims = PencilDims::new(Grid3::new(1 << 9, 1 << 9, 1 << 9), proc)
+                .expect("near-square power-of-two grids divide 2^9");
+            let t1 = (dims.t1_chunk_elems() * 8) as u64;
+            let t2 = (dims.t2_chunk_elems() * 8) as u64;
+            let coll = SimCollective::AllToAll(AllToAllAlgo::Pairwise);
+            let row_round = sim_one(coll, proc.pc, t1, opts);
+            let col_round = sim_one(coll, proc.pr, t2, opts);
+            let mut stats = row_round;
+            stats.makespan_us += col_round.makespan_us;
+            stats.max_blocked_us += col_round.max_blocked_us;
+            stats.wire_bytes += col_round.wire_bytes;
+            stats.retransmitted_bytes += col_round.retransmitted_bytes;
+            stats.duplicates_dropped += col_round.duplicates_dropped;
+            stats.drops_injected += col_round.drops_injected;
+            stats.events += col_round.events;
+            stats.trace_hash ^= col_round.trace_hash.rotate_left(1);
+            let params =
+                Pencil3ModelParams { compute: comm_only(), ..Pencil3ModelParams::paper(proc) };
+            let model_us = predict_pencil3(&params, opts.port).makespan_us;
+            SimScalingRow { fig, localities: n, per_pair_bytes: t1, stats, model_us }
+        }
+    }
+}
+
+/// log₂-log₂ slope between two `(n, t)` points.
+fn slope(a: (usize, f64), b: (usize, f64)) -> f64 {
+    (b.1 / a.1).log2() / (b.0 as f64 / a.0 as f64).log2()
+}
+
+/// Check that each figure's simulated scaling slope tracks the
+/// closed-form comm-only model's slope within `tol` (log₂ units)
+/// between every consecutive pair of locality counts.
+pub fn validate_slopes(rows: &[SimScalingRow], tol: f64) -> anyhow::Result<()> {
+    for fig in SimFig::ALL {
+        let mut pts: Vec<&SimScalingRow> = rows.iter().filter(|r| r.fig == fig).collect();
+        pts.sort_by_key(|r| r.localities);
+        for w in pts.windows(2) {
+            let sim = slope(
+                (w[0].localities, w[0].stats.makespan_us),
+                (w[1].localities, w[1].stats.makespan_us),
+            );
+            let model = slope((w[0].localities, w[0].model_us), (w[1].localities, w[1].model_us));
+            ensure!(
+                (sim - model).abs() <= tol,
+                "{} slope diverges from the model between n={} and n={}: \
+                 event-engine {sim:.3} vs closed-form {model:.3} (tol {tol})",
+                fig.name(),
+                w[0].localities,
+                w[1].localities,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Run the sweep, print the paper-style table and log-log plot, and
+/// write `sim_scaling.csv` when an output directory is given.
+pub fn run(opts: &SimScalingOpts) -> anyhow::Result<Vec<SimScalingRow>> {
+    ensure!(!opts.localities.is_empty(), "need at least one locality count");
+    ensure!(!opts.figs.is_empty(), "need at least one figure (fig4|fig5|fig6)");
+    for &n in &opts.localities {
+        ensure!(
+            n >= 2 && n.is_power_of_two() && (1usize << 14) % n == 0,
+            "locality count {n} must be a power of two dividing 2^14"
+        );
+    }
+
+    let mut rows = Vec::new();
+    for &fig in &opts.figs {
+        for &n in &opts.localities {
+            rows.push(point(fig, n, opts));
+        }
+    }
+
+    let mut table = Table::new(&[
+        "fig", "localities", "sim [ms]", "model [ms]", "wire", "retrans", "dups", "events",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.fig.name().to_string(),
+            r.localities.to_string(),
+            format!("{:.3}", r.stats.makespan_us / 1e3),
+            format!("{:.3}", r.model_us / 1e3),
+            super::fig3::human_bytes(r.stats.wire_bytes),
+            super::fig3::human_bytes(r.stats.retransmitted_bytes),
+            r.stats.duplicates_dropped.to_string(),
+            r.stats.events.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let series: Vec<Series> = opts
+        .figs
+        .iter()
+        .map(|&fig| Series {
+            label: format!("{} (event engine)", fig.name()),
+            symbol: match fig {
+                SimFig::Fig4 => 'o',
+                SimFig::Fig5 => 'x',
+                SimFig::Fig6 => '#',
+            },
+            points: rows
+                .iter()
+                .filter(|r| r.fig == fig)
+                .map(|r| (r.localities as f64, r.stats.makespan_us))
+                .collect(),
+        })
+        .collect();
+    println!(
+        "{}",
+        log_log_plot("event-engine scaling sweep", "localities", "makespan [µs]", &series)
+    );
+
+    if let Some(dir) = &opts.out_dir {
+        let cells: Vec<Vec<String>> = rows.iter().map(|r| r.csv_cells(opts)).collect();
+        let path = format!("{dir}/sim_scaling.csv");
+        write_csv(&path, &SimScalingRow::COLUMNS, &cells)
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts_for(figs: Vec<SimFig>, localities: Vec<usize>) -> SimScalingOpts {
+        SimScalingOpts {
+            figs,
+            localities,
+            port: PortKind::Lci,
+            adversary: AdversaryConfig::none(42),
+            out_dir: None,
+        }
+    }
+
+    #[test]
+    fn slopes_track_the_comm_only_model_at_cluster_scale() {
+        let opts = opts_for(vec![SimFig::Fig4, SimFig::Fig6], vec![512, 1024]);
+        let rows = run(&opts).unwrap();
+        assert_eq!(rows.len(), 4);
+        validate_slopes(&rows, 0.5).unwrap();
+    }
+
+    #[test]
+    #[ignore = "full three-figure 512-2048 sweep; run with --ignored --release"]
+    fn full_sweep_slopes_all_figures() {
+        let rows = run(&opts_for(SimFig::ALL.to_vec(), vec![512, 1024, 2048])).unwrap();
+        validate_slopes(&rows, 0.5).unwrap();
+    }
+
+    /// Satellite regression: the same seed and config must produce the
+    /// identical `sim_scaling.csv` row — trace hash included — across
+    /// two full harness runs.
+    #[test]
+    fn csv_rows_are_bit_identical_across_runs() {
+        let opts = SimScalingOpts {
+            adversary: AdversaryConfig::hostile(7),
+            ..opts_for(vec![SimFig::Fig4, SimFig::Fig5], vec![16, 32])
+        };
+        let a: Vec<Vec<String>> = run(&opts).unwrap().iter().map(|r| r.csv_cells(&opts)).collect();
+        let b: Vec<Vec<String>> = run(&opts).unwrap().iter().map(|r| r.csv_cells(&opts)).collect();
+        assert_eq!(a, b, "sim_scaling.csv rows must be reproducible from the seed");
+    }
+
+    #[test]
+    fn near_square_grids() {
+        assert_eq!(near_square(512), ProcGrid::new(16, 32));
+        assert_eq!(near_square(1024), ProcGrid::new(32, 32));
+        assert_eq!(near_square(2048), ProcGrid::new(32, 64));
+        assert_eq!(near_square(4096), ProcGrid::new(64, 64));
+    }
+
+    #[test]
+    fn rejects_bad_locality_counts() {
+        let mut opts = opts_for(vec![SimFig::Fig4], vec![48]);
+        assert!(run(&opts).is_err());
+        opts.localities = vec![];
+        assert!(run(&opts).is_err());
+    }
+}

@@ -18,6 +18,7 @@
 //! [`crate::dist_fft::scatter_variant`]).
 
 use super::comm::Communicator;
+use super::protocol;
 use crate::hpx::parcel::Payload;
 
 /// Algorithm selector for [`Communicator::all_to_all`].
@@ -119,41 +120,20 @@ impl Communicator {
     }
 
     /// Post everything, then drain: maximal overlap, N² in-flight parcels.
-    fn a2a_linear(&self, mut chunks: Vec<Payload>) -> Vec<Payload> {
-        let tag = self.alloc_tags();
-        let n = self.size();
-        let me = self.rank();
-        let mut out: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
-        out[me] = Some(std::mem::replace(&mut chunks[me], Payload::empty()));
-        for (dst, chunk) in chunks.into_iter().enumerate() {
-            if dst != me {
-                self.send(dst, tag, chunk);
-            }
-        }
-        for (src, slot) in out.iter_mut().enumerate() {
-            if src != me {
-                *slot = Some(self.recv(src, tag));
-            }
-        }
-        out.into_iter().map(|s| s.expect("slot filled")).collect()
+    /// Runs the [`protocol::LinearA2a`] machine against the live fabric —
+    /// the same machine the discrete-event simulator schedules.
+    fn a2a_linear(&self, chunks: Vec<Payload>) -> Vec<Payload> {
+        let sm = protocol::LinearA2a::new(self.rank(), self.size(), self.alloc_tags(), chunks);
+        protocol::drive(self, sm, |_, _, _| {})
     }
 
     /// N−1 rounds; in round `r` exchange with `rank ^ r` (power-of-two
     /// sizes) or `rank ± r` (general). One send + one recv in flight per
-    /// rank per round — the bandwidth-friendly schedule.
-    fn a2a_pairwise(&self, mut chunks: Vec<Payload>) -> Vec<Payload> {
-        let tag = self.alloc_tags();
-        let n = self.size();
-        let me = self.rank();
-        let mut out: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
-        out[me] = Some(std::mem::replace(&mut chunks[me], Payload::empty()));
-        for r in 1..n {
-            let (send_to, recv_from) = pairwise_peers(me, n, r);
-            let outgoing = std::mem::replace(&mut chunks[send_to], Payload::empty());
-            self.send(send_to, tag + r as u64, outgoing);
-            out[recv_from] = Some(self.recv(recv_from, tag + r as u64));
-        }
-        out.into_iter().map(|s| s.expect("slot filled")).collect()
+    /// rank per round — the bandwidth-friendly schedule, expressed as the
+    /// [`protocol::PairwiseA2a`] machine.
+    fn a2a_pairwise(&self, chunks: Vec<Payload>) -> Vec<Payload> {
+        let sm = protocol::PairwiseA2a::new(self.rank(), self.size(), self.alloc_tags(), chunks);
+        protocol::drive(self, sm, |_, _, _| {})
     }
 
     /// The pairwise schedule with each per-rank message split into
@@ -192,129 +172,31 @@ impl Communicator {
 
     /// Bruck's algorithm: ⌈log2 n⌉ rounds, each moving aggregated blocks
     /// of chunks. Latency-optimal for small messages; the aggregation
-    /// concatenates payloads with a length-prefixed framing.
+    /// concatenates payloads with the
+    /// [`protocol::Wire::frame_indexed`] length-prefixed framing.
+    /// Rotation, rounds, and the inverse
+    /// rotation all live in the [`protocol::BruckA2a`] machine.
     fn a2a_bruck(&self, chunks: Vec<Payload>) -> Vec<Payload> {
-        let tag = self.alloc_tags();
-        let n = self.size();
-        let me = self.rank();
-
-        // Phase 1: local rotation — slot j holds the chunk for rank
-        // (me + j) mod n.
-        let mut slots: Vec<Vec<u8>> = (0..n)
-            .map(|j| chunks[(me + j) % n].as_bytes().to_vec())
-            .collect();
-
-        // Phase 2: log rounds. In round k (step = 2^k), send every slot
-        // whose index has bit k set to (me + step) mod n.
-        let mut step = 1;
-        let mut round = 0u64;
-        while step < n {
-            let to = (me + step) % n;
-            let from = (me + n - step) % n;
-            let moving: Vec<usize> = (0..n).filter(|j| j & step != 0).collect();
-            // Frame: [count u32] then per block [index u32][len u64][bytes].
-            let mut frame = Vec::new();
-            crate::util::bytes::put_u32(&mut frame, moving.len() as u32);
-            for &j in &moving {
-                crate::util::bytes::put_u32(&mut frame, j as u32);
-                crate::util::bytes::put_u64(&mut frame, slots[j].len() as u64);
-                frame.extend_from_slice(&slots[j]);
-            }
-            self.send(to, tag + round, Payload::new(frame));
-            let incoming = self.recv(from, tag + round);
-            let buf = incoming.as_bytes();
-            let mut off = 0;
-            let count = crate::util::bytes::get_u32(buf, &mut off) as usize;
-            for _ in 0..count {
-                let j = crate::util::bytes::get_u32(buf, &mut off) as usize;
-                let len = crate::util::bytes::get_u64(buf, &mut off) as usize;
-                slots[j] = buf[off..off + len].to_vec();
-                off += len;
-            }
-            step <<= 1;
-            round += 1;
-        }
-
-        // Phase 3: inverse rotation — received slot j originated at rank
-        // (me - j) mod n.
-        let mut out: Vec<Option<Payload>> = (0..n).map(|_| None).collect();
-        for (j, bytes) in slots.into_iter().enumerate() {
-            let src = (me + n - j) % n;
-            out[src] = Some(Payload::new(bytes));
-        }
-        out.into_iter().map(|s| s.expect("slot filled")).collect()
+        let sm = protocol::BruckA2a::new(self.rank(), self.size(), self.alloc_tags(), chunks);
+        protocol::drive(self, sm, |_, _, _| {})
     }
 
     /// HPX's communicator-based collective funnels contributions through
     /// the communicator root: gather all N×N chunks to rank 0, transpose
     /// there, scatter back out. Synchronized and root-bottlenecked —
     /// which is precisely the overhead the paper's N-scatter variant
-    /// avoids.
+    /// avoids. The whole funnel (row framing, root transpose, column
+    /// scatter) is the [`protocol::HpxRootA2a`] machine; it stays inline
+    /// on this thread (which may be a pool worker running the offloaded
+    /// root-funnel), so it never re-enters the async engine. Two tag
+    /// blocks are allocated — gather then scatter — preserving the
+    /// historical lock-step numbering.
     fn a2a_hpx_root(&self, chunks: Vec<Payload>) -> Vec<Payload> {
-        let n = self.size();
-        // Gather: each rank ships its whole chunk row to root 0.
-        let mut row = Vec::new();
-        crate::util::bytes::put_u32(&mut row, n as u32);
-        for c in &chunks {
-            crate::util::bytes::put_u64(&mut row, c.len() as u64);
-            row.extend_from_slice(c.as_bytes());
-        }
-        // Inline gather: this may run on a pool worker (offloaded
-        // root-funnel), so it must not re-enter the async engine.
-        let gathered = self.gather_inline(0, Payload::new(row));
-
-        // Root: decode rows, transpose the chunk matrix, re-encode columns.
-        let scattered = if self.rank() == 0 {
-            let rows: Vec<Vec<Vec<u8>>> = gathered
-                .expect("root gathers")
-                .into_iter()
-                .map(|p| {
-                    let buf = p.as_bytes();
-                    let mut off = 0;
-                    let count = crate::util::bytes::get_u32(buf, &mut off) as usize;
-                    (0..count)
-                        .map(|_| {
-                            let len = crate::util::bytes::get_u64(buf, &mut off) as usize;
-                            let b = buf[off..off + len].to_vec();
-                            off += len;
-                            b
-                        })
-                        .collect()
-                })
-                .collect();
-            let cols: Vec<Payload> = (0..n)
-                .map(|dst| {
-                    let mut col = Vec::new();
-                    crate::util::bytes::put_u32(&mut col, n as u32);
-                    for row in rows.iter() {
-                        crate::util::bytes::put_u64(&mut col, row[dst].len() as u64);
-                        col.extend_from_slice(&row[dst]);
-                    }
-                    Payload::new(col)
-                })
-                .collect();
-            Some(cols)
-        } else {
-            None
-        };
-        // Explicit-tag scatter: stays inline on this thread (which may be
-        // a pool worker running the offloaded root-funnel), no nested
-        // async delegation.
-        let tag = self.alloc_tags();
-        let mine = self.scatter_with_tag(0, scattered, tag);
-
-        // Decode my column back into per-source payloads.
-        let buf = mine.as_bytes();
-        let mut off = 0;
-        let count = crate::util::bytes::get_u32(buf, &mut off) as usize;
-        (0..count)
-            .map(|_| {
-                let len = crate::util::bytes::get_u64(buf, &mut off) as usize;
-                let p = Payload::new(buf[off..off + len].to_vec());
-                off += len;
-                p
-            })
-            .collect()
+        let gather_tag = self.alloc_tags();
+        let scatter_tag = self.alloc_tags();
+        let sm =
+            protocol::HpxRootA2a::new(self.rank(), self.size(), gather_tag, scatter_tag, chunks);
+        protocol::drive(self, sm, |_, _, _| {})
     }
 }
 

@@ -235,19 +235,6 @@ impl Communicator {
         crate::util::bytes::get_u64(header.as_bytes(), &mut off) as usize
     }
 
-    /// Blocking receive of a chunked transfer, reassembled into one
-    /// payload (see [`recv_chunked_via`] for the copy semantics). `src`
-    /// is a communicator rank, translated to its locality here.
-    pub(crate) fn recv_chunked(&self, src: LocalityId, base_tag: Tag) -> Payload {
-        recv_chunked_via(
-            self.fabric(),
-            self.my_global(),
-            self.global_rank(src),
-            base_tag,
-            self.chunk_policy(),
-        )
-    }
-
     /// Queue wire chunk `index` of a known-size chunked transfer to
     /// `dest` on the communicator's send pool, returning its completion
     /// future — the single-chunk posting primitive the async FFT variants
@@ -262,13 +249,7 @@ impl Communicator {
         index: usize,
         payload: Payload,
     ) -> TaskFuture<()> {
-        let fabric = Arc::clone(self.fabric());
-        let src = self.my_global();
-        let dest = self.global_rank(dest);
-        let tag = base_tag + 1 + index as Tag;
-        self.chunk_pool().spawn(move || {
-            fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, payload));
-        })
+        super::protocol::send_pooled(self, dest, base_tag + 1 + index as Tag, payload)
     }
 
     /// Streaming receive of a chunked transfer: `on_chunk(byte_offset,
@@ -299,26 +280,20 @@ impl Communicator {
     /// chunk *k+1* (and the next rounds' sends) are still in flight.
     pub fn all_to_all_chunked_each(
         &self,
-        mut chunks: Vec<Payload>,
-        mut on_chunk: impl FnMut(usize, usize, Payload),
+        chunks: Vec<Payload>,
+        on_chunk: impl FnMut(usize, usize, Payload),
     ) {
         let n = self.size();
-        let me = self.rank();
         assert_eq!(chunks.len(), n, "need one chunk per rank");
         let base = self.alloc_chunk_tags(n);
-        let own = std::mem::replace(&mut chunks[me], Payload::empty());
-        on_chunk(me, 0, own);
-        let mut pending = Vec::new();
-        for r in 1..n {
-            let (send_to, recv_from) = super::all_to_all::pairwise_peers(me, n, r);
-            let tag = base + r as Tag * CHUNK_TAG_SPAN;
-            let outgoing = std::mem::replace(&mut chunks[send_to], Payload::empty());
-            pending.append(&mut self.send_chunked(send_to, tag, outgoing));
-            self.recv_chunked_each(recv_from, tag, |off, p| on_chunk(recv_from, off, p));
-        }
-        for f in pending {
-            f.get();
-        }
+        let sm = super::protocol::PairwiseChunkedA2a::new(
+            self.rank(),
+            n,
+            base,
+            self.chunk_policy(),
+            chunks,
+        );
+        super::protocol::drive(self, sm, on_chunk);
     }
 }
 
@@ -373,7 +348,9 @@ mod tests {
             let peer = 1 - ctx.rank;
             let data: Vec<u8> = (0..100).map(|i| (ctx.rank * 100 + i) as u8).collect();
             let pending = comm.send_chunked(peer, base, Payload::new(data));
-            let got = comm.recv_chunked(peer, base).as_bytes().to_vec();
+            let got = recv_chunked_via(comm.fabric(), ctx.rank, peer, base, comm.chunk_policy())
+                .as_bytes()
+                .to_vec();
             for f in pending {
                 f.get();
             }
@@ -397,7 +374,7 @@ mod tests {
             let peer = 1 - ctx.rank;
             let payload = Payload::new(vec![ctx.rank as u8; 4096]);
             let pending = comm.send_chunked(peer, base, payload);
-            let got = comm.recv_chunked(peer, base);
+            let got = recv_chunked_via(comm.fabric(), ctx.rank, peer, base, comm.chunk_policy());
             for f in pending {
                 f.get();
             }
@@ -419,7 +396,8 @@ mod tests {
             let base = comm.alloc_chunk_tags(1);
             let peer = 1 - ctx.rank;
             let pending = comm.send_chunked(peer, base, Payload::empty());
-            let len = comm.recv_chunked(peer, base).len();
+            let len =
+                recv_chunked_via(comm.fabric(), ctx.rank, peer, base, comm.chunk_policy()).len();
             for f in pending {
                 f.get();
             }

@@ -1,7 +1,7 @@
 //! The communicator: rank + size + fabric handle + tag discipline.
 
 use super::chunked::ChunkPolicy;
-use super::tags::CHUNK_TAG_SPAN;
+use super::tags::{collective_span, CHUNK_TAG_SPAN};
 use crate::hpx::parcel::{actions, LocalityId, Parcel, Payload, Tag};
 use crate::hpx::runtime::LocalityCtx;
 use crate::parcelport::Parcelport;
@@ -202,7 +202,7 @@ impl Communicator {
     pub(crate) fn alloc_tags(&self) -> Tag {
         // Reserve a generous block so algorithms can derive per-round /
         // per-peer tags without collision.
-        self.bump_tags(4 * self.size as Tag + 8)
+        self.bump_tags(collective_span(self.size))
     }
 
     /// Reserve a contiguous block of `span` tags from the lock-step

@@ -13,30 +13,6 @@ impl Communicator {
         self.gather_async(root, data).get()
     }
 
-    /// The inline (pool-free) gather the offloaded root-funnel all-to-all
-    /// runs on its shadow communicator: identical semantics to
-    /// [`Communicator::gather`], but sends and receives execute on the
-    /// calling thread — which may itself be a pool worker, so it must not
-    /// re-enter the async engine.
-    pub(crate) fn gather_inline(&self, root: usize, data: Payload) -> Option<Vec<Payload>> {
-        assert!(root < self.size(), "root {root} out of range");
-        let tag = self.alloc_tags();
-        if self.rank() == root {
-            let mut out = Vec::with_capacity(self.size());
-            for src in 0..self.size() {
-                if src == root {
-                    out.push(data.clone());
-                } else {
-                    out.push(self.recv(src, tag));
-                }
-            }
-            Some(out)
-        } else {
-            self.send(root, tag, data);
-            None
-        }
-    }
-
     /// Ring all-gather: after `size - 1` rounds every rank holds every
     /// contribution, in rank order. Bandwidth-optimal (each byte crosses
     /// each link once).

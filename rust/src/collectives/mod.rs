@@ -30,6 +30,14 @@
 //! [`Communicator::split`] carves sub-communicators with disjoint tag
 //! spaces (see [`tags`]) and their own chunk pools — the capability the
 //! 3-D pencil FFT's row/column exchanges are built on.
+//!
+//! Every blocking algorithm is implemented once, as an event-driven
+//! state machine in [`protocol`], and merely *driven* here against the
+//! live fabric. The discrete-event simulator
+//! ([`crate::simnet::collective_sim`]) schedules the same machines over
+//! simulated NICs under adversarial orderings, so the protocol logic
+//! exercised at 4 in-process ranks and at 4096 simulated localities is
+//! the same code.
 
 pub mod all_to_all;
 pub mod barrier;
@@ -38,6 +46,7 @@ pub mod chunked;
 pub mod comm;
 pub mod gather;
 pub mod nonblocking;
+pub mod protocol;
 pub mod reduce;
 pub mod scatter;
 pub mod split;

@@ -1,0 +1,1107 @@
+//! Event-driven protocol state machines for the collective algorithms.
+//!
+//! Each collective endpoint (one rank's half of a linear, pairwise,
+//! Bruck, root-funneled, or chunk-pipelined exchange) is expressed as a
+//! [`Machine`]: a resumable state machine that asks its driver to
+//! perform one [`Action`] at a time — send a message, wait for a
+//! matched receive, or hand a completed chunk to the application. The
+//! blocking collectives in [`super::all_to_all`], [`super::scatter`],
+//! and [`super::chunked`] run these machines against the live
+//! parcelport fabric via [`drive`]; the discrete-event simulator
+//! ([`crate::simnet::collective_sim`]) runs the *same* machines against
+//! simulated NICs and links, so a protocol bug caught under a hostile
+//! simulated schedule is a bug in the code real runs execute.
+//!
+//! Messages are abstracted behind [`Wire`] so the live driver moves
+//! real [`Payload`] bytes while the simulator can either carry bytes
+//! (for oracle validation) or just sizes (for cluster-scale timing
+//! runs). The framing methods on [`Wire`] reproduce the existing wire
+//! formats byte-for-byte — Bruck's indexed blocks, the root-funnel's
+//! row/column lists, and the 8-byte chunked-transfer header.
+
+use std::sync::Arc;
+
+use super::all_to_all::pairwise_peers;
+use super::chunked::ChunkPolicy;
+use super::comm::Communicator;
+use super::tags::CHUNK_TAG_SPAN;
+use crate::hpx::parcel::{actions, Parcel, Payload, Tag};
+use crate::task::TaskFuture;
+use crate::util::bytes::{get_u32, get_u64, put_u32, put_u64};
+
+/// A message body a protocol machine can move: real bytes on the live
+/// fabric, bytes-or-sizes in the simulator.
+pub trait Wire: Clone + Sized {
+    /// The empty message.
+    fn empty() -> Self;
+
+    /// Bytes this message occupies on the wire.
+    fn wire_len(&self) -> usize;
+
+    /// Sub-range view of `len` bytes starting at `off` (zero-copy for
+    /// [`Payload`]).
+    fn slice(&self, off: usize, len: usize) -> Self;
+
+    /// Reassemble ordered parts: zero parts yield the empty message,
+    /// one part passes through unchanged (zero-copy), several are
+    /// concatenated byte-wise.
+    fn concat(parts: Vec<Self>) -> Self;
+
+    /// The 8-byte chunked-transfer header announcing `total` bytes.
+    fn header(total: u64) -> Self;
+
+    /// Total length recorded in a header built by [`Wire::header`].
+    fn header_total(&self) -> u64;
+
+    /// Bruck frame: `[count u32]`, then `[index u32][len u64][bytes]`
+    /// per block.
+    fn frame_indexed(blocks: &[(u32, Self)]) -> Self;
+
+    /// Decode a [`Wire::frame_indexed`] frame.
+    fn unframe_indexed(&self) -> Vec<(u32, Self)>;
+
+    /// Row/column frame: `[count u32]`, then `[len u64][bytes]` per
+    /// part.
+    fn frame_list(parts: &[Self]) -> Self;
+
+    /// Decode a [`Wire::frame_list`] frame.
+    fn unframe_list(&self) -> Vec<Self>;
+}
+
+impl Wire for Payload {
+    fn empty() -> Self {
+        Payload::empty()
+    }
+
+    fn wire_len(&self) -> usize {
+        self.len()
+    }
+
+    fn slice(&self, off: usize, len: usize) -> Self {
+        Payload::slice(self, off, len)
+    }
+
+    fn concat(mut parts: Vec<Self>) -> Self {
+        match parts.len() {
+            0 => Payload::empty(),
+            1 => parts.pop().expect("one part"),
+            _ => {
+                let total = parts.iter().map(Payload::len).sum();
+                let mut buf = Vec::with_capacity(total);
+                for p in &parts {
+                    buf.extend_from_slice(p.as_bytes());
+                }
+                Payload::new(buf)
+            }
+        }
+    }
+
+    fn header(total: u64) -> Self {
+        let mut h = Vec::with_capacity(8);
+        put_u64(&mut h, total);
+        Payload::new(h)
+    }
+
+    fn header_total(&self) -> u64 {
+        let mut off = 0;
+        get_u64(self.as_bytes(), &mut off)
+    }
+
+    fn frame_indexed(blocks: &[(u32, Self)]) -> Self {
+        let mut frame = Vec::new();
+        put_u32(&mut frame, blocks.len() as u32);
+        for (j, b) in blocks {
+            put_u32(&mut frame, *j);
+            put_u64(&mut frame, b.len() as u64);
+            frame.extend_from_slice(b.as_bytes());
+        }
+        Payload::new(frame)
+    }
+
+    fn unframe_indexed(&self) -> Vec<(u32, Self)> {
+        let buf = self.as_bytes();
+        let mut off = 0;
+        let count = get_u32(buf, &mut off) as usize;
+        (0..count)
+            .map(|_| {
+                let j = get_u32(buf, &mut off);
+                let len = get_u64(buf, &mut off) as usize;
+                let part = Payload::new(buf[off..off + len].to_vec());
+                off += len;
+                (j, part)
+            })
+            .collect()
+    }
+
+    fn frame_list(parts: &[Self]) -> Self {
+        let mut frame = Vec::new();
+        put_u32(&mut frame, parts.len() as u32);
+        for p in parts {
+            put_u64(&mut frame, p.len() as u64);
+            frame.extend_from_slice(p.as_bytes());
+        }
+        Payload::new(frame)
+    }
+
+    fn unframe_list(&self) -> Vec<Self> {
+        let buf = self.as_bytes();
+        let mut off = 0;
+        let count = get_u32(buf, &mut off) as usize;
+        (0..count)
+            .map(|_| {
+                let len = get_u64(buf, &mut off) as usize;
+                let part = Payload::new(buf[off..off + len].to_vec());
+                off += len;
+                part
+            })
+            .collect()
+    }
+}
+
+/// One instruction a protocol machine asks its driver to perform.
+#[derive(Debug)]
+pub enum Action<B> {
+    /// Transmit `msg` to rank `to` on `tag`. `bulk` marks chunk-data
+    /// sends the live driver dispatches through the communicator's
+    /// chunk pool; headers and monolithic messages go inline so
+    /// per-pair protocol ordering is preserved.
+    Send {
+        /// Destination rank within the communicator.
+        to: usize,
+        /// Wire tag.
+        tag: Tag,
+        /// Message to transmit.
+        msg: B,
+        /// Pool-dispatched chunk data (`true`) vs inline protocol
+        /// message (`false`).
+        bulk: bool,
+    },
+    /// Block until the message from `from` on `tag` arrives, then hand
+    /// it to [`Machine::deliver`]. A machine re-emits the same `Recv`
+    /// until the delivery happens, so drivers may park it and re-step
+    /// later.
+    Recv {
+        /// Source rank within the communicator.
+        from: usize,
+        /// Wire tag.
+        tag: Tag,
+    },
+    /// Wait for whichever listed `(from, tag)` message arrives first
+    /// and deliver it — the N-scatter drain pattern. The candidate
+    /// list is in deterministic rank order.
+    RecvAny(Vec<(usize, Tag)>),
+    /// Emit an application-level chunk: data belonging to slot `src`
+    /// at byte offset `off` — the streaming hand-off of the chunked
+    /// protocols.
+    Chunk {
+        /// Source rank the data belongs to.
+        src: usize,
+        /// Byte offset within that source's full message.
+        off: usize,
+        /// The chunk itself.
+        msg: B,
+    },
+    /// The machine has finished; call [`Machine::finish`].
+    Done,
+}
+
+/// An event-driven collective protocol endpoint for one rank.
+///
+/// Drivers repeatedly call [`Machine::step`] and perform the returned
+/// [`Action`]; after a `Recv`/`RecvAny` they must hand the matched
+/// message to [`Machine::deliver`] before stepping again. Receive
+/// states are idempotent — stepping again without a delivery re-asks
+/// for the same message — which lets the simulator park a machine and
+/// resume it when the event engine delivers. Send-emitting steps
+/// advance state before returning, so each send happens exactly once.
+pub trait Machine<B: Wire> {
+    /// What the collective returns on this rank.
+    type Output;
+
+    /// Next action for the driver.
+    fn step(&mut self) -> Action<B>;
+
+    /// Hand a matched message to the machine.
+    fn deliver(&mut self, from: usize, tag: Tag, msg: B);
+
+    /// Consume the machine after [`Action::Done`].
+    fn finish(self) -> Self::Output;
+}
+
+/// [`super::AllToAllAlgo::Linear`] endpoint: post every send on one
+/// shared tag, then receive per source in rank order.
+pub struct LinearA2a<B> {
+    me: usize,
+    n: usize,
+    tag: Tag,
+    chunks: Vec<Option<B>>,
+    out: Vec<Option<B>>,
+    cursor: usize,
+}
+
+impl<B: Wire> LinearA2a<B> {
+    /// Endpoint for rank `me` of `n`, exchanging `chunks` on `tag`.
+    pub fn new(me: usize, n: usize, tag: Tag, chunks: Vec<B>) -> Self {
+        assert_eq!(chunks.len(), n, "need one chunk per rank");
+        let mut chunks: Vec<Option<B>> = chunks.into_iter().map(Some).collect();
+        let mut out: Vec<Option<B>> = (0..n).map(|_| None).collect();
+        out[me] = chunks[me].take();
+        Self { me, n, tag, chunks, out, cursor: 0 }
+    }
+}
+
+impl<B: Wire> Machine<B> for LinearA2a<B> {
+    type Output = Vec<B>;
+
+    fn step(&mut self) -> Action<B> {
+        while self.cursor < self.n {
+            let dst = self.cursor;
+            self.cursor += 1;
+            if dst != self.me {
+                let msg = self.chunks[dst].take().expect("chunk unsent");
+                return Action::Send { to: dst, tag: self.tag, msg, bulk: false };
+            }
+        }
+        while self.cursor < 2 * self.n {
+            let src = self.cursor - self.n;
+            if src == self.me {
+                self.cursor += 1;
+                continue;
+            }
+            return Action::Recv { from: src, tag: self.tag };
+        }
+        Action::Done
+    }
+
+    fn deliver(&mut self, from: usize, _tag: Tag, msg: B) {
+        debug_assert_eq!(from, self.cursor - self.n);
+        self.out[from] = Some(msg);
+        self.cursor += 1;
+    }
+
+    fn finish(self) -> Vec<B> {
+        self.out.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+}
+
+/// [`super::AllToAllAlgo::Pairwise`] endpoint: `n - 1` rounds of
+/// send/recv against XOR (power-of-two) or ring-offset peers, one tag
+/// per round.
+pub struct PairwiseA2a<B> {
+    me: usize,
+    n: usize,
+    tag: Tag,
+    chunks: Vec<Option<B>>,
+    out: Vec<Option<B>>,
+    round: usize,
+    sent: bool,
+}
+
+impl<B: Wire> PairwiseA2a<B> {
+    /// Endpoint for rank `me` of `n`, exchanging `chunks` on the tag
+    /// block starting at `tag`.
+    pub fn new(me: usize, n: usize, tag: Tag, chunks: Vec<B>) -> Self {
+        assert_eq!(chunks.len(), n, "need one chunk per rank");
+        let mut chunks: Vec<Option<B>> = chunks.into_iter().map(Some).collect();
+        let mut out: Vec<Option<B>> = (0..n).map(|_| None).collect();
+        out[me] = chunks[me].take();
+        Self { me, n, tag, chunks, out, round: 1, sent: false }
+    }
+}
+
+impl<B: Wire> Machine<B> for PairwiseA2a<B> {
+    type Output = Vec<B>;
+
+    fn step(&mut self) -> Action<B> {
+        if self.round >= self.n {
+            return Action::Done;
+        }
+        let (to, from) = pairwise_peers(self.me, self.n, self.round);
+        let tag = self.tag + self.round as Tag;
+        if !self.sent {
+            self.sent = true;
+            let msg = self.chunks[to].take().expect("chunk unsent");
+            return Action::Send { to, tag, msg, bulk: false };
+        }
+        Action::Recv { from, tag }
+    }
+
+    fn deliver(&mut self, from: usize, _tag: Tag, msg: B) {
+        self.out[from] = Some(msg);
+        self.round += 1;
+        self.sent = false;
+    }
+
+    fn finish(self) -> Vec<B> {
+        self.out.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+}
+
+/// [`super::AllToAllAlgo::Bruck`] endpoint: log₂(n) rounds of framed
+/// block exchange over rotated slots, with the inverse rotation applied
+/// at [`Machine::finish`].
+pub struct BruckA2a<B> {
+    me: usize,
+    n: usize,
+    tag: Tag,
+    slots: Vec<B>,
+    step_size: usize,
+    round: Tag,
+    sent: bool,
+}
+
+impl<B: Wire> BruckA2a<B> {
+    /// Endpoint for rank `me` of `n`, exchanging `chunks` on the tag
+    /// block starting at `tag`.
+    pub fn new(me: usize, n: usize, tag: Tag, chunks: Vec<B>) -> Self {
+        assert_eq!(chunks.len(), n, "need one chunk per rank");
+        // Rotate so slot j holds the chunk destined for rank (me + j) % n.
+        let slots = (0..n).map(|j| chunks[(me + j) % n].clone()).collect();
+        Self { me, n, tag, slots, step_size: 1, round: 0, sent: false }
+    }
+}
+
+impl<B: Wire> Machine<B> for BruckA2a<B> {
+    type Output = Vec<B>;
+
+    fn step(&mut self) -> Action<B> {
+        if self.step_size >= self.n {
+            return Action::Done;
+        }
+        let tag = self.tag + self.round;
+        if !self.sent {
+            self.sent = true;
+            let to = (self.me + self.step_size) % self.n;
+            let moving: Vec<(u32, B)> = (0..self.n)
+                .filter(|&j| j & self.step_size != 0)
+                .map(|j| (j as u32, self.slots[j].clone()))
+                .collect();
+            return Action::Send { to, tag, msg: B::frame_indexed(&moving), bulk: false };
+        }
+        let from = (self.me + self.n - self.step_size) % self.n;
+        Action::Recv { from, tag }
+    }
+
+    fn deliver(&mut self, _from: usize, _tag: Tag, msg: B) {
+        for (j, part) in msg.unframe_indexed() {
+            self.slots[j as usize] = part;
+        }
+        self.step_size <<= 1;
+        self.round += 1;
+        self.sent = false;
+    }
+
+    fn finish(self) -> Vec<B> {
+        let (me, n) = (self.me, self.n);
+        let mut out: Vec<Option<B>> = (0..n).map(|_| None).collect();
+        for (j, b) in self.slots.into_iter().enumerate() {
+            out[(me + n - j) % n] = Some(b);
+        }
+        out.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+}
+
+/// State of a [`HpxRootA2a`] endpoint.
+enum HpxState {
+    /// Leaf: send the framed row to root 0.
+    SendRow,
+    /// Root: receiving framed rows, next from this source.
+    RecvRow(usize),
+    /// Root: transposed; sending framed columns, next to this rank.
+    SendCol(usize),
+    /// Leaf: waiting for the root's framed column.
+    RecvCol,
+    /// Exchange complete.
+    Finished,
+}
+
+/// [`super::AllToAllAlgo::HpxRoot`] endpoint: the root-funneled
+/// variant modeling HPX's communicator-based collective. Leaves frame
+/// their whole row and send it to rank 0 on the gather tag; the root
+/// decodes all rows, transposes, re-frames per-destination columns and
+/// scatters them on the scatter tag.
+pub struct HpxRootA2a<B> {
+    n: usize,
+    gather_tag: Tag,
+    scatter_tag: Tag,
+    row: Option<B>,
+    rows: Vec<Option<B>>,
+    cols: Vec<Option<B>>,
+    state: HpxState,
+    result: Option<Vec<B>>,
+}
+
+impl<B: Wire> HpxRootA2a<B> {
+    /// Endpoint for rank `me` of `n`. `gather_tag` carries the leaf →
+    /// root rows, `scatter_tag` the root → leaf columns (two separate
+    /// blocks, matching the live tag-allocation order).
+    pub fn new(me: usize, n: usize, gather_tag: Tag, scatter_tag: Tag, chunks: Vec<B>) -> Self {
+        assert_eq!(chunks.len(), n, "need one chunk per rank");
+        let row = B::frame_list(&chunks);
+        let mut rows: Vec<Option<B>> = (0..n).map(|_| None).collect();
+        let (row, state) = if me == 0 {
+            rows[0] = Some(row);
+            (None, HpxState::RecvRow(1))
+        } else {
+            (Some(row), HpxState::SendRow)
+        };
+        Self { n, gather_tag, scatter_tag, row, rows, cols: Vec::new(), state, result: None }
+    }
+
+    /// Root only: decode every gathered row, transpose, and frame the
+    /// per-destination columns.
+    fn transpose(&mut self) {
+        let rows: Vec<Vec<B>> =
+            self.rows.iter_mut().map(|r| r.take().expect("row gathered").unframe_list()).collect();
+        self.cols = (0..self.n)
+            .map(|dst| {
+                let col: Vec<B> = rows.iter().map(|row| row[dst].clone()).collect();
+                Some(B::frame_list(&col))
+            })
+            .collect();
+    }
+}
+
+impl<B: Wire> Machine<B> for HpxRootA2a<B> {
+    type Output = Vec<B>;
+
+    fn step(&mut self) -> Action<B> {
+        loop {
+            match self.state {
+                HpxState::SendRow => {
+                    self.state = HpxState::RecvCol;
+                    let msg = self.row.take().expect("row framed");
+                    return Action::Send { to: 0, tag: self.gather_tag, msg, bulk: false };
+                }
+                HpxState::RecvRow(next) => {
+                    if next < self.n {
+                        return Action::Recv { from: next, tag: self.gather_tag };
+                    }
+                    self.transpose();
+                    self.state = HpxState::SendCol(1);
+                }
+                HpxState::SendCol(dst) => {
+                    if dst < self.n {
+                        self.state = HpxState::SendCol(dst + 1);
+                        let msg = self.cols[dst].take().expect("column framed");
+                        return Action::Send { to: dst, tag: self.scatter_tag, msg, bulk: false };
+                    }
+                    let own = self.cols[0].take().expect("own column");
+                    self.result = Some(own.unframe_list());
+                    self.state = HpxState::Finished;
+                }
+                HpxState::RecvCol => return Action::Recv { from: 0, tag: self.scatter_tag },
+                HpxState::Finished => return Action::Done,
+            }
+        }
+    }
+
+    fn deliver(&mut self, from: usize, _tag: Tag, msg: B) {
+        match self.state {
+            HpxState::RecvRow(next) => {
+                debug_assert_eq!(from, next);
+                self.rows[from] = Some(msg);
+                self.state = HpxState::RecvRow(next + 1);
+            }
+            HpxState::RecvCol => {
+                self.result = Some(msg.unframe_list());
+                self.state = HpxState::Finished;
+            }
+            _ => unreachable!("unexpected delivery"),
+        }
+    }
+
+    fn finish(self) -> Vec<B> {
+        self.result.expect("exchange complete")
+    }
+}
+
+/// State of a [`PairwiseChunkedA2a`] endpoint within its current round.
+enum CpState {
+    /// Hand the rank's own chunk to the application.
+    EmitOwn,
+    /// Send this round's 8-byte header.
+    SendHeader,
+    /// Send this round's wire chunks.
+    SendChunks,
+    /// Wait for the peer's header.
+    RecvHeader,
+    /// Wait for the peer's wire chunks.
+    RecvChunks,
+    /// All rounds complete.
+    Finished,
+}
+
+/// [`super::AllToAllAlgo::PairwiseChunked`] endpoint: the streaming
+/// pairwise exchange where every round is a full chunked transfer
+/// (header on the round's block base, chunks above it) and received
+/// chunks surface immediately as [`Action::Chunk`] — the
+/// transpose-on-arrival hook the FFT overlaps compute on.
+pub struct PairwiseChunkedA2a<B> {
+    me: usize,
+    n: usize,
+    base: Tag,
+    policy: ChunkPolicy,
+    chunks: Vec<Option<B>>,
+    state: CpState,
+    round: usize,
+    outgoing: Option<B>,
+    out_len: usize,
+    sent_chunks: usize,
+    recv_total: usize,
+    got_chunks: usize,
+    pending: Option<(usize, usize, B)>,
+}
+
+impl<B: Wire> PairwiseChunkedA2a<B> {
+    /// Endpoint for rank `me` of `n` under `policy`, with one
+    /// [`CHUNK_TAG_SPAN`] block per round starting at `base`.
+    pub fn new(me: usize, n: usize, base: Tag, policy: ChunkPolicy, chunks: Vec<B>) -> Self {
+        assert_eq!(chunks.len(), n, "need one chunk per rank");
+        Self {
+            me,
+            n,
+            base,
+            policy,
+            chunks: chunks.into_iter().map(Some).collect(),
+            state: CpState::EmitOwn,
+            round: 1,
+            outgoing: None,
+            out_len: 0,
+            sent_chunks: 0,
+            recv_total: 0,
+            got_chunks: 0,
+            pending: None,
+        }
+    }
+
+    fn round_tag(&self) -> Tag {
+        self.base + self.round as Tag * CHUNK_TAG_SPAN
+    }
+}
+
+impl<B: Wire> Machine<B> for PairwiseChunkedA2a<B> {
+    type Output = ();
+
+    fn step(&mut self) -> Action<B> {
+        loop {
+            if let Some((src, off, msg)) = self.pending.take() {
+                return Action::Chunk { src, off, msg };
+            }
+            match self.state {
+                CpState::EmitOwn => {
+                    let own = self.chunks[self.me].take().expect("own chunk");
+                    self.state = if self.n == 1 { CpState::Finished } else { CpState::SendHeader };
+                    return Action::Chunk { src: self.me, off: 0, msg: own };
+                }
+                CpState::SendHeader => {
+                    let (to, _) = pairwise_peers(self.me, self.n, self.round);
+                    let out = self.chunks[to].take().expect("chunk unsent");
+                    self.out_len = out.wire_len();
+                    self.outgoing = Some(out);
+                    self.sent_chunks = 0;
+                    self.state = CpState::SendChunks;
+                    let msg = B::header(self.out_len as u64);
+                    return Action::Send { to, tag: self.round_tag(), msg, bulk: false };
+                }
+                CpState::SendChunks => {
+                    if self.sent_chunks < self.policy.n_chunks(self.out_len) {
+                        let i = self.sent_chunks;
+                        self.sent_chunks += 1;
+                        let off = i * self.policy.chunk_bytes;
+                        let len = self.policy.chunk_bytes.min(self.out_len - off);
+                        let msg = self.outgoing.as_ref().expect("in transfer").slice(off, len);
+                        let (to, _) = pairwise_peers(self.me, self.n, self.round);
+                        let tag = self.round_tag() + 1 + i as Tag;
+                        return Action::Send { to, tag, msg, bulk: true };
+                    }
+                    self.outgoing = None;
+                    self.state = CpState::RecvHeader;
+                }
+                CpState::RecvHeader => {
+                    let (_, from) = pairwise_peers(self.me, self.n, self.round);
+                    return Action::Recv { from, tag: self.round_tag() };
+                }
+                CpState::RecvChunks => {
+                    if self.got_chunks < self.policy.n_chunks(self.recv_total) {
+                        let (_, from) = pairwise_peers(self.me, self.n, self.round);
+                        let tag = self.round_tag() + 1 + self.got_chunks as Tag;
+                        return Action::Recv { from, tag };
+                    }
+                    self.round += 1;
+                    self.state =
+                        if self.round == self.n { CpState::Finished } else { CpState::SendHeader };
+                }
+                CpState::Finished => return Action::Done,
+            }
+        }
+    }
+
+    fn deliver(&mut self, from: usize, _tag: Tag, msg: B) {
+        match self.state {
+            CpState::RecvHeader => {
+                self.recv_total = msg.header_total() as usize;
+                self.got_chunks = 0;
+                self.state = CpState::RecvChunks;
+            }
+            CpState::RecvChunks => {
+                self.pending = Some((from, self.got_chunks * self.policy.chunk_bytes, msg));
+                self.got_chunks += 1;
+            }
+            _ => unreachable!("unexpected delivery"),
+        }
+    }
+
+    fn finish(self) {}
+}
+
+/// [`super::ScatterAlgo::Linear`] endpoint: the root sends each leaf
+/// its chunk inline on one shared tag, in destination order.
+pub struct LinearScatter<B> {
+    root: usize,
+    me: usize,
+    n: usize,
+    tag: Tag,
+    chunks: Vec<Option<B>>,
+    next_dst: usize,
+    result: Option<B>,
+}
+
+impl<B: Wire> LinearScatter<B> {
+    /// Endpoint for rank `me` of `n` scattering from `root` on `tag`.
+    /// `chunks` is `Some` (one per rank) on the root, `None` on leaves.
+    pub fn new(root: usize, me: usize, n: usize, tag: Tag, chunks: Option<Vec<B>>) -> Self {
+        let chunks = chunks.map_or_else(Vec::new, |c| c.into_iter().map(Some).collect());
+        debug_assert!(me != root || chunks.len() == n);
+        Self { root, me, n, tag, chunks, next_dst: 0, result: None }
+    }
+}
+
+impl<B: Wire> Machine<B> for LinearScatter<B> {
+    type Output = B;
+
+    fn step(&mut self) -> Action<B> {
+        if self.me == self.root {
+            while self.next_dst < self.n {
+                let dst = self.next_dst;
+                self.next_dst += 1;
+                let msg = self.chunks[dst].take().expect("chunk per rank");
+                if dst == self.me {
+                    self.result = Some(msg);
+                    continue;
+                }
+                return Action::Send { to: dst, tag: self.tag, msg, bulk: false };
+            }
+            return Action::Done;
+        }
+        if self.result.is_none() {
+            return Action::Recv { from: self.root, tag: self.tag };
+        }
+        Action::Done
+    }
+
+    fn deliver(&mut self, _from: usize, _tag: Tag, msg: B) {
+        self.result = Some(msg);
+    }
+
+    fn finish(self) -> B {
+        self.result.expect("scatter chunk")
+    }
+}
+
+/// [`super::ScatterAlgo::Pipelined`] endpoint: the root streams each
+/// leaf a chunked transfer (inline header, pool-dispatched wire chunks)
+/// on one shared chunk-tag block; each leaf reassembles its own
+/// transfer.
+pub struct PipelinedScatter<B> {
+    root: usize,
+    me: usize,
+    n: usize,
+    tag: Tag,
+    policy: ChunkPolicy,
+    chunks: Vec<Option<B>>,
+    next_dst: usize,
+    outgoing: Option<B>,
+    out_len: usize,
+    sent_chunks: usize,
+    total: Option<u64>,
+    got_chunks: usize,
+    parts: Vec<B>,
+    result: Option<B>,
+}
+
+impl<B: Wire> PipelinedScatter<B> {
+    /// Endpoint for rank `me` of `n` scattering from `root` under
+    /// `policy`, on the chunk-tag block at `tag`. `chunks` is `Some`
+    /// (one per rank) on the root, `None` on leaves.
+    pub fn new(
+        root: usize,
+        me: usize,
+        n: usize,
+        tag: Tag,
+        policy: ChunkPolicy,
+        chunks: Option<Vec<B>>,
+    ) -> Self {
+        let chunks = chunks.map_or_else(Vec::new, |c| c.into_iter().map(Some).collect());
+        debug_assert!(me != root || chunks.len() == n);
+        Self {
+            root,
+            me,
+            n,
+            tag,
+            policy,
+            chunks,
+            next_dst: 0,
+            outgoing: None,
+            out_len: 0,
+            sent_chunks: 0,
+            total: None,
+            got_chunks: 0,
+            parts: Vec::new(),
+            result: None,
+        }
+    }
+}
+
+impl<B: Wire> Machine<B> for PipelinedScatter<B> {
+    type Output = B;
+
+    fn step(&mut self) -> Action<B> {
+        if self.me == self.root {
+            loop {
+                if self.outgoing.is_some() {
+                    if self.sent_chunks < self.policy.n_chunks(self.out_len) {
+                        let i = self.sent_chunks;
+                        self.sent_chunks += 1;
+                        let off = i * self.policy.chunk_bytes;
+                        let len = self.policy.chunk_bytes.min(self.out_len - off);
+                        let msg = self.outgoing.as_ref().expect("in transfer").slice(off, len);
+                        let dst = self.next_dst - 1;
+                        let tag = self.tag + 1 + i as Tag;
+                        return Action::Send { to: dst, tag, msg, bulk: true };
+                    }
+                    self.outgoing = None;
+                }
+                if self.next_dst >= self.n {
+                    return Action::Done;
+                }
+                let dst = self.next_dst;
+                self.next_dst += 1;
+                let out = self.chunks[dst].take().expect("chunk per rank");
+                if dst == self.me {
+                    self.result = Some(out);
+                    continue;
+                }
+                self.out_len = out.wire_len();
+                self.outgoing = Some(out);
+                self.sent_chunks = 0;
+                let msg = B::header(self.out_len as u64);
+                return Action::Send { to: dst, tag: self.tag, msg, bulk: false };
+            }
+        }
+        match self.total {
+            None => Action::Recv { from: self.root, tag: self.tag },
+            Some(total) => {
+                if self.got_chunks < self.policy.n_chunks(total as usize) {
+                    let tag = self.tag + 1 + self.got_chunks as Tag;
+                    return Action::Recv { from: self.root, tag };
+                }
+                if self.result.is_none() {
+                    self.result = Some(B::concat(std::mem::take(&mut self.parts)));
+                }
+                Action::Done
+            }
+        }
+    }
+
+    fn deliver(&mut self, _from: usize, _tag: Tag, msg: B) {
+        if self.total.is_none() {
+            self.total = Some(msg.header_total());
+        } else {
+            self.parts.push(msg);
+            self.got_chunks += 1;
+        }
+    }
+
+    fn finish(self) -> B {
+        self.result.expect("scatter chunk")
+    }
+}
+
+/// The paper's N-scatter pattern (fig5): every rank roots one pipelined
+/// scatter of its row on its own chunk-tag block and concurrently
+/// drains the other `n - 1` roots' transfers, taking whichever header
+/// or next-needed chunk arrives first via [`Action::RecvAny`]. Chunks
+/// surface as [`Action::Chunk`] for transpose-on-arrival.
+pub struct NScatter<B> {
+    me: usize,
+    n: usize,
+    base: Tag,
+    policy: ChunkPolicy,
+    row: Vec<Option<B>>,
+    next_dst: usize,
+    outgoing: Option<B>,
+    out_len: usize,
+    sent_chunks: usize,
+    emitted_own: bool,
+    /// Per root: `None` until its header arrives, then
+    /// `(total_bytes, chunks_received)`.
+    progress: Vec<Option<(usize, usize)>>,
+    done_roots: usize,
+    pending: Option<(usize, usize, B)>,
+}
+
+impl<B: Wire> NScatter<B> {
+    /// Endpoint for rank `me` of `n` under `policy`. `base` is the
+    /// first of `n` consecutive [`CHUNK_TAG_SPAN`] blocks (root `r`
+    /// transfers on block `base + r * CHUNK_TAG_SPAN`); `row` is this
+    /// rank's per-destination chunks.
+    pub fn new(me: usize, n: usize, base: Tag, policy: ChunkPolicy, row: Vec<B>) -> Self {
+        assert_eq!(row.len(), n, "need one chunk per rank");
+        Self {
+            me,
+            n,
+            base,
+            policy,
+            row: row.into_iter().map(Some).collect(),
+            next_dst: 0,
+            outgoing: None,
+            out_len: 0,
+            sent_chunks: 0,
+            emitted_own: false,
+            progress: (0..n).map(|_| None).collect(),
+            done_roots: 0,
+            pending: None,
+        }
+    }
+
+    fn root_tag(&self, root: usize) -> Tag {
+        self.base + root as Tag * CHUNK_TAG_SPAN
+    }
+}
+
+impl<B: Wire> Machine<B> for NScatter<B> {
+    type Output = ();
+
+    fn step(&mut self) -> Action<B> {
+        loop {
+            if let Some((src, off, msg)) = self.pending.take() {
+                return Action::Chunk { src, off, msg };
+            }
+            if !self.emitted_own {
+                self.emitted_own = true;
+                let own = self.row[self.me].take().expect("own chunk");
+                return Action::Chunk { src: self.me, off: 0, msg: own };
+            }
+            if self.outgoing.is_some() {
+                if self.sent_chunks < self.policy.n_chunks(self.out_len) {
+                    let i = self.sent_chunks;
+                    self.sent_chunks += 1;
+                    let off = i * self.policy.chunk_bytes;
+                    let len = self.policy.chunk_bytes.min(self.out_len - off);
+                    let msg = self.outgoing.as_ref().expect("in transfer").slice(off, len);
+                    let dst = self.next_dst - 1;
+                    let tag = self.root_tag(self.me) + 1 + i as Tag;
+                    return Action::Send { to: dst, tag, msg, bulk: true };
+                }
+                self.outgoing = None;
+            }
+            if self.next_dst < self.n {
+                let dst = self.next_dst;
+                self.next_dst += 1;
+                if dst == self.me {
+                    continue;
+                }
+                let out = self.row[dst].take().expect("chunk unsent");
+                self.out_len = out.wire_len();
+                self.outgoing = Some(out);
+                self.sent_chunks = 0;
+                let msg = B::header(self.out_len as u64);
+                return Action::Send { to: dst, tag: self.root_tag(self.me), msg, bulk: false };
+            }
+            if self.done_roots == self.n - 1 {
+                return Action::Done;
+            }
+            let mut want = Vec::new();
+            for root in 0..self.n {
+                if root == self.me {
+                    continue;
+                }
+                match self.progress[root] {
+                    None => want.push((root, self.root_tag(root))),
+                    Some((total, got)) => {
+                        if got < self.policy.n_chunks(total) {
+                            want.push((root, self.root_tag(root) + 1 + got as Tag));
+                        }
+                    }
+                }
+            }
+            return Action::RecvAny(want);
+        }
+    }
+
+    fn deliver(&mut self, from: usize, tag: Tag, msg: B) {
+        match self.progress[from] {
+            None => {
+                debug_assert_eq!(tag, self.root_tag(from));
+                let total = msg.header_total() as usize;
+                self.progress[from] = Some((total, 0));
+                if self.policy.n_chunks(total) == 0 {
+                    self.done_roots += 1;
+                }
+            }
+            Some((total, got)) => {
+                debug_assert_eq!(tag, self.root_tag(from) + 1 + got as Tag);
+                self.pending = Some((from, got * self.policy.chunk_bytes, msg));
+                self.progress[from] = Some((total, got + 1));
+                if got + 1 == self.policy.n_chunks(total) {
+                    self.done_roots += 1;
+                }
+            }
+        }
+    }
+
+    fn finish(self) {}
+}
+
+/// Run `machine` against the live fabric through `comm`: inline sends
+/// go straight out, bulk sends are dispatched on the communicator's
+/// chunk pool and drained before finishing, and chunk emissions stream
+/// through `on_chunk(src, off, chunk)`.
+pub(crate) fn drive<M, F>(comm: &Communicator, mut machine: M, mut on_chunk: F) -> M::Output
+where
+    M: Machine<Payload>,
+    F: FnMut(usize, usize, Payload),
+{
+    let mut pending: Vec<TaskFuture<()>> = Vec::new();
+    loop {
+        match machine.step() {
+            Action::Send { to, tag, msg, bulk } => {
+                if bulk {
+                    pending.push(send_pooled(comm, to, tag, msg));
+                } else {
+                    comm.send(to, tag, msg);
+                }
+            }
+            Action::Recv { from, tag } => {
+                let msg = comm.recv(from, tag);
+                machine.deliver(from, tag, msg);
+            }
+            Action::RecvAny(want) => {
+                let (from, tag, msg) = 'poll: loop {
+                    for &(from, tag) in &want {
+                        if let Some(msg) = comm.try_recv(from, tag) {
+                            break 'poll (from, tag, msg);
+                        }
+                    }
+                    std::thread::yield_now();
+                };
+                machine.deliver(from, tag, msg);
+            }
+            Action::Chunk { src, off, msg } => on_chunk(src, off, msg),
+            Action::Done => break,
+        }
+    }
+    for f in pending {
+        f.get();
+    }
+    machine.finish()
+}
+
+/// Queue one already-sliced message to communicator rank `dest` on the
+/// chunk pool, returning its completion future — the bulk-send
+/// primitive behind every pipelined chunk transfer.
+pub(crate) fn send_pooled(
+    comm: &Communicator,
+    dest: usize,
+    tag: Tag,
+    payload: Payload,
+) -> TaskFuture<()> {
+    let fabric = Arc::clone(comm.fabric());
+    let src = comm.my_global();
+    let dest = comm.global_rank(dest);
+    comm.chunk_pool().spawn(move || {
+        fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, payload));
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::runtime::Cluster;
+    use crate::parcelport::PortKind;
+
+    #[test]
+    fn payload_wire_framing_roundtrips() {
+        let blocks = vec![
+            (3u32, Payload::new(vec![1, 2, 3])),
+            (7u32, Payload::new(vec![])),
+            (1u32, Payload::new(vec![9; 5])),
+        ];
+        let frame = Payload::frame_indexed(&blocks);
+        let back = frame.unframe_indexed();
+        assert_eq!(back.len(), 3);
+        for ((j, b), (j2, b2)) in blocks.iter().zip(&back) {
+            assert_eq!(j, j2);
+            assert_eq!(b.as_bytes(), b2.as_bytes());
+        }
+
+        let parts = vec![Payload::new(vec![4, 5]), Payload::new(vec![]), Payload::new(vec![6])];
+        let frame = Payload::frame_list(&parts);
+        let back = frame.unframe_list();
+        assert_eq!(back.len(), 3);
+        for (p, p2) in parts.iter().zip(&back) {
+            assert_eq!(p.as_bytes(), p2.as_bytes());
+        }
+
+        let h = Payload::header(0xDEAD_BEEF_u64);
+        assert_eq!(h.len(), 8);
+        assert_eq!(h.header_total(), 0xDEAD_BEEF_u64);
+    }
+
+    #[test]
+    fn payload_concat_is_zero_copy_for_single_part() {
+        let p = Payload::new(vec![1, 2, 3, 4]);
+        let single = Wire::concat(vec![p.clone()]);
+        assert!(p.shares_storage(&single));
+        let empty: Payload = Wire::concat(Vec::new());
+        assert!(empty.is_empty());
+        let multi = Wire::concat(vec![p.slice(0, 2), p.slice(2, 2)]);
+        assert_eq!(multi.as_bytes(), p.as_bytes());
+    }
+
+    /// The N-scatter machine — the simulator's fig5 workload — must
+    /// also run on the live fabric, proving sim and real runs share one
+    /// protocol implementation (and exercising the driver's `RecvAny`
+    /// polling arm).
+    #[test]
+    fn n_scatter_machine_runs_on_the_live_fabric() {
+        let n = 4;
+        for kind in [PortKind::Lci, PortKind::Mpi] {
+            let cluster = Cluster::new(n, kind, None).unwrap();
+            let got = cluster.run(|ctx| {
+                let comm = Communicator::from_ctx(ctx);
+                comm.set_chunk_policy(ChunkPolicy::new(5, 2));
+                let base = comm.alloc_chunk_tags(n);
+                let row: Vec<Payload> =
+                    (0..n).map(|dst| Payload::new(vec![(ctx.rank * n + dst) as u8; 13])).collect();
+                let sm = NScatter::new(ctx.rank, n, base, comm.chunk_policy(), row);
+                let mut parts: Vec<Vec<Payload>> = (0..n).map(|_| Vec::new()).collect();
+                drive(&comm, sm, |src, _off, chunk| parts[src].push(chunk));
+                parts
+                    .into_iter()
+                    .map(|ps| Wire::concat(ps).as_bytes().to_vec())
+                    .collect::<Vec<_>>()
+            });
+            for (rank, rows) in got.iter().enumerate() {
+                for (src, bytes) in rows.iter().enumerate() {
+                    assert_eq!(
+                        bytes,
+                        &vec![(src * n + rank) as u8; 13],
+                        "{kind:?} rank {rank} src {src}"
+                    );
+                }
+            }
+        }
+    }
+}

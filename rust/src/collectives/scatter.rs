@@ -14,6 +14,7 @@
 //! instead of serializing one monolithic message per rank.
 
 use super::comm::Communicator;
+use super::protocol;
 use crate::hpx::parcel::{Payload, Tag};
 
 /// Algorithm selector for [`Communicator::scatter_with_algo`].
@@ -74,21 +75,15 @@ impl Communicator {
     ) -> Payload {
         assert!(root < self.size(), "root {root} out of range");
         if self.rank() == root {
-            let chunks = chunks.expect("root must provide chunks");
-            assert_eq!(chunks.len(), self.size(), "need exactly one chunk per rank");
-            let mut mine = None;
-            for (dst, chunk) in chunks.into_iter().enumerate() {
-                if dst == self.rank() {
-                    mine = Some(chunk); // root's own chunk never hits the fabric
-                } else {
-                    self.send(dst, tag, chunk);
-                }
-            }
-            mine.expect("root chunk present")
+            let c = chunks.as_ref().expect("root must provide chunks");
+            assert_eq!(c.len(), self.size(), "need exactly one chunk per rank");
         } else {
             assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
-            self.recv(root, tag)
         }
+        // The root's own chunk never hits the fabric — the machine hands
+        // it straight back.
+        let sm = protocol::LinearScatter::new(root, self.rank(), self.size(), tag, chunks);
+        protocol::drive(self, sm, |_, _, _| {})
     }
 
     /// Pre-allocate tags for `k` upcoming scatters (SPMD: all ranks call
@@ -124,27 +119,24 @@ impl Communicator {
     ) -> Payload {
         assert!(root < self.size(), "root {root} out of range");
         if self.rank() == root {
-            let chunks = chunks.expect("root must provide chunks");
-            assert_eq!(chunks.len(), self.size(), "need exactly one chunk per rank");
-            let mut mine = None;
-            let mut pending = Vec::new();
-            for (dst, chunk) in chunks.into_iter().enumerate() {
-                if dst == self.rank() {
-                    mine = Some(chunk); // root's own chunk never hits the fabric
-                } else {
-                    // Tag matching is per destination mailbox, so every
-                    // destination shares the same chunk-tag block.
-                    pending.append(&mut self.send_chunked(dst, tag, chunk));
-                }
-            }
-            for f in pending {
-                f.get();
-            }
-            mine.expect("root chunk present")
+            let c = chunks.as_ref().expect("root must provide chunks");
+            assert_eq!(c.len(), self.size(), "need exactly one chunk per rank");
         } else {
             assert!(chunks.is_none(), "non-root rank {} passed chunks", self.rank());
-            self.recv_chunked(root, tag)
         }
+        // Tag matching is per destination mailbox, so every destination
+        // shares the same chunk-tag block; the root's own chunk never
+        // hits the fabric. The driver drains the pooled chunk sends
+        // before returning.
+        let sm = protocol::PipelinedScatter::new(
+            root,
+            self.rank(),
+            self.size(),
+            tag,
+            self.chunk_policy(),
+            chunks,
+        );
+        protocol::drive(self, sm, |_, _, _| {})
     }
 
     /// Pre-allocate chunk-tag blocks for `k` upcoming pipelined scatters

@@ -54,6 +54,17 @@ pub const fn shadow_span(size: usize) -> Tag {
     (size as Tag + 2) * CHUNK_TAG_SPAN
 }
 
+/// Tags reserved per plain collective invocation on a `size`-rank
+/// communicator: room for every per-round / per-peer tag an algorithm
+/// derives from the block base. Centralized here because two allocators
+/// advance by this span in lock-step — the live
+/// [`crate::collectives::Communicator`] counter and the event-engine
+/// simulator's replica allocator
+/// ([`crate::simnet::collective_sim`]) — and they must never drift.
+pub const fn collective_span(size: usize) -> Tag {
+    4 * size as Tag + 8
+}
+
 // A split space subdivides into whole chunk blocks.
 const _: () = assert!(SPLIT_TAG_SPAN % CHUNK_TAG_SPAN == 0);
 // A split space holds at least 2^16 chunk blocks, so a sub-communicator

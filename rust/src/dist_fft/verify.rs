@@ -256,6 +256,23 @@ pub fn rel_error(a: &[Complex32], b: &[Complex32]) -> f64 {
     crate::util::testkit::rel_l2_error(&fa, &fb)
 }
 
+/// Byte-level all-to-all oracle: `rows[src][dst]` is what `src` sends
+/// to `dst`; the result's `[dst][src]` is what `dst` must hold — a
+/// plain matrix transpose. Every simulated all-to-all
+/// ([`crate::simnet::collective_sim`]) is checked bitwise against this,
+/// whatever delays, reorders, or faults the adversary injected.
+pub fn oracle_all_to_all(rows: &[Vec<Vec<u8>>]) -> Vec<Vec<Vec<u8>>> {
+    let n = rows.len();
+    (0..n).map(|dst| (0..n).map(|src| rows[src][dst].clone()).collect()).collect()
+}
+
+/// Byte-level scatter oracle: rank `r` ends up holding exactly the
+/// root's `r`-th chunk (as a single-entry row, matching the simulated
+/// report's shape).
+pub fn oracle_scatter(root_row: &[Vec<u8>]) -> Vec<Vec<Vec<u8>>> {
+    root_row.iter().map(|chunk| vec![chunk.clone()]).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -18,7 +18,7 @@
 //!
 //! Run `repro help` for flags.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Error, Result};
 use hpx_fft::baseline::fftw_like::{self, FftwLikeConfig};
 use hpx_fft::bench_harness::{fig3, fig45, fig6, fig7, load, runner::measure};
 use hpx_fft::cli::Args;
@@ -79,6 +79,16 @@ USAGE:
                               [--chunk-bytes N] [--inflight N]
   repro simulate [--grid N] [--port tcp|mpi|lci] [--domain complex|real]
                  [--variant all-to-all|scatter|fftw3] [--nodes-list 1,2,4,8,16]
+  repro simulate --engine event
+                 [--figs fig4,fig5,fig6] [--port tcp|mpi|lci]
+                 [--localities N | --localities-list 512,1024,2048]
+                 [--seed N] [--adversary none|light|hostile]
+                 [--faults delay,dup,drop,slow] [--out DIR]
+                 (discrete-event engine: runs the real collective state
+                  machines at 512-4096 simulated localities under a
+                  seeded adversary, prints per-run trace hashes,
+                  slope-checks fig4/5/6 against the closed-form model,
+                  and writes sim_scaling.csv with --out)
   repro serve    [--nodes N] [--port tcp|mpi|lci] [--queue-limit N]
                  [--inflight-jobs N]
                  (resident multi-tenant FFT service; reads one job per
@@ -447,9 +457,16 @@ fn cmd_bench_fig7(args: &Args) -> Result<()> {
 /// Direct access to the cluster-scale DES: per-node-count makespan,
 /// comm-blocked time, and wire volume for one system (the numbers behind
 /// the Figs. 4/5 series, with the breakdown the figures hide).
+/// `--engine event` switches to the discrete-event engine, which runs
+/// the real protocol state machines under a seeded adversary.
 fn cmd_simulate(args: &Args) -> Result<()> {
     use hpx_fft::simnet::fft_model::{predict_fft, FftModelParams, ModelVariant};
-    args.check_known(&["grid", "port", "variant", "domain", "nodes-list"])?;
+    match args.get("engine").unwrap_or("closed-form") {
+        "event" => return cmd_simulate_event(args),
+        "closed-form" => {}
+        other => bail!("unknown --engine {other:?} (closed-form|event)"),
+    }
+    args.check_known(&["engine", "grid", "port", "variant", "domain", "nodes-list"])?;
     let grid: usize = args.get_or("grid", 1usize << 14)?;
     let port: PortKind = args.get_or("port", PortKind::Lci)?;
     let domain: Domain = args.get_or("domain", Domain::Complex)?;
@@ -503,6 +520,70 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+/// The `--engine event` branch of `repro simulate`: the real collective
+/// state machines on the deterministic event engine at cluster scale,
+/// with seeded adversarial schedules and fault injection.
+fn cmd_simulate_event(args: &Args) -> Result<()> {
+    use hpx_fft::bench_harness::sim_scaling::{self, SimFig, SimScalingOpts};
+    use hpx_fft::simnet::AdversaryConfig;
+    args.check_known(&[
+        "engine", "port", "figs", "localities", "localities-list", "seed", "adversary", "faults",
+        "out",
+    ])?;
+    let port: PortKind = args.get_or("port", PortKind::Lci)?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let adversary = match (args.get("faults"), args.get("adversary")) {
+        (Some(spec), _) => AdversaryConfig::from_fault_spec(spec, seed).map_err(Error::msg)?,
+        (None, Some(name)) => AdversaryConfig::preset(name, seed).map_err(Error::msg)?,
+        (None, None) => AdversaryConfig::none(seed),
+    };
+    let localities: Vec<usize> = match (args.get("localities-list"), args.get("localities")) {
+        (Some(list), _) => list
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|e| anyhow::anyhow!("--localities-list: {e}")))
+            .collect::<Result<_>>()?,
+        (None, Some(_)) => vec![args.get_or("localities", 1024usize)?],
+        (None, None) => vec![512, 1024, 2048],
+    };
+    let figs: Vec<SimFig> = match args.get("figs") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse().map_err(Error::msg))
+            .collect::<Result<_>>()?,
+        None => SimFig::ALL.to_vec(),
+    };
+    let opts = SimScalingOpts {
+        figs,
+        localities,
+        port,
+        adversary,
+        out_dir: args.get("out").map(|s| s.to_string()),
+    };
+    println!(
+        "event engine: localities {:?}, {port} port, seed {seed}, adversary \
+         delay{}%/dup{}%/drop{}%/slow{}%\n",
+        opts.localities,
+        adversary.delay_prob_pct,
+        adversary.dup_prob_pct,
+        adversary.drop_prob_pct,
+        adversary.slow_rank_pct
+    );
+    let rows = sim_scaling::run(&opts)?;
+    for r in &rows {
+        println!(
+            "trace {} @{} localities: {:016x}",
+            r.fig.name(),
+            r.localities,
+            r.stats.trace_hash
+        );
+    }
+    if opts.localities.len() >= 2 {
+        sim_scaling::validate_slopes(&rows, 0.5)?;
+        println!("\nslope check vs closed-form comm-only model: OK (tol 0.5 log2 units)");
+    }
     Ok(())
 }
 
@@ -636,6 +717,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_limit: args.get_or("queue-limit", 64usize)?,
         max_inflight: args.get_or("inflight-jobs", 4usize)?,
         job_tag_span: None,
+        fault: None,
     })?;
     println!(
         "fft service up: {} localities, {} port; one job per stdin line\n\

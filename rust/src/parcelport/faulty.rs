@@ -1,0 +1,222 @@
+//! A fault-injecting decorator over any parcelport.
+//!
+//! [`FaultyPort`] wraps an existing fabric and perturbs *timing* on the
+//! send path — seeded per-message delays ("delayed chunks") and a
+//! seeded subset of localities whose every send pays an extra charge
+//! ("slow ranks") — before delegating delivery untouched. It is the
+//! live-thread counterpart of the simulated adversary in
+//! [`crate::simnet::adversary`]: the event engine proves the protocol
+//! state machines correct under hostile schedules at cluster scale,
+//! while this decorator drives the *real* blocking/async code paths
+//! (service workers, chunk pools, split sub-communicators) through the
+//! same class of schedule perturbation on a handful of OS threads.
+//!
+//! The decorator never drops, duplicates, or reorders matched messages
+//! — the fabric underneath stays reliable — so anything built on top
+//! (in particular [`crate::runtime::FftService`] jobs) must still
+//! either complete or fail with a typed error, never hang. That is
+//! exactly what the service fault-injection tests assert, under the
+//! [`crate::util::testkit::with_watchdog`] bounded-wait helper.
+//!
+//! Decisions are drawn from [`Pcg32`] streams keyed by a message
+//! counter and by locality id, so a given spec replays the same fault
+//! *distribution* run-to-run; with live threads the counter-to-message
+//! assignment races, so (unlike the simnet engine) bit-identical
+//! schedules are not promised here.
+
+use super::{Parcelport, PortKind, PortStatsSnapshot};
+use crate::hpx::mailbox::Mailbox;
+use crate::hpx::parcel::{ActionId, LocalityId, Parcel, Payload, Tag};
+use crate::parcelport::cost::spin_for;
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Stream base for per-rank slow decisions (disjoint from the
+/// per-message streams, which start at 0).
+const RANK_STREAM: u64 = 1 << 41;
+
+/// What a [`FaultyPort`] injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Seed all decision streams are keyed from.
+    pub seed: u64,
+    /// Percent of sends that pay an extra delay.
+    pub delay_prob_pct: u32,
+    /// Maximum injected per-send delay, µs.
+    pub max_delay_us: u32,
+    /// Percent of localities marked slow.
+    pub slow_rank_pct: u32,
+    /// Extra charge on every send from a slow locality, µs.
+    pub slow_send_us: u32,
+}
+
+impl FaultSpec {
+    /// Delayed chunks only: 40% of sends pay up to 150 µs.
+    pub fn delayed_chunks(seed: u64) -> Self {
+        Self { seed, delay_prob_pct: 40, max_delay_us: 150, slow_rank_pct: 0, slow_send_us: 0 }
+    }
+
+    /// Slow ranks only: half the localities pay 200 µs per send.
+    pub fn slow_ranks(seed: u64) -> Self {
+        Self { seed, delay_prob_pct: 0, max_delay_us: 0, slow_rank_pct: 50, slow_send_us: 200 }
+    }
+
+    /// Both fault classes at once.
+    pub fn hostile(seed: u64) -> Self {
+        Self { seed, delay_prob_pct: 40, max_delay_us: 150, slow_rank_pct: 50, slow_send_us: 200 }
+    }
+}
+
+/// A parcelport decorator that injects seeded send-side delays.
+pub struct FaultyPort {
+    inner: Arc<dyn Parcelport>,
+    spec: FaultSpec,
+    slow: Vec<bool>,
+    next_msg: AtomicU64,
+    delays_injected: AtomicU64,
+}
+
+impl FaultyPort {
+    /// Decorate `inner` with the given fault spec.
+    pub fn new(inner: Arc<dyn Parcelport>, spec: FaultSpec) -> Self {
+        let slow = (0..inner.n_localities())
+            .map(|rank| {
+                let mut rng = Pcg32::with_stream(spec.seed, RANK_STREAM + rank as u64);
+                rng.next_below(100) < spec.slow_rank_pct
+            })
+            .collect();
+        Self { inner, spec, slow, next_msg: AtomicU64::new(0), delays_injected: AtomicU64::new(0) }
+    }
+
+    /// Decorate `inner` and erase to a fabric handle.
+    pub fn wrap(inner: Arc<dyn Parcelport>, spec: FaultSpec) -> Arc<dyn Parcelport> {
+        Arc::new(Self::new(inner, spec))
+    }
+
+    /// Localities marked slow by this spec's seed.
+    pub fn slow_ranks(&self) -> Vec<usize> {
+        self.slow.iter().enumerate().filter(|(_, &s)| s).map(|(r, _)| r).collect()
+    }
+
+    /// Sends that paid an injected delay so far.
+    pub fn delays_injected(&self) -> u64 {
+        self.delays_injected.load(Ordering::Relaxed)
+    }
+
+    /// Injected delay for message `id` sent from `src`, µs.
+    fn delay_us(&self, id: u64, src: LocalityId) -> u64 {
+        // Fixed draw order, mirroring the simnet adversary: roll, then
+        // amount — so the amount stream is stable even when the roll
+        // misses.
+        let mut rng = Pcg32::with_stream(self.spec.seed, id);
+        let roll = rng.next_below(100);
+        let amount = rng.next_below(self.spec.max_delay_us.max(1));
+        let mut us = 0u64;
+        if roll < self.spec.delay_prob_pct {
+            us += u64::from(amount);
+        }
+        if self.slow[src] {
+            us += u64::from(self.spec.slow_send_us);
+        }
+        us
+    }
+}
+
+impl Parcelport for FaultyPort {
+    fn kind(&self) -> PortKind {
+        self.inner.kind()
+    }
+
+    fn n_localities(&self) -> usize {
+        self.inner.n_localities()
+    }
+
+    fn send(&self, parcel: Parcel) {
+        let id = self.next_msg.fetch_add(1, Ordering::Relaxed);
+        let us = self.delay_us(id, parcel.src);
+        if us > 0 {
+            self.delays_injected.fetch_add(1, Ordering::Relaxed);
+            spin_for(Duration::from_micros(us));
+        }
+        self.inner.send(parcel);
+    }
+
+    fn recv(&self, at: LocalityId, src: LocalityId, action: ActionId, tag: Tag) -> Payload {
+        self.inner.recv(at, src, action, tag)
+    }
+
+    fn try_recv(
+        &self,
+        at: LocalityId,
+        src: LocalityId,
+        action: ActionId,
+        tag: Tag,
+    ) -> Option<Payload> {
+        self.inner.try_recv(at, src, action, tag)
+    }
+
+    fn stats(&self) -> PortStatsSnapshot {
+        self.inner.stats()
+    }
+
+    fn mailbox(&self, at: LocalityId) -> &Mailbox {
+        self.inner.mailbox(at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpx::parcel::actions;
+    use crate::parcelport::lci::LciParcelport;
+
+    fn fabric(n: usize) -> Arc<dyn Parcelport> {
+        Arc::new(LciParcelport::new(n, None))
+    }
+
+    #[test]
+    fn delivery_is_unchanged_under_faults() {
+        let port = FaultyPort::new(fabric(2), FaultSpec::hostile(3));
+        port.send(Parcel::new(0, 1, actions::P2P, 5, Payload::from_f32(&[1.25, -2.0])));
+        assert_eq!(port.recv(1, 0, actions::P2P, 5).to_f32(), vec![1.25, -2.0]);
+        assert!(port.try_recv(1, 0, actions::P2P, 5).is_none());
+    }
+
+    #[test]
+    fn slow_rank_selection_is_seeded_and_reproducible() {
+        let a = FaultyPort::new(fabric(8), FaultSpec::slow_ranks(9));
+        let b = FaultyPort::new(fabric(8), FaultSpec::slow_ranks(9));
+        assert_eq!(a.slow_ranks(), b.slow_ranks());
+        // 100% slow marks everyone; 0% marks no one.
+        let all = FaultyPort::new(
+            fabric(4),
+            FaultSpec { slow_rank_pct: 100, ..FaultSpec::slow_ranks(9) },
+        );
+        assert_eq!(all.slow_ranks(), vec![0, 1, 2, 3]);
+        let none = FaultyPort::new(fabric(4), FaultSpec::delayed_chunks(9));
+        assert!(none.slow_ranks().is_empty());
+    }
+
+    #[test]
+    fn per_message_delay_decisions_are_deterministic() {
+        let a = FaultyPort::new(fabric(2), FaultSpec::hostile(77));
+        let b = FaultyPort::new(fabric(2), FaultSpec::hostile(77));
+        for id in 0..200 {
+            assert_eq!(a.delay_us(id, 0), b.delay_us(id, 0), "msg {id}");
+            assert_eq!(a.delay_us(id, 1), b.delay_us(id, 1), "msg {id}");
+        }
+        assert!((0..200).any(|id| a.delay_us(id, 0) > 0), "hostile spec must inject something");
+    }
+
+    #[test]
+    fn injected_delays_are_counted() {
+        let spec = FaultSpec { delay_prob_pct: 100, ..FaultSpec::delayed_chunks(1) };
+        let port = FaultyPort::new(fabric(2), spec);
+        for i in 0..10 {
+            port.send(Parcel::new(0, 1, actions::P2P, i, Payload::new(vec![0u8; 8])));
+        }
+        assert_eq!(port.delays_injected(), 10);
+    }
+}

@@ -17,6 +17,7 @@
 //! cluster-scale predictions use [`crate::simnet`] instead.
 
 pub mod cost;
+pub mod faulty;
 pub mod lci;
 pub mod mpi;
 pub mod scoped;
@@ -26,6 +27,7 @@ pub mod tcp;
 use crate::hpx::mailbox::Mailbox;
 use crate::hpx::parcel::{ActionId, LocalityId, Parcel, Payload, Tag};
 pub use cost::{CostModel, NetModel};
+pub use faulty::{FaultSpec, FaultyPort};
 pub use scoped::ScopedPort;
 pub use stats::{PortStats, PortStatsSnapshot};
 

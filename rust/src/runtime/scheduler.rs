@@ -57,7 +57,9 @@ use crate::dist_fft::{TransformReport, TransformRequest, TransformTimings};
 use crate::fft::complex::Complex32;
 use crate::hpx::parcel::Tag;
 use crate::metrics::RunStats;
-use crate::parcelport::{self, NetModel, Parcelport, PortKind, PortStats, PortStatsSnapshot};
+use crate::parcelport::{
+    self, FaultSpec, FaultyPort, NetModel, Parcelport, PortKind, PortStats, PortStatsSnapshot,
+};
 use crate::task::{Promise, ThreadPool};
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -81,6 +83,10 @@ pub struct ServiceConfig {
     pub max_inflight: usize,
     /// Tag-space grant per job (`None`: the default split span, 2⁴⁸).
     pub job_tag_span: Option<Tag>,
+    /// Optional fault injection on the resident fabric
+    /// ([`FaultyPort`] decorator: seeded delayed chunks and slow
+    /// ranks). Jobs must still complete or fail typed — never hang.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for ServiceConfig {
@@ -94,6 +100,7 @@ impl Default for ServiceConfig {
             queue_limit: 64,
             max_inflight: 4,
             job_tag_span: None,
+            fault: None,
         }
     }
 }
@@ -191,6 +198,10 @@ impl FftService {
             anyhow::ensure!(span > 0, "job_tag_span must be positive");
         }
         let fabric = parcelport::build(config.port, config.localities, config.net)?;
+        let fabric: Arc<dyn Parcelport> = match config.fault {
+            Some(spec) => FaultyPort::wrap(fabric, spec),
+            None => fabric,
+        };
         let n = config.localities;
         let shared = Arc::new(Shared {
             config,
@@ -766,6 +777,65 @@ mod tests {
         assert!(err.message.contains("tag space exhausted"), "{err}");
         let m = svc.shutdown();
         assert_eq!(m[0].failed, 2);
+    }
+
+    #[test]
+    fn jobs_complete_over_a_fault_injected_fabric() {
+        use crate::util::testkit::with_watchdog;
+        use std::time::Duration;
+        // Hostile fabric: 40% of sends delayed up to 150 µs, half the
+        // localities slowed 200 µs per send. Delivery stays reliable,
+        // so every job must still complete (bitwise-correct) — and must
+        // do so within the watchdog bound, never hang.
+        let metrics = with_watchdog("faulty-fabric jobs", Duration::from_secs(120), || {
+            let svc = FftService::new(ServiceConfig {
+                localities: 4,
+                fault: Some(crate::parcelport::FaultSpec::hostile(11)),
+                ..ServiceConfig::default()
+            })
+            .unwrap();
+            let single = small_plane(4).collect_outputs(true).build().unwrap().run().unwrap();
+            let handles: Vec<_> = (0..3)
+                .map(|_| svc.submit("t", small_plane(4).collect_outputs(true)).unwrap())
+                .collect();
+            for h in handles {
+                let out = h.wait().unwrap();
+                assert_eq!(
+                    out.report.outputs,
+                    single.outputs,
+                    "faults perturb timing, never the math"
+                );
+            }
+            svc.shutdown()
+        });
+        assert_eq!(metrics[0].completed, 3);
+        assert_eq!(metrics[0].failed, 0);
+    }
+
+    #[test]
+    fn fault_injected_job_failure_is_typed_not_a_hang() {
+        use crate::collectives::tags::CHUNK_TAG_SPAN;
+        use crate::util::testkit::with_watchdog;
+        use std::time::Duration;
+        // Combine the hostile fabric with a starved per-job tag budget:
+        // the job dies of tag exhaustion *while* sends are being
+        // delayed. The failure must surface as a typed JobError within
+        // the watchdog bound — the delayed schedule must not convert a
+        // clean lock-step panic into a wedged peer.
+        let (err, metrics) =
+            with_watchdog("faulty-fabric failure", Duration::from_secs(120), || {
+                let svc = FftService::new(ServiceConfig {
+                    localities: 2,
+                    job_tag_span: Some(CHUNK_TAG_SPAN),
+                    fault: Some(crate::parcelport::FaultSpec::delayed_chunks(23)),
+                    ..ServiceConfig::default()
+                })
+                .unwrap();
+                let err = svc.submit("t", small_plane(2)).unwrap().wait().unwrap_err();
+                (err, svc.shutdown())
+            });
+        assert!(err.message.contains("tag space exhausted"), "{err}");
+        assert_eq!((metrics[0].failed, metrics[0].completed), (1, 0));
     }
 
     #[test]

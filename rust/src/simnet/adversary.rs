@@ -1,0 +1,237 @@
+//! Seeded adversarial schedules for the discrete-event engine.
+//!
+//! The adversary perturbs a simulation run — extra per-message delays,
+//! duplicate deliveries, first-transmission drops, and slow ranks —
+//! while staying **bit-reproducible from its seed**. Every decision is
+//! drawn from a PCG stream keyed by `(seed, message id)` or
+//! `(seed, rank)`, never from a shared sequential stream, so the plan
+//! for a message does not depend on the order messages happen to be
+//! posted in. Two runs with the same seed and configuration therefore
+//! produce the same perturbations, the same event order, and the same
+//! trace hash.
+
+use super::components::Tick;
+use crate::util::rng::Pcg32;
+
+/// Stream-key offset separating per-rank draws from per-message draws
+/// (message ids are sequential from zero and never reach 2^40).
+const RANK_STREAM_BASE: u64 = 1 << 40;
+
+/// What the adversary does to one message's delivery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MsgPlan {
+    /// Extra latency added after the modeled arrival time.
+    pub extra_delay: Tick,
+    /// If set, a duplicate copy arrives this many ticks after the
+    /// original (the engine must drop it exactly once).
+    pub duplicate_after: Option<Tick>,
+    /// The first transmission is lost; the sender's retransmission
+    /// timer recovers it.
+    pub drop_first: bool,
+}
+
+impl MsgPlan {
+    /// The no-perturbation plan.
+    pub fn benign() -> Self {
+        Self { extra_delay: 0, duplicate_after: None, drop_first: false }
+    }
+}
+
+/// Adversary configuration: seed plus perturbation intensities.
+/// Probabilities are integer percentages so configurations hash and
+/// compare exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdversaryConfig {
+    /// Seed all decision streams are keyed from.
+    pub seed: u64,
+    /// Percent of messages that receive an extra delivery delay.
+    pub delay_prob_pct: u32,
+    /// Maximum extra delay, in microseconds.
+    pub max_delay_us: u32,
+    /// Percent of messages delivered twice.
+    pub dup_prob_pct: u32,
+    /// Percent of messages whose first transmission is dropped.
+    pub drop_prob_pct: u32,
+    /// Percent of ranks that run slow.
+    pub slow_rank_pct: u32,
+    /// Software-time multiplier applied to slow ranks.
+    pub slow_factor: f64,
+}
+
+impl AdversaryConfig {
+    /// No perturbations at all: the engine reproduces the closed-form
+    /// model's schedule exactly.
+    pub fn none(seed: u64) -> Self {
+        Self {
+            seed,
+            delay_prob_pct: 0,
+            max_delay_us: 0,
+            dup_prob_pct: 0,
+            drop_prob_pct: 0,
+            slow_rank_pct: 0,
+            slow_factor: 1.0,
+        }
+    }
+
+    /// Mild jitter: occasional delays and reorders, no faults.
+    pub fn light(seed: u64) -> Self {
+        Self {
+            seed,
+            delay_prob_pct: 25,
+            max_delay_us: 40,
+            dup_prob_pct: 0,
+            drop_prob_pct: 0,
+            slow_rank_pct: 0,
+            slow_factor: 1.0,
+        }
+    }
+
+    /// Everything at once: heavy delays, duplicates, drops, and slow
+    /// ranks. The fuzz matrix's default.
+    pub fn hostile(seed: u64) -> Self {
+        Self {
+            seed,
+            delay_prob_pct: 60,
+            max_delay_us: 200,
+            dup_prob_pct: 15,
+            drop_prob_pct: 10,
+            slow_rank_pct: 25,
+            slow_factor: 4.0,
+        }
+    }
+
+    /// Look up a named preset (`none`, `light`, `hostile`).
+    pub fn preset(name: &str, seed: u64) -> Result<Self, String> {
+        match name {
+            "none" => Ok(Self::none(seed)),
+            "light" => Ok(Self::light(seed)),
+            "hostile" => Ok(Self::hostile(seed)),
+            other => Err(format!("unknown adversary preset '{other}' (none|light|hostile)")),
+        }
+    }
+
+    /// Enable individual fault classes from a comma-separated spec, e.g.
+    /// `--faults drop,slow`. Classes: `delay`, `dup`, `drop`, `slow`.
+    /// Starts from [`AdversaryConfig::none`] and switches each named
+    /// class on at its [`AdversaryConfig::hostile`] intensity.
+    pub fn from_fault_spec(spec: &str, seed: u64) -> Result<Self, String> {
+        let hostile = Self::hostile(seed);
+        let mut cfg = Self::none(seed);
+        for class in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            match class {
+                "delay" => {
+                    cfg.delay_prob_pct = hostile.delay_prob_pct;
+                    cfg.max_delay_us = hostile.max_delay_us;
+                }
+                "dup" => cfg.dup_prob_pct = hostile.dup_prob_pct,
+                "drop" => cfg.drop_prob_pct = hostile.drop_prob_pct,
+                "slow" => {
+                    cfg.slow_rank_pct = hostile.slow_rank_pct;
+                    cfg.slow_factor = hostile.slow_factor;
+                }
+                other => {
+                    return Err(format!("unknown fault class '{other}' (delay|dup|drop|slow)"))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The perturbation plan for message `msg_id`. Pure function of
+    /// `(seed, msg_id)` — independent of posting order.
+    pub fn plan(&self, msg_id: u64) -> MsgPlan {
+        let mut rng = Pcg32::with_stream(self.seed, msg_id);
+        // Always draw in a fixed order so a plan depends only on the
+        // configuration values, not on which gates happen to be open.
+        let delay_roll = rng.next_below(100);
+        let delay_ticks = rng.next_below(self.max_delay_us.saturating_mul(1000).max(1)) as Tick;
+        let dup_roll = rng.next_below(100);
+        let dup_after = 1 + rng.next_below(5_000) as Tick;
+        let drop_roll = rng.next_below(100);
+
+        MsgPlan {
+            extra_delay: if delay_roll < self.delay_prob_pct { delay_ticks } else { 0 },
+            duplicate_after: (dup_roll < self.dup_prob_pct).then_some(dup_after),
+            drop_first: drop_roll < self.drop_prob_pct,
+        }
+    }
+
+    /// The software-time multiplier for `rank` (1.0 unless the rank is
+    /// chosen as slow). Pure function of `(seed, rank)`.
+    pub fn slow_factor_for(&self, rank: usize) -> f64 {
+        if self.slow_rank_pct == 0 {
+            return 1.0;
+        }
+        let mut rng = Pcg32::with_stream(self.seed, RANK_STREAM_BASE + rank as u64);
+        if rng.next_below(100) < self.slow_rank_pct {
+            self.slow_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::components::us_to_ticks;
+
+    #[test]
+    fn plans_are_reproducible_and_order_independent() {
+        let adv = AdversaryConfig::hostile(42);
+        let forward: Vec<MsgPlan> = (0..64).map(|id| adv.plan(id)).collect();
+        let backward: Vec<MsgPlan> = (0..64).rev().map(|id| adv.plan(id)).collect();
+        for (i, p) in forward.iter().enumerate() {
+            assert_eq!(*p, backward[63 - i], "msg {i}");
+        }
+        // And a different seed actually changes something.
+        let other = AdversaryConfig::hostile(43);
+        assert!((0..64).any(|id| adv.plan(id) != other.plan(id)));
+    }
+
+    #[test]
+    fn none_preset_is_benign() {
+        let adv = AdversaryConfig::none(7);
+        for id in 0..32 {
+            assert_eq!(adv.plan(id), MsgPlan::benign());
+        }
+        for rank in 0..32 {
+            assert_eq!(adv.slow_factor_for(rank), 1.0);
+        }
+    }
+
+    #[test]
+    fn hostile_preset_exercises_every_class() {
+        let adv = AdversaryConfig::hostile(1);
+        let plans: Vec<MsgPlan> = (0..256).map(|id| adv.plan(id)).collect();
+        assert!(plans.iter().any(|p| p.extra_delay > 0), "no delays drawn");
+        assert!(plans.iter().any(|p| p.duplicate_after.is_some()), "no dups drawn");
+        assert!(plans.iter().any(|p| p.drop_first), "no drops drawn");
+        assert!((0..64).any(|r| adv.slow_factor_for(r) > 1.0), "no slow ranks drawn");
+        assert!((0..64).any(|r| adv.slow_factor_for(r) == 1.0), "all ranks slow");
+    }
+
+    #[test]
+    fn fault_spec_parses_classes() {
+        let cfg = AdversaryConfig::from_fault_spec("drop,slow", 9).unwrap();
+        assert!(cfg.drop_prob_pct > 0 && cfg.slow_rank_pct > 0);
+        assert_eq!(cfg.dup_prob_pct, 0);
+        assert_eq!(cfg.delay_prob_pct, 0);
+        assert_eq!(
+            AdversaryConfig::from_fault_spec("", 9).unwrap(),
+            AdversaryConfig::none(9)
+        );
+        assert!(AdversaryConfig::from_fault_spec("gamma-rays", 9).is_err());
+        assert!(AdversaryConfig::preset("hostile", 3).is_ok());
+        assert!(AdversaryConfig::preset("cosmic", 3).is_err());
+    }
+
+    #[test]
+    fn delay_amounts_respect_the_bound() {
+        let adv = AdversaryConfig::hostile(11);
+        let bound = us_to_ticks(adv.max_delay_us as f64);
+        for id in 0..512 {
+            assert!(adv.plan(id).extra_delay <= bound);
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Simulated cluster components: virtual time, rank CPUs, NICs, and the
+//! sized-or-bytes message body the protocol machines move through the
+//! event engine.
+//!
+//! Virtual time is integer nanoseconds ([`Tick`]) so that event ordering
+//! is exact — float timestamps would make heap order depend on rounding.
+//! The conversion helpers round to the nearest nanosecond, which keeps
+//! the engine's timings within 0.001 µs of the closed-form
+//! [`crate::simnet::sim`] model they mirror.
+
+use crate::collectives::protocol::Wire;
+use crate::util::bytes::get_u64;
+
+/// Virtual time in integer nanoseconds.
+pub type Tick = u64;
+
+/// Convert model microseconds to ticks (nearest nanosecond).
+pub fn us_to_ticks(us: f64) -> Tick {
+    (us * 1000.0).round() as Tick
+}
+
+/// Convert ticks back to microseconds for reporting.
+pub fn ticks_to_us(t: Tick) -> f64 {
+    t as f64 / 1000.0
+}
+
+/// Fold one value into a running trace hash (SplitMix64 finalizer).
+/// Used to fingerprint the exact event sequence of a simulation run:
+/// two runs are schedule-identical iff their folded hashes agree.
+pub fn fold_hash(h: u64, v: u64) -> u64 {
+    let mut x = h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// One simulated rank's CPU: a clock, blocked-time accounting, and the
+/// adversary's slow-rank factor applied to every software charge.
+#[derive(Clone, Copy, Debug)]
+pub struct RankCpu {
+    /// Current virtual time of this rank.
+    pub now: Tick,
+    /// Total time spent blocked waiting for arrivals.
+    pub blocked: Tick,
+    /// Software-cost multiplier (1.0 = nominal; the adversary marks
+    /// slow ranks with a factor > 1).
+    pub slow: f64,
+}
+
+impl RankCpu {
+    /// A CPU at time zero with the given slow factor.
+    pub fn new(slow: f64) -> Self {
+        Self { now: 0, blocked: 0, slow }
+    }
+
+    /// Charge `us` microseconds of software time, scaled by the slow
+    /// factor.
+    pub fn charge_us(&mut self, us: f64) {
+        self.now += us_to_ticks(us * self.slow);
+    }
+
+    /// Advance the clock to `t` if it is in the future, accounting the
+    /// gap as blocked time.
+    pub fn wait_until(&mut self, t: Tick) {
+        if t > self.now {
+            self.blocked += t - self.now;
+            self.now = t;
+        }
+    }
+}
+
+/// One simulated rank's NIC: store-and-forward link ends. A transfer
+/// holds the sender's egress and the receiver's ingress for its full
+/// wire time — the contention model that penalizes incast (and that the
+/// closed-form [`crate::simnet::sim`] engine charges identically).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Nic {
+    /// Earliest tick the egress side is free.
+    pub egress_free: Tick,
+    /// Earliest tick the ingress side is free.
+    pub ingress_free: Tick,
+}
+
+/// The message body protocol machines move through the simulator.
+///
+/// `Bytes` carries real data (oracle-validated fuzz runs); `Size`
+/// carries only a byte count (cluster-scale timing runs, where 4096
+/// ranks' worth of real buffers would be pointless). The framing
+/// variants are symbolic — they keep the framed parts intact instead of
+/// serializing them — but [`Wire::wire_len`] accounts for the exact
+/// on-wire framing overhead, so simulated wire bytes match what the
+/// live [`crate::hpx::parcel::Payload`] framing would transmit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimMsg {
+    /// Real bytes.
+    Bytes(Vec<u8>),
+    /// A byte count only.
+    Size(u64),
+    /// An 8-byte chunked-transfer header carrying a total length.
+    Header(u64),
+    /// A [`Wire::frame_indexed`] frame (Bruck blocks).
+    FramedIdx(Vec<(u32, SimMsg)>),
+    /// A [`Wire::frame_list`] frame (root-funnel rows/columns).
+    FramedList(Vec<SimMsg>),
+}
+
+impl SimMsg {
+    /// The raw bytes of a `Bytes` message.
+    ///
+    /// # Panics
+    /// If the message is sized-only or framed.
+    pub fn into_bytes(self) -> Vec<u8> {
+        match self {
+            SimMsg::Bytes(b) => b,
+            other => panic!("expected byte-carrying sim message, got {other:?}"),
+        }
+    }
+}
+
+impl Wire for SimMsg {
+    fn empty() -> Self {
+        SimMsg::Bytes(Vec::new())
+    }
+
+    fn wire_len(&self) -> usize {
+        match self {
+            SimMsg::Bytes(b) => b.len(),
+            SimMsg::Size(s) => *s as usize,
+            SimMsg::Header(_) => 8,
+            // [count u32] + per block [index u32][len u64][bytes].
+            SimMsg::FramedIdx(parts) => {
+                4 + parts.iter().map(|(_, p)| 12 + p.wire_len()).sum::<usize>()
+            }
+            // [count u32] + per part [len u64][bytes].
+            SimMsg::FramedList(parts) => 4 + parts.iter().map(|p| 8 + p.wire_len()).sum::<usize>(),
+        }
+    }
+
+    fn slice(&self, off: usize, len: usize) -> Self {
+        match self {
+            SimMsg::Bytes(b) => SimMsg::Bytes(b[off..off + len].to_vec()),
+            SimMsg::Size(_) => SimMsg::Size(len as u64),
+            other => panic!("cannot slice framed sim message {other:?}"),
+        }
+    }
+
+    fn concat(mut parts: Vec<Self>) -> Self {
+        match parts.len() {
+            0 => SimMsg::Bytes(Vec::new()),
+            1 => parts.pop().expect("one part"),
+            _ => {
+                if parts.iter().all(|p| matches!(p, SimMsg::Bytes(_))) {
+                    let mut buf = Vec::new();
+                    for p in parts {
+                        buf.extend_from_slice(match &p {
+                            SimMsg::Bytes(b) => b,
+                            _ => unreachable!(),
+                        });
+                    }
+                    SimMsg::Bytes(buf)
+                } else {
+                    SimMsg::Size(parts.iter().map(|p| p.wire_len() as u64).sum())
+                }
+            }
+        }
+    }
+
+    fn header(total: u64) -> Self {
+        SimMsg::Header(total)
+    }
+
+    fn header_total(&self) -> u64 {
+        match self {
+            SimMsg::Header(t) => *t,
+            SimMsg::Bytes(b) => {
+                let mut off = 0;
+                get_u64(b, &mut off)
+            }
+            other => panic!("no header total in {other:?}"),
+        }
+    }
+
+    fn frame_indexed(blocks: &[(u32, Self)]) -> Self {
+        SimMsg::FramedIdx(blocks.to_vec())
+    }
+
+    fn unframe_indexed(&self) -> Vec<(u32, Self)> {
+        match self {
+            SimMsg::FramedIdx(parts) => parts.clone(),
+            other => panic!("not an indexed frame: {other:?}"),
+        }
+    }
+
+    fn frame_list(parts: &[Self]) -> Self {
+        SimMsg::FramedList(parts.to_vec())
+    }
+
+    fn unframe_list(&self) -> Vec<Self> {
+        match self {
+            SimMsg::FramedList(parts) => parts.clone(),
+            other => panic!("not a list frame: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_conversion_roundtrips() {
+        assert_eq!(us_to_ticks(1.5), 1500);
+        assert_eq!(us_to_ticks(0.0), 0);
+        assert!((ticks_to_us(us_to_ticks(41.94)) - 41.94).abs() < 1e-3);
+    }
+
+    #[test]
+    fn wire_len_matches_live_framing_overhead() {
+        // Live Bruck framing: 4 (count) + per block 4 (index) + 8 (len)
+        // + payload.
+        let framed = SimMsg::frame_indexed(&[
+            (0, SimMsg::Size(100)),
+            (2, SimMsg::Bytes(vec![1, 2, 3])),
+        ]);
+        assert_eq!(framed.wire_len(), 4 + (12 + 100) + (12 + 3));
+        // Live row framing: 4 (count) + per part 8 (len) + payload.
+        let listed = SimMsg::frame_list(&[SimMsg::Size(10), SimMsg::Size(20)]);
+        assert_eq!(listed.wire_len(), 4 + (8 + 10) + (8 + 20));
+        assert_eq!(SimMsg::header(7).wire_len(), 8);
+    }
+
+    #[test]
+    fn sized_messages_slice_and_concat_arithmetically() {
+        let m = SimMsg::Size(100);
+        assert_eq!(m.slice(64, 36).wire_len(), 36);
+        let back = SimMsg::concat(vec![SimMsg::Size(64), SimMsg::Size(36)]);
+        assert_eq!(back.wire_len(), 100);
+    }
+
+    #[test]
+    fn byte_messages_concat_exactly() {
+        let whole = SimMsg::Bytes((0u8..50).collect());
+        let parts: Vec<SimMsg> = (0..5).map(|i| whole.slice(i * 10, 10)).collect();
+        assert_eq!(SimMsg::concat(parts), whole);
+    }
+
+    #[test]
+    fn slow_rank_scales_charges() {
+        let mut nominal = RankCpu::new(1.0);
+        let mut slow = RankCpu::new(3.0);
+        nominal.charge_us(10.0);
+        slow.charge_us(10.0);
+        assert_eq!(nominal.now, 10_000);
+        assert_eq!(slow.now, 30_000);
+        slow.wait_until(35_000);
+        assert_eq!(slow.blocked, 5_000);
+        slow.wait_until(10_000); // past: no-op
+        assert_eq!(slow.now, 35_000);
+    }
+
+    #[test]
+    fn fold_hash_is_order_sensitive() {
+        let a = fold_hash(fold_hash(0, 1), 2);
+        let b = fold_hash(fold_hash(0, 2), 1);
+        assert_ne!(a, b);
+        assert_eq!(a, fold_hash(fold_hash(0, 1), 2));
+    }
+}

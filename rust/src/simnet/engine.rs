@@ -1,0 +1,446 @@
+//! The discrete-event core: a `(tick, seq)` min-heap of deliverable
+//! events over per-rank CPUs and NICs.
+//!
+//! Unlike the closed-form [`crate::simnet::sim`] engine — which walks
+//! straight-line schedules and resolves arrival times arithmetically —
+//! this engine is *reactive*: protocol machines post sends whenever they
+//! step, the engine computes each message's wire occupancy and arrival
+//! using exactly the same cost formulas, and delivery order is decided
+//! by popping the heap. The heap key is `(tick, seq)` with `seq` a
+//! monotonically increasing sequence number, so events at colliding
+//! timestamps pop in insertion order — a total order with **no reliance
+//! on `BinaryHeap`'s unstable behavior for equal keys**, which is what
+//! keeps runs bit-reproducible.
+//!
+//! The seeded [`crate::simnet::adversary`] perturbs the schedule between
+//! the modeled arrival computation and the heap: extra delays, duplicate
+//! deliveries (deduplicated here, counted), and first-transmission drops
+//! recovered by a retransmission timer that re-reserves both NICs for
+//! the repeat transfer.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashSet};
+
+use super::adversary::AdversaryConfig;
+use super::components::{fold_hash, ticks_to_us, us_to_ticks, Nic, RankCpu, SimMsg, Tick};
+use crate::collectives::protocol::Wire;
+use crate::hpx::parcel::Tag;
+use crate::parcelport::{CostModel, NetModel};
+
+/// How long after the modeled (lost) arrival the sender's retransmission
+/// timer fires. Fixed and generous — recovery correctness is what is
+/// under test, not RTO tuning.
+pub const RETRANSMIT_RTO_US: f64 = 50.0;
+
+/// A message in flight through the simulated fabric.
+#[derive(Clone, Debug)]
+pub struct WireMsg {
+    /// Unique id (assignment order); adversary plans key off it and
+    /// duplicate deliveries are deduplicated by it.
+    pub id: u64,
+    /// Sending rank.
+    pub src: usize,
+    /// Receiving rank.
+    pub dst: usize,
+    /// Message tag (same tag space the live communicator uses).
+    pub tag: Tag,
+    /// Modeled on-wire size in bytes.
+    pub size: u64,
+    /// The body, delivered to the destination machine.
+    pub msg: SimMsg,
+}
+
+/// A message popped off the heap, ready to hand to its destination
+/// machine.
+#[derive(Clone, Debug)]
+pub struct Delivery {
+    /// Arrival tick (the destination blocks until here).
+    pub tick: Tick,
+    /// The arrived message.
+    pub msg: WireMsg,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EventKind {
+    Arrival,
+    Retransmit,
+}
+
+/// Heap entry ordered **only** by `(tick, seq)`. The manual `Ord` makes
+/// the tie-break explicit: equal ticks pop in insertion order, never in
+/// whatever order the heap's internal sift happens to leave them.
+#[derive(Clone, Debug)]
+struct HeapEntry {
+    tick: Tick,
+    seq: u64,
+    kind: EventKind,
+    msg: WireMsg,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.tick == other.tick && self.seq == other.seq
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.tick, self.seq).cmp(&(other.tick, other.seq))
+    }
+}
+
+/// Counters and the schedule fingerprint of a finished run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineStats {
+    /// Latest rank clock, µs — the simulated collective's runtime.
+    pub makespan_us: f64,
+    /// Total bytes that crossed the wire (retransmissions included).
+    pub wire_bytes: u64,
+    /// Bytes re-sent by the retransmission timer.
+    pub retransmitted_bytes: u64,
+    /// Duplicate deliveries the engine discarded.
+    pub duplicates_dropped: u64,
+    /// First transmissions the adversary dropped.
+    pub drops_injected: u64,
+    /// Heap events processed.
+    pub events: u64,
+    /// Order-sensitive hash of every processed event: two runs are
+    /// schedule-identical iff these agree.
+    pub trace_hash: u64,
+    /// Largest per-rank blocked time, µs.
+    pub max_blocked_us: f64,
+}
+
+/// The event engine: rank CPUs + NICs + the deliverable-event heap.
+pub struct EventEngine {
+    net: NetModel,
+    cost: CostModel,
+    adversary: AdversaryConfig,
+    cpus: Vec<RankCpu>,
+    nics: Vec<Nic>,
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    next_seq: u64,
+    next_msg_id: u64,
+    delivered: HashSet<u64>,
+    wire_bytes: u64,
+    retransmitted_bytes: u64,
+    duplicates_dropped: u64,
+    drops_injected: u64,
+    events: u64,
+    trace_hash: u64,
+}
+
+impl EventEngine {
+    /// An engine for `n` ranks. Slow-rank factors are drawn from the
+    /// adversary up front so they apply to every charge a rank makes.
+    pub fn new(n: usize, net: NetModel, cost: CostModel, adversary: AdversaryConfig) -> Self {
+        let cpus = (0..n).map(|r| RankCpu::new(adversary.slow_factor_for(r))).collect();
+        Self {
+            net,
+            cost,
+            adversary,
+            cpus,
+            nics: vec![Nic::default(); n],
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            next_msg_id: 0,
+            delivered: HashSet::new(),
+            wire_bytes: 0,
+            retransmitted_bytes: 0,
+            duplicates_dropped: 0,
+            drops_injected: 0,
+            events: 0,
+            trace_hash: 0,
+        }
+    }
+
+    /// Number of simulated ranks.
+    pub fn ranks(&self) -> usize {
+        self.cpus.len()
+    }
+
+    /// Mutable access to a rank's CPU (the executor charges compute and
+    /// waits through this).
+    pub fn cpu(&mut self, rank: usize) -> &mut RankCpu {
+        &mut self.cpus[rank]
+    }
+
+    fn push(&mut self, tick: Tick, kind: EventKind, msg: WireMsg) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(HeapEntry { tick, seq, kind, msg }));
+    }
+
+    /// Reserve both NICs for a transfer starting no earlier than
+    /// `ready`; returns the wire-end tick. Mirrors the closed-form
+    /// engine's store-and-forward charge.
+    fn reserve_wire(&mut self, src: usize, dst: usize, ready: Tick, size: u64) -> Tick {
+        let start = ready.max(self.nics[src].egress_free).max(self.nics[dst].ingress_free);
+        let end = start + us_to_ticks(size as f64 / self.net.beta_gbps / 1e3);
+        self.nics[src].egress_free = end;
+        self.nics[dst].ingress_free = end;
+        self.wire_bytes += size;
+        end
+    }
+
+    /// Post a send from `src`'s machine: charge the sender's software
+    /// half, model the wire, apply the adversary's plan, and schedule
+    /// the arrival event(s).
+    pub fn post_send(&mut self, src: usize, dst: usize, tag: Tag, msg: SimMsg) {
+        debug_assert_ne!(src, dst, "protocol machines never self-send");
+        let size = msg.wire_len() as u64;
+        self.cpus[src].charge_us(self.cost.sw_time_us(size) / 2.0);
+
+        let id = self.next_msg_id;
+        self.next_msg_id += 1;
+        let plan = self.adversary.plan(id);
+
+        // Rendezvous handshake delays wire entry without occupying the
+        // sender's CPU — same as the closed-form engine.
+        let handshake = if self.cost.is_rendezvous(size) {
+            us_to_ticks(self.cost.rendezvous_rtts as f64 * 2.0 * self.net.alpha_us)
+        } else {
+            0
+        };
+        let ready = self.cpus[src].now + handshake;
+        let end = self.reserve_wire(src, dst, ready, size);
+        let arrival = end + us_to_ticks(self.net.alpha_us) + plan.extra_delay;
+
+        let wmsg = WireMsg { id, src, dst, tag, size, msg };
+        if plan.drop_first {
+            // The bytes occupied the wire but the packet is lost; the
+            // sender's timer notices and retransmits.
+            self.drops_injected += 1;
+            self.push(arrival + us_to_ticks(RETRANSMIT_RTO_US), EventKind::Retransmit, wmsg);
+        } else {
+            let dup = plan.duplicate_after;
+            self.push(arrival, EventKind::Arrival, wmsg.clone());
+            if let Some(gap) = dup {
+                self.push(arrival + gap, EventKind::Arrival, wmsg);
+            }
+        }
+    }
+
+    /// Pop the next deliverable message. Retransmission timers are
+    /// resolved internally (the repeat transfer re-reserves both NICs);
+    /// duplicate deliveries are discarded and counted. `None` means the
+    /// fabric is drained — if machines are still unfinished then, the
+    /// run has deadlocked.
+    pub fn next_delivery(&mut self) -> Option<Delivery> {
+        while let Some(Reverse(entry)) = self.heap.pop() {
+            self.events += 1;
+            self.fold_event(&entry);
+            match entry.kind {
+                EventKind::Retransmit => {
+                    let (src, dst, size) = (entry.msg.src, entry.msg.dst, entry.msg.size);
+                    let end = self.reserve_wire(src, dst, entry.tick, size);
+                    self.retransmitted_bytes += size;
+                    let arrival = end + us_to_ticks(self.net.alpha_us);
+                    self.push(arrival, EventKind::Arrival, entry.msg);
+                }
+                EventKind::Arrival => {
+                    if !self.delivered.insert(entry.msg.id) {
+                        self.duplicates_dropped += 1;
+                        continue;
+                    }
+                    return Some(Delivery { tick: entry.tick, msg: entry.msg });
+                }
+            }
+        }
+        None
+    }
+
+    /// Account a machine consuming a delivery: the destination blocks
+    /// until the arrival tick, then pays the receive-side software half.
+    pub fn consume(&mut self, dst: usize, arrival: Tick) {
+        let half = self.cost.sw_overhead_us / 2.0;
+        let cpu = &mut self.cpus[dst];
+        cpu.wait_until(arrival);
+        cpu.charge_us(half);
+    }
+
+    fn fold_event(&mut self, e: &HeapEntry) {
+        let mut h = self.trace_hash;
+        h = fold_hash(h, e.tick);
+        h = fold_hash(h, e.seq);
+        h = fold_hash(h, matches!(e.kind, EventKind::Retransmit) as u64);
+        h = fold_hash(h, e.msg.id);
+        h = fold_hash(h, ((e.msg.src as u64) << 32) | e.msg.dst as u64);
+        h = fold_hash(h, e.msg.tag);
+        h = fold_hash(h, e.msg.size);
+        self.trace_hash = h;
+    }
+
+    /// Snapshot the run's counters and fingerprint.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            makespan_us: self.cpus.iter().map(|c| c.now).max().map_or(0.0, ticks_to_us),
+            wire_bytes: self.wire_bytes,
+            retransmitted_bytes: self.retransmitted_bytes,
+            duplicates_dropped: self.duplicates_dropped,
+            drops_injected: self.drops_injected,
+            events: self.events,
+            trace_hash: self.trace_hash,
+            max_blocked_us: self.cpus.iter().map(|c| c.blocked).max().map_or(0.0, ticks_to_us),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parcelport::PortKind;
+    use crate::simnet::sim::{Schedule, SimNet};
+
+    fn msg(id: u64, size: u64) -> WireMsg {
+        WireMsg { id, src: 0, dst: 1, tag: 0, size, msg: SimMsg::Size(size) }
+    }
+
+    /// Satellite regression for the (tick, seq) tie-break: events pushed
+    /// at a colliding timestamp must pop in insertion order, bracketed
+    /// by earlier/later ticks popping strictly by time.
+    #[test]
+    fn colliding_timestamps_pop_in_insertion_order() {
+        let entry = |tick: Tick, seq: u64| {
+            Reverse(HeapEntry { tick, seq, kind: EventKind::Arrival, msg: msg(seq, 1) })
+        };
+        let mut heap: BinaryHeap<Reverse<HeapEntry>> = BinaryHeap::new();
+        for seq in 0..16u64 {
+            heap.push(entry(100, seq));
+        }
+        // Later-inserted but earlier/later ticks must sort by tick.
+        heap.push(entry(99, 50));
+        heap.push(entry(101, 16));
+
+        let order: Vec<(Tick, u64)> =
+            std::iter::from_fn(|| heap.pop()).map(|Reverse(e)| (e.tick, e.seq)).collect();
+        let mut expect: Vec<(Tick, u64)> = vec![(99, 50)];
+        expect.extend((0..16).map(|s| (100, s)));
+        expect.push((101, 16));
+        assert_eq!(order, expect);
+    }
+
+    /// With the adversary off, a single message reproduces the
+    /// closed-form engine's makespan to nanosecond rounding.
+    #[test]
+    fn benign_single_message_matches_closed_form() {
+        for kind in PortKind::ALL {
+            for size in [1u64 << 10, 64 * 1024 + 1, 1 << 20] {
+                let net = NetModel::infiniband_hdr();
+                let cost = kind.cost_model();
+                let mut eng = EventEngine::new(2, net, cost, AdversaryConfig::none(0));
+                eng.post_send(0, 1, 7, SimMsg::Size(size));
+                let d = eng.next_delivery().expect("one arrival");
+                eng.consume(1, d.tick);
+                assert!(eng.next_delivery().is_none());
+
+                let mut a = Schedule::default();
+                a.send(1, size, 7);
+                let mut b = Schedule::default();
+                b.recv(0, 7);
+                let closed = SimNet::new(net, cost).run(&[a, b]);
+                let got = eng.stats().makespan_us;
+                assert!(
+                    (got - closed.makespan_us).abs() < 0.01,
+                    "{kind} size {size}: event {got} vs closed {}",
+                    closed.makespan_us
+                );
+                assert_eq!(eng.stats().wire_bytes, closed.wire_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn incast_serializes_on_the_receiver_nic() {
+        let net = NetModel::infiniband_hdr();
+        let mut eng = EventEngine::new(5, net, CostModel::lci(), AdversaryConfig::none(0));
+        let size = 1u64 << 20;
+        for src in 1..5 {
+            eng.post_send(src, 0, src as Tag, SimMsg::Size(size));
+        }
+        while let Some(d) = eng.next_delivery() {
+            eng.consume(d.msg.dst, d.tick);
+        }
+        let wire_each = size as f64 / net.beta_gbps / 1e3;
+        assert!(eng.stats().makespan_us >= 4.0 * wire_each);
+    }
+
+    #[test]
+    fn dropped_message_is_retransmitted_and_counted() {
+        // 100% drop probability: every message goes through the timer
+        // exactly once (retransmissions themselves are not re-dropped).
+        let mut adv = AdversaryConfig::none(3);
+        adv.drop_prob_pct = 100;
+        let mut eng = EventEngine::new(2, NetModel::infiniband_hdr(), CostModel::lci(), adv);
+        eng.post_send(0, 1, 0, SimMsg::Size(4096));
+        let d = eng.next_delivery().expect("recovered by retransmission");
+        assert_eq!(d.msg.size, 4096);
+        eng.consume(1, d.tick);
+        assert!(eng.next_delivery().is_none());
+        let stats = eng.stats();
+        assert_eq!(stats.drops_injected, 1);
+        assert_eq!(stats.retransmitted_bytes, 4096);
+        assert_eq!(stats.wire_bytes, 2 * 4096, "both transmissions occupy the wire");
+        assert!(stats.makespan_us > RETRANSMIT_RTO_US);
+    }
+
+    #[test]
+    fn duplicates_are_delivered_once() {
+        let mut adv = AdversaryConfig::none(5);
+        adv.dup_prob_pct = 100;
+        let mut eng = EventEngine::new(2, NetModel::infiniband_hdr(), CostModel::lci(), adv);
+        eng.post_send(0, 1, 0, SimMsg::Size(64));
+        let first = eng.next_delivery().expect("original copy");
+        eng.consume(1, first.tick);
+        assert!(eng.next_delivery().is_none(), "duplicate must be swallowed");
+        assert_eq!(eng.stats().duplicates_dropped, 1);
+    }
+
+    #[test]
+    fn trace_hash_is_reproducible_and_seed_sensitive() {
+        let run = |seed: u64| {
+            let adv = AdversaryConfig::hostile(seed);
+            let mut eng = EventEngine::new(4, NetModel::infiniband_hdr(), CostModel::mpi(), adv);
+            for src in 0..4usize {
+                for dst in 0..4usize {
+                    if src != dst {
+                        eng.post_send(src, dst, (src * 4 + dst) as Tag, SimMsg::Size(100_000));
+                    }
+                }
+            }
+            while let Some(d) = eng.next_delivery() {
+                eng.consume(d.msg.dst, d.tick);
+            }
+            eng.stats()
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed must reproduce the run bit-for-bit");
+        let c = run(43);
+        assert_ne!(a.trace_hash, c.trace_hash, "different seed must change the schedule");
+    }
+
+    #[test]
+    fn slow_rank_inflates_its_software_charges() {
+        let mut adv = AdversaryConfig::none(0);
+        adv.slow_rank_pct = 100;
+        adv.slow_factor = 8.0;
+        let net = NetModel::infiniband_hdr();
+        let mut slow_eng = EventEngine::new(2, net, CostModel::tcp(), adv);
+        let mut fast_eng = EventEngine::new(2, net, CostModel::tcp(), AdversaryConfig::none(0));
+        for eng in [&mut slow_eng, &mut fast_eng] {
+            eng.post_send(0, 1, 0, SimMsg::Size(1 << 20));
+            let d = eng.next_delivery().expect("arrival");
+            eng.consume(1, d.tick);
+        }
+        assert!(slow_eng.stats().makespan_us > fast_eng.stats().makespan_us * 2.0);
+    }
+}

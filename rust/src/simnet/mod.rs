@@ -28,11 +28,32 @@
 //! half-spectrum transposes, exactly half the complex wire bytes) —
 //! plus the 3-D pencil pipeline's two sub-communicator-scoped transpose
 //! rounds ([`fft_model::predict_pencil3`] — the fig6 prediction).
+//!
+//! Two engines share that cost model:
+//!
+//! 1. [`sim`] — the original closed-form engine: straight-line
+//!    [`sim::Schedule`]s resolved arithmetically. Fast, but it can only
+//!    replay the one schedule it was given.
+//! 2. [`engine`] / [`collective_sim`] — the event engine: a
+//!    `(tick, seq)` min-heap over per-rank CPUs ([`components`]) on
+//!    which the **real protocol machines** from
+//!    [`crate::collectives::protocol`] execute, while a seeded
+//!    [`adversary`] perturbs delivery order (delays, duplicates, drops
+//!    with retransmission, slow ranks) without breaking
+//!    bit-reproducibility. Completed collectives are validated bitwise
+//!    against the serial oracles in [`crate::dist_fft::verify`].
 
+pub mod adversary;
+pub mod collective_sim;
+pub mod components;
 pub mod compute;
+pub mod engine;
 pub mod fft_model;
 pub mod sim;
 
+pub use adversary::AdversaryConfig;
+pub use collective_sim::{run_sim, SimCollective, SimConfig, SimData, SimRunReport};
 pub use compute::ComputeModel;
+pub use engine::{EngineStats, EventEngine};
 pub use fft_model::{predict_fft, predict_pencil3, FftModelParams, Pencil3ModelParams};
 pub use sim::{Action, Schedule, SimNet, SimReport};

@@ -51,6 +51,47 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
 }
 
+/// Run `f` on a helper thread and panic if it does not finish within
+/// `timeout` — the bounded-wait guard for tests that drive blocking
+/// machinery which must *never* hang (e.g. [`crate::runtime::FftService`]
+/// jobs over a fault-injected fabric). On success the helper thread is
+/// joined and `f`'s value returned; on timeout the test dies with a
+/// diagnostic naming `label` instead of wedging the whole test binary
+/// until the harness is killed.
+///
+/// # Panics
+/// If `f` exceeds `timeout` or panics (the panic is propagated).
+pub fn with_watchdog<T: Send + 'static>(
+    label: &str,
+    timeout: std::time::Duration,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::Builder::new()
+        .name(format!("watchdog-{label}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .expect("spawn watchdog subject thread");
+    match rx.recv_timeout(timeout) {
+        Ok(value) => {
+            handle.join().expect("watchdog subject thread panicked after replying");
+            value
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: {label:?} still running after {timeout:?} — likely hang")
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            // The subject dropped the sender without replying: it
+            // panicked. Join to propagate the original panic payload.
+            match handle.join() {
+                Err(payload) => std::panic::resume_unwind(payload),
+                Ok(()) => unreachable!("subject exited cleanly without sending its result"),
+            }
+        }
+    }
+}
+
 /// Relative L2 error ‖a−b‖ / ‖b‖ — the standard FFT accuracy metric.
 pub fn rel_l2_error(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -89,6 +130,28 @@ mod tests {
     #[should_panic(expected = "element 1")]
     fn assert_close_reports_index() {
         assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn watchdog_returns_value_and_reports_hangs() {
+        let v = with_watchdog("quick", std::time::Duration::from_secs(5), || 41 + 1);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "likely hang")]
+    fn watchdog_times_out() {
+        with_watchdog("stuck", std::time::Duration::from_millis(50), || {
+            std::thread::sleep(std::time::Duration::from_secs(10));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "subject blew up")]
+    fn watchdog_propagates_subject_panic() {
+        with_watchdog("exploder", std::time::Duration::from_secs(5), || {
+            panic!("subject blew up");
+        });
     }
 
     #[test]
