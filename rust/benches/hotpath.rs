@@ -11,10 +11,10 @@
 
 use hpx_fft::bench_harness::runner::time_us;
 use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy, Communicator};
-use hpx_fft::dist_fft::transpose::place_chunk_transposed;
+use hpx_fft::dist_fft::transpose::{place_chunk_transposed, BLOCK};
 use hpx_fft::fft::complex::Complex32;
 use hpx_fft::fft::plan::{Direction, Plan, PlanCache};
-use hpx_fft::fft::{radix2, twiddle};
+use hpx_fft::fft::{radix2, simd, twiddle};
 use hpx_fft::hpx::mailbox::Mailbox;
 use hpx_fft::hpx::parcel::{actions, Parcel, Payload};
 use hpx_fft::hpx::runtime::Cluster;
@@ -23,7 +23,11 @@ use hpx_fft::task::ThreadPool;
 use hpx_fft::util::rng::Pcg32;
 use std::sync::Arc;
 
-fn bench(rows: &mut Vec<(String, f64)>, name: &str, iters: usize, mut f: impl FnMut()) {
+/// One CSV record: `(bench, us_per_op, gflops, gbytes_per_s)`; the two
+/// roofline columns stay 0.0 when the bench has no natural flop/byte count.
+type Row = (String, f64, f64, f64);
+
+fn bench(rows: &mut Vec<Row>, name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
     // Warmup.
     for _ in 0..iters.div_ceil(10).max(1) {
         f();
@@ -36,7 +40,8 @@ fn bench(rows: &mut Vec<(String, f64)>, name: &str, iters: usize, mut f: impl Fn
     let per = total_us / iters as f64;
     let (val, unit) = if per < 1.0 { (per * 1e3, "ns") } else { (per, "µs") };
     println!("{name:<44} {val:>10.1} {unit}/op   ({iters} iters)");
-    rows.push((name.to_string(), per));
+    rows.push((name.to_string(), per, 0.0, 0.0));
+    per
 }
 
 fn signal(n: usize, seed: u64) -> Vec<Complex32> {
@@ -48,10 +53,11 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     // Iteration divisor for the smoke path.
     let div = if smoke { 10 } else { 1 };
-    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
     println!("== hotpath micro-benchmarks{} ==\n", if smoke { " (smoke)" } else { "" });
+    println!("simd tier: {} ({} lanes)\n", simd::tier().name(), simd::tier().lanes());
 
-    // FFT kernel, power-of-two path.
+    // FFT kernel, power-of-two path (split-radix over SIMD butterflies).
     for log2n in [10usize, 12, 14] {
         let n = 1 << log2n;
         let plan = Plan::new(n, Direction::Forward);
@@ -60,12 +66,13 @@ fn main() {
         let mut last_us = 0.0;
         bench(
             &mut rows,
-            &format!("fft plan(radix2) n=2^{log2n}"),
+            &format!("fft plan(split-radix) n=2^{log2n}"),
             ((2000 >> (log2n - 10)) / div).max(1),
             || {
                 last_us = time_us(|| plan.execute(&mut buf));
             },
         );
+        rows.last_mut().unwrap().2 = flops / last_us / 1e3;
         println!(
             "{:<44} {:>10.2} GFLOP/s",
             format!("  → throughput n=2^{log2n}"),
@@ -73,9 +80,9 @@ fn main() {
         );
     }
 
-    // The acceptance comparison: the planned power-of-two path must not
-    // be slower than the raw radix-2 kernel it dispatches to (planner
-    // overhead = one enum match per execute).
+    // The dispatch comparison: the planned power-of-two path (split-radix
+    // over SIMD butterflies) against the raw iterative radix-2 reference
+    // kernel it replaced.
     {
         let n = 1usize << 12;
         let plan = Plan::new(n, Direction::Forward);
@@ -92,10 +99,50 @@ fn main() {
             raw_us = time_us(|| radix2::fft_in_place(&mut buf2, &tw, &br));
         });
         println!(
-            "{:<44} {:>9.2}×   (≈1.0 expected: same kernel)",
-            "  → planned/raw ratio (pow2 dispatch cost)",
+            "{:<44} {:>9.2}×   (<1.0 expected: split-radix vs scalar radix-2)",
+            "  → planned/raw ratio",
             planned_us / raw_us.max(1e-9)
         );
+    }
+
+    // Tentpole acceptance, compute half: lane-parallel vs scalar radix-2
+    // combines at the sizes the criteria pin (n ∈ {1024, 4096}). One op =
+    // one full combine stage: n/2 butterflies at 10 flops each.
+    {
+        for n in [1024usize, 4096] {
+            let half = n / 2;
+            let tw = twiddle::half_table(n, false);
+            let flops = 10.0 * half as f64;
+            let iters = (400_000 / (n / 1024) / div).max(1);
+            let mut lo = signal(half, 31);
+            let mut hi = signal(half, 32);
+            let simd_us =
+                bench(&mut rows, &format!("combine radix2 simd n={n}"), iters, || {
+                    simd::butterfly_radix2(&mut lo, &mut hi, &tw);
+                });
+            rows.last_mut().unwrap().2 = flops / simd_us / 1e3;
+            let mut lo = signal(half, 31);
+            let mut hi = signal(half, 32);
+            let scalar_us =
+                bench(&mut rows, &format!("combine radix2 scalar n={n}"), iters, || {
+                    simd::butterfly_radix2_scalar(&mut lo, &mut hi, &tw);
+                });
+            rows.last_mut().unwrap().2 = flops / scalar_us / 1e3;
+            println!(
+                "{:<44} {:>9.2}×   (tier: {})",
+                format!("  → simd speedup n={n}"),
+                scalar_us / simd_us.max(1e-9),
+                simd::tier().name()
+            );
+            // CI smoke gate: with a vector tier active, the dispatched
+            // combine must not lose to its scalar twin.
+            if smoke && n == 4096 && simd::tier() != simd::SimdTier::Scalar {
+                assert!(
+                    simd_us <= scalar_us * 1.05,
+                    "simd combine slower than scalar at n=4096: {simd_us:.3} vs {scalar_us:.3} µs"
+                );
+            }
+        }
     }
 
     // Mixed-radix path: composite (4·2·5·5·5) and prime (Bluestein).
@@ -113,6 +160,7 @@ fn main() {
         bench(&mut rows, &label, (1000 / div).max(1), || {
             last_us = time_us(|| plan.execute_with_scratch(&mut buf, &mut scratch));
         });
+        rows.last_mut().unwrap().2 = flops / last_us / 1e3;
         println!(
             "{:<44} {:>10.2} GFLOP/s",
             format!("  → throughput n={n}"),
@@ -144,14 +192,41 @@ fn main() {
         });
     }
 
-    // Chunk transpose (the scatter variant's overlapped work).
+    // Tentpole acceptance, data-movement half: cache-blocked vs naive
+    // chunk transpose into a preallocated slab. The roofline column is
+    // bytes/s with every element read once and written once (r·c·8·2 B).
     {
-        let (r, c) = (256, 256);
-        let chunk = signal(r * c, 3);
-        let mut slab = vec![Complex32::ZERO; r * c];
-        bench(&mut rows, "place_chunk_transposed 256×256", (200 / div).max(1), || {
-            place_chunk_transposed(&chunk, r, c, &mut slab, r, 0);
-        });
+        for (r, c) in [(256usize, 256usize), (1024, 1024)] {
+            let chunk = signal(r * c, 3);
+            let mut slab = vec![Complex32::ZERO; r * c];
+            let bytes = (r * c * 8 * 2) as f64;
+            let iters = (2000 / (r / 256) / (c / 256) / div).max(1);
+            let tiled_us = bench(
+                &mut rows,
+                &format!("transpose tiled {r}x{c} (B={BLOCK})"),
+                iters,
+                || {
+                    place_chunk_transposed(&chunk, r, c, &mut slab, r, 0);
+                },
+            );
+            rows.last_mut().unwrap().3 = bytes / tiled_us / 1e3;
+            let naive_us =
+                bench(&mut rows, &format!("transpose naive {r}x{c}"), iters, || {
+                    for rr in 0..r {
+                        for cc in 0..c {
+                            slab[cc * r + rr] = chunk[rr * c + cc];
+                        }
+                    }
+                });
+            rows.last_mut().unwrap().3 = bytes / naive_us / 1e3;
+            println!(
+                "{:<44} {:>9.2}×   ({:.2} vs {:.2} GB/s)",
+                format!("  → tiled speedup {r}x{c}"),
+                naive_us / tiled_us.max(1e-9),
+                bytes / tiled_us / 1e3,
+                bytes / naive_us / 1e3
+            );
+        }
     }
 
     // Payload semantics: the LCI-vs-MPI difference in one number.
@@ -234,7 +309,7 @@ fn main() {
                 best = best.min(times.into_iter().fold(0.0, f64::max));
             }
             println!("{label:<44} {best:>10.1} µs/op   ({reps} reps, best)");
-            rows.push((label.to_string(), best));
+            rows.push((label.to_string(), best, 0.0, 0.0));
             best
         };
 
@@ -306,7 +381,7 @@ fn main() {
                 }
             }
             println!("{label:<44} {best_total:>10.1} µs/op   ({reps} reps, best)");
-            rows.push((label.to_string(), best_total));
+            rows.push((label.to_string(), best_total, 0.0, 0.0));
             (best_total, best_overlap)
         };
         let (blocking_us, _) = best_of(
@@ -322,7 +397,7 @@ fn main() {
             "  → async speedup over blocking",
             blocking_us / async_us
         );
-        rows.push(("distfft scatter async overlap_us".to_string(), overlap_us));
+        rows.push(("distfft scatter async overlap_us".to_string(), overlap_us, 0.0, 0.0));
     }
 
     // 2-D-vs-3-D transpose volume (same total elements) on the
@@ -378,7 +453,7 @@ fn main() {
             "{:<44} {best2d:>10.1} µs/op   ({bytes2d} B/locality, 1 round)",
             format!("transpose 2d slab {rows2d}x{cols2d} N={n}")
         );
-        rows.push((format!("transpose 2d slab {rows2d}x{cols2d}"), best2d));
+        rows.push((format!("transpose 2d slab {rows2d}x{cols2d}"), best2d, 0.0, 0.0));
 
         // 3-D pencil: two sub-communicator rounds.
         let cluster3d = Cluster::new(n, PortKind::Lci, Some(net)).expect("cluster");
@@ -422,16 +497,25 @@ fn main() {
             bytes_t1 + bytes_t2,
             bytes2d
         );
-        rows.push((format!("transpose 3d pencil t1 {pr}x{pc}"), best_t1));
-        rows.push((format!("transpose 3d pencil t2 {pr}x{pc}"), best_t2));
+        rows.push((format!("transpose 3d pencil t1 {pr}x{pc}"), best_t1, 0.0, 0.0));
+        rows.push((format!("transpose 3d pencil t2 {pr}x{pc}"), best_t2, 0.0, 0.0));
     }
 
-    // CSV artifact for the CI bench-smoke job.
+    // CSV artifact for the CI bench-smoke job. The two roofline columns
+    // are 0 where the bench has no natural flop or byte count.
     let out_dir = "bench_out";
-    let csv_rows: Vec<Vec<String>> =
-        rows.iter().map(|(name, us)| vec![name.clone(), us.to_string()]).collect();
-    hpx_fft::metrics::csv::write_csv(format!("{out_dir}/hotpath.csv"), &["bench", "us_per_op"], &csv_rows)
-        .expect("write hotpath.csv");
+    let csv_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, us, gflops, gbytes)| {
+            vec![name.clone(), us.to_string(), gflops.to_string(), gbytes.to_string()]
+        })
+        .collect();
+    hpx_fft::metrics::csv::write_csv(
+        format!("{out_dir}/hotpath.csv"),
+        &["bench", "us_per_op", "gflops", "gbytes_per_s"],
+        &csv_rows,
+    )
+    .expect("write hotpath.csv");
     println!("\nCSV written to {out_dir}/hotpath.csv");
     println!("hotpath done");
 }

@@ -24,6 +24,7 @@
 //! the pipelined collectives are transpose-placed the moment they land,
 //! exactly like the 2-D slab path.
 
+use super::transpose::place_chunk_slice_transposed;
 use crate::fft::complex::{as_byte_slice, Complex32};
 use crate::util::rng::Pcg32;
 
@@ -320,13 +321,28 @@ pub fn place_t1_slice(
     );
     assert_eq!(out.len(), dims.d0 * d2c * n1, "stage-Y pencil shape mismatch");
     assert!(src < dims.proc.pc, "row-comm peer {src} out of range");
-    for (i, v) in elems.iter().enumerate() {
+    // Within one s-slab the chunk is a `d1c × d2c` matrix (rows r,
+    // columns z) landing transposed at column offset `src·d1c` of the
+    // slab's `d2c × n1` destination — exactly the cache-blocked
+    // transpose primitive. Walk the window one s-slab at a time.
+    let blk = d1c * d2c;
+    let mut i = 0;
+    while i < elems.len() {
         let e = elem_offset + i;
-        let s = e / (d1c * d2c);
-        let rem = e % (d1c * d2c);
-        let r = rem / d2c;
-        let z = rem % d2c;
-        out[(s * d2c + z) * n1 + src * d1c + r] = *v;
+        let s = e / blk;
+        let in_blk = e % blk;
+        let take = (blk - in_blk).min(elems.len() - i);
+        let base = s * d2c * n1;
+        place_chunk_slice_transposed(
+            &elems[i..i + take],
+            in_blk,
+            d1c,
+            d2c,
+            &mut out[base..base + d2c * n1],
+            n1,
+            src * d1c,
+        );
+        i += take;
     }
 }
 
@@ -383,14 +399,11 @@ pub fn place_t2_slice(
     );
     assert_eq!(out.len(), d2c * d1r * n0, "stage-X pencil shape mismatch");
     assert!(src < dims.proc.pr, "column-comm peer {src} out of range");
-    for (i, v) in elems.iter().enumerate() {
-        let e = elem_offset + i;
-        let s = e / (d2c * d1r);
-        let rem = e % (d2c * d1r);
-        let k = rem / d1r;
-        let y = rem % d1r;
-        out[(k * d1r + y) * n0 + src * d0 + s] = *v;
-    }
+    // The whole chunk is a `d0 × (d2c·d1r)` matrix (rows s, columns
+    // k·d1r + y) landing transposed at column offset `src·d0` of the
+    // `(d2c·d1r) × n0` stage-X pencil — one call into the cache-blocked
+    // transpose primitive.
+    place_chunk_slice_transposed(elems, elem_offset, d0, d2c * d1r, out, n0, src * d0);
 }
 
 #[cfg(test)]

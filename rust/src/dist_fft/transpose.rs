@@ -14,7 +14,46 @@ use crate::fft::complex::Complex32;
 
 /// Cache-block edge for the tiled transpose (64 × 64 complex = 64 KiB
 /// working set: fits L2, two tiles fit L1d? 64×64×8 = 32 KiB per tile).
-const BLOCK: usize = 64;
+/// Public so diagnostics (`repro kernels`) and the roofline bench can
+/// report the tile geometry alongside their numbers.
+pub const BLOCK: usize = 64;
+
+/// Tiled transpose-place of whole rows: `rows` holds contiguous
+/// row-major rows `r0..r0 + rows.len()/src_cols` of a chunk, and each
+/// element lands at `slab[c][col0 + r0 + r]` — the shared inner loop of
+/// [`place_chunk_transposed`] and [`place_chunk_slice_transposed`].
+///
+/// §Perf (EXPERIMENTS.md §Perf L3-2): within a `BLOCK × BLOCK` tile,
+/// iterate the *destination* row (source column) in the outer loop so
+/// writes are contiguous runs; the strided side is the read, which
+/// prefetches better than strided writes commit.
+fn place_rows_tiled(
+    rows: &[Complex32],
+    r0: usize,
+    src_cols: usize,
+    slab: &mut [Complex32],
+    slab_cols: usize,
+    col0: usize,
+) {
+    debug_assert_eq!(rows.len() % src_cols, 0, "whole rows only");
+    let nrows = rows.len() / src_cols;
+    let mut rb = 0;
+    while rb < nrows {
+        let r_hi = (rb + BLOCK).min(nrows);
+        let mut cb = 0;
+        while cb < src_cols {
+            let c_hi = (cb + BLOCK).min(src_cols);
+            for c in cb..c_hi {
+                let dst_base = c * slab_cols + col0 + r0;
+                for r in rb..r_hi {
+                    slab[dst_base + r] = rows[r * src_cols + c];
+                }
+            }
+            cb = c_hi;
+        }
+        rb = r_hi;
+    }
+}
 
 /// Transpose `chunk` (`src_rows × src_cols`, row-major) into `slab`
 /// (`src_cols × slab_cols`, row-major) at column offset `col0`:
@@ -37,26 +76,7 @@ pub fn place_chunk_transposed(
         src_cols * slab_cols
     );
 
-    // §Perf (EXPERIMENTS.md §Perf L3-2): within a tile, iterate the
-    // *destination* row (source column) in the outer loop so writes are
-    // contiguous runs of `r_hi - rb` elements; the strided side is the
-    // read, which prefetches better than strided writes commit.
-    let mut rb = 0;
-    while rb < src_rows {
-        let r_hi = (rb + BLOCK).min(src_rows);
-        let mut cb = 0;
-        while cb < src_cols {
-            let c_hi = (cb + BLOCK).min(src_cols);
-            for c in cb..c_hi {
-                let dst_base = c * slab_cols + col0;
-                for r in rb..r_hi {
-                    slab[dst_base + r] = chunk[r * src_cols + c];
-                }
-            }
-            cb = c_hi;
-        }
-        rb = r_hi;
-    }
+    place_rows_tiled(chunk, 0, src_cols, slab, slab_cols, col0);
 }
 
 /// Transpose-place an arbitrary *window* of a `src_rows × src_cols`
@@ -90,19 +110,39 @@ pub fn place_chunk_slice_transposed(
         src_cols * slab_cols
     );
 
-    // Walk the window one source-row segment at a time so the read side
-    // stays contiguous; the scattered side is the strided write, as in
-    // the whole-chunk path.
+    if elems.is_empty() {
+        return;
+    }
+
+    // Ragged head: a window cut mid-row starts with a partial leading
+    // row, placed element by element (at most src_cols - 1 writes).
     let mut i = 0;
-    while i < elems.len() {
-        let e = elem_offset + i;
-        let r = e / src_cols;
-        let c0 = e % src_cols;
-        let run = (src_cols - c0).min(elems.len() - i);
-        for (k, v) in elems[i..i + run].iter().enumerate() {
+    let c0 = elem_offset % src_cols;
+    if c0 != 0 {
+        let r = elem_offset / src_cols;
+        let run = (src_cols - c0).min(elems.len());
+        for (k, v) in elems[..run].iter().enumerate() {
             slab[(c0 + k) * slab_cols + col0 + r] = *v;
         }
-        i += run;
+        i = run;
+    }
+
+    // Aligned middle: whole rows go through the same BLOCK × BLOCK tiled
+    // loop as the one-shot path, instead of the strided single-element
+    // walk the pre-tiling code used.
+    let full_rows = (elems.len() - i) / src_cols;
+    if full_rows > 0 {
+        let r0 = (elem_offset + i) / src_cols;
+        place_rows_tiled(&elems[i..i + full_rows * src_cols], r0, src_cols, slab, slab_cols, col0);
+        i += full_rows * src_cols;
+    }
+
+    // Ragged tail: a partial trailing row (starts at column 0).
+    if i < elems.len() {
+        let r = (elem_offset + i) / src_cols;
+        for (k, v) in elems[i..].iter().enumerate() {
+            slab[k * slab_cols + col0 + r] = *v;
+        }
     }
 }
 
@@ -112,6 +152,21 @@ pub fn transpose(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32>
     assert_eq!(data.len(), rows * cols);
     let mut out = vec![Complex32::ZERO; rows * cols];
     place_chunk_transposed(data, rows, cols, &mut out, rows, 0);
+    out
+}
+
+/// Untiled textbook transpose — the baseline the roofline bench measures
+/// the `BLOCK × BLOCK` tiled path against, and the oracle the
+/// equivalence tests compare it to. Kept deliberately naive (row-major
+/// read, column-strided write).
+pub fn transpose_naive(data: &[Complex32], rows: usize, cols: usize) -> Vec<Complex32> {
+    assert_eq!(data.len(), rows * cols);
+    let mut out = vec![Complex32::ZERO; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = data[r * cols + c];
+        }
+    }
     out
 }
 
@@ -224,6 +279,59 @@ mod tests {
         let chunk = vec![Complex32::ZERO; 4];
         let mut slab = vec![Complex32::ZERO; 4];
         place_chunk_transposed(&chunk, 2, 2, &mut slab, 2, 1);
+    }
+
+    #[test]
+    fn tiled_matches_naive_awkward_shapes() {
+        // Non-square, non-tile-multiple, and degenerate shapes: the tiled
+        // path must agree with the untiled oracle bitwise.
+        for &(rows, cols) in &[
+            (33usize, 17usize),
+            (257, 130),
+            (70, 1),
+            (1, 70),
+            (BLOCK, BLOCK),
+            (BLOCK + 7, 2 * BLOCK + 3),
+        ] {
+            let m = grid(rows, cols, (rows * 1000 + cols) as u64);
+            assert_eq!(
+                transpose(&m, rows, cols),
+                transpose_naive(&m, rows, cols),
+                "{rows}x{cols}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_placement_matches_whole_chunk_across_tiles() {
+        // Same window-by-window equivalence as above, but on a chunk
+        // bigger than a tile in both dimensions and with windows that
+        // land mid-row, exactly one row, and several-rows-plus-a-ragged-
+        // edge — the head/tiled-middle/tail seams of the slice path.
+        let (src_rows, src_cols) = (BLOCK + 5, BLOCK + 3);
+        let chunk = grid(src_rows, src_cols, 21);
+        let slab_cols = src_rows + 4;
+        let mut whole = vec![Complex32::ZERO; src_cols * slab_cols];
+        place_chunk_transposed(&chunk, src_rows, src_cols, &mut whole, slab_cols, 3);
+
+        for window in [1usize, src_cols - 1, src_cols, src_cols + 1, 5 * src_cols + 17, 4096] {
+            let mut piecewise = vec![Complex32::ZERO; src_cols * slab_cols];
+            let mut off = 0;
+            while off < chunk.len() {
+                let hi = (off + window).min(chunk.len());
+                place_chunk_slice_transposed(
+                    &chunk[off..hi],
+                    off,
+                    src_rows,
+                    src_cols,
+                    &mut piecewise,
+                    slab_cols,
+                    3,
+                );
+                off = hi;
+            }
+            assert_eq!(piecewise, whole, "window {window}");
+        }
     }
 
     #[test]

@@ -6,9 +6,9 @@
 //! independently. Bands of rows are dispatched to the process-wide
 //! [`crate::task::ThreadPool`] via [`crate::task::parallel_chunks_mut`],
 //! so concurrent localities share one core-sized worker pool instead of
-//! each spawning OS threads per sweep. Each band worker keeps its own
-//! [`FftScratch`], so mixed-radix rows run allocation-free after the
-//! first row.
+//! each spawning OS threads per sweep. Each band worker runs against its
+//! thread's persistent [`FftScratch`], so steady-state sweeps are
+//! allocation-free — including the first row of later sweeps.
 
 use super::complex::Complex32;
 use super::plan::{Direction, FftScratch, Plan};
@@ -41,10 +41,13 @@ pub fn fft_rows_parallel(data: &mut [Complex32], n: usize, plan: &Plan, nthreads
     // serves a whole band.
     let rows_per_chunk = rows.div_ceil(nthreads);
     parallel_chunks_mut(data, rows_per_chunk * n, nthreads, |_, band| {
-        let mut scratch = FftScratch::new();
-        for row in band.chunks_exact_mut(n) {
-            plan.execute_with_scratch(row, &mut scratch);
-        }
+        // Each pool worker reuses its own persistent thread-local
+        // scratch, so repeated sweeps allocate nothing.
+        FftScratch::with_thread_local(|scratch| {
+            for row in band.chunks_exact_mut(n) {
+                plan.execute_with_scratch(row, scratch);
+            }
+        });
     });
 }
 

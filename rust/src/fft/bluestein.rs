@@ -9,20 +9,22 @@
 //! ```
 //!
 //! The convolution is evaluated with a zero-padded power-of-two FFT of
-//! length `M = next_pow2(2p − 1)` through the radix-2 kernel, so the
-//! fallback reuses the same fast path as every other plan. All tables
-//! (chirp, the kernel's forward spectrum `B`, the radix-2 twiddles) are
-//! precomputed at plan time; execution only touches the caller-provided
-//! convolution scratch buffer.
+//! length `M = next_pow2(2p − 1)` through the planned radix-2 kernel
+//! ([`Radix2Tables`]), so the fallback reuses the same SIMD fast path as
+//! every other plan. All tables (chirp, the kernel's forward spectrum
+//! `B`, the kernel's swap list and stage twiddles) are precomputed at
+//! plan time; execution only touches the caller-provided convolution
+//! scratch buffer.
 //!
-//! The tables here are built directly from [`crate::fft::twiddle`]
-//! rather than through the plan cache: a plan build never re-enters the
-//! cache, so construction stays self-contained and the cache holds only
-//! the lengths users actually requested (not internal convolution
-//! lengths).
+//! Twiddle sharing happens at the table level, through the process-wide
+//! [`crate::fft::twiddle::TwiddleCache`] inside [`Radix2Tables::new`] —
+//! a plan build never re-enters the *plan* cache, so construction stays
+//! self-contained while the convolution length's half-circle table is
+//! still shared with any other plan that needs it.
 
 use super::complex::Complex32;
-use super::radix2;
+use super::radix2::Radix2Tables;
+use super::simd;
 use super::twiddle;
 
 /// A prepared Bluestein transform for one prime (or otherwise
@@ -36,10 +38,10 @@ pub(crate) struct BluesteinPlan {
     chirp: Vec<Complex32>,
     /// Forward FFT of the convolution kernel `conj(c)[±j]`, length `m`.
     b_fft: Vec<Complex32>,
-    /// Forward half-circle table for the length-`m` radix-2 kernel.
-    twiddles: Vec<Complex32>,
-    /// Bit-reversal table for the length-`m` radix-2 kernel.
-    bitrev: Vec<u32>,
+    /// Planned *forward* length-`m` radix-2 kernel; the convolution's
+    /// inverse runs through the conjugation identity, so one direction
+    /// serves both.
+    kernel: Radix2Tables,
 }
 
 impl BluesteinPlan {
@@ -52,8 +54,7 @@ impl BluesteinPlan {
         let m = (2 * p - 1).next_power_of_two();
         let chirp: Vec<Complex32> =
             (0..p).map(|j| twiddle::unit(j * j, 2 * p, inverse)).collect();
-        let twiddles = twiddle::forward_table(m);
-        let bitrev = twiddle::bit_reverse_table(m);
+        let kernel = Radix2Tables::new(m, false);
 
         // Convolution kernel b[j] = conj(c[|j|]) for j in −(p−1)..p,
         // wrapped circularly into length m (m ≥ 2p−1, so the positive and
@@ -65,9 +66,9 @@ impl BluesteinPlan {
             b[j] = v;
             b[m - j] = v;
         }
-        radix2::fft_in_place(&mut b, &twiddles, &bitrev);
+        kernel.execute(&mut b);
 
-        Self { p, m, chirp, b_fft: b, twiddles, bitrev }
+        Self { p, m, chirp, b_fft: b, kernel }
     }
 
     /// Transform length.
@@ -93,13 +94,20 @@ impl BluesteinPlan {
         for (j, c) in conv.iter_mut().take(self.p).enumerate() {
             *c = src[j * stride] * self.chirp[j];
         }
-        radix2::fft_in_place(conv, &self.twiddles, &self.bitrev);
-        for (c, b) in conv.iter_mut().zip(&self.b_fft) {
-            *c = *c * *b;
-        }
+        self.kernel.execute(conv);
+        simd::pointwise_mul(conv, &self.b_fft);
         // The inverse here is the convolution theorem's 1/m-normalized
-        // one — unrelated to the outer transform's direction.
-        radix2::ifft_in_place(conv, &self.twiddles, &self.bitrev);
+        // one — unrelated to the outer transform's direction. It runs
+        // through the conjugation identity over the forward kernel,
+        // exactly like `radix2::ifft_in_place`.
+        for v in conv.iter_mut() {
+            *v = v.conj();
+        }
+        self.kernel.execute(conv);
+        let scale = 1.0 / self.m as f32;
+        for v in conv.iter_mut() {
+            *v = v.conj().scale(scale);
+        }
         for (k, d) in dst.iter_mut().take(self.p).enumerate() {
             *d = conv[k] * self.chirp[k];
         }

@@ -16,7 +16,9 @@
 //! (`w_r^{i·q}`) are precomputed once per plan and shared by all
 //! sub-transforms at that level, so execution does no trigonometry. The
 //! radix-2 and radix-4 combines are specialized (their twiddle-free
-//! lanes and ±i rotations need no general multiply); larger radices go
+//! lanes and ±i rotations need no general multiply) and run through the
+//! lane-parallel [`super::simd`] butterflies — dispatched to AVX2/NEON
+//! at runtime, bitwise-equal to the scalar formulas; larger radices go
 //! through the generic matrix.
 //!
 //! Direction is baked into the tables (conjugated for the inverse); the
@@ -25,6 +27,7 @@
 
 use super::bluestein::BluesteinPlan;
 use super::complex::Complex32;
+use super::simd;
 use super::twiddle;
 
 /// Largest prime executed as a direct O(r²) combine stage. Trial
@@ -215,31 +218,30 @@ fn rec(
     }
 
     // Combine: at each output index k, an r-point DFT across the
-    // twiddled sub-results. Lane i = 0 always carries twiddle 1.
+    // twiddled sub-results. Lane i = 0 always carries twiddle 1. The
+    // radix-2/-4 arms run the lane-parallel SIMD butterflies over the
+    // contiguous lane-i twiddle rows (layout `i·m + k` means row i is
+    // exactly `twiddles[i·m..(i+1)·m]`).
     match r {
         2 => {
-            for k in 0..m {
-                let a = dst[k];
-                let b = dst[m + k] * level.twiddles[m + k];
-                dst[k] = a + b;
-                dst[m + k] = a - b;
-            }
+            let (lo, hi) = dst.split_at_mut(m);
+            simd::butterfly_radix2(lo, hi, &level.twiddles[m..2 * m]);
         }
         4 => {
-            for k in 0..m {
-                let t0 = dst[k];
-                let t1 = dst[m + k] * level.twiddles[m + k];
-                let t2 = dst[2 * m + k] * level.twiddles[2 * m + k];
-                let t3 = dst[3 * m + k] * level.twiddles[3 * m + k];
-                let s02 = t0 + t2;
-                let d02 = t0 - t2;
-                let s13 = t1 + t3;
-                let d13 = if inverse { (t1 - t3).mul_i() } else { (t1 - t3).mul_neg_i() };
-                dst[k] = s02 + s13;
-                dst[m + k] = d02 + d13;
-                dst[2 * m + k] = s02 - s13;
-                dst[3 * m + k] = d02 - d13;
-            }
+            let (d0, rest) = dst.split_at_mut(m);
+            let (d1, rest) = rest.split_at_mut(m);
+            let (d2, d3) = rest.split_at_mut(m);
+            let tw = &level.twiddles;
+            simd::butterfly_radix4(
+                d0,
+                d1,
+                d2,
+                d3,
+                &tw[m..2 * m],
+                &tw[2 * m..3 * m],
+                &tw[3 * m..4 * m],
+                inverse,
+            );
         }
         _ => {
             let temp = &mut temp[..r];

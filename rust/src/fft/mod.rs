@@ -8,11 +8,14 @@
 //! - [`Complex32`] — `repr(C)` complex type, byte-compatible with
 //!   interleaved `f32` pairs on the wire,
 //! - [`Plan`] — per-`(length, direction)` plan mirroring `fftw_plan`:
-//!   powers of two run the iterative radix-2 kernel ([`radix2`]), every
+//!   powers of two run a split-radix kernel over the lane-parallel
+//!   [`simd`] butterflies (AVX2/NEON dispatched at runtime, scalar
+//!   fallback — [`radix2`] keeps the iterative reference kernel), every
 //!   other length is factorized into radix-4 / radix-2 / odd-prime
 //!   Cooley–Tukey stages (the private `mixed` engine) with a Bluestein
 //!   chirp-z fallback for large prime factors (`bluestein`); plans are
-//!   memoized in the process-wide [`plan::PlanCache`],
+//!   memoized in the process-wide [`plan::PlanCache`], and twiddle
+//!   tables are shared across plans via [`twiddle::TwiddleCache`],
 //! - [`dft`] — the O(n²) oracle used only by tests,
 //! - [`batch`] — row-batched transforms executed in parallel on the
 //!   shared [`crate::task::ThreadPool`] (the "+pthreads" in the paper's
@@ -32,10 +35,12 @@ pub mod dft;
 pub mod plan;
 pub mod radix2;
 pub mod real;
+pub mod simd;
 pub mod twiddle;
 
 mod bluestein;
 mod mixed;
+mod splitradix;
 
 pub use batch::fft_rows_parallel;
 pub use complex::Complex32;

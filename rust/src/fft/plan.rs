@@ -9,15 +9,18 @@
 //! times, the same usage discipline FFTW requires.
 //!
 //! Any length `n ≥ 1` is supported. Powers of two dispatch to the
-//! specialized iterative radix-2 kernel ([`crate::fft::radix2`]);
-//! everything else goes through the mixed-radix Cooley–Tukey engine
-//! (radix-4 / radix-2 / odd-prime stages) with a Bluestein fallback for
-//! large prime factors.
+//! split-radix kernel (fewest twiddle multiplies of the power-of-two
+//! algorithms, combined with the lane-parallel [`crate::fft::simd`]
+//! butterflies); everything else goes through the mixed-radix
+//! Cooley–Tukey engine (radix-4 / radix-2 / odd-prime stages) with a
+//! Bluestein fallback for large prime factors. Twiddle tables are
+//! shared across plans through [`crate::fft::twiddle::TwiddleCache`].
 
 use super::complex::Complex32;
 use super::mixed::MixedPlan;
-use super::radix2;
-use super::twiddle;
+use super::simd;
+use super::splitradix::SplitRadixPlan;
+use std::cell::RefCell;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -57,10 +60,31 @@ pub struct FftScratch {
     conv: Vec<Complex32>,
 }
 
+thread_local! {
+    /// Per-thread scratch backing [`FftScratch::with_thread_local`].
+    /// Const-initialized (empty `Vec`s), so touching it never allocates
+    /// until a transform actually needs staging space.
+    static SCRATCH: RefCell<FftScratch> =
+        const { RefCell::new(FftScratch { work: Vec::new(), temp: Vec::new(), conv: Vec::new() }) };
+}
+
 impl FftScratch {
     /// Empty scratch; buffers are grown on first use.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Run `f` against this thread's persistent scratch. Buffers stay
+    /// warm across calls, so steady-state transforms through
+    /// [`Plan::execute`] / [`Plan::execute_rows`] allocate nothing. If
+    /// the scratch is already borrowed (a re-entrant transform inside
+    /// `f`), the inner call falls back to a fresh scratch rather than
+    /// panicking.
+    pub fn with_thread_local<R>(f: impl FnOnce(&mut FftScratch) -> R) -> R {
+        SCRATCH.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut scratch) => f(&mut scratch),
+            Err(_) => f(&mut FftScratch::new()),
+        })
     }
 }
 
@@ -68,9 +92,9 @@ impl FftScratch {
 enum Kernel {
     /// `n == 1`: the transform is the identity.
     Identity,
-    /// Power-of-two length: iterative radix-2 kernel over direction-
-    /// signed half-circle tables.
-    Radix2 { twiddles: Vec<Complex32>, bitrev: Vec<u32> },
+    /// Power-of-two length: recursive split-radix over shared
+    /// direction-signed twiddle tables.
+    SplitRadix(SplitRadixPlan),
     /// General length: mixed-radix Cooley–Tukey (+ Bluestein base).
     Mixed(MixedPlan),
 }
@@ -106,10 +130,7 @@ impl Plan {
         let kernel = if n == 1 {
             Kernel::Identity
         } else if n.is_power_of_two() {
-            Kernel::Radix2 {
-                twiddles: twiddle::half_table(n, dir.is_inverse()),
-                bitrev: twiddle::bit_reverse_table(n),
-            }
+            Kernel::SplitRadix(SplitRadixPlan::new(n, dir.is_inverse()))
         } else {
             let mp = MixedPlan::new(n, dir.is_inverse());
             debug_assert_eq!(mp.len(), n);
@@ -141,8 +162,20 @@ impl Plan {
     pub fn radices(&self) -> Vec<usize> {
         match &self.kernel {
             Kernel::Identity => Vec::new(),
-            Kernel::Radix2 { .. } => vec![2; self.n.trailing_zeros() as usize],
+            Kernel::SplitRadix(_) => vec![2; self.n.trailing_zeros() as usize],
             Kernel::Mixed(mp) => mp.radices(),
+        }
+    }
+
+    /// Human-readable kernel label for diagnostics (`repro kernels`,
+    /// bench CSV provenance): `"identity"`, `"split-radix"`,
+    /// `"mixed-radix"`, or `"mixed-radix+bluestein"`.
+    pub fn kernel_name(&self) -> &'static str {
+        match &self.kernel {
+            Kernel::Identity => "identity",
+            Kernel::SplitRadix(_) => "split-radix",
+            Kernel::Mixed(mp) if mp.uses_bluestein() => "mixed-radix+bluestein",
+            Kernel::Mixed(_) => "mixed-radix",
         }
     }
 
@@ -153,14 +186,15 @@ impl Plan {
         matches!(&self.kernel, Kernel::Mixed(mp) if mp.uses_bluestein())
     }
 
-    /// Execute in place, allocating transient scratch as needed. Loops
-    /// should prefer [`Plan::execute_with_scratch`].
+    /// Execute in place against the thread-local scratch — steady-state
+    /// calls allocate nothing once the thread's buffers have warmed up.
+    /// Loops that manage their own scratch lifetime can use
+    /// [`Plan::execute_with_scratch`] directly.
     ///
     /// # Panics
     /// If `x.len() != self.len()`.
     pub fn execute(&self, x: &mut [Complex32]) {
-        let mut scratch = FftScratch::new();
-        self.execute_with_scratch(x, &mut scratch);
+        FftScratch::with_thread_local(|scratch| self.execute_with_scratch(x, scratch));
     }
 
     /// Execute in place against caller-owned scratch — allocation-free
@@ -172,19 +206,14 @@ impl Plan {
         assert_eq!(x.len(), self.n, "buffer length {} != plan length {}", x.len(), self.n);
         match &self.kernel {
             Kernel::Identity => {}
-            Kernel::Radix2 { twiddles, bitrev } => {
-                radix2::fft_in_place_dir(x, twiddles, bitrev, self.dir.is_inverse());
-            }
+            Kernel::SplitRadix(sr) => sr.execute(x, &mut scratch.work),
             Kernel::Mixed(mp) => {
                 let FftScratch { work, temp, conv } = scratch;
                 mp.execute(x, work, temp, conv);
             }
         }
         if self.dir.is_inverse() && self.n > 1 {
-            let scale = 1.0 / self.n as f32;
-            for v in x.iter_mut() {
-                *v = v.scale(scale);
-            }
+            simd::scale_in_place(x, 1.0 / self.n as f32);
         }
     }
 
@@ -200,10 +229,11 @@ impl Plan {
             data.len(),
             self.n
         );
-        let mut scratch = FftScratch::new();
-        for row in data.chunks_exact_mut(self.n) {
-            self.execute_with_scratch(row, &mut scratch);
-        }
+        FftScratch::with_thread_local(|scratch| {
+            for row in data.chunks_exact_mut(self.n) {
+                self.execute_with_scratch(row, scratch);
+            }
+        });
     }
 
     /// FLOP estimate for one execution (5 n log2 n — the standard FFT
@@ -413,6 +443,29 @@ mod tests {
     #[should_panic(expected = "buffer length")]
     fn plan_rejects_wrong_length() {
         Plan::new(8, Direction::Forward).execute(&mut vec![Complex32::ZERO; 4]);
+    }
+
+    #[test]
+    fn kernel_names_cover_all_paths() {
+        assert_eq!(Plan::new(1, Direction::Forward).kernel_name(), "identity");
+        assert_eq!(Plan::new(1024, Direction::Forward).kernel_name(), "split-radix");
+        assert_eq!(Plan::new(360, Direction::Forward).kernel_name(), "mixed-radix");
+        assert_eq!(Plan::new(1013, Direction::Forward).kernel_name(), "mixed-radix+bluestein");
+    }
+
+    #[test]
+    fn thread_local_scratch_is_reentrant_safe() {
+        // execute() inside a with_thread_local closure sees the scratch
+        // already borrowed and must fall back to a fresh one, not panic.
+        let x = random_signal(42, 360);
+        let mut inner = x.clone();
+        FftScratch::with_thread_local(|outer| {
+            outer.work.clear();
+            Plan::new(360, Direction::Forward).execute(&mut inner);
+        });
+        let mut reference = x;
+        Plan::new(360, Direction::Forward).execute(&mut reference);
+        assert_eq!(flat(&inner), flat(&reference));
     }
 
     #[test]

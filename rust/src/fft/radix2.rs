@@ -15,6 +15,114 @@
 //! plan, not here.
 
 use super::complex::Complex32;
+use super::simd;
+use super::twiddle::TwiddleCache;
+
+/// Precomputed iterative radix-2 kernel: shared-cache twiddle tables,
+/// a cache-blocked bit-reversal swap list, and per-stage *contiguous*
+/// twiddle tables sized for [`simd::butterfly_radix2`].
+///
+/// This is the planned counterpart of [`fft_in_place_dir`] and computes
+/// bitwise-identical results (asserted in the tests below): the swap
+/// list applies the same disjoint transpositions, the specialized
+/// first two stages are copied verbatim, and the SIMD butterfly uses a
+/// mul/addsub complex product that rounds exactly like the scalar
+/// formula. Bluestein's convolution kernel builds on this, which keeps
+/// chirp-z results bit-identical to the legacy path.
+///
+/// Direction is baked in at build time; no normalization is applied
+/// (the planner scales inverse results once).
+pub struct Radix2Tables {
+    n: usize,
+    inverse: bool,
+    /// Bit-reversal as disjoint `i < j` transpositions, sorted by
+    /// destination cache line (`j / 64`) so the scattered side of each
+    /// swap walks memory mostly forward instead of hopping across the
+    /// whole array in bit-reversed order.
+    swaps: Vec<(u32, u32)>,
+    /// `stage_tw[s][k] = w^{k·(n/len)}` for stage `len = 8 << s` — the
+    /// stage's twiddles de-strided into a contiguous table so the SIMD
+    /// butterfly streams them with unit stride.
+    stage_tw: Vec<Vec<Complex32>>,
+}
+
+impl Radix2Tables {
+    /// Build tables for power-of-two `n >= 2`; twiddle and bit-reversal
+    /// tables are shared through the process-wide
+    /// [`TwiddleCache`].
+    pub fn new(n: usize, inverse: bool) -> Self {
+        assert!(n.is_power_of_two() && n >= 2, "radix-2 tables need power-of-two n >= 2, got {n}");
+        let cache = TwiddleCache::global();
+        let bitrev = cache.bitrev(n);
+        let mut swaps: Vec<(u32, u32)> = bitrev
+            .iter()
+            .enumerate()
+            .filter(|&(i, &j)| (i as u32) < j)
+            .map(|(i, &j)| (i as u32, j))
+            .collect();
+        swaps.sort_by_key(|&(i, j)| (j / 64, i));
+        let half = cache.half(n, inverse);
+        let mut stage_tw = Vec::new();
+        let mut len = 8;
+        while len <= n {
+            let tstride = n / len;
+            stage_tw.push((0..len / 2).map(|k| half[k * tstride]).collect());
+            len <<= 1;
+        }
+        Self { n, inverse, swaps, stage_tw }
+    }
+
+    /// Transform length the tables were built for.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Always false — a plan for `n >= 2` transforms at least two points.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// In-place transform of exactly [`Radix2Tables::len`] points.
+    /// Unnormalized in both directions, like [`fft_in_place_dir`].
+    pub fn execute(&self, x: &mut [Complex32]) {
+        assert_eq!(x.len(), self.n, "radix-2 tables are for length {}, got {}", self.n, x.len());
+        for &(i, j) in &self.swaps {
+            x.swap(i as usize, j as usize);
+        }
+
+        // Stage 1 (len=2): butterflies with twiddle 1.
+        for pair in x.chunks_exact_mut(2) {
+            let (a, b) = (pair[0], pair[1]);
+            pair[0] = a + b;
+            pair[1] = a - b;
+        }
+        if self.n == 2 {
+            return;
+        }
+
+        // Stage 2 (len=4): twiddles are 1 and ∓i (direction-dependent).
+        for quad in x.chunks_exact_mut(4) {
+            let (a, b) = (quad[0], quad[2]);
+            quad[0] = a + b;
+            quad[2] = a - b;
+            let rot = if self.inverse { quad[3].mul_i() } else { quad[3].mul_neg_i() };
+            let (c, d) = (quad[1], rot);
+            quad[1] = c + d;
+            quad[3] = c - d;
+        }
+
+        // General stages (len = 8, 16, ..., n): lane-parallel butterflies
+        // over contiguous per-stage twiddle tables.
+        let mut len = 8;
+        for tw in &self.stage_tw {
+            for block in x.chunks_exact_mut(len) {
+                let (lo, hi) = block.split_at_mut(len / 2);
+                simd::butterfly_radix2(lo, hi, tw);
+            }
+            len <<= 1;
+        }
+    }
+}
 
 /// In-place forward FFT. `twiddles` is `forward_table(n)`, `bitrev` is
 /// `bit_reverse_table(n)`.
@@ -291,6 +399,27 @@ mod tests {
         ifft_in_place(&mut y, &tw, &br);
         let slow = idft(&x);
         assert_close(&flat(&y), &flat(&slow), 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn planned_tables_bitwise_match_legacy_kernel() {
+        use crate::fft::twiddle::half_table;
+        let mut rng = Pcg32::new(9);
+        for log2n in [1usize, 2, 3, 4, 7, 10] {
+            let n = 1 << log2n;
+            for inverse in [false, true] {
+                let x = random_signal(&mut rng, n);
+                let tables = Radix2Tables::new(n, inverse);
+                assert_eq!(tables.len(), n);
+                assert!(!tables.is_empty());
+                let mut planned = x.clone();
+                tables.execute(&mut planned);
+                let mut legacy = x.clone();
+                let (tw, br) = (half_table(n, inverse), bit_reverse_table(n));
+                fft_in_place_dir(&mut legacy, &tw, &br, inverse);
+                assert_eq!(flat(&planned), flat(&legacy), "n={n} inverse={inverse}");
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@
 
 use super::complex::Complex32;
 use super::plan::{Direction, FftScratch, Plan, PlanCache};
+use super::twiddle::TwiddleCache;
 use crate::task::parallel_chunks_mut;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -49,8 +50,10 @@ pub fn spectrum_len(n: usize) -> usize {
 pub struct RealPlan {
     n: usize,
     half: Arc<Plan>,
-    /// `w^k = e^{-2πik/n}` for `k = 0..n/2` (f64-computed, rounded once).
-    twiddles: Vec<Complex32>,
+    /// `w^k = e^{-2πik/n}` for `k = 0..n/2` — the forward half-circle
+    /// table of length `n`, shared through [`TwiddleCache`] (same values
+    /// the old per-plan loop computed: f64 phase, rounded once).
+    twiddles: Arc<Vec<Complex32>>,
 }
 
 impl RealPlan {
@@ -59,11 +62,7 @@ impl RealPlan {
     pub fn new(n: usize) -> Self {
         assert!(n >= 2 && n % 2 == 0, "RealPlan requires even n >= 2, got {n}");
         let m = n / 2;
-        let twiddles = (0..m)
-            .map(|k| {
-                Complex32::cis_f64(-2.0 * std::f64::consts::PI * k as f64 / n as f64)
-            })
-            .collect();
+        let twiddles = TwiddleCache::global().half(n, false);
         Self { n, half: PlanCache::global().plan(m, Direction::Forward), twiddles }
     }
 
@@ -167,7 +166,7 @@ impl Default for RealPlanCache {
 pub fn rfft_packed(x: &[f32]) -> Vec<Complex32> {
     let plan = RealPlanCache::global().plan(x.len());
     let mut out = vec![Complex32::ZERO; plan.packed_len()];
-    plan.execute_packed(x, &mut out, &mut FftScratch::new());
+    FftScratch::with_thread_local(|scratch| plan.execute_packed(x, &mut out, scratch));
     out
 }
 
@@ -268,19 +267,22 @@ pub fn rfft_rows_packed_into(src: &[f32], n: usize, out: &mut [Complex32], nthre
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let nthreads = nthreads.min(hw).max(1);
     if nthreads == 1 || rows == 1 {
-        let mut scratch = FftScratch::new();
-        for (r, orow) in out.chunks_exact_mut(m).enumerate() {
-            plan.execute_packed(&src[r * n..(r + 1) * n], orow, &mut scratch);
-        }
+        FftScratch::with_thread_local(|scratch| {
+            for (r, orow) in out.chunks_exact_mut(m).enumerate() {
+                plan.execute_packed(&src[r * n..(r + 1) * n], orow, scratch);
+            }
+        });
         return;
     }
     let rows_per_chunk = rows.div_ceil(nthreads);
     parallel_chunks_mut(out, rows_per_chunk * m, nthreads, |band_idx, band| {
-        let mut scratch = FftScratch::new();
-        for (k, orow) in band.chunks_exact_mut(m).enumerate() {
-            let r = band_idx * rows_per_chunk + k;
-            plan.execute_packed(&src[r * n..(r + 1) * n], orow, &mut scratch);
-        }
+        // Each worker thread reuses its own persistent scratch.
+        FftScratch::with_thread_local(|scratch| {
+            for (k, orow) in band.chunks_exact_mut(m).enumerate() {
+                let r = band_idx * rows_per_chunk + k;
+                plan.execute_packed(&src[r * n..(r + 1) * n], orow, scratch);
+            }
+        });
     });
 }
 

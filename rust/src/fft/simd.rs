@@ -1,0 +1,776 @@
+//! Runtime-dispatched SIMD micro-kernels for the complex combines.
+//!
+//! Every butterfly in the kernel layer bottoms out in one of a handful
+//! of lane-parallel operations on interleaved [`Complex32`] buffers:
+//! the twiddled radix-2 butterfly, the radix-4 combine, the split-radix
+//! combine, the pointwise spectrum multiply (Bluestein), and the inverse
+//! `1/n` scale. This module provides each of them three ways:
+//!
+//! - an **AVX2** path (x86-64, 4 complex values per 256-bit vector),
+//!   selected at runtime with `is_x86_feature_detected!("avx2")`,
+//! - a **NEON** path (aarch64, 2 complex values per 128-bit vector),
+//!   always available on that target,
+//! - the **scalar** path, which is both the fallback and the reference
+//!   the property tests compare against.
+//!
+//! # Bitwise equivalence
+//!
+//! The SIMD paths are *bitwise identical* to the scalar path, not merely
+//! close: the complex multiply is implemented as two lane products and an
+//! add/sub — `(a·c − b·d, a·d + b·c)` with exactly one rounding per
+//! operation, the same sequence the scalar [`Complex32`] `Mul` performs —
+//! and deliberately does **not** use FMA contraction, which would change
+//! the rounding. Rust never auto-contracts float expressions, so scalar
+//! and vector lanes round identically and `tests/simd_equivalence.rs`
+//! asserts equality with `==`, not a tolerance.
+//!
+//! The dispatched tier can be forced to the scalar path by setting the
+//! environment variable `HPXFFT_SIMD=scalar` before first use (the tier
+//! is detected once and cached); `repro kernels` prints the active tier.
+
+use super::complex::Complex32;
+use std::sync::OnceLock;
+
+/// Instruction-set tier the dispatched kernels run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// AVX2 256-bit vectors — 4 interleaved complex values per operation.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON 128-bit vectors — 2 interleaved complex values per operation.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+    /// Portable scalar fallback (also the property-test reference).
+    Scalar,
+}
+
+impl SimdTier {
+    /// Human-readable tier name for CSV rows and `repro kernels`.
+    pub fn name(self) -> &'static str {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            SimdTier::Neon => "neon",
+            SimdTier::Scalar => "scalar",
+        }
+    }
+
+    /// Complex values processed per vector operation.
+    pub fn lanes(self) -> usize {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2 => 4,
+            #[cfg(target_arch = "aarch64")]
+            SimdTier::Neon => 2,
+            SimdTier::Scalar => 1,
+        }
+    }
+}
+
+/// The tier every dispatched kernel in this module uses. Detected once
+/// per process (CPUID on x86-64) and cached; `HPXFFT_SIMD=scalar` forces
+/// the scalar path for A/B runs and CI equivalence sweeps.
+pub fn tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(detect)
+}
+
+fn detect() -> SimdTier {
+    if std::env::var("HPXFFT_SIMD").map(|v| v == "scalar").unwrap_or(false) {
+        return SimdTier::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdTier::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdTier::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdTier::Scalar
+}
+
+/// Twiddled radix-2 butterfly over equal-length slices:
+/// `(lo[k], hi[k]) ← (lo[k] + hi[k]·tw[k], lo[k] − hi[k]·tw[k])`.
+pub fn butterfly_radix2(lo: &mut [Complex32], hi: &mut [Complex32], tw: &[Complex32]) {
+    debug_assert!(lo.len() == hi.len() && hi.len() == tw.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::butterfly_radix2(lo, hi, tw) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::butterfly_radix2(lo, hi, tw) },
+        SimdTier::Scalar => butterfly_radix2_scalar(lo, hi, tw),
+    }
+}
+
+/// Scalar reference for [`butterfly_radix2`] (bitwise-identical).
+pub fn butterfly_radix2_scalar(lo: &mut [Complex32], hi: &mut [Complex32], tw: &[Complex32]) {
+    for ((a, b), w) in lo.iter_mut().zip(hi.iter_mut()).zip(tw) {
+        let t = *b * *w;
+        let av = *a;
+        *a = av + t;
+        *b = av - t;
+    }
+}
+
+/// Twiddled radix-4 combine over four equal-length lanes — the
+/// mixed-radix engine's `r = 4` stage. Lane 0 carries twiddle 1; lanes
+/// 1–3 are multiplied by `w1`/`w2`/`w3` first, then the 4-point DFT
+/// (`±1, ∓i` rotations only) combines them in place.
+#[allow(clippy::too_many_arguments)]
+pub fn butterfly_radix4(
+    d0: &mut [Complex32],
+    d1: &mut [Complex32],
+    d2: &mut [Complex32],
+    d3: &mut [Complex32],
+    w1: &[Complex32],
+    w2: &[Complex32],
+    w3: &[Complex32],
+    inverse: bool,
+) {
+    debug_assert!(d0.len() == d1.len() && d1.len() == d2.len() && d2.len() == d3.len());
+    debug_assert!(w1.len() == d0.len() && w2.len() == d0.len() && w3.len() == d0.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::butterfly_radix4(d0, d1, d2, d3, w1, w2, w3, inverse) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::butterfly_radix4(d0, d1, d2, d3, w1, w2, w3, inverse) },
+        SimdTier::Scalar => butterfly_radix4_scalar(d0, d1, d2, d3, w1, w2, w3, inverse),
+    }
+}
+
+/// Scalar reference for [`butterfly_radix4`] (bitwise-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn butterfly_radix4_scalar(
+    d0: &mut [Complex32],
+    d1: &mut [Complex32],
+    d2: &mut [Complex32],
+    d3: &mut [Complex32],
+    w1: &[Complex32],
+    w2: &[Complex32],
+    w3: &[Complex32],
+    inverse: bool,
+) {
+    for k in 0..d0.len() {
+        let t0 = d0[k];
+        let t1 = d1[k] * w1[k];
+        let t2 = d2[k] * w2[k];
+        let t3 = d3[k] * w3[k];
+        let s02 = t0 + t2;
+        let d02 = t0 - t2;
+        let s13 = t1 + t3;
+        let d13 = if inverse { (t1 - t3).mul_i() } else { (t1 - t3).mul_neg_i() };
+        d0[k] = s02 + s13;
+        d1[k] = d02 + d13;
+        d2[k] = s02 - s13;
+        d3[k] = d02 - d13;
+    }
+}
+
+/// Split-radix combine: given the length-`n/2` even sub-transform `U`
+/// (split as `u0`/`u1`, `n/4` entries each) and the two length-`n/4` odd
+/// sub-transforms `z1` (`x[4j+1]`) and `z3` (`x[4j+3]`), produce the four
+/// output quarters in place:
+///
+/// ```text
+/// t1 = w¹ᵏ·Z[k]   t3 = w³ᵏ·Z'[k]
+/// X[k]        = U[k]     + (t1 + t3)        → u0[k]
+/// X[k + n/2]  = U[k]     − (t1 + t3)        → z1[k]
+/// X[k + n/4]  = U[k+n/4] ∓ i·(t1 − t3)      → u1[k]
+/// X[k + 3n/4] = U[k+n/4] ± i·(t1 − t3)      → z3[k]
+/// ```
+///
+/// (upper signs forward, lower inverse).
+#[allow(clippy::too_many_arguments)]
+pub fn split_radix_combine(
+    u0: &mut [Complex32],
+    u1: &mut [Complex32],
+    z1: &mut [Complex32],
+    z3: &mut [Complex32],
+    w1: &[Complex32],
+    w3: &[Complex32],
+    inverse: bool,
+) {
+    debug_assert!(u0.len() == u1.len() && u1.len() == z1.len() && z1.len() == z3.len());
+    debug_assert!(w1.len() == u0.len() && w3.len() == u0.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::split_radix_combine(u0, u1, z1, z3, w1, w3, inverse) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::split_radix_combine(u0, u1, z1, z3, w1, w3, inverse) },
+        SimdTier::Scalar => split_radix_combine_scalar(u0, u1, z1, z3, w1, w3, inverse),
+    }
+}
+
+/// Scalar reference for [`split_radix_combine`] (bitwise-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn split_radix_combine_scalar(
+    u0: &mut [Complex32],
+    u1: &mut [Complex32],
+    z1: &mut [Complex32],
+    z3: &mut [Complex32],
+    w1: &[Complex32],
+    w3: &[Complex32],
+    inverse: bool,
+) {
+    for k in 0..u0.len() {
+        let t1 = z1[k] * w1[k];
+        let t3 = z3[k] * w3[k];
+        let s = t1 + t3;
+        let d = t1 - t3;
+        let rot = if inverse { d.mul_i() } else { d.mul_neg_i() };
+        let a = u0[k];
+        let b = u1[k];
+        u0[k] = a + s;
+        z1[k] = a - s;
+        u1[k] = b + rot;
+        z3[k] = b - rot;
+    }
+}
+
+/// Pointwise complex multiply `a[k] ← a[k]·b[k]` — the Bluestein
+/// convolution's spectrum product.
+pub fn pointwise_mul(a: &mut [Complex32], b: &[Complex32]) {
+    debug_assert_eq!(a.len(), b.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::pointwise_mul(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::pointwise_mul(a, b) },
+        SimdTier::Scalar => pointwise_mul_scalar(a, b),
+    }
+}
+
+/// Scalar reference for [`pointwise_mul`] (bitwise-identical).
+pub fn pointwise_mul_scalar(a: &mut [Complex32], b: &[Complex32]) {
+    for (x, y) in a.iter_mut().zip(b) {
+        *x = *x * *y;
+    }
+}
+
+/// Real-scalar scale `x[k] ← x[k]·s` — the inverse transform's `1/n`
+/// normalization pass.
+pub fn scale_in_place(x: &mut [Complex32], s: f32) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::scale_in_place(x, s) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::scale_in_place(x, s) },
+        SimdTier::Scalar => scale_in_place_scalar(x, s),
+    }
+}
+
+/// Scalar reference for [`scale_in_place`] (bitwise-identical).
+pub fn scale_in_place_scalar(x: &mut [Complex32], s: f32) {
+    for v in x.iter_mut() {
+        *v = v.scale(s);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 lane kernels. Each `__m256` holds 4 interleaved complex
+    //! values `[re0, im0, re1, im1, re2, im2, re3, im3]`; loads go
+    //! through the `repr(C)` layout guarantee of [`Complex32`]. The
+    //! complex multiply is mul + addsub (no FMA) so every lane rounds
+    //! exactly like the scalar `Complex32` operators — see the module
+    //! docs on bitwise equivalence.
+
+    use super::Complex32;
+    use std::arch::x86_64::*;
+
+    /// `a·b` per complex lane with scalar-identical rounding:
+    /// `re = a.re·b.re − a.im·b.im`, `im = a.re·b.im + a.im·b.re`.
+    #[inline]
+    unsafe fn cmul(a: __m256, b: __m256) -> __m256 {
+        let ar = _mm256_moveldup_ps(a); // [a.re, a.re, ...]
+        let ai = _mm256_movehdup_ps(a); // [a.im, a.im, ...]
+        let bsw = _mm256_permute_ps::<0xB1>(b); // [b.im, b.re, ...]
+        // addsub: even lanes subtract, odd lanes add — exactly the
+        // scalar (re, im) formula, one rounding per op, no contraction.
+        _mm256_addsub_ps(_mm256_mul_ps(ar, b), _mm256_mul_ps(ai, bsw))
+    }
+
+    /// `−i·v` per lane: `(re, im) → (im, −re)` — swap pairs, negate odd
+    /// lanes (sign-bit xor, exact — matches `Complex32::mul_neg_i`).
+    #[inline]
+    unsafe fn mul_neg_i(v: __m256) -> __m256 {
+        let sw = _mm256_permute_ps::<0xB1>(v);
+        _mm256_xor_ps(sw, _mm256_set_ps(-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0))
+    }
+
+    /// `i·v` per lane: `(re, im) → (−im, re)` — swap pairs, negate even
+    /// lanes.
+    #[inline]
+    unsafe fn mul_i(v: __m256) -> __m256 {
+        let sw = _mm256_permute_ps::<0xB1>(v);
+        _mm256_xor_ps(sw, _mm256_set_ps(0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn butterfly_radix2(
+        lo: &mut [Complex32],
+        hi: &mut [Complex32],
+        tw: &[Complex32],
+    ) {
+        let m = lo.len();
+        let quads = m / 4;
+        let lp = lo.as_mut_ptr() as *mut f32;
+        let hp = hi.as_mut_ptr() as *mut f32;
+        let tp = tw.as_ptr() as *const f32;
+        for q in 0..quads {
+            let off = q * 8;
+            let a = _mm256_loadu_ps(lp.add(off));
+            let b = _mm256_loadu_ps(hp.add(off));
+            let w = _mm256_loadu_ps(tp.add(off));
+            let t = cmul(b, w);
+            _mm256_storeu_ps(lp.add(off), _mm256_add_ps(a, t));
+            _mm256_storeu_ps(hp.add(off), _mm256_sub_ps(a, t));
+        }
+        let done = quads * 4;
+        super::butterfly_radix2_scalar(&mut lo[done..], &mut hi[done..], &tw[done..]);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn butterfly_radix4(
+        d0: &mut [Complex32],
+        d1: &mut [Complex32],
+        d2: &mut [Complex32],
+        d3: &mut [Complex32],
+        w1: &[Complex32],
+        w2: &[Complex32],
+        w3: &[Complex32],
+        inverse: bool,
+    ) {
+        let m = d0.len();
+        let quads = m / 4;
+        let p0 = d0.as_mut_ptr() as *mut f32;
+        let p1 = d1.as_mut_ptr() as *mut f32;
+        let p2 = d2.as_mut_ptr() as *mut f32;
+        let p3 = d3.as_mut_ptr() as *mut f32;
+        let q1 = w1.as_ptr() as *const f32;
+        let q2 = w2.as_ptr() as *const f32;
+        let q3 = w3.as_ptr() as *const f32;
+        for q in 0..quads {
+            let off = q * 8;
+            let t0 = _mm256_loadu_ps(p0.add(off));
+            let t1 = cmul(_mm256_loadu_ps(p1.add(off)), _mm256_loadu_ps(q1.add(off)));
+            let t2 = cmul(_mm256_loadu_ps(p2.add(off)), _mm256_loadu_ps(q2.add(off)));
+            let t3 = cmul(_mm256_loadu_ps(p3.add(off)), _mm256_loadu_ps(q3.add(off)));
+            let s02 = _mm256_add_ps(t0, t2);
+            let d02 = _mm256_sub_ps(t0, t2);
+            let s13 = _mm256_add_ps(t1, t3);
+            let d = _mm256_sub_ps(t1, t3);
+            let d13 = if inverse { mul_i(d) } else { mul_neg_i(d) };
+            _mm256_storeu_ps(p0.add(off), _mm256_add_ps(s02, s13));
+            _mm256_storeu_ps(p1.add(off), _mm256_add_ps(d02, d13));
+            _mm256_storeu_ps(p2.add(off), _mm256_sub_ps(s02, s13));
+            _mm256_storeu_ps(p3.add(off), _mm256_sub_ps(d02, d13));
+        }
+        let done = quads * 4;
+        super::butterfly_radix4_scalar(
+            &mut d0[done..],
+            &mut d1[done..],
+            &mut d2[done..],
+            &mut d3[done..],
+            &w1[done..],
+            &w2[done..],
+            &w3[done..],
+            inverse,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn split_radix_combine(
+        u0: &mut [Complex32],
+        u1: &mut [Complex32],
+        z1: &mut [Complex32],
+        z3: &mut [Complex32],
+        w1: &[Complex32],
+        w3: &[Complex32],
+        inverse: bool,
+    ) {
+        let m = u0.len();
+        let quads = m / 4;
+        let pu0 = u0.as_mut_ptr() as *mut f32;
+        let pu1 = u1.as_mut_ptr() as *mut f32;
+        let pz1 = z1.as_mut_ptr() as *mut f32;
+        let pz3 = z3.as_mut_ptr() as *mut f32;
+        let pw1 = w1.as_ptr() as *const f32;
+        let pw3 = w3.as_ptr() as *const f32;
+        for q in 0..quads {
+            let off = q * 8;
+            let t1 = cmul(_mm256_loadu_ps(pz1.add(off)), _mm256_loadu_ps(pw1.add(off)));
+            let t3 = cmul(_mm256_loadu_ps(pz3.add(off)), _mm256_loadu_ps(pw3.add(off)));
+            let s = _mm256_add_ps(t1, t3);
+            let d = _mm256_sub_ps(t1, t3);
+            let rot = if inverse { mul_i(d) } else { mul_neg_i(d) };
+            let a = _mm256_loadu_ps(pu0.add(off));
+            let b = _mm256_loadu_ps(pu1.add(off));
+            _mm256_storeu_ps(pu0.add(off), _mm256_add_ps(a, s));
+            _mm256_storeu_ps(pz1.add(off), _mm256_sub_ps(a, s));
+            _mm256_storeu_ps(pu1.add(off), _mm256_add_ps(b, rot));
+            _mm256_storeu_ps(pz3.add(off), _mm256_sub_ps(b, rot));
+        }
+        let done = quads * 4;
+        super::split_radix_combine_scalar(
+            &mut u0[done..],
+            &mut u1[done..],
+            &mut z1[done..],
+            &mut z3[done..],
+            &w1[done..],
+            &w3[done..],
+            inverse,
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pointwise_mul(a: &mut [Complex32], b: &[Complex32]) {
+        let quads = a.len() / 4;
+        let pa = a.as_mut_ptr() as *mut f32;
+        let pb = b.as_ptr() as *const f32;
+        for q in 0..quads {
+            let off = q * 8;
+            let va = _mm256_loadu_ps(pa.add(off));
+            let vb = _mm256_loadu_ps(pb.add(off));
+            _mm256_storeu_ps(pa.add(off), cmul(va, vb));
+        }
+        let done = quads * 4;
+        super::pointwise_mul_scalar(&mut a[done..], &b[done..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_in_place(x: &mut [Complex32], s: f32) {
+        let quads = x.len() / 4;
+        let px = x.as_mut_ptr() as *mut f32;
+        let vs = _mm256_set1_ps(s);
+        for q in 0..quads {
+            let off = q * 8;
+            _mm256_storeu_ps(px.add(off), _mm256_mul_ps(_mm256_loadu_ps(px.add(off)), vs));
+        }
+        let done = quads * 4;
+        super::scale_in_place_scalar(&mut x[done..], s);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON lane kernels (2 interleaved complex values per 128-bit
+    //! vector). Same mul + add/sub structure as the AVX2 path — no FMA,
+    //! so lanes round exactly like the scalar operators.
+
+    use super::Complex32;
+    use std::arch::aarch64::*;
+
+    /// Flip the sign bit of the even (real-slot) lanes.
+    #[inline]
+    unsafe fn negate_even(v: float32x4_t) -> float32x4_t {
+        const M: [u32; 4] = [0x8000_0000, 0, 0x8000_0000, 0];
+        let mask = vld1q_u32(M.as_ptr());
+        vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+    }
+
+    /// Flip the sign bit of the odd (imag-slot) lanes.
+    #[inline]
+    unsafe fn negate_odd(v: float32x4_t) -> float32x4_t {
+        const M: [u32; 4] = [0, 0x8000_0000, 0, 0x8000_0000];
+        let mask = vld1q_u32(M.as_ptr());
+        vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+    }
+
+    /// `a·b` per complex lane, scalar-identical rounding.
+    #[inline]
+    unsafe fn cmul(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        let ar = vtrn1q_f32(a, a); // [a0.re, a0.re, a1.re, a1.re]
+        let ai = vtrn2q_f32(a, a); // [a0.im, a0.im, a1.im, a1.im]
+        let bsw = vrev64q_f32(b); // [b0.im, b0.re, b1.im, b1.re]
+        // p1 ± p2 with the even lane subtracted: negate p2's even lanes,
+        // then a single add — one rounding per op, like the scalar Mul.
+        vaddq_f32(vmulq_f32(ar, b), negate_even(vmulq_f32(ai, bsw)))
+    }
+
+    /// `−i·v` per lane: `(re, im) → (im, −re)`.
+    #[inline]
+    unsafe fn mul_neg_i(v: float32x4_t) -> float32x4_t {
+        negate_odd(vrev64q_f32(v))
+    }
+
+    /// `i·v` per lane: `(re, im) → (−im, re)`.
+    #[inline]
+    unsafe fn mul_i(v: float32x4_t) -> float32x4_t {
+        negate_even(vrev64q_f32(v))
+    }
+
+    pub(super) unsafe fn butterfly_radix2(
+        lo: &mut [Complex32],
+        hi: &mut [Complex32],
+        tw: &[Complex32],
+    ) {
+        let pairs = lo.len() / 2;
+        let lp = lo.as_mut_ptr() as *mut f32;
+        let hp = hi.as_mut_ptr() as *mut f32;
+        let tp = tw.as_ptr() as *const f32;
+        for q in 0..pairs {
+            let off = q * 4;
+            let a = vld1q_f32(lp.add(off));
+            let b = vld1q_f32(hp.add(off));
+            let w = vld1q_f32(tp.add(off));
+            let t = cmul(b, w);
+            vst1q_f32(lp.add(off), vaddq_f32(a, t));
+            vst1q_f32(hp.add(off), vsubq_f32(a, t));
+        }
+        let done = pairs * 2;
+        super::butterfly_radix2_scalar(&mut lo[done..], &mut hi[done..], &tw[done..]);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn butterfly_radix4(
+        d0: &mut [Complex32],
+        d1: &mut [Complex32],
+        d2: &mut [Complex32],
+        d3: &mut [Complex32],
+        w1: &[Complex32],
+        w2: &[Complex32],
+        w3: &[Complex32],
+        inverse: bool,
+    ) {
+        let pairs = d0.len() / 2;
+        let p0 = d0.as_mut_ptr() as *mut f32;
+        let p1 = d1.as_mut_ptr() as *mut f32;
+        let p2 = d2.as_mut_ptr() as *mut f32;
+        let p3 = d3.as_mut_ptr() as *mut f32;
+        let q1 = w1.as_ptr() as *const f32;
+        let q2 = w2.as_ptr() as *const f32;
+        let q3 = w3.as_ptr() as *const f32;
+        for q in 0..pairs {
+            let off = q * 4;
+            let t0 = vld1q_f32(p0.add(off));
+            let t1 = cmul(vld1q_f32(p1.add(off)), vld1q_f32(q1.add(off)));
+            let t2 = cmul(vld1q_f32(p2.add(off)), vld1q_f32(q2.add(off)));
+            let t3 = cmul(vld1q_f32(p3.add(off)), vld1q_f32(q3.add(off)));
+            let s02 = vaddq_f32(t0, t2);
+            let d02 = vsubq_f32(t0, t2);
+            let s13 = vaddq_f32(t1, t3);
+            let d = vsubq_f32(t1, t3);
+            let d13 = if inverse { mul_i(d) } else { mul_neg_i(d) };
+            vst1q_f32(p0.add(off), vaddq_f32(s02, s13));
+            vst1q_f32(p1.add(off), vaddq_f32(d02, d13));
+            vst1q_f32(p2.add(off), vsubq_f32(s02, s13));
+            vst1q_f32(p3.add(off), vsubq_f32(d02, d13));
+        }
+        let done = pairs * 2;
+        super::butterfly_radix4_scalar(
+            &mut d0[done..],
+            &mut d1[done..],
+            &mut d2[done..],
+            &mut d3[done..],
+            &w1[done..],
+            &w2[done..],
+            &w3[done..],
+            inverse,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn split_radix_combine(
+        u0: &mut [Complex32],
+        u1: &mut [Complex32],
+        z1: &mut [Complex32],
+        z3: &mut [Complex32],
+        w1: &[Complex32],
+        w3: &[Complex32],
+        inverse: bool,
+    ) {
+        let pairs = u0.len() / 2;
+        let pu0 = u0.as_mut_ptr() as *mut f32;
+        let pu1 = u1.as_mut_ptr() as *mut f32;
+        let pz1 = z1.as_mut_ptr() as *mut f32;
+        let pz3 = z3.as_mut_ptr() as *mut f32;
+        let pw1 = w1.as_ptr() as *const f32;
+        let pw3 = w3.as_ptr() as *const f32;
+        for q in 0..pairs {
+            let off = q * 4;
+            let t1 = cmul(vld1q_f32(pz1.add(off)), vld1q_f32(pw1.add(off)));
+            let t3 = cmul(vld1q_f32(pz3.add(off)), vld1q_f32(pw3.add(off)));
+            let s = vaddq_f32(t1, t3);
+            let d = vsubq_f32(t1, t3);
+            let rot = if inverse { mul_i(d) } else { mul_neg_i(d) };
+            let a = vld1q_f32(pu0.add(off));
+            let b = vld1q_f32(pu1.add(off));
+            vst1q_f32(pu0.add(off), vaddq_f32(a, s));
+            vst1q_f32(pz1.add(off), vsubq_f32(a, s));
+            vst1q_f32(pu1.add(off), vaddq_f32(b, rot));
+            vst1q_f32(pz3.add(off), vsubq_f32(b, rot));
+        }
+        let done = pairs * 2;
+        super::split_radix_combine_scalar(
+            &mut u0[done..],
+            &mut u1[done..],
+            &mut z1[done..],
+            &mut z3[done..],
+            &w1[done..],
+            &w3[done..],
+            inverse,
+        );
+    }
+
+    pub(super) unsafe fn pointwise_mul(a: &mut [Complex32], b: &[Complex32]) {
+        let pairs = a.len() / 2;
+        let pa = a.as_mut_ptr() as *mut f32;
+        let pb = b.as_ptr() as *const f32;
+        for q in 0..pairs {
+            let off = q * 4;
+            vst1q_f32(pa.add(off), cmul(vld1q_f32(pa.add(off)), vld1q_f32(pb.add(off))));
+        }
+        let done = pairs * 2;
+        super::pointwise_mul_scalar(&mut a[done..], &b[done..]);
+    }
+
+    pub(super) unsafe fn scale_in_place(x: &mut [Complex32], s: f32) {
+        let pairs = x.len() / 2;
+        let px = x.as_mut_ptr() as *mut f32;
+        let vs = vdupq_n_f32(s);
+        for q in 0..pairs {
+            let off = q * 4;
+            vst1q_f32(px.add(off), vmulq_f32(vld1q_f32(px.add(off)), vs));
+        }
+        let done = pairs * 2;
+        super::scale_in_place_scalar(&mut x[done..], s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn signal(seed: u64, n: usize) -> Vec<Complex32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+    }
+
+    #[test]
+    fn tier_is_cached_and_named() {
+        let t = tier();
+        assert_eq!(t, tier());
+        assert!(!t.name().is_empty());
+        assert!(t.lanes() >= 1);
+    }
+
+    #[test]
+    fn radix2_dispatch_matches_scalar_bitwise() {
+        // Lengths straddling the vector width exercise the tail path.
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 33, 1000] {
+            let lo0 = signal(n as u64, n);
+            let hi0 = signal(n as u64 + 1, n);
+            let tw = signal(n as u64 + 2, n);
+            let (mut lo_a, mut hi_a) = (lo0.clone(), hi0.clone());
+            butterfly_radix2(&mut lo_a, &mut hi_a, &tw);
+            let (mut lo_b, mut hi_b) = (lo0, hi0);
+            butterfly_radix2_scalar(&mut lo_b, &mut hi_b, &tw);
+            assert_eq!(lo_a, lo_b, "n={n}");
+            assert_eq!(hi_a, hi_b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn radix4_dispatch_matches_scalar_bitwise() {
+        for n in [1usize, 3, 4, 6, 8, 17, 64] {
+            for inverse in [false, true] {
+                let lanes: Vec<Vec<Complex32>> =
+                    (0..4).map(|i| signal(100 + n as u64 + i, n)).collect();
+                let tws: Vec<Vec<Complex32>> =
+                    (0..3).map(|i| signal(200 + n as u64 + i, n)).collect();
+                let mut a: Vec<Vec<Complex32>> = lanes.clone();
+                {
+                    let (d0, rest) = a.split_at_mut(1);
+                    let (d1, rest) = rest.split_at_mut(1);
+                    let (d2, d3) = rest.split_at_mut(1);
+                    butterfly_radix4(
+                        &mut d0[0],
+                        &mut d1[0],
+                        &mut d2[0],
+                        &mut d3[0],
+                        &tws[0],
+                        &tws[1],
+                        &tws[2],
+                        inverse,
+                    );
+                }
+                let mut b: Vec<Vec<Complex32>> = lanes;
+                {
+                    let (d0, rest) = b.split_at_mut(1);
+                    let (d1, rest) = rest.split_at_mut(1);
+                    let (d2, d3) = rest.split_at_mut(1);
+                    butterfly_radix4_scalar(
+                        &mut d0[0],
+                        &mut d1[0],
+                        &mut d2[0],
+                        &mut d3[0],
+                        &tws[0],
+                        &tws[1],
+                        &tws[2],
+                        inverse,
+                    );
+                }
+                assert_eq!(a, b, "n={n} inverse={inverse}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_radix_dispatch_matches_scalar_bitwise() {
+        for n in [1usize, 2, 4, 5, 8, 16, 63] {
+            for inverse in [false, true] {
+                let lanes: Vec<Vec<Complex32>> =
+                    (0..4).map(|i| signal(300 + n as u64 + i, n)).collect();
+                let w1 = signal(400 + n as u64, n);
+                let w3 = signal(401 + n as u64, n);
+                let mut a = lanes.clone();
+                {
+                    let (u0, rest) = a.split_at_mut(1);
+                    let (u1, rest) = rest.split_at_mut(1);
+                    let (z1, z3) = rest.split_at_mut(1);
+                    split_radix_combine(
+                        &mut u0[0], &mut u1[0], &mut z1[0], &mut z3[0], &w1, &w3, inverse,
+                    );
+                }
+                let mut b = lanes;
+                {
+                    let (u0, rest) = b.split_at_mut(1);
+                    let (u1, rest) = rest.split_at_mut(1);
+                    let (z1, z3) = rest.split_at_mut(1);
+                    split_radix_combine_scalar(
+                        &mut u0[0], &mut u1[0], &mut z1[0], &mut z3[0], &w1, &w3, inverse,
+                    );
+                }
+                assert_eq!(a, b, "n={n} inverse={inverse}");
+            }
+        }
+    }
+
+    #[test]
+    fn pointwise_and_scale_match_scalar_bitwise() {
+        for n in [0usize, 1, 5, 8, 100] {
+            let a0 = signal(500 + n as u64, n);
+            let b = signal(501 + n as u64, n);
+            let mut a1 = a0.clone();
+            pointwise_mul(&mut a1, &b);
+            let mut a2 = a0.clone();
+            pointwise_mul_scalar(&mut a2, &b);
+            assert_eq!(a1, a2, "pointwise n={n}");
+
+            let mut s1 = a0.clone();
+            scale_in_place(&mut s1, 0.125);
+            let mut s2 = a0;
+            scale_in_place_scalar(&mut s2, 0.125);
+            assert_eq!(s1, s2, "scale n={n}");
+        }
+    }
+}

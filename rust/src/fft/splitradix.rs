@@ -1,0 +1,222 @@
+//! Split-radix FFT for power-of-two lengths.
+//!
+//! The conjugate-pair-free "classic" split-radix decimation-in-time
+//! recursion: an n-point DFT splits into one n/2 DFT over the even
+//! samples and two n/4 DFTs over the `1 mod 4` / `3 mod 4` samples,
+//! combined with one `w^k` and one `w^{3k}` twiddle multiply per output
+//! group of four. That is ~33% fewer twiddle multiplies than radix-2
+//! (4/3·n·log₂n real mul/adds asymptotically), and the combine loop is
+//! exactly the lane-parallel shape [`super::simd::split_radix_combine`]
+//! vectorizes.
+//!
+//! Twiddle tables come from the process-wide
+//! [`super::twiddle::TwiddleCache`], so the size-n plan and every
+//! size-n/2ᵏ recursion level share one `Arc`'d half-circle table per
+//! level (the `w^{3k}` table is small — n/4 entries per level — and is
+//! materialized per plan for a branch-free inner loop).
+//!
+//! The recursion reads strided input from a scratch copy and writes each
+//! sub-DFT contiguously into its quarter of the output, so the combine
+//! is in-place over four disjoint quarter-slices — no per-level
+//! allocation, and the only scratch is the caller-provided work buffer.
+
+use super::complex::Complex32;
+use super::simd;
+use super::twiddle::TwiddleCache;
+use std::sync::Arc;
+
+/// One recursion level's twiddle state, for combine length `4·q`.
+struct SrLevel {
+    /// Quarter length `len/4`; the combine walks `k in 0..q`.
+    q: usize,
+    /// Shared half-circle table for this level's length: `w^k`,
+    /// `k in 0..len/2`. The combine uses the first `q` entries.
+    half: Arc<Vec<Complex32>>,
+    /// Materialized `w^{3k}` for `k in 0..q` (folds the `w^{len/2} = -1`
+    /// wraparound so the inner loop stays branch-free).
+    w3: Vec<Complex32>,
+}
+
+/// Precomputed split-radix plan for one `(length, direction)` pair.
+pub(crate) struct SplitRadixPlan {
+    n: usize,
+    inverse: bool,
+    /// Levels for combine lengths `n, n/2, …, 8` (lengths 4, 2, 1 are
+    /// twiddle-free base cases). Empty for `n < 8`.
+    levels: Vec<SrLevel>,
+}
+
+impl SplitRadixPlan {
+    /// Build a plan for power-of-two `n >= 2`. `inverse` bakes the
+    /// twiddle conjugation into the tables (scaling stays with the
+    /// caller, matching the radix-2 kernel's convention).
+    pub(crate) fn new(n: usize, inverse: bool) -> Self {
+        assert!(n.is_power_of_two() && n >= 2, "split-radix needs power-of-two n >= 2, got {n}");
+        let cache = TwiddleCache::global();
+        let mut levels = Vec::new();
+        let mut len = n;
+        while len >= 8 {
+            let q = len / 4;
+            let half = cache.half(len, inverse);
+            let w3 = (0..q)
+                .map(|k| {
+                    let idx = 3 * k;
+                    if idx < len / 2 {
+                        half[idx]
+                    } else {
+                        -half[idx - len / 2]
+                    }
+                })
+                .collect();
+            levels.push(SrLevel { q, half, w3 });
+            len /= 2;
+        }
+        Self { n, inverse, levels }
+    }
+
+    /// Transform `x` in place, using `work` as scratch (resized to `n`;
+    /// contents clobbered). Unnormalized in both directions.
+    pub(crate) fn execute(&self, x: &mut [Complex32], work: &mut Vec<Complex32>) {
+        assert_eq!(x.len(), self.n, "split-radix plan is for length {}, got {}", self.n, x.len());
+        work.clear();
+        work.extend_from_slice(x);
+        rec(&self.levels, self.inverse, work, 1, x);
+    }
+}
+
+/// Recursive DIT step: DFT of `dst.len()` strided samples
+/// `src[0], src[stride], …` written contiguously into `dst`.
+///
+/// `levels[0]` always corresponds to `dst.len()` when `dst.len() >= 8`
+/// (the plan builds one level per halving down to 8, and the two `n/4`
+/// sub-calls skip two levels).
+fn rec(levels: &[SrLevel], inverse: bool, src: &[Complex32], stride: usize, dst: &mut [Complex32]) {
+    match dst.len() {
+        1 => dst[0] = src[0],
+        2 => {
+            let (a, b) = (src[0], src[stride]);
+            dst[0] = a + b;
+            dst[1] = a - b;
+        }
+        4 => {
+            let (a, b) = (src[0], src[stride]);
+            let (c, d) = (src[2 * stride], src[3 * stride]);
+            let s02 = a + c;
+            let d02 = a - c;
+            let s13 = b + d;
+            let rot = if inverse { (b - d).mul_i() } else { (b - d).mul_neg_i() };
+            dst[0] = s02 + s13;
+            dst[1] = d02 + rot;
+            dst[2] = s02 - s13;
+            dst[3] = d02 - rot;
+        }
+        len => {
+            let q = len / 4;
+            let lvl = &levels[0];
+            debug_assert_eq!(lvl.q, q, "level table out of step with recursion depth");
+            let (u, z) = dst.split_at_mut(len / 2);
+            let (z1, z3) = z.split_at_mut(q);
+            let rest1: &[SrLevel] = levels.get(1..).unwrap_or(&[]);
+            let rest2: &[SrLevel] = levels.get(2..).unwrap_or(&[]);
+            rec(rest1, inverse, src, stride * 2, u);
+            rec(rest2, inverse, &src[stride..], stride * 4, z1);
+            rec(rest2, inverse, &src[3 * stride..], stride * 4, z3);
+            let (u0, u1) = u.split_at_mut(q);
+            simd::split_radix_combine(u0, u1, z1, z3, &lvl.half[..q], &lvl.w3, inverse);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::fft::radix2;
+
+    fn test_signal(n: usize) -> Vec<Complex32> {
+        (0..n)
+            .map(|i| {
+                let t = i as f32;
+                Complex32::new((0.3 * t).sin() + 0.1 * t, (0.7 * t).cos() - 0.05 * t)
+            })
+            .collect()
+    }
+
+    fn assert_close(a: &[Complex32], b: &[Complex32], tol: f32, ctx: &str) {
+        let scale = b.iter().map(|c| c.abs()).fold(1.0f32, f32::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (*x - *y).abs() <= tol * scale,
+                "{ctx}: index {i}: {x:?} vs {y:?} (scale {scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_matches_dft_oracle() {
+        for &n in &[2usize, 4, 8, 16, 32, 64, 256, 1024] {
+            let x = test_signal(n);
+            let plan = SplitRadixPlan::new(n, false);
+            let mut y = x.clone();
+            let mut work = Vec::new();
+            plan.execute(&mut y, &mut work);
+            assert_close(&y, &dft(&x), 1e-5, &format!("forward n={n}"));
+        }
+    }
+
+    #[test]
+    fn matches_legacy_radix2_both_directions() {
+        for &n in &[2usize, 4, 8, 16, 128, 512, 2048] {
+            for inverse in [false, true] {
+                let x = test_signal(n);
+                let plan = SplitRadixPlan::new(n, inverse);
+                let mut y = x.clone();
+                let mut work = Vec::new();
+                plan.execute(&mut y, &mut work);
+                let mut reference = x.clone();
+                radix2::fft_in_place_dir(&mut reference, inverse);
+                assert_close(&y, &reference, 1e-5, &format!("n={n} inverse={inverse}"));
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip_recovers_input() {
+        for &n in &[8usize, 64, 1024] {
+            let x = test_signal(n);
+            let fwd = SplitRadixPlan::new(n, false);
+            let inv = SplitRadixPlan::new(n, true);
+            let mut y = x.clone();
+            let mut work = Vec::new();
+            fwd.execute(&mut y, &mut work);
+            inv.execute(&mut y, &mut work);
+            let scale = 1.0 / n as f32;
+            for v in &mut y {
+                *v = v.scale(scale);
+            }
+            assert_close(&y, &x, 1e-5, &format!("roundtrip n={n}"));
+        }
+    }
+
+    #[test]
+    fn impulse_gives_flat_spectrum_exactly() {
+        // The driver relies on this bitwise property for doctests: a unit
+        // impulse transforms to exactly 1+0i everywhere (every twiddle
+        // multiplies a zero or the table's exact leading 1).
+        let n = 16;
+        let mut x = vec![Complex32::ZERO; n];
+        x[0] = Complex32::ONE;
+        let plan = SplitRadixPlan::new(n, false);
+        let mut work = Vec::new();
+        plan.execute(&mut x, &mut work);
+        for (k, v) in x.iter().enumerate() {
+            assert_eq!((v.re, v.im), (1.0, 0.0), "bin {k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        SplitRadixPlan::new(12, false);
+    }
+}

@@ -8,6 +8,9 @@
 //! stage tables are built from.
 
 use super::complex::Complex32;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Half-size twiddle table for an n-point transform (`n` a power of
 /// two): `table[k] = e^{∓2πik/n}` for `k in 0..n/2` — minus sign for the
@@ -17,10 +20,131 @@ use super::complex::Complex32;
 /// second half is `-table[k - n/2]`.
 pub fn half_table(n: usize, inverse: bool) -> Vec<Complex32> {
     assert!(n.is_power_of_two() && n >= 2, "twiddle table needs power-of-two n >= 2, got {n}");
+    build_half(n, inverse)
+}
+
+/// Table builder shared by [`half_table`] and [`TwiddleCache`]: any even
+/// `n >= 2` (the cache also serves the real-FFT unpack tables, whose `n`
+/// is even but not necessarily a power of two).
+fn build_half(n: usize, inverse: bool) -> Vec<Complex32> {
     let half = n / 2;
     let sign = if inverse { 2.0 } else { -2.0 };
     let step = sign * std::f64::consts::PI / n as f64;
     (0..half).map(|k| Complex32::cis_f64(step * k as f64)).collect()
+}
+
+/// Process-wide cache of half-circle twiddle tables and bit-reversal
+/// permutations, shared across every plan in the process.
+///
+/// Tables are keyed by `(n, inverse)` and handed out as `Arc`s, so a
+/// size-n plan and the size-n/2 sub-plans of a split-radix or real-input
+/// factorization all point at memory computed once. When the `2n` table
+/// is already resident, the `n` table is *derived* from it by taking
+/// every second entry — `e^{∓2πi(2k)/2n} = e^{∓2πik/n}` and the f64
+/// phase `step·k` is identical under exact power-of-two scaling, so the
+/// derived table is bitwise equal to a directly computed one (asserted
+/// in the tests below).
+///
+/// Counters distinguish `hits` (table already resident), `computed`
+/// (built from `sin`/`cos`), and `derived` (strided copy of a resident
+/// parent) so cache-sharing behaviour is testable.
+pub struct TwiddleCache {
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    computed: AtomicU64,
+    derived: AtomicU64,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    halves: HashMap<(usize, bool), Arc<Vec<Complex32>>>,
+    bitrevs: HashMap<usize, Arc<Vec<u32>>>,
+}
+
+impl TwiddleCache {
+    /// New empty cache (the process normally uses [`TwiddleCache::global`]).
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(CacheInner::default()),
+            hits: AtomicU64::new(0),
+            computed: AtomicU64::new(0),
+            derived: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide shared instance.
+    pub fn global() -> &'static TwiddleCache {
+        static GLOBAL: OnceLock<TwiddleCache> = OnceLock::new();
+        GLOBAL.get_or_init(TwiddleCache::new)
+    }
+
+    /// Shared half-circle table `e^{∓2πik/n}`, `k in 0..n/2`, for any
+    /// even `n >= 2`. Bitwise identical to [`half_table`] for
+    /// power-of-two `n`.
+    pub fn half(&self, n: usize, inverse: bool) -> Arc<Vec<Complex32>> {
+        assert!(n >= 2 && n % 2 == 0, "twiddle cache needs even n >= 2, got {n}");
+        {
+            let inner = self.inner.lock().unwrap();
+            if let Some(t) = inner.halves.get(&(n, inverse)) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(t);
+            }
+            if let Some(parent) = inner.halves.get(&(2 * n, inverse)) {
+                // Derive without dropping the lock: a strided copy is
+                // cheaper than recomputing n/2 sin/cos pairs.
+                let t: Arc<Vec<Complex32>> = Arc::new(parent.iter().step_by(2).copied().collect());
+                drop(inner);
+                self.derived.fetch_add(1, Ordering::Relaxed);
+                let mut inner = self.inner.lock().unwrap();
+                let entry = inner.halves.entry((n, inverse)).or_insert(t);
+                return Arc::clone(entry);
+            }
+        }
+        // Compute outside the lock; racing builders produce identical
+        // tables and the first insert wins.
+        let t = Arc::new(build_half(n, inverse));
+        self.computed.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.halves.entry((n, inverse)).or_insert(t);
+        Arc::clone(entry)
+    }
+
+    /// Shared bit-reversal permutation for power-of-two `n`.
+    pub fn bitrev(&self, n: usize) -> Arc<Vec<u32>> {
+        {
+            let inner = self.inner.lock().unwrap();
+            if let Some(t) = inner.bitrevs.get(&n) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(t);
+            }
+        }
+        let t = Arc::new(bit_reverse_table(n));
+        self.computed.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.bitrevs.entry(n).or_insert(t);
+        Arc::clone(entry)
+    }
+
+    /// Lookups that found a resident table.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Tables built from scratch (trig evaluation).
+    pub fn computed(&self) -> u64 {
+        self.computed.load(Ordering::Relaxed)
+    }
+
+    /// Tables derived from a resident double-size parent (strided copy).
+    pub fn derived(&self) -> u64 {
+        self.derived.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for TwiddleCache {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Forward half-circle table — [`half_table`] with the forward sign.
@@ -115,6 +239,63 @@ mod tests {
         for (f, i) in fwd.iter().zip(&inv) {
             assert!((f.re - i.re).abs() < 1e-7 && (f.im + i.im).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn cache_shares_tables_by_pointer() {
+        let cache = TwiddleCache::new();
+        let a = cache.half(64, false);
+        let b = cache.half(64, false);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the resident table");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.computed(), 1);
+        // Direction is part of the key.
+        let c = cache.half(64, true);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn cache_derives_half_size_from_parent_bitwise() {
+        let cache = TwiddleCache::new();
+        for inverse in [false, true] {
+            let _parent = cache.half(1024, inverse);
+            let derived = cache.half(512, inverse);
+            let direct = half_table(512, inverse);
+            assert_eq!(derived.as_slice(), direct.as_slice(), "inverse={inverse}");
+        }
+        assert_eq!(cache.derived(), 2, "both half-size tables must come from the parent");
+    }
+
+    #[test]
+    fn cache_serves_even_non_pow2_real_unpack_tables() {
+        let cache = TwiddleCache::new();
+        let t = cache.half(12, false);
+        assert_eq!(t.len(), 6);
+        for (k, w) in t.iter().enumerate() {
+            let step = -2.0 * std::f64::consts::PI / 12.0;
+            let reference = Complex32::cis_f64(step * k as f64);
+            assert_eq!((w.re, w.im), (reference.re, reference.im), "k={k}");
+        }
+    }
+
+    #[test]
+    fn cache_bitrev_shared_and_correct() {
+        let cache = TwiddleCache::new();
+        let a = cache.bitrev(8);
+        assert_eq!(a.as_slice(), &[0, 4, 2, 6, 1, 5, 3, 7]);
+        let b = cache.bitrev(8);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn global_cache_counters_are_monotonic() {
+        let cache = TwiddleCache::global();
+        let h0 = cache.hits();
+        let _a = cache.half(256, false);
+        let _b = cache.half(256, false);
+        // Other tests share the global cache, so only assert deltas are
+        // at least what this thread contributed.
+        assert!(cache.hits() >= h0 + 1);
     }
 
     #[test]

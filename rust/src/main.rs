@@ -7,6 +7,8 @@
 //! - `repro fft ...` — one distributed FFT run (any port / variant /
 //!   engine), with verification.
 //! - `repro baseline ...` — the FFTW3-MPI+pthreads reference.
+//! - `repro kernels` — compute-kernel dispatch report: runtime SIMD
+//!   tier, cache-tile geometry, per-size throughput, cache counters.
 //! - `repro bench chunk-size` — regenerate Fig. 3.
 //! - `repro bench strong-scaling --variant all-to-all|scatter` —
 //!   regenerate Fig. 4 / Fig. 5.
@@ -60,6 +62,12 @@ USAGE:
              --domain real additionally needs even n2 with n2/2
              divisible by Pc)
   repro baseline [--rows N] [--cols N] [--nodes N] [--threads N] [--net]
+  repro kernels  [--sizes 256,1024,4096,1000,1013] [--reps N]
+                 (compute-kernel report: the SIMD tier runtime dispatch
+                  selected, transpose cache-tile geometry, per-size
+                  kernel + measured single-core GFLOP/s, and the
+                  twiddle/plan cache counters the sweep left behind;
+                  HPXFFT_SIMD=scalar forces the scalar tier)
   repro bench chunk-size      [--quick] [--reps N] [--out DIR]
                               [--chunk-bytes N] [--inflight N]
                               [--exec blocking|async]
@@ -125,6 +133,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("fft") => cmd_fft(&args),
         Some("fft3") => cmd_fft3(&args),
         Some("baseline") => cmd_baseline(&args),
+        Some("kernels") => cmd_kernels(&args),
         Some("bench") => match args.positional.get(1).map(|s| s.as_str()) {
             Some("chunk-size") => cmd_bench_chunk(&args),
             Some("strong-scaling") => cmd_bench_scaling(&args),
@@ -346,6 +355,53 @@ fn cmd_baseline(args: &Args) -> Result<()> {
         Some(err) => bail!("verification FAILED: rel L2 err {err:.2e}"),
         None => println!("verification: skipped"),
     }
+    Ok(())
+}
+
+/// `repro kernels` — report what the compute layer actually dispatches
+/// to on this machine: the runtime-detected SIMD tier, the transpose
+/// cache-blocking geometry, the kernel and measured single-core
+/// throughput for each requested transform size, and the twiddle/plan
+/// cache counters left behind by the sweep itself.
+fn cmd_kernels(args: &Args) -> Result<()> {
+    use hpx_fft::dist_fft::transpose::BLOCK;
+    use hpx_fft::fft::plan::{Direction, PlanCache};
+    use hpx_fft::fft::twiddle::TwiddleCache;
+    use hpx_fft::fft::{batch, simd};
+    args.check_known(&["sizes", "reps"])?;
+    let sizes: Vec<usize> = match args.get("sizes") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|e| anyhow::anyhow!("--sizes: {e}")))
+            .collect::<Result<_>>()?,
+        None => vec![256, 1024, 4096, 1000, 1013],
+    };
+    let reps: usize = args.get_or("reps", 200usize)?;
+    anyhow::ensure!(reps > 0, "--reps must be ≥ 1");
+    let tier = simd::tier();
+    println!("simd tier: {} ({} complex lanes per vector op)", tier.name(), tier.lanes());
+    println!(
+        "cache blocking: {BLOCK}×{BLOCK} transpose tiles ({} KiB per src+dst tile pair)",
+        2 * BLOCK * BLOCK * 8 / 1024
+    );
+    println!();
+    let mut t = hpx_fft::metrics::table::Table::new(&["n", "kernel", "GFLOP/s (1 core)"]);
+    for &n in &sizes {
+        anyhow::ensure!(n >= 1, "--sizes entries must be ≥ 1");
+        let plan = PlanCache::global().plan(n, Direction::Forward);
+        let gflops = batch::measure_row_throughput(n, reps) / 1e9;
+        t.row(&[n.to_string(), plan.kernel_name().into(), format!("{gflops:.2}")]);
+    }
+    print!("{}", t.render());
+    let tc = TwiddleCache::global();
+    println!(
+        "\ntwiddle cache: {} hits, {} tables computed, {} derived from resident 2n tables",
+        tc.hits(),
+        tc.computed(),
+        tc.derived()
+    );
+    let pc = PlanCache::global();
+    println!("plan cache:    {} hits, {} misses", pc.hits(), pc.misses());
     Ok(())
 }
 

@@ -1,0 +1,194 @@
+//! Steady-state allocation audit — proof that the compute hot paths are
+//! allocation-free once warm, enforced by a counting global allocator.
+//!
+//! Every allocation in this test binary bumps a global counter; a test
+//! warms a path (first call grows plan tables and scratch buffers to
+//! their high-water mark), then asserts the warm path's allocation delta
+//! is exactly zero. The libtest harness runs tests on several threads
+//! and its own bookkeeping allocates, so each measuring test (a) holds a
+//! serializing lock and (b) takes the *minimum* delta over several
+//! repetitions — a genuinely allocating hot path scores ≥ 1 on every
+//! repetition, while harness noise would have to pollute all of them to
+//! produce a false failure.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use hpx_fft::config::TransformSpec;
+use hpx_fft::dist_fft::grid3::{place_t1_slice, place_t2_slice, Grid3, PencilDims, ProcGrid};
+use hpx_fft::dist_fft::transpose::{place_chunk_slice_transposed, place_chunk_transposed};
+use hpx_fft::dist_fft::TransformRequest;
+use hpx_fft::fft::plan::{Direction, Plan, PlanCache};
+use hpx_fft::fft::{Complex32, FftScratch, RealPlan};
+use hpx_fft::util::rng::Pcg32;
+
+/// Counts every heap acquisition (alloc, alloc_zeroed, realloc) and
+/// delegates the actual work to the system allocator. Frees are not
+/// counted: the property under test is "no new memory", not "no frees".
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Serializes the measuring tests against each other.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Minimum allocation delta of `f` over `reps` runs (see module doc).
+fn min_delta(reps: usize, mut f: impl FnMut()) -> u64 {
+    (0..reps)
+        .map(|_| {
+            let before = ALLOCS.load(Ordering::SeqCst);
+            f();
+            ALLOCS.load(Ordering::SeqCst) - before
+        })
+        .min()
+        .expect("reps >= 1")
+}
+
+fn signal(n: usize, seed: u64) -> Vec<Complex32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+}
+
+/// Every planner kernel — split-radix (pow2), mixed-radix (composite),
+/// Bluestein (prime) — runs allocation-free against a warm caller-owned
+/// scratch.
+#[test]
+fn warm_plan_execute_with_scratch_is_allocation_free() {
+    let _guard = serial();
+    for n in [1024usize, 1000, 1013] {
+        let plan = Plan::new(n, Direction::Forward);
+        let mut scratch = FftScratch::new();
+        let mut buf = signal(n, 1);
+        plan.execute_with_scratch(&mut buf, &mut scratch);
+        plan.execute_with_scratch(&mut buf, &mut scratch);
+        let delta = min_delta(5, || plan.execute_with_scratch(&mut buf, &mut scratch));
+        assert_eq!(delta, 0, "warm execute_with_scratch allocated (n={n})");
+    }
+}
+
+/// The scratch-less entry point reuses the thread's persistent scratch,
+/// so it too is allocation-free once this thread has run a transform of
+/// each shape.
+#[test]
+fn warm_thread_local_execute_is_allocation_free() {
+    let _guard = serial();
+    for n in [512usize, 1000, 1013] {
+        let plan = Plan::new(n, Direction::Forward);
+        let mut buf = signal(n, 2);
+        plan.execute(&mut buf);
+        plan.execute(&mut buf);
+        let delta = min_delta(5, || plan.execute(&mut buf));
+        assert_eq!(delta, 0, "warm thread-local execute allocated (n={n})");
+    }
+}
+
+/// The packed r2c path (pack → half-size complex FFT → unpack) against a
+/// warm caller-owned scratch.
+#[test]
+fn warm_real_plan_execute_packed_is_allocation_free() {
+    let _guard = serial();
+    for n in [256usize, 1000] {
+        let plan = RealPlan::new(n);
+        let mut scratch = FftScratch::new();
+        let x: Vec<f32> = (0..n).map(|i| (i % 13) as f32 - 6.0).collect();
+        let mut out = vec![Complex32::ZERO; n / 2];
+        plan.execute_packed(&x, &mut out, &mut scratch);
+        plan.execute_packed(&x, &mut out, &mut scratch);
+        let delta = min_delta(5, || plan.execute_packed(&x, &mut out, &mut scratch));
+        assert_eq!(delta, 0, "warm execute_packed allocated (n={n})");
+    }
+}
+
+/// A warm plan-cache lookup hands back the memoized `Arc` without
+/// touching the heap.
+#[test]
+fn warm_plan_cache_lookup_is_allocation_free() {
+    let _guard = serial();
+    let cache = PlanCache::new();
+    drop(cache.plan(512, Direction::Forward));
+    let delta = min_delta(5, || drop(cache.plan(512, Direction::Forward)));
+    assert_eq!(delta, 0, "warm plan-cache lookup allocated");
+}
+
+/// The transpose placement primitives write into caller-owned slabs and
+/// never allocate — not even cold.
+#[test]
+fn chunk_placement_is_allocation_free() {
+    let _guard = serial();
+    let (rows, cols) = (96usize, 80usize);
+    let chunk = signal(rows * cols, 3);
+    let mut slab = vec![Complex32::ZERO; cols * rows];
+    let delta = min_delta(3, || {
+        place_chunk_transposed(&chunk, rows, cols, &mut slab, rows, 0);
+        place_chunk_slice_transposed(&chunk[17..], 17, rows, cols, &mut slab, rows, 0);
+    });
+    assert_eq!(delta, 0, "chunk placement allocated");
+}
+
+/// The 3-D pencil placement reductions delegate to the same primitive
+/// and inherit the property.
+#[test]
+fn pencil_placement_is_allocation_free() {
+    let _guard = serial();
+    let dims = PencilDims::new(Grid3::new(8, 8, 8), ProcGrid::new(2, 2)).expect("dims");
+    let t1 = signal(dims.t1_chunk_elems(), 4);
+    let t2 = signal(dims.t2_chunk_elems(), 5);
+    let mut stage_y = vec![Complex32::ZERO; dims.d0 * dims.d2c * dims.grid.n1];
+    let mut stage_x = vec![Complex32::ZERO; dims.d2c * dims.d1r * dims.grid.n0];
+    let delta = min_delta(3, || {
+        place_t1_slice(&t1, 0, &dims, &mut stage_y, 1);
+        place_t2_slice(&t2, 0, &dims, &mut stage_x, 1);
+    });
+    assert_eq!(delta, 0, "pencil placement allocated");
+}
+
+/// The end-to-end steady-state gate: a warm multi-tenant-API transform
+/// run should eventually allocate nothing. The distributed pipeline
+/// still allocates per run (cluster threads, wire buffers, report
+/// strings), so this is `#[ignore]`d — an audit hook, run explicitly
+/// with `cargo test --test alloc_free -- --ignored` to measure how far
+/// the hot path has come.
+#[test]
+#[ignore = "end-to-end pipeline still allocates per run; explicit audit hook"]
+fn warm_transform_request_run_is_allocation_free() {
+    let _guard = serial();
+    let transform = TransformRequest::grid(64, 64)
+        .spec(TransformSpec { threads_per_locality: 1, verify: false, ..TransformSpec::default() })
+        .localities(2)
+        .build()
+        .expect("build transform");
+    transform.run().expect("warm run");
+    let delta = min_delta(3, || {
+        transform.run().expect("steady-state run");
+    });
+    assert_eq!(delta, 0, "warm TransformRequest::run allocated {delta} times");
+}

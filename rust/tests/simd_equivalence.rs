@@ -1,0 +1,266 @@
+//! SIMD/scalar equivalence suite — the correctness gate for the
+//! lane-parallel butterfly kernels and the cache-blocked data movement.
+//!
+//! CI runs this file under both the default codegen flags and
+//! `RUSTFLAGS="-C target-cpu=native"`, so the dispatched vector path and
+//! the scalar twins are both exercised on identical inputs. Every
+//! dispatched op is asserted **bitwise** equal to its scalar twin — the
+//! AVX2 kernels use mul + addsub (never FMA) precisely so this holds —
+//! which is the induction step that makes every planned transform
+//! reproduce bit-for-bit across SIMD tiers. (`HPXFFT_SIMD=scalar`
+//! covers the third corner: forcing the scalar tier at runtime.)
+
+use std::sync::Arc;
+
+use hpx_fft::dist_fft::transpose::{
+    place_chunk_slice_transposed, place_chunk_transposed, transpose, transpose_naive, BLOCK,
+};
+use hpx_fft::fft::plan::{Direction, Plan, PlanCache};
+use hpx_fft::fft::twiddle::TwiddleCache;
+use hpx_fft::fft::{dft, radix2, simd, twiddle, Complex32};
+use hpx_fft::util::rng::Pcg32;
+use hpx_fft::util::testkit::assert_close;
+
+fn signal(n: usize, seed: u64) -> Vec<Complex32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| Complex32::new(rng.next_signal(), rng.next_signal())).collect()
+}
+
+fn flat(xs: &[Complex32]) -> Vec<f32> {
+    xs.iter().flat_map(|c| [c.re, c.im]).collect()
+}
+
+/// Bit patterns, so the comparison cannot be softened by `-0.0 == 0.0`.
+fn bits(xs: &[Complex32]) -> Vec<(u32, u32)> {
+    xs.iter().map(|c| (c.re.to_bits(), c.im.to_bits())).collect()
+}
+
+/// Lane lengths chosen to hit every code path in the vector kernels:
+/// empty, below one vector, exact vector multiples, and ragged tails.
+const LANE_LENS: [usize; 12] = [0, 1, 2, 3, 4, 5, 7, 8, 13, 16, 100, 255];
+
+#[test]
+fn radix2_dispatch_matches_scalar_twin_bitwise() {
+    for len in LANE_LENS {
+        let tw = signal(len, 900 + len as u64);
+        let (mut lo, mut hi) = (signal(len, 1), signal(len, 2));
+        let (mut lo_s, mut hi_s) = (lo.clone(), hi.clone());
+        simd::butterfly_radix2(&mut lo, &mut hi, &tw);
+        simd::butterfly_radix2_scalar(&mut lo_s, &mut hi_s, &tw);
+        assert_eq!(bits(&lo), bits(&lo_s), "radix2 lo len={len}");
+        assert_eq!(bits(&hi), bits(&hi_s), "radix2 hi len={len}");
+    }
+}
+
+#[test]
+fn radix4_dispatch_matches_scalar_twin_bitwise_both_directions() {
+    for len in LANE_LENS {
+        for inverse in [false, true] {
+            let (w1, w2, w3) = (signal(len, 20), signal(len, 21), signal(len, 22));
+            let (mut d0, mut d1, mut d2, mut d3) =
+                (signal(len, 10), signal(len, 11), signal(len, 12), signal(len, 13));
+            let (mut e0, mut e1, mut e2, mut e3) =
+                (d0.clone(), d1.clone(), d2.clone(), d3.clone());
+            simd::butterfly_radix4(&mut d0, &mut d1, &mut d2, &mut d3, &w1, &w2, &w3, inverse);
+            simd::butterfly_radix4_scalar(
+                &mut e0,
+                &mut e1,
+                &mut e2,
+                &mut e3,
+                &w1,
+                &w2,
+                &w3,
+                inverse,
+            );
+            assert_eq!(bits(&d0), bits(&e0), "radix4 d0 len={len} inverse={inverse}");
+            assert_eq!(bits(&d1), bits(&e1), "radix4 d1 len={len} inverse={inverse}");
+            assert_eq!(bits(&d2), bits(&e2), "radix4 d2 len={len} inverse={inverse}");
+            assert_eq!(bits(&d3), bits(&e3), "radix4 d3 len={len} inverse={inverse}");
+        }
+    }
+}
+
+#[test]
+fn split_radix_combine_dispatch_matches_scalar_twin_bitwise() {
+    for len in LANE_LENS {
+        for inverse in [false, true] {
+            let (w1, w3) = (signal(len, 23), signal(len, 24));
+            let (mut u0, mut u1, mut z1, mut z3) =
+                (signal(len, 30), signal(len, 31), signal(len, 32), signal(len, 33));
+            let (mut v0, mut v1, mut y1, mut y3) =
+                (u0.clone(), u1.clone(), z1.clone(), z3.clone());
+            simd::split_radix_combine(&mut u0, &mut u1, &mut z1, &mut z3, &w1, &w3, inverse);
+            simd::split_radix_combine_scalar(
+                &mut v0,
+                &mut v1,
+                &mut y1,
+                &mut y3,
+                &w1,
+                &w3,
+                inverse,
+            );
+            assert_eq!(bits(&u0), bits(&v0), "sr u0 len={len} inverse={inverse}");
+            assert_eq!(bits(&u1), bits(&v1), "sr u1 len={len} inverse={inverse}");
+            assert_eq!(bits(&z1), bits(&y1), "sr z1 len={len} inverse={inverse}");
+            assert_eq!(bits(&z3), bits(&y3), "sr z3 len={len} inverse={inverse}");
+        }
+    }
+}
+
+#[test]
+fn pointwise_ops_dispatch_matches_scalar_twin_bitwise() {
+    for len in LANE_LENS {
+        let b = signal(len, 41);
+        let mut a = signal(len, 40);
+        let mut a_s = a.clone();
+        simd::pointwise_mul(&mut a, &b);
+        simd::pointwise_mul_scalar(&mut a_s, &b);
+        assert_eq!(bits(&a), bits(&a_s), "pointwise_mul len={len}");
+
+        let mut s = signal(len, 42);
+        let mut s_s = s.clone();
+        simd::scale_in_place(&mut s, 0.37);
+        simd::scale_in_place_scalar(&mut s_s, 0.37);
+        assert_eq!(bits(&s), bits(&s_s), "scale_in_place len={len}");
+    }
+}
+
+/// Every kernel the planner can dispatch to — identity, split-radix
+/// (pow2), mixed-radix (composite), and Bluestein (large prime) — against
+/// the O(n²) oracle, both directions, with SIMD active as detected.
+#[test]
+fn plans_match_dft_oracle_across_kernel_paths() {
+    for n in [1usize, 2, 4, 6, 8, 16, 64, 256, 1024, 1000, 1013] {
+        let x = signal(n, 7 + n as u64);
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let plan = Plan::new(n, dir);
+            let mut y = x.clone();
+            plan.execute(&mut y);
+            let oracle =
+                if dir == Direction::Forward { dft::dft(&x) } else { dft::idft(&x) };
+            assert_close(&flat(&y), &flat(&oracle), 2e-2, 2e-3);
+        }
+    }
+}
+
+/// The split-radix plan against the retired iterative radix-2 reference
+/// kernel: different butterfly orderings, same transform to f32 accuracy.
+#[test]
+fn split_radix_plan_matches_legacy_radix2_kernel() {
+    for log2n in [1usize, 3, 6, 10] {
+        let n = 1usize << log2n;
+        for inverse in [false, true] {
+            let dir = if inverse { Direction::Inverse } else { Direction::Forward };
+            let plan = Plan::new(n, dir);
+            assert_eq!(plan.kernel_name(), "split-radix", "n={n}");
+            let x = signal(n, 50 + n as u64);
+            let mut a = x.clone();
+            plan.execute(&mut a);
+            let mut b = x;
+            radix2::fft_in_place_dir(
+                &mut b,
+                &twiddle::half_table(n, inverse),
+                &twiddle::bit_reverse_table(n),
+                inverse,
+            );
+            if inverse {
+                // The legacy kernel is unnormalized in both directions;
+                // the plan folds the 1/n in.
+                simd::scale_in_place_scalar(&mut b, 1.0 / n as f32);
+            }
+            assert_close(&flat(&a), &flat(&b), 1e-3, 1e-3);
+        }
+    }
+}
+
+/// The tiled transpose against the untiled textbook loop, on shapes that
+/// are non-square and not multiples of the tile edge — including
+/// degenerate single-row/column matrices. Pure data movement, so the
+/// equality is exact.
+#[test]
+fn tiled_transpose_matches_naive_on_awkward_shapes() {
+    for (r, c) in [
+        (1usize, 1usize),
+        (3, 5),
+        (BLOCK - 1, BLOCK + 1),
+        (129, 67),
+        (96, 2 * BLOCK + 5),
+        (1, 70),
+        (70, 1),
+    ] {
+        let data = signal(r * c, (r * 1000 + c) as u64);
+        assert_eq!(
+            bits(&transpose(&data, r, c)),
+            bits(&transpose_naive(&data, r, c)),
+            "shape {r}×{c}"
+        );
+    }
+}
+
+/// Feeding a chunk through `place_chunk_slice_transposed` in windows of
+/// any size — sub-row, row-aligned, row-straddling, or one giant slice —
+/// must land every element exactly where the one-shot placement puts it.
+#[test]
+fn windowed_slice_placement_matches_whole_chunk_placement() {
+    let (rows, cols) = (100usize, 37usize);
+    let chunk = signal(rows * cols, 5);
+    let slab_cols = rows + 9;
+    let col0 = 4;
+    let mut whole = vec![Complex32::ZERO; cols * slab_cols];
+    place_chunk_transposed(&chunk, rows, cols, &mut whole, slab_cols, col0);
+    for window in [1usize, rows - 1, rows, rows + 1, 3 * rows + 11, 501, chunk.len()] {
+        let mut sliced = vec![Complex32::ZERO; cols * slab_cols];
+        let mut off = 0;
+        while off < chunk.len() {
+            let take = window.min(chunk.len() - off);
+            place_chunk_slice_transposed(
+                &chunk[off..off + take],
+                off,
+                rows,
+                cols,
+                &mut sliced,
+                slab_cols,
+                col0,
+            );
+            off += take;
+        }
+        assert_eq!(bits(&whole), bits(&sliced), "window={window}");
+    }
+}
+
+/// Satellite: plan-cache hit/miss accounting over split-radix plans, on
+/// a fresh cache so the counters are exact.
+#[test]
+fn plan_cache_hit_miss_accounting_covers_split_radix() {
+    let cache = PlanCache::new();
+    let p1 = cache.plan(2048, Direction::Forward);
+    assert_eq!(p1.kernel_name(), "split-radix");
+    assert_eq!((cache.hits(), cache.misses()), (0, 1));
+    let p2 = cache.plan(2048, Direction::Forward);
+    assert!(Arc::ptr_eq(&p1, &p2), "second lookup must return the memoized plan");
+    assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    cache.plan(2048, Direction::Inverse);
+    assert_eq!((cache.hits(), cache.misses()), (1, 2));
+    cache.plan(2048, Direction::Inverse);
+    assert_eq!((cache.hits(), cache.misses()), (2, 2));
+}
+
+/// Satellite: a size-n/2 split-radix plan finds every one of its twiddle
+/// tables already resident from a size-n plan — table-level sharing
+/// through the global [`TwiddleCache`]. Counters are global, and other
+/// tests in this binary run concurrently, so the assertions are
+/// lower bounds on the deltas.
+#[test]
+fn split_radix_plans_share_twiddle_tables_across_sizes() {
+    let tc = TwiddleCache::global();
+    let _big = Plan::new(1 << 13, Direction::Forward);
+    let hits_before = tc.hits();
+    // Levels 4096, 2048, …, 8: ten half-tables, all resident from the
+    // 8192 plan's level stack.
+    let _small = Plan::new(1 << 12, Direction::Forward);
+    assert!(
+        tc.hits() >= hits_before + 10,
+        "expected ≥10 twiddle-cache hits building the half-size plan, got {}",
+        tc.hits() - hits_before
+    );
+}
