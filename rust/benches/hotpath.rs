@@ -262,6 +262,37 @@ fn main() {
         });
     }
 
+    // Observability overhead: with tracing disabled the span constructor
+    // is one relaxed atomic load and must stay cheap enough to leave
+    // compiled into every hot layer; the enabled cost (ring-buffer
+    // record) is reported alongside for contrast.
+    {
+        let iters = 1_000_000 / div;
+        let disabled_us = bench(&mut rows, "obs span disabled (gate check)", iters, || {
+            let _g = hpx_fft::obs::span("bench", "gate", 0);
+        });
+        bench(&mut rows, "obs instant disabled (gate check)", iters, || {
+            hpx_fft::obs::instant("bench", "gate", 0);
+        });
+        {
+            let session = hpx_fft::obs::session();
+            bench(&mut rows, "obs span enabled (ring record)", (200_000 / div).max(1), || {
+                let _g = hpx_fft::obs::span("bench", "gate", 0);
+            });
+            drop(session.finish());
+        }
+        // CI smoke gate: the disabled-mode hot path must stay within a
+        // few nanoseconds — tracing is compiled in everywhere, so any
+        // regression here taxes every chunk send in the codebase.
+        if smoke {
+            assert!(
+                disabled_us <= 0.025,
+                "disabled tracing gate costs {:.2} ns/op (budget 25 ns)",
+                disabled_us * 1e3
+            );
+        }
+    }
+
     // The tentpole comparison: monolithic pairwise vs pipelined chunked
     // all-to-all (exchange + unpack into the destination buffer) on the
     // LCI fabric under the IB-HDR wire model — the ISSUE's N=8 / 4 MiB

@@ -49,6 +49,10 @@ pub struct LoadConfig {
     pub threads: usize,
     /// Output directory for `service_load.csv`.
     pub out_dir: String,
+    /// Capture the whole burst under the process-wide trace session and
+    /// write `service_load.trace.json` plus a `service_metrics.prom`
+    /// registry snapshot next to the CSV (`--trace`).
+    pub trace: bool,
 }
 
 impl Default for LoadConfig {
@@ -63,6 +67,7 @@ impl Default for LoadConfig {
             max_inflight: 4,
             threads: 1,
             out_dir: "bench_out".to_string(),
+            trace: false,
         }
     }
 }
@@ -149,6 +154,9 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<Vec<TenantLoadReport>> {
         fault: None,
     })?;
 
+    // The trace session covers the burst itself, not the single-shot
+    // reference runs above it.
+    let session = cfg.trace.then(crate::obs::session);
     let started = Instant::now();
     let mut handles: Vec<(usize, usize, JobHandle)> = Vec::with_capacity(cfg.jobs);
     let mut assigned = vec![0usize; cfg.tenants];
@@ -183,6 +191,14 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<Vec<TenantLoadReport>> {
         }
     }
     let wall_s = started.elapsed().as_secs_f64();
+    if let Some(session) = session {
+        let events = session.finish();
+        crate::obs::chrome::export(&events, format!("{}/service_load.trace.json", cfg.out_dir))?;
+        std::fs::write(
+            format!("{}/service_metrics.prom", cfg.out_dir),
+            service.metrics_text(),
+        )?;
+    }
     let metrics = service.shutdown();
 
     let mut rows = Vec::with_capacity(cfg.tenants);
@@ -192,9 +208,15 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<Vec<TenantLoadReport>> {
             .iter()
             .find(|m| m.tenant == name)
             .ok_or_else(|| anyhow::anyhow!("no metrics for {name}"))?;
-        let (p50, p95, p99, mean) = match &m.latency {
-            Some(l) => (l.p50(), l.p95(), l.p99(), l.mean()),
-            None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
+        // Percentiles come from the tenant's shared latency histogram —
+        // one quantile implementation for the service's `metrics` verb
+        // and this table, monotone in p by construction. (The previous
+        // path re-sorted a raw sample vector per percentile call.)
+        let h = &m.latency_hist;
+        let (p50, p95, p99, mean) = if h.count() > 0 {
+            (h.percentile(50.0), h.percentile(95.0), h.percentile(99.0), h.mean())
+        } else {
+            (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
         };
         rows.push(TenantLoadReport {
             tenant: name,
@@ -307,6 +329,34 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("service_load.csv")).unwrap();
         assert!(csv.starts_with("tenant,jobs,completed,rejected,failed,mismatches,p50_us"));
         assert_eq!(csv.lines().count(), 3, "header + one row per tenant");
+    }
+
+    /// Regression: the table's percentiles route through the shared
+    /// exponential-bucket histogram, so p50 ≤ p95 ≤ p99 can never
+    /// invert — the ordering bug the old per-call resort left possible.
+    #[test]
+    fn traced_load_percentiles_monotone_and_artifacts_written() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-load-tr-{}", std::process::id()));
+        let cfg = LoadConfig {
+            tenants: 2,
+            jobs: 6,
+            queue_limit: 4,
+            trace: true,
+            out_dir: dir.to_str().unwrap().to_string(),
+            ..LoadConfig::default()
+        };
+        let rows = run(&cfg).unwrap();
+        for r in &rows {
+            assert!(r.completed > 0, "{r:?}");
+            assert!(r.p50_us <= r.p95_us, "{r:?}");
+            assert!(r.p95_us <= r.p99_us, "{r:?}");
+        }
+        let summary =
+            crate::obs::chrome::validate_file(dir.join("service_load.trace.json")).unwrap();
+        assert!(summary.events > 0, "traced burst produced no events");
+        let prom = std::fs::read_to_string(dir.join("service_metrics.prom")).unwrap();
+        assert!(prom.contains("fft_jobs_completed_total{tenant=\"tenant-0\"}"), "{prom}");
+        assert!(prom.contains("fft_job_latency_us_bucket"), "{prom}");
     }
 
     #[test]

@@ -191,8 +191,8 @@ fn near_square(n: usize) -> ProcGrid {
     ProcGrid::new(best, n / best)
 }
 
-fn sim_one(coll: SimCollective, n: usize, per_pair: u64, opts: &SimScalingOpts) -> EngineStats {
-    let cfg = SimConfig {
+fn sim_cfg(coll: SimCollective, n: usize, per_pair: u64, opts: &SimScalingOpts) -> SimConfig {
+    SimConfig {
         localities: n,
         port: opts.port,
         net: NetModel::infiniband_hdr(),
@@ -202,8 +202,48 @@ fn sim_one(coll: SimCollective, n: usize, per_pair: u64, opts: &SimScalingOpts) 
         adversary: opts.adversary,
         collective: coll,
         data: SimData::Uniform(per_pair),
+    }
+}
+
+fn sim_one(coll: SimCollective, n: usize, per_pair: u64, opts: &SimScalingOpts) -> EngineStats {
+    run_sim(&sim_cfg(coll, n, per_pair, opts)).stats
+}
+
+/// Capture and export the wire timeline of one representative sweep
+/// point — the first requested figure at the *smallest* requested
+/// locality count (512 under the default list, still cluster scale but
+/// bounding the capture: fig5's N-scatter is O(n²) messages). Returns
+/// the written path. The traced run is a separate engine instance, so
+/// the sweep's own rows — and `sim_scaling.csv` — are untouched.
+pub fn export_trace(opts: &SimScalingOpts, dir: &str) -> anyhow::Result<String> {
+    use crate::simnet::collective_sim::run_sim_traced;
+    ensure!(!opts.figs.is_empty() && !opts.localities.is_empty(), "nothing swept");
+    let fig = opts.figs[0];
+    let n = *opts.localities.iter().min().expect("non-empty");
+    let cfg = match fig {
+        SimFig::Fig4 => {
+            let per_pair = FftModelParams::paper(n).chunk_bytes();
+            sim_cfg(SimCollective::AllToAll(AllToAllAlgo::HpxRoot), n, per_pair, opts)
+        }
+        SimFig::Fig5 => {
+            let per_pair = FftModelParams::paper(n).chunk_bytes();
+            sim_cfg(SimCollective::NScatter, n, per_pair, opts)
+        }
+        SimFig::Fig6 => {
+            // The row-transpose round within one sub-communicator group
+            // (disjoint groups are identical and parallel).
+            let proc = near_square(n);
+            let dims = PencilDims::new(Grid3::new(1 << 9, 1 << 9, 1 << 9), proc)
+                .expect("near-square power-of-two grids divide 2^9");
+            let t1 = (dims.t1_chunk_elems() * 8) as u64;
+            sim_cfg(SimCollective::AllToAll(AllToAllAlgo::Pairwise), proc.pc, t1, opts)
+        }
     };
-    run_sim(&cfg).stats
+    let (_, events) = run_sim_traced(&cfg);
+    let path = format!("{dir}/sim_{}_{n}.trace.json", fig.name());
+    crate::obs::chrome::export(&events, &path)
+        .with_context(|| format!("writing sim trace {path}"))?;
+    Ok(path)
 }
 
 fn point(fig: SimFig, n: usize, opts: &SimScalingOpts) -> SimScalingRow {
@@ -396,6 +436,20 @@ mod tests {
         let a: Vec<Vec<String>> = run(&opts).unwrap().iter().map(|r| r.csv_cells(&opts)).collect();
         let b: Vec<Vec<String>> = run(&opts).unwrap().iter().map(|r| r.csv_cells(&opts)).collect();
         assert_eq!(a, b, "sim_scaling.csv rows must be reproducible from the seed");
+    }
+
+    /// The representative-point trace export writes a valid Chrome
+    /// trace and leaves the sweep itself untouched (it runs a separate
+    /// engine instance).
+    #[test]
+    fn export_trace_writes_valid_chrome_json() {
+        let dir = std::env::temp_dir().join(format!("hpxfft-simtr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = opts_for(vec![SimFig::Fig4], vec![16]);
+        let path = export_trace(&opts, dir.to_str().unwrap()).unwrap();
+        let summary = crate::obs::chrome::validate_file(&path).unwrap();
+        assert!(summary.spans > 0, "a 16-rank all-to-all must record wire spans");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

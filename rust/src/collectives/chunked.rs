@@ -208,7 +208,10 @@ impl Communicator {
             let chunk = payload.slice(off, len); // zero-copy sub-view
             let fabric = Arc::clone(self.fabric());
             let tag = base_tag + 1 + i as Tag;
+            crate::obs::instant_args("chunk", "post", src, tag as i64, i as i64, len as i64);
             pending.push(pool.spawn(move || {
+                let _span =
+                    crate::obs::span_args("wire", "chunk", src, tag as i64, i as i64, len as i64);
                 fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, chunk));
             }));
         }
@@ -225,7 +228,18 @@ impl Communicator {
         base_tag: Tag,
         index: usize,
     ) -> Option<Payload> {
-        self.try_recv(src, base_tag + 1 + index as Tag)
+        let got = self.try_recv(src, base_tag + 1 + index as Tag);
+        if let Some(p) = &got {
+            crate::obs::instant_args(
+                "chunk",
+                "arrive",
+                self.my_global(),
+                (base_tag + 1 + index as Tag) as i64,
+                index as i64,
+                p.len() as i64,
+            );
+        }
+        got
     }
 
     /// Receive the header of a chunked transfer: the payload total length.
@@ -249,7 +263,16 @@ impl Communicator {
         index: usize,
         payload: Payload,
     ) -> TaskFuture<()> {
-        super::protocol::send_pooled(self, dest, base_tag + 1 + index as Tag, payload)
+        let tag = base_tag + 1 + index as Tag;
+        crate::obs::instant_args(
+            "chunk",
+            "post",
+            self.my_global(),
+            tag as i64,
+            index as i64,
+            payload.len() as i64,
+        );
+        super::protocol::send_pooled(self, dest, tag, payload)
     }
 
     /// Streaming receive of a chunked transfer: `on_chunk(byte_offset,
@@ -267,6 +290,14 @@ impl Communicator {
         let total = self.recv_chunk_header(src, base_tag);
         for i in 0..policy.n_chunks(total) {
             let chunk = self.recv(src, base_tag + 1 + i as Tag);
+            crate::obs::instant_args(
+                "chunk",
+                "arrive",
+                self.my_global(),
+                (base_tag + 1 + i as Tag) as i64,
+                i as i64,
+                chunk.len() as i64,
+            );
             on_chunk(i * policy.chunk_bytes, chunk);
         }
         total

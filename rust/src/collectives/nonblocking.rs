@@ -77,6 +77,7 @@ impl Communicator {
         algo: AllToAllAlgo,
     ) -> CollectiveFuture<Vec<Payload>> {
         assert_eq!(chunks.len(), self.size(), "need one chunk per rank");
+        crate::obs::instant("coll", "all_to_all", self.my_global());
         match algo {
             AllToAllAlgo::Linear => self.a2a_async_linear(chunks),
             // Round-paced schedules keep their pacing on a shadow.
@@ -103,6 +104,15 @@ impl Communicator {
             let dst_g = self.global_rank(dst);
             let fabric = Arc::clone(self.fabric());
             sends.push(pool.spawn(move || {
+                let bytes = chunk.len() as i64;
+                let _span = crate::obs::span_args(
+                    "wire",
+                    "a2a",
+                    me_g,
+                    tag as i64,
+                    crate::obs::NO_ARG,
+                    bytes,
+                );
                 fabric.send(Parcel::new(me_g, dst_g, actions::COLLECTIVE, tag, chunk));
             }));
         }
@@ -138,6 +148,7 @@ impl Communicator {
         algo: ScatterAlgo,
     ) -> CollectiveFuture<Payload> {
         assert!(root < self.size(), "root {root} out of range");
+        crate::obs::instant("coll", "scatter", self.my_global());
         match algo {
             ScatterAlgo::Linear => {
                 let tag = self.alloc_tags();
@@ -228,6 +239,7 @@ impl Communicator {
         data: Payload,
     ) -> CollectiveFuture<Option<Vec<Payload>>> {
         assert!(root < self.size(), "root {root} out of range");
+        crate::obs::instant("coll", "gather", self.my_global());
         let tag = self.alloc_tags();
         let me = self.rank();
         let me_g = self.my_global();
@@ -272,6 +284,7 @@ impl Communicator {
         data: Option<Payload>,
     ) -> CollectiveFuture<Payload> {
         assert!(root < self.size(), "root {root} out of range");
+        crate::obs::instant("coll", "broadcast", self.my_global());
         let tag = self.alloc_tags();
         let n = self.size();
         let me = self.rank();
@@ -337,6 +350,7 @@ impl Communicator {
         data: &[f32],
         op: ReduceOp,
     ) -> CollectiveFuture<Option<Vec<f32>>> {
+        crate::obs::instant("coll", "reduce", self.my_global());
         let data = data.to_vec();
         self.offload(move |shadow| shadow.reduce_blocking(root, &data, op))
     }
@@ -346,6 +360,7 @@ impl Communicator {
     /// ⌈log₂ n⌉ signal rounds run on an offload shadow. The blocking
     /// [`Communicator::barrier`] is now `barrier_async().get()`.
     pub fn barrier_async(&self) -> CollectiveFuture<()> {
+        crate::obs::instant("coll", "barrier", self.my_global());
         self.offload(move |shadow| shadow.barrier_blocking())
     }
 }

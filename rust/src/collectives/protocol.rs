@@ -1021,6 +1021,9 @@ pub(crate) fn send_pooled(
     let src = comm.my_global();
     let dest = comm.global_rank(dest);
     comm.chunk_pool().spawn(move || {
+        let bytes = payload.len() as i64;
+        let _span =
+            crate::obs::span_args("wire", "chunk", src, tag as i64, crate::obs::NO_ARG, bytes);
         fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, payload));
     })
 }

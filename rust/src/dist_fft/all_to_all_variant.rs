@@ -76,7 +76,10 @@ pub(crate) fn run_input_impl(
     // Step 1: first-axis row transforms.
     let t0 = Instant::now();
     let mut work = input.stage1_seed();
-    input.stage1_band(&mut work, 0, lr, engine, nthreads);
+    {
+        let _span = crate::obs::span("fft", "stage1", comm.my_global());
+        input.stage1_band(&mut work, 0, lr, engine, nthreads);
+    }
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Step 2: chunk + exchange, on the spectral slab geometry.
@@ -100,6 +103,14 @@ pub(crate) fn run_input_impl(
         let mut transpose_spent = 0.0f64;
         comm.all_to_all_chunked_each(chunks, |src, byte_off, payload| {
             let tt = Instant::now();
+            let _span = crate::obs::span_args(
+                "place",
+                "chunk",
+                comm.my_global(),
+                src as i64,
+                (byte_off / ELEM) as i64,
+                payload.len() as i64,
+            );
             let elems = from_le_bytes(payload.as_bytes());
             place_chunk_slice_transposed(
                 &elems,
@@ -125,16 +136,28 @@ pub(crate) fn run_input_impl(
         // Step 3: transpose every received chunk into the new slab.
         let t0 = Instant::now();
         for (j, payload) in received.into_iter().enumerate() {
+            let span = crate::obs::span_args(
+                "place",
+                "chunk",
+                comm.my_global(),
+                j as i64,
+                crate::obs::NO_ARG,
+                payload.len() as i64,
+            );
             let chunk = from_le_bytes(payload.as_bytes());
             debug_assert_eq!(chunk.len(), lr * cw);
             place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, j * lr);
+            drop(span);
         }
         timings.transpose_us = t0.elapsed().as_secs_f64() * 1e6;
     }
 
     // Step 4: row FFTs of the transposed slab (length R).
     let t0 = Instant::now();
-    engine.fft_rows(&mut next, r_total, nthreads);
+    {
+        let _span = crate::obs::span("fft", "stage2", comm.my_global());
+        engine.fft_rows(&mut next, r_total, nthreads);
+    }
     timings.fft2_us = t0.elapsed().as_secs_f64() * 1e6;
 
     timings.total_us = t_start.elapsed().as_secs_f64() * 1e6;
@@ -203,7 +226,10 @@ pub(crate) fn run_async_input_impl(
     // Step 1: first-axis row transforms.
     let t0 = Instant::now();
     let mut work = input.stage1_seed();
-    input.stage1_band(&mut work, 0, lr, engine, nthreads);
+    {
+        let _span = crate::obs::span("fft", "stage1", comm.my_global());
+        input.stage1_band(&mut work, 0, lr, engine, nthreads);
+    }
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Step 2, posted not blocked: the collective returns immediately;
@@ -232,19 +258,33 @@ pub(crate) fn run_async_input_impl(
     let t_recv_done = Instant::now();
 
     // Step 3 as a continuation: transpose while the send tail drains.
+    // On a traced run these "place" spans sit alongside the still-open
+    // "wire" spans of this rank's own sends — the overlap window.
     let mut next = vec![Complex32::ZERO; cw * r_total];
     let t_tr = Instant::now();
     for (j, payload) in received.into_iter().enumerate() {
+        let span = crate::obs::span_args(
+            "place",
+            "chunk",
+            comm.my_global(),
+            j as i64,
+            crate::obs::NO_ARG,
+            payload.len() as i64,
+        );
         let chunk = from_le_bytes(payload.as_bytes());
         debug_assert_eq!(chunk.len(), lr * cw);
         place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, j * lr);
+        drop(span);
     }
     let t_tr_end = Instant::now();
     timings.transpose_us = t_tr_end.duration_since(t_tr).as_secs_f64() * 1e6;
 
     // Step 4 as the next continuation, still ahead of the send drain.
     let t_f2 = Instant::now();
-    engine.fft_rows(&mut next, r_total, nthreads);
+    {
+        let _span = crate::obs::span("fft", "stage2", comm.my_global());
+        engine.fft_rows(&mut next, r_total, nthreads);
+    }
     let t_f2_end = Instant::now();
     timings.fft2_us = t_f2_end.duration_since(t_f2).as_secs_f64() * 1e6;
 

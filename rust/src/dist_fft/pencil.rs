@@ -217,9 +217,11 @@ struct RoundOutcome {
 /// touches the fabric, so it skips the wire byte round-trip. Never
 /// settles the sends — the caller decides whether to block on them
 /// (blocking mode) or let them drain under the next FFT phase (async
-/// mode). Each send completion stamps `last_send_done`.
+/// mode). Each send completion stamps `last_send_done`. `round` labels
+/// this exchange's placement spans on a traced timeline (`"t1"`/`"t2"`).
 fn exchange_round(
     comm: &Communicator,
+    round: &'static str,
     chunk_elems: usize,
     mut extract: impl FnMut(usize) -> Vec<u8>,
     extract_own: impl FnOnce(usize) -> Vec<Complex32>,
@@ -254,6 +256,14 @@ fn exchange_round(
     // while the posted wire chunks fly).
     {
         let tt = Instant::now();
+        let _span = crate::obs::span_args(
+            "place",
+            round,
+            comm.my_global(),
+            me as i64,
+            crate::obs::NO_ARG,
+            crate::obs::NO_ARG,
+        );
         let own = extract_own(me);
         place(me, 0, &own);
         let us = tt.elapsed().as_secs_f64() * 1e6;
@@ -278,8 +288,17 @@ fn exchange_round(
                     break;
                 };
                 let tt = Instant::now();
+                let span = crate::obs::span_args(
+                    "place",
+                    round,
+                    comm.my_global(),
+                    *peer as i64,
+                    *next_chunk as i64,
+                    payload.len() as i64,
+                );
                 let elems = from_le_bytes(payload.as_bytes());
                 place(*peer, *next_chunk * policy.chunk_bytes / ELEM, &elems);
+                drop(span);
                 let us = tt.elapsed().as_secs_f64() * 1e6;
                 place_us += us;
                 in_flight_us += us;
@@ -358,9 +377,12 @@ pub(crate) fn run_rank(
 
     // Phase 1: FFT(z) — r2c-packed into n2/2 bins in the real domain.
     let t0 = Instant::now();
-    match &real_src {
-        None => engine.fft_rows(&mut zbuf, dims.grid.n2, nthreads),
-        Some(src) => rfft_rows_packed_into(src, dims_in.grid.n2, &mut zbuf, nthreads),
+    {
+        let _span = crate::obs::span("fft", "z", world.my_global());
+        match &real_src {
+            None => engine.fft_rows(&mut zbuf, dims.grid.n2, nthreads),
+            Some(src) => rfft_rows_packed_into(src, dims_in.grid.n2, &mut zbuf, nthreads),
+        }
     }
     t.fft_z_us = t0.elapsed().as_secs_f64() * 1e6;
 
@@ -369,6 +391,7 @@ pub(crate) fn run_rank(
     let last1: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
     let mut o1 = exchange_round(
         &row_comm,
+        "t1",
         dims.t1_chunk_elems(),
         |dest| grid3::extract_t1_bytes(&zbuf, dims, dest),
         |me| grid3::extract_t1_elems(&zbuf, dims, me),
@@ -388,7 +411,10 @@ pub(crate) fn run_rank(
     // Phase 3: FFT(y) — in async mode round-1 sends keep draining
     // underneath this.
     let ty0 = Instant::now();
-    engine.fft_rows(&mut ybuf, dims.grid.n1, nthreads);
+    {
+        let _span = crate::obs::span("fft", "y", world.my_global());
+        engine.fft_rows(&mut ybuf, dims.grid.n1, nthreads);
+    }
     let ty1 = Instant::now();
     t.fft_y_us = ty1.duration_since(ty0).as_secs_f64() * 1e6;
 
@@ -397,6 +423,7 @@ pub(crate) fn run_rank(
     let last2: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
     let mut o2 = exchange_round(
         &col_comm,
+        "t2",
         dims.t2_chunk_elems(),
         |dest| grid3::extract_t2_bytes(&ybuf, dims, dest),
         |me| grid3::extract_t2_elems(&ybuf, dims, me),
@@ -416,7 +443,10 @@ pub(crate) fn run_rank(
     // Phase 5: FFT(x) — in async mode both rounds' send tails may still
     // be draining here.
     let tx0 = Instant::now();
-    engine.fft_rows(&mut xbuf, dims.grid.n0, nthreads);
+    {
+        let _span = crate::obs::span("fft", "x", world.my_global());
+        engine.fft_rows(&mut xbuf, dims.grid.n0, nthreads);
+    }
     let tx1 = Instant::now();
     t.fft_x_us = tx1.duration_since(tx0).as_secs_f64() * 1e6;
 

@@ -72,6 +72,7 @@ pub struct TransformRequest {
     localities: Option<usize>,
     proc: Option<ProcGrid>,
     collect_outputs: bool,
+    trace: bool,
 }
 
 impl TransformRequest {
@@ -86,6 +87,7 @@ impl TransformRequest {
             localities: None,
             proc: None,
             collect_outputs: false,
+            trace: false,
         }
     }
 
@@ -100,6 +102,7 @@ impl TransformRequest {
             localities: None,
             proc: None,
             collect_outputs: false,
+            trace: false,
         }
     }
 
@@ -193,6 +196,17 @@ impl TransformRequest {
         self
     }
 
+    /// Capture a span timeline of the run and export it as a Chrome
+    /// trace-event JSON file; the path lands in
+    /// [`TransformReport::trace_path`]. The capture claims the
+    /// process-wide trace session for the duration of the run, so two
+    /// traced transforms serialize — do not request a trace from code
+    /// that already holds a [`crate::obs::TraceSession`].
+    pub fn trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
     /// Validate the request and freeze it into a runnable
     /// [`Transform`]. All shape/domain/chunk validation happens here,
     /// with the same actionable error strings the deprecated entry
@@ -239,7 +253,7 @@ impl TransformRequest {
                 Plan::Pencil(config)
             }
         };
-        Ok(Transform { plan, collect_outputs: self.collect_outputs })
+        Ok(Transform { plan, collect_outputs: self.collect_outputs, trace: self.trace })
     }
 }
 
@@ -258,6 +272,7 @@ enum Plan {
 pub struct Transform {
     plan: Plan,
     collect_outputs: bool,
+    trace: bool,
 }
 
 impl Transform {
@@ -314,8 +329,27 @@ impl Transform {
 
     /// Run on an existing cluster (benchmarks reuse fabrics across
     /// reps; the cluster must span exactly
-    /// [`localities`](Self::localities) ranks).
+    /// [`localities`](Self::localities) ranks). When the request asked
+    /// for a [`trace`](TransformRequest::trace), the run executes under
+    /// the process-wide trace session and the exported timeline's path
+    /// lands in [`TransformReport::trace_path`].
     pub fn run_on(&self, cluster: &Cluster) -> anyhow::Result<TransformReport> {
+        if !self.trace {
+            return self.run_on_untraced(cluster);
+        }
+        let session = crate::obs::session();
+        let result = self.run_on_untraced(cluster);
+        let events = session.finish();
+        let mut report = result?;
+        let path = trace_output_path();
+        crate::obs::chrome::export(&events, &path)
+            .map_err(|e| anyhow::anyhow!("writing trace file {path}: {e}"))?;
+        report.trace_path = Some(path);
+        Ok(report)
+    }
+
+    /// [`run_on`](Self::run_on) without the trace-session wrapper.
+    fn run_on_untraced(&self, cluster: &Cluster) -> anyhow::Result<TransformReport> {
         match &self.plan {
             Plan::Plane(config) => {
                 let (report, pieces) = driver::run_on_impl(cluster, config)?;
@@ -328,6 +362,7 @@ impl Transform {
                     rel_error: report.rel_error,
                     stats: report.stats,
                     outputs: self.collect_outputs.then_some(pieces),
+                    trace_path: None,
                 })
             }
             Plan::Pencil(config) => {
@@ -341,10 +376,21 @@ impl Transform {
                     rel_error: report.rel_error,
                     stats: report.stats,
                     outputs: self.collect_outputs.then_some(pieces),
+                    trace_path: None,
                 })
             }
         }
     }
+}
+
+/// Collision-free output path for a traced transform's timeline:
+/// `bench_out/transform-<pid>-<seq>.trace.json` (the sequence counter
+/// disambiguates traced runs within one process).
+fn trace_output_path() -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("bench_out/transform-{}-{seq}.trace.json", std::process::id())
 }
 
 /// Per-shape timing detail of a [`TransformReport`].
@@ -419,6 +465,11 @@ pub struct TransformReport {
     /// Each rank's raw spectral piece, rank order — present only when
     /// the request asked for [`TransformRequest::collect_outputs`].
     pub outputs: Option<Vec<Vec<Complex32>>>,
+    /// Path of the exported Chrome trace-event JSON timeline — present
+    /// only when the request asked for [`TransformRequest::trace`] (and
+    /// only on the single-shot path; service jobs share one fabric, so
+    /// per-job capture would interleave tenants).
+    pub trace_path: Option<String>,
 }
 
 impl TransformReport {

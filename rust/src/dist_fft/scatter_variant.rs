@@ -81,7 +81,10 @@ pub(crate) fn run_input_impl(
     // spectra in the real domain).
     let t0 = Instant::now();
     let mut work = input.stage1_seed();
-    input.stage1_band(&mut work, 0, lr, engine, nthreads);
+    {
+        let _span = crate::obs::span("fft", "stage1", comm.my_global());
+        input.stage1_band(&mut work, 0, lr, engine, nthreads);
+    }
     timings.fft1_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // Steps 2+3 fused: N chunk-pipelined scatters; transpose each wire
@@ -131,6 +134,7 @@ pub(crate) fn run_input_impl(
     {
         let tt = Instant::now();
         let chunk = own_chunk.expect("own chunk extracted");
+        let _span = crate::obs::span("place", "own", comm.my_global());
         place_chunk_transposed(&chunk, lr, cw, &mut next, r_total, me * lr);
         transpose_spent += tt.elapsed().as_secs_f64() * 1e6;
     }
@@ -151,6 +155,14 @@ pub(crate) fn run_input_impl(
                 };
                 let tt = Instant::now();
                 let elems = from_le_bytes(payload.as_bytes());
+                let span = crate::obs::span_args(
+                    "place",
+                    "chunk",
+                    comm.my_global(),
+                    tags[*root] as i64,
+                    *next_chunk as i64,
+                    payload.len() as i64,
+                );
                 place_chunk_slice_transposed(
                     &elems,
                     *next_chunk * policy.chunk_bytes / ELEM,
@@ -160,6 +172,7 @@ pub(crate) fn run_input_impl(
                     r_total,
                     *root * lr,
                 );
+                drop(span);
                 transpose_spent += tt.elapsed().as_secs_f64() * 1e6;
                 *next_chunk += 1;
                 progressed = true;
@@ -183,7 +196,10 @@ pub(crate) fn run_input_impl(
 
     // Step 4: row FFTs of the transposed slab (length R).
     let t0 = Instant::now();
-    engine.fft_rows(&mut next, r_total, nthreads);
+    {
+        let _span = crate::obs::span("fft", "stage2", comm.my_global());
+        engine.fft_rows(&mut next, r_total, nthreads);
+    }
     timings.fft2_us = t0.elapsed().as_secs_f64() * 1e6;
 
     timings.total_us = t_start.elapsed().as_secs_f64() * 1e6;
@@ -298,7 +314,19 @@ pub(crate) fn run_async_input_impl(
         let r0 = wc * rows_per_wire;
         let r1 = (r0 + rows_per_wire).min(lr);
         let tb = Instant::now();
-        input.stage1_band(&mut work, r0, r1, engine, nthreads);
+        {
+            // Band spans overlap the "wire" chunk spans of earlier bands
+            // on the exported timeline — overlap_us, made visible.
+            let _span = crate::obs::span_args(
+                "fft",
+                "band",
+                comm.my_global(),
+                crate::obs::NO_ARG,
+                wc as i64,
+                crate::obs::NO_ARG,
+            );
+            input.stage1_band(&mut work, r0, r1, engine, nthreads);
+        }
         let band_us = tb.elapsed().as_secs_f64() * 1e6;
         fft1_spent += band_us;
         if comm_open.is_some() {
@@ -326,12 +354,21 @@ pub(crate) fn run_async_input_impl(
         // Own chunk band is "received" immediately — place it now (free
         // overlap while this band's wire chunks are in flight).
         let tt = Instant::now();
+        let span = crate::obs::span_args(
+            "place",
+            "own",
+            comm.my_global(),
+            crate::obs::NO_ARG,
+            wc as i64,
+            crate::obs::NO_ARG,
+        );
         let mut own = Vec::with_capacity((r1 - r0) * cw);
         for r in r0..r1 {
             let base = r * c_total + me * cw;
             own.extend_from_slice(&work[base..base + cw]);
         }
         place_chunk_slice_transposed(&own, r0 * cw, lr, cw, &mut next, r_total, me * lr);
+        drop(span);
         let place_us = tt.elapsed().as_secs_f64() * 1e6;
         transpose_spent += place_us;
         if comm_open.is_some() {
@@ -356,6 +393,14 @@ pub(crate) fn run_async_input_impl(
                 };
                 let tt = Instant::now();
                 let elems = from_le_bytes(payload.as_bytes());
+                let span = crate::obs::span_args(
+                    "place",
+                    "chunk",
+                    comm.my_global(),
+                    tags[*root] as i64,
+                    *next_chunk as i64,
+                    payload.len() as i64,
+                );
                 place_chunk_slice_transposed(
                     &elems,
                     *next_chunk * rows_per_wire * cw,
@@ -365,6 +410,7 @@ pub(crate) fn run_async_input_impl(
                     r_total,
                     *root * lr,
                 );
+                drop(span);
                 let place_us = tt.elapsed().as_secs_f64() * 1e6;
                 transpose_spent += place_us;
                 overlapped += place_us;
@@ -387,7 +433,10 @@ pub(crate) fn run_async_input_impl(
     // Step 4 as the continuation of "all my chunks arrived": this rank's
     // outgoing chunks keep draining through the send pool underneath.
     let t_fft2 = Instant::now();
-    engine.fft_rows(&mut next, r_total, nthreads);
+    {
+        let _span = crate::obs::span("fft", "stage2", comm.my_global());
+        engine.fft_rows(&mut next, r_total, nthreads);
+    }
     let t_fft2_end = Instant::now();
     timings.fft2_us = t_fft2_end.duration_since(t_fft2).as_secs_f64() * 1e6;
 

@@ -24,6 +24,7 @@ pub mod metrics;
 pub mod dist_fft;
 pub mod fft;
 pub mod hpx;
+pub mod obs;
 pub mod parcelport;
 pub mod runtime;
 pub mod simnet;

@@ -14,9 +14,14 @@
 //!   regenerate Fig. 4 / Fig. 5.
 //! - `repro bench collectives` — all-to-all algorithm ablation.
 //! - `repro serve` — resident multi-tenant FFT service reading job
-//!   lines from stdin.
+//!   lines from stdin (`metrics` on a line by itself prints a
+//!   Prometheus-style snapshot).
 //! - `repro load` — multi-tenant service load generator (latency
-//!   percentiles + bitwise output audit).
+//!   percentiles + bitwise output audit; `--trace` captures the burst's
+//!   timeline and metrics snapshot).
+//! - `repro trace` — one traced run: exports a Chrome/Perfetto trace of
+//!   per-chunk wire, placement, and FFT-band spans plus a per-phase
+//!   summary table.
 //!
 //! Run `repro help` for flags.
 
@@ -70,19 +75,23 @@ USAGE:
                   HPXFFT_SIMD=scalar forces the scalar tier)
   repro bench chunk-size      [--quick] [--reps N] [--out DIR]
                               [--chunk-bytes N] [--inflight N]
-                              [--exec blocking|async]
+                              [--exec blocking|async] [--trace]
   repro bench strong-scaling  --variant all-to-all|scatter
                               [--quick] [--reps N] [--grid N] [--out DIR]
-                              [--exec blocking|async]
+                              [--exec blocking|async] [--trace]
   repro bench fig6            [--quick] [--reps N] [--grid3 N0xN1xN2]
                               [--shapes 1x4,2x2,4x1] [--threads N]
                               [--out DIR] [--chunk-bytes N] [--inflight N]
+                              [--trace]
                               (sweeps every shape × port × exec mode)
   repro bench fig7            [--quick] [--reps N] [--grid N] [--out DIR]
                               [--threads N] [--chunk-bytes N] [--inflight N]
+                              [--trace]
                               (real-vs-complex sweep: every port × exec
                                mode × domain, with measured wire bytes;
-                               writes fig7_real.csv)
+                               writes fig7_real.csv;
+                               --trace on any bench writes the sweep's
+                               span timeline as {csv stem}.trace.json)
   repro bench collectives     [--nodes N] [--bytes N] [--reps N]
                               [--chunk-bytes N] [--inflight N]
   repro simulate [--grid N] [--port tcp|mpi|lci] [--domain complex|real]
@@ -91,26 +100,39 @@ USAGE:
                  [--figs fig4,fig5,fig6] [--port tcp|mpi|lci]
                  [--localities N | --localities-list 512,1024,2048]
                  [--seed N] [--adversary none|light|hostile]
-                 [--faults delay,dup,drop,slow] [--out DIR]
+                 [--faults delay,dup,drop,slow] [--out DIR] [--trace]
                  (discrete-event engine: runs the real collective state
                   machines at 512-4096 simulated localities under a
                   seeded adversary, prints per-run trace hashes,
                   slope-checks fig4/5/6 against the closed-form model,
-                  and writes sim_scaling.csv with --out)
+                  and writes sim_scaling.csv with --out; --trace exports
+                  one representative point's wire timeline as Chrome
+                  trace JSON — same format as live traces)
   repro serve    [--nodes N] [--port tcp|mpi|lci] [--queue-limit N]
                  [--inflight-jobs N]
                  (resident multi-tenant FFT service; reads one job per
                   stdin line: `[tenant=T] grid=RxC|grid3=N0xN1xN2
                   [nodes=N|proc=PRxPC] [domain=..] [exec=..] [threads=N]
                   [verify=..]`, # comments and blank lines skipped;
+                  `metrics` on a line by itself prints a Prometheus-style
+                  snapshot of per-tenant counters and latency histograms;
                   prints each job's report as it finishes, EOF drains
                   and prints per-tenant metrics)
   repro load     [--tenants N] [--jobs N] [--nodes N] [--port tcp|mpi|lci]
                  [--queue-limit N] [--inflight-jobs N] [--threads N]
-                 [--out DIR]
+                 [--out DIR] [--trace]
                  (service load generator: mixed 2-D/3-D × complex/real ×
                   blocking/async jobs from N synthetic tenants, audited
-                  bitwise vs single-shot runs; writes service_load.csv)
+                  bitwise vs single-shot runs; writes service_load.csv;
+                  --trace additionally writes service_load.trace.json and
+                  service_metrics.prom)
+  repro trace    [--rows N --cols N | --grid3 N0xN1xN2] [flags of
+                 fft/fft3] [--out DIR]
+                 (one traced run: captures per-chunk wire/place spans and
+                  FFT band spans, writes DIR/repro_trace.trace.json —
+                  loadable in Perfetto or chrome://tracing — and prints a
+                  per-phase time table; on an async run the wire spans
+                  visibly overlap the FFT bands)
   repro help
 ";
 
@@ -145,6 +167,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("load") => cmd_load(&args),
+        Some("trace") => cmd_trace(&args),
         Some(other) => bail!("unknown subcommand {other:?}; see `repro help`"),
     }
 }
@@ -427,9 +450,36 @@ fn bench_config(args: &Args) -> Result<BenchConfig> {
     Ok(cfg)
 }
 
+/// Run a fig harness inside a trace-capture session when `--trace` was
+/// given, exporting the timeline next to the harness's CSV as
+/// `{stem}.trace.json`. Without the flag this is a plain call to `f`.
+fn with_bench_trace<T>(
+    args: &Args,
+    out_dir: &str,
+    stem: &str,
+    f: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    if !args.get_bool("trace") {
+        return f();
+    }
+    let session = hpx_fft::obs::session();
+    let result = f();
+    let events = session.finish();
+    let value = result?;
+    let path = format!("{out_dir}/{stem}.trace.json");
+    hpx_fft::obs::chrome::export(&events, &path)?;
+    let dropped = hpx_fft::obs::dropped_events();
+    if dropped > 0 {
+        println!("warning: {dropped} trace event(s) dropped by full ring buffers");
+    }
+    println!("trace written to {path}");
+    Ok(value)
+}
+
 fn cmd_bench_chunk(args: &Args) -> Result<()> {
     args.check_known(&[
         "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight", "exec",
+        "trace",
     ])?;
     let cfg = bench_config(args)?;
     println!(
@@ -438,7 +488,7 @@ fn cmd_bench_chunk(args: &Args) -> Result<()> {
         cfg.reps,
         cfg.chunk_sizes
     );
-    let points = fig3::run(&cfg)?;
+    let points = with_bench_trace(args, &cfg.out_dir, "fig3_chunk_size", || fig3::run(&cfg))?;
     print!("{}", fig3::report(&points, &cfg.out_dir)?);
     println!("CSV written to {}/fig3_chunk_size.csv", cfg.out_dir);
     Ok(())
@@ -447,7 +497,7 @@ fn cmd_bench_chunk(args: &Args) -> Result<()> {
 fn cmd_bench_scaling(args: &Args) -> Result<()> {
     args.check_known(&[
         "variant", "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight",
-        "exec",
+        "exec", "trace",
     ])?;
     let variant: Variant = args.get_or("variant", Variant::Scatter)?;
     let cfg = bench_config(args)?;
@@ -461,7 +511,8 @@ fn cmd_bench_scaling(args: &Args) -> Result<()> {
         cfg.sim_nodes,
         cfg.reps
     );
-    let points = fig45::run(&cfg, variant)?;
+    let points =
+        with_bench_trace(args, &cfg.out_dir, "fig45_scaling", || fig45::run(&cfg, variant))?;
     print!("{}", fig45::report(&points, variant, &cfg, &cfg.out_dir)?);
     Ok(())
 }
@@ -469,7 +520,7 @@ fn cmd_bench_scaling(args: &Args) -> Result<()> {
 fn cmd_bench_fig6(args: &Args) -> Result<()> {
     args.check_known(&[
         "quick", "reps", "grid3", "shapes", "threads", "out", "config", "chunk-bytes",
-        "inflight",
+        "inflight", "trace",
     ])?;
     let mut cfg = bench_config(args)?;
     cfg.grid3 = args.get_or("grid3", cfg.grid3)?;
@@ -486,7 +537,7 @@ fn cmd_bench_fig6(args: &Args) -> Result<()> {
         shapes.join(", "),
         cfg.reps
     );
-    let points = fig6::run(&cfg)?;
+    let points = with_bench_trace(args, &cfg.out_dir, "fig6_pencil", || fig6::run(&cfg))?;
     print!("{}", fig6::report(&points, &cfg, &cfg.out_dir)?);
     println!("CSV written to {}/fig6_pencil.csv", cfg.out_dir);
     Ok(())
@@ -494,7 +545,7 @@ fn cmd_bench_fig6(args: &Args) -> Result<()> {
 
 fn cmd_bench_fig7(args: &Args) -> Result<()> {
     args.check_known(&[
-        "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight",
+        "quick", "reps", "grid", "threads", "out", "config", "chunk-bytes", "inflight", "trace",
     ])?;
     let cfg = bench_config(args)?;
     println!(
@@ -504,7 +555,7 @@ fn cmd_bench_fig7(args: &Args) -> Result<()> {
         fig7::FIG7_NODES,
         cfg.reps
     );
-    let points = fig7::run(&cfg)?;
+    let points = with_bench_trace(args, &cfg.out_dir, "fig7_real", || fig7::run(&cfg))?;
     print!("{}", fig7::report(&points, &cfg, &cfg.out_dir)?);
     println!("CSV written to {}/fig7_real.csv", cfg.out_dir);
     Ok(())
@@ -587,7 +638,7 @@ fn cmd_simulate_event(args: &Args) -> Result<()> {
     use hpx_fft::simnet::AdversaryConfig;
     args.check_known(&[
         "engine", "port", "figs", "localities", "localities-list", "seed", "adversary", "faults",
-        "out",
+        "out", "trace",
     ])?;
     let port: PortKind = args.get_or("port", PortKind::Lci)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
@@ -640,6 +691,13 @@ fn cmd_simulate_event(args: &Args) -> Result<()> {
         sim_scaling::validate_slopes(&rows, 0.5)?;
         println!("\nslope check vs closed-form comm-only model: OK (tol 0.5 log2 units)");
     }
+    if args.get_bool("trace") {
+        // A separate traced engine run of one representative point —
+        // the sweep's own rows (and sim_scaling.csv) are untouched.
+        let dir = args.get("out").unwrap_or("bench_out");
+        let path = sim_scaling::export_trace(&opts, dir)?;
+        println!("sim trace written to {path}");
+    }
     Ok(())
 }
 
@@ -684,6 +742,66 @@ fn cmd_bench_collectives(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+/// `repro trace` — run one transform (2-D unless `--grid3` is given)
+/// with the tracing layer live, export the timeline as Chrome
+/// trace-event JSON, and print a per-phase span summary. The capture
+/// session is held *here* rather than via the request builder's
+/// `.trace(true)` so the events stay in hand for the summary table
+/// instead of only landing in the file.
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "rows", "cols", "nodes", "grid3", "proc-grid", "port", "variant", "exec", "domain",
+        "algo", "chunk-bytes", "inflight", "threads", "engine", "artifacts", "net", "no-verify",
+        "out",
+    ])?;
+    let spec = parse_spec(args)?;
+    let request = if args.get("grid3").is_some() {
+        TransformRequest::grid3(args.get_or("grid3", Grid3::new(32, 32, 32))?)
+            .spec(spec)
+            .proc_grid(args.get_or("proc-grid", ProcGrid::new(2, 2))?)
+    } else {
+        TransformRequest::grid(args.get_or("rows", 256usize)?, args.get_or("cols", 256usize)?)
+            .spec(spec)
+            .localities(args.get_or("nodes", 4usize)?)
+            .variant(args.get_or("variant", Variant::Scatter)?)
+            .algo(args.get_or("algo", AllToAllAlgo::HpxRoot)?)
+    };
+    let transform = request.build()?;
+
+    let session = hpx_fft::obs::session();
+    let result = transform.run();
+    let events = session.finish();
+    let report = result?;
+
+    let out_dir = args.get("out").unwrap_or("bench_out");
+    let path = format!("{out_dir}/repro_trace.trace.json");
+    hpx_fft::obs::chrome::export(&events, &path)?;
+    let summary = hpx_fft::obs::chrome::validate_file(&path).map_err(Error::msg)?;
+
+    println!("{}", report.summary);
+    println!("\nper-phase span summary:\n");
+    let mut t = hpx_fft::metrics::table::Table::new(&["phase", "spans", "total", "max"]);
+    for r in hpx_fft::obs::chrome::phase_table(&events) {
+        t.row(&[
+            format!("{}/{}", r.cat, r.name),
+            r.count.to_string(),
+            hpx_fft::metrics::table::fmt_us(r.total_us),
+            hpx_fft::metrics::table::fmt_us(r.max_us),
+        ]);
+    }
+    print!("{}", t.render());
+    let dropped = hpx_fft::obs::dropped_events();
+    if dropped > 0 {
+        println!("warning: {dropped} event(s) dropped by full ring buffers");
+    }
+    println!(
+        "\ntrace: {} events ({} spans) on {} tracks → {path}",
+        summary.events, summary.spans, summary.tracks
+    );
+    println!("open in Perfetto (ui.perfetto.dev) or chrome://tracing");
     Ok(())
 }
 
@@ -778,7 +896,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "fft service up: {} localities, {} port; one job per stdin line\n\
            [tenant=T] grid=RxC|grid3=N0xN1xN2 [nodes=N|proc=PRxPC] [domain=complex|real]\n\
-           [exec=blocking|async] [threads=N] [verify=true|false]   (# starts a comment)",
+           [exec=blocking|async] [threads=N] [verify=true|false]   (# starts a comment)\n\
+           `metrics` alone on a line prints a Prometheus-style snapshot",
         service.localities(),
         service.port()
     );
@@ -787,6 +906,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let line = line?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "metrics" {
+            // Prometheus-style text snapshot: per-tenant counters,
+            // queue gauges, and latency histograms.
+            print!("{}", service.metrics_text());
+            reap(&mut handles, false);
             continue;
         }
         match parse_serve_line(line) {
@@ -835,6 +961,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_load(args: &Args) -> Result<()> {
     args.check_known(&[
         "tenants", "jobs", "nodes", "port", "queue-limit", "inflight-jobs", "threads", "out",
+        "trace",
     ])?;
     let cfg = load::LoadConfig {
         localities: args.get_or("nodes", 4usize)?,
@@ -845,6 +972,7 @@ fn cmd_load(args: &Args) -> Result<()> {
         max_inflight: args.get_or("inflight-jobs", 4usize)?,
         threads: args.get_or("threads", 1usize)?,
         out_dir: args.get("out").unwrap_or("bench_out").to_string(),
+        trace: args.get_bool("trace"),
     };
     println!(
         "service load: {} jobs over {} tenants, {}-locality {} fabric, {} jobs in flight\n",
@@ -853,6 +981,12 @@ fn cmd_load(args: &Args) -> Result<()> {
     let rows = load::run(&cfg)?;
     print!("{}", load::report(&rows, &cfg.out_dir)?);
     println!("\nCSV written to {}/service_load.csv", cfg.out_dir);
+    if cfg.trace {
+        println!(
+            "trace written to {0}/service_load.trace.json, metrics to {0}/service_metrics.prom",
+            cfg.out_dir
+        );
+    }
     let mismatches: usize = rows.iter().map(|r| r.mismatches).sum();
     anyhow::ensure!(
         mismatches == 0,

@@ -3,11 +3,16 @@
 /// Summary statistics over repeated measurements.
 #[derive(Clone, Debug)]
 pub struct RunStats {
+    /// Samples sorted ascending at construction — every quantile
+    /// accessor below is a rank lookup. The previous layout kept the
+    /// insertion order and re-cloned-and-sorted inside *each* of
+    /// `median`/`p50`/`p95`/`p99`, which the load harness called per
+    /// tenant per report line.
     samples: Vec<f64>,
 }
 
 impl RunStats {
-    /// Wrap a non-empty sample set.
+    /// Wrap a non-empty sample set (sorted here, once).
     ///
     /// # Panics
     /// If `samples` is empty, or any sample is NaN or infinite — a
@@ -15,13 +20,17 @@ impl RunStats {
     /// statistic (and, before this check, a single NaN panicked the
     /// harness deep inside `median`'s sort, mid-sweep, with no hint of
     /// which sample was bad).
-    pub fn new(samples: Vec<f64>) -> Self {
+    pub fn new(mut samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty(), "need at least one sample");
         if let Some((i, bad)) =
             samples.iter().enumerate().find(|(_, s)| !s.is_finite())
         {
             panic!("sample {i} is not finite ({bad}): RunStats requires finite timing samples");
         }
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: NaN is already
+        // rejected, but a total order keeps the sort panic-free by
+        // construction.
+        samples.sort_by(f64::total_cmp);
         Self { samples }
     }
 
@@ -48,21 +57,17 @@ impl RunStats {
 
     /// Smallest sample.
     pub fn min(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        self.samples[0]
     }
 
     /// Largest sample.
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        self.samples[self.samples.len() - 1]
     }
 
     /// Median sample.
     pub fn median(&self) -> f64 {
-        let mut s = self.samples.clone();
-        // `total_cmp`, not `partial_cmp(..).unwrap()`: the constructor
-        // rejects NaN, but a total order keeps every sample sort
-        // panic-free by construction.
-        s.sort_by(f64::total_cmp);
+        let s = &self.samples;
         let n = s.len();
         if n % 2 == 1 {
             s[n / 2]
@@ -73,14 +78,14 @@ impl RunStats {
 
     /// Nearest-rank percentile, `p` in `[0, 100]` — the latency summary
     /// convention of service benchmarks (p50/p95/p99). `p = 0` is the
-    /// minimum, `p = 100` the maximum.
+    /// minimum, `p = 100` the maximum. A rank lookup into the sorted
+    /// samples, so `p ≤ q` implies `percentile(p) ≤ percentile(q)`.
     ///
     /// # Panics
     /// If `p` is outside `[0, 100]` or not finite.
     pub fn percentile(&self, p: f64) -> f64 {
         assert!(p.is_finite() && (0.0..=100.0).contains(&p), "percentile {p} outside [0, 100]");
-        let mut s = self.samples.clone();
-        s.sort_by(f64::total_cmp);
+        let s = &self.samples;
         if p == 0.0 {
             return s[0];
         }
@@ -224,6 +229,21 @@ mod tests {
     #[should_panic(expected = "outside [0, 100]")]
     fn percentile_out_of_range_rejected() {
         RunStats::new(vec![1.0]).percentile(101.0);
+    }
+
+    /// Regression: percentiles are rank lookups into one sorted array,
+    /// so the p50 ≤ p95 ≤ p99 ordering can never invert — the bug class
+    /// the load harness's per-tenant summary used to be exposed to when
+    /// each call re-derived its own ordering.
+    #[test]
+    fn percentiles_are_monotone() {
+        let mut samples: Vec<f64> = (0..500).map(|i| ((i * 7919) % 977) as f64).collect();
+        samples.push(0.0);
+        let s = RunStats::new(samples);
+        assert!(s.p50() <= s.p95(), "{} > {}", s.p50(), s.p95());
+        assert!(s.p95() <= s.p99(), "{} > {}", s.p95(), s.p99());
+        assert!(s.p99() <= s.max());
+        assert!(s.min() <= s.p50());
     }
 
     #[test]

@@ -1,0 +1,546 @@
+//! Chrome trace-event JSON export — the timeline format Perfetto and
+//! `chrome://tracing` load directly.
+//!
+//! Mapping from [`Event`]s:
+//!
+//! - every locality is a *process* (`pid` = rank; service-level events
+//!   get the reserved pid [`SERVICE_PID`]), every recording thread a
+//!   *track* (`tid`);
+//! - closed spans become `"ph": "X"` complete events (`ts` + `dur`, in
+//!   microseconds) — by construction every exported span is closed,
+//!   because span events are only emitted when their guard drops;
+//! - instants become `"ph": "i"` thread-scoped events;
+//! - `"ph": "M"` metadata names each process (`locality N` / `service`)
+//!   and thread.
+//!
+//! Chunk spans nest under collective/FFT-phase spans purely by time
+//! containment on a track, which is exactly how the viewers render
+//! nesting — so the driver's `overlap_us` number becomes visible as a
+//! wire-chunk track overlapping an FFT track.
+//!
+//! [`validate_file`] re-reads an exported file with a small
+//! self-contained JSON parser and checks it against the trace-event
+//! schema (required keys per phase type, non-negative durations,
+//! per-track timestamp monotonicity) — used by tests, `repro trace`,
+//! and the CI `obs` job.
+
+use super::trace::{Event, EventKind};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// `pid` used for service-level events (rank `u32::MAX`).
+pub const SERVICE_PID: u64 = 999_999;
+
+fn pid_of(rank: u32) -> u64 {
+    if rank == u32::MAX {
+        SERVICE_PID
+    } else {
+        rank as u64
+    }
+}
+
+fn push_args(out: &mut String, e: &Event) {
+    out.push_str("\"args\":{");
+    let mut first = true;
+    for (key, val) in [("tag", e.tag), ("chunk", e.chunk), ("bytes", e.bytes)] {
+        if val >= 0 {
+            if !first {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{key}\":{val}");
+            first = false;
+        }
+    }
+    out.push('}');
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize events as a complete Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`), with one metadata record per process and
+/// per track, events sorted by track then timestamp.
+pub fn to_json(events: &[Event]) -> String {
+    let mut sorted: Vec<&Event> = events.iter().collect();
+    sorted.sort_by_key(|e| (pid_of(e.rank), e.tid, e.ts_ns));
+
+    let mut procs: Vec<u64> = sorted.iter().map(|e| pid_of(e.rank)).collect();
+    procs.dedup();
+    procs.sort_unstable();
+    procs.dedup();
+    let mut tracks: Vec<(u64, u32)> = sorted.iter().map(|e| (pid_of(e.rank), e.tid)).collect();
+    tracks.dedup();
+
+    let mut out = String::with_capacity(128 + events.len() * 96);
+    out.push_str("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut sep = |out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+    };
+    for pid in &procs {
+        sep(&mut out, &mut first);
+        let pname = if *pid == SERVICE_PID { "service".into() } else { format!("locality {pid}") };
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+             \"args\":{{\"name\":\"{pname}\"}}}}"
+        );
+    }
+    for (pid, tid) in &tracks {
+        sep(&mut out, &mut first);
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"thread {tid}\"}}}}"
+        );
+    }
+    for e in &sorted {
+        sep(&mut out, &mut first);
+        let (pid, tid) = (pid_of(e.rank), e.tid);
+        let ts = e.ts_ns as f64 / 1e3;
+        let (cat, name) = (escape(e.cat), escape(e.name));
+        match e.kind {
+            EventKind::Span { dur_ns } => {
+                let dur = dur_ns as f64 / 1e3;
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts:.3},\
+                     \"dur\":{dur:.3},\"cat\":\"{cat}\",\"name\":\"{name}\","
+                );
+            }
+            EventKind::Instant => {
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts:.3},\
+                     \"s\":\"t\",\"cat\":\"{cat}\",\"name\":\"{name}\","
+                );
+            }
+        }
+        push_args(&mut out, e);
+        out.push('}');
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Serialize `events` with [`to_json`] and write the document to `path`,
+/// creating parent directories as needed.
+pub fn export(events: &[Event], path: impl AsRef<Path>) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_json(events))
+}
+
+/// What [`validate_file`] / [`validate_str`] found in a valid document.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Total non-metadata events.
+    pub events: usize,
+    /// `"ph": "X"` complete spans among them.
+    pub spans: usize,
+    /// Distinct `(pid, tid)` tracks carrying events.
+    pub tracks: usize,
+}
+
+/// Validate an exported trace file against the trace-event schema. See
+/// [`validate_str`].
+pub fn validate_file(path: impl AsRef<Path>) -> Result<TraceSummary, String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+    validate_str(&text)
+}
+
+/// Validate a trace-event JSON document: it must parse, carry a
+/// `traceEvents` array whose entries each have `ph`/`pid`/`tid`/`name`,
+/// every `"X"` span a non-negative `dur` (i.e. every span closed), and
+/// timestamps non-decreasing per `(pid, tid)` track in document order.
+pub fn validate_str(text: &str) -> Result<TraceSummary, String> {
+    let doc = json::parse(text)?;
+    let top = doc.as_obj().ok_or("top level must be an object")?;
+    let events = top
+        .iter()
+        .find(|(k, _)| k == "traceEvents")
+        .ok_or("missing \"traceEvents\" key")?
+        .1
+        .as_arr()
+        .ok_or("\"traceEvents\" must be an array")?;
+
+    let mut summary = TraceSummary::default();
+    let mut last_ts: Vec<((f64, f64), f64)> = Vec::new(); // ((pid, tid), last ts)
+    for (i, ev) in events.iter().enumerate() {
+        let obj = ev.as_obj().ok_or_else(|| format!("event {i}: not an object"))?;
+        let field = |k: &str| obj.iter().find(|(key, _)| key == k).map(|(_, v)| v);
+        let num = |k: &str| field(k).and_then(json::Value::as_num);
+        let ph = field("ph")
+            .and_then(json::Value::as_str)
+            .ok_or_else(|| format!("event {i}: missing \"ph\""))?;
+        field("name").and_then(json::Value::as_str).ok_or_else(|| format!("event {i}: no name"))?;
+        let pid = num("pid").ok_or_else(|| format!("event {i}: missing \"pid\""))?;
+        let tid = num("tid").ok_or_else(|| format!("event {i}: missing \"tid\""))?;
+        match ph {
+            "M" => continue, // metadata carries no timestamp
+            "X" => {
+                let dur = num("dur").ok_or_else(|| format!("event {i}: span without dur"))?;
+                if dur < 0.0 {
+                    return Err(format!("event {i}: negative dur {dur}"));
+                }
+                summary.spans += 1;
+            }
+            "i" => {}
+            other => return Err(format!("event {i}: unexpected phase {other:?}")),
+        }
+        let ts = num("ts").ok_or_else(|| format!("event {i}: missing \"ts\""))?;
+        summary.events += 1;
+        match last_ts.iter_mut().find(|(track, _)| *track == (pid, tid)) {
+            Some((_, last)) => {
+                if ts < *last {
+                    return Err(format!(
+                        "event {i}: ts {ts} < {last} — not monotone on track ({pid}, {tid})"
+                    ));
+                }
+                *last = ts;
+            }
+            None => last_ts.push(((pid, tid), ts)),
+        }
+    }
+    summary.tracks = last_ts.len();
+    Ok(summary)
+}
+
+/// One row of [`phase_table`]: aggregate statistics for every distinct
+/// `(cat, name)` span kind in a capture.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseRow {
+    /// Event category.
+    pub cat: &'static str,
+    /// Event name.
+    pub name: &'static str,
+    /// Number of spans of this kind.
+    pub count: u64,
+    /// Summed span duration, µs.
+    pub total_us: f64,
+    /// Longest single span, µs.
+    pub max_us: f64,
+}
+
+/// Aggregate spans by `(cat, name)` — the per-phase summary `repro
+/// trace` prints. Rows are sorted by descending total time.
+pub fn phase_table(events: &[Event]) -> Vec<PhaseRow> {
+    let mut rows: Vec<PhaseRow> = Vec::new();
+    for e in events {
+        let EventKind::Span { dur_ns } = e.kind else { continue };
+        let us = dur_ns as f64 / 1e3;
+        match rows.iter_mut().find(|r| r.cat == e.cat && r.name == e.name) {
+            Some(row) => {
+                row.count += 1;
+                row.total_us += us;
+                row.max_us = row.max_us.max(us);
+            }
+            None => {
+                rows.push(PhaseRow { cat: e.cat, name: e.name, count: 1, total_us: us, max_us: us })
+            }
+        }
+    }
+    rows.sort_by(|a, b| b.total_us.total_cmp(&a.total_us));
+    rows
+}
+
+/// Minimal recursive-descent JSON parser — just enough to validate the
+/// exporter's own output without external dependencies. Numbers are
+/// f64, objects keep insertion order.
+mod json {
+    /// A parsed JSON value.
+    pub enum Value {
+        /// `null`.
+        Null,
+        /// `true` / `false`.
+        Bool(bool),
+        /// Any number (parsed as f64).
+        Num(f64),
+        /// A string.
+        Str(String),
+        /// An array.
+        Arr(Vec<Value>),
+        /// An object, insertion-ordered.
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn as_obj(&self) -> Option<&[(String, Value)]> {
+            match self {
+                Value::Obj(o) => Some(o),
+                _ => None,
+            }
+        }
+        pub fn as_arr(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(a) => Some(a),
+                _ => None,
+            }
+        }
+        pub fn as_num(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value, String> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(format!("trailing garbage at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        s: &'a [u8],
+        i: usize,
+    }
+
+    impl Parser<'_> {
+        fn skip_ws(&mut self) {
+            while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.s.get(self.i).copied()
+        }
+
+        fn eat(&mut self, c: u8) -> Result<(), String> {
+            if self.peek() == Some(c) {
+                self.i += 1;
+                Ok(())
+            } else {
+                Err(format!("expected {:?} at byte {}", c as char, self.i))
+            }
+        }
+
+        fn value(&mut self) -> Result<Value, String> {
+            match self.peek().ok_or("unexpected end of input")? {
+                b'{' => self.object(),
+                b'[' => self.array(),
+                b'"' => Ok(Value::Str(self.string()?)),
+                b't' => self.keyword("true", Value::Bool(true)),
+                b'f' => self.keyword("false", Value::Bool(false)),
+                b'n' => self.keyword("null", Value::Null),
+                _ => self.number(),
+            }
+        }
+
+        fn keyword(&mut self, word: &str, v: Value) -> Result<Value, String> {
+            if self.s[self.i..].starts_with(word.as_bytes()) {
+                self.i += word.len();
+                Ok(v)
+            } else {
+                Err(format!("bad keyword at byte {}", self.i))
+            }
+        }
+
+        fn object(&mut self) -> Result<Value, String> {
+            self.eat(b'{')?;
+            let mut out = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                return Ok(Value::Obj(out));
+            }
+            loop {
+                self.skip_ws();
+                let key = self.string()?;
+                self.skip_ws();
+                self.eat(b':')?;
+                self.skip_ws();
+                out.push((key, self.value()?));
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b'}') => {
+                        self.i += 1;
+                        return Ok(Value::Obj(out));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Value, String> {
+            self.eat(b'[')?;
+            let mut out = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                return Ok(Value::Arr(out));
+            }
+            loop {
+                self.skip_ws();
+                out.push(self.value()?);
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b']') => {
+                        self.i += 1;
+                        return Ok(Value::Arr(out));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            self.eat(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.peek().ok_or("unterminated string")? {
+                    b'"' => {
+                        self.i += 1;
+                        return Ok(out);
+                    }
+                    b'\\' => {
+                        self.i += 1;
+                        match self.peek().ok_or("unterminated escape")? {
+                            b'"' => out.push('"'),
+                            b'\\' => out.push('\\'),
+                            b'/' => out.push('/'),
+                            b'n' => out.push('\n'),
+                            b't' => out.push('\t'),
+                            b'r' => out.push('\r'),
+                            b'b' => out.push('\u{8}'),
+                            b'f' => out.push('\u{c}'),
+                            b'u' => {
+                                let hex = self
+                                    .s
+                                    .get(self.i + 1..self.i + 5)
+                                    .ok_or("short \\u escape")?;
+                                let code = u32::from_str_radix(
+                                    std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                    16,
+                                )
+                                .map_err(|_| "bad \\u escape")?;
+                                out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                                self.i += 4;
+                            }
+                            c => return Err(format!("bad escape \\{}", c as char)),
+                        }
+                        self.i += 1;
+                    }
+                    _ => {
+                        // Consume one UTF-8 scalar (the input is a &str,
+                        // so boundaries are valid by construction).
+                        let rest = std::str::from_utf8(&self.s[self.i..])
+                            .map_err(|_| "invalid utf-8")?;
+                        let c = rest.chars().next().ok_or("unterminated string")?;
+                        out.push(c);
+                        self.i += c.len_utf8();
+                    }
+                }
+            }
+        }
+
+        fn number(&mut self) -> Result<Value, String> {
+            let start = self.i;
+            while self
+                .peek()
+                .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+            {
+                self.i += 1;
+            }
+            std::str::from_utf8(&self.s[start..self.i])
+                .ok()
+                .and_then(|t| t.parse().ok())
+                .map(Value::Num)
+                .ok_or_else(|| format!("bad number at byte {start}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::NO_ARG;
+
+    fn span(ts_ns: u64, dur_ns: u64, rank: u32, tid: u32) -> Event {
+        Event {
+            ts_ns,
+            kind: EventKind::Span { dur_ns },
+            cat: "t",
+            name: "s",
+            rank,
+            tid,
+            tag: 7,
+            chunk: NO_ARG,
+            bytes: 64,
+        }
+    }
+
+    #[test]
+    fn export_roundtrips_through_validator() {
+        let events = vec![
+            span(1_000, 5_000, 0, 0),
+            span(2_000, 1_000, 0, 0),
+            span(1_500, 2_000, 1, 3),
+            Event { kind: EventKind::Instant, ..span(9_000, 0, u32::MAX, 2) },
+        ];
+        let doc = to_json(&events);
+        let summary = validate_str(&doc).expect("exporter output must validate");
+        assert_eq!(summary, TraceSummary { events: 4, spans: 3, tracks: 3 });
+        assert!(doc.contains("\"name\":\"service\""), "service pseudo-process must be named");
+        assert!(doc.contains("\"name\":\"locality 1\""));
+    }
+
+    #[test]
+    fn validator_rejects_broken_documents() {
+        assert!(validate_str("{}").is_err(), "missing traceEvents");
+        assert!(validate_str("{\"traceEvents\":[{\"pid\":0}]}").is_err(), "missing ph");
+        let bad_dur = "{\"traceEvents\":[{\"ph\":\"X\",\"pid\":0,\"tid\":0,\"ts\":1,\
+                        \"dur\":-2,\"name\":\"x\"}]}";
+        assert!(validate_str(bad_dur).is_err(), "negative dur");
+        let bad_order = "{\"traceEvents\":[\
+            {\"ph\":\"i\",\"pid\":0,\"tid\":0,\"ts\":5,\"name\":\"a\"},\
+            {\"ph\":\"i\",\"pid\":0,\"tid\":0,\"ts\":4,\"name\":\"b\"}]}";
+        assert!(validate_str(bad_order).is_err(), "non-monotone track");
+        assert!(validate_str("not json").is_err());
+    }
+
+    #[test]
+    fn phase_table_aggregates_by_kind() {
+        let mut e2 = span(10, 4_000, 0, 1);
+        e2.name = "other";
+        let rows = phase_table(&[span(0, 2_000, 0, 0), span(5, 6_000, 1, 0), e2]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].name, rows[0].count), ("s", 2));
+        assert!((rows[0].total_us - 8.0).abs() < 1e-9);
+        assert!((rows[0].max_us - 6.0).abs() < 1e-9);
+    }
+}

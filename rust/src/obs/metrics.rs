@@ -1,0 +1,332 @@
+//! Counters, gauges, and exponential-bucket histograms — the metrics
+//! half of the observability layer.
+//!
+//! [`Histogram`] is the shared latency-summary type: fixed power-of-two
+//! buckets (so recording is a single index increment, merging is
+//! element-wise addition, and quantiles never need the raw samples),
+//! used by the per-tenant service accounts, the load harness's
+//! percentile reporting, and the `metrics` verb of `repro serve`.
+//! [`MetricsRegistry`] holds named counters/gauges/histograms (labels
+//! embedded Prometheus-style in the name, e.g.
+//! `fft_jobs_done_total{tenant="acme"}`) and renders the whole state as
+//! a Prometheus text-format snapshot.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Number of exponential buckets: bucket `i` covers `[2^i, 2^(i+1))`
+/// units (bucket 0 additionally absorbs everything below 1). With
+/// microsecond samples the top bucket starts at ≈ 4.6 days.
+pub const BUCKETS: usize = 48;
+
+/// Fixed-footprint latency histogram with power-of-two buckets.
+///
+/// Quantile estimates interpolate linearly inside the winning bucket
+/// and clamp to the observed min/max, so for any `p ≤ q`,
+/// `quantile(p) ≤ quantile(q)` holds by construction — the property the
+/// load harness's p50/p95/p99 regression test pins down.
+///
+/// ```
+/// use hpx_fft::obs::Histogram;
+///
+/// let mut h = Histogram::new();
+/// for v in [100.0, 200.0, 400.0, 800.0] {
+///     h.observe(v);
+/// }
+/// assert_eq!(h.count(), 4);
+/// let (p50, p95, p99) = (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99));
+/// assert!(p50 <= p95 && p95 <= p99);
+/// assert!(p99 <= 800.0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self { counts: [0; BUCKETS], count: 0, sum: 0.0, min: f64::INFINITY, max: 0.0 }
+    }
+
+    fn bucket(value: f64) -> usize {
+        if value < 1.0 {
+            0
+        } else {
+            (value.log2().floor() as usize).min(BUCKETS - 1)
+        }
+    }
+
+    /// Record one sample (negative values clamp to 0).
+    pub fn observe(&mut self, value: f64) {
+        let value = if value.is_finite() { value.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket(value)] += 1;
+        self.count += 1;
+        self.sum += value;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of all recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Estimated value at quantile `q ∈ [0, 1]` — linear interpolation
+    /// inside the bucket holding the `⌈q·count⌉`-th sample, clamped to
+    /// the observed range. Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let into = (target - (seen - c)) as f64 / c as f64;
+                return (lo + (hi - lo) * into).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// [`Histogram::quantile`] with a percent argument (`p ∈ [0, 100]`).
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.quantile(p / 100.0)
+    }
+
+    /// Append Prometheus text-format `_bucket`/`_sum`/`_count` lines.
+    /// `family` is the metric name without labels, `labels` the
+    /// `key="value"` list (possibly empty, without braces).
+    fn render_into(&self, out: &mut String, family: &str, labels: &str) {
+        use std::fmt::Write as _;
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        let top = self.counts.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+        for (i, &c) in self.counts.iter().enumerate().take(top) {
+            cum += c;
+            let le = 1u64 << (i + 1);
+            let _ = writeln!(out, "{family}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{family}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", self.count);
+        let _ = writeln!(out, "{family}_sum{{{labels}}} {}", self.sum);
+        let _ = writeln!(out, "{family}_count{{{labels}}} {}", self.count);
+    }
+}
+
+/// Split a metric name into `(family, labels)`:
+/// `f{a="b"}` → `("f", "a=\"b\"")`, `f` → `("f", "")`.
+fn split_name(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], name[i + 1..].trim_end_matches('}')),
+        None => (name, ""),
+    }
+}
+
+/// Named counters, gauges, and histograms behind one lock — the
+/// process-wide metrics surface the FFT service exposes through its
+/// `metrics` verb. Interior mutability so layers share it behind `Arc`
+/// without threading `&mut` through the scheduler.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn inner(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Add `delta` to the named monotone counter (created at 0).
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut inner = self.inner();
+        match inner.counters.get_mut(name) {
+            Some(c) => *c += delta,
+            None => {
+                inner.counters.insert(name.to_string(), delta);
+            }
+        }
+    }
+
+    /// Set the named gauge to `value`.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.inner().gauges.insert(name.to_string(), value);
+    }
+
+    /// Record one sample into the named histogram (created empty).
+    pub fn observe(&self, name: &str, value: f64) {
+        self.inner().hists.entry(name.to_string()).or_default().observe(value);
+    }
+
+    /// Current value of the named counter (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of the named gauge, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner().gauges.get(name).copied()
+    }
+
+    /// Snapshot of the named histogram, if any sample was recorded.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.inner().hists.get(name).cloned()
+    }
+
+    /// Render the whole registry as a Prometheus text-format snapshot:
+    /// one `# TYPE` header per metric family, counters and gauges as
+    /// single samples, histograms as cumulative `_bucket`/`_sum`/
+    /// `_count` series.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let inner = self.inner();
+        let mut out = String::new();
+        let mut last_family = String::new();
+        let mut type_line = |out: &mut String, family: &str, kind: &str| {
+            if family != last_family {
+                let _ = writeln!(out, "# TYPE {family} {kind}");
+                last_family = family.to_string();
+            }
+        };
+        for (name, value) in &inner.counters {
+            let (family, _) = split_name(name);
+            type_line(&mut out, family, "counter");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        for (name, value) in &inner.gauges {
+            let (family, _) = split_name(name);
+            type_line(&mut out, family, "gauge");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        for (name, hist) in &inner.hists {
+            let (family, labels) = split_name(name);
+            type_line(&mut out, family, "histogram");
+            hist.render_into(&mut out, family, labels);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        let mut rng = Pcg32::new(7);
+        let mut h = Histogram::new();
+        for _ in 0..5000 {
+            h.observe((rng.next_signal() as f64).abs() * 10_000.0);
+        }
+        let mut last = 0.0;
+        for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile({q}) = {v} < {last}");
+            last = v;
+        }
+        assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn quantile_brackets_exact_value() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.observe(300.0);
+        }
+        // All mass in bucket [256, 512); estimate must stay in range.
+        let p50 = h.quantile(0.5);
+        assert!((256.0..=512.0).contains(&p50), "p50 = {p50}");
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.observe(10.0);
+        b.observe(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.sum() - 1010.0).abs() < 1e-9);
+        assert!(a.quantile(0.0) <= a.quantile(1.0));
+    }
+
+    #[test]
+    fn registry_renders_prometheus_text() {
+        let reg = MetricsRegistry::new();
+        reg.add("jobs_total{tenant=\"acme\"}", 3);
+        reg.add("jobs_total{tenant=\"labs\"}", 1);
+        reg.set_gauge("queue_depth{tenant=\"acme\"}", 2.0);
+        reg.observe("latency_us{tenant=\"acme\"}", 900.0);
+        reg.observe("latency_us{tenant=\"acme\"}", 90.0);
+        let text = reg.render();
+        assert!(text.contains("# TYPE jobs_total counter"));
+        assert!(text.contains("jobs_total{tenant=\"acme\"} 3"));
+        assert!(text.contains("# TYPE queue_depth gauge"));
+        assert!(text.contains("# TYPE latency_us histogram"));
+        assert!(text.contains("latency_us_bucket{tenant=\"acme\",le=\"+Inf\"} 2"));
+        assert!(text.contains("latency_us_count{tenant=\"acme\"} 2"));
+        assert_eq!(reg.counter("jobs_total{tenant=\"acme\"}"), 3);
+        assert_eq!(reg.histogram("latency_us{tenant=\"acme\"}").unwrap().count(), 2);
+    }
+}

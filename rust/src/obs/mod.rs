@@ -1,0 +1,53 @@
+//! Observability: always-on tracing spans, Chrome/Perfetto trace export,
+//! and a live metrics registry.
+//!
+//! The paper's analysis stops at end-to-end runtimes per parcelport;
+//! explaining *why* LCI beats MPI/TCP needs per-message visibility —
+//! where a chunk waits, which FFT band hid which send. This module is
+//! that substrate:
+//!
+//! - [`trace`] — typed span/instant events recorded into per-thread ring
+//!   buffers behind a single relaxed-atomic gate. When tracing is
+//!   disabled (the default) an emission site costs one relaxed atomic
+//!   load and allocates nothing — cheap enough to leave compiled into
+//!   every hot path (parcelport sends, per-chunk wire work, FFT bands,
+//!   transpose placement, scheduler job lifecycle).
+//! - [`chrome`] — exports drained events as Chrome trace-event JSON,
+//!   loadable in Perfetto / `chrome://tracing`. One process per
+//!   locality, one track per thread; chunk spans nest under collective
+//!   spans by time containment, which makes the driver's `overlap_us`
+//!   *visible* as overlapping tracks instead of a single number.
+//! - [`metrics`] — counters, gauges, and exponential-bucket latency
+//!   histograms behind [`MetricsRegistry`], rendered as a
+//!   Prometheus-style text snapshot (the `metrics` verb of
+//!   `repro serve`).
+//!
+//! The discrete-event simulator records the same event shape (see
+//! [`crate::simnet::run_sim_traced`]), so a simulated 1024-locality run
+//! exports through the identical pipeline as a live run.
+//!
+//! ## Capturing a trace
+//!
+//! ```
+//! use hpx_fft::obs;
+//!
+//! let session = obs::session(); // drains stale events, enables the gate
+//! {
+//!     let _span = obs::span("fft", "band", 0);
+//!     obs::instant("chunk", "post", 0);
+//! }
+//! let events = session.finish(); // disables the gate, drains
+//! assert_eq!(events.len(), 2);
+//! let json = obs::chrome::to_json(&events);
+//! assert!(json.contains("\"traceEvents\""));
+//! ```
+
+pub mod chrome;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Histogram, MetricsRegistry};
+pub use trace::{
+    disable, drain, dropped_events, enable, enabled, instant, instant_args, open_spans, session,
+    span, span_args, Event, EventKind, OpenSpan, SpanGuard, TraceSession, NO_ARG, SERVICE_RANK,
+};

@@ -1,0 +1,452 @@
+//! Span/instant recording into per-thread ring buffers.
+//!
+//! ## Design
+//!
+//! - **Gate.** A single global [`AtomicBool`] read with `Relaxed`
+//!   ordering. Every emission site checks it first; when tracing is off
+//!   (the default) a [`span`] or [`instant`] call is one atomic load and
+//!   zero allocations — verified by `tests/alloc_free.rs` and the
+//!   `benches/hotpath.rs` overhead guard.
+//! - **Rings.** Each thread owns a bounded ring of [`RING_CAP`] events.
+//!   The owning thread is the only writer, so the per-ring mutex is
+//!   uncontended on the hot path; cross-thread locking happens only when
+//!   [`drain`] collects. When a ring is full the oldest event is
+//!   overwritten and [`dropped_events`] ticks — recording never blocks
+//!   and never grows without bound.
+//! - **Timestamps.** Nanoseconds from a process-wide monotonic epoch
+//!   ([`Instant`]), so events from different threads and localities
+//!   share one timeline and the exporter can sort tracks globally.
+//! - **Open-span registry.** Armed [`SpanGuard`]s register themselves
+//!   until dropped; [`open_spans`] snapshots what is currently in
+//!   flight. `testkit::with_watchdog` dumps this on timeout, turning a
+//!   bare "likely hang" panic into "chunk 3 of tag 71 from rank 2 never
+//!   closed".
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Maximum buffered events per thread; the oldest events are overwritten
+/// once a ring is full (see [`dropped_events`]).
+pub const RING_CAP: usize = 1 << 15;
+
+/// Sentinel for an absent numeric argument on an [`Event`].
+pub const NO_ARG: i64 = -1;
+
+/// Pseudo-rank for events not tied to a locality (service-level job
+/// lifecycle events); the exporter gives them their own process track.
+pub const SERVICE_RANK: usize = usize::MAX;
+
+static GATE: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+static OPEN: Mutex<Vec<OpenSpan>> = Mutex::new(Vec::new());
+static SESSION: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    static LOCAL: Arc<Mutex<Ring>> = register_thread();
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Whether the tracing gate is currently open (relaxed load — the only
+/// cost a disabled emission site pays).
+#[inline(always)]
+pub fn enabled() -> bool {
+    GATE.load(Ordering::Relaxed)
+}
+
+/// Open the tracing gate: subsequent [`span`]/[`instant`] calls record.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    GATE.store(true, Ordering::SeqCst);
+}
+
+/// Close the tracing gate; buffered events stay until [`drain`]ed.
+pub fn disable() {
+    GATE.store(false, Ordering::SeqCst);
+}
+
+/// Nanoseconds since the process-wide monotonic epoch.
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn rank32(rank: usize) -> u32 {
+    if rank == SERVICE_RANK {
+        u32::MAX
+    } else {
+        rank as u32
+    }
+}
+
+fn current_tid() -> u32 {
+    TID.with(|t| *t)
+}
+
+/// What an [`Event`] marks on the timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A closed interval `[ts_ns, ts_ns + dur_ns]` — always complete:
+    /// span events are only emitted when their guard drops.
+    Span {
+        /// Span duration, nanoseconds.
+        dur_ns: u64,
+    },
+    /// A point in time.
+    Instant,
+}
+
+/// One recorded trace event. `cat`/`name` are static so recording never
+/// copies strings; the three numeric arguments use [`NO_ARG`] when
+/// absent and surface in the exporter's `args` object.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Start time (spans) or occurrence time (instants), ns since epoch.
+    pub ts_ns: u64,
+    /// Span-with-duration or instant.
+    pub kind: EventKind,
+    /// Category — the layer that emitted ("port", "wire", "fft", ...).
+    pub cat: &'static str,
+    /// Event name within the category.
+    pub name: &'static str,
+    /// Locality the event belongs to (`u32::MAX` = service-level).
+    pub rank: u32,
+    /// Stable per-thread track id.
+    pub tid: u32,
+    /// Wire tag, or [`NO_ARG`].
+    pub tag: i64,
+    /// Chunk index within a transfer, or [`NO_ARG`].
+    pub chunk: i64,
+    /// Payload bytes, or [`NO_ARG`].
+    pub bytes: i64,
+}
+
+impl Event {
+    /// End time: `ts_ns + dur` for spans, `ts_ns` for instants.
+    pub fn end_ns(&self) -> u64 {
+        match self.kind {
+            EventKind::Span { dur_ns } => self.ts_ns + dur_ns,
+            EventKind::Instant => self.ts_ns,
+        }
+    }
+
+    /// Whether this event is a (closed) span.
+    pub fn is_span(&self) -> bool {
+        matches!(self.kind, EventKind::Span { .. })
+    }
+}
+
+/// A span currently in flight (guard created, not yet dropped) — the
+/// watchdog's hang diagnosis.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenSpan {
+    /// Unique id (used internally to unregister on close).
+    pub id: u64,
+    /// Category of the open span.
+    pub cat: &'static str,
+    /// Name of the open span.
+    pub name: &'static str,
+    /// Locality the span belongs to (`u32::MAX` = service-level).
+    pub rank: u32,
+    /// Wire tag, or [`NO_ARG`].
+    pub tag: i64,
+    /// Chunk index, or [`NO_ARG`].
+    pub chunk: i64,
+    /// Start time, ns since epoch.
+    pub start_ns: u64,
+}
+
+impl OpenSpan {
+    /// Nanoseconds this span has been open so far.
+    pub fn open_for_ns(&self) -> u64 {
+        now_ns().saturating_sub(self.start_ns)
+    }
+}
+
+/// Bounded per-thread event buffer. `next` indexes the oldest event once
+/// the ring has wrapped.
+struct Ring {
+    buf: Vec<Event>,
+    next: usize,
+    wrapped: bool,
+}
+
+impl Ring {
+    const fn new() -> Self {
+        Self { buf: Vec::new(), next: 0, wrapped: false }
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(e);
+        } else {
+            self.buf[self.next] = e;
+            self.next = (self.next + 1) % RING_CAP;
+            self.wrapped = true;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Remove and return all buffered events in recording order.
+    fn take(&mut self) -> Vec<Event> {
+        let buf = std::mem::take(&mut self.buf);
+        let next = std::mem::replace(&mut self.next, 0);
+        if std::mem::replace(&mut self.wrapped, false) {
+            let mut out = Vec::with_capacity(buf.len());
+            out.extend_from_slice(&buf[next..]);
+            out.extend_from_slice(&buf[..next]);
+            out
+        } else {
+            buf
+        }
+    }
+}
+
+fn register_thread() -> Arc<Mutex<Ring>> {
+    let ring = Arc::new(Mutex::new(Ring::new()));
+    lock(&REGISTRY).push(Arc::clone(&ring));
+    ring
+}
+
+fn emit(e: Event) {
+    LOCAL.with(|ring| lock(ring).push(e));
+}
+
+/// Events overwritten because a thread's ring was full, process-lifetime
+/// total. Non-zero means a capture outgrew [`RING_CAP`] — shorten the
+/// traced region or drain mid-run.
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// RAII guard for an in-flight span. Created by [`span`]/[`span_args`];
+/// the span event (with its measured duration) is emitted when the guard
+/// drops. A guard created while tracing was disabled is inert.
+#[must_use = "the span closes (and is recorded) when this guard drops"]
+pub struct SpanGuard {
+    meta: Option<SpanMeta>,
+}
+
+struct SpanMeta {
+    start_ns: u64,
+    cat: &'static str,
+    name: &'static str,
+    rank: u32,
+    tag: i64,
+    chunk: i64,
+    bytes: i64,
+    open_id: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(m) = self.meta.take() {
+            let dur_ns = now_ns().saturating_sub(m.start_ns);
+            lock(&OPEN).retain(|s| s.id != m.open_id);
+            emit(Event {
+                ts_ns: m.start_ns,
+                kind: EventKind::Span { dur_ns },
+                cat: m.cat,
+                name: m.name,
+                rank: m.rank,
+                tid: current_tid(),
+                tag: m.tag,
+                chunk: m.chunk,
+                bytes: m.bytes,
+            });
+        }
+    }
+}
+
+/// Open a span with no numeric arguments. See [`span_args`].
+#[inline]
+pub fn span(cat: &'static str, name: &'static str, rank: usize) -> SpanGuard {
+    span_args(cat, name, rank, NO_ARG, NO_ARG, NO_ARG)
+}
+
+/// Open a span on the current thread's track. When the gate is closed
+/// this returns an inert guard without touching any lock or allocating;
+/// when open, the span registers in the open-span table and is emitted
+/// with its duration on drop.
+#[inline]
+pub fn span_args(
+    cat: &'static str,
+    name: &'static str,
+    rank: usize,
+    tag: i64,
+    chunk: i64,
+    bytes: i64,
+) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { meta: None };
+    }
+    let start_ns = now_ns();
+    let open_id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let rank = rank32(rank);
+    lock(&OPEN).push(OpenSpan { id: open_id, cat, name, rank, tag, chunk, start_ns });
+    SpanGuard { meta: Some(SpanMeta { start_ns, cat, name, rank, tag, chunk, bytes, open_id }) }
+}
+
+/// Record an instant with no numeric arguments. See [`instant_args`].
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str, rank: usize) {
+    instant_args(cat, name, rank, NO_ARG, NO_ARG, NO_ARG);
+}
+
+/// Record a point event on the current thread's track. A no-op (one
+/// relaxed atomic load, zero allocations) when the gate is closed.
+#[inline]
+pub fn instant_args(
+    cat: &'static str,
+    name: &'static str,
+    rank: usize,
+    tag: i64,
+    chunk: i64,
+    bytes: i64,
+) {
+    if !enabled() {
+        return;
+    }
+    emit(Event {
+        ts_ns: now_ns(),
+        kind: EventKind::Instant,
+        cat,
+        name,
+        rank: rank32(rank),
+        tid: current_tid(),
+        tag,
+        chunk,
+        bytes,
+    });
+}
+
+/// Snapshot of all spans currently in flight, for hang diagnosis.
+pub fn open_spans() -> Vec<OpenSpan> {
+    lock(&OPEN).clone()
+}
+
+/// Collect (and remove) all buffered events from every thread's ring,
+/// globally sorted by timestamp.
+pub fn drain() -> Vec<Event> {
+    let rings: Vec<_> = lock(&REGISTRY).iter().map(Arc::clone).collect();
+    let mut out = Vec::new();
+    for ring in rings {
+        out.append(&mut lock(&ring).take());
+    }
+    out.sort_by_key(|e| (e.ts_ns, e.tid));
+    out
+}
+
+/// Exclusive capture window: holds a process-wide session lock (so
+/// concurrent captures — e.g. tests in one binary — serialize instead of
+/// stealing each other's events), drains stale events, clears the
+/// open-span table, and opens the gate. Obtain via [`session`].
+pub struct TraceSession {
+    guard: Option<MutexGuard<'static, ()>>,
+}
+
+/// Begin an exclusive capture window. Blocks until any other session
+/// ends. The gate closes again when the returned [`TraceSession`] is
+/// finished or dropped.
+pub fn session() -> TraceSession {
+    let guard = lock(&SESSION);
+    disable();
+    drop(drain()); // discard events leaked from before this window
+    lock(&OPEN).clear();
+    enable();
+    TraceSession { guard: Some(guard) }
+}
+
+impl TraceSession {
+    /// Close the gate and return every event recorded in this window,
+    /// sorted by timestamp.
+    pub fn finish(mut self) -> Vec<Event> {
+        disable();
+        let events = drain();
+        self.guard = None;
+        events
+    }
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        disable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test filters on its own category: the gate and rings are
+    // process-global, so a concurrently running test's events may land
+    // in this test's session window (and vice versa).
+
+    #[test]
+    fn disabled_gate_records_nothing() {
+        let s = session();
+        drop(s.finish()); // gate now closed (unless another session opens it)
+        let _g = span("t_gate", "closed", 0);
+        instant("t_gate", "closed", 0);
+        let s = session();
+        let stray = s.finish().iter().filter(|e| e.cat == "t_gate").count();
+        assert_eq!(stray, 0, "events recorded through a closed gate");
+    }
+
+    #[test]
+    fn span_records_duration_and_args() {
+        let s = session();
+        {
+            let _g = span_args("t_args", "work", 3, 7, 2, 4096);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        instant_args("t_args", "mark", 3, NO_ARG, NO_ARG, NO_ARG);
+        let events: Vec<_> = s.finish().into_iter().filter(|e| e.cat == "t_args").collect();
+        assert_eq!(events.len(), 2);
+        let sp = events.iter().find(|e| e.is_span()).expect("span event");
+        assert_eq!((sp.cat, sp.name, sp.rank), ("t_args", "work", 3));
+        assert_eq!((sp.tag, sp.chunk, sp.bytes), (7, 2, 4096));
+        match sp.kind {
+            EventKind::Span { dur_ns } => assert!(dur_ns >= 1_000_000, "slept 2ms, got {dur_ns}ns"),
+            EventKind::Instant => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn open_spans_visible_until_drop() {
+        let s = session();
+        let g = span_args("t_open", "inflight", 1, 42, 5, NO_ARG);
+        let open: Vec<_> = open_spans().into_iter().filter(|o| o.cat == "t_open").collect();
+        assert_eq!(open.len(), 1);
+        assert_eq!((open[0].name, open[0].rank, open[0].tag, open[0].chunk), ("inflight", 1, 42, 5));
+        drop(g);
+        assert!(open_spans().iter().all(|o| o.cat != "t_open"));
+        drop(s.finish());
+    }
+
+    #[test]
+    fn drain_merges_threads_in_time_order() {
+        let s = session();
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                std::thread::spawn(move || {
+                    let _g = span("t_drain", "thread", r);
+                    instant("t_drain", "tick", r);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let events = s.finish();
+        assert!(events.iter().filter(|e| e.cat == "t_drain").count() >= 8);
+        assert!(events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns), "drain must sort by time");
+    }
+}

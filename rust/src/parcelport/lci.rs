@@ -46,6 +46,16 @@ impl Parcelport for LciParcelport {
     fn send(&self, parcel: Parcel) {
         assert!(parcel.dest < self.mailboxes.len(), "dest {} out of range", parcel.dest);
         self.stats.record_send(parcel.payload.len());
+        // One trace span per physical send, next to the one record_send —
+        // the invariant audit test holds traced bytes equal to PortStats.
+        let _span = crate::obs::span_args(
+            "port",
+            "send",
+            parcel.src,
+            parcel.tag as i64,
+            crate::obs::NO_ARG,
+            parcel.payload.len() as i64,
+        );
         // Hybrid mode: charge modeled software + wire time (self-sends
         // never touch the wire).
         if parcel.src != parcel.dest {
@@ -59,6 +69,14 @@ impl Parcelport for LciParcelport {
     }
 
     fn recv(&self, at: LocalityId, src: LocalityId, action: ActionId, tag: Tag) -> Payload {
+        let _span = crate::obs::span_args(
+            "port",
+            "recv",
+            at,
+            tag as i64,
+            crate::obs::NO_ARG,
+            crate::obs::NO_ARG,
+        );
         self.mailboxes[at].recv(src, action, tag)
     }
 

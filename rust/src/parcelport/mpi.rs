@@ -82,6 +82,16 @@ impl Parcelport for MpiParcelport {
         assert!(parcel.dest < self.n_localities(), "dest {} out of range", parcel.dest);
         let size = parcel.payload.len();
         self.stats.record_send(size);
+        // One trace span per physical send, next to the one record_send —
+        // the invariant audit test holds traced bytes equal to PortStats.
+        let _span = crate::obs::span_args(
+            "port",
+            "send",
+            parcel.src,
+            parcel.tag as i64,
+            crate::obs::NO_ARG,
+            size as i64,
+        );
         if parcel.src != parcel.dest {
             if let Some(net) = &self.net {
                 let us = net.charge(&PortKind::Mpi.cost_model(), size as u64);
@@ -112,6 +122,14 @@ impl Parcelport for MpiParcelport {
     }
 
     fn recv(&self, at: LocalityId, src: LocalityId, action: ActionId, tag: Tag) -> Payload {
+        let _span = crate::obs::span_args(
+            "port",
+            "recv",
+            at,
+            tag as i64,
+            crate::obs::NO_ARG,
+            crate::obs::NO_ARG,
+        );
         // Fast path: data already here (eager, or rendezvous completed).
         if let Some(p) = self.mailboxes[at].try_recv(src, action, tag) {
             return p;

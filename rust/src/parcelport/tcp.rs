@@ -169,6 +169,16 @@ impl Parcelport for TcpParcelport {
         let inner = &self.inner;
         assert!(parcel.dest < inner.n, "dest {} out of range", parcel.dest);
         inner.stats.record_send(parcel.payload.len());
+        // One trace span per physical send, next to the one record_send —
+        // the invariant audit test holds traced bytes equal to PortStats.
+        let _span = crate::obs::span_args(
+            "port",
+            "send",
+            parcel.src,
+            parcel.tag as i64,
+            crate::obs::NO_ARG,
+            parcel.payload.len() as i64,
+        );
         if parcel.src != parcel.dest {
             if let Some(net) = &inner.net {
                 let us = net.charge(&PortKind::Tcp.cost_model(), parcel.payload.len() as u64);
@@ -200,6 +210,14 @@ impl Parcelport for TcpParcelport {
     }
 
     fn recv(&self, at: LocalityId, src: LocalityId, action: ActionId, tag: Tag) -> Payload {
+        let _span = crate::obs::span_args(
+            "port",
+            "recv",
+            at,
+            tag as i64,
+            crate::obs::NO_ARG,
+            crate::obs::NO_ARG,
+        );
         self.inner.mailboxes[at].recv(src, action, tag)
     }
 

@@ -57,6 +57,7 @@ use crate::dist_fft::{TransformReport, TransformRequest, TransformTimings};
 use crate::fft::complex::Complex32;
 use crate::hpx::parcel::Tag;
 use crate::metrics::RunStats;
+use crate::obs::{Histogram, MetricsRegistry};
 use crate::parcelport::{
     self, FaultSpec, FaultyPort, NetModel, Parcelport, PortKind, PortStats, PortStatsSnapshot,
 };
@@ -115,6 +116,7 @@ struct TenantAccount {
     pending: usize,
     wire_bytes: u64,
     latencies_us: Vec<f64>,
+    latency_hist: Histogram,
 }
 
 /// One tenant's slice of [`FftService::metrics`].
@@ -137,6 +139,10 @@ pub struct TenantMetrics {
     /// Submit-to-completion latencies (µs) of finished jobs — p50/p95/
     /// p99 via [`RunStats::percentile`]. `None` until a job finishes.
     pub latency: Option<RunStats>,
+    /// The same latencies as an exponential-bucket [`Histogram`] — the
+    /// shared quantile path (`p50 ≤ p95 ≤ p99` holds by construction),
+    /// and what [`FftService::metrics_text`] renders.
+    pub latency_hist: Histogram,
 }
 
 /// Scheduler state (one mutex; the condvar signals every transition).
@@ -166,6 +172,12 @@ struct Shared {
     state: Mutex<SchedState>,
     cv: Condvar,
     pools: Mutex<Vec<PoolLease>>,
+    /// Live service metrics — counters, gauges, and latency histograms
+    /// keyed `family{tenant="..."}`, rendered by
+    /// [`FftService::metrics_text`]. A leaf lock: it is only ever taken
+    /// while (optionally) holding the scheduler mutex, never the other
+    /// way around.
+    registry: MetricsRegistry,
 }
 
 /// A validated submission, ready to enter the dispatch log.
@@ -216,6 +228,7 @@ impl FftService {
             }),
             cv: Condvar::new(),
             pools: Mutex::new(Vec::new()),
+            registry: MetricsRegistry::new(),
         });
         let workers = (0..n)
             .map(|rank| {
@@ -260,24 +273,38 @@ impl FftService {
         let draining = st.draining;
         let acct = st.tenants.entry(tenant.to_string()).or_default();
         acct.submitted += 1;
+        self.shared.registry.add(&tenant_key("fft_jobs_submitted_total", tenant), 1);
         if draining {
             acct.rejected += 1;
+            self.shared.registry.add(&tenant_key("fft_jobs_rejected_total", tenant), 1);
             return Err(AdmissionError::ShuttingDown);
         }
         let prepared = match prepared {
             Ok(p) => p,
             Err(e) => {
                 acct.rejected += 1;
+                self.shared.registry.add(&tenant_key("fft_jobs_rejected_total", tenant), 1);
                 return Err(e);
             }
         };
         if acct.pending >= limit {
             acct.rejected += 1;
+            self.shared.registry.add(&tenant_key("fft_jobs_rejected_total", tenant), 1);
             return Err(AdmissionError::QueueFull { tenant: tenant.to_string(), limit });
         }
         acct.pending += 1;
+        let pending = acct.pending;
+        self.shared.registry.set_gauge(&tenant_key("fft_jobs_pending", tenant), pending as f64);
         let id = st.next_id;
         st.next_id += 1;
+        crate::obs::instant_args(
+            "job",
+            "submit",
+            crate::obs::SERVICE_RANK,
+            id as i64,
+            crate::obs::NO_ARG,
+            crate::obs::NO_ARG,
+        );
         let (promise, future) = Promise::new();
         st.jobs.push(Arc::new(JobEntry::new(
             id,
@@ -319,8 +346,17 @@ impl FftService {
                 wire_bytes: a.wire_bytes,
                 latency: (!a.latencies_us.is_empty())
                     .then(|| RunStats::new(a.latencies_us.clone())),
+                latency_hist: a.latency_hist.clone(),
             })
             .collect()
+    }
+
+    /// Prometheus-style text snapshot of the live metrics registry —
+    /// per-tenant job counters, pending/inflight gauges, and latency
+    /// histograms. This is what the `metrics` verb of `repro serve`
+    /// answers with.
+    pub fn metrics_text(&self) -> String {
+        self.shared.registry.render()
     }
 
     /// Graceful drain: reject new submissions, run every accepted job
@@ -409,9 +445,19 @@ fn worker_loop(rank: usize, n: usize, fabric: Arc<dyn Parcelport>, shared: Arc<S
                     }
                     if !st.paused && st.inflight < shared.config.max_inflight {
                         st.inflight += 1;
+                        shared.registry.set_gauge("fft_jobs_inflight", st.inflight as f64);
                         let entry = Arc::clone(&st.jobs[cursor]);
                         entry.advance_state(JobState::Dispatched);
                         entry.dispatch_open.store(true, Ordering::Release);
+                        // One dispatch instant per job (the gate opener's).
+                        crate::obs::instant_args(
+                            "job",
+                            "dispatch",
+                            crate::obs::SERVICE_RANK,
+                            entry.id as i64,
+                            crate::obs::NO_ARG,
+                            crate::obs::NO_ARG,
+                        );
                         shared.cv.notify_all();
                         break entry;
                     }
@@ -513,6 +559,12 @@ fn run_job_rank(comm: Communicator, scope: &PortStats, job: &Arc<JobEntry>, shar
     }
 }
 
+/// Registry key for a per-tenant metric: `family{tenant="name"}`, the
+/// label-embedded form [`MetricsRegistry`] renders as Prometheus labels.
+fn tenant_key(family: &str, tenant: &str) -> String {
+    format!("{family}{{tenant=\"{tenant}\"}}")
+}
+
 /// Best-effort text of a caught panic payload.
 fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
@@ -549,6 +601,7 @@ fn finish_job(job: &Arc<JobEntry>, shared: &Arc<Shared>) {
         let mut st = shared.state.lock().unwrap();
         st.inflight -= 1;
         st.finished += 1;
+        shared.registry.set_gauge("fft_jobs_inflight", st.inflight as f64);
         let acct = st.tenants.get_mut(&job.tenant).expect("tenant account outlives its jobs");
         acct.pending -= 1;
         if ok {
@@ -558,8 +611,23 @@ fn finish_job(job: &Arc<JobEntry>, shared: &Arc<Shared>) {
         }
         acct.wire_bytes += stats.bytes_sent;
         acct.latencies_us.push(latency_us);
+        acct.latency_hist.observe(latency_us);
+        let tenant = &job.tenant;
+        let family = if ok { "fft_jobs_completed_total" } else { "fft_jobs_failed_total" };
+        shared.registry.add(&tenant_key(family, tenant), 1);
+        shared.registry.add(&tenant_key("fft_wire_bytes_total", tenant), stats.bytes_sent);
+        shared.registry.observe(&tenant_key("fft_job_latency_us", tenant), latency_us);
+        shared.registry.set_gauge(&tenant_key("fft_jobs_pending", tenant), acct.pending as f64);
     }
     shared.cv.notify_all();
+    crate::obs::instant_args(
+        "job",
+        if ok { "done" } else { "failed" },
+        crate::obs::SERVICE_RANK,
+        job.id as i64,
+        crate::obs::NO_ARG,
+        crate::obs::NO_ARG,
+    );
     let promise = job.promise.lock().unwrap().take().expect("a job finishes exactly once");
     promise.set(result.map(|report| JobOutput { job_id: job.id, report, latency_us }));
 }
@@ -609,6 +677,7 @@ fn assemble_report(
                 rel_error,
                 stats,
                 outputs: job.collect_outputs.then_some(pieces),
+                trace_path: None,
             }
         }
         JobPlan::Pencil { config, dims, .. } => {
@@ -627,6 +696,7 @@ fn assemble_report(
                 rel_error,
                 stats,
                 outputs: job.collect_outputs.then_some(pieces),
+                trace_path: None,
             }
         }
     }
@@ -836,6 +906,22 @@ mod tests {
             });
         assert!(err.message.contains("tag space exhausted"), "{err}");
         assert_eq!((metrics[0].failed, metrics[0].completed), (1, 0));
+    }
+
+    #[test]
+    fn metrics_text_renders_per_tenant_counters_and_histograms() {
+        let svc = small_service(2);
+        svc.submit("acme", small_plane(2)).unwrap().wait().unwrap();
+        let text = svc.metrics_text();
+        assert!(text.contains("fft_jobs_submitted_total{tenant=\"acme\"} 1"), "{text}");
+        assert!(text.contains("fft_jobs_completed_total{tenant=\"acme\"} 1"), "{text}");
+        assert!(text.contains("fft_job_latency_us_count{tenant=\"acme\"} 1"), "{text}");
+        assert!(text.contains("fft_wire_bytes_total{tenant=\"acme\"}"), "{text}");
+        let m = svc.shutdown();
+        let h = &m[0].latency_hist;
+        assert_eq!(h.count(), 1);
+        assert!(h.percentile(50.0) <= h.percentile(95.0));
+        assert!(h.percentile(95.0) <= h.percentile(99.0));
     }
 
     #[test]

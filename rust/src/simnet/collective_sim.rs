@@ -380,6 +380,26 @@ fn assemble(slot: &mut RankSlot) -> Vec<Vec<u8>> {
 /// at teardown — both indicate a protocol bug, which is exactly what
 /// the fuzz matrix hunts.
 pub fn run_sim(cfg: &SimConfig) -> SimRunReport {
+    run_sim_impl(cfg, false).0
+}
+
+/// Simulate one collective and capture its wire timeline as
+/// [`crate::obs::Event`]s (simulated ticks are nanoseconds, so the
+/// capture exports through [`crate::obs::chrome`] exactly like a live
+/// trace: pid = simulated rank, one `wire` span per transmission,
+/// `arrival` instants at the destinations).
+///
+/// The capture is a pure observer — the returned report is
+/// bit-identical to [`run_sim`]'s for the same `cfg`, trace hash
+/// included (asserted by the engine's perturbation test).
+///
+/// # Panics
+/// As [`run_sim`].
+pub fn run_sim_traced(cfg: &SimConfig) -> (SimRunReport, Vec<crate::obs::Event>) {
+    run_sim_impl(cfg, true)
+}
+
+fn run_sim_impl(cfg: &SimConfig, trace: bool) -> (SimRunReport, Vec<crate::obs::Event>) {
     let n = cfg.localities;
     assert!(n > 0, "need at least one locality");
     if let SimData::Bytes(m) = &cfg.data {
@@ -390,6 +410,9 @@ pub fn run_sim(cfg: &SimConfig) -> SimRunReport {
     }
 
     let mut engine = EventEngine::new(n, cfg.net, cfg.port.cost_model(), cfg.adversary);
+    if trace {
+        engine.enable_trace();
+    }
     let mut alloc = TagAlloc { next: 0 };
     let machines = build_machines(cfg, &mut alloc);
     let mut slots: Vec<RankSlot> = machines.into_iter().map(|sm| RankSlot::new(sm, n)).collect();
@@ -400,7 +423,8 @@ pub fn run_sim(cfg: &SimConfig) -> SimRunReport {
         SimData::Bytes(_) => Some(slots.iter_mut().map(assemble).collect()),
         SimData::Uniform(_) => None,
     };
-    SimRunReport { stats: engine.stats(), outputs, final_tag: alloc.next }
+    let events = engine.take_trace();
+    (SimRunReport { stats: engine.stats(), outputs, final_tag: alloc.next }, events)
 }
 
 /// Deterministic random `[src][dst]` buffers for fuzz runs: lengths in
@@ -524,6 +548,20 @@ mod tests {
             let report = run_sim(&cfg(collective, PortKind::Lci, n, 1));
             assert_eq!(report.final_tag, want, "{collective:?}");
         }
+    }
+
+    /// The traced entry point is a pure observer over the same run:
+    /// identical stats and outputs, plus a non-empty wire timeline.
+    #[test]
+    fn traced_run_matches_untraced_and_captures_wire_spans() {
+        let c = cfg(SimCollective::AllToAll(AllToAllAlgo::Pairwise), PortKind::Lci, 6, 9);
+        let plain = run_sim(&c);
+        let (traced, events) = run_sim_traced(&c);
+        assert_eq!(plain.stats, traced.stats, "capture must not perturb the schedule");
+        assert_eq!(plain.outputs, traced.outputs);
+        assert!(events.iter().any(|e| e.is_span()), "a 6-rank all-to-all must cross the wire");
+        let traced_bytes: u64 = events.iter().filter(|e| e.is_span()).map(|e| e.bytes as u64).sum();
+        assert_eq!(traced_bytes, plain.stats.wire_bytes);
     }
 
     /// A benign single-rank run degenerates to local hand-off.

@@ -136,6 +136,11 @@ pub struct EventEngine {
     drops_injected: u64,
     events: u64,
     trace_hash: u64,
+    /// Optional timeline capture (see [`Self::enable_trace`]). `None`
+    /// (the default) records nothing and perturbs nothing — the capture
+    /// only *reads* ticks the engine computed anyway, so `trace_hash`
+    /// and every counter are bit-identical with and without it.
+    trace: Option<Vec<crate::obs::Event>>,
 }
 
 impl EventEngine {
@@ -159,7 +164,61 @@ impl EventEngine {
             drops_injected: 0,
             events: 0,
             trace_hash: 0,
+            trace: None,
         }
+    }
+
+    /// Start capturing the run's timeline as [`crate::obs::Event`]s —
+    /// one `wire` span per transfer (start tick → wire end, original
+    /// sends named `send`, timer-driven repeats `retransmit`) and one
+    /// `arrival` instant per consumed delivery. Ticks are already
+    /// nanoseconds, so they map 1:1 onto `Event::ts_ns` and the capture
+    /// exports through the same [`crate::obs::chrome`] pipeline as live
+    /// traces: pid = simulated rank, spans on tid 0.
+    pub fn enable_trace(&mut self) {
+        self.trace.get_or_insert_with(Vec::new);
+    }
+
+    /// Take the captured timeline (empty if [`Self::enable_trace`] was
+    /// never called). Capture continues into a fresh buffer.
+    pub fn take_trace(&mut self) -> Vec<crate::obs::Event> {
+        match self.trace.as_mut() {
+            Some(buf) => std::mem::take(buf),
+            None => Vec::new(),
+        }
+    }
+
+    /// Record a wire-occupancy span for `msg` if capture is on.
+    fn trace_wire(&mut self, start: Tick, end: Tick, name: &'static str, msg: &WireMsg) {
+        let Some(buf) = self.trace.as_mut() else { return };
+        buf.push(crate::obs::Event {
+            ts_ns: start,
+            kind: crate::obs::EventKind::Span { dur_ns: end.saturating_sub(start) },
+            cat: "wire",
+            name,
+            rank: msg.src as u32,
+            tid: 0,
+            tag: msg.tag as i64,
+            chunk: msg.id as i64,
+            bytes: msg.size as i64,
+        });
+    }
+
+    /// Record a delivery-consumed instant at the destination if capture
+    /// is on.
+    fn trace_arrival(&mut self, tick: Tick, msg: &WireMsg) {
+        let Some(buf) = self.trace.as_mut() else { return };
+        buf.push(crate::obs::Event {
+            ts_ns: tick,
+            kind: crate::obs::EventKind::Instant,
+            cat: "wire",
+            name: "arrival",
+            rank: msg.dst as u32,
+            tid: 0,
+            tag: msg.tag as i64,
+            chunk: msg.id as i64,
+            bytes: msg.size as i64,
+        });
     }
 
     /// Number of simulated ranks.
@@ -180,15 +239,16 @@ impl EventEngine {
     }
 
     /// Reserve both NICs for a transfer starting no earlier than
-    /// `ready`; returns the wire-end tick. Mirrors the closed-form
-    /// engine's store-and-forward charge.
-    fn reserve_wire(&mut self, src: usize, dst: usize, ready: Tick, size: u64) -> Tick {
+    /// `ready`; returns the `(wire-start, wire-end)` ticks (the start is
+    /// what the trace capture draws as the span's left edge). Mirrors
+    /// the closed-form engine's store-and-forward charge.
+    fn reserve_wire(&mut self, src: usize, dst: usize, ready: Tick, size: u64) -> (Tick, Tick) {
         let start = ready.max(self.nics[src].egress_free).max(self.nics[dst].ingress_free);
         let end = start + us_to_ticks(size as f64 / self.net.beta_gbps / 1e3);
         self.nics[src].egress_free = end;
         self.nics[dst].ingress_free = end;
         self.wire_bytes += size;
-        end
+        (start, end)
     }
 
     /// Post a send from `src`'s machine: charge the sender's software
@@ -211,10 +271,11 @@ impl EventEngine {
             0
         };
         let ready = self.cpus[src].now + handshake;
-        let end = self.reserve_wire(src, dst, ready, size);
+        let (start, end) = self.reserve_wire(src, dst, ready, size);
         let arrival = end + us_to_ticks(self.net.alpha_us) + plan.extra_delay;
 
         let wmsg = WireMsg { id, src, dst, tag, size, msg };
+        self.trace_wire(start, end, "send", &wmsg);
         if plan.drop_first {
             // The bytes occupied the wire but the packet is lost; the
             // sender's timer notices and retransmits.
@@ -241,8 +302,9 @@ impl EventEngine {
             match entry.kind {
                 EventKind::Retransmit => {
                     let (src, dst, size) = (entry.msg.src, entry.msg.dst, entry.msg.size);
-                    let end = self.reserve_wire(src, dst, entry.tick, size);
+                    let (start, end) = self.reserve_wire(src, dst, entry.tick, size);
                     self.retransmitted_bytes += size;
+                    self.trace_wire(start, end, "retransmit", &entry.msg);
                     let arrival = end + us_to_ticks(self.net.alpha_us);
                     self.push(arrival, EventKind::Arrival, entry.msg);
                 }
@@ -251,6 +313,7 @@ impl EventEngine {
                         self.duplicates_dropped += 1;
                         continue;
                     }
+                    self.trace_arrival(entry.tick, &entry.msg);
                     return Some(Delivery { tick: entry.tick, msg: entry.msg });
                 }
             }
@@ -426,6 +489,46 @@ mod tests {
         assert_eq!(a, b, "same seed must reproduce the run bit-for-bit");
         let c = run(43);
         assert_ne!(a.trace_hash, c.trace_hash, "different seed must change the schedule");
+    }
+
+    /// Trace capture is a pure observer: enabling it changes neither the
+    /// schedule fingerprint nor any counter, and the captured spans
+    /// cover exactly the transmissions the counters claim (one `send`
+    /// per post, one `retransmit` per timer fire, spans summing to
+    /// `wire_bytes`).
+    #[test]
+    fn trace_capture_does_not_perturb_the_run() {
+        let run = |trace: bool| {
+            let mut adv = AdversaryConfig::hostile(11);
+            adv.drop_prob_pct = 40;
+            let mut eng = EventEngine::new(3, NetModel::infiniband_hdr(), CostModel::lci(), adv);
+            if trace {
+                eng.enable_trace();
+            }
+            for src in 0..3usize {
+                for dst in 0..3usize {
+                    if src != dst {
+                        eng.post_send(src, dst, (src * 3 + dst) as Tag, SimMsg::Size(50_000));
+                    }
+                }
+            }
+            while let Some(d) = eng.next_delivery() {
+                eng.consume(d.msg.dst, d.tick);
+            }
+            let events = eng.take_trace();
+            (eng.stats(), events)
+        };
+        let (plain, none) = run(false);
+        let (traced, events) = run(true);
+        assert_eq!(plain, traced, "capture must not perturb the schedule");
+        assert!(none.is_empty(), "no capture without enable_trace");
+
+        let spans: Vec<_> = events.iter().filter(|e| e.is_span()).collect();
+        assert_eq!(spans.len(), 6 + plain.drops_injected as usize, "one span per transmission");
+        let traced_bytes: u64 = spans.iter().map(|e| e.bytes as u64).sum();
+        assert_eq!(traced_bytes, plain.wire_bytes, "span bytes must cover wire_bytes");
+        let arrivals = events.iter().filter(|e| !e.is_span()).count();
+        assert_eq!(arrivals, 6, "one arrival instant per consumed delivery");
     }
 
     #[test]

@@ -52,7 +52,7 @@ pub mod fft_model;
 pub mod sim;
 
 pub use adversary::AdversaryConfig;
-pub use collective_sim::{run_sim, SimCollective, SimConfig, SimData, SimRunReport};
+pub use collective_sim::{run_sim, run_sim_traced, SimCollective, SimConfig, SimData, SimRunReport};
 pub use compute::ComputeModel;
 pub use engine::{EngineStats, EventEngine};
 pub use fft_model::{predict_fft, predict_pencil3, FftModelParams, Pencil3ModelParams};

@@ -79,7 +79,23 @@ pub fn with_watchdog<T: Send + 'static>(
             value
         }
         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-            panic!("watchdog: {label:?} still running after {timeout:?} — likely hang")
+            // Dump whatever trace spans are still open: on a wedged
+            // collective these name the blocked operation (category,
+            // name, rank, tag, chunk) — far more actionable than a bare
+            // timeout. Empty unless tracing was enabled.
+            let mut dump = String::new();
+            for s in crate::obs::open_spans() {
+                dump.push_str(&format!(
+                    "\n  open span: {}/{} rank {} tag {} chunk {} (started {:.1} µs ago)",
+                    s.cat,
+                    s.name,
+                    s.rank,
+                    s.tag,
+                    s.chunk,
+                    s.open_for_ns() as f64 / 1e3,
+                ));
+            }
+            panic!("watchdog: {label:?} still running after {timeout:?} — likely hang{dump}")
         }
         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
             // The subject dropped the sender without replying: it
@@ -144,6 +160,28 @@ mod tests {
         with_watchdog("stuck", std::time::Duration::from_millis(50), || {
             std::thread::sleep(std::time::Duration::from_secs(10));
         });
+    }
+
+    #[test]
+    fn watchdog_timeout_dumps_open_spans() {
+        // Hold the trace session on this thread so the open-span table
+        // is ours for the duration; the stuck subject arms a span and
+        // never drops it — the timeout panic must name it.
+        let session = crate::obs::session();
+        let result = std::panic::catch_unwind(|| {
+            with_watchdog("stuck-traced", std::time::Duration::from_millis(50), || {
+                let _g = crate::obs::span_args("t_wd", "recv", 1, 9, 3, crate::obs::NO_ARG);
+                std::thread::sleep(std::time::Duration::from_secs(2));
+            });
+        });
+        drop(session.finish());
+        let payload = result.expect_err("watchdog must time out");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("timeout panic carries a String payload");
+        assert!(msg.contains("likely hang"), "{msg}");
+        assert!(msg.contains("open span: t_wd/recv rank 1 tag 9 chunk 3"), "{msg}");
     }
 
     #[test]

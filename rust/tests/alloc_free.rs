@@ -171,6 +171,24 @@ fn pencil_placement_is_allocation_free() {
     assert_eq!(delta, 0, "pencil placement allocated");
 }
 
+/// Disabled-mode tracing primitives never touch the heap: the gate
+/// check is one relaxed atomic load, the guard carries `None`, and no
+/// ring buffer or open-span table is consulted. This is what licenses
+/// leaving span constructors compiled into every hot layer. (Nothing in
+/// this binary ever enables the gate, so the path measured here is the
+/// one every untraced run takes.)
+#[test]
+fn disabled_tracing_is_allocation_free() {
+    let _guard = serial();
+    let delta = min_delta(5, || {
+        let _g = hpx_fft::obs::span("alloc", "span", 0);
+        let _g2 = hpx_fft::obs::span_args("alloc", "span_args", 1, 2, 3, 4);
+        hpx_fft::obs::instant("alloc", "instant", 0);
+        hpx_fft::obs::instant_args("alloc", "instant_args", 1, 2, 3, 4);
+    });
+    assert_eq!(delta, 0, "disabled tracing allocated");
+}
+
 /// The end-to-end steady-state gate: a warm multi-tenant-API transform
 /// run should eventually allocate nothing. The distributed pipeline
 /// still allocates per run (cluster threads, wire buffers, report

@@ -1,0 +1,182 @@
+//! Observability acceptance suite — the end-to-end properties the
+//! tracing layer promises.
+//!
+//! - A traced async 2-D scatter run exports valid Chrome trace JSON in
+//!   which chunk-send ("wire") spans demonstrably overlap FFT band
+//!   spans — the driver's `overlap_us` as visible timeline geometry,
+//!   asserted by interval intersection.
+//! - The bytes carried by traced `port/send` spans reconcile exactly
+//!   with the parcelport's own [`PortStatsSnapshot::bytes_sent`], per
+//!   port × all-to-all algorithm (the invariant audit).
+//! - The same exporter handles a simulated 512-locality collective.
+//! - `TransformRequest::trace(true)` self-captures and reports the
+//!   exported artifact path.
+//!
+//! The trace gate and ring buffers are process-global, so every test
+//! that runs a live cluster takes a serializing lock: without it a
+//! concurrent run would leak foreign events into an open session (the
+//! sim capture records engine-side and needs no lock).
+//!
+//! [`PortStatsSnapshot::bytes_sent`]: hpx_fft::parcelport::PortStatsSnapshot
+
+use std::sync::Mutex;
+
+use hpx_fft::collectives::{AllToAllAlgo, ChunkPolicy};
+use hpx_fft::config::TransformSpec;
+use hpx_fft::dist_fft::{ExecutionMode, TransformRequest, Variant};
+use hpx_fft::hpx::runtime::Cluster;
+use hpx_fft::obs::{self, chrome};
+use hpx_fft::parcelport::{NetModel, PortKind};
+use hpx_fft::simnet::{run_sim_traced, AdversaryConfig, SimCollective, SimConfig, SimData};
+
+/// Serializes the live-cluster tests against each other (see module doc).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("hpxfft-obs-{tag}-{}", std::process::id()))
+}
+
+/// Acceptance: the async scatter variant's communication/compute overlap
+/// is visible in the exported timeline. A wire model with a fat
+/// per-message constant keeps each posted chunk on the (modeled) wire
+/// for ~300 µs while the main thread transforms later bands, so some
+/// `wire/chunk` span must intersect an `fft/band` span on the same rank.
+#[test]
+fn async_scatter_wire_spans_overlap_fft_bands() {
+    let _guard = serial();
+    let session = obs::session();
+    let transform = TransformRequest::grid(256, 256)
+        .spec(TransformSpec {
+            exec: ExecutionMode::Async,
+            chunk: ChunkPolicy::new(4096, 8),
+            threads_per_locality: 1,
+            net: Some(NetModel { alpha_us: 300.0, ..NetModel::infiniband_hdr() }),
+            verify: false,
+            ..TransformSpec::default()
+        })
+        .variant(Variant::Scatter)
+        .localities(2)
+        .build()
+        .expect("build transform");
+    transform.run().expect("traced async run");
+    let events = session.finish();
+
+    let wires: Vec<_> =
+        events.iter().filter(|e| e.is_span() && e.cat == "wire" && e.name == "chunk").collect();
+    let bands: Vec<_> =
+        events.iter().filter(|e| e.is_span() && e.cat == "fft" && e.name == "band").collect();
+    assert!(!wires.is_empty(), "async scatter posted no wire chunks");
+    assert!(!bands.is_empty(), "async scatter recorded no band spans");
+    let overlapping = wires.iter().any(|w| {
+        bands.iter().any(|b| b.rank == w.rank && w.ts_ns < b.end_ns() && b.ts_ns < w.end_ns())
+    });
+    assert!(overlapping, "no wire chunk span overlapped an FFT band span on any rank");
+
+    // The same capture, through the exporter: valid Chrome trace JSON
+    // with each locality on its own track.
+    let dir = temp_dir("overlap");
+    let path = dir.join("async_scatter.trace.json");
+    chrome::export(&events, &path).expect("export trace");
+    let summary = chrome::validate_file(&path).expect("exported trace must validate");
+    assert!(summary.spans >= wires.len() + bands.len(), "exporter lost spans");
+    assert!(summary.tracks >= 2, "two localities must land on separate tracks");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Invariant audit: for every port × all-to-all algorithm, summing the
+/// `bytes` of traced `port/send` spans reproduces the fabric's own
+/// `bytes_sent` counter exactly. The span is emitted adjacent to
+/// `PortStats::record_send` with the same payload length (self-sends
+/// included on both sides), so any divergence means an instrumentation
+/// gap — a send path without a span, or a span with the wrong size.
+#[test]
+fn traced_send_bytes_reconcile_with_port_stats() {
+    let _guard = serial();
+    for port in [PortKind::Tcp, PortKind::Mpi, PortKind::Lci] {
+        for algo in AllToAllAlgo::ALL {
+            let cluster = Cluster::new(3, port, None).expect("cluster");
+            let transform = TransformRequest::grid(24, 24)
+                .spec(TransformSpec {
+                    port,
+                    threads_per_locality: 1,
+                    verify: false,
+                    ..TransformSpec::default()
+                })
+                .variant(Variant::AllToAll)
+                .algo(algo)
+                .localities(3)
+                .build()
+                .expect("build transform");
+            let dropped_before = obs::dropped_events();
+            let session = obs::session();
+            transform.run_on(&cluster).expect("run");
+            let events = session.finish();
+            assert_eq!(
+                obs::dropped_events(),
+                dropped_before,
+                "ring overflow voids the audit ({port:?}, {algo:?})"
+            );
+            let traced: u64 = events
+                .iter()
+                .filter(|e| e.is_span() && e.cat == "port" && e.name == "send")
+                .map(|e| e.bytes as u64)
+                .sum();
+            let stats = cluster.fabric().stats();
+            assert_eq!(
+                traced, stats.bytes_sent,
+                "traced send bytes diverge from PortStats ({port:?}, {algo:?})"
+            );
+        }
+    }
+}
+
+/// Acceptance: the exporter that serves live runs handles a simulated
+/// 512-locality collective, and the sim's wire-byte reconciliation
+/// holds at that scale too. The capture is engine-side (no global
+/// session), so this test needs no serialization.
+#[test]
+fn sim_trace_exports_at_512_localities() {
+    let cfg = SimConfig {
+        localities: 512,
+        port: PortKind::Lci,
+        net: NetModel::infiniband_hdr(),
+        policy: ChunkPolicy::new(1 << 16, 4),
+        adversary: AdversaryConfig::none(7),
+        collective: SimCollective::AllToAll(AllToAllAlgo::Bruck),
+        data: SimData::Uniform(4096),
+    };
+    let (report, events) = run_sim_traced(&cfg);
+    assert!(!events.is_empty(), "a 512-rank all-to-all must cross the wire");
+    let traced: u64 = events.iter().filter(|e| e.is_span()).map(|e| e.bytes as u64).sum();
+    assert_eq!(traced, report.stats.wire_bytes, "sim trace bytes diverge from engine stats");
+
+    let dir = temp_dir("sim512");
+    let path = dir.join("sim_a2a_512.trace.json");
+    chrome::export(&events, &path).expect("export sim trace");
+    let summary = chrome::validate_file(&path).expect("sim trace must validate");
+    assert!(summary.spans > 0, "sim trace carries no spans");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The service-facing opt-in: `.trace(true)` claims its own capture
+/// window around the run, exports, and hands the artifact path back in
+/// the report — no caller-side session management.
+#[test]
+fn transform_trace_flag_reports_artifact_path() {
+    let _guard = serial();
+    let transform = TransformRequest::grid(32, 32)
+        .spec(TransformSpec { threads_per_locality: 1, verify: false, ..TransformSpec::default() })
+        .localities(2)
+        .trace(true)
+        .build()
+        .expect("build transform");
+    let report = transform.run().expect("traced run");
+    let path = report.trace_path.expect("trace(true) must report an artifact path");
+    let summary = chrome::validate_file(&path).expect("reported artifact must validate");
+    assert!(summary.spans > 0, "a 2-locality run must record spans");
+    std::fs::remove_file(&path).ok();
+}
