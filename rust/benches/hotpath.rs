@@ -293,6 +293,31 @@ fn main() {
         }
     }
 
+    // Conformance-checker overhead: in a plain release build (this
+    // bench) the checker is compiled out — `ACTIVE` is false and every
+    // hook is an empty inline function — so "zero overhead when off" is
+    // a measured, asserted property rather than a claim. With the
+    // checker compiled in but disarmed, the gate is one relaxed load.
+    {
+        use hpx_fft::collectives::conformance;
+        assert_eq!(
+            conformance::ACTIVE,
+            cfg!(any(debug_assertions, feature = "conformance")),
+            "conformance checker must be compiled out exactly when ungated"
+        );
+        let disarmed_us =
+            bench(&mut rows, "conformance hook disarmed (gate check)", 1_000_000 / div, || {
+                conformance::probe();
+            });
+        if smoke {
+            assert!(
+                disarmed_us <= 0.025,
+                "disarmed conformance gate costs {:.2} ns/op (budget 25 ns)",
+                disarmed_us * 1e3
+            );
+        }
+    }
+
     // The tentpole comparison: monolithic pairwise vs pipelined chunked
     // all-to-all (exchange + unpack into the destination buffer) on the
     // LCI fabric under the IB-HDR wire model — the ISSUE's N=8 / 4 MiB

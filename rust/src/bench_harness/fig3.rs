@@ -158,7 +158,7 @@ pub fn report(points: &[ChunkPoint], out_dir: &str) -> anyhow::Result<String> {
     let mut series = Vec::new();
     for port in PortKind::ALL {
         for algo in ScatterAlgo::ALL {
-            let symbol = port.name().chars().next().unwrap();
+            let symbol = port.name().chars().next().unwrap_or('?');
             series.push(Series {
                 label: format!("{port}/{} (live hybrid)", algo.name()),
                 symbol: if algo == ScatterAlgo::Linear {

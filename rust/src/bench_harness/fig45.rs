@@ -103,11 +103,25 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                         .algo(AllToAllAlgo::HpxRoot)
                         .build()?;
                     let mut overlaps = Vec::new();
+                    // The measure closure returns a plain f64, so run
+                    // failures park in this slot and surface as a typed
+                    // error after the loop instead of panicking mid-rep.
+                    let mut run_err: Option<anyhow::Error> = None;
                     let stats = measure(config.warmup, config.reps, || {
-                        let report = transform.run_on(&cluster).expect("dist fft run");
-                        overlaps.push(report.overlap_us());
-                        report.total_us()
+                        match transform.run_on(&cluster) {
+                            Ok(report) => {
+                                overlaps.push(report.overlap_us());
+                                report.total_us()
+                            }
+                            Err(e) => {
+                                run_err.get_or_insert(e);
+                                0.0
+                            }
+                        }
                     });
+                    if let Some(e) = run_err {
+                        return Err(e.context(format!("live {variant:?} run at {nodes} nodes")));
+                    }
                     // Warmup reps are recorded by the closure like every
                     // call; drop them to match the RunStats discipline.
                     let measured = &overlaps[config.warmup.min(overlaps.len())..];
@@ -125,9 +139,19 @@ pub fn run(config: &BenchConfig, variant: Variant) -> anyhow::Result<Vec<Scaling
                         net: Some(net),
                         verify: false,
                     };
+                    let mut run_err: Option<anyhow::Error> = None;
                     let stats = measure(config.warmup, config.reps, || {
-                        baseline_run_on(&cluster, &cfg).expect("baseline run").critical_path.total_us
+                        match baseline_run_on(&cluster, &cfg) {
+                            Ok(report) => report.critical_path.total_us,
+                            Err(e) => {
+                                run_err.get_or_insert(e);
+                                0.0
+                            }
+                        }
                     });
+                    if let Some(e) = run_err {
+                        return Err(e.context(format!("baseline run at {nodes} nodes")));
+                    }
                     // The baseline is synchronous by construction.
                     (stats, 0.0)
                 }

@@ -100,12 +100,31 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<Fig6Point>> {
                     .proc_grid(proc)
                     .build()?;
                 let mut crit: Vec<PencilTimings> = Vec::new();
+                // Run failures park here and surface as a typed error
+                // after the loop (the measure closure returns f64).
+                let mut run_err: Option<anyhow::Error> = None;
                 let stats = measure(config.warmup, config.reps, || {
-                    let report = transform.run_on(&cluster).expect("pencil3d run");
-                    let cp = *report.timings.pencil_critical_path().expect("pencil timings");
-                    crit.push(cp);
-                    cp.total_us
+                    let outcome = transform.run_on(&cluster).and_then(|report| {
+                        report
+                            .timings
+                            .pencil_critical_path()
+                            .copied()
+                            .ok_or_else(|| anyhow::anyhow!("report carries no pencil timings"))
+                    });
+                    match outcome {
+                        Ok(cp) => {
+                            crit.push(cp);
+                            cp.total_us
+                        }
+                        Err(e) => {
+                            run_err.get_or_insert(e);
+                            0.0
+                        }
+                    }
                 });
+                if let Some(e) = run_err {
+                    return Err(e.context(format!("pencil3d run on {port} ({exec:?})")));
+                }
                 // Warmup reps are recorded by the closure like every
                 // call; drop them to match the RunStats discipline.
                 let phases = mean_timings(&crit[config.warmup.min(crit.len())..]);

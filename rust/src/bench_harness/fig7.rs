@@ -114,13 +114,33 @@ pub fn run(config: &BenchConfig) -> anyhow::Result<Vec<Fig7Point>> {
                     .build()?;
                 let mut crit: Vec<StepTimings> = Vec::new();
                 let mut wire = (0u64, 0u64);
+                // Run failures park here and surface as a typed error
+                // after the loop (the measure closure returns f64).
+                let mut run_err: Option<anyhow::Error> = None;
                 let stats = measure(config.warmup, config.reps, || {
-                    let report = transform.run_on(&cluster).expect("fig7 run");
-                    let cp = *report.timings.plane_critical_path().expect("plane timings");
-                    crit.push(cp);
-                    wire = (report.stats.bytes_sent, report.stats.msgs_sent);
-                    cp.total_us
+                    let outcome = transform.run_on(&cluster).and_then(|report| {
+                        report
+                            .timings
+                            .plane_critical_path()
+                            .copied()
+                            .ok_or_else(|| anyhow::anyhow!("report carries no plane timings"))
+                            .map(|cp| (cp, report.stats.bytes_sent, report.stats.msgs_sent))
+                    });
+                    match outcome {
+                        Ok((cp, bytes, msgs)) => {
+                            crit.push(cp);
+                            wire = (bytes, msgs);
+                            cp.total_us
+                        }
+                        Err(e) => {
+                            run_err.get_or_insert(e);
+                            0.0
+                        }
+                    }
                 });
+                if let Some(e) = run_err {
+                    return Err(e.context(format!("fig7 run on {port} ({exec:?})")));
+                }
                 // Warmup reps are recorded by the closure like every
                 // call; drop them to match the RunStats discipline.
                 let steps = mean_steps(&crit[config.warmup.min(crit.len())..]);

@@ -141,7 +141,10 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<Vec<TenantLoadReport>> {
     let mut expected: Vec<Vec<Vec<Complex32>>> = Vec::with_capacity(menu.len());
     for request in &menu {
         let report = request.clone().collect_outputs(true).build()?.run()?;
-        expected.push(report.outputs.expect("collect_outputs was requested"));
+        let outputs = report
+            .outputs
+            .ok_or_else(|| anyhow::anyhow!("reference run returned no outputs"))?;
+        expected.push(outputs);
     }
 
     let service = FftService::new(ServiceConfig {
@@ -184,7 +187,10 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<Vec<TenantLoadReport>> {
     let mut mismatches = vec![0usize; cfg.tenants];
     for (tenant_idx, entry, handle) in handles {
         if let Ok(out) = handle.wait() {
-            let got = out.report.outputs.expect("collect_outputs was requested");
+            let got = out
+                .report
+                .outputs
+                .ok_or_else(|| anyhow::anyhow!("completed job returned no outputs"))?;
             if got != expected[entry] {
                 mismatches[tenant_idx] += 1;
             }

@@ -219,7 +219,11 @@ pub fn export_trace(opts: &SimScalingOpts, dir: &str) -> anyhow::Result<String> 
     use crate::simnet::collective_sim::run_sim_traced;
     ensure!(!opts.figs.is_empty() && !opts.localities.is_empty(), "nothing swept");
     let fig = opts.figs[0];
-    let n = *opts.localities.iter().min().expect("non-empty");
+    let n = *opts
+        .localities
+        .iter()
+        .min()
+        .ok_or_else(|| anyhow::anyhow!("--localities-list must name at least one count"))?;
     let cfg = match fig {
         SimFig::Fig4 => {
             let per_pair = FftModelParams::paper(n).chunk_bytes();
@@ -234,7 +238,7 @@ pub fn export_trace(opts: &SimScalingOpts, dir: &str) -> anyhow::Result<String> 
             // (disjoint groups are identical and parallel).
             let proc = near_square(n);
             let dims = PencilDims::new(Grid3::new(1 << 9, 1 << 9, 1 << 9), proc)
-                .expect("near-square power-of-two grids divide 2^9");
+                .with_context(|| format!("--localities-list value {n}: pencil grid {proc}"))?;
             let t1 = (dims.t1_chunk_elems() * 8) as u64;
             sim_cfg(SimCollective::AllToAll(AllToAllAlgo::Pairwise), proc.pc, t1, opts)
         }
@@ -246,8 +250,8 @@ pub fn export_trace(opts: &SimScalingOpts, dir: &str) -> anyhow::Result<String> 
     Ok(path)
 }
 
-fn point(fig: SimFig, n: usize, opts: &SimScalingOpts) -> SimScalingRow {
-    match fig {
+fn point(fig: SimFig, n: usize, opts: &SimScalingOpts) -> anyhow::Result<SimScalingRow> {
+    Ok(match fig {
         SimFig::Fig4 => {
             let mut params = FftModelParams::paper(n);
             params.compute = comm_only();
@@ -273,7 +277,7 @@ fn point(fig: SimFig, n: usize, opts: &SimScalingOpts) -> SimScalingRow {
             // come straight from the pencil decomposition.
             let proc = near_square(n);
             let dims = PencilDims::new(Grid3::new(1 << 9, 1 << 9, 1 << 9), proc)
-                .expect("near-square power-of-two grids divide 2^9");
+                .with_context(|| format!("--localities-list value {n}: pencil grid {proc}"))?;
             let t1 = (dims.t1_chunk_elems() * 8) as u64;
             let t2 = (dims.t2_chunk_elems() * 8) as u64;
             let coll = SimCollective::AllToAll(AllToAllAlgo::Pairwise);
@@ -293,7 +297,7 @@ fn point(fig: SimFig, n: usize, opts: &SimScalingOpts) -> SimScalingRow {
             let model_us = predict_pencil3(&params, opts.port).makespan_us;
             SimScalingRow { fig, localities: n, per_pair_bytes: t1, stats, model_us }
         }
-    }
+    })
 }
 
 /// log₂-log₂ slope between two `(n, t)` points.
@@ -342,7 +346,7 @@ pub fn run(opts: &SimScalingOpts) -> anyhow::Result<Vec<SimScalingRow>> {
     let mut rows = Vec::new();
     for &fig in &opts.figs {
         for &n in &opts.localities {
-            rows.push(point(fig, n, opts));
+            rows.push(point(fig, n, opts)?);
         }
     }
 

@@ -27,8 +27,7 @@ impl Args {
                 }
                 if let Some((k, v)) = key.split_once('=') {
                     out.set(k, v)?;
-                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = iter.next().unwrap();
+                } else if let Some(v) = iter.next_if(|n| !n.starts_with("--")) {
                     out.set(key, &v)?;
                 } else {
                     out.set(key, "true")?;

@@ -152,9 +152,18 @@ pub(crate) fn recv_chunked_via(
         n => {
             let mut buf = Vec::with_capacity(total);
             for i in 0..n {
-                buf.extend_from_slice(
-                    fabric.recv(at, src, actions::COLLECTIVE, base_tag + 1 + i as Tag).as_bytes(),
-                );
+                let chunk = fabric.recv(at, src, actions::COLLECTIVE, base_tag + 1 + i as Tag);
+                if super::conformance::armed() {
+                    // Per-transfer chunk-index monotonicity check.
+                    super::conformance::on_chunk_recv(
+                        fabric.uid() as usize,
+                        at,
+                        src,
+                        base_tag,
+                        i as u64,
+                    );
+                }
+                buf.extend_from_slice(chunk.as_bytes());
             }
             debug_assert_eq!(buf.len(), total, "chunked transfer length mismatch");
             Payload::new(buf)
@@ -201,6 +210,7 @@ impl Communicator {
         let pool = self.chunk_pool();
         let src = self.my_global();
         let dest = self.global_rank(dest);
+        let (token, cid) = (self.conf_token(), self.conf_cid());
         let mut pending = Vec::with_capacity(n_chunks);
         for i in 0..n_chunks {
             let off = i * policy.chunk_bytes;
@@ -212,6 +222,9 @@ impl Communicator {
             pending.push(pool.spawn(move || {
                 let _span =
                     crate::obs::span_args("wire", "chunk", src, tag as i64, i as i64, len as i64);
+                // Recorded before delivery: an armed conformance checker
+                // must never see a matched receive outrun its send.
+                super::conformance::on_send(token, cid, src, dest, tag);
                 fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, chunk));
             }));
         }
@@ -290,6 +303,16 @@ impl Communicator {
         let total = self.recv_chunk_header(src, base_tag);
         for i in 0..policy.n_chunks(total) {
             let chunk = self.recv(src, base_tag + 1 + i as Tag);
+            if super::conformance::armed() {
+                // Per-transfer chunk-index monotonicity check.
+                super::conformance::on_chunk_recv(
+                    self.conf_token(),
+                    self.my_global(),
+                    self.global_rank(src),
+                    base_tag,
+                    i as u64,
+                );
+            }
             crate::obs::instant_args(
                 "chunk",
                 "arrive",

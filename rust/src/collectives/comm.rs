@@ -1,13 +1,46 @@
 //! The communicator: rank + size + fabric handle + tag discipline.
 
 use super::chunked::ChunkPolicy;
+use super::conformance;
 use super::tags::{collective_span, CHUNK_TAG_SPAN};
 use crate::hpx::parcel::{actions, LocalityId, Parcel, Payload, Tag};
 use crate::hpx::runtime::LocalityCtx;
 use crate::parcelport::Parcelport;
 use crate::task::ThreadPool;
 use std::cell::{Cell, RefCell};
+use std::fmt;
 use std::sync::Arc;
+
+/// Typed error: a bounded communicator's tag space cannot fit the
+/// requested reservation. Returned by the `try_` tag-allocation entry
+/// points ([`Communicator::try_split`] and friends) so callers like the
+/// FFT service can surface exhaustion as a job error instead of a
+/// panic; the panicking entry points format exactly this error.
+///
+/// The communicator stays usable after the failed reservation — the
+/// lock-step counter is only advanced on success, so SPMD discipline is
+/// preserved (every rank sees the same failure at the same point).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TagSpaceExhausted {
+    /// Tags the failed reservation asked for.
+    pub requested: Tag,
+    /// Where the counter would have landed (`current + requested`).
+    pub next: Tag,
+    /// The communicator's exclusive tag-space limit.
+    pub limit: Tag,
+}
+
+impl fmt::Display for TagSpaceExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "communicator tag space exhausted: {} > {} (span {})",
+            self.next, self.limit, self.requested
+        )
+    }
+}
+
+impl std::error::Error for TagSpaceExhausted {}
 
 /// A per-locality handle for collective operations.
 ///
@@ -37,6 +70,16 @@ pub struct Communicator {
     /// sub-communicators are bounded to the span their parent reserved;
     /// whole-fabric communicators are unbounded.
     tag_limit: Option<Tag>,
+    /// Conformance identity for the runtime checker (0 = unregistered;
+    /// see [`super::conformance`]). Split communicators register their
+    /// span under this id; shadow and scoped copies inherit it.
+    cid: u64,
+    /// Fabric identity token the conformance checker keys its per-fabric
+    /// state by. Captured at construction and *inherited* by scoped
+    /// copies ([`Communicator::with_stats_scope`] wraps the fabric in a
+    /// decorator), so one logical fabric's traffic is never split across
+    /// two tokens.
+    conf_token: usize,
     chunk_policy: Cell<ChunkPolicy>,
     chunk_pool: RefCell<Option<Arc<ThreadPool>>>,
     /// Send pool handed to shadow communicators (offloaded multi-round
@@ -55,6 +98,7 @@ impl Communicator {
         assert!(rank < size, "rank {rank} out of range for size {size}");
         assert!(size <= fabric.n_localities(), "communicator larger than fabric");
         let members = Arc::new((0..size).collect());
+        let conf_token = fabric.uid() as usize;
         Self {
             fabric,
             rank,
@@ -62,6 +106,8 @@ impl Communicator {
             members,
             next_tag: Cell::new(0),
             tag_limit: None,
+            cid: 0,
+            conf_token,
             chunk_policy: Cell::new(ChunkPolicy::default()),
             chunk_pool: RefCell::new(None),
             shadow_send_pool: RefCell::new(None),
@@ -84,6 +130,13 @@ impl Communicator {
             assert!(m < fabric.n_localities(), "member locality {m} outside fabric");
         }
         let size = members.len();
+        let conf_token = fabric.uid() as usize;
+        // Register the bounded span with the conformance checker (a
+        // no-op unless a test armed it): overlapping spans with shared
+        // members on one fabric are a tag collision, caught here at
+        // construction rather than as corrupted traffic later.
+        let cid = conformance::next_comm_id();
+        conformance::on_comm_created(conf_token, cid, tag_base, tag_limit, &members);
         Self {
             fabric,
             rank,
@@ -91,6 +144,8 @@ impl Communicator {
             members,
             next_tag: Cell::new(tag_base),
             tag_limit: Some(tag_limit),
+            cid,
+            conf_token,
             chunk_policy: Cell::new(policy),
             chunk_pool: RefCell::new(None),
             shadow_send_pool: RefCell::new(None),
@@ -174,20 +229,27 @@ impl Communicator {
     }
 
     /// Advance the lock-step counter by `span`, returning the block base
-    /// and enforcing the communicator's tag-space bound (split
-    /// sub-communicators must stay inside the span their parent
-    /// reserved — see [`crate::collectives::tags`]).
-    fn bump_tags(&self, span: Tag) -> Tag {
+    /// — or a typed [`TagSpaceExhausted`] if the communicator's bound
+    /// would be exceeded (split sub-communicators must stay inside the
+    /// span their parent reserved — see [`crate::collectives::tags`]).
+    /// On failure the counter is untouched, so the communicator remains
+    /// usable and in lock-step.
+    fn try_bump_tags(&self, span: Tag) -> Result<Tag, TagSpaceExhausted> {
         let t = self.next_tag.get();
         let next = t.checked_add(span).expect("tag counter overflow");
         if let Some(limit) = self.tag_limit {
-            assert!(
-                next <= limit,
-                "communicator tag space exhausted: {next} > {limit} (span {span})"
-            );
+            if next > limit {
+                return Err(TagSpaceExhausted { requested: span, next, limit });
+            }
         }
         self.next_tag.set(next);
-        t
+        Ok(t)
+    }
+
+    /// Panicking wrapper of [`Communicator::try_bump_tags`] for the
+    /// infallible internal allocation paths.
+    fn bump_tags(&self, span: Tag) -> Tag {
+        self.try_bump_tags(span).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Reserve `groups` blocks of [`CHUNK_TAG_SPAN`] tags for chunked
@@ -215,6 +277,13 @@ impl Communicator {
         self.bump_tags(span)
     }
 
+    /// Fallible variant of [`Communicator::reserve_tag_span`]: returns a
+    /// typed [`TagSpaceExhausted`] instead of panicking, leaving the
+    /// counter (and therefore SPMD lock-step) untouched on failure.
+    pub(crate) fn try_reserve_tag_span(&self, span: Tag) -> Result<Tag, TagSpaceExhausted> {
+        self.try_bump_tags(span)
+    }
+
     /// Tag span a [`Communicator::split`] sub-communicator carves out of
     /// this communicator: the full [`super::tags::SPLIT_TAG_SPAN`] on an
     /// unbounded (whole-fabric) communicator; on a bounded one (itself a
@@ -223,16 +292,29 @@ impl Communicator {
     /// allocating. Lock-step: the counter state this derives from is
     /// identical across ranks under the SPMD discipline.
     pub(crate) fn split_span(&self) -> Tag {
+        self.try_split_span()
+            .unwrap_or_else(|e| panic!("communicator tag space too depleted to split: {e}"))
+    }
+
+    /// Fallible variant of [`Communicator::split_span`]: the typed
+    /// [`TagSpaceExhausted`] names the minimum viable reservation (one
+    /// chunk block) the depleted space could not fit.
+    pub(crate) fn try_split_span(&self) -> Result<Tag, TagSpaceExhausted> {
         match self.tag_limit {
-            None => super::tags::SPLIT_TAG_SPAN,
+            None => Ok(super::tags::SPLIT_TAG_SPAN),
             Some(limit) => {
-                let remaining = limit.saturating_sub(self.next_tag.get());
+                let next = self.next_tag.get();
+                let remaining = limit.saturating_sub(next);
                 let span = remaining / 2 / CHUNK_TAG_SPAN * CHUNK_TAG_SPAN;
-                assert!(
-                    span >= CHUNK_TAG_SPAN,
-                    "communicator tag space too depleted to split (remaining {remaining})"
-                );
-                span
+                if span >= CHUNK_TAG_SPAN {
+                    Ok(span)
+                } else {
+                    Err(TagSpaceExhausted {
+                        requested: CHUNK_TAG_SPAN,
+                        next: next.saturating_add(CHUNK_TAG_SPAN),
+                        limit,
+                    })
+                }
             }
         }
     }
@@ -268,6 +350,8 @@ impl Communicator {
             members: Arc::clone(&self.members),
             next_tag: Cell::new(base),
             tag_limit: self.tag_limit,
+            cid: self.cid,
+            conf_token: self.conf_token,
             chunk_policy: Cell::new(self.chunk_policy.get()),
             chunk_pool: RefCell::new(Some(self.shadow_pool_handle())),
             shadow_send_pool: RefCell::new(None),
@@ -295,6 +379,8 @@ impl Communicator {
             members: Arc::clone(&self.members),
             next_tag: Cell::new(self.next_tag.get()),
             tag_limit: self.tag_limit,
+            cid: self.cid,
+            conf_token: self.conf_token,
             chunk_policy: Cell::new(self.chunk_policy.get()),
             chunk_pool: RefCell::new(None),
             shadow_send_pool: RefCell::new(None),
@@ -314,22 +400,30 @@ impl Communicator {
         *self.shadow_send_pool.borrow_mut() = Some(shadow);
     }
 
+    /// Conformance identity of this communicator (0 = unregistered).
+    pub(crate) fn conf_cid(&self) -> u64 {
+        self.cid
+    }
+
+    /// Fabric identity token the conformance checker keys by.
+    pub(crate) fn conf_token(&self) -> usize {
+        self.conf_token
+    }
+
     /// Send a collective-action parcel to communicator rank `dest`
     /// (translated to its global locality).
     pub(crate) fn send(&self, dest: LocalityId, tag: Tag, payload: Payload) {
-        self.fabric.send(Parcel::new(
-            self.my_global(),
-            self.global_rank(dest),
-            actions::COLLECTIVE,
-            tag,
-            payload,
-        ));
+        let (src, dst) = (self.my_global(), self.global_rank(dest));
+        conformance::on_send(self.conf_token, self.cid, src, dst, tag);
+        self.fabric.send(Parcel::new(src, dst, actions::COLLECTIVE, tag, payload));
     }
 
     /// Blocking matched receive of a collective-action parcel from
     /// communicator rank `src`.
     pub(crate) fn recv(&self, src: LocalityId, tag: Tag) -> Payload {
-        self.fabric.recv(self.my_global(), self.global_rank(src), actions::COLLECTIVE, tag)
+        let (dst, from) = (self.my_global(), self.global_rank(src));
+        let _wait = conformance::on_recv_enter(self.conf_token, self.cid, dst, from, tag);
+        self.fabric.recv(dst, from, actions::COLLECTIVE, tag)
     }
 
     /// Non-blocking matched receive (used by overlap-hungry callers).
@@ -451,6 +545,27 @@ mod tests {
             }
         }));
         assert!(result.is_err(), "allocating past the span must panic");
+    }
+
+    #[test]
+    fn exhausted_reservation_is_typed_and_leaves_comm_usable() {
+        let f = fabric(2);
+        let sub = Communicator::from_members(
+            Arc::clone(&f),
+            0,
+            Arc::new(vec![0, 1]),
+            0,
+            2 * CHUNK_TAG_SPAN,
+            ChunkPolicy::default(),
+        );
+        let err = sub.try_reserve_tag_span(3 * CHUNK_TAG_SPAN).unwrap_err();
+        assert_eq!(err.limit, 2 * CHUNK_TAG_SPAN);
+        assert_eq!(err.requested, 3 * CHUNK_TAG_SPAN);
+        assert!(err.to_string().contains("communicator tag space exhausted"), "{err}");
+        // The failed reservation did not advance the counter: the
+        // communicator keeps allocating inside its span, in lock-step.
+        assert_eq!(sub.alloc_chunk_tags(1), 0);
+        assert_eq!(sub.alloc_chunk_tags(1), CHUNK_TAG_SPAN);
     }
 
     #[test]

@@ -1,0 +1,829 @@
+//! Runtime protocol-conformance and deadlock detection for the
+//! collective layer.
+//!
+//! The collectives rely on invariants the type system cannot see: tags
+//! stay inside the owning communicator's reserved span, wire chunks of a
+//! transfer arrive in index order, sub-communicator spans never collide,
+//! and no set of ranks ends up mutually blocked on messages none of them
+//! will ever send (the PR 6 cross-job pool-lease deadlock). This module
+//! checks all four at runtime:
+//!
+//! - **Wait-for graph.** Every blocking matched receive on a
+//!   [`super::Communicator`] registers a `waiter → src (tag)` edge,
+//!   *unless* the awaited message is already on the wire (every send
+//!   that can feed a blocking receive — `Communicator::send` and the
+//!   pooled chunk-send closures — is recorded, so a receive that merely
+//!   trails its send never looks blocked). A send that satisfies a live
+//!   edge clears it. If inserting an edge closes a cycle, the inserting
+//!   thread panics with a typed [`DeadlockDiagnosis`] — cycle edges,
+//!   held pool-lease labels, open obs spans — instead of blocking
+//!   forever; [`crate::util::testkit::with_watchdog`] also queries
+//!   [`diagnose`] on timeout. The nonblocking offload layer is
+//!   deliberately invisible to the graph: its sends and receives run on
+//!   pool workers, pair only with each other on tags no blocking
+//!   receive waits on, and never block the SPMD thread.
+//! - **Per-message conformance.** Sends and receives on a registered
+//!   (split) communicator are checked against its tag span; chunked
+//!   receives are checked for monotonic chunk indices per transfer; and
+//!   registering a sub-communicator whose span overlaps another
+//!   registered span with intersecting members (and is not a nested
+//!   parent/child reservation) is flagged as a tag collision.
+//!
+//! The checker is compiled only under `debug_assertions` or the
+//! `conformance` feature ([`ACTIVE`]) and does nothing until a test
+//! [`arm`]s it, so release builds pay zero cost — asserted by the
+//! `conformance hook` row in `benches/hotpath.rs` — and unarmed debug
+//! runs pay one relaxed atomic load per hook.
+
+use crate::hpx::parcel::Tag;
+use crate::obs::OpenSpan;
+use std::fmt;
+
+/// Whether the detector is compiled into this build (`debug_assertions`
+/// or the `conformance` feature). When `false` every hook in this
+/// module is an empty inline stub.
+pub const ACTIVE: bool = cfg!(any(debug_assertions, feature = "conformance"));
+
+/// One blocked rank in the wait-for graph: `waiter` sits in a blocking
+/// matched receive for a message from `src` on `tag` that has not been
+/// sent.
+#[derive(Clone, Debug)]
+pub struct WaitEdge {
+    /// Identity token of the fabric the edge belongs to.
+    pub fabric: usize,
+    /// Global locality blocked in the receive.
+    pub waiter: usize,
+    /// Global locality the waiter expects the message from.
+    pub src: usize,
+    /// Wire tag of the awaited message.
+    pub tag: Tag,
+    /// Pool-lease labels held by the blocked thread when it blocked
+    /// (see [`lease`]) — names the jobs involved in a cross-job
+    /// pool-lease deadlock.
+    pub leases: Vec<String>,
+}
+
+/// Typed dump produced when the wait-for graph closes a cycle.
+#[derive(Clone, Debug)]
+pub struct DeadlockDiagnosis {
+    /// The cycle's edges in walk order (last edge returns to the first
+    /// edge's waiter).
+    pub cycle: Vec<WaitEdge>,
+    /// Obs spans open at detection time (empty unless tracing is on).
+    pub open_spans: Vec<OpenSpan>,
+}
+
+impl fmt::Display for DeadlockDiagnosis {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wait-for cycle across {} rank(s)", self.cycle.len())?;
+        for e in &self.cycle {
+            write!(f, "\n  rank {} waits on rank {} (tag {})", e.waiter, e.src, e.tag)?;
+            if !e.leases.is_empty() {
+                write!(f, " holding [{}]", e.leases.join(", "))?;
+            }
+        }
+        for s in &self.open_spans {
+            write!(
+                f,
+                "\n  open span: {}/{} rank {} tag {} chunk {}",
+                s.cat, s.name, s.rank, s.tag, s.chunk
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// A per-message protocol-conformance violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// A send or receive used a tag outside its communicator's span.
+    TagOutsideSpan {
+        /// Conformance id of the offending communicator.
+        cid: u64,
+        /// The out-of-span tag.
+        tag: Tag,
+        /// Inclusive base of the communicator's span.
+        base: Tag,
+        /// Exclusive limit of the communicator's span.
+        limit: Tag,
+    },
+    /// Two registered communicators share member ranks over overlapping
+    /// tag spans that are not a nested parent/child reservation.
+    TagCollision {
+        /// Conformance id of the earlier-registered communicator.
+        a: u64,
+        /// Conformance id of the later-registered communicator.
+        b: u64,
+        /// Base of the overlapping region.
+        base: Tag,
+        /// Exclusive limit of the overlapping region.
+        limit: Tag,
+    },
+    /// Wire chunks of one chunked transfer arrived out of index order.
+    NonMonotonicChunk {
+        /// Sending global locality.
+        src: usize,
+        /// Receiving global locality.
+        dst: usize,
+        /// Base tag of the transfer's chunk block.
+        base_tag: Tag,
+        /// Next index the receiver should have seen.
+        expected: u64,
+        /// Index that actually arrived.
+        got: u64,
+    },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::TagOutsideSpan { cid, tag, base, limit } => {
+                write!(f, "tag {tag} outside communicator {cid}'s span [{base}, {limit})")
+            }
+            Violation::TagCollision { a, b, base, limit } => write!(
+                f,
+                "communicators {a} and {b} share member ranks over \
+                 overlapping tag span [{base}, {limit})"
+            ),
+            Violation::NonMonotonicChunk { src, dst, base_tag, expected, got } => write!(
+                f,
+                "chunked transfer {src}→{dst} on base tag {base_tag}: \
+                 chunk {got} arrived, expected {expected}"
+            ),
+        }
+    }
+}
+
+#[cfg(any(debug_assertions, feature = "conformance"))]
+mod imp {
+    use super::{DeadlockDiagnosis, Violation, WaitEdge};
+    use crate::hpx::parcel::Tag;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+    /// `(fabric token, dst locality, src locality, tag)` — the identity
+    /// the fabrics match messages by (action is always COLLECTIVE here).
+    type MsgKey = (usize, usize, usize, Tag);
+
+    struct CommReg {
+        fabric: usize,
+        cid: u64,
+        base: Tag,
+        limit: Tag,
+        members: Vec<usize>,
+    }
+
+    struct EdgeRec {
+        id: u64,
+        edge: WaitEdge,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        next_edge: u64,
+        comms: Vec<CommReg>,
+        sent: HashMap<MsgKey, u32>,
+        edges: Vec<EdgeRec>,
+        chunks: HashMap<MsgKey, u64>,
+        last_deadlock: Option<DeadlockDiagnosis>,
+        last_violation: Option<Violation>,
+    }
+
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    static NEXT_COMM_ID: AtomicU64 = AtomicU64::new(1);
+    static ARM_SERIAL: Mutex<()> = Mutex::new(());
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+
+    thread_local! {
+        static LEASES: RefCell<Vec<String>> = RefCell::new(Vec::new());
+    }
+
+    fn registry() -> MutexGuard<'static, Registry> {
+        // Poison-tolerant: conformance panics unwind through test
+        // threads by design and must not wedge later lock users.
+        REGISTRY
+            .get_or_init(|| Mutex::new(Registry::default()))
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Whether the detector is currently recording (armed by a test).
+    #[inline]
+    pub fn armed() -> bool {
+        ARMED.load(Ordering::Relaxed)
+    }
+
+    /// Arm the detector for the guard's lifetime, clearing all recorded
+    /// state. Tests that arm are serialized against each other so their
+    /// graphs cannot interleave.
+    pub fn arm() -> ArmGuard {
+        let serial = ARM_SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+        *registry() = Registry::default();
+        ARMED.store(true, Ordering::SeqCst);
+        ArmGuard { _serial: serial }
+    }
+
+    /// Disarms the detector on drop. Recorded state (last diagnosis /
+    /// violation) stays readable until the next [`arm`].
+    #[must_use]
+    pub struct ArmGuard {
+        _serial: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for ArmGuard {
+        fn drop(&mut self) {
+            ARMED.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Fresh conformance identity for a communicator (0 = unregistered).
+    pub fn next_comm_id() -> u64 {
+        NEXT_COMM_ID.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn span_violation(reg: &Registry, fabric: usize, cid: u64, tag: Tag) -> Option<Violation> {
+        let c = reg.comms.iter().find(|c| c.fabric == fabric && c.cid == cid)?;
+        if tag >= c.base && tag < c.limit {
+            None
+        } else {
+            Some(Violation::TagOutsideSpan { cid, tag, base: c.base, limit: c.limit })
+        }
+    }
+
+    /// Register a bounded (split) communicator's tag span and members;
+    /// panics with a typed [`Violation::TagCollision`] if the span can
+    /// collide with an already-registered one.
+    pub fn on_comm_created(fabric: usize, cid: u64, base: Tag, limit: Tag, members: &[usize]) {
+        if !armed() {
+            return;
+        }
+        let mut reg = registry();
+        let mut clash = None;
+        for c in &reg.comms {
+            if c.fabric != fabric || c.cid == cid {
+                continue;
+            }
+            if base >= c.limit || c.base >= limit {
+                continue; // disjoint spans
+            }
+            let same = (base, limit) == (c.base, c.limit);
+            if same && c.members == members {
+                // The same logical communicator, registered by another
+                // rank's handle (every rank of a split constructs one).
+                continue;
+            }
+            let nested = !same
+                && ((base >= c.base && limit <= c.limit) || (c.base >= base && c.limit <= limit));
+            if nested {
+                continue; // parent/child reservation carving
+            }
+            if members.iter().any(|m| c.members.contains(m)) {
+                clash = Some(Violation::TagCollision {
+                    a: c.cid,
+                    b: cid,
+                    base: base.max(c.base),
+                    limit: limit.min(c.limit),
+                });
+                break;
+            }
+        }
+        if let Some(v) = clash {
+            reg.last_violation = Some(v.clone());
+            drop(reg);
+            panic!("conformance: {v}");
+        }
+        reg.comms.push(CommReg { fabric, cid, base, limit, members: members.to_vec() });
+    }
+
+    /// Record a collective-action send: checks the owning span, then
+    /// either satisfies a live wait edge or parks the message in the
+    /// sent-map so a trailing receive never looks blocked.
+    pub fn on_send(fabric: usize, cid: u64, src: usize, dst: usize, tag: Tag) {
+        if !armed() {
+            return;
+        }
+        let mut reg = registry();
+        if let Some(v) = span_violation(&reg, fabric, cid, tag) {
+            reg.last_violation = Some(v.clone());
+            drop(reg);
+            panic!("conformance: {v}");
+        }
+        let hit = reg.edges.iter().position(|e| {
+            e.edge.fabric == fabric && e.edge.waiter == dst && e.edge.src == src && e.edge.tag == tag
+        });
+        match hit {
+            Some(pos) => {
+                reg.edges.swap_remove(pos);
+            }
+            None => *reg.sent.entry((fabric, dst, src, tag)).or_insert(0) += 1,
+        }
+    }
+
+    /// Enter a blocking matched receive: checks the owning span, and if
+    /// the awaited message is not on the wire, records a wait edge and
+    /// runs cycle detection — panicking with a typed
+    /// [`DeadlockDiagnosis`] if this receive completes a cycle. The
+    /// returned guard removes the edge when the receive returns.
+    pub fn on_recv_enter(fabric: usize, cid: u64, dst: usize, src: usize, tag: Tag) -> RecvGuard {
+        if !armed() {
+            return RecvGuard { edge: None };
+        }
+        let mut reg = registry();
+        if let Some(v) = span_violation(&reg, fabric, cid, tag) {
+            reg.last_violation = Some(v.clone());
+            drop(reg);
+            panic!("conformance: {v}");
+        }
+        let key = (fabric, dst, src, tag);
+        if let Some(n) = reg.sent.get_mut(&key) {
+            // Already sent: this receive cannot participate in a
+            // deadlock, it will be matched by the fabric.
+            *n -= 1;
+            if *n == 0 {
+                reg.sent.remove(&key);
+            }
+            return RecvGuard { edge: None };
+        }
+        let id = reg.next_edge;
+        reg.next_edge += 1;
+        let leases = LEASES.with(|l| l.borrow().clone());
+        reg.edges.push(EdgeRec { id, edge: WaitEdge { fabric, waiter: dst, src, tag, leases } });
+        if let Some(cycle) = find_cycle(&reg.edges, fabric, dst) {
+            let diag =
+                DeadlockDiagnosis { cycle, open_spans: crate::obs::open_spans() };
+            reg.last_deadlock = Some(diag.clone());
+            drop(reg);
+            panic!("conformance deadlock: {diag}");
+        }
+        RecvGuard { edge: Some(id) }
+    }
+
+    /// Removes its wait edge (if one was recorded) when the blocking
+    /// receive returns.
+    #[must_use]
+    pub struct RecvGuard {
+        edge: Option<u64>,
+    }
+
+    impl Drop for RecvGuard {
+        fn drop(&mut self) {
+            if let Some(id) = self.edge {
+                let mut reg = registry();
+                if let Some(pos) = reg.edges.iter().position(|e| e.id == id) {
+                    reg.edges.swap_remove(pos);
+                }
+            }
+        }
+    }
+
+    /// DFS from `start` over `waiter → src` edges of one fabric; returns
+    /// the edge path of a cycle back to `start`, if any.
+    fn find_cycle(edges: &[EdgeRec], fabric: usize, start: usize) -> Option<Vec<WaitEdge>> {
+        fn dfs(
+            edges: &[EdgeRec],
+            fabric: usize,
+            at: usize,
+            start: usize,
+            path: &mut Vec<WaitEdge>,
+            seen: &mut Vec<usize>,
+        ) -> bool {
+            for e in edges.iter().filter(|e| e.edge.fabric == fabric && e.edge.waiter == at) {
+                if e.edge.src == start {
+                    path.push(e.edge.clone());
+                    return true;
+                }
+                if seen.contains(&e.edge.src) {
+                    continue;
+                }
+                seen.push(e.edge.src);
+                path.push(e.edge.clone());
+                if dfs(edges, fabric, e.edge.src, start, path, seen) {
+                    return true;
+                }
+                path.pop();
+            }
+            false
+        }
+        let mut path = Vec::new();
+        let mut seen = vec![start];
+        dfs(edges, fabric, start, start, &mut path, &mut seen).then_some(path)
+    }
+
+    /// Check one wire chunk of a chunked transfer for monotonic index
+    /// order; panics with a typed [`Violation::NonMonotonicChunk`] on
+    /// reordering.
+    pub fn on_chunk_recv(fabric: usize, dst: usize, src: usize, base_tag: Tag, index: u64) {
+        if !armed() {
+            return;
+        }
+        let mut reg = registry();
+        let key = (fabric, dst, src, base_tag);
+        let expected = reg.chunks.get(&key).copied().unwrap_or(0);
+        if index != expected {
+            let v = Violation::NonMonotonicChunk { src, dst, base_tag, expected, got: index };
+            reg.last_violation = Some(v.clone());
+            drop(reg);
+            panic!("conformance: {v}");
+        }
+        reg.chunks.insert(key, expected + 1);
+    }
+
+    /// Push a pool-lease label onto this thread's stack for the guard's
+    /// lifetime; wait edges recorded while it is held carry the label,
+    /// naming the lease holders in a cross-job deadlock diagnosis.
+    pub fn lease(label: &str) -> LeaseGuard {
+        if !armed() {
+            return LeaseGuard { pushed: false };
+        }
+        LEASES.with(|l| l.borrow_mut().push(label.to_string()));
+        LeaseGuard { pushed: true }
+    }
+
+    /// Pops its lease label on drop.
+    #[must_use]
+    pub struct LeaseGuard {
+        pushed: bool,
+    }
+
+    impl Drop for LeaseGuard {
+        fn drop(&mut self) {
+            if self.pushed {
+                LEASES.with(|l| {
+                    l.borrow_mut().pop();
+                });
+            }
+        }
+    }
+
+    /// The most recent deadlock diagnosis, if any (kept until re-armed).
+    pub fn last_deadlock() -> Option<DeadlockDiagnosis> {
+        registry().last_deadlock.clone()
+    }
+
+    /// The most recent conformance violation, if any (kept until
+    /// re-armed).
+    pub fn last_violation() -> Option<Violation> {
+        registry().last_violation.clone()
+    }
+
+    /// Search the current wait-for graph for a cycle (the watchdog's
+    /// timeout query). Returns the stored diagnosis if a cycle already
+    /// panicked a thread. `None` unless armed.
+    pub fn diagnose() -> Option<DeadlockDiagnosis> {
+        if !armed() {
+            return None;
+        }
+        let reg = registry();
+        if let Some(d) = &reg.last_deadlock {
+            return Some(d.clone());
+        }
+        let starts: Vec<(usize, usize)> =
+            reg.edges.iter().map(|e| (e.edge.fabric, e.edge.waiter)).collect();
+        for (fabric, start) in starts {
+            if let Some(cycle) = find_cycle(&reg.edges, fabric, start) {
+                return Some(DeadlockDiagnosis { cycle, open_spans: crate::obs::open_spans() });
+            }
+        }
+        None
+    }
+
+    /// Number of live wait-for edges (test sequencing aid).
+    pub fn wait_edge_count() -> usize {
+        registry().edges.len()
+    }
+
+    /// Benchmark entry: the exact cost a disabled hook pays (one
+    /// relaxed atomic load when compiled in; nothing when compiled out).
+    #[inline]
+    pub fn probe() {
+        let _ = armed();
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "conformance")))]
+mod imp {
+    use super::{DeadlockDiagnosis, Violation};
+    use crate::hpx::parcel::Tag;
+
+    /// Whether the detector is currently recording (never, compiled out).
+    #[inline(always)]
+    pub fn armed() -> bool {
+        false
+    }
+
+    /// Disarms the detector on drop (no-op, compiled out).
+    #[must_use]
+    pub struct ArmGuard {}
+
+    /// Arm the detector (no-op, compiled out).
+    pub fn arm() -> ArmGuard {
+        ArmGuard {}
+    }
+
+    /// Fresh conformance identity (always 0, compiled out).
+    #[inline(always)]
+    pub fn next_comm_id() -> u64 {
+        0
+    }
+
+    /// Register a communicator span (no-op, compiled out).
+    #[inline(always)]
+    pub fn on_comm_created(_fabric: usize, _cid: u64, _base: Tag, _limit: Tag, _members: &[usize]) {
+    }
+
+    /// Record a send (no-op, compiled out).
+    #[inline(always)]
+    pub fn on_send(_fabric: usize, _cid: u64, _src: usize, _dst: usize, _tag: Tag) {}
+
+    /// Removes its wait edge on drop (no-op, compiled out).
+    #[must_use]
+    pub struct RecvGuard {}
+
+    /// Enter a blocking receive (no-op, compiled out).
+    #[inline(always)]
+    pub fn on_recv_enter(_fabric: usize, _cid: u64, _dst: usize, _src: usize, _tag: Tag) -> RecvGuard {
+        RecvGuard {}
+    }
+
+    /// Check one wire chunk (no-op, compiled out).
+    #[inline(always)]
+    pub fn on_chunk_recv(_fabric: usize, _dst: usize, _src: usize, _base_tag: Tag, _index: u64) {}
+
+    /// Pops its lease label on drop (no-op, compiled out).
+    #[must_use]
+    pub struct LeaseGuard {}
+
+    /// Push a pool-lease label (no-op, compiled out).
+    #[inline(always)]
+    pub fn lease(_label: &str) -> LeaseGuard {
+        LeaseGuard {}
+    }
+
+    /// The most recent deadlock diagnosis (never any, compiled out).
+    #[inline(always)]
+    pub fn last_deadlock() -> Option<DeadlockDiagnosis> {
+        None
+    }
+
+    /// The most recent violation (never any, compiled out).
+    #[inline(always)]
+    pub fn last_violation() -> Option<Violation> {
+        None
+    }
+
+    /// Search for a wait-for cycle (never any, compiled out).
+    #[inline(always)]
+    pub fn diagnose() -> Option<DeadlockDiagnosis> {
+        None
+    }
+
+    /// Number of live wait edges (always 0, compiled out).
+    #[inline(always)]
+    pub fn wait_edge_count() -> usize {
+        0
+    }
+
+    /// Benchmark entry (no-op, compiled out).
+    #[inline(always)]
+    pub fn probe() {}
+}
+
+pub use imp::{
+    arm, armed, diagnose, last_deadlock, last_violation, lease, next_comm_id, on_chunk_recv,
+    on_comm_created, on_recv_enter, on_send, probe, wait_edge_count, ArmGuard, LeaseGuard,
+    RecvGuard,
+};
+
+#[cfg(all(test, any(debug_assertions, feature = "conformance")))]
+mod tests {
+    use super::*;
+    use crate::collectives::{ChunkPolicy, Communicator};
+    use crate::parcelport::{lci::LciParcelport, Parcelport};
+    use crate::util::testkit::with_watchdog;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const FAB: usize = 0xFAB;
+
+    #[test]
+    fn disarmed_hooks_record_nothing() {
+        // No arm guard: hooks must be inert (other tests may be armed
+        // concurrently, so only assert when nothing is armed).
+        if !armed() {
+            on_send(FAB, 0, 0, 1, 7);
+            let _g = on_recv_enter(FAB, 0, 0, 1, 7);
+            assert_eq!(wait_edge_count(), 0);
+        }
+    }
+
+    #[test]
+    fn cycle_detection_yields_typed_diagnosis() {
+        let _arm = arm();
+        let _e1 = on_recv_enter(FAB, 0, 0, 1, 7); // rank 0 waits on rank 1
+        let _l = lease("job-b shadow pool");
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _e2 = on_recv_enter(FAB, 0, 1, 0, 9); // closes the cycle
+        }))
+        .expect_err("closing the cycle must panic with a diagnosis");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("wait-for cycle"), "{msg}");
+        let diag = last_deadlock().expect("diagnosis stored");
+        assert_eq!(diag.cycle.len(), 2, "{diag}");
+        let ranks: Vec<usize> = diag.cycle.iter().map(|e| e.waiter).collect();
+        assert!(ranks.contains(&0) && ranks.contains(&1), "{diag}");
+        assert!(
+            diag.cycle.iter().any(|e| e.leases.iter().any(|l| l.contains("job-b"))),
+            "the closing edge must carry the held lease: {diag}"
+        );
+        assert!(diagnose().is_some(), "the stored diagnosis stays queryable");
+    }
+
+    #[test]
+    fn sent_messages_suppress_wait_edges() {
+        let _arm = arm();
+        on_send(FAB, 0, 1, 0, 7); // rank 1 already sent tag 7 to rank 0
+        let _e1 = on_recv_enter(FAB, 0, 0, 1, 7); // trailing recv: no edge
+        assert_eq!(wait_edge_count(), 0);
+        // The reverse direction has no sent message, so it records an
+        // edge — and must NOT report a cycle (no counter-edge exists).
+        let _e2 = on_recv_enter(FAB, 0, 1, 0, 9);
+        assert_eq!(wait_edge_count(), 1);
+        assert!(last_deadlock().is_none());
+    }
+
+    #[test]
+    fn a_send_clears_the_matching_edge() {
+        let _arm = arm();
+        let g = on_recv_enter(FAB, 0, 0, 1, 7);
+        assert_eq!(wait_edge_count(), 1);
+        on_send(FAB, 0, 1, 0, 7); // satisfies the wait
+        assert_eq!(wait_edge_count(), 0);
+        drop(g); // guard drop after send-clear is a no-op
+        assert_eq!(wait_edge_count(), 0);
+    }
+
+    #[test]
+    fn chunk_reordering_yields_typed_violation() {
+        let _arm = arm();
+        on_chunk_recv(FAB, 0, 1, 100, 0);
+        on_chunk_recv(FAB, 0, 1, 100, 1);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            on_chunk_recv(FAB, 0, 1, 100, 1); // replay of chunk 1
+        }))
+        .expect_err("reordered chunk must panic");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("chunk 1 arrived, expected 2"), "{msg}");
+        match last_violation() {
+            Some(Violation::NonMonotonicChunk { expected: 2, got: 1, .. }) => {}
+            v => panic!("wrong violation: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn nested_and_sibling_spans_are_not_collisions() {
+        let _arm = arm();
+        on_comm_created(FAB, 1, 0, 1000, &[0, 1, 2, 3]);
+        // Nested child reservation (a split of the split): allowed.
+        on_comm_created(FAB, 2, 0, 500, &[0, 1]);
+        // Sibling of the same split call: same span, disjoint members.
+        on_comm_created(FAB, 3, 0, 500, &[2, 3]);
+        // Another rank's handle of the same logical communicator.
+        on_comm_created(FAB, 4, 0, 500, &[0, 1]);
+        assert!(last_violation().is_none());
+    }
+
+    #[test]
+    fn overlapping_spans_with_shared_members_collide() {
+        let _arm = arm();
+        on_comm_created(FAB, 1, 100, 200, &[0, 1]);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            on_comm_created(FAB, 2, 150, 250, &[1, 2]); // straddles, shares rank 1
+        }))
+        .expect_err("straddling spans with shared members must panic");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("overlapping tag span"), "{msg}");
+        match last_violation() {
+            Some(Violation::TagCollision { a: 1, b: 2, base: 150, limit: 200 }) => {}
+            v => panic!("wrong violation: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn tag_collision_through_split_communicators_is_typed_not_a_hang() {
+        // The realistic construction: two bounded communicators built
+        // over one fabric whose spans straddle with shared members —
+        // the carving bug the registry exists to catch. with_watchdog
+        // bounds the whole construction.
+        with_watchdog("tag-collision", Duration::from_secs(30), || {
+            let _arm = arm();
+            let f: Arc<dyn Parcelport> = Arc::new(LciParcelport::new(2, None));
+            let span = crate::collectives::tags::CHUNK_TAG_SPAN;
+            let _a = Communicator::from_members(
+                Arc::clone(&f),
+                0,
+                Arc::new(vec![0, 1]),
+                0,
+                4 * span,
+                ChunkPolicy::default(),
+            );
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                Communicator::from_members(
+                    Arc::clone(&f),
+                    0,
+                    Arc::new(vec![0, 1]),
+                    2 * span,
+                    6 * span,
+                    ChunkPolicy::default(),
+                )
+            }))
+            .expect_err("overlapping sibling span must be rejected");
+            let msg = err.downcast_ref::<String>().expect("string payload");
+            assert!(msg.contains("overlapping tag span"), "{msg}");
+            assert!(matches!(last_violation(), Some(Violation::TagCollision { .. })));
+        });
+    }
+
+    #[test]
+    fn out_of_span_tag_is_typed() {
+        let _arm = arm();
+        let f: Arc<dyn Parcelport> = Arc::new(LciParcelport::new(2, None));
+        let comm = Communicator::from_members(
+            Arc::clone(&f),
+            0,
+            Arc::new(vec![0, 1]),
+            1000,
+            2000,
+            ChunkPolicy::default(),
+        );
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            comm.send(1, 5000, crate::hpx::parcel::Payload::from_f32(&[1.0]));
+        }))
+        .expect_err("a tag outside the span must be rejected");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("outside communicator"), "{msg}");
+        match last_violation() {
+            Some(Violation::TagOutsideSpan { tag: 5000, base: 1000, limit: 2000, .. }) => {}
+            v => panic!("wrong violation: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn cross_job_pool_lease_deadlock_yields_diagnosis_not_a_hang() {
+        // The PR 6 scenario, synthesized: two "jobs" on one fabric, each
+        // holding a pool lease, each blocked in a matched receive for a
+        // message the other will never send (it would only send after
+        // its own receive returned). The detector must convert this
+        // into a typed diagnosis instead of a hang; with_watchdog
+        // bounds the whole test. The blocked thread is detached and
+        // leaks by design — it can never be woken.
+        let diag = with_watchdog("cross-job-deadlock", Duration::from_secs(60), || {
+            let _arm = arm();
+            let f: Arc<dyn Parcelport> = Arc::new(LciParcelport::new(2, None));
+            let fa = Arc::clone(&f);
+            let a = std::thread::Builder::new()
+                .name("job-a-r0".into())
+                .spawn(move || {
+                    let _lease = lease("job-a chunk pool");
+                    let comm = Communicator::new(fa, 0, 2);
+                    let _ = comm.recv(1, 7); // blocks forever: rank 1 never sends 7
+                })
+                .expect("spawn job-a");
+            drop(a); // detached: it can never be joined
+            // Wait until job A's edge is on the graph so the cycle is
+            // closed deterministically by job B below.
+            while wait_edge_count() < 1 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let fb = Arc::clone(&f);
+            let b = std::thread::Builder::new()
+                .name("job-b-r1".into())
+                .spawn(move || {
+                    let _lease = lease("job-b chunk pool");
+                    let comm = Communicator::new(fb, 1, 2);
+                    // Closes the cycle: panics with the diagnosis
+                    // instead of blocking; swallow the panic (the
+                    // panic *is* the detection).
+                    let _ = catch_unwind(AssertUnwindSafe(|| comm.recv(0, 9)));
+                })
+                .expect("spawn job-b");
+            drop(b);
+            loop {
+                if let Some(d) = last_deadlock() {
+                    return d;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        assert_eq!(diag.cycle.len(), 2, "{diag}");
+        let leases: Vec<&String> = diag.cycle.iter().flat_map(|e| &e.leases).collect();
+        assert!(
+            leases.iter().any(|l| l.contains("job-a")) && leases.iter().any(|l| l.contains("job-b")),
+            "the diagnosis must name both jobs' pool leases: {diag}"
+        );
+        let rendered = diag.to_string();
+        assert!(rendered.contains("wait-for cycle"), "{rendered}");
+    }
+}

@@ -44,6 +44,7 @@ pub mod barrier;
 pub mod broadcast;
 pub mod chunked;
 pub mod comm;
+pub mod conformance;
 pub mod gather;
 pub mod nonblocking;
 pub mod protocol;
@@ -54,7 +55,7 @@ pub mod tags;
 
 pub use all_to_all::AllToAllAlgo;
 pub use chunked::ChunkPolicy;
-pub use comm::Communicator;
+pub use comm::{Communicator, TagSpaceExhausted};
 pub use reduce::ReduceOp;
 pub use scatter::ScatterAlgo;
 

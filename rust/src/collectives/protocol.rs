@@ -1020,10 +1020,14 @@ pub(crate) fn send_pooled(
     let fabric = Arc::clone(comm.fabric());
     let src = comm.my_global();
     let dest = comm.global_rank(dest);
+    let (token, cid) = (comm.conf_token(), comm.conf_cid());
     comm.chunk_pool().spawn(move || {
         let bytes = payload.len() as i64;
         let _span =
             crate::obs::span_args("wire", "chunk", src, tag as i64, crate::obs::NO_ARG, bytes);
+        // Recorded before the fabric delivery so an armed conformance
+        // checker never sees a matched receive outrun its send.
+        super::conformance::on_send(token, cid, src, dest, tag);
         fabric.send(Parcel::new(src, dest, actions::COLLECTIVE, tag, payload));
     })
 }

@@ -36,7 +36,7 @@
 //! lock-step). The returned communicator inherits the parent's
 //! [`super::ChunkPolicy`].
 
-use super::comm::Communicator;
+use super::comm::{Communicator, TagSpaceExhausted};
 use crate::hpx::parcel::{Payload, Tag};
 use crate::util::bytes::{get_u64, put_u64};
 use std::sync::Arc;
@@ -67,8 +67,35 @@ impl Communicator {
     /// the same point (SPMD discipline keeps the reservation in
     /// lock-step).
     pub fn split_with_span(&self, color: u64, key: u64, span: Tag) -> Communicator {
+        self.try_split_with_span(color, key, span).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`Communicator::split`]: returns a typed
+    /// [`TagSpaceExhausted`] instead of panicking when this (itself
+    /// split) communicator's remaining tag space is too depleted to
+    /// grant a nested split. The communicator stays fully usable after a
+    /// failed split — SPMD lock-step is preserved because every rank
+    /// fails the same deterministic check at the same point, before any
+    /// counter movement for the grant.
+    pub fn try_split(&self, color: u64, key: u64) -> Result<Communicator, TagSpaceExhausted> {
+        let span = self.try_split_span()?;
+        self.try_split_with_span(color, key, span)
+    }
+
+    /// Fallible [`Communicator::split_with_span`]; see
+    /// [`Communicator::try_split`] for the error contract.
+    pub fn try_split_with_span(
+        &self,
+        color: u64,
+        key: u64,
+        span: Tag,
+    ) -> Result<Communicator, TagSpaceExhausted> {
         // Exchange (color, key) so every rank derives the same grouping
-        // without a central coordinator.
+        // without a central coordinator. The exchange runs before the
+        // reservation check: its own (small) tag block advances the
+        // counter identically on every rank whether or not the grant
+        // below succeeds, so a failed split leaves the group in
+        // lock-step.
         let mut mine = Vec::with_capacity(16);
         put_u64(&mut mine, color);
         put_u64(&mut mine, key);
@@ -93,16 +120,17 @@ impl Communicator {
 
         // Every parent rank reserves the same span here (lock-step), so
         // the sub-communicator's tag space is identical across its
-        // members and disjoint from everything else on the parent.
-        let base = self.reserve_tag_span(span);
-        Communicator::from_members(
+        // members and disjoint from everything else on the parent. On
+        // exhaustion the counter is untouched and the parent usable.
+        let base = self.try_reserve_tag_span(span)?;
+        Ok(Communicator::from_members(
             Arc::clone(self.fabric()),
             sub_rank,
             Arc::new(members),
             base,
             base + span,
             self.chunk_policy(),
-        )
+        ))
     }
 }
 
@@ -248,6 +276,35 @@ mod tests {
             assert!(res.is_err(), "allocating past the explicit span must panic");
             // The parent's next allocation clears the whole grant.
             assert!(world.alloc_tags() >= base + span);
+        });
+    }
+
+    #[test]
+    fn nested_split_exhaustion_is_typed_and_leaves_parent_usable() {
+        use crate::collectives::tags::CHUNK_TAG_SPAN;
+        let cluster = Cluster::new(2, PortKind::Lci, None).unwrap();
+        cluster.run(|ctx| {
+            let world = Communicator::from_ctx(ctx);
+            // One chunk block is the minimum viable grant: a nested
+            // split can never be carved out of it.
+            let sub = world.split_with_span(0, ctx.rank as u64, CHUNK_TAG_SPAN);
+            let err = sub.try_split(0, ctx.rank as u64).unwrap_err();
+            assert!(err.to_string().contains("tag space exhausted"), "{err}");
+            // The failed split consumed nothing: the sub-communicator's
+            // collectives still work, in lock-step, inside its span.
+            let all = sub.all_gather(Payload::from_f32(&[ctx.rank as f32]));
+            let vals: Vec<f32> = all.iter().map(|p| p.to_f32()[0]).collect();
+            assert_eq!(vals, vec![0.0, 1.0]);
+
+            // Explicit-span variant: the grant itself does not fit.
+            let sub2 = world.split_with_span(0, ctx.rank as u64, 2 * CHUNK_TAG_SPAN);
+            let err = sub2.try_split_with_span(0, ctx.rank as u64, 2 * CHUNK_TAG_SPAN);
+            let err = err.expect_err("a grant as large as the whole span cannot fit");
+            assert!(err.next > err.limit, "{err}");
+            assert!(err.to_string().contains("tag space exhausted"), "{err}");
+            let all = sub2.all_gather(Payload::from_f32(&[(10 + ctx.rank) as f32]));
+            let vals: Vec<f32> = all.iter().map(|p| p.to_f32()[0]).collect();
+            assert_eq!(vals, vec![10.0, 11.0]);
         });
     }
 

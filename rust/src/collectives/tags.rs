@@ -65,17 +65,32 @@ pub const fn collective_span(size: usize) -> Tag {
     4 * size as Tag + 8
 }
 
-// A split space subdivides into whole chunk blocks.
-const _: () = assert!(SPLIT_TAG_SPAN % CHUNK_TAG_SPAN == 0);
-// A split space holds at least 2^16 chunk blocks, so a sub-communicator
-// has ample room for its own chunked collectives before the runtime
-// bound trips.
-const _: () = assert!(SPLIT_TAG_SPAN / CHUNK_TAG_SPAN >= 1 << 16);
-// A shadow block for the largest supported communicator still fits many
-// times inside one split space: sub-communicators can offload
-// multi-round collectives onto shadows of their own without ever
-// reaching a sibling split's tags.
-const _: () = assert!(shadow_span(MAX_SHADOW_RANKS) * 4 <= SPLIT_TAG_SPAN);
+/// A split space subdivides into whole chunk blocks, so chunk-tag
+/// reservations inside a sub-communicator stay aligned to its span.
+pub const fn split_space_subdivides_into_chunk_blocks() -> bool {
+    SPLIT_TAG_SPAN % CHUNK_TAG_SPAN == 0
+}
+
+/// A split space holds at least 2¹⁶ chunk blocks, so a sub-communicator
+/// has ample room for its own chunked collectives before the runtime
+/// bound trips.
+pub const fn split_space_holds_many_chunk_blocks() -> bool {
+    SPLIT_TAG_SPAN / CHUNK_TAG_SPAN >= 1 << 16
+}
+
+/// A shadow block for a `size`-rank communicator fits at least four
+/// times inside one split space: sub-communicators can offload
+/// multi-round collectives onto shadows of their own without ever
+/// reaching a sibling split's tags.
+pub const fn shadow_block_fits_in_split_space(size: usize) -> bool {
+    shadow_span(size) * 4 <= SPLIT_TAG_SPAN
+}
+
+// The containment relations above are pinned at compile time through
+// the same predicates the test-suite exercises, so the two can't drift.
+const _: () = assert!(split_space_subdivides_into_chunk_blocks());
+const _: () = assert!(split_space_holds_many_chunk_blocks());
+const _: () = assert!(shadow_block_fits_in_split_space(MAX_SHADOW_RANKS));
 
 #[cfg(test)]
 mod tests {
@@ -83,9 +98,23 @@ mod tests {
 
     #[test]
     fn spans_are_nested_cleanly() {
-        assert_eq!(SPLIT_TAG_SPAN % CHUNK_TAG_SPAN, 0);
-        assert!(shadow_span(4) < SPLIT_TAG_SPAN);
+        // Same predicates the `const` asserts pin at compile time.
+        assert!(split_space_subdivides_into_chunk_blocks());
+        assert!(split_space_holds_many_chunk_blocks());
         assert!(shadow_span(1) >= 3 * CHUNK_TAG_SPAN);
+    }
+
+    #[test]
+    fn shadow_blocks_fit_at_every_plausible_size() {
+        // The compile-time assert pins the extreme; spot-check the
+        // predicate across the sizes the test fabrics actually use.
+        for size in [0, 1, 2, 4, 64, 1024, MAX_SHADOW_RANKS] {
+            assert!(shadow_block_fits_in_split_space(size), "size {size}");
+        }
+        assert!(
+            !shadow_block_fits_in_split_space(2 * MAX_SHADOW_RANKS),
+            "the predicate must actually bound the size"
+        );
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub const BLOCK: usize = 64;
 /// iterate the *destination* row (source column) in the outer loop so
 /// writes are contiguous runs; the strided side is the read, which
 /// prefetches better than strided writes commit.
+// xtask: hot_path
 fn place_rows_tiled(
     rows: &[Complex32],
     r0: usize,
@@ -59,6 +60,7 @@ fn place_rows_tiled(
 /// (`src_cols × slab_cols`, row-major) at column offset `col0`:
 ///
 /// `slab[c][col0 + r] = chunk[r][c]`.
+// xtask: hot_path
 pub fn place_chunk_transposed(
     chunk: &[Complex32],
     src_rows: usize,
@@ -88,6 +90,7 @@ pub fn place_chunk_transposed(
 /// *k* is placed while chunk *k+1* is still in flight, so the window is
 /// whatever byte range the [`crate::collectives::ChunkPolicy`] cut — any
 /// element-aligned offset, including mid-row.
+// xtask: hot_path
 pub fn place_chunk_slice_transposed(
     elems: &[Complex32],
     elem_offset: usize,

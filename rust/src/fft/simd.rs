@@ -96,11 +96,15 @@ fn detect() -> SimdTier {
 
 /// Twiddled radix-2 butterfly over equal-length slices:
 /// `(lo[k], hi[k]) ← (lo[k] + hi[k]·tw[k], lo[k] − hi[k]·tw[k])`.
+// xtask: hot_path
 pub fn butterfly_radix2(lo: &mut [Complex32], hi: &mut [Complex32], tw: &[Complex32]) {
     debug_assert!(lo.len() == hi.len() && hi.len() == tw.len());
     match tier() {
+        // SAFETY: `tier()` returned this arm, so the CPU supports the
+        // kernel's target feature; slice lengths were just asserted equal.
         #[cfg(target_arch = "x86_64")]
         SimdTier::Avx2 => unsafe { avx2::butterfly_radix2(lo, hi, tw) },
+        // SAFETY: NEON is baseline on aarch64; lengths asserted equal.
         #[cfg(target_arch = "aarch64")]
         SimdTier::Neon => unsafe { neon::butterfly_radix2(lo, hi, tw) },
         SimdTier::Scalar => butterfly_radix2_scalar(lo, hi, tw),
@@ -108,6 +112,7 @@ pub fn butterfly_radix2(lo: &mut [Complex32], hi: &mut [Complex32], tw: &[Comple
 }
 
 /// Scalar reference for [`butterfly_radix2`] (bitwise-identical).
+// xtask: hot_path
 pub fn butterfly_radix2_scalar(lo: &mut [Complex32], hi: &mut [Complex32], tw: &[Complex32]) {
     for ((a, b), w) in lo.iter_mut().zip(hi.iter_mut()).zip(tw) {
         let t = *b * *w;
@@ -122,6 +127,7 @@ pub fn butterfly_radix2_scalar(lo: &mut [Complex32], hi: &mut [Complex32], tw: &
 /// 1–3 are multiplied by `w1`/`w2`/`w3` first, then the 4-point DFT
 /// (`±1, ∓i` rotations only) combines them in place.
 #[allow(clippy::too_many_arguments)]
+// xtask: hot_path
 pub fn butterfly_radix4(
     d0: &mut [Complex32],
     d1: &mut [Complex32],
@@ -135,8 +141,11 @@ pub fn butterfly_radix4(
     debug_assert!(d0.len() == d1.len() && d1.len() == d2.len() && d2.len() == d3.len());
     debug_assert!(w1.len() == d0.len() && w2.len() == d0.len() && w3.len() == d0.len());
     match tier() {
+        // SAFETY: `tier()` returned this arm, so the CPU supports the
+        // kernel's target feature; slice lengths were just asserted equal.
         #[cfg(target_arch = "x86_64")]
         SimdTier::Avx2 => unsafe { avx2::butterfly_radix4(d0, d1, d2, d3, w1, w2, w3, inverse) },
+        // SAFETY: NEON is baseline on aarch64; lengths asserted equal.
         #[cfg(target_arch = "aarch64")]
         SimdTier::Neon => unsafe { neon::butterfly_radix4(d0, d1, d2, d3, w1, w2, w3, inverse) },
         SimdTier::Scalar => butterfly_radix4_scalar(d0, d1, d2, d3, w1, w2, w3, inverse),
@@ -145,6 +154,7 @@ pub fn butterfly_radix4(
 
 /// Scalar reference for [`butterfly_radix4`] (bitwise-identical).
 #[allow(clippy::too_many_arguments)]
+// xtask: hot_path
 pub fn butterfly_radix4_scalar(
     d0: &mut [Complex32],
     d1: &mut [Complex32],
@@ -186,6 +196,7 @@ pub fn butterfly_radix4_scalar(
 ///
 /// (upper signs forward, lower inverse).
 #[allow(clippy::too_many_arguments)]
+// xtask: hot_path
 pub fn split_radix_combine(
     u0: &mut [Complex32],
     u1: &mut [Complex32],
@@ -198,8 +209,11 @@ pub fn split_radix_combine(
     debug_assert!(u0.len() == u1.len() && u1.len() == z1.len() && z1.len() == z3.len());
     debug_assert!(w1.len() == u0.len() && w3.len() == u0.len());
     match tier() {
+        // SAFETY: `tier()` returned this arm, so the CPU supports the
+        // kernel's target feature; slice lengths were just asserted equal.
         #[cfg(target_arch = "x86_64")]
         SimdTier::Avx2 => unsafe { avx2::split_radix_combine(u0, u1, z1, z3, w1, w3, inverse) },
+        // SAFETY: NEON is baseline on aarch64; lengths asserted equal.
         #[cfg(target_arch = "aarch64")]
         SimdTier::Neon => unsafe { neon::split_radix_combine(u0, u1, z1, z3, w1, w3, inverse) },
         SimdTier::Scalar => split_radix_combine_scalar(u0, u1, z1, z3, w1, w3, inverse),
@@ -208,6 +222,7 @@ pub fn split_radix_combine(
 
 /// Scalar reference for [`split_radix_combine`] (bitwise-identical).
 #[allow(clippy::too_many_arguments)]
+// xtask: hot_path
 pub fn split_radix_combine_scalar(
     u0: &mut [Complex32],
     u1: &mut [Complex32],
@@ -234,11 +249,15 @@ pub fn split_radix_combine_scalar(
 
 /// Pointwise complex multiply `a[k] ← a[k]·b[k]` — the Bluestein
 /// convolution's spectrum product.
+// xtask: hot_path
 pub fn pointwise_mul(a: &mut [Complex32], b: &[Complex32]) {
     debug_assert_eq!(a.len(), b.len());
     match tier() {
+        // SAFETY: `tier()` returned this arm, so the CPU supports the
+        // kernel's target feature; slice lengths were just asserted equal.
         #[cfg(target_arch = "x86_64")]
         SimdTier::Avx2 => unsafe { avx2::pointwise_mul(a, b) },
+        // SAFETY: NEON is baseline on aarch64; lengths asserted equal.
         #[cfg(target_arch = "aarch64")]
         SimdTier::Neon => unsafe { neon::pointwise_mul(a, b) },
         SimdTier::Scalar => pointwise_mul_scalar(a, b),
@@ -246,6 +265,7 @@ pub fn pointwise_mul(a: &mut [Complex32], b: &[Complex32]) {
 }
 
 /// Scalar reference for [`pointwise_mul`] (bitwise-identical).
+// xtask: hot_path
 pub fn pointwise_mul_scalar(a: &mut [Complex32], b: &[Complex32]) {
     for (x, y) in a.iter_mut().zip(b) {
         *x = *x * *y;
@@ -254,10 +274,14 @@ pub fn pointwise_mul_scalar(a: &mut [Complex32], b: &[Complex32]) {
 
 /// Real-scalar scale `x[k] ← x[k]·s` — the inverse transform's `1/n`
 /// normalization pass.
+// xtask: hot_path
 pub fn scale_in_place(x: &mut [Complex32], s: f32) {
     match tier() {
+        // SAFETY: `tier()` returned this arm, so the CPU supports the
+        // kernel's target feature; no length preconditions.
         #[cfg(target_arch = "x86_64")]
         SimdTier::Avx2 => unsafe { avx2::scale_in_place(x, s) },
+        // SAFETY: NEON is baseline on aarch64; no length preconditions.
         #[cfg(target_arch = "aarch64")]
         SimdTier::Neon => unsafe { neon::scale_in_place(x, s) },
         SimdTier::Scalar => scale_in_place_scalar(x, s),
@@ -265,6 +289,7 @@ pub fn scale_in_place(x: &mut [Complex32], s: f32) {
 }
 
 /// Scalar reference for [`scale_in_place`] (bitwise-identical).
+// xtask: hot_path
 pub fn scale_in_place_scalar(x: &mut [Complex32], s: f32) {
     for v in x.iter_mut() {
         *v = v.scale(s);
@@ -287,28 +312,39 @@ mod avx2 {
     /// `re = a.re·b.re − a.im·b.im`, `im = a.re·b.im + a.im·b.re`.
     #[inline]
     unsafe fn cmul(a: __m256, b: __m256) -> __m256 {
-        let ar = _mm256_moveldup_ps(a); // [a.re, a.re, ...]
-        let ai = _mm256_movehdup_ps(a); // [a.im, a.im, ...]
-        let bsw = _mm256_permute_ps::<0xB1>(b); // [b.im, b.re, ...]
-        // addsub: even lanes subtract, odd lanes add — exactly the
-        // scalar (re, im) formula, one rounding per op, no contraction.
-        _mm256_addsub_ps(_mm256_mul_ps(ar, b), _mm256_mul_ps(ai, bsw))
+        // SAFETY: register-to-register AVX arithmetic, no memory access;
+        // callers are `#[target_feature(enable = "avx2")]` kernels only
+        // entered after the runtime `tier()` check.
+        unsafe {
+            let ar = _mm256_moveldup_ps(a); // [a.re, a.re, ...]
+            let ai = _mm256_movehdup_ps(a); // [a.im, a.im, ...]
+            let bsw = _mm256_permute_ps::<0xB1>(b); // [b.im, b.re, ...]
+            // addsub: even lanes subtract, odd lanes add — exactly the
+            // scalar (re, im) formula, one rounding per op, no contraction.
+            _mm256_addsub_ps(_mm256_mul_ps(ar, b), _mm256_mul_ps(ai, bsw))
+        }
     }
 
     /// `−i·v` per lane: `(re, im) → (im, −re)` — swap pairs, negate odd
     /// lanes (sign-bit xor, exact — matches `Complex32::mul_neg_i`).
     #[inline]
     unsafe fn mul_neg_i(v: __m256) -> __m256 {
-        let sw = _mm256_permute_ps::<0xB1>(v);
-        _mm256_xor_ps(sw, _mm256_set_ps(-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0))
+        // SAFETY: register-only AVX ops; avx2-guaranteed callers (above).
+        unsafe {
+            let sw = _mm256_permute_ps::<0xB1>(v);
+            _mm256_xor_ps(sw, _mm256_set_ps(-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0))
+        }
     }
 
     /// `i·v` per lane: `(re, im) → (−im, re)` — swap pairs, negate even
     /// lanes.
     #[inline]
     unsafe fn mul_i(v: __m256) -> __m256 {
-        let sw = _mm256_permute_ps::<0xB1>(v);
-        _mm256_xor_ps(sw, _mm256_set_ps(0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0))
+        // SAFETY: register-only AVX ops; avx2-guaranteed callers (above).
+        unsafe {
+            let sw = _mm256_permute_ps::<0xB1>(v);
+            _mm256_xor_ps(sw, _mm256_set_ps(0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0))
+        }
     }
 
     #[target_feature(enable = "avx2")]
@@ -322,14 +358,22 @@ mod avx2 {
         let lp = lo.as_mut_ptr() as *mut f32;
         let hp = hi.as_mut_ptr() as *mut f32;
         let tp = tw.as_ptr() as *const f32;
-        for q in 0..quads {
-            let off = q * 8;
-            let a = _mm256_loadu_ps(lp.add(off));
-            let b = _mm256_loadu_ps(hp.add(off));
-            let w = _mm256_loadu_ps(tp.add(off));
-            let t = cmul(b, w);
-            _mm256_storeu_ps(lp.add(off), _mm256_add_ps(a, t));
-            _mm256_storeu_ps(hp.add(off), _mm256_sub_ps(a, t));
+        // SAFETY: `quads·4 ≤ m` and the three slices are equal-length
+        // (asserted at the dispatch site), so every `off + 8`-float
+        // access stays inside its slice; `Complex32` is `repr(C)` of two
+        // `f32`s, making the pointer casts layout-sound; unaligned
+        // loads/stores are used throughout. The avx2 target feature is
+        // guaranteed by this fn's attribute.
+        unsafe {
+            for q in 0..quads {
+                let off = q * 8;
+                let a = _mm256_loadu_ps(lp.add(off));
+                let b = _mm256_loadu_ps(hp.add(off));
+                let w = _mm256_loadu_ps(tp.add(off));
+                let t = cmul(b, w);
+                _mm256_storeu_ps(lp.add(off), _mm256_add_ps(a, t));
+                _mm256_storeu_ps(hp.add(off), _mm256_sub_ps(a, t));
+            }
         }
         let done = quads * 4;
         super::butterfly_radix2_scalar(&mut lo[done..], &mut hi[done..], &tw[done..]);
@@ -356,21 +400,27 @@ mod avx2 {
         let q1 = w1.as_ptr() as *const f32;
         let q2 = w2.as_ptr() as *const f32;
         let q3 = w3.as_ptr() as *const f32;
-        for q in 0..quads {
-            let off = q * 8;
-            let t0 = _mm256_loadu_ps(p0.add(off));
-            let t1 = cmul(_mm256_loadu_ps(p1.add(off)), _mm256_loadu_ps(q1.add(off)));
-            let t2 = cmul(_mm256_loadu_ps(p2.add(off)), _mm256_loadu_ps(q2.add(off)));
-            let t3 = cmul(_mm256_loadu_ps(p3.add(off)), _mm256_loadu_ps(q3.add(off)));
-            let s02 = _mm256_add_ps(t0, t2);
-            let d02 = _mm256_sub_ps(t0, t2);
-            let s13 = _mm256_add_ps(t1, t3);
-            let d = _mm256_sub_ps(t1, t3);
-            let d13 = if inverse { mul_i(d) } else { mul_neg_i(d) };
-            _mm256_storeu_ps(p0.add(off), _mm256_add_ps(s02, s13));
-            _mm256_storeu_ps(p1.add(off), _mm256_add_ps(d02, d13));
-            _mm256_storeu_ps(p2.add(off), _mm256_sub_ps(s02, s13));
-            _mm256_storeu_ps(p3.add(off), _mm256_sub_ps(d02, d13));
+        // SAFETY: all seven slices are equal-length (asserted at the
+        // dispatch site) and `quads·4 ≤ m`, so every 8-float access is
+        // in bounds; `Complex32` is `repr(C)` of two `f32`s, so the
+        // casts are layout-sound; unaligned loads/stores throughout.
+        unsafe {
+            for q in 0..quads {
+                let off = q * 8;
+                let t0 = _mm256_loadu_ps(p0.add(off));
+                let t1 = cmul(_mm256_loadu_ps(p1.add(off)), _mm256_loadu_ps(q1.add(off)));
+                let t2 = cmul(_mm256_loadu_ps(p2.add(off)), _mm256_loadu_ps(q2.add(off)));
+                let t3 = cmul(_mm256_loadu_ps(p3.add(off)), _mm256_loadu_ps(q3.add(off)));
+                let s02 = _mm256_add_ps(t0, t2);
+                let d02 = _mm256_sub_ps(t0, t2);
+                let s13 = _mm256_add_ps(t1, t3);
+                let d = _mm256_sub_ps(t1, t3);
+                let d13 = if inverse { mul_i(d) } else { mul_neg_i(d) };
+                _mm256_storeu_ps(p0.add(off), _mm256_add_ps(s02, s13));
+                _mm256_storeu_ps(p1.add(off), _mm256_add_ps(d02, d13));
+                _mm256_storeu_ps(p2.add(off), _mm256_sub_ps(s02, s13));
+                _mm256_storeu_ps(p3.add(off), _mm256_sub_ps(d02, d13));
+            }
         }
         let done = quads * 4;
         super::butterfly_radix4_scalar(
@@ -404,19 +454,25 @@ mod avx2 {
         let pz3 = z3.as_mut_ptr() as *mut f32;
         let pw1 = w1.as_ptr() as *const f32;
         let pw3 = w3.as_ptr() as *const f32;
-        for q in 0..quads {
-            let off = q * 8;
-            let t1 = cmul(_mm256_loadu_ps(pz1.add(off)), _mm256_loadu_ps(pw1.add(off)));
-            let t3 = cmul(_mm256_loadu_ps(pz3.add(off)), _mm256_loadu_ps(pw3.add(off)));
-            let s = _mm256_add_ps(t1, t3);
-            let d = _mm256_sub_ps(t1, t3);
-            let rot = if inverse { mul_i(d) } else { mul_neg_i(d) };
-            let a = _mm256_loadu_ps(pu0.add(off));
-            let b = _mm256_loadu_ps(pu1.add(off));
-            _mm256_storeu_ps(pu0.add(off), _mm256_add_ps(a, s));
-            _mm256_storeu_ps(pz1.add(off), _mm256_sub_ps(a, s));
-            _mm256_storeu_ps(pu1.add(off), _mm256_add_ps(b, rot));
-            _mm256_storeu_ps(pz3.add(off), _mm256_sub_ps(b, rot));
+        // SAFETY: all six slices are equal-length (asserted at the
+        // dispatch site) and `quads·4 ≤ m`, so every 8-float access is
+        // in bounds; `Complex32` is `repr(C)` of two `f32`s, so the
+        // casts are layout-sound; unaligned loads/stores throughout.
+        unsafe {
+            for q in 0..quads {
+                let off = q * 8;
+                let t1 = cmul(_mm256_loadu_ps(pz1.add(off)), _mm256_loadu_ps(pw1.add(off)));
+                let t3 = cmul(_mm256_loadu_ps(pz3.add(off)), _mm256_loadu_ps(pw3.add(off)));
+                let s = _mm256_add_ps(t1, t3);
+                let d = _mm256_sub_ps(t1, t3);
+                let rot = if inverse { mul_i(d) } else { mul_neg_i(d) };
+                let a = _mm256_loadu_ps(pu0.add(off));
+                let b = _mm256_loadu_ps(pu1.add(off));
+                _mm256_storeu_ps(pu0.add(off), _mm256_add_ps(a, s));
+                _mm256_storeu_ps(pz1.add(off), _mm256_sub_ps(a, s));
+                _mm256_storeu_ps(pu1.add(off), _mm256_add_ps(b, rot));
+                _mm256_storeu_ps(pz3.add(off), _mm256_sub_ps(b, rot));
+            }
         }
         let done = quads * 4;
         super::split_radix_combine_scalar(
@@ -435,11 +491,17 @@ mod avx2 {
         let quads = a.len() / 4;
         let pa = a.as_mut_ptr() as *mut f32;
         let pb = b.as_ptr() as *const f32;
-        for q in 0..quads {
-            let off = q * 8;
-            let va = _mm256_loadu_ps(pa.add(off));
-            let vb = _mm256_loadu_ps(pb.add(off));
-            _mm256_storeu_ps(pa.add(off), cmul(va, vb));
+        // SAFETY: `a` and `b` are equal-length (asserted at the dispatch
+        // site) and `quads·4 ≤ a.len()`, so every 8-float access is in
+        // bounds; `Complex32` is `repr(C)` of two `f32`s; unaligned
+        // loads/stores throughout.
+        unsafe {
+            for q in 0..quads {
+                let off = q * 8;
+                let va = _mm256_loadu_ps(pa.add(off));
+                let vb = _mm256_loadu_ps(pb.add(off));
+                _mm256_storeu_ps(pa.add(off), cmul(va, vb));
+            }
         }
         let done = quads * 4;
         super::pointwise_mul_scalar(&mut a[done..], &b[done..]);
@@ -449,10 +511,15 @@ mod avx2 {
     pub(super) unsafe fn scale_in_place(x: &mut [Complex32], s: f32) {
         let quads = x.len() / 4;
         let px = x.as_mut_ptr() as *mut f32;
-        let vs = _mm256_set1_ps(s);
-        for q in 0..quads {
-            let off = q * 8;
-            _mm256_storeu_ps(px.add(off), _mm256_mul_ps(_mm256_loadu_ps(px.add(off)), vs));
+        // SAFETY: `quads·4 ≤ x.len()`, so every 8-float access is in
+        // bounds; `Complex32` is `repr(C)` of two `f32`s; unaligned
+        // loads/stores throughout.
+        unsafe {
+            let vs = _mm256_set1_ps(s);
+            for q in 0..quads {
+                let off = q * 8;
+                _mm256_storeu_ps(px.add(off), _mm256_mul_ps(_mm256_loadu_ps(px.add(off)), vs));
+            }
         }
         let done = quads * 4;
         super::scale_in_place_scalar(&mut x[done..], s);
@@ -471,40 +538,53 @@ mod neon {
     /// Flip the sign bit of the even (real-slot) lanes.
     #[inline]
     unsafe fn negate_even(v: float32x4_t) -> float32x4_t {
-        const M: [u32; 4] = [0x8000_0000, 0, 0x8000_0000, 0];
-        let mask = vld1q_u32(M.as_ptr());
-        vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+        // SAFETY: the mask load reads 4 u32 from a local array of
+        // exactly 4; the rest is register-only NEON (baseline aarch64).
+        unsafe {
+            const M: [u32; 4] = [0x8000_0000, 0, 0x8000_0000, 0];
+            let mask = vld1q_u32(M.as_ptr());
+            vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+        }
     }
 
     /// Flip the sign bit of the odd (imag-slot) lanes.
     #[inline]
     unsafe fn negate_odd(v: float32x4_t) -> float32x4_t {
-        const M: [u32; 4] = [0, 0x8000_0000, 0, 0x8000_0000];
-        let mask = vld1q_u32(M.as_ptr());
-        vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+        // SAFETY: the mask load reads 4 u32 from a local array of
+        // exactly 4; the rest is register-only NEON (baseline aarch64).
+        unsafe {
+            const M: [u32; 4] = [0, 0x8000_0000, 0, 0x8000_0000];
+            let mask = vld1q_u32(M.as_ptr());
+            vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+        }
     }
 
     /// `a·b` per complex lane, scalar-identical rounding.
     #[inline]
     unsafe fn cmul(a: float32x4_t, b: float32x4_t) -> float32x4_t {
-        let ar = vtrn1q_f32(a, a); // [a0.re, a0.re, a1.re, a1.re]
-        let ai = vtrn2q_f32(a, a); // [a0.im, a0.im, a1.im, a1.im]
-        let bsw = vrev64q_f32(b); // [b0.im, b0.re, b1.im, b1.re]
-        // p1 ± p2 with the even lane subtracted: negate p2's even lanes,
-        // then a single add — one rounding per op, like the scalar Mul.
-        vaddq_f32(vmulq_f32(ar, b), negate_even(vmulq_f32(ai, bsw)))
+        // SAFETY: register-only NEON arithmetic (baseline on aarch64).
+        unsafe {
+            let ar = vtrn1q_f32(a, a); // [a0.re, a0.re, a1.re, a1.re]
+            let ai = vtrn2q_f32(a, a); // [a0.im, a0.im, a1.im, a1.im]
+            let bsw = vrev64q_f32(b); // [b0.im, b0.re, b1.im, b1.re]
+            // p1 ± p2 with the even lane subtracted: negate p2's even lanes,
+            // then a single add — one rounding per op, like the scalar Mul.
+            vaddq_f32(vmulq_f32(ar, b), negate_even(vmulq_f32(ai, bsw)))
+        }
     }
 
     /// `−i·v` per lane: `(re, im) → (im, −re)`.
     #[inline]
     unsafe fn mul_neg_i(v: float32x4_t) -> float32x4_t {
-        negate_odd(vrev64q_f32(v))
+        // SAFETY: register-only NEON (baseline on aarch64).
+        unsafe { negate_odd(vrev64q_f32(v)) }
     }
 
     /// `i·v` per lane: `(re, im) → (−im, re)`.
     #[inline]
     unsafe fn mul_i(v: float32x4_t) -> float32x4_t {
-        negate_even(vrev64q_f32(v))
+        // SAFETY: register-only NEON (baseline on aarch64).
+        unsafe { negate_even(vrev64q_f32(v)) }
     }
 
     pub(super) unsafe fn butterfly_radix2(
@@ -516,14 +596,20 @@ mod neon {
         let lp = lo.as_mut_ptr() as *mut f32;
         let hp = hi.as_mut_ptr() as *mut f32;
         let tp = tw.as_ptr() as *const f32;
-        for q in 0..pairs {
-            let off = q * 4;
-            let a = vld1q_f32(lp.add(off));
-            let b = vld1q_f32(hp.add(off));
-            let w = vld1q_f32(tp.add(off));
-            let t = cmul(b, w);
-            vst1q_f32(lp.add(off), vaddq_f32(a, t));
-            vst1q_f32(hp.add(off), vsubq_f32(a, t));
+        // SAFETY: `pairs·2 ≤ lo.len()` and the three slices are
+        // equal-length (asserted at the dispatch site), so every
+        // `off + 4`-float access is in bounds; `Complex32` is `repr(C)`
+        // of two `f32`s, so the pointer casts are layout-sound.
+        unsafe {
+            for q in 0..pairs {
+                let off = q * 4;
+                let a = vld1q_f32(lp.add(off));
+                let b = vld1q_f32(hp.add(off));
+                let w = vld1q_f32(tp.add(off));
+                let t = cmul(b, w);
+                vst1q_f32(lp.add(off), vaddq_f32(a, t));
+                vst1q_f32(hp.add(off), vsubq_f32(a, t));
+            }
         }
         let done = pairs * 2;
         super::butterfly_radix2_scalar(&mut lo[done..], &mut hi[done..], &tw[done..]);
@@ -548,21 +634,26 @@ mod neon {
         let q1 = w1.as_ptr() as *const f32;
         let q2 = w2.as_ptr() as *const f32;
         let q3 = w3.as_ptr() as *const f32;
-        for q in 0..pairs {
-            let off = q * 4;
-            let t0 = vld1q_f32(p0.add(off));
-            let t1 = cmul(vld1q_f32(p1.add(off)), vld1q_f32(q1.add(off)));
-            let t2 = cmul(vld1q_f32(p2.add(off)), vld1q_f32(q2.add(off)));
-            let t3 = cmul(vld1q_f32(p3.add(off)), vld1q_f32(q3.add(off)));
-            let s02 = vaddq_f32(t0, t2);
-            let d02 = vsubq_f32(t0, t2);
-            let s13 = vaddq_f32(t1, t3);
-            let d = vsubq_f32(t1, t3);
-            let d13 = if inverse { mul_i(d) } else { mul_neg_i(d) };
-            vst1q_f32(p0.add(off), vaddq_f32(s02, s13));
-            vst1q_f32(p1.add(off), vaddq_f32(d02, d13));
-            vst1q_f32(p2.add(off), vsubq_f32(s02, s13));
-            vst1q_f32(p3.add(off), vsubq_f32(d02, d13));
+        // SAFETY: all seven slices are equal-length (asserted at the
+        // dispatch site) and `pairs·2 ≤ d0.len()`, so every 4-float
+        // access is in bounds; `Complex32` is `repr(C)` of two `f32`s.
+        unsafe {
+            for q in 0..pairs {
+                let off = q * 4;
+                let t0 = vld1q_f32(p0.add(off));
+                let t1 = cmul(vld1q_f32(p1.add(off)), vld1q_f32(q1.add(off)));
+                let t2 = cmul(vld1q_f32(p2.add(off)), vld1q_f32(q2.add(off)));
+                let t3 = cmul(vld1q_f32(p3.add(off)), vld1q_f32(q3.add(off)));
+                let s02 = vaddq_f32(t0, t2);
+                let d02 = vsubq_f32(t0, t2);
+                let s13 = vaddq_f32(t1, t3);
+                let d = vsubq_f32(t1, t3);
+                let d13 = if inverse { mul_i(d) } else { mul_neg_i(d) };
+                vst1q_f32(p0.add(off), vaddq_f32(s02, s13));
+                vst1q_f32(p1.add(off), vaddq_f32(d02, d13));
+                vst1q_f32(p2.add(off), vsubq_f32(s02, s13));
+                vst1q_f32(p3.add(off), vsubq_f32(d02, d13));
+            }
         }
         let done = pairs * 2;
         super::butterfly_radix4_scalar(
@@ -594,19 +685,24 @@ mod neon {
         let pz3 = z3.as_mut_ptr() as *mut f32;
         let pw1 = w1.as_ptr() as *const f32;
         let pw3 = w3.as_ptr() as *const f32;
-        for q in 0..pairs {
-            let off = q * 4;
-            let t1 = cmul(vld1q_f32(pz1.add(off)), vld1q_f32(pw1.add(off)));
-            let t3 = cmul(vld1q_f32(pz3.add(off)), vld1q_f32(pw3.add(off)));
-            let s = vaddq_f32(t1, t3);
-            let d = vsubq_f32(t1, t3);
-            let rot = if inverse { mul_i(d) } else { mul_neg_i(d) };
-            let a = vld1q_f32(pu0.add(off));
-            let b = vld1q_f32(pu1.add(off));
-            vst1q_f32(pu0.add(off), vaddq_f32(a, s));
-            vst1q_f32(pz1.add(off), vsubq_f32(a, s));
-            vst1q_f32(pu1.add(off), vaddq_f32(b, rot));
-            vst1q_f32(pz3.add(off), vsubq_f32(b, rot));
+        // SAFETY: all six slices are equal-length (asserted at the
+        // dispatch site) and `pairs·2 ≤ u0.len()`, so every 4-float
+        // access is in bounds; `Complex32` is `repr(C)` of two `f32`s.
+        unsafe {
+            for q in 0..pairs {
+                let off = q * 4;
+                let t1 = cmul(vld1q_f32(pz1.add(off)), vld1q_f32(pw1.add(off)));
+                let t3 = cmul(vld1q_f32(pz3.add(off)), vld1q_f32(pw3.add(off)));
+                let s = vaddq_f32(t1, t3);
+                let d = vsubq_f32(t1, t3);
+                let rot = if inverse { mul_i(d) } else { mul_neg_i(d) };
+                let a = vld1q_f32(pu0.add(off));
+                let b = vld1q_f32(pu1.add(off));
+                vst1q_f32(pu0.add(off), vaddq_f32(a, s));
+                vst1q_f32(pz1.add(off), vsubq_f32(a, s));
+                vst1q_f32(pu1.add(off), vaddq_f32(b, rot));
+                vst1q_f32(pz3.add(off), vsubq_f32(b, rot));
+            }
         }
         let done = pairs * 2;
         super::split_radix_combine_scalar(
@@ -624,9 +720,14 @@ mod neon {
         let pairs = a.len() / 2;
         let pa = a.as_mut_ptr() as *mut f32;
         let pb = b.as_ptr() as *const f32;
-        for q in 0..pairs {
-            let off = q * 4;
-            vst1q_f32(pa.add(off), cmul(vld1q_f32(pa.add(off)), vld1q_f32(pb.add(off))));
+        // SAFETY: `a` and `b` are equal-length (asserted at the dispatch
+        // site) and `pairs·2 ≤ a.len()`, so every 4-float access is in
+        // bounds; `Complex32` is `repr(C)` of two `f32`s.
+        unsafe {
+            for q in 0..pairs {
+                let off = q * 4;
+                vst1q_f32(pa.add(off), cmul(vld1q_f32(pa.add(off)), vld1q_f32(pb.add(off))));
+            }
         }
         let done = pairs * 2;
         super::pointwise_mul_scalar(&mut a[done..], &b[done..]);
@@ -635,10 +736,14 @@ mod neon {
     pub(super) unsafe fn scale_in_place(x: &mut [Complex32], s: f32) {
         let pairs = x.len() / 2;
         let px = x.as_mut_ptr() as *mut f32;
-        let vs = vdupq_n_f32(s);
-        for q in 0..pairs {
-            let off = q * 4;
-            vst1q_f32(px.add(off), vmulq_f32(vld1q_f32(px.add(off)), vs));
+        // SAFETY: `pairs·2 ≤ x.len()`, so every 4-float access is in
+        // bounds; `Complex32` is `repr(C)` of two `f32`s.
+        unsafe {
+            let vs = vdupq_n_f32(s);
+            for q in 0..pairs {
+                let off = q * 4;
+                vst1q_f32(px.add(off), vmulq_f32(vld1q_f32(px.add(off)), vs));
+            }
         }
         let done = pairs * 2;
         super::scale_in_place_scalar(&mut x[done..], s);

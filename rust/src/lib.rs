@@ -14,6 +14,10 @@
 //! the data-flow trace of a scatter-variant timestep.
 
 #![warn(missing_docs)]
+// Every `unsafe` operation must sit in its own `unsafe { }` block with a
+// `// SAFETY:` justification, even inside `unsafe fn` — the granularity
+// the Miri job in `.github/workflows/analysis.yml` audits.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baseline;
 pub mod bench_harness;

@@ -274,7 +274,10 @@ fn cmd_fft(args: &Args) -> Result<()> {
         .build()?
         .run()?;
     println!("{}", report.summary);
-    let cp = report.timings.plane_critical_path().expect("2-D transform has plane timings");
+    let cp = report
+        .timings
+        .plane_critical_path()
+        .ok_or_else(|| anyhow::anyhow!("2-D transform report carries no plane timings"))?;
     println!(
         "critical path: total {:.2} ms  (fft1 {:.2} | comm {:.2} | transpose {:.2} | fft2 {:.2})",
         cp.total_us / 1e3,
@@ -318,7 +321,10 @@ fn cmd_fft3(args: &Args) -> Result<()> {
         .build()?
         .run()?;
     println!("{}", report.summary);
-    let cp = report.timings.pencil_critical_path().expect("3-D transform has pencil timings");
+    let cp = report
+        .timings
+        .pencil_critical_path()
+        .ok_or_else(|| anyhow::anyhow!("3-D transform report carries no pencil timings"))?;
     println!(
         "critical path: total {:.2} ms  (fftz {:.2} | t1 {:.2} (place {:.2}) | \
          ffty {:.2} | t2 {:.2} (place {:.2}) | fftx {:.2})",

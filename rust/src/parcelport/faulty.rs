@@ -133,6 +133,11 @@ impl Parcelport for FaultyPort {
         self.inner.n_localities()
     }
 
+    fn uid(&self) -> u64 {
+        // One logical fabric, one id: faults only perturb timing.
+        self.inner.uid()
+    }
+
     fn send(&self, parcel: Parcel) {
         let id = self.next_msg.fetch_add(1, Ordering::Relaxed);
         let us = self.delay_us(id, parcel.src);

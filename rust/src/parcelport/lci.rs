@@ -20,6 +20,7 @@ pub struct LciParcelport {
     mailboxes: Vec<Mailbox>,
     stats: PortStats,
     net: Option<NetModel>,
+    uid: u64,
 }
 
 impl LciParcelport {
@@ -30,6 +31,7 @@ impl LciParcelport {
             mailboxes: (0..n_localities).map(|_| Mailbox::new()).collect(),
             stats: PortStats::default(),
             net,
+            uid: super::next_port_uid(),
         }
     }
 }
@@ -41,6 +43,10 @@ impl Parcelport for LciParcelport {
 
     fn n_localities(&self) -> usize {
         self.mailboxes.len()
+    }
+
+    fn uid(&self) -> u64 {
+        self.uid
     }
 
     fn send(&self, parcel: Parcel) {

@@ -97,6 +97,15 @@ pub trait Parcelport: Send + Sync {
     /// Number of localities the fabric connects.
     fn n_localities(&self) -> usize;
 
+    /// Process-unique fabric identity: stable for the fabric's lifetime
+    /// and never reused within the process (unlike an `Arc` address), so
+    /// diagnostics — notably the conformance checker's per-fabric
+    /// wait-for graph ([`crate::collectives::conformance`]) — can key
+    /// state by it without confusing a dead fabric with a new one that
+    /// reuses its allocation. Decorators (stats scopes, fault injectors)
+    /// forward their inner fabric's id: one logical fabric, one id.
+    fn uid(&self) -> u64;
+
     /// Queue a parcel for delivery. Payload semantics (copy vs. share)
     /// are port-specific — that difference is the benchmark.
     fn send(&self, parcel: Parcel);
@@ -113,6 +122,14 @@ pub trait Parcelport: Send + Sync {
 
     /// Direct mailbox access (runtime internals, tests).
     fn mailbox(&self, at: LocalityId) -> &Mailbox;
+}
+
+/// Allocate a fresh [`Parcelport::uid`] (called by port constructors;
+/// decorators forward instead).
+pub(crate) fn next_port_uid() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Build a fabric of the given kind.

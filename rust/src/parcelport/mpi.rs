@@ -39,6 +39,7 @@ pub struct MpiParcelport {
     net: Option<NetModel>,
     /// Parked rendezvous payloads awaiting CTS.
     pending: Mutex<HashMap<PendingKey, Payload>>,
+    uid: u64,
 }
 
 impl MpiParcelport {
@@ -50,6 +51,7 @@ impl MpiParcelport {
             stats: PortStats::default(),
             net,
             pending: Mutex::new(HashMap::new()),
+            uid: super::next_port_uid(),
         }
     }
 
@@ -76,6 +78,10 @@ impl Parcelport for MpiParcelport {
 
     fn n_localities(&self) -> usize {
         self.mailboxes.len()
+    }
+
+    fn uid(&self) -> u64 {
+        self.uid
     }
 
     fn send(&self, parcel: Parcel) {

@@ -44,6 +44,11 @@ impl Parcelport for ScopedPort {
         self.inner.n_localities()
     }
 
+    fn uid(&self) -> u64 {
+        // One logical fabric, one id: the scope only mirrors counters.
+        self.inner.uid()
+    }
+
     fn send(&self, parcel: Parcel) {
         self.scope.record_send(parcel.payload.len());
         self.inner.send(parcel);

@@ -33,6 +33,7 @@ use std::thread::JoinHandle;
 pub struct TcpParcelport {
     inner: Arc<Inner>,
     readers: Mutex<Vec<JoinHandle<()>>>,
+    uid: u64,
 }
 
 struct Inner {
@@ -131,7 +132,7 @@ impl TcpParcelport {
             }
         }
 
-        Ok(Self { inner, readers: Mutex::new(readers) })
+        Ok(Self { inner, readers: Mutex::new(readers), uid: super::next_port_uid() })
     }
 }
 
@@ -163,6 +164,10 @@ impl Parcelport for TcpParcelport {
 
     fn n_localities(&self) -> usize {
         self.inner.n
+    }
+
+    fn uid(&self) -> u64 {
+        self.uid
     }
 
     fn send(&self, parcel: Parcel) {

@@ -495,7 +495,13 @@ fn dispatch_job(world: &Communicator, rank: usize, job: &Arc<JobEntry>, shared: 
     std::thread::Builder::new()
         .name(format!("fft-job{}-r{rank}", job.id))
         .spawn(move || {
+            // Label the leased pool pair for the duration of the rank's
+            // run: if an armed conformance checker catches this thread
+            // in a cross-job wait cycle, the diagnosis names the lease.
+            let lease =
+                crate::collectives::conformance::lease(&format!("job {} pool lease", job.id));
             run_job_rank(comm, &scope, &job, &shared);
+            drop(lease);
             return_pools(&shared, width, chunk, shadow);
         })
         .expect("spawn job rank thread");

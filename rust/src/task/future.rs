@@ -36,7 +36,9 @@
 //! value ahead of later continuations, in which case those are skipped.
 
 use super::pool::ThreadPool;
-use std::sync::{Arc, Condvar, Mutex};
+// Via the loom shim: `tests/loom.rs` model-checks this cell's
+// interleavings by swapping in mock primitives under `--cfg loom`.
+use crate::util::sync::{Arc, Condvar, Mutex};
 
 /// Queued continuation: self-contained, re-acquires the state lock only
 /// to clone the value (never held while user code runs).

@@ -12,12 +12,14 @@
 //! pool per process" model, instead of spawning OS threads per sweep).
 
 use super::future::{Promise, TaskFuture};
+// Via the loom shim: `tests/loom.rs` model-checks the queue/worker
+// interleavings by swapping in mock primitives under `--cfg loom`.
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
 use std::any::Any;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::JoinHandle;
+use std::sync::OnceLock;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -46,7 +48,7 @@ struct QueueState {
 /// A fixed pool of worker threads.
 pub struct ThreadPool {
     queue: Arc<Queue>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     size: usize,
 }
 
@@ -61,7 +63,7 @@ impl ThreadPool {
         let workers = (0..size)
             .map(|i| {
                 let q = Arc::clone(&queue);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("hpx-worker-{i}"))
                     .spawn(move || worker_loop(&q))
                     .expect("failed to spawn worker thread")

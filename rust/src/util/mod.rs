@@ -8,6 +8,7 @@
 
 pub mod bytes;
 pub mod rng;
+pub(crate) mod sync;
 pub mod testkit;
 
 pub use bytes::{bytes_to_f32, f32_to_bytes};

@@ -1,0 +1,20 @@
+//! Sync-primitive indirection for `loom` model checking.
+//!
+//! The promise/future cell ([`crate::task`]) and the worker pool are the
+//! two pieces of hand-rolled blocking synchronization in the codebase;
+//! `tests/loom.rs` exhaustively model-checks their interleavings. Loom
+//! works by substituting its own mock `Mutex`/`Condvar`/`Arc`/threads,
+//! so those modules import the primitives from here instead of
+//! `std::sync`: a plain build re-exports `std`, a `--cfg loom` build
+//! (CI's `loom-tests` job) re-exports the mocks. Nothing else changes —
+//! the checked code is byte-for-byte the production code.
+
+#[cfg(loom)]
+pub(crate) use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+pub(crate) use loom::thread;
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(loom))]
+pub(crate) use std::thread;

@@ -84,6 +84,12 @@ pub fn with_watchdog<T: Send + 'static>(
             // name, rank, tag, chunk) — far more actionable than a bare
             // timeout. Empty unless tracing was enabled.
             let mut dump = String::new();
+            // If an armed conformance checker can see a wait-for cycle,
+            // lead with the typed diagnosis — it names both sides of the
+            // deadlock (and any held pool leases), not just our spans.
+            if let Some(d) = crate::collectives::conformance::diagnose() {
+                dump.push_str(&format!("\n  deadlock diagnosis: {d}"));
+            }
             for s in crate::obs::open_spans() {
                 dump.push_str(&format!(
                     "\n  open span: {}/{} rank {} tag {} chunk {} (started {:.1} µs ago)",
@@ -182,6 +188,34 @@ mod tests {
             .expect("timeout panic carries a String payload");
         assert!(msg.contains("likely hang"), "{msg}");
         assert!(msg.contains("open span: t_wd/recv rank 1 tag 9 chunk 3"), "{msg}");
+    }
+
+    // Requires the real conformance checker (stubbed out of plain
+    // release builds, where no diagnosis can ever be stored).
+    #[cfg(any(debug_assertions, feature = "conformance"))]
+    #[test]
+    fn watchdog_timeout_reports_stored_deadlock_diagnosis() {
+        use crate::collectives::conformance as conf;
+        let _arm = conf::arm();
+        // Deterministically store a diagnosis: build a two-rank wait
+        // cycle by hand and swallow the panic the closing edge raises.
+        let _e1 = conf::on_recv_enter(0xD0C, 0, 0, 1, 7);
+        let closing = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _e2 = conf::on_recv_enter(0xD0C, 0, 1, 0, 9);
+        }));
+        assert!(closing.is_err(), "closing the cycle must panic");
+        let payload = std::panic::catch_unwind(|| {
+            with_watchdog("stuck-deadlocked", std::time::Duration::from_millis(50), || {
+                std::thread::sleep(std::time::Duration::from_secs(2));
+            });
+        })
+        .expect_err("watchdog must time out");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("timeout panic carries a String payload");
+        assert!(msg.contains("deadlock diagnosis: wait-for cycle across 2 rank(s)"), "{msg}");
+        assert!(msg.contains("rank 1 waits on rank 0 (tag 9)"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,106 @@
+//! Loom model-checking of the promise/future cell and the worker pool.
+//!
+//! Compiled and run only under `RUSTFLAGS="--cfg loom"` (CI's
+//! `loom-tests` job, which adds the `loom` dev-dependency on the fly —
+//! the offline build image does not carry it):
+//!
+//! ```text
+//! cargo add loom --dev
+//! RUSTFLAGS="--cfg loom" cargo test --test loom --release
+//! ```
+//!
+//! Under that cfg, `src/util/sync.rs` swaps `std::sync` for loom's mock
+//! primitives inside `task/future.rs` and `task/pool.rs`, and
+//! `loom::model` exhaustively explores every thread interleaving of the
+//! bodies below — the machine-checked version of the reentrancy and
+//! anti-starvation arguments in the `task::future` module docs.
+
+#![cfg(loom)]
+
+use hpx_fft::task::{Promise, ThreadPool};
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// A consuming `get` racing `Promise::set` observes the value on every
+/// interleaving — no lost wakeup, no double-take.
+#[test]
+fn promise_set_vs_consuming_get() {
+    loom::model(|| {
+        let (p, f) = Promise::new();
+        let getter = thread::spawn(move || f.get());
+        p.set(7usize);
+        assert_eq!(getter.join().unwrap(), 7);
+    });
+}
+
+/// The draining protocol: a consuming `get` racing `set` can never
+/// starve an already-registered continuation of the value. This is the
+/// `State::draining` hold-back, model-checked.
+#[test]
+fn continuation_never_starved_by_racing_get() {
+    loom::model(|| {
+        let (p, f) = Promise::new();
+        let seen = Arc::new(AtomicUsize::new(0));
+        let s = Arc::clone(&seen);
+        f.then_inline(move |&v: &usize| {
+            s.store(v, Ordering::SeqCst);
+        });
+        let f2 = f.clone();
+        let getter = thread::spawn(move || f2.get());
+        p.set(5);
+        assert_eq!(getter.join().unwrap(), 5);
+        assert_eq!(seen.load(Ordering::SeqCst), 5, "continuation lost the race for the value");
+    });
+}
+
+/// `wait` (non-consuming) concurrent with a consuming `get`: both must
+/// return, and the consumer gets the value exactly once.
+#[test]
+fn wait_and_get_coexist() {
+    loom::model(|| {
+        let (p, f) = Promise::new();
+        let f2 = f.clone();
+        let waiter = thread::spawn(move || f2.wait());
+        p.set(3usize);
+        waiter.join().unwrap();
+        assert_eq!(f.get(), 3);
+    });
+}
+
+/// `ThreadPool::run_scoped`: every enqueued borrowing task runs to
+/// completion before the call returns, on every interleaving of the
+/// single worker against the submitting thread — the join-on-drop
+/// structure that makes the `'env` transmute in `run_scoped` sound.
+#[test]
+fn run_scoped_joins_every_task() {
+    loom::model(|| {
+        let pool = ThreadPool::new(1);
+        let mut data = [0usize; 2];
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                .iter_mut()
+                .map(|slot| {
+                    Box::new(move || {
+                        *slot += 1;
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        assert_eq!(data, [1, 1], "a scoped task escaped the join barrier");
+    });
+}
+
+/// Queue handoff: a spawned job's result is visible through the future
+/// on every worker/submitter interleaving (including pool teardown
+/// racing the final `get`).
+#[test]
+fn spawn_result_survives_pool_drop() {
+    loom::model(|| {
+        let pool = ThreadPool::new(1);
+        let f = pool.spawn(|| 21usize);
+        drop(pool);
+        assert_eq!(f.get(), 21);
+    });
+}

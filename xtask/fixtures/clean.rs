@@ -1,0 +1,56 @@
+//! Near-misses for every rule — the self-test asserts this file yields
+//! zero findings. Not compiled — scanned as data.
+
+/// Unconditional collective: fine (every rank reaches it).
+fn spmd_ok(comm: &Communicator) {
+    comm.barrier();
+    // Rank used to pick data, not to skip the collective: fine.
+    let mine = comm.rank();
+    if mine == 0 {
+        log_leader();
+    }
+    comm.all_gather(mine);
+}
+
+/// Lease released (scope ends) before the collective: fine.
+fn lease_ok(comm: &Communicator, shared: &Shared) {
+    {
+        let (pool, shadow) = lease_pools(shared, 4);
+        compute(pool, shadow);
+    }
+    comm.all_gather(done());
+}
+
+/// Small shifts and strings are not tag spans.
+fn rawtag_ok() -> u64 {
+    let block = 1u64 << 16;
+    let label = "span is 1 << 32 wide"; // literal text: blanked, ignored
+    // An explicitly waived use keeps working under suppression:
+    // xtask: allow(raw-tag-literal)
+    let waived = 1 << 32;
+    block + waived + label.len() as u64
+}
+
+/// `unwrap` outside harness paths and inside tests is out of scope.
+fn hotpath_unmarked_may_allocate(n: usize) -> Vec<u64> {
+    let mut v = Vec::with_capacity(n);
+    v.extend(0..n as u64);
+    v
+}
+
+// xtask: hot_path
+fn marked_kernel_allocation_free(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.mul_add(2.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    /// Test code may unwrap and may exercise deprecated shims.
+    #[allow(deprecated)]
+    fn in_tests_everything_is_relaxed() {
+        let v: usize = "7".parse().unwrap();
+        assert_eq!(v, 7);
+    }
+}

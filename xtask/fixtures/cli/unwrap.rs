@@ -1,0 +1,9 @@
+//! Seeded violation for `unwrap-in-harness` (`xtask lint --self-test`).
+//! Lives under `cli/` because the rule is scoped to user-input
+//! harnesses. Not compiled — scanned as data.
+
+fn parse_size(raw: &str) -> usize {
+    // BAD: a mistyped flag value panics instead of producing a typed
+    // error that names the flag.
+    raw.parse::<usize>().unwrap()
+}

@@ -1,0 +1,8 @@
+//! Seeded violation for `deprecated-shim` (`xtask lint --self-test`).
+//! Not compiled — scanned as data.
+
+// BAD: opts back into a quarantined compatibility shim in library code.
+#[allow(deprecated)]
+fn call_legacy_entry_point() {
+    legacy_transform();
+}

@@ -1,0 +1,9 @@
+//! Seeded violation for `hot-path-alloc` (`xtask lint --self-test`).
+//! Not compiled — scanned as data.
+
+// xtask: hot_path
+fn butterfly_pass(src: &[Complex32], dst: &mut [Complex32]) {
+    // BAD: clones the input inside a marked steady-state kernel.
+    let scratch = src.to_vec();
+    dst.copy_from_slice(&scratch);
+}

@@ -1,0 +1,11 @@
+//! Seeded violation for `lease-blocking-collective`
+//! (`xtask lint --self-test`). Not compiled — scanned as data.
+
+fn hold_and_block(comm: &Communicator, shared: &Shared) {
+    let (pool, shadow) = lease_pools(shared, 4);
+    // BAD: blocking collective while the lease above is live — a peer
+    // job waiting for these pools can never run the rank this
+    // all_gather is waiting on.
+    let gathered = comm.all_gather(local_rows());
+    consume(pool, shadow, gathered);
+}

@@ -1,0 +1,10 @@
+//! Seeded violation for `raw-tag-literal` (`xtask lint --self-test`).
+//! Not compiled — scanned as data.
+
+/// BAD: re-derives the chunk-tag span instead of importing
+/// `collectives::tags::CHUNK_TAG_SPAN`.
+const LOCAL_SPAN: u64 = 1 << 32;
+
+fn base_for(index: u64) -> u64 {
+    index * LOCAL_SPAN
+}

@@ -1,0 +1,10 @@
+//! Seeded violation for `spmd-collective` (`xtask lint --self-test`).
+//! Not compiled into any crate — scanned as data by the lint pass.
+
+fn diverge(comm: &Communicator) {
+    // BAD: only rank 0 reaches the barrier; ranks 1.. hang in their
+    // next collective waiting for a peer that is parked here.
+    if comm.rank() == 0 {
+        comm.barrier();
+    }
+}

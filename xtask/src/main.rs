@@ -1,0 +1,993 @@
+//! `xtask lint` — dependency-free static-analysis pass over `rust/src`.
+//!
+//! The rule catalog (see `docs/ARCHITECTURE.md` § Correctness tooling):
+//!
+//! | rule                        | enforces                                             |
+//! |-----------------------------|------------------------------------------------------|
+//! | `spmd-collective`           | no collective call under a rank-conditional branch   |
+//! | `lease-blocking-collective` | no blocking collective while a pool lease is live    |
+//! | `raw-tag-literal`           | tag arithmetic only via `collectives::tags`          |
+//! | `deprecated-shim`           | no `#[allow(deprecated)]` shim usage in the library  |
+//! | `unwrap-in-harness`         | no `unwrap`/`expect` in CLI/bench-harness modules    |
+//! | `hot-path-alloc`            | no allocation in `// xtask: hot_path`-marked fns     |
+//!
+//! The pass works on a comment/string-blanked copy of each file (so
+//! nothing inside literals or docs can trigger a rule), skips
+//! `#[cfg(test)] mod` bodies, and honors line-scoped suppressions:
+//! a `// xtask: allow(<rule>)` comment on the offending line or the
+//! line above silences that one finding.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run -p xtask -- lint                 # scan rust/src, exit 1 on findings
+//! cargo run -p xtask -- lint --json out.json # also write a machine-readable report
+//! cargo run -p xtask -- lint --self-test     # prove each rule catches its fixture
+//! ```
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const RULE_SPMD: &str = "spmd-collective";
+const RULE_LEASE: &str = "lease-blocking-collective";
+const RULE_RAWTAG: &str = "raw-tag-literal";
+const RULE_DEPRECATED: &str = "deprecated-shim";
+const RULE_UNWRAP: &str = "unwrap-in-harness";
+const RULE_HOTPATH: &str = "hot-path-alloc";
+
+const ALL_RULES: [&str; 6] =
+    [RULE_SPMD, RULE_LEASE, RULE_RAWTAG, RULE_DEPRECATED, RULE_UNWRAP, RULE_HOTPATH];
+
+/// Blocking collective entry points on `Communicator` (the `_async`
+/// variants are matched by full method name, so they never hit).
+const COLLECTIVES: [&str; 12] = [
+    "split",
+    "split_with_span",
+    "try_split",
+    "try_split_with_span",
+    "all_to_all",
+    "all_gather",
+    "all_reduce",
+    "scatter",
+    "gather",
+    "broadcast",
+    "reduce",
+    "barrier",
+];
+
+/// One diagnostic: `file:line: [rule] message`.
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexical preprocessing
+// ---------------------------------------------------------------------------
+
+/// Blank comments, string/char literals, and raw strings to spaces,
+/// preserving length and newlines, so the rules can do positional
+/// matching without tripping on text inside literals or docs.
+fn strip(code: &str) -> Vec<u8> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let blank = |out: &mut [u8], a: usize, z: usize| {
+        for slot in out[a..z.min(n)].iter_mut() {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    };
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            // Raw string r"..." / r#"..."# (or a raw identifier — skipped).
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let mut close = vec![b'"'];
+                close.extend(std::iter::repeat(b'#').take(hashes));
+                let end = find_bytes(&b[j..], &close).map(|k| j + k + close.len()).unwrap_or(n);
+                blank(&mut out, i + 1, end);
+                i = end;
+            } else {
+                i += 1;
+            }
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i + 1, j.saturating_sub(1));
+            i = j;
+        } else if c == b'\'' {
+            if i + 2 < n && b[i + 1] == b'\\' {
+                // Escaped char literal '\n', '\u{..}', ...
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i + 1, j);
+                i = j + 1;
+            } else if i + 2 < n && b[i + 2] == b'\'' {
+                // Simple char literal 'x'.
+                blank(&mut out, i + 1, i + 2);
+                i += 3;
+            } else {
+                // Lifetime.
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn find_bytes(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (0..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Whether `word` occurs at `pos` with identifier boundaries.
+fn word_at(clean: &[u8], pos: usize, word: &str) -> bool {
+    let w = word.as_bytes();
+    if pos + w.len() > clean.len() || &clean[pos..pos + w.len()] != w {
+        return false;
+    }
+    let before_ok = pos == 0 || !is_ident(clean[pos - 1]);
+    let after_ok = pos + w.len() == clean.len() || !is_ident(clean[pos + w.len()]);
+    before_ok && after_ok
+}
+
+/// All boundary-respecting occurrences of `word`.
+fn find_words(clean: &[u8], word: &str) -> Vec<usize> {
+    let first = word.as_bytes()[0];
+    (0..clean.len())
+        .filter(|&i| clean[i] == first && word_at(clean, i, word))
+        .collect()
+}
+
+fn contains_word(clean: &[u8], word: &str) -> bool {
+    let first = word.as_bytes()[0];
+    (0..clean.len()).any(|i| clean[i] == first && word_at(clean, i, word))
+}
+
+/// Position of the `}` matching the `{` at `open` (or end of input).
+fn matching_brace(clean: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < clean.len() {
+        match clean[k] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    clean.len()
+}
+
+/// 1-based line number of byte `pos`.
+fn line_of(code: &str, pos: usize) -> usize {
+    code.as_bytes()[..pos.min(code.len())].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// Byte ranges of `#[cfg(test…)] mod … { … }` bodies — rule-exempt.
+fn test_ranges(clean: &[u8]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0;
+    let open = b"#[cfg(";
+    while let Some(off) = find_bytes(&clean[i..], open) {
+        let at = i + off;
+        let inner = at + open.len();
+        i = inner;
+        let is_test = word_at(clean, inner, "test")
+            || (word_at(clean, inner, "all")
+                && clean.get(inner + 3) == Some(&b'(')
+                && word_at(clean, inner + 4, "test"));
+        if !is_test {
+            continue;
+        }
+        // Find the attribute's closing `]`, then require a `mod` item.
+        let Some(close) = clean[inner..].iter().position(|&c| c == b']') else { continue };
+        let mut j = inner + close + 1;
+        loop {
+            while j < clean.len() && clean[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if clean.get(j) == Some(&b'#') && clean.get(j + 1) == Some(&b'[') {
+                match clean[j..].iter().position(|&c| c == b']') {
+                    Some(e) => j += e + 1,
+                    None => break,
+                }
+            } else {
+                break;
+            }
+        }
+        if word_at(clean, j, "pub") {
+            j += 3;
+            while j < clean.len() && clean[j].is_ascii_whitespace() {
+                j += 1;
+            }
+        }
+        if !word_at(clean, j, "mod") {
+            continue;
+        }
+        let Some(brace) = clean[j..].iter().position(|&c| c == b'{') else { continue };
+        ranges.push((at, matching_brace(clean, j + brace)));
+    }
+    ranges
+}
+
+fn in_test(ranges: &[(usize, usize)], pos: usize) -> bool {
+    ranges.iter().any(|&(a, b)| a <= pos && pos <= b)
+}
+
+/// `// xtask: allow(<rule>)` markers, as (line, rule) pairs, read from
+/// the RAW code (markers live in comments, which `strip` blanks).
+fn allow_markers(code: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (idx, line) in code.lines().enumerate() {
+        if let Some(at) = line.find("xtask: allow(") {
+            let rest = &line[at + "xtask: allow(".len()..];
+            if let Some(end) = rest.find(')') {
+                out.push((idx + 1, rest[..end].trim().to_string()));
+            }
+        }
+    }
+    out
+}
+
+fn suppressed(markers: &[(usize, String)], finding: &Finding) -> bool {
+    markers
+        .iter()
+        .any(|(l, r)| r == finding.rule && (*l == finding.line || *l + 1 == finding.line))
+}
+
+// ---------------------------------------------------------------------------
+// Call-site scanning
+// ---------------------------------------------------------------------------
+
+/// Method-call sites `.name(`/`.name::<` in `clean[range]`, returned as
+/// (position of `.`, method name).
+fn method_calls(clean: &[u8], from: usize, to: usize) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let to = to.min(clean.len());
+    for i in from..to {
+        if clean[i] != b'.' {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < to && is_ident(clean[j]) {
+            j += 1;
+        }
+        if j == i + 1 {
+            continue;
+        }
+        let mut k = j;
+        while k < to && (clean[k] == b' ' || clean[k] == b'\n') {
+            k += 1;
+        }
+        if k < to && (clean[k] == b'(' || clean[k] == b':' || clean[k] == b'<') {
+            out.push((i, String::from_utf8_lossy(&clean[i + 1..j]).into_owned()));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// SPMD discipline: a collective call site lexically inside an `if`/
+/// `while` whose condition mentions the caller's rank diverges the
+/// ranks' collective schedules — every rank must reach every collective
+/// in the same order. (The collectives' own internals are exempt: the
+/// implementation layer legitimately branches on rank.)
+fn rule_spmd(rel: &str, code: &str, clean: &[u8], tr: &[(usize, usize)]) -> Vec<Finding> {
+    if rel.starts_with("collectives/") {
+        return Vec::new();
+    }
+    let mut scopes: Vec<(usize, usize, usize)> = Vec::new(); // (open, close, kw)
+    for kw in ["if", "while"] {
+        for pos in find_words(clean, kw) {
+            // Condition runs from the keyword to the first `{` at
+            // paren/bracket depth 0.
+            let mut depth = 0i32;
+            let mut k = pos + kw.len();
+            while k < clean.len() {
+                match clean[k] {
+                    b'(' | b'[' => depth += 1,
+                    b')' | b']' => depth -= 1,
+                    b'{' if depth == 0 => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            let cond = &clean[pos + kw.len()..k.min(clean.len())];
+            if contains_word(cond, "rank")
+                || contains_word(cond, "locality")
+                || contains_word(cond, "my_global")
+            {
+                scopes.push((k, matching_brace(clean, k), pos));
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (dot, name) in method_calls(clean, 0, clean.len()) {
+        if !COLLECTIVES.contains(&name.as_str()) || in_test(tr, dot) {
+            continue;
+        }
+        for &(a, b, kw) in &scopes {
+            if a < dot && dot < b {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: line_of(code, dot),
+                    rule: RULE_SPMD,
+                    message: format!(
+                        "collective `.{name}` under the rank-conditional branch opened on \
+                         line {} — every rank must reach every collective",
+                        line_of(code, kw)
+                    ),
+                });
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// No blocking collective while a pool lease is live in the same scope:
+/// a rank blocked in a collective while holding a leased pool can
+/// starve the job that needs that pool to unblock the collective's
+/// peer — the cross-job deadlock the runtime conformance checker
+/// diagnoses dynamically (`collectives::conformance`).
+fn rule_lease(rel: &str, code: &str, clean: &[u8], tr: &[(usize, usize)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for pos in find_words(clean, "lease_pools") {
+        let mut k = pos + "lease_pools".len();
+        while k < clean.len() && clean[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        if clean.get(k) != Some(&b'(') {
+            continue;
+        }
+        // The lease is live from the call to the end of the enclosing
+        // scope (walk forward until brace depth goes negative).
+        let mut depth = 0i32;
+        let mut end = k;
+        while end < clean.len() {
+            match clean[end] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            end += 1;
+        }
+        for (dot, name) in method_calls(clean, k, end) {
+            if !COLLECTIVES.contains(&name.as_str()) || in_test(tr, dot) {
+                continue;
+            }
+            out.push(Finding {
+                file: rel.to_string(),
+                line: line_of(code, dot),
+                rule: RULE_LEASE,
+                message: format!(
+                    "blocking collective `.{name}` while the pool lease taken on line {} \
+                     is live — release the lease first or use the async variant",
+                    line_of(code, pos)
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Tag-space arithmetic must go through `collectives::tags` — a raw
+/// span literal (`1 << 32`, `1 << 48`, or their decimal/hex spellings)
+/// silently desynchronizes from the shared constants.
+fn rule_rawtag(rel: &str, code: &str, clean: &[u8], tr: &[(usize, usize)]) -> Vec<Finding> {
+    if rel == "collectives/tags.rs" {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut push = |pos: usize, lit: &str| {
+        if !in_test(tr, pos) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: line_of(code, pos),
+                rule: RULE_RAWTAG,
+                message: format!(
+                    "raw tag-span literal `{lit}` — use the named constants in \
+                     `collectives::tags`"
+                ),
+            });
+        }
+    };
+    // Shift form: `1[suffix] << (32|48)`.
+    let n = clean.len();
+    for i in 0..n.saturating_sub(1) {
+        if clean[i] != b'<' || clean[i + 1] != b'<' {
+            continue;
+        }
+        // Left operand: skip spaces back, then read the token.
+        let mut l = i;
+        while l > 0 && clean[l - 1] == b' ' {
+            l -= 1;
+        }
+        let mut start = l;
+        while start > 0 && is_ident(clean[start - 1]) {
+            start -= 1;
+        }
+        let lhs = &clean[start..l];
+        let lhs_ok = matches!(lhs, b"1" | b"1u64" | b"1u32" | b"1usize" | b"1i64");
+        // Right operand: skip spaces forward, read the number.
+        let mut r = i + 2;
+        while r < n && clean[r] == b' ' {
+            r += 1;
+        }
+        let mut stop = r;
+        while stop < n && is_ident(clean[stop]) {
+            stop += 1;
+        }
+        let rhs = &clean[r..stop];
+        if lhs_ok && (rhs == b"32" || rhs == b"48") {
+            push(start, &format!("1 << {}", String::from_utf8_lossy(rhs)));
+        }
+    }
+    for lit in ["4294967296", "281474976710656", "0x1_0000_0000"] {
+        let first = lit.as_bytes()[0];
+        for i in 0..n {
+            if clean[i] == first && word_at(clean, i, lit) {
+                push(i, lit);
+            }
+        }
+    }
+    out
+}
+
+/// The deprecated compatibility shims are quarantined: library code may
+/// not opt back into them with `#[allow(deprecated)]` (benches that
+/// exercise the shim path on purpose live outside `rust/src`).
+fn rule_deprecated(rel: &str, code: &str, clean: &[u8], tr: &[(usize, usize)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let needle = b"#[allow(deprecated)]";
+    let mut i = 0;
+    while let Some(off) = find_bytes(&clean[i..], needle) {
+        let at = i + off;
+        i = at + needle.len();
+        if !in_test(tr, at) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: line_of(code, at),
+                rule: RULE_DEPRECATED,
+                message: "`#[allow(deprecated)]` re-enables a quarantined shim — migrate to \
+                          the replacement API"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// CLI and bench-harness modules parse user input; a stray `unwrap`/
+/// `expect` there turns a bad flag into a panic instead of a typed
+/// error naming the flag.
+fn rule_unwrap(rel: &str, code: &str, clean: &[u8], tr: &[(usize, usize)]) -> Vec<Finding> {
+    let harness = rel == "main.rs"
+        || rel.starts_with("cli/")
+        || rel.starts_with("bench_harness/")
+        || rel.starts_with("config/");
+    if !harness {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (dot, name) in method_calls(clean, 0, clean.len()) {
+        if (name == "unwrap" || name == "expect") && !in_test(tr, dot) {
+            let line_start = code[..dot].rfind('\n').map(|p| p + 1).unwrap_or(0);
+            let line_end = code[dot..].find('\n').map(|p| dot + p).unwrap_or(code.len());
+            let snippet: String = code[line_start..line_end].trim().chars().take(90).collect();
+            out.push(Finding {
+                file: rel.to_string(),
+                line: line_of(code, dot),
+                rule: RULE_UNWRAP,
+                message: format!("`.{name}` in a user-input harness: {snippet}"),
+            });
+        }
+    }
+    out
+}
+
+/// Allocation hygiene in `// xtask: hot_path`-marked functions: the
+/// steady-state kernels must not allocate (the dynamic twin of this
+/// rule is `tests/alloc_free.rs`'s counting allocator).
+fn rule_hotpath(rel: &str, code: &str, clean: &[u8], _tr: &[(usize, usize)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut byte = 0usize;
+    for line in code.split_inclusive('\n') {
+        let marker = line.contains("xtask: hot_path");
+        let after = byte + line.len();
+        byte = after;
+        if !marker {
+            continue;
+        }
+        // The next `fn` at/after the marker line is the marked kernel.
+        let Some(fn_off) = find_words(&clean[after..], "fn").first().copied() else { continue };
+        let fn_pos = after + fn_off;
+        let Some(brace_off) = clean[fn_pos..].iter().position(|&c| c == b'{') else { continue };
+        let open = fn_pos + brace_off;
+        let close = matching_brace(clean, open);
+        let mut name_at = fn_pos + 2;
+        while name_at < clean.len() && clean[name_at].is_ascii_whitespace() {
+            name_at += 1;
+        }
+        let mut name_end = name_at;
+        while name_end < clean.len() && is_ident(clean[name_end]) {
+            name_end += 1;
+        }
+        let fn_name = String::from_utf8_lossy(&clean[name_at..name_end]).into_owned();
+        let mut push = |pos: usize, what: &str| {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: line_of(code, pos),
+                rule: RULE_HOTPATH,
+                message: format!("`{what}` allocates inside hot-path fn `{fn_name}`"),
+            });
+        };
+        for word in ["Vec", "Box"] {
+            for pos in find_words(&clean[open..close], word) {
+                let at = open + pos;
+                let rest = &clean[at + word.len()..close.min(clean.len())];
+                for assoc in [&b"::new"[..], &b"::with_capacity"[..]] {
+                    if rest.len() >= assoc.len() && &rest[..assoc.len()] == assoc {
+                        push(at, &format!("{word}{}", String::from_utf8_lossy(assoc)));
+                    }
+                }
+            }
+        }
+        for pos in find_words(&clean[open..close], "vec") {
+            let at = open + pos;
+            if clean.get(at + 3) == Some(&b'!') {
+                push(at, "vec!");
+            }
+        }
+        for (dot, name) in method_calls(clean, open, close) {
+            if name == "to_vec" || name == "clone" {
+                push(dot, &format!(".{name}()"));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Lint every `.rs` file under `root`; paths in findings are relative.
+fn scan(root: &Path) -> (usize, Vec<Finding>) {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files);
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let Ok(code) = fs::read_to_string(path) else { continue };
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let clean = strip(&code);
+        let tr = test_ranges(&clean);
+        let markers = allow_markers(&code);
+        for rule in [
+            rule_spmd,
+            rule_lease,
+            rule_rawtag,
+            rule_deprecated,
+            rule_unwrap,
+            rule_hotpath,
+        ] {
+            for f in rule(&rel, &code, &clean, &tr) {
+                if !suppressed(&markers, &f) {
+                    findings.push(f);
+                }
+            }
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    (files.len(), findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Hand-rolled report writer (the crate is dependency-free by design).
+fn write_json(path: &Path, root: &Path, files_scanned: usize, findings: &[Finding]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"root\": \"{}\",\n", json_escape(&root.display().to_string())));
+    s.push_str(&format!("  \"files_scanned\": {files_scanned},\n"));
+    s.push_str(&format!(
+        "  \"rules\": [{}],\n",
+        ALL_RULES.map(|r| format!("\"{r}\"")).join(", ")
+    ));
+    s.push_str("  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        s.push_str(if i == 0 { "\n" } else { ",\n" });
+        s.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.message)
+        ));
+    }
+    s.push_str(if findings.is_empty() { "]\n}\n" } else { "\n  ]\n}\n" });
+    if let Err(e) = fs::write(path, s) {
+        eprintln!("xtask: failed to write {}: {e}", path.display());
+    }
+}
+
+/// Locate `rust/src` from the current directory or from the workspace
+/// this binary was built in.
+fn default_root() -> PathBuf {
+    let cwd_rel = PathBuf::from("rust/src");
+    if cwd_rel.is_dir() {
+        return cwd_rel;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src")
+}
+
+fn fixtures_root() -> PathBuf {
+    let cwd_rel = PathBuf::from("xtask/fixtures");
+    if cwd_rel.is_dir() {
+        return cwd_rel;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+/// Prove every rule catches its seeded fixture and that the clean
+/// fixture (near-misses plus a suppression) produces no findings.
+fn self_test() -> ExitCode {
+    let root = fixtures_root();
+    let (files, findings) = scan(&root);
+    let expected: [(&str, &str); 6] = [
+        ("spmd.rs", RULE_SPMD),
+        ("lease.rs", RULE_LEASE),
+        ("rawtag.rs", RULE_RAWTAG),
+        ("deprecated.rs", RULE_DEPRECATED),
+        ("cli/unwrap.rs", RULE_UNWRAP),
+        ("hotpath.rs", RULE_HOTPATH),
+    ];
+    let mut failed = false;
+    for (file, rule) in expected {
+        let hit = findings.iter().any(|f| f.file == file && f.rule == rule);
+        println!("self-test: {rule:<28} in {file:<16} {}", if hit { "CAUGHT" } else { "MISSED" });
+        failed |= !hit;
+    }
+    let false_positives: Vec<_> = findings.iter().filter(|f| f.file == "clean.rs").collect();
+    for f in &false_positives {
+        println!("self-test: FALSE POSITIVE {f}");
+    }
+    failed |= !false_positives.is_empty();
+    println!(
+        "self-test: {files} fixture files, {} findings, {}",
+        findings.len(),
+        if failed { "FAILED" } else { "ok" }
+    );
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("lint") {
+        eprintln!("usage: xtask lint [--self-test] [--root PATH] [--json PATH]");
+        return ExitCode::from(2);
+    }
+    let mut root: Option<PathBuf> = None;
+    let mut json: Option<PathBuf> = None;
+    let mut selftest = false;
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--self-test" => selftest = true,
+            "--root" => root = it.next().map(PathBuf::from),
+            "--json" => json = it.next().map(PathBuf::from),
+            other => {
+                eprintln!("xtask: unknown argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if selftest {
+        return self_test();
+    }
+    let root = root.unwrap_or_else(default_root);
+    if !root.is_dir() {
+        eprintln!("xtask: lint root {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let (files, findings) = scan(&root);
+    for f in &findings {
+        println!("{}/{f}", root.display());
+    }
+    if let Some(path) = json {
+        write_json(&path, &root, files, &findings);
+        println!("report written to {}", path.display());
+    }
+    println!(
+        "xtask lint: {files} files, {} finding(s) across {} rules",
+        findings.len(),
+        ALL_RULES.len()
+    );
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(rel: &str, code: &str) -> Vec<Finding> {
+        let clean = strip(code);
+        let tr = test_ranges(&clean);
+        let markers = allow_markers(code);
+        let mut out = Vec::new();
+        for rule in [
+            rule_spmd,
+            rule_lease,
+            rule_rawtag,
+            rule_deprecated,
+            rule_unwrap,
+            rule_hotpath,
+        ] {
+            let found = rule(rel, code, &clean, &tr);
+            out.extend(found.into_iter().filter(|f| !suppressed(&markers, f)));
+        }
+        out
+    }
+
+    #[test]
+    fn strip_blanks_comments_and_strings_preserving_length() {
+        let code = "let x = \"1 << 32\"; // 1 << 32\nlet y = '\\n';";
+        let clean = strip(code);
+        assert_eq!(clean.len(), code.len());
+        let s = String::from_utf8(clean).unwrap();
+        assert!(!s.contains("1 << 32"), "{s}");
+        assert!(s.contains("let x ="), "{s}");
+        assert_eq!(s.matches('\n').count(), code.matches('\n').count());
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_and_lifetimes() {
+        let code = "fn f<'a>(s: &'a str) { let r = r#\"if rank { .barrier( }\"#; }";
+        let s = String::from_utf8(strip(code)).unwrap();
+        assert!(!s.contains("barrier"), "{s}");
+        assert!(s.contains("fn f<'a>"), "{s}");
+    }
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mods() {
+        let code = "fn a() {}\n#[cfg(test)]\nmod tests { fn b() { x.unwrap(); } }";
+        let clean = strip(code);
+        let tr = test_ranges(&clean);
+        assert_eq!(tr.len(), 1);
+        let pos = code.find("unwrap").unwrap();
+        assert!(in_test(&tr, pos));
+        assert!(!in_test(&tr, 0));
+    }
+
+    #[test]
+    fn test_ranges_cover_cfg_all_test_mods() {
+        let code = "#[cfg(all(test, any(debug_assertions, feature = \"conformance\")))]\n\
+                    mod t { fn b() { q.expect(\"x\"); } }";
+        let clean = strip(code);
+        let tr = test_ranges(&clean);
+        assert_eq!(tr.len(), 1, "gated test mod must be exempt");
+    }
+
+    #[test]
+    fn spmd_catches_rank_conditional_collective() {
+        let code = "fn f() { if rank == 0 { comm.barrier(); } }";
+        let out = lint_str("runtime/x.rs", code);
+        let shown: Vec<String> = out.iter().map(|f| f.to_string()).collect();
+        assert_eq!(out.len(), 1, "{shown:?}");
+        assert_eq!(out[0].rule, RULE_SPMD);
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn spmd_ignores_unconditional_and_collectives_layer() {
+        assert!(lint_str("runtime/x.rs", "fn f() { comm.barrier(); }").is_empty());
+        assert!(lint_str(
+            "collectives/comm.rs",
+            "fn f() { if rank == 0 { comm.barrier(); } }"
+        )
+        .is_empty());
+        // Condition not about rank: fine.
+        assert!(lint_str("runtime/x.rs", "fn f() { if n > 2 { comm.all_gather(v); } }").is_empty());
+    }
+
+    #[test]
+    fn lease_catches_blocking_collective_in_scope() {
+        let code = "fn f() { let (a, b) = lease_pools(&sh, 4);\n comm.all_gather(x); }";
+        let out = lint_str("runtime/x.rs", code);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RULE_LEASE);
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn lease_scope_ends_at_enclosing_brace() {
+        let code = "fn f() { let p = lease_pools(&sh, 4); }\nfn g() { comm.all_gather(x); }";
+        assert!(lint_str("runtime/x.rs", code).is_empty());
+    }
+
+    #[test]
+    fn rawtag_catches_span_literals_everywhere_but_tags_rs() {
+        for lit in ["1 << 32", "1u64 << 48", "4294967296", "0x1_0000_0000"] {
+            let code = format!("const S: u64 = {lit};");
+            let out = lint_str("hpx/parcel.rs", &code);
+            assert_eq!(out.len(), 1, "literal {lit}");
+            assert_eq!(out[0].rule, RULE_RAWTAG);
+        }
+        assert!(lint_str("collectives/tags.rs", "const S: u64 = 1 << 32;").is_empty());
+        // Unrelated shifts do not fire.
+        assert!(lint_str("hpx/parcel.rs", "const S: u64 = 1 << 16; let x = n << 32;").is_empty());
+    }
+
+    #[test]
+    fn deprecated_shim_flagged_outside_tests() {
+        let out = lint_str("dist_fft/driver.rs", "#[allow(deprecated)]\nfn f() {}");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RULE_DEPRECATED);
+        let test_only = "#[cfg(test)]\nmod tests { #[allow(deprecated)] fn f() {} }";
+        assert!(lint_str("dist_fft/driver.rs", test_only).is_empty());
+    }
+
+    #[test]
+    fn unwrap_scoped_to_harness_modules() {
+        let code = "fn f() { let v = s.parse::<u64>().unwrap(); }";
+        assert_eq!(lint_str("cli/args.rs", code).len(), 1);
+        assert_eq!(lint_str("bench_harness/fig3.rs", code).len(), 1);
+        assert_eq!(lint_str("main.rs", code).len(), 1);
+        assert!(lint_str("fft/plan.rs", code).is_empty(), "library code is out of scope");
+    }
+
+    #[test]
+    fn hotpath_marker_forbids_allocation() {
+        let code = "// xtask: hot_path\nfn kernel(x: &[u32]) { let y = x.to_vec(); }";
+        let out = lint_str("fft/simd.rs", code);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RULE_HOTPATH);
+        assert!(out[0].message.contains("kernel"), "{}", out[0].message);
+        // Unmarked functions may allocate freely.
+        assert!(lint_str("fft/simd.rs", "fn scratch() -> Vec<u32> { Vec::new() }").is_empty());
+        // Marked allocation-free kernels pass.
+        let clean = "// xtask: hot_path\nfn kernel(x: &mut [u32]) { for v in x { *v += 1; } }";
+        assert!(lint_str("fft/simd.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn allow_marker_suppresses_one_line() {
+        let code = "// xtask: allow(raw-tag-literal)\nconst S: u64 = 1 << 32;";
+        assert!(lint_str("hpx/parcel.rs", code).is_empty());
+        // A marker for a different rule does not suppress.
+        let other = "// xtask: allow(spmd-collective)\nconst S: u64 = 1 << 32;";
+        assert_eq!(lint_str("hpx/parcel.rs", other).len(), 1);
+    }
+
+    #[test]
+    fn json_report_is_escaped_and_structured() {
+        let dir = std::env::temp_dir().join("xtask-json-test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        let findings = vec![Finding {
+            file: "a.rs".into(),
+            line: 3,
+            rule: RULE_RAWTAG,
+            message: "raw \"literal\"".into(),
+        }];
+        write_json(&path, Path::new("root"), 2, &findings);
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"files_scanned\": 2"), "{text}");
+        assert!(text.contains("\\\"literal\\\""), "{text}");
+        assert!(text.contains("\"line\": 3"), "{text}");
+    }
+}
